@@ -1,0 +1,68 @@
+//! Distributed data-parallel demo: the paper's optimizer-state all-reduce
+//! (Eq. 5-8) vs gradient all-reduce vs the naive per-micro-batch scheme,
+//! with measured communication volumes.
+//!
+//!     cargo run --release --example distributed_dp -- --workers 2 --steps 5
+
+use adama::collective::{run_data_parallel, run_zero1, DpSpec, SyncStrategy, Zero1Spec};
+use adama::config::{OptimBackend, OptimizerKind, TrainConfig};
+use adama::runtime::ArtifactLibrary;
+use adama::util::cliargs::Args;
+use adama::util::stats::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    let workers = args.parse_or("workers", 2usize)?;
+    let steps = args.parse_or("steps", 5u64)?;
+    let n = args.parse_or("accum-steps", 4usize)?;
+    let lib = ArtifactLibrary::open_default()?;
+
+    let cfg = |opt| TrainConfig {
+        model: "tiny".into(),
+        optimizer: opt,
+        backend: OptimBackend::Kernel,
+        accum_steps: n,
+        workers,
+        ..TrainConfig::default()
+    };
+
+    println!("=== {workers} workers, N={n}, {steps} steps ===\n");
+    println!(
+        "{:<24} {:>10} {:>10} {:>14} {:>10}",
+        "strategy", "loss[0]", "loss[-1]", "comm/step", "wall (s)"
+    );
+    for (sync, opt) in [
+        (SyncStrategy::OptimizerStates, OptimizerKind::AdamA),
+        (SyncStrategy::Gradients, OptimizerKind::AdamGA),
+        (SyncStrategy::GradPerMicrobatch, OptimizerKind::AdamA),
+    ] {
+        let r = run_data_parallel(
+            lib.clone(),
+            DpSpec { cfg: cfg(opt), sync, steps, data_seed: 7 },
+        )?;
+        println!(
+            "{:<24} {:>10.4} {:>10.4} {:>14} {:>10.2}",
+            sync.name(),
+            r.losses[0],
+            r.losses.last().unwrap(),
+            fmt_bytes((r.comm_bytes / steps) as usize),
+            r.elapsed_s,
+        );
+    }
+
+    println!("\n--- ZeRO-S1 (optimizer states partitioned across workers) ---");
+    for opt in [OptimizerKind::AdamA, OptimizerKind::AdamGA] {
+        let r = run_zero1(lib.clone(), Zero1Spec { cfg: cfg(opt), steps, data_seed: 7 })?;
+        println!(
+            "ZeRO-S1+{:<8} loss {:.4} -> {:.4}   comm/step {}   grads peak {}   optstate {}",
+            opt.name(),
+            r.losses[0],
+            r.losses.last().unwrap(),
+            fmt_bytes((r.comm_bytes / steps) as usize),
+            fmt_bytes(r.memory.peak_gradients),
+            fmt_bytes(r.memory.peak_optimizer),
+        );
+    }
+    println!("\nall ranks verified bit-identical after every run (asserted in the runner)");
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Memory sweep: measured per-category peaks across optimizers and
+//! accumulation depths at `tiny`/`small` scale, next to the analytic
+//! model's projection of the same run — then the paper-scale projection
+//! for BERT-Large and BERT-4B.
+//!
+//!     cargo run --release --example memory_sweep -- --model tiny
+
+use adama::config::{OptimBackend, OptimizerKind, TrainConfig};
+use adama::data::MarkovCorpus;
+use adama::memmodel::{peak_memory, DtypePolicy, PaperModel, Scenario, Strategy};
+use adama::runtime::ArtifactLibrary;
+use adama::util::cliargs::Args;
+use adama::util::stats::fmt_bytes;
+use adama::{Category, Trainer};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse_env();
+    let model = args.str_or("model", "tiny");
+    let lib = ArtifactLibrary::open_default()?;
+
+    println!("=== measured ({model} scale, real training runs) ===");
+    println!(
+        "{:<8} {:>3} {:>12} {:>12} {:>12} {:>12}",
+        "optim", "N", "weights", "grads", "optstate", "acts"
+    );
+    for opt in [OptimizerKind::AdamGA, OptimizerKind::AdamA] {
+        for n in [2usize, 8] {
+            let cfg = TrainConfig {
+                model: model.clone(),
+                optimizer: opt,
+                backend: OptimBackend::Kernel,
+                accum_steps: n,
+                ..TrainConfig::default()
+            };
+            let mut t = Trainer::new(lib.clone(), cfg)?;
+            let h = t.spec().hyper.clone();
+            let mut c = MarkovCorpus::new(h.vocab, 7, 1);
+            for _ in 0..2 {
+                t.train_step(&c.minibatch(n, h.microbatch, h.seq))?;
+            }
+            let tr = t.tracker();
+            println!(
+                "{:<8} {n:>3} {:>12} {:>12} {:>12} {:>12}",
+                opt.name(),
+                fmt_bytes(tr.peak(Category::Weights)),
+                fmt_bytes(tr.peak(Category::Gradients)),
+                fmt_bytes(tr.peak(Category::OptimizerStates)),
+                fmt_bytes(tr.peak(Category::Activations)),
+            );
+        }
+    }
+
+    println!("\n=== analytic projection (paper scale, fp32 policy) ===");
+    println!(
+        "{:<12} {:<16} {:>10} {:>10} {:>10} {:>10} {:>11}",
+        "model", "strategy", "weights", "grads", "optstate", "acts", "TOTAL (GB)"
+    );
+    for m in [PaperModel::bert_large(), PaperModel::bert_4b()] {
+        for strategy in [Strategy::GradAccum, Strategy::AdamA, Strategy::Zero1AdamA] {
+            let b = peak_memory(&Scenario {
+                model: m.clone(),
+                dtype: DtypePolicy::paper_fp32(),
+                strategy,
+                optimizer: OptimizerKind::AdamGA,
+                minibatch_per_gpu: 32,
+                accum_steps: 8,
+                gpus: 8,
+            });
+            let gb = |x: u64| x as f64 / 1e9;
+            println!(
+                "{:<12} {:<16} {:>10.2} {:>10.2} {:>10.2} {:>10.2} {:>11.2}",
+                m.name,
+                strategy.name(),
+                gb(b.weights),
+                gb(b.gradients),
+                gb(b.optimizer_states),
+                gb(b.activations),
+                gb(b.total()),
+            );
+        }
+    }
+    Ok(())
+}

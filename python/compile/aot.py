@@ -1,0 +1,202 @@
+"""AOT compile path: lower every L2/L1 artifact to HLO *text* + manifest.
+
+HLO text (NOT ``lowered.compile().serialize()`` / serialized protos) is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/):  python -m compile.aot --out ../artifacts
+Runs once at build time (`make artifacts`); rust never imports python.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import adama, ref
+
+CHUNK_SIZES = [16384, 65536, 1048576]
+
+_DTYPE_NAMES = {jnp.float32.dtype: "f32", jnp.int32.dtype: "s32"}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_of(x):
+    return {"shape": list(x.shape), "dtype": _DTYPE_NAMES[x.dtype]}
+
+
+def lower_artifact(fn, arg_specs, out_dir, rel_path):
+    """Lower fn at arg_specs, write HLO text, return manifest entry."""
+    # keep_unused: backward artifacts take parameters whose *values* are
+    # dead in the gradient math (e.g. additive biases); the rust caller
+    # always supplies the full positional signature.
+    lowered = jax.jit(fn, keep_unused=True).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, rel_path)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    outs = jax.eval_shape(fn, *arg_specs)
+    if not isinstance(outs, (tuple, list)):
+        outs = (outs,)
+    return {
+        "file": rel_path,
+        "inputs": [_spec_of(s) for s in arg_specs],
+        "outputs": [_spec_of(o) for o in outs],
+        "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+    }
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def s32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def lower_model_config(cfg: model.ModelConfig, out_dir):
+    """All per-config transformer artifacts."""
+    b, s, h, v = cfg.microbatch, cfg.seq, cfg.hidden, cfg.vocab
+    blk = [f32(*shape) for name, shape in cfg.param_shapes()
+           if name.startswith("block0.")]
+    d = cfg.name
+    arts = {}
+    arts["embed_fwd"] = lower_artifact(
+        model.embed_fwd, [s32(b, s), f32(v, h), f32(s, h)],
+        out_dir, f"{d}/embed_fwd.hlo.txt")
+    arts["embed_bwd"] = lower_artifact(
+        model.make_embed_bwd(cfg), [s32(b, s), f32(b, s, h)],
+        out_dir, f"{d}/embed_bwd.hlo.txt")
+    arts["block_fwd"] = lower_artifact(
+        model.make_block_fwd(cfg), [f32(b, s, h)] + blk,
+        out_dir, f"{d}/block_fwd.hlo.txt")
+    arts["block_bwd"] = lower_artifact(
+        model.make_block_bwd(cfg), [f32(b, s, h), f32(b, s, h)] + blk,
+        out_dir, f"{d}/block_bwd.hlo.txt")
+    arts["head_loss"] = lower_artifact(
+        model.make_head_loss(cfg), [f32(b, s, h), f32(h, v), s32(b, s)],
+        out_dir, f"{d}/head_loss.hlo.txt")
+    arts["head_eval"] = lower_artifact(
+        model.make_head_eval(cfg), [f32(b, s, h), f32(h, v), s32(b, s)],
+        out_dir, f"{d}/head_eval.hlo.txt")
+    entry = {
+        "model": {
+            "vocab": cfg.vocab, "hidden": cfg.hidden, "layers": cfg.layers,
+            "heads": cfg.heads, "seq": cfg.seq, "microbatch": cfg.microbatch,
+            "ffn": cfg.ffn,
+        },
+        "param_shapes": [[n, list(sh)] for n, sh in cfg.param_shapes()],
+        "artifacts": arts,
+    }
+    return entry
+
+
+def lower_mlp_config(cfg: model.MlpConfig, out_dir):
+    b, dft, hid, cls = cfg.microbatch, cfg.features, cfg.hidden, cfg.classes
+    params = [f32(dft, hid), f32(hid), f32(hid, cls), f32(cls)]
+    d = f"mlp_{cfg.name}"
+    arts = {}
+    arts["mlp_train"] = lower_artifact(
+        model.make_mlp_train(cfg), [f32(b, dft), s32(b)] + params,
+        out_dir, f"{d}/mlp_train.hlo.txt")
+    arts["mlp_eval"] = lower_artifact(
+        model.make_mlp_eval(cfg), [f32(b, dft), s32(b)] + params,
+        out_dir, f"{d}/mlp_eval.hlo.txt")
+    return {
+        "model": {"features": dft, "hidden": hid, "classes": cls,
+                  "microbatch": b},
+        "artifacts": arts,
+    }
+
+
+def lower_optimizer_kernels(out_dir):
+    """Chunked Pallas optimizer kernels, one artifact set per chunk size."""
+    arts = {}
+    for c in CHUNK_SIZES:
+        arts[f"adama_acc_{c}"] = lower_artifact(
+            adama.adama_accumulate, [f32(c), f32(c), f32(c), f32(1)],
+            out_dir, f"common/adama_acc_{c}.hlo.txt")
+        arts[f"adama_decay_acc_{c}"] = lower_artifact(
+            adama.adama_decay_acc, [f32(c), f32(c), f32(c), f32(3)],
+            out_dir, f"common/adama_decay_acc_{c}.hlo.txt")
+        arts[f"adama_decay_{c}"] = lower_artifact(
+            adama.adama_decay, [f32(c), f32(c), f32(1), f32(1)],
+            out_dir, f"common/adama_decay_{c}.hlo.txt")
+        arts[f"adam_update_{c}"] = lower_artifact(
+            adama.adam_update, [f32(c), f32(c), f32(c), f32(3)],
+            out_dir, f"common/adam_update_{c}.hlo.txt")
+        arts[f"adam_full_{c}"] = lower_artifact(
+            adama.adam_full_step, [f32(c), f32(c), f32(c), f32(c), f32(3)],
+            out_dir, f"common/adam_full_{c}.hlo.txt")
+        arts[f"grad_acc_{c}"] = lower_artifact(
+            adama.grad_accumulate, [f32(c), f32(c), f32(1)],
+            out_dir, f"common/grad_acc_{c}.hlo.txt")
+        arts[f"adama_acc_update_{c}"] = lower_artifact(
+            adama.adama_acc_update,
+            [f32(c), f32(c), f32(c), f32(c), f32(1), f32(3)],
+            out_dir, f"common/adama_acc_update_{c}.hlo.txt")
+        # §5 extensions: AdamW-A and momentum-SGD accumulation
+        arts[f"adamw_update_{c}"] = lower_artifact(
+            adama.adamw_update, [f32(c), f32(c), f32(c), f32(4)],
+            out_dir, f"common/adamw_update_{c}.hlo.txt")
+        arts[f"sgdm_decay_acc_{c}"] = lower_artifact(
+            adama.sgdm_decay_acc, [f32(c), f32(c), f32(2)],
+            out_dir, f"common/sgdm_decay_acc_{c}.hlo.txt")
+        arts[f"sgdm_acc_{c}"] = lower_artifact(
+            adama.sgdm_acc, [f32(c), f32(c), f32(1)],
+            out_dir, f"common/sgdm_acc_{c}.hlo.txt")
+        arts[f"sgdm_update_{c}"] = lower_artifact(
+            adama.sgdm_update, [f32(c), f32(c), f32(2)],
+            out_dir, f"common/sgdm_update_{c}.hlo.txt")
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,small")
+    ap.add_argument("--mlp-configs", default="tiny,small")
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+
+    manifest = {
+        "hyper": {"beta1": ref.BETA1, "beta2": ref.BETA2, "eps": ref.EPS},
+        "chunk_sizes": CHUNK_SIZES,
+        "configs": {},
+        "mlp_configs": {},
+    }
+    manifest["common"] = lower_optimizer_kernels(out)
+    print(f"lowered {len(manifest['common'])} optimizer kernel artifacts")
+    for name in args.configs.split(","):
+        cfg = model.CONFIGS[name]
+        manifest["configs"][name] = lower_model_config(cfg, out)
+        print(f"lowered model config '{name}' "
+              f"({cfg.n_params/1e6:.2f}M params)")
+    for name in args.mlp_configs.split(","):
+        cfg = model.MLP_CONFIGS[name]
+        manifest["mlp_configs"][name] = lower_mlp_config(cfg, out)
+        print(f"lowered mlp config '{name}'")
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,342 @@
+"""Layer-1 Pallas kernels: the AdamA optimizer hot-spot.
+
+The paper's core op is the per-layer, per-micro-batch integration of a raw
+gradient into the Adam optimizer states (Alg. 2):
+
+    m += (1 - beta1) * (g / N)
+    v += (1 - beta2) * (g / N)^2
+
+followed by an immediate release of the gradient buffer.  The rust
+coordinator (L3) flattens every parameter tensor into fixed-size chunks and
+calls these kernels chunk-by-chunk, mirroring fused-Adam-over-flat-buffer
+designs (DeepSpeed / apex FusedAdam).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the update is a pure
+elementwise (VPU) op, so each chunk is viewed as a (rows, 128) lane-aligned
+matrix and tiled into (BLOCK_ROWS, 128) VMEM blocks via BlockSpec; the grid
+streams HBM->VMEM block-by-block which is where double-buffering happens on
+real hardware.  ``interpret=True`` everywhere: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret-mode lowers to plain HLO that the
+rust runtime runs bit-for-bit.
+
+All kernels operate on float32 flat chunks of length ``chunk`` (a multiple
+of LANES).  Runtime scalars (gscale, lr, bias corrections, decay factors)
+arrive as shape-(1,) f32 inputs so the rust side can drive LR schedules and
+the distributed M*beta2 scaling (Eq. 6) without re-AOT-ing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+LANES = 128           # TPU lane width; last dim of every block
+# rows per VMEM block. 256*128*4B = 128 KiB per operand; with <=6 operands
+# resident that is <1 MiB of VMEM — comfortably double-bufferable in 16 MiB.
+# (Perf pass: raised from 64; in interpret mode the grid lowers to a
+# sequential HLO while-loop, so fewer/larger blocks cut loop overhead.)
+BLOCK_ROWS = 256
+
+BETA1 = ref.BETA1
+BETA2 = ref.BETA2
+EPS = ref.EPS
+
+
+def _grid_rows(chunk: int, block_rows: int):
+    if chunk % LANES != 0:
+        raise ValueError(f"chunk {chunk} must be a multiple of {LANES}")
+    rows = chunk // LANES
+    block_rows = min(block_rows, rows)  # small chunks: one block, grid 1
+    if rows % block_rows != 0:
+        raise ValueError(f"rows {rows} must be a multiple of {block_rows}")
+    return rows, rows // block_rows, block_rows
+
+
+def _vec_spec(block_rows):
+    """BlockSpec for a (rows, LANES) operand tiled along rows."""
+    return pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+
+
+def _scalar_spec():
+    """BlockSpec for a shape-(1,) runtime scalar broadcast to every block."""
+    return pl.BlockSpec((1,), lambda i: (0,))
+
+
+# ---------------------------------------------------------------------------
+# kernel bodies
+# ---------------------------------------------------------------------------
+
+def _adama_accumulate_kernel(m_ref, v_ref, g_ref, s_ref, mo_ref, vo_ref,
+                             *, beta1, beta2):
+    sg = g_ref[...] * s_ref[0]
+    mo_ref[...] = m_ref[...] + (1.0 - beta1) * sg
+    vo_ref[...] = v_ref[...] + (1.0 - beta2) * sg * sg
+
+
+def _adama_decay_acc_kernel(m_ref, v_ref, g_ref, sc_ref, mo_ref, vo_ref,
+                            *, beta1, beta2):
+    # fused mini-batch-start decay + first micro-batch accumulation
+    # (perf pass: saves one full HBM round-trip over m and v per step).
+    # sc = [gscale, mscale, vscale]
+    sg = g_ref[...] * sc_ref[0]
+    mo_ref[...] = m_ref[...] * sc_ref[1] + (1.0 - beta1) * sg
+    vo_ref[...] = v_ref[...] * sc_ref[2] + (1.0 - beta2) * sg * sg
+
+
+def _adama_decay_kernel(m_ref, v_ref, ms_ref, vs_ref, mo_ref, vo_ref):
+    mo_ref[...] = m_ref[...] * ms_ref[0]
+    vo_ref[...] = v_ref[...] * vs_ref[0]
+
+
+def _adam_update_kernel(p_ref, m_ref, v_ref, sc_ref, po_ref, *, eps):
+    lr, bc1, bc2 = sc_ref[0], sc_ref[1], sc_ref[2]
+    mhat = m_ref[...] / bc1
+    vhat = v_ref[...] / bc2
+    po_ref[...] = p_ref[...] - lr * mhat / (jnp.sqrt(vhat) + eps)
+
+
+def _adam_full_step_kernel(p_ref, m_ref, v_ref, g_ref, sc_ref,
+                           po_ref, mo_ref, vo_ref, *, beta1, beta2, eps):
+    lr, bc1, bc2 = sc_ref[0], sc_ref[1], sc_ref[2]
+    g = g_ref[...]
+    m2 = beta1 * m_ref[...] + (1.0 - beta1) * g
+    v2 = beta2 * v_ref[...] + (1.0 - beta2) * g * g
+    mo_ref[...] = m2
+    vo_ref[...] = v2
+    po_ref[...] = p_ref[...] - lr * (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+
+
+def _grad_accumulate_kernel(a_ref, g_ref, s_ref, ao_ref):
+    ao_ref[...] = a_ref[...] + g_ref[...] * s_ref[0]
+
+
+def _adama_acc_update_kernel(p_ref, m_ref, v_ref, g_ref, s_ref, sc_ref,
+                             po_ref, mo_ref, vo_ref, *, beta1, beta2, eps):
+    sg = g_ref[...] * s_ref[0]
+    m2 = m_ref[...] + (1.0 - beta1) * sg
+    v2 = v_ref[...] + (1.0 - beta2) * sg * sg
+    lr, bc1, bc2 = sc_ref[0], sc_ref[1], sc_ref[2]
+    mo_ref[...] = m2
+    vo_ref[...] = v2
+    po_ref[...] = p_ref[...] - lr * (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+
+
+# ---------------------------------------------------------------------------
+# flat-chunk entry points (what L2/aot.py lowers)
+# ---------------------------------------------------------------------------
+
+def _as2d(x):
+    return x.reshape(-1, LANES)
+
+
+def adama_accumulate(m, v, g, gscale, *, beta1=BETA1, beta2=BETA2,
+                     block_rows=BLOCK_ROWS):
+    """(m, v, g: f32[chunk]; gscale: f32[1]) -> (m', v')."""
+    chunk = m.shape[0]
+    rows, grid, block_rows = _grid_rows(chunk, block_rows)
+    out = pl.pallas_call(
+        functools.partial(_adama_accumulate_kernel, beta1=beta1, beta2=beta2),
+        grid=(grid,),
+        in_specs=[_vec_spec(block_rows)] * 3 + [_scalar_spec()],
+        out_specs=[_vec_spec(block_rows)] * 2,
+        out_shape=[jax.ShapeDtypeStruct((rows, LANES), jnp.float32)] * 2,
+        interpret=True,
+    )(_as2d(m), _as2d(v), _as2d(g), gscale)
+    return out[0].reshape(chunk), out[1].reshape(chunk)
+
+
+def adama_decay_acc(m, v, g, scalars, *, beta1=BETA1, beta2=BETA2,
+                    block_rows=BLOCK_ROWS):
+    """(m, v, g: f32[chunk]; scalars: f32[3] = [gscale, mscale, vscale])
+    -> (m', v'). Fused decay + accumulate for the first micro-batch."""
+    chunk = m.shape[0]
+    rows, grid, block_rows = _grid_rows(chunk, block_rows)
+    out = pl.pallas_call(
+        functools.partial(_adama_decay_acc_kernel, beta1=beta1, beta2=beta2),
+        grid=(grid,),
+        in_specs=[_vec_spec(block_rows)] * 3
+        + [pl.BlockSpec((3,), lambda i: (0,))],
+        out_specs=[_vec_spec(block_rows)] * 2,
+        out_shape=[jax.ShapeDtypeStruct((rows, LANES), jnp.float32)] * 2,
+        interpret=True,
+    )(_as2d(m), _as2d(v), _as2d(g), scalars)
+    return out[0].reshape(chunk), out[1].reshape(chunk)
+
+
+def adama_decay(m, v, mscale, vscale, *, block_rows=BLOCK_ROWS):
+    """(m, v: f32[chunk]; mscale, vscale: f32[1]) -> (m', v')."""
+    chunk = m.shape[0]
+    rows, grid, block_rows = _grid_rows(chunk, block_rows)
+    out = pl.pallas_call(
+        _adama_decay_kernel,
+        grid=(grid,),
+        in_specs=[_vec_spec(block_rows)] * 2 + [_scalar_spec()] * 2,
+        out_specs=[_vec_spec(block_rows)] * 2,
+        out_shape=[jax.ShapeDtypeStruct((rows, LANES), jnp.float32)] * 2,
+        interpret=True,
+    )(_as2d(m), _as2d(v), mscale, vscale)
+    return out[0].reshape(chunk), out[1].reshape(chunk)
+
+
+def adam_update(p, m, v, scalars, *, eps=EPS, block_rows=BLOCK_ROWS):
+    """(p, m, v: f32[chunk]; scalars: f32[3] = [lr, bc1, bc2]) -> p'."""
+    chunk = p.shape[0]
+    rows, grid, block_rows = _grid_rows(chunk, block_rows)
+    out = pl.pallas_call(
+        functools.partial(_adam_update_kernel, eps=eps),
+        grid=(grid,),
+        in_specs=[_vec_spec(block_rows)] * 3
+        + [pl.BlockSpec((3,), lambda i: (0,))],
+        out_specs=_vec_spec(block_rows),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        interpret=True,
+    )(_as2d(p), _as2d(m), _as2d(v), scalars)
+    return out.reshape(chunk)
+
+
+def adam_full_step(p, m, v, g, scalars, *, beta1=BETA1, beta2=BETA2, eps=EPS,
+                   block_rows=BLOCK_ROWS):
+    """Baseline Adam step. scalars: f32[3] = [lr, bc1, bc2]."""
+    chunk = p.shape[0]
+    rows, grid, block_rows = _grid_rows(chunk, block_rows)
+    out = pl.pallas_call(
+        functools.partial(_adam_full_step_kernel, beta1=beta1, beta2=beta2,
+                          eps=eps),
+        grid=(grid,),
+        in_specs=[_vec_spec(block_rows)] * 4
+        + [pl.BlockSpec((3,), lambda i: (0,))],
+        out_specs=[_vec_spec(block_rows)] * 3,
+        out_shape=[jax.ShapeDtypeStruct((rows, LANES), jnp.float32)] * 3,
+        interpret=True,
+    )(_as2d(p), _as2d(m), _as2d(v), _as2d(g), scalars)
+    return tuple(o.reshape(chunk) for o in out)
+
+
+def grad_accumulate(acc, g, gscale, *, block_rows=BLOCK_ROWS):
+    """(acc, g: f32[chunk]; gscale: f32[1]) -> acc'."""
+    chunk = acc.shape[0]
+    rows, grid, block_rows = _grid_rows(chunk, block_rows)
+    out = pl.pallas_call(
+        _grad_accumulate_kernel,
+        grid=(grid,),
+        in_specs=[_vec_spec(block_rows)] * 2 + [_scalar_spec()],
+        out_specs=_vec_spec(block_rows),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        interpret=True,
+    )(_as2d(acc), _as2d(g), gscale)
+    return out.reshape(chunk)
+
+
+def adama_acc_update(p, m, v, g, gscale, scalars, *, beta1=BETA1, beta2=BETA2,
+                     eps=EPS, block_rows=BLOCK_ROWS):
+    """Fused accumulate-then-update for the final micro-batch (perf path)."""
+    chunk = p.shape[0]
+    rows, grid, block_rows = _grid_rows(chunk, block_rows)
+    out = pl.pallas_call(
+        functools.partial(_adama_acc_update_kernel, beta1=beta1, beta2=beta2,
+                          eps=eps),
+        grid=(grid,),
+        in_specs=[_vec_spec(block_rows)] * 4
+        + [_scalar_spec(), pl.BlockSpec((3,), lambda i: (0,))],
+        out_specs=[_vec_spec(block_rows)] * 3,
+        out_shape=[jax.ShapeDtypeStruct((rows, LANES), jnp.float32)] * 3,
+        interpret=True,
+    )(_as2d(p), _as2d(m), _as2d(v), _as2d(g), gscale, scalars)
+    return tuple(o.reshape(chunk) for o in out)
+
+
+# ---------------------------------------------------------------------------
+# §5 extensions: AdamA generalises to any momentum-based optimizer.
+# AdamW-A (decoupled weight decay) and SGDM-A (momentum SGD accumulation).
+# ---------------------------------------------------------------------------
+
+def _adamw_update_kernel(p_ref, m_ref, v_ref, sc_ref, po_ref, *, eps):
+    # sc = [lr, bc1, bc2, wd]; decoupled weight decay (AdamW)
+    lr, bc1, bc2, wd = sc_ref[0], sc_ref[1], sc_ref[2], sc_ref[3]
+    mhat = m_ref[...] / bc1
+    vhat = v_ref[...] / bc2
+    p = p_ref[...]
+    po_ref[...] = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+
+
+def _sgdm_decay_acc_kernel(u_ref, g_ref, sc_ref, uo_ref):
+    # sc = [gscale, mu]; first-micro-batch fused decay + accumulate:
+    # u = mu*u + gscale*g   (heavy-ball momentum accumulation)
+    uo_ref[...] = u_ref[...] * sc_ref[1] + g_ref[...] * sc_ref[0]
+
+
+def _sgdm_acc_kernel(u_ref, g_ref, s_ref, uo_ref):
+    uo_ref[...] = u_ref[...] + g_ref[...] * s_ref[0]
+
+
+def _sgdm_update_kernel(p_ref, u_ref, sc_ref, po_ref):
+    # sc = [lr, wd]
+    p = p_ref[...]
+    po_ref[...] = p - sc_ref[0] * (u_ref[...] + sc_ref[1] * p)
+
+
+def adamw_update(p, m, v, scalars, *, eps=EPS, block_rows=BLOCK_ROWS):
+    """(p, m, v: f32[chunk]; scalars: f32[4] = [lr, bc1, bc2, wd]) -> p'."""
+    chunk = p.shape[0]
+    rows, grid, block_rows = _grid_rows(chunk, block_rows)
+    out = pl.pallas_call(
+        functools.partial(_adamw_update_kernel, eps=eps),
+        grid=(grid,),
+        in_specs=[_vec_spec(block_rows)] * 3
+        + [pl.BlockSpec((4,), lambda i: (0,))],
+        out_specs=_vec_spec(block_rows),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        interpret=True,
+    )(_as2d(p), _as2d(m), _as2d(v), scalars)
+    return out.reshape(chunk)
+
+
+def sgdm_decay_acc(u, g, scalars, *, block_rows=BLOCK_ROWS):
+    """(u, g: f32[chunk]; scalars: f32[2] = [gscale, mu]) -> u'."""
+    chunk = u.shape[0]
+    rows, grid, block_rows = _grid_rows(chunk, block_rows)
+    out = pl.pallas_call(
+        _sgdm_decay_acc_kernel,
+        grid=(grid,),
+        in_specs=[_vec_spec(block_rows)] * 2
+        + [pl.BlockSpec((2,), lambda i: (0,))],
+        out_specs=_vec_spec(block_rows),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        interpret=True,
+    )(_as2d(u), _as2d(g), scalars)
+    return out.reshape(chunk)
+
+
+def sgdm_acc(u, g, gscale, *, block_rows=BLOCK_ROWS):
+    """(u, g: f32[chunk]; gscale: f32[1]) -> u'."""
+    chunk = u.shape[0]
+    rows, grid, block_rows = _grid_rows(chunk, block_rows)
+    out = pl.pallas_call(
+        _sgdm_acc_kernel,
+        grid=(grid,),
+        in_specs=[_vec_spec(block_rows)] * 2 + [_scalar_spec()],
+        out_specs=_vec_spec(block_rows),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        interpret=True,
+    )(_as2d(u), _as2d(g), gscale)
+    return out.reshape(chunk)
+
+
+def sgdm_update(p, u, scalars, *, block_rows=BLOCK_ROWS):
+    """(p, u: f32[chunk]; scalars: f32[2] = [lr, wd]) -> p'."""
+    chunk = p.shape[0]
+    rows, grid, block_rows = _grid_rows(chunk, block_rows)
+    out = pl.pallas_call(
+        _sgdm_update_kernel,
+        grid=(grid,),
+        in_specs=[_vec_spec(block_rows)] * 2
+        + [pl.BlockSpec((2,), lambda i: (0,))],
+        out_specs=_vec_spec(block_rows),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        interpret=True,
+    )(_as2d(p), _as2d(u), scalars)
+    return out.reshape(chunk)

@@ -1,0 +1,109 @@
+"""Pure-jnp reference oracles for the Pallas optimizer kernels.
+
+These are the ground truth for pytest/hypothesis: every Pallas kernel in
+`adama.py` must match its oracle to float32 tolerance for arbitrary shapes
+and values. They also document the exact update math of the paper
+(Algorithm 1/2 and Eq. 5-8).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Hyper-parameters baked into the AOT artifacts (see aot.py / manifest.json).
+BETA1 = 0.9
+BETA2 = 0.999
+EPS = 1e-8
+
+
+def adama_accumulate(m, v, g, gscale, *, beta1=BETA1, beta2=BETA2):
+    """AdamA inner-loop accumulation (Alg. 2, lines inside the layer loop).
+
+    ``g`` is the raw micro-batch gradient; ``gscale`` (scalar, typically 1/N
+    or 1/(N*M)) applies the paper's g_{t,i} = (1/N) grad scaling.  Returns
+    (m', v') with m' = m + (1-b1)*s*g and v' = v + (1-b2)*(s*g)^2.
+    """
+    sg = g * gscale
+    return m + (1.0 - beta1) * sg, v + (1.0 - beta2) * sg * sg
+
+
+def adama_decay(m, v, mscale, vscale):
+    """Mini-batch-start decay (Alg. 2 line 3).
+
+    Single device: mscale = beta1, vscale = beta2.  Distributed DP
+    (Eq. 6): vscale = M * beta2 so that the post-all-reduce division by
+    M^2 restores beta2 * v_{t-1}.
+    """
+    return m * mscale, v * vscale
+
+
+def adama_decay_acc(m, v, g, gscale, mscale, vscale, *, beta1=BETA1,
+                    beta2=BETA2):
+    """Fused mini-batch-start decay + first micro-batch accumulation."""
+    sg = g * gscale
+    return (m * mscale + (1.0 - beta1) * sg,
+            v * vscale + (1.0 - beta2) * sg * sg)
+
+
+def adam_update(p, m, v, lr, bc1, bc2, *, eps=EPS):
+    """Bias-corrected parameter step shared by Adam and AdamA.
+
+    bc1 = 1 - beta1^t and bc2 = 1 - beta2^t are computed host-side (they
+    are scalars); the kernel applies
+        p' = p - lr * (m/bc1) / (sqrt(v/bc2) + eps).
+    """
+    mhat = m / bc1
+    vhat = v / bc2
+    return p - lr * mhat / (jnp.sqrt(vhat) + eps)
+
+
+def adam_full_step(p, m, v, g, lr, bc1, bc2, *, beta1=BETA1, beta2=BETA2, eps=EPS):
+    """Baseline fused Adam step from a fully-accumulated gradient.
+
+    Standard Adam (blue text in Alg. 1): m' = b1*m + (1-b1)*g,
+    v' = b2*v + (1-b2)*g^2, then the bias-corrected update.
+    """
+    m2 = beta1 * m + (1.0 - beta1) * g
+    v2 = beta2 * v + (1.0 - beta2) * g * g
+    p2 = p - lr * (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+    return p2, m2, v2
+
+
+def grad_accumulate(acc, g, gscale):
+    """Gradient-accumulation baseline: acc' = acc + gscale * g."""
+    return acc + gscale * g
+
+
+def adama_acc_update(p, m, v, g, gscale, lr, bc1, bc2,
+                     *, beta1=BETA1, beta2=BETA2, eps=EPS):
+    """Fused last-micro-batch op: accumulate g into (m, v) then step p.
+
+    Used by the perf-optimized hot path to avoid one extra HBM round-trip
+    on the final micro-batch of a mini-batch.
+    """
+    m2, v2 = adama_accumulate(m, v, g, gscale, beta1=beta1, beta2=beta2)
+    p2 = adam_update(p, m2, v2, lr, bc1, bc2, eps=eps)
+    return p2, m2, v2
+
+
+# ---------------------------------------------------------------------------
+# §5 extensions: the accumulation trick for other momentum-based optimizers.
+# ---------------------------------------------------------------------------
+
+def adamw_update(p, m, v, lr, bc1, bc2, wd, *, eps=EPS):
+    """AdamW (decoupled weight decay) parameter step."""
+    mhat = m / bc1
+    vhat = v / bc2
+    return p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+
+
+def sgdm_decay_acc(u, g, gscale, mu):
+    """Momentum-SGD accumulation, first micro-batch (fused decay)."""
+    return u * mu + g * gscale
+
+
+def sgdm_acc(u, g, gscale):
+    return u + g * gscale
+
+
+def sgdm_update(p, u, lr, wd):
+    return p - lr * (u + wd * p)

@@ -1,0 +1,281 @@
+"""Layer-2 JAX model: per-layer transformer LM + MLP classifier.
+
+The model is decomposed into per-layer forward/backward functions so the
+rust coordinator (L3) can drive a layer-by-layer backward sweep and release
+every gradient buffer immediately after it is integrated into the optimizer
+states — the execution pattern AdamA requires (paper §3.3, "backward hook").
+
+Artifacts lowered from this module (see aot.py):
+
+  embed_fwd   (tokens i32[B,S], E f32[V,H], P f32[S,H])        -> x
+  embed_bwd   (tokens, dx)                                     -> (dE, dP)
+  block_fwd   (x, *12 block params)                            -> y
+  block_bwd   (x, dy, *12 block params)                        -> (dx, *12 dp)
+  head_loss   (x, W f32[H,V], labels i32[B,S])                 -> (loss, dx, dW)
+  head_eval   (x, W, labels)                                   -> (loss, ncorrect)
+  mlp_train   (x f32[B,D], labels i32[B], W1, b1, W2, b2)      -> (loss, *4 dp)
+  mlp_eval    (x, labels, W1, b1, W2, b2)                      -> (loss, ncorrect)
+
+``block_bwd`` recomputes its forward internally (per-layer
+rematerialisation): L3 only stashes the *input* activation of each layer per
+micro-batch, so the activation footprint still scales with micro-batch size
+(the paper's 1/N claim) while keeping the artifact set small.  DESIGN.md
+§Substitutions documents this choice.
+
+Losses are mean token cross-entropy over the micro-batch; the paper's 1/N
+scaling of g_{t,i} is applied by the optimizer kernels' ``gscale`` input.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer LM hyper-parameters baked into one artifact set."""
+
+    name: str
+    vocab: int
+    hidden: int
+    layers: int
+    heads: int
+    seq: int
+    microbatch: int
+    ffn_mult: int = 4
+
+    @property
+    def ffn(self) -> int:
+        return self.hidden * self.ffn_mult
+
+    def param_shapes(self):
+        """Ordered (name, shape) list of every trainable tensor.
+
+        Mirrored exactly by rust/src/model/spec.rs — keep in sync.
+        """
+        h, f, v, s = self.hidden, self.ffn, self.vocab, self.seq
+        shapes = [("embed.E", (v, h)), ("embed.P", (s, h))]
+        for i in range(self.layers):
+            p = f"block{i}."
+            shapes += [
+                (p + "ln1.g", (h,)), (p + "ln1.b", (h,)),
+                (p + "attn.wqkv", (h, 3 * h)), (p + "attn.bqkv", (3 * h,)),
+                (p + "attn.wo", (h, h)), (p + "attn.bo", (h,)),
+                (p + "ln2.g", (h,)), (p + "ln2.b", (h,)),
+                (p + "mlp.w1", (h, f)), (p + "mlp.b1", (f,)),
+                (p + "mlp.w2", (f, h)), (p + "mlp.b2", (h,)),
+            ]
+        shapes.append(("head.W", (h, v)))
+        return shapes
+
+    @property
+    def n_params(self) -> int:
+        return sum(int(jnp.prod(jnp.array(s))) for _, s in self.param_shapes())
+
+
+# Named presets. `tiny` drives tests, `small` the end-to-end example.
+CONFIGS = {
+    "tiny": ModelConfig("tiny", vocab=256, hidden=64, layers=2, heads=2,
+                        seq=32, microbatch=4),
+    "small": ModelConfig("small", vocab=2048, hidden=256, layers=4, heads=4,
+                         seq=64, microbatch=8),
+    "base": ModelConfig("base", vocab=8192, hidden=512, layers=8, heads=8,
+                        seq=128, microbatch=8),
+}
+
+# Order of the 12 per-block parameter tensors in block_fwd/block_bwd args.
+BLOCK_PARAM_NAMES = [
+    "ln1.g", "ln1.b", "attn.wqkv", "attn.bqkv", "attn.wo", "attn.bo",
+    "ln2.g", "ln2.b", "mlp.w1", "mlp.b1", "mlp.w2", "mlp.b2",
+]
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def causal_attention(x, wqkv, bqkv, wo, bo, heads):
+    b, s, h = x.shape
+    dh = h // heads
+    qkv = x @ wqkv + bqkv                       # [B,S,3H]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads_first(t):
+        return t.reshape(b, s, heads, dh).transpose(0, 2, 1, 3)
+
+    q, k, v = heads_first(q), heads_first(k), heads_first(v)
+    scores = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(float(dh))
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = (probs @ v).transpose(0, 2, 1, 3).reshape(b, s, h)
+    return out @ wo + bo
+
+
+def block_apply(x, params, heads):
+    """Pre-LN transformer block: x + attn(ln1(x)) ; + mlp(ln2(.))."""
+    (ln1g, ln1b, wqkv, bqkv, wo, bo, ln2g, ln2b, w1, b1, w2, b2) = params
+    a = causal_attention(layer_norm(x, ln1g, ln1b), wqkv, bqkv, wo, bo, heads)
+    x = x + a
+    m = layer_norm(x, ln2g, ln2b) @ w1 + b1
+    m = jax.nn.gelu(m) @ w2 + b2
+    return x + m
+
+
+# ---------------------------------------------------------------------------
+# artifact entry points
+# ---------------------------------------------------------------------------
+
+def embed_fwd(tokens, E, P):
+    return E[tokens] + P[None, :, :]
+
+
+def make_embed_bwd(cfg: ModelConfig):
+    """VJP of embed_fwd w.r.t. (E, P): scatter-add + batch-sum."""
+
+    def f(tokens, dx):
+        dE = jnp.zeros((cfg.vocab, cfg.hidden), jnp.float32)
+        dE = dE.at[tokens].add(dx)
+        dP = jnp.sum(dx, axis=0)
+        return dE, dP
+
+    return f
+
+
+def make_block_fwd(cfg: ModelConfig):
+    def f(x, *params):
+        return block_apply(x, params, cfg.heads)
+
+    return f
+
+
+def make_block_bwd(cfg: ModelConfig):
+    fwd = make_block_fwd(cfg)
+
+    def f(x, dy, *params):
+        # Recompute forward (per-layer remat) and pull back dy.
+        _, vjp = jax.vjp(fwd, x, *params)
+        grads = vjp(dy)
+        return grads  # (dx, *12 dparams)
+
+    return f
+
+
+def _token_xent(logits, labels):
+    """Mean cross-entropy over all tokens; returns (loss, ncorrect)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    pred = jnp.argmax(logits, axis=-1)
+    return jnp.mean(nll), jnp.sum((pred == labels).astype(jnp.int32))
+
+
+def make_head_loss(cfg: ModelConfig):
+    def f(x, W, labels):
+        def loss_fn(x, W):
+            return _token_xent(x @ W, labels)[0]
+
+        loss, vjp = jax.vjp(loss_fn, x, W)
+        dx, dW = vjp(jnp.float32(1.0))
+        return loss, dx, dW
+
+    return f
+
+
+def make_head_eval(cfg: ModelConfig):
+    def f(x, W, labels):
+        loss, ncorrect = _token_xent(x @ W, labels)
+        return loss, ncorrect
+
+    return f
+
+
+# Full-model reference (used by python tests only, not lowered): composes
+# the per-layer artifacts exactly as the rust coordinator does.
+def lm_forward(cfg: ModelConfig, params: dict, tokens):
+    x = embed_fwd(tokens, params["embed.E"], params["embed.P"])
+    for i in range(cfg.layers):
+        blk = [params[f"block{i}.{n}"] for n in BLOCK_PARAM_NAMES]
+        x = block_apply(x, blk, cfg.heads)
+    return x @ params["head.W"]
+
+
+def lm_loss(cfg: ModelConfig, params: dict, tokens, labels):
+    return _token_xent(lm_forward(cfg, params, tokens), labels)[0]
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    """Scaled-normal init. The rust side has its own (identical) init; this
+    one backs the python-level oracle tests."""
+    params = {}
+    for name, shape in cfg.param_shapes():
+        key, sub = jax.random.split(key)
+        if name.endswith((".b", ".g", ".bqkv", ".bo", ".b1", ".b2")):
+            params[name] = (jnp.ones(shape, jnp.float32)
+                            if name.endswith(".g")
+                            else jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else 1
+            std = 0.02 if name.startswith("embed") else fan_in ** -0.5
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# MLP classifier (Fig-3 vision-parity substitute)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MlpConfig:
+    name: str
+    features: int
+    hidden: int
+    classes: int
+    microbatch: int
+
+
+MLP_CONFIGS = {
+    "tiny": MlpConfig("tiny", features=16, hidden=32, classes=4, microbatch=8),
+    "small": MlpConfig("small", features=32, hidden=128, classes=10,
+                       microbatch=16),
+}
+
+
+def mlp_apply(x, W1, b1, W2, b2):
+    h = jax.nn.relu(x @ W1 + b1)
+    return h @ W2 + b2
+
+
+def make_mlp_train(cfg: MlpConfig):
+    def f(x, labels, W1, b1, W2, b2):
+        def loss_fn(W1, b1, W2, b2):
+            logits = mlp_apply(x, W1, b1, W2, b2)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            return -jnp.mean(jnp.take_along_axis(logp, labels[:, None],
+                                                 axis=-1))
+
+        loss, vjp = jax.vjp(loss_fn, W1, b1, W2, b2)
+        grads = vjp(jnp.float32(1.0))
+        return (loss,) + grads
+
+    return f
+
+
+def make_mlp_eval(cfg: MlpConfig):
+    def f(x, labels, W1, b1, W2, b2):
+        logits = mlp_apply(x, W1, b1, W2, b2)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+        ncorrect = jnp.sum((jnp.argmax(logits, axis=-1) == labels)
+                           .astype(jnp.int32))
+        return loss, ncorrect
+
+    return f

@@ -1,0 +1,181 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle.
+
+hypothesis sweeps chunk sizes (multiples of LANES*BLOCK_ROWS), values and
+scalars; assert_allclose against ref.py is THE correctness signal for the
+optimizer hot path that the rust coordinator executes through PJRT.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import adama, ref
+
+GRAIN = adama.LANES * adama.BLOCK_ROWS  # smallest legal chunk
+
+
+def vec(rng, n, scale=3.0):
+    return jnp.asarray(rng.standard_normal(n) * scale, jnp.float32)
+
+
+def chunks():
+    return st.integers(min_value=1, max_value=6).map(lambda k: k * GRAIN)
+
+
+@settings(max_examples=20, deadline=None)
+@given(chunks(), st.integers(0, 2**31 - 1),
+       st.floats(1e-3, 1.0), st.floats(0.0, 0.999))
+def test_adama_accumulate_matches_ref(chunk, seed, gscale, beta1):
+    rng = np.random.default_rng(seed)
+    m, v, g = vec(rng, chunk), np.abs(vec(rng, chunk)), vec(rng, chunk)
+    s = jnp.array([gscale], jnp.float32)
+    got_m, got_v = adama.adama_accumulate(m, v, g, s, beta1=beta1)
+    ref_m, ref_v = ref.adama_accumulate(m, v, g, s[0], beta1=beta1)
+    np.testing.assert_allclose(got_m, ref_m, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(got_v, ref_v, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(chunks(), st.integers(0, 2**31 - 1),
+       st.floats(0.1, 1.0), st.floats(0.1, 8.0))
+def test_adama_decay_matches_ref(chunk, seed, mscale, vscale):
+    rng = np.random.default_rng(seed)
+    m, v = vec(rng, chunk), np.abs(vec(rng, chunk))
+    ms = jnp.array([mscale], jnp.float32)
+    vs = jnp.array([vscale], jnp.float32)
+    got_m, got_v = adama.adama_decay(m, v, ms, vs)
+    ref_m, ref_v = ref.adama_decay(m, v, ms[0], vs[0])
+    np.testing.assert_allclose(got_m, ref_m, rtol=1e-6)
+    np.testing.assert_allclose(got_v, ref_v, rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(chunks(), st.integers(0, 2**31 - 1),
+       st.floats(1e-5, 1e-1), st.integers(1, 1000))
+def test_adam_update_matches_ref(chunk, seed, lr, t):
+    rng = np.random.default_rng(seed)
+    p, m = vec(rng, chunk), vec(rng, chunk)
+    v = np.abs(vec(rng, chunk))
+    bc1 = 1.0 - ref.BETA1 ** t
+    bc2 = 1.0 - ref.BETA2 ** t
+    sc = jnp.array([lr, bc1, bc2], jnp.float32)
+    got = adama.adam_update(p, m, v, sc)
+    want = ref.adam_update(p, m, v, sc[0], sc[1], sc[2])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(chunks(), st.integers(0, 2**31 - 1), st.floats(1e-5, 1e-1))
+def test_adam_full_step_matches_ref(chunk, seed, lr):
+    rng = np.random.default_rng(seed)
+    p, m, g = vec(rng, chunk), vec(rng, chunk), vec(rng, chunk)
+    v = np.abs(vec(rng, chunk))
+    sc = jnp.array([lr, 1.0 - ref.BETA1, 1.0 - ref.BETA2], jnp.float32)
+    got = adama.adam_full_step(p, m, v, g, sc)
+    want = ref.adam_full_step(p, m, v, g, sc[0], sc[1], sc[2])
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(chunks(), st.integers(0, 2**31 - 1), st.floats(1e-3, 1.0))
+def test_grad_accumulate_matches_ref(chunk, seed, gscale):
+    rng = np.random.default_rng(seed)
+    acc, g = vec(rng, chunk), vec(rng, chunk)
+    s = jnp.array([gscale], jnp.float32)
+    got = adama.grad_accumulate(acc, g, s)
+    np.testing.assert_allclose(got, ref.grad_accumulate(acc, g, s[0]),
+                               rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(chunks(), st.integers(0, 2**31 - 1),
+       st.floats(1e-5, 1e-2), st.floats(0.05, 1.0))
+def test_adama_acc_update_matches_ref(chunk, seed, lr, gscale):
+    rng = np.random.default_rng(seed)
+    p, m, g = vec(rng, chunk), vec(rng, chunk), vec(rng, chunk)
+    v = np.abs(vec(rng, chunk))
+    s = jnp.array([gscale], jnp.float32)
+    sc = jnp.array([lr, 1.0 - ref.BETA1, 1.0 - ref.BETA2], jnp.float32)
+    got = adama.adama_acc_update(p, m, v, g, s, sc)
+    want = ref.adama_acc_update(p, m, v, g, s[0], sc[0], sc[1], sc[2])
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_block_rows_ablation_same_result():
+    """Block shape is a pure perf knob: results identical across tilings."""
+    rng = np.random.default_rng(7)
+    chunk = 4 * GRAIN
+    m, v, g = vec(rng, chunk), np.abs(vec(rng, chunk)), vec(rng, chunk)
+    s = jnp.array([0.5], jnp.float32)
+    base = adama.adama_accumulate(m, v, g, s, block_rows=adama.BLOCK_ROWS)
+    for br in (8, 32, 128):
+        other = adama.adama_accumulate(m, v, g, s, block_rows=br)
+        np.testing.assert_allclose(base[0], other[0], rtol=1e-7)
+        np.testing.assert_allclose(base[1], other[1], rtol=1e-7)
+
+
+def test_chunk_must_be_lane_aligned():
+    rng = np.random.default_rng(0)
+    bad = vec(rng, 100)
+    with pytest.raises(ValueError):
+        adama.adama_accumulate(bad, bad, bad, jnp.array([1.0], jnp.float32))
+
+
+@settings(max_examples=12, deadline=None)
+@given(chunks(), st.integers(0, 2**31 - 1),
+       st.floats(0.05, 1.0), st.floats(0.5, 1.0), st.floats(0.5, 8.0))
+def test_adama_decay_acc_matches_ref(chunk, seed, gscale, mscale, vscale):
+    rng = np.random.default_rng(seed)
+    m, v, g = vec(rng, chunk), np.abs(vec(rng, chunk)), vec(rng, chunk)
+    sc = jnp.array([gscale, mscale, vscale], jnp.float32)
+    got_m, got_v = adama.adama_decay_acc(m, v, g, sc)
+    ref_m, ref_v = ref.adama_decay_acc(m, v, g, sc[0], sc[1], sc[2])
+    np.testing.assert_allclose(got_m, ref_m, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(got_v, ref_v, rtol=1e-5, atol=1e-6)
+
+
+def test_decay_acc_equals_decay_then_acc():
+    rng = np.random.default_rng(3)
+    chunk = 2 * GRAIN
+    m, v, g = vec(rng, chunk), np.abs(vec(rng, chunk)), vec(rng, chunk)
+    sc = jnp.array([0.25, ref.BETA1, ref.BETA2], jnp.float32)
+    fused = adama.adama_decay_acc(m, v, g, sc)
+    m2, v2 = ref.adama_decay(m, v, sc[1], sc[2])
+    seq = ref.adama_accumulate(m2, v2, g, sc[0])
+    np.testing.assert_allclose(fused[0], seq[0], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(fused[1], seq[1], rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(chunks(), st.integers(0, 2**31 - 1),
+       st.floats(1e-5, 1e-2), st.floats(0.0, 0.2))
+def test_adamw_update_matches_ref(chunk, seed, lr, wd):
+    rng = np.random.default_rng(seed)
+    p, m = vec(rng, chunk), vec(rng, chunk)
+    v = np.abs(vec(rng, chunk))
+    sc = jnp.array([lr, 0.1, 0.001, wd], jnp.float32)
+    got = adama.adamw_update(p, m, v, sc)
+    want = ref.adamw_update(p, m, v, sc[0], sc[1], sc[2], sc[3])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(chunks(), st.integers(0, 2**31 - 1),
+       st.floats(0.05, 1.0), st.floats(0.0, 0.99))
+def test_sgdm_kernels_match_ref(chunk, seed, gscale, mu):
+    rng = np.random.default_rng(seed)
+    u, g, p = vec(rng, chunk), vec(rng, chunk), vec(rng, chunk)
+    sc2 = jnp.array([gscale, mu], jnp.float32)
+    got = adama.sgdm_decay_acc(u, g, sc2)
+    np.testing.assert_allclose(got, ref.sgdm_decay_acc(u, g, sc2[0], sc2[1]),
+                               rtol=1e-6, atol=1e-6)
+    s1 = jnp.array([gscale], jnp.float32)
+    got = adama.sgdm_acc(u, g, s1)
+    np.testing.assert_allclose(got, ref.sgdm_acc(u, g, s1[0]),
+                               rtol=1e-6, atol=1e-6)
+    lrwd = jnp.array([1e-2, 0.01], jnp.float32)
+    got = adama.sgdm_update(p, u, lrwd)
+    np.testing.assert_allclose(got, ref.sgdm_update(p, u, lrwd[0], lrwd[1]),
+                               rtol=1e-6, atol=1e-6)

@@ -1,0 +1,123 @@
+//! Figure 4 — statistics of the adaptive-scaling coefficient
+//! `sqrt(v̂_Adam) / sqrt(v̂_AdamA)` during training.
+//!
+//! Paper: tracked on ResNet-50/CIFAR-100, the coefficient stays within
+//! ~1% of 1.0. Here we track it on *real* gradients captured from the
+//! tiny transformer (per-micro-batch, via a gradient sink), maintaining
+//! both second-moment recursions side by side, and additionally sweep the
+//! two analytic regimes (noise- vs mean-dominated — see
+//! python/tests/test_adama_semantics.py for why the ratio → sqrt(N) in
+//! the fully-correlated limit).
+
+use adama::config::OptimizerKind;
+use adama::data::MarkovCorpus;
+use adama::optim::host_math;
+use adama::tensor::Rng;
+use adama::Trainer;
+
+#[path = "support/mod.rs"]
+mod support;
+use support::{banner, cfg, lib_or_exit, quick};
+
+const B2: f32 = 0.999;
+
+fn coeff_stats(v_adam: &[f32], v_adama: &[f32]) -> (f32, f32, f32) {
+    let (mut sum, mut lo, mut hi, mut n) = (0.0f64, f32::INFINITY, 0.0f32, 0usize);
+    for (&a, &b) in v_adam.iter().zip(v_adama) {
+        if a > 1e-12 && b > 1e-12 {
+            let c = (a / b).sqrt();
+            sum += c as f64;
+            lo = lo.min(c);
+            hi = hi.max(c);
+            n += 1;
+        }
+    }
+    ((sum / n.max(1) as f64) as f32, lo, hi)
+}
+
+fn main() {
+    let lib = lib_or_exit();
+    let n = 8usize;
+    let steps = if quick() { 5 } else { 25 };
+
+    banner("Figure 4: sqrt(v_Adam)/sqrt(v_AdamA) on real tiny-transformer grads");
+    let mut trainer =
+        Trainer::new(lib.clone(), cfg("tiny", OptimizerKind::AdamA, n, 42)).unwrap();
+    let h = trainer.spec().hyper.clone();
+    let mut corpus = MarkovCorpus::new(h.vocab, 7, 4242);
+    let total: usize = trainer.spec().total_params();
+    let n_layers = trainer.spec().layers.len();
+    let offsets: Vec<usize> = {
+        let mut off = vec![0usize; n_layers + 1];
+        for (i, l) in trainer.spec().layers.iter().enumerate() {
+            off[i + 1] = off[i] + l.flat_len;
+        }
+        off
+    };
+
+    let mut v_adam = vec![0.0f32; total];
+    let mut v_adama = vec![0.0f32; total];
+    println!("step,mean,min,max");
+    for step in 1..=steps {
+        let mbs = corpus.minibatch(n, h.microbatch, h.seq);
+        let mut gsum = vec![0.0f32; total]; // Adam: (Σ g/N)²
+        host_math::scale(&mut v_adama, B2);
+        host_math::scale(&mut v_adam, B2);
+        let (core, _opt) = trainer.parts_mut();
+        for mb in &mbs {
+            core.run_microbatch(mb, &mut |layer, grad| {
+                let o = offsets[layer];
+                for (i, g) in grad.iter().enumerate() {
+                    let sg = g / n as f32;
+                    gsum[o + i] += sg;
+                    v_adama[o + i] += (1.0 - B2) * sg * sg; // AdamA: Σ(g/N)²
+                }
+                Ok(())
+            })
+            .unwrap();
+        }
+        for i in 0..total {
+            v_adam[i] += (1.0 - B2) * gsum[i] * gsum[i];
+        }
+        let (mean, lo, hi) = coeff_stats(&v_adam, &v_adama);
+        println!("{step},{mean:.4},{lo:.4},{hi:.4}");
+        if step == steps {
+            assert!(
+                mean > 0.5 && mean < (n as f32).sqrt() + 0.2,
+                "coefficient out of theoretical range: {mean}"
+            );
+        }
+    }
+
+    banner("analytic regimes (synthetic grads, N=8, d=4096)");
+    println!("{:<18} {:>8} {:>8} {:>8}", "regime", "mean", "min", "max");
+    for (name, mu, sigma) in
+        [("noise-dominated", 0.05f32, 1.0f32), ("balanced", 0.5, 1.0), ("mean-dominated", 1.0, 0.1)]
+    {
+        let d = 4096usize;
+        let mut rng = Rng::new(1);
+        let base: Vec<f32> = (0..d).map(|_| mu * rng.normal()).collect();
+        let mut va = vec![0.0f32; d];
+        let mut vb = vec![0.0f32; d];
+        for _ in 0..50 {
+            host_math::scale(&mut va, B2);
+            host_math::scale(&mut vb, B2);
+            let mut gsum = vec![0.0f32; d];
+            for _ in 0..8 {
+                for i in 0..d {
+                    let g = (base[i] + sigma * rng.normal()) / 8.0;
+                    gsum[i] += g;
+                    vb[i] += (1.0 - B2) * g * g;
+                }
+            }
+            for i in 0..d {
+                va[i] += (1.0 - B2) * gsum[i] * gsum[i];
+            }
+        }
+        let (mean, lo, hi) = coeff_stats(&va, &vb);
+        println!("{name:<18} {mean:>8.4} {lo:>8.4} {hi:>8.4}");
+    }
+    println!(
+        "\npaper's regime is noise-dominated (large-scale SGD): coefficient ≈ 1 within ~1%"
+    );
+}

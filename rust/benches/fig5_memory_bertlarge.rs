@@ -1,0 +1,73 @@
+//! Figure 5 — BERT-Large memory vs accumulation steps, GA vs AdamA.
+//!
+//! Paper: AdamA saves a *constant* ~1.6 GB over gradient accumulation at
+//! every N (the full-model-minus-max-layer gradient buffer). Two parts:
+//!
+//! 1. paper scale — the analytic model at BERT-Large, mini-batch 256 on
+//!    8 GPUs, sweeping N;
+//! 2. validation — the same formulas at `tiny` scale against *measured*
+//!    `MemoryTracker` peaks from real training runs.
+
+use adama::config::OptimizerKind;
+use adama::data::MarkovCorpus;
+use adama::memmodel::{peak_memory, DtypePolicy, PaperModel, Scenario, Strategy};
+use adama::util::stats::fmt_bytes;
+use adama::{Category, Trainer};
+
+#[path = "support/mod.rs"]
+mod support;
+use support::{banner, cfg, gb, lib_or_exit};
+
+fn main() {
+    let lib = lib_or_exit();
+
+    banner("Figure 5 (paper scale): BERT-Large per-GPU memory, mb 256 / 8 GPUs");
+    println!(
+        "{:>3} {:>12} {:>12} {:>12}",
+        "N", "GA (GB)", "AdamA (GB)", "saving (GB)"
+    );
+    let model = PaperModel::bert_large();
+    for n in [1u64, 2, 4, 8, 16] {
+        let mk = |strategy| {
+            peak_memory(&Scenario {
+                model: model.clone(),
+                dtype: DtypePolicy::paper_fp32(),
+                strategy,
+                optimizer: OptimizerKind::AdamGA,
+                minibatch_per_gpu: 32,
+                accum_steps: n,
+                gpus: 8,
+            })
+            .total()
+        };
+        let ga = mk(Strategy::GradAccum);
+        let aa = mk(Strategy::AdamA);
+        println!("{n:>3} {:>12.2} {:>12.2} {:>12.2}", gb(ga), gb(aa), gb(ga - aa));
+    }
+    println!("(paper: constant 1.6 GB saving at every N)");
+
+    banner("validation: measured tracker peaks at tiny scale");
+    println!(
+        "{:>3} {:<7} {:>14} {:>14} {:>14}",
+        "N", "optim", "grads peak", "acts peak", "optstate"
+    );
+    for n in [2usize, 4, 8] {
+        for opt in [OptimizerKind::AdamGA, OptimizerKind::AdamA] {
+            let mut t = Trainer::new(lib.clone(), cfg("tiny", opt, n, 42)).unwrap();
+            let h = t.spec().hyper.clone();
+            let mut c = MarkovCorpus::new(h.vocab, 7, 1);
+            for _ in 0..2 {
+                t.train_step(&c.minibatch(n, h.microbatch, h.seq)).unwrap();
+            }
+            println!(
+                "{n:>3} {:<7} {:>14} {:>14} {:>14}",
+                opt.name(),
+                fmt_bytes(t.tracker().peak(Category::Gradients)),
+                fmt_bytes(t.tracker().peak(Category::Activations)),
+                fmt_bytes(t.tracker().peak(Category::OptimizerStates)),
+            );
+        }
+    }
+    // invariants printed above are asserted in rust/tests/; here we just
+    // exhibit the measured constant-saving shape.
+}

@@ -1,0 +1,90 @@
+//! Perf microbenchmarks — the §Perf instrument (EXPERIMENTS.md).
+//!
+//! Times the building blocks of the hot path in isolation:
+//!   * chunked optimizer kernels (PJRT) vs host loops, per chunk size;
+//!   * model artifacts (block fwd/bwd, head, embed);
+//!   * a full tiny train step (end-to-end floor).
+//!
+//! Run before/after each optimization; record deltas in EXPERIMENTS.md.
+
+use adama::config::{OptimBackend, OptimizerKind};
+use adama::data::MarkovCorpus;
+use adama::optim::{host_math, ChunkRunner, Hyper};
+use adama::tensor::Rng;
+use adama::util::stats::bench;
+use adama::Trainer;
+
+#[path = "support/mod.rs"]
+mod support;
+use support::{banner, cfg, lib_or_exit, quick};
+
+fn main() {
+    let lib = lib_or_exit();
+    let iters = if quick() { 3 } else { 20 };
+
+    banner("optimizer kernels: PJRT chunk call vs host loop (1M elements)");
+    println!(
+        "{:<14} {:>10} {:>14} {:>14} {:>10}",
+        "op", "chunk", "kernel (ms)", "host (ms)", "k/h"
+    );
+    let n_total = 1 << 20;
+    let mut rng = Rng::new(1);
+    let mut m: Vec<f32> = (0..n_total).map(|_| rng.normal()).collect();
+    let mut v: Vec<f32> = (0..n_total).map(|_| rng.normal().abs()).collect();
+    let g: Vec<f32> = (0..n_total).map(|_| rng.normal()).collect();
+    let hyper = Hyper { beta1: 0.9, beta2: 0.999, eps: 1e-8 };
+
+    for chunk in lib.manifest().chunk_sizes.clone() {
+        let mut runner = ChunkRunner::new(lib.clone(), chunk).unwrap();
+        let kt = bench(2, iters, || {
+            runner.adama_acc(&mut m, &mut v, &g, 0.25).unwrap();
+        });
+        let ht = bench(2, iters, || {
+            host_math::adama_acc(&mut m, &mut v, &g, 0.25, hyper.beta1, hyper.beta2);
+        });
+        println!(
+            "{:<14} {:>10} {:>14.3} {:>14.3} {:>10.2}",
+            "adama_acc",
+            chunk,
+            1e3 * kt.mean(),
+            1e3 * ht.mean(),
+            kt.mean() / ht.mean()
+        );
+    }
+
+    banner("model artifacts (tiny): per-call latency");
+    let mut t =
+        Trainer::new(lib.clone(), cfg("tiny", OptimizerKind::AdamA, 2, 42)).unwrap();
+    let h = t.spec().hyper.clone();
+    let mut corpus = MarkovCorpus::new(h.vocab, 7, 1);
+    let mb = corpus.microbatch(h.microbatch, h.seq);
+    {
+        let (core, _) = t.parts_mut();
+        let s = bench(2, iters, || {
+            core.run_microbatch(&mb, &mut |_, _| Ok(())).unwrap();
+        });
+        println!(
+            "microbatch fwd+bwd (no optimizer): {:.3} ms  (p50 {:.3}, p95 {:.3})",
+            1e3 * s.mean(),
+            1e3 * s.percentile(50.0),
+            1e3 * s.percentile(95.0)
+        );
+    }
+
+    banner("end-to-end train step (tiny, N=2): kernel vs host optimizer backend");
+    for backend in [OptimBackend::Kernel, OptimBackend::Host] {
+        let mut c = cfg("tiny", OptimizerKind::AdamA, 2, 42);
+        c.backend = backend;
+        let mut t = Trainer::new(lib.clone(), c).unwrap();
+        let h = t.spec().hyper.clone();
+        let mut corpus = MarkovCorpus::new(h.vocab, 7, 1);
+        let mbs = corpus.minibatch(2, h.microbatch, h.seq);
+        let s = bench(1, iters, || {
+            t.train_step(&mbs).unwrap();
+        });
+        println!("{:?}: {:.2} ms/step", backend, 1e3 * s.mean());
+    }
+
+    banner("PJRT execute-call count (engine instrumentation)");
+    println!("exec calls so far: {}", lib.engine().exec_calls());
+}

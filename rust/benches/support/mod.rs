@@ -1,0 +1,45 @@
+//! Shared bench-harness support (criterion is unavailable offline; each
+//! bench is a `harness = false` binary that regenerates one paper
+//! table/figure and prints it).
+
+use std::sync::Arc;
+
+use adama::config::{OptimBackend, OptimizerKind, TrainConfig};
+use adama::runtime::ArtifactLibrary;
+use adama::util::cliargs::Args;
+
+/// Open artifacts or exit 0 with a notice (benches must not fail the
+/// pipeline when `make artifacts` hasn't run).
+pub fn lib_or_exit() -> Arc<ArtifactLibrary> {
+    let root = ArtifactLibrary::default_root();
+    if !root.join("manifest.json").exists() {
+        println!("SKIP: no artifacts at {} (run `make artifacts`)", root.display());
+        std::process::exit(0);
+    }
+    ArtifactLibrary::open_default().expect("opening artifacts")
+}
+
+/// `--quick` trims workloads for CI-style runs.
+pub fn quick() -> bool {
+    Args::parse_env().flag("quick")
+}
+
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+pub fn cfg(model: &str, opt: OptimizerKind, n: usize, seed: u64) -> TrainConfig {
+    TrainConfig {
+        model: model.into(),
+        optimizer: opt,
+        backend: OptimBackend::Kernel,
+        accum_steps: n,
+        chunk: 16384,
+        seed,
+        ..TrainConfig::default()
+    }
+}
+
+pub fn gb(bytes: u64) -> f64 {
+    bytes as f64 / 1e9
+}

@@ -1,0 +1,331 @@
+//! Ring collectives over in-process channels.
+//!
+//! `CommGroup::new(M)` yields one [`CommHandle`] per rank; handles move
+//! into worker threads. All collectives are synchronous and must be
+//! entered by every rank (like NCCL). Byte counters record the volume a
+//! real interconnect would carry: ring all-reduce moves
+//! `2·(M-1)/M · bytes` per rank per call.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+/// Aggregate communication statistics for a group (shared by all ranks).
+#[derive(Debug, Default)]
+pub struct CommStats {
+    /// Total payload bytes sent over the ring (all ranks).
+    pub bytes_sent: AtomicU64,
+    /// Number of collective operations entered.
+    pub ops: AtomicU64,
+}
+
+impl CommStats {
+    pub fn bytes(&self) -> u64 {
+        self.bytes_sent.load(Ordering::Relaxed)
+    }
+
+    pub fn op_count(&self) -> u64 {
+        self.ops.load(Ordering::Relaxed)
+    }
+}
+
+/// One rank's endpoint in the ring.
+pub struct CommHandle {
+    rank: usize,
+    world: usize,
+    to_next: Sender<Vec<f32>>,
+    from_prev: Receiver<Vec<f32>>,
+    stats: Arc<CommStats>,
+}
+
+/// Factory for ring-connected handles.
+pub struct CommGroup;
+
+impl CommGroup {
+    /// Create `world` ring-connected handles (rank i sends to i+1 mod M).
+    pub fn new(world: usize) -> Vec<CommHandle> {
+        assert!(world >= 1);
+        let stats = Arc::new(CommStats::default());
+        let mut senders = Vec::with_capacity(world);
+        let mut receivers = Vec::with_capacity(world);
+        for _ in 0..world {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        // rank i's receiver gets what rank i-1 sends
+        let mut handles: Vec<CommHandle> = Vec::with_capacity(world);
+        let mut receivers: Vec<Option<Receiver<Vec<f32>>>> =
+            receivers.into_iter().map(Some).collect();
+        for rank in 0..world {
+            let to_next = senders[(rank + 1) % world].clone();
+            let from_prev = receivers[rank].take().unwrap();
+            handles.push(CommHandle {
+                rank,
+                world,
+                to_next,
+                from_prev,
+                stats: stats.clone(),
+            });
+        }
+        handles
+    }
+}
+
+impl CommHandle {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    pub fn stats(&self) -> &Arc<CommStats> {
+        &self.stats
+    }
+
+    fn send(&self, data: Vec<f32>) -> Result<()> {
+        self.stats.bytes_sent.fetch_add((data.len() * 4) as u64, Ordering::Relaxed);
+        self.to_next.send(data).context("ring send (peer gone)")
+    }
+
+    fn recv(&self) -> Result<Vec<f32>> {
+        self.from_prev.recv().context("ring recv (peer gone)")
+    }
+
+    /// Contiguous shard ranges for a buffer of `len` across the world.
+    pub fn shard_ranges(len: usize, world: usize) -> Vec<std::ops::Range<usize>> {
+        let base = len / world;
+        let rem = len % world;
+        let mut out = Vec::with_capacity(world);
+        let mut off = 0;
+        for r in 0..world {
+            let sz = base + usize::from(r < rem);
+            out.push(off..off + sz);
+            off += sz;
+        }
+        out
+    }
+
+    /// Ring all-reduce (sum) in place. All ranks must call with equal-length
+    /// buffers; on return every rank holds the element-wise sum.
+    pub fn all_reduce_sum(&self, data: &mut [f32]) -> Result<()> {
+        self.stats.ops.fetch_add(1, Ordering::Relaxed);
+        if self.world == 1 {
+            return Ok(());
+        }
+        let m = self.world;
+        let shards = Self::shard_ranges(data.len(), m);
+
+        // phase 1: reduce-scatter. After M-1 steps rank r owns the full sum
+        // of shard (r+1) mod M.
+        for step in 0..m - 1 {
+            let send_idx = (self.rank + m - step) % m;
+            let recv_idx = (self.rank + m - step - 1) % m;
+            self.send(data[shards[send_idx].clone()].to_vec())?;
+            let incoming = self.recv()?;
+            ensure!(incoming.len() == shards[recv_idx].len(), "ring shard size mismatch");
+            for (dst, src) in data[shards[recv_idx].clone()].iter_mut().zip(&incoming) {
+                *dst += src;
+            }
+        }
+        // phase 2: all-gather the reduced shards.
+        for step in 0..m - 1 {
+            let send_idx = (self.rank + 1 + m - step) % m;
+            let recv_idx = (self.rank + m - step) % m;
+            self.send(data[shards[send_idx].clone()].to_vec())?;
+            let incoming = self.recv()?;
+            data[shards[recv_idx].clone()].copy_from_slice(&incoming);
+        }
+        Ok(())
+    }
+
+    /// All-reduce then scale by `1/world` (mean) — Eq. 7's m-averaging.
+    pub fn all_reduce_mean(&self, data: &mut [f32]) -> Result<()> {
+        self.all_reduce_sum(data)?;
+        let inv = 1.0 / self.world as f32;
+        for x in data.iter_mut() {
+            *x *= inv;
+        }
+        Ok(())
+    }
+
+    /// Reduce-scatter (sum): on return, `data`'s own shard holds the sum
+    /// across ranks; the returned range identifies it. Other regions are
+    /// left partially reduced (callers must not read them).
+    pub fn reduce_scatter_sum(&self, data: &mut [f32]) -> Result<std::ops::Range<usize>> {
+        self.stats.ops.fetch_add(1, Ordering::Relaxed);
+        let m = self.world;
+        let shards = Self::shard_ranges(data.len(), m);
+        if m == 1 {
+            return Ok(shards[0].clone());
+        }
+        for step in 0..m - 1 {
+            let send_idx = (self.rank + m - step) % m;
+            let recv_idx = (self.rank + m - step - 1) % m;
+            self.send(data[shards[send_idx].clone()].to_vec())?;
+            let incoming = self.recv()?;
+            for (dst, src) in data[shards[recv_idx].clone()].iter_mut().zip(&incoming) {
+                *dst += src;
+            }
+        }
+        // after M-1 steps, rank r owns shard (r+1) mod M
+        Ok(shards[(self.rank + 1) % m].clone())
+    }
+
+    /// All-gather: each rank contributes its shard (as defined by
+    /// [`Self::shard_ranges`] index `owner`); on return the whole buffer
+    /// is consistent on every rank. `owner_of` maps shard index -> the
+    /// rank that owns it, matching [`Self::reduce_scatter_sum`] layout.
+    pub fn all_gather_owned(&self, data: &mut [f32]) -> Result<()> {
+        self.stats.ops.fetch_add(1, Ordering::Relaxed);
+        let m = self.world;
+        if m == 1 {
+            return Ok(());
+        }
+        let shards = Self::shard_ranges(data.len(), m);
+        // rank r owns shard (r+1) mod M (reduce_scatter layout)
+        for step in 0..m - 1 {
+            let send_idx = (self.rank + 1 + m - step) % m;
+            let recv_idx = (self.rank + m - step) % m;
+            self.send(data[shards[send_idx].clone()].to_vec())?;
+            let incoming = self.recv()?;
+            data[shards[recv_idx].clone()].copy_from_slice(&incoming);
+        }
+        Ok(())
+    }
+
+    /// Barrier (token ring, twice around).
+    pub fn barrier(&self) -> Result<()> {
+        for _ in 0..2 {
+            self.send(vec![])?;
+            self.recv()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_world<F>(m: usize, f: F) -> Vec<Vec<f32>>
+    where
+        F: Fn(CommHandle) -> Vec<f32> + Send + Sync + Clone + 'static,
+    {
+        let handles = CommGroup::new(m);
+        let mut joins = Vec::new();
+        for h in handles {
+            let f = f.clone();
+            joins.push(std::thread::spawn(move || f(h)));
+        }
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn all_reduce_sums_across_ranks() {
+        for m in [1, 2, 3, 4, 8] {
+            let out = run_world(m, move |h| {
+                let mut data: Vec<f32> =
+                    (0..10).map(|i| (h.rank() * 100 + i) as f32).collect();
+                h.all_reduce_sum(&mut data).unwrap();
+                data
+            });
+            let want: Vec<f32> = (0..10)
+                .map(|i| (0..m).map(|r| (r * 100 + i) as f32).sum())
+                .collect();
+            for r in 0..m {
+                assert_eq!(out[r], want, "world {m} rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_reduce_mean_divides() {
+        let out = run_world(4, |h| {
+            let mut data = vec![h.rank() as f32; 5];
+            h.all_reduce_mean(&mut data).unwrap();
+            data
+        });
+        for r in 0..4 {
+            assert_eq!(out[r], vec![1.5; 5]);
+        }
+    }
+
+    #[test]
+    fn uneven_lengths_still_reduce() {
+        // len 7 not divisible by world 3
+        let out = run_world(3, |h| {
+            let mut data = vec![1.0f32; 7];
+            h.all_reduce_sum(&mut data).unwrap();
+            data
+        });
+        for r in 0..3 {
+            assert_eq!(out[r], vec![3.0; 7]);
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_then_gather_equals_allreduce() {
+        let out = run_world(4, |h| {
+            let mut data: Vec<f32> = (0..16).map(|i| (i + h.rank()) as f32).collect();
+            let own = h.reduce_scatter_sum(&mut data).unwrap();
+            // zero everything except the owned shard, then gather
+            let owned: Vec<f32> = data[own.clone()].to_vec();
+            for (i, x) in data.iter_mut().enumerate() {
+                if !own.contains(&i) {
+                    *x = f32::NAN;
+                }
+            }
+            data[own.clone()].copy_from_slice(&owned);
+            h.all_gather_owned(&mut data).unwrap();
+            data
+        });
+        let want: Vec<f32> = (0..16).map(|i| (0..4).map(|r| (i + r) as f32).sum()).collect();
+        for r in 0..4 {
+            assert_eq!(out[r], want, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn ring_volume_matches_theory() {
+        // all-reduce moves 2*(M-1)/M * bytes per rank
+        let m = 4;
+        let n = 1024usize;
+        let handles = CommGroup::new(m);
+        let stats = handles[0].stats().clone();
+        let mut joins = Vec::new();
+        for h in handles {
+            joins.push(std::thread::spawn(move || {
+                let mut data = vec![1.0f32; n];
+                h.all_reduce_sum(&mut data).unwrap();
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let want = (2 * (m - 1) * n * 4) as u64; // summed over all ranks: M * 2(M-1)/M * bytes
+        assert_eq!(stats.bytes(), want);
+    }
+
+    #[test]
+    fn shard_ranges_cover() {
+        let r = CommHandle::shard_ranges(10, 3);
+        assert_eq!(r, vec![0..4, 4..7, 7..10]);
+        let r = CommHandle::shard_ranges(8, 4);
+        assert_eq!(r.iter().map(|x| x.len()).sum::<usize>(), 8);
+    }
+
+    #[test]
+    fn barrier_does_not_deadlock() {
+        run_world(3, |h| {
+            for _ in 0..5 {
+                h.barrier().unwrap();
+            }
+            vec![]
+        });
+    }
+}

@@ -1,0 +1,159 @@
+//! α-β communication cost model at DGX scale.
+//!
+//! The in-process ring reproduces collective *math* and *volume*; wall
+//! clock on a CPU testbed says nothing about NVLink. For Figure-7-style
+//! projections at paper scale we price each collective with the classic
+//! α-β model: `T = α·(steps) + bytes/β`, parameterised per DGX system.
+
+/// Interconnect + compute envelope of one cluster configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterSpec {
+    pub name: &'static str,
+    pub gpus: usize,
+    /// Per-GPU memory capacity (bytes) — Table 3's constraint.
+    pub mem_bytes: u64,
+    /// All-reduce bandwidth per GPU (bytes/s).
+    pub bw: f64,
+    /// Per-collective latency (s).
+    pub alpha: f64,
+    /// Sustained training compute per GPU (FLOP/s) for step-time estims.
+    pub flops: f64,
+}
+
+impl ClusterSpec {
+    /// DGX-1: 8× V100-16GB, NVLink gen1.
+    pub fn dgx1() -> Self {
+        Self {
+            name: "DGX-1",
+            gpus: 8,
+            mem_bytes: 16 << 30,
+            bw: 100e9,
+            alpha: 10e-6,
+            flops: 15e12,
+        }
+    }
+
+    /// DGX-2: 16× V100-32GB, NVSwitch.
+    pub fn dgx2() -> Self {
+        Self {
+            name: "DGX-2",
+            gpus: 16,
+            mem_bytes: 32 << 30,
+            bw: 200e9,
+            alpha: 10e-6,
+            flops: 15e12,
+        }
+    }
+
+    /// DGX A100: 8× A100-80GB, NVSwitch gen2.
+    pub fn dgx_a100() -> Self {
+        Self {
+            name: "DGX A100",
+            gpus: 8,
+            mem_bytes: 80 << 30,
+            bw: 300e9,
+            alpha: 8e-6,
+            flops: 120e12,
+        }
+    }
+
+    pub const ALL: [fn() -> ClusterSpec; 3] = [Self::dgx1, Self::dgx2, Self::dgx_a100];
+}
+
+/// Prices collectives on a [`ClusterSpec`].
+#[derive(Debug, Clone, Copy)]
+pub struct CommCostModel {
+    pub cluster: ClusterSpec,
+}
+
+impl CommCostModel {
+    pub fn new(cluster: ClusterSpec) -> Self {
+        Self { cluster }
+    }
+
+    /// Ring all-reduce time for `bytes` payload across `m` ranks.
+    pub fn all_reduce(&self, bytes: u64, m: usize) -> f64 {
+        if m <= 1 {
+            return 0.0;
+        }
+        let steps = 2 * (m - 1);
+        let wire = 2.0 * (m as f64 - 1.0) / m as f64 * bytes as f64;
+        steps as f64 * self.cluster.alpha + wire / self.cluster.bw
+    }
+
+    /// Reduce-scatter or all-gather: half an all-reduce.
+    pub fn half_collective(&self, bytes: u64, m: usize) -> f64 {
+        self.all_reduce(bytes, m) / 2.0
+    }
+
+    /// Compute time for one micro-batch fwd+bwd: ~6·P·tokens FLOPs.
+    pub fn microbatch_compute(&self, params: u64, tokens: u64) -> f64 {
+        6.0 * params as f64 * tokens as f64 / self.cluster.flops
+    }
+
+    /// Mini-batch step time under a given sync strategy.
+    ///
+    /// * `n` micro-batches, `tokens` per micro-batch, `params` model size.
+    /// * `state_syncs` all-reduces of `state_bytes` per step (AdamA: 2·P·4
+    ///   once; grad sync: P·4 once (GA) or N times (naive)).
+    pub fn step_time(
+        &self,
+        params: u64,
+        n: usize,
+        tokens: u64,
+        sync_bytes_per_step: u64,
+        syncs_per_step: usize,
+    ) -> f64 {
+        let compute = n as f64 * self.microbatch_compute(params, tokens);
+        let comm = syncs_per_step as f64
+            * self.all_reduce(sync_bytes_per_step / syncs_per_step.max(1) as u64, self.cluster.gpus);
+        compute + comm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_reduce_scales_with_bytes_and_world() {
+        let m = CommCostModel::new(ClusterSpec::dgx_a100());
+        let t1 = m.all_reduce(1 << 30, 8);
+        let t2 = m.all_reduce(2 << 30, 8);
+        assert!(t2 > t1 * 1.8 && t2 < t1 * 2.2);
+        assert_eq!(m.all_reduce(1 << 30, 1), 0.0);
+    }
+
+    #[test]
+    fn state_sync_beats_naive_grad_sync_for_large_n() {
+        // the paper's §3.3 argument: O(1) state all-reduce vs O(N) grads
+        let m = CommCostModel::new(ClusterSpec::dgx_a100());
+        let p = 340_000_000u64; // BERT-Large
+        let n = 8;
+        // AdamA state sync: one all-reduce of 2P floats
+        let adama = m.all_reduce(2 * p * 4, 8);
+        // naive per-micro-batch grad sync: N all-reduces of P floats
+        let naive = n as f64 * m.all_reduce(p * 4, 8);
+        // standard GA: one all-reduce of P floats
+        let ga = m.all_reduce(p * 4, 8);
+        assert!(adama < naive, "O(1) vs O(N)");
+        assert!(adama <= 2.1 * ga, "state sync costs ~2x grads, constant in N");
+    }
+
+    #[test]
+    fn dgx_presets_sane() {
+        for f in ClusterSpec::ALL {
+            let c = f();
+            assert!(c.mem_bytes >= 16 << 30);
+            assert!(c.bw > 0.0 && c.flops > 0.0 && c.gpus >= 8);
+        }
+    }
+
+    #[test]
+    fn compute_time_positive_and_linear() {
+        let m = CommCostModel::new(ClusterSpec::dgx1());
+        let a = m.microbatch_compute(1_000_000, 4096);
+        let b = m.microbatch_compute(2_000_000, 4096);
+        assert!((b / a - 2.0).abs() < 1e-9);
+    }
+}

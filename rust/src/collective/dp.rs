@@ -1,0 +1,200 @@
+//! Data-parallel training runner (paper §3.3).
+//!
+//! Spawns `M` worker threads, each owning a full [`Trainer`] replica and a
+//! disjoint data shard, connected by a ring [`CommGroup`]. Three sync
+//! strategies reproduce the paper's design space:
+//!
+//! * [`SyncStrategy::OptimizerStates`] — **the paper's scheme**: decay `v`
+//!   by `M·β₂` (Eq. 6), integrate local micro-grads with gscale `1/N`,
+//!   then once per mini-batch all-reduce `m` (mean, Eq. 7) and `v`
+//!   (sum/M², Eq. 8). Comm volume constant in N.
+//! * [`SyncStrategy::Gradients`] — classic DDP+GA baseline: accumulate
+//!   locally, one gradient all-reduce (mean) per mini-batch.
+//! * [`SyncStrategy::GradPerMicrobatch`] — the naive AdamA distribution
+//!   the paper rejects: all-reduce every layer gradient every micro-batch
+//!   (O(N) collectives), integrating the *global* mean gradient.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::comm::{CommGroup, CommHandle};
+use crate::config::{OptimizerKind, TrainConfig};
+use crate::coordinator::Trainer;
+use crate::data::MarkovCorpus;
+use crate::memory::MemoryReport;
+use crate::runtime::ArtifactLibrary;
+
+/// How workers synchronise per mini-batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncStrategy {
+    OptimizerStates,
+    Gradients,
+    GradPerMicrobatch,
+}
+
+impl SyncStrategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::OptimizerStates => "state-allreduce",
+            Self::Gradients => "grad-allreduce",
+            Self::GradPerMicrobatch => "grad-per-microbatch",
+        }
+    }
+}
+
+/// A distributed run specification.
+#[derive(Debug, Clone)]
+pub struct DpSpec {
+    pub cfg: TrainConfig,
+    pub sync: SyncStrategy,
+    pub steps: u64,
+    /// Markov corpus structure seed (shared); stream seeds fork per worker.
+    pub data_seed: u64,
+}
+
+/// Result of a distributed run.
+#[derive(Debug, Clone)]
+pub struct DpReport {
+    pub losses: Vec<f32>,
+    /// Rank-0 final parameters (all ranks are asserted identical).
+    pub final_params: Vec<Vec<f32>>,
+    pub comm_bytes: u64,
+    pub comm_ops: u64,
+    pub elapsed_s: f64,
+    pub memory: MemoryReport,
+}
+
+/// Run `spec.steps` mini-batches across `spec.cfg.workers` worker threads.
+pub fn run_data_parallel(lib: Arc<ArtifactLibrary>, spec: DpSpec) -> Result<DpReport> {
+    let m = spec.cfg.workers;
+    spec.cfg.validate()?;
+    if spec.sync != SyncStrategy::Gradients
+        && spec.cfg.optimizer != OptimizerKind::AdamA
+    {
+        bail!("{:?} sync requires AdamA", spec.sync);
+    }
+    let handles = CommGroup::new(m);
+    let stats = handles[0].stats().clone();
+    let t0 = std::time::Instant::now();
+
+    let mut joins = Vec::new();
+    for comm in handles {
+        let lib = lib.clone();
+        let spec = spec.clone();
+        joins.push(std::thread::spawn(move || worker(lib, spec, comm)));
+    }
+    let mut results: Vec<WorkerOut> = Vec::new();
+    for j in joins {
+        results.push(j.join().map_err(|_| anyhow::anyhow!("worker panicked"))??);
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+
+    // determinism invariant: every rank must hold identical parameters.
+    let r0 = &results[0];
+    for (r, out) in results.iter().enumerate().skip(1) {
+        for (l, (a, b)) in r0.params.iter().zip(&out.params).enumerate() {
+            anyhow::ensure!(
+                a == b,
+                "rank {r} layer {l} parameters diverged from rank 0"
+            );
+        }
+    }
+
+    Ok(DpReport {
+        losses: r0.losses.clone(),
+        final_params: r0.params.clone(),
+        comm_bytes: stats.bytes(),
+        comm_ops: stats.op_count(),
+        elapsed_s,
+        memory: r0.memory,
+    })
+}
+
+struct WorkerOut {
+    losses: Vec<f32>,
+    params: Vec<Vec<f32>>,
+    memory: MemoryReport,
+}
+
+fn worker(lib: Arc<ArtifactLibrary>, spec: DpSpec, comm: CommHandle) -> Result<WorkerOut> {
+    let m = comm.world();
+    let n = spec.cfg.accum_steps;
+    let mut trainer = Trainer::new(lib, spec.cfg.clone())?;
+    let h = trainer.spec().hyper.clone();
+    // same language (structure seed), disjoint stream per rank
+    let mut corpus =
+        MarkovCorpus::new(h.vocab, spec.data_seed, 1_000_003 * (comm.rank() as u64 + 1));
+
+    let mut losses = Vec::with_capacity(spec.steps as usize);
+    for _ in 0..spec.steps {
+        let mbs = corpus.minibatch(n, h.microbatch, h.seq);
+        let loss = match spec.sync {
+            SyncStrategy::OptimizerStates => {
+                // Eq. 6: v decays by M·β₂ at mini-batch start.
+                trainer.optimizer_mut().set_v_decay_factor(m as f32);
+                let loss = trainer.accumulate_minibatch(&mbs, 1.0 / n as f32)?;
+                // Eq. 7-8: m := mean over ranks; v := sum / M².
+                let states = trainer
+                    .optimizer_mut()
+                    .adam_states_mut()
+                    .context("AdamA states")?;
+                let inv_m2 = 1.0 / (m * m) as f32;
+                for layer_m in states.m.iter_mut() {
+                    comm.all_reduce_mean(layer_m)?;
+                }
+                for layer_v in states.v.iter_mut() {
+                    comm.all_reduce_sum(layer_v)?;
+                    for x in layer_v.iter_mut() {
+                        *x *= inv_m2;
+                    }
+                }
+                trainer.apply_update()?;
+                loss
+            }
+            SyncStrategy::Gradients => {
+                // classic DDP: local accumulation then one grad all-reduce
+                let loss = trainer.accumulate_minibatch(&mbs, 1.0 / n as f32)?;
+                let opt = trainer.optimizer_mut();
+                let ga = opt
+                    .as_adamga_mut()
+                    .context("Gradients sync requires AdamGA")?;
+                for acc in ga.grad_acc_mut() {
+                    comm.all_reduce_mean(acc)?;
+                }
+                trainer.apply_update()?;
+                loss
+            }
+            SyncStrategy::GradPerMicrobatch => {
+                // naive AdamA distribution: every layer gradient of every
+                // micro-batch is globally averaged before integration.
+                trainer.optimizer_mut().set_v_decay_factor(1.0);
+                let gscale = 1.0 / n as f32;
+                let t = trainer.step() + 1;
+                let (core, opt) = trainer.parts_mut();
+                opt.begin_minibatch(t)?;
+                let mut loss_sum = 0.0f64;
+                for mb in &mbs {
+                    let loss = core.run_microbatch(mb, &mut |layer, grad| {
+                        let mut g = grad.to_vec();
+                        comm.all_reduce_mean(&mut g)?;
+                        opt.accumulate(layer, &g, gscale)
+                    })?;
+                    loss_sum += loss as f64;
+                }
+                trainer.apply_update()?;
+                (loss_sum / mbs.len() as f64) as f32
+            }
+        };
+        // mini-batch loss averaged across ranks (reporting only)
+        let mut l = vec![loss];
+        comm.all_reduce_mean(&mut l)?;
+        losses.push(l[0]);
+    }
+
+    Ok(WorkerOut {
+        losses,
+        params: trainer.params().iter().map(|p| p.flat.clone()).collect(),
+        memory: trainer.tracker().report(),
+    })
+}

@@ -1,0 +1,19 @@
+//! In-process data-parallel substrate: ring collectives over channels,
+//! a communication-volume ledger, an α-β cost model at DGX scale, the
+//! distributed training runner (paper §3.3, Eq. 5–8) and ZeRO-S1.
+//!
+//! NCCL is simulated by rank threads exchanging `Vec<f32>` slices through
+//! `std::sync::mpsc` channels using the standard ring algorithm
+//! (reduce-scatter + all-gather, 2(M-1) phases). The reduction *math* and
+//! the *byte volume* are identical to the real thing — which is exactly
+//! what the paper's Figure 7 measures.
+
+mod comm;
+mod cost;
+mod dp;
+mod zero;
+
+pub use comm::{CommGroup, CommHandle, CommStats};
+pub use cost::{ClusterSpec, CommCostModel};
+pub use dp::{run_data_parallel, DpReport, DpSpec, SyncStrategy};
+pub use zero::{run_zero1, Zero1Report, Zero1Spec};

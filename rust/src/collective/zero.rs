@@ -1,0 +1,316 @@
+//! ZeRO-S1 (`P_os`) substrate + its AdamA combination (paper §4.2, Fig 6b,
+//! Table 3).
+//!
+//! Optimizer states are partitioned: rank `r` owns, for every layer, the
+//! contiguous shard that ring reduce-scatter leaves fully reduced on it.
+//! Two flows:
+//!
+//! * **ZeRO-S1 + AdamA** — every layer gradient of every micro-batch is
+//!   reduce-scattered the moment it exists; the owner integrates its shard
+//!   into its (m, v) shard and the gradient is released (grad peak = one
+//!   layer, activation peak = one micro-batch, states = 2P/M). The
+//!   micro-batch granularity becomes *global* (M-way averaged), i.e.
+//!   AdamA with N effective micro-batches of M× size — still Alg. 2
+//!   semantics. Comm: 2·N half-collectives per layer per step (the ~5%
+//!   throughput cost the paper reports for this combo).
+//! * **ZeRO-S1 + GA** — the DeepSpeed baseline: full local gradient
+//!   accumulator (P floats), one reduce-scatter at mini-batch end, shard
+//!   update, param all-gather.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::comm::{CommGroup, CommHandle};
+use crate::config::{OptimBackend, OptimizerKind, TrainConfig};
+use crate::coordinator::Trainer;
+use crate::data::MarkovCorpus;
+use crate::memory::{Category, MemoryReport, MemoryTracker};
+use crate::model::ModelSpec;
+use crate::optim::{host_math, Hyper, NullOpt, UpdateBackend};
+use crate::runtime::ArtifactLibrary;
+
+#[derive(Debug, Clone)]
+pub struct Zero1Spec {
+    pub cfg: TrainConfig,
+    pub steps: u64,
+    pub data_seed: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Zero1Report {
+    pub losses: Vec<f32>,
+    pub final_params: Vec<Vec<f32>>,
+    pub comm_bytes: u64,
+    pub comm_ops: u64,
+    pub elapsed_s: f64,
+    pub memory: MemoryReport,
+}
+
+/// Per-worker partitioned Adam state.
+struct ShardState {
+    /// Owned range per layer (reduce-scatter layout: shard (rank+1) mod M).
+    ranges: Vec<std::ops::Range<usize>>,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    hyper: Hyper,
+    backend: UpdateBackend,
+}
+
+impl ShardState {
+    fn new(
+        spec: &ModelSpec,
+        comm: &CommHandle,
+        hyper: Hyper,
+        backend: UpdateBackend,
+        tracker: &MemoryTracker,
+    ) -> Self {
+        let owner = (comm.rank() + 1) % comm.world();
+        let ranges: Vec<_> = spec
+            .layers
+            .iter()
+            .map(|l| CommHandle::shard_ranges(l.flat_len, comm.world())[owner].clone())
+            .collect();
+        let m: Vec<Vec<f32>> = ranges.iter().map(|r| vec![0.0; r.len()]).collect();
+        let v = m.clone();
+        let bytes: usize = ranges.iter().map(|r| r.len() * 8).sum();
+        tracker.alloc_raw(Category::OptimizerStates, bytes);
+        Self { ranges, m, v, hyper, backend }
+    }
+
+    fn decay(&mut self, vfactor: f32) -> Result<()> {
+        let (b1, b2) = (self.hyper.beta1, self.hyper.beta2);
+        for (m, v) in self.m.iter_mut().zip(self.v.iter_mut()) {
+            self.backend.adama_decay(m, v, b1, vfactor * b2)?;
+        }
+        Ok(())
+    }
+
+    fn integrate(&mut self, layer: usize, shard_grad: &[f32], gscale: f32) -> Result<()> {
+        self.backend.adama_acc(&mut self.m[layer], &mut self.v[layer], shard_grad, gscale)
+    }
+
+    fn adam_full_shard(
+        &mut self,
+        layer: usize,
+        p: &mut [f32],
+        g: &[f32],
+        lr: f32,
+        bc1: f32,
+        bc2: f32,
+    ) -> Result<()> {
+        self.backend
+            .adam_full(p, &mut self.m[layer], &mut self.v[layer], g, lr, bc1, bc2)
+    }
+
+    fn update_shard(&mut self, layer: usize, p: &mut [f32], lr: f32, bc1: f32, bc2: f32) -> Result<()> {
+        self.backend.adam_update(p, &self.m[layer], &self.v[layer], lr, bc1, bc2)
+    }
+}
+
+/// Run ZeRO-S1 training: `cfg.optimizer` selects AdamA (combined scheme)
+/// or AdamGA (DeepSpeed-style baseline).
+pub fn run_zero1(lib: Arc<ArtifactLibrary>, spec: Zero1Spec) -> Result<Zero1Report> {
+    spec.cfg.validate()?;
+    let m = spec.cfg.workers;
+    if m < 2 {
+        bail!("ZeRO-S1 needs >= 2 workers");
+    }
+    let handles = CommGroup::new(m);
+    let stats = handles[0].stats().clone();
+    let t0 = std::time::Instant::now();
+
+    let mut joins = Vec::new();
+    for comm in handles {
+        let lib = lib.clone();
+        let spec = spec.clone();
+        joins.push(std::thread::spawn(move || match spec.cfg.optimizer {
+            OptimizerKind::AdamA => worker_adama(lib, spec, comm),
+            OptimizerKind::AdamGA => worker_ga(lib, spec, comm),
+            k => bail!("ZeRO-S1 supports adama|adamga, got {:?}", k),
+        }));
+    }
+    let mut results = Vec::new();
+    for j in joins {
+        results.push(j.join().map_err(|_| anyhow::anyhow!("zero1 worker panicked"))??);
+    }
+    let elapsed_s = t0.elapsed().as_secs_f64();
+
+    let r0 = &results[0];
+    for (r, out) in results.iter().enumerate().skip(1) {
+        for (l, (a, b)) in r0.params.iter().zip(&out.params).enumerate() {
+            anyhow::ensure!(a == b, "rank {r} layer {l} diverged after all-gather");
+        }
+    }
+    Ok(Zero1Report {
+        losses: r0.losses.clone(),
+        final_params: r0.params.clone(),
+        comm_bytes: stats.bytes(),
+        comm_ops: stats.op_count(),
+        elapsed_s,
+        memory: r0.memory,
+    })
+}
+
+struct WorkerOut {
+    losses: Vec<f32>,
+    params: Vec<Vec<f32>>,
+    memory: MemoryReport,
+}
+
+fn make_backend(cfg: &TrainConfig, lib: &Arc<ArtifactLibrary>) -> Result<UpdateBackend> {
+    let hyper = Hyper::from_manifest(lib.manifest());
+    Ok(match cfg.backend {
+        OptimBackend::Kernel => UpdateBackend::kernel(lib.clone(), cfg.chunk)?,
+        OptimBackend::Host => UpdateBackend::host(hyper),
+    })
+}
+
+/// ZeRO-S1 + AdamA: per-micro-batch per-layer reduce-scatter + shard
+/// integrate + release.
+fn worker_adama(lib: Arc<ArtifactLibrary>, spec: Zero1Spec, comm: CommHandle) -> Result<WorkerOut> {
+    let n = spec.cfg.accum_steps;
+    let m = comm.world();
+    let tracker = MemoryTracker::new();
+    let mut trainer =
+        Trainer::with_optimizer(lib.clone(), spec.cfg.clone(), tracker.clone(), Box::new(NullOpt))?;
+    let hyper = Hyper::from_manifest(lib.manifest());
+    let mut shard = ShardState::new(
+        trainer.spec(),
+        &comm,
+        hyper,
+        make_backend(&spec.cfg, &lib)?,
+        &tracker,
+    );
+    let h = trainer.spec().hyper.clone();
+    let mut corpus =
+        MarkovCorpus::new(h.vocab, spec.data_seed, 1_000_003 * (comm.rank() as u64 + 1));
+
+    // gradients are globally averaged before integration, so each of the N
+    // effective micro-batches is M× larger: gscale = 1/N, mean over M via
+    // the reduce-scatter sum / M.
+    let gscale = 1.0 / n as f32;
+    let inv_m = 1.0 / m as f32;
+
+    let mut losses = Vec::new();
+    for _ in 0..spec.steps {
+        let t = trainer.step() + 1;
+        shard.decay(1.0)?;
+        let mbs = corpus.minibatch(n, h.microbatch, h.seq);
+        let mut loss_sum = 0.0f64;
+        {
+            let shard = &mut shard;
+            let comm_ref = &comm;
+            let tracker_ref = &tracker;
+            let mut sink = |layer: usize, grad: &[f32]| -> Result<()> {
+                // workspace copy (reduce-scatter mutates in place)
+                let _w = tracker_ref.alloc(Category::Workspace, grad.len() * 4);
+                let mut buf = grad.to_vec();
+                let own = comm_ref.reduce_scatter_sum(&mut buf)?;
+                debug_assert_eq!(own, shard.ranges[layer]);
+                let mut g: Vec<f32> = buf[own].to_vec();
+                host_math::scale(&mut g, inv_m); // sum -> mean over ranks
+                shard.integrate(layer, &g, gscale)
+            };
+            for mb in &mbs {
+                loss_sum += trainer.accumulate_minibatch_sink(
+                    std::slice::from_ref(mb),
+                    &mut sink,
+                )? as f64;
+            }
+        }
+        // shard param update + all-gather
+        let (bc1, bc2) = hyper.bias_corrections(t);
+        let lr = spec.cfg.lr.at(t);
+        let n_layers = trainer.spec().layers.len();
+        for l in 0..n_layers {
+            let range = shard.ranges[l].clone();
+            let flat = &mut trainer.params_mut()[l].flat;
+            let mut shard_p: Vec<f32> = flat[range.clone()].to_vec();
+            shard.update_shard(l, &mut shard_p, lr, bc1, bc2)?;
+            flat[range].copy_from_slice(&shard_p);
+            comm.all_gather_owned(flat)?;
+        }
+        trainer.advance_step();
+
+        let mut l = vec![(loss_sum / n as f64) as f32];
+        comm.all_reduce_mean(&mut l)?;
+        losses.push(l[0]);
+    }
+
+    Ok(WorkerOut {
+        losses,
+        params: trainer.params().iter().map(|p| p.flat.clone()).collect(),
+        memory: tracker.report(),
+    })
+}
+
+/// ZeRO-S1 + GA: full local accumulator, one reduce-scatter per step.
+fn worker_ga(lib: Arc<ArtifactLibrary>, spec: Zero1Spec, comm: CommHandle) -> Result<WorkerOut> {
+    let n = spec.cfg.accum_steps;
+    let m = comm.world();
+    let tracker = MemoryTracker::new();
+    let mut trainer =
+        Trainer::with_optimizer(lib.clone(), spec.cfg.clone(), tracker.clone(), Box::new(NullOpt))?;
+    let hyper = Hyper::from_manifest(lib.manifest());
+    let mut shard = ShardState::new(
+        trainer.spec(),
+        &comm,
+        hyper,
+        make_backend(&spec.cfg, &lib)?,
+        &tracker,
+    );
+    let h = trainer.spec().hyper.clone();
+    let mut corpus =
+        MarkovCorpus::new(h.vocab, spec.data_seed, 1_000_003 * (comm.rank() as u64 + 1));
+
+    // full-model gradient accumulator (the memory ZeRO-S1 alone keeps)
+    let mut acc: Vec<Vec<f32>> =
+        trainer.spec().layers.iter().map(|l| vec![0.0; l.flat_len]).collect();
+    tracker.alloc_raw(Category::Gradients, trainer.spec().total_params() * 4);
+    let gscale = 1.0 / n as f32;
+    let inv_m = 1.0 / m as f32;
+
+    let mut losses = Vec::new();
+    for _ in 0..spec.steps {
+        let t = trainer.step() + 1;
+        for a in &mut acc {
+            a.fill(0.0);
+        }
+        let mbs = corpus.minibatch(n, h.microbatch, h.seq);
+        let mut loss_sum = 0.0f64;
+        {
+            let acc = &mut acc;
+            let mut sink = |layer: usize, grad: &[f32]| -> Result<()> {
+                host_math::grad_acc(&mut acc[layer], grad, gscale);
+                Ok(())
+            };
+            loss_sum += trainer.accumulate_minibatch_sink(&mbs, &mut sink)? as f64;
+        }
+        let (bc1, bc2) = hyper.bias_corrections(t);
+        let lr = spec.cfg.lr.at(t);
+        let n_layers = trainer.spec().layers.len();
+        for l in 0..n_layers {
+            let own = comm.reduce_scatter_sum(&mut acc[l])?;
+            debug_assert_eq!(own, shard.ranges[l]);
+            let mut g: Vec<f32> = acc[l][own.clone()].to_vec();
+            host_math::scale(&mut g, inv_m);
+            let flat = &mut trainer.params_mut()[l].flat;
+            let mut shard_p: Vec<f32> = flat[own.clone()].to_vec();
+            shard.adam_full_shard(l, &mut shard_p, &g, lr, bc1, bc2)?;
+            flat[own].copy_from_slice(&shard_p);
+            comm.all_gather_owned(flat)?;
+        }
+        trainer.advance_step();
+
+        let mut l = vec![loss_sum as f32];
+        comm.all_reduce_mean(&mut l)?;
+        losses.push(l[0]);
+    }
+
+    Ok(WorkerOut {
+        losses,
+        params: trainer.params().iter().map(|p| p.flat.clone()).collect(),
+        memory: tracker.report(),
+    })
+}

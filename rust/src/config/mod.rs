@@ -1,0 +1,290 @@
+//! Training configuration: optimizer, accumulation, parallelism, schedule.
+//!
+//! Configs load from CLI flags or JSON files and carry everything the
+//! [`crate::coordinator::Trainer`] and the distributed launcher need.
+
+use anyhow::{bail, Result};
+
+use crate::util::cliargs::Args;
+use crate::util::json::{obj, Json};
+
+/// Which optimizer drives the mini-batch update.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimizerKind {
+    /// The paper's contribution: per-micro-batch integration of gradients
+    /// into (m, v); gradient buffers released layer-by-layer.
+    AdamA,
+    /// Baseline: gradient accumulation + standard Adam at mini-batch end.
+    AdamGA,
+    /// Memory-efficient comparator (Table 2): factored second moments.
+    Adafactor,
+    /// Memory-efficient comparator (Table 2): cover-based second moments.
+    Sm3,
+    /// §5 extension: optimizer accumulation applied to momentum SGD.
+    SgdmA,
+}
+
+impl OptimizerKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "adama" => Self::AdamA,
+            "adam" | "adamga" | "adam-ga" | "ga" => Self::AdamGA,
+            "adafactor" => Self::Adafactor,
+            "sm3" => Self::Sm3,
+            "sgdma" | "sgdm" => Self::SgdmA,
+            _ => bail!("unknown optimizer '{s}' (adama|adamga|adafactor|sm3|sgdma)"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::AdamA => "adama",
+            Self::AdamGA => "adamga",
+            Self::Adafactor => "adafactor",
+            Self::Sm3 => "sm3",
+            Self::SgdmA => "sgdma",
+        }
+    }
+}
+
+/// Where optimizer arithmetic runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimBackend {
+    /// Through the AOT Pallas kernels via PJRT (the paper's fused path).
+    Kernel,
+    /// Pure-rust host loops (ablation baseline + comparator optimizers).
+    Host,
+}
+
+impl OptimBackend {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "kernel" | "pjrt" => Self::Kernel,
+            "host" => Self::Host,
+            _ => bail!("unknown backend '{s}' (kernel|host)"),
+        })
+    }
+}
+
+/// Learning-rate schedule: linear warmup then constant / cosine / inv-sqrt.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LrSchedule {
+    pub base: f32,
+    pub warmup_steps: u64,
+    pub total_steps: u64,
+    pub min_lr: f32,
+    pub kind: LrDecay,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LrDecay {
+    Constant,
+    Cosine,
+    /// `t^{-1/2}` decay — the schedule under which Theorem 1 holds.
+    InvSqrt,
+}
+
+impl LrSchedule {
+    pub fn constant(base: f32) -> Self {
+        Self { base, warmup_steps: 0, total_steps: 0, min_lr: 0.0, kind: LrDecay::Constant }
+    }
+
+    pub fn cosine(base: f32, warmup: u64, total: u64, min_lr: f32) -> Self {
+        Self { base, warmup_steps: warmup, total_steps: total, min_lr, kind: LrDecay::Cosine }
+    }
+
+    pub fn inv_sqrt(base: f32, warmup: u64) -> Self {
+        Self { base, warmup_steps: warmup, total_steps: 0, min_lr: 0.0, kind: LrDecay::InvSqrt }
+    }
+
+    /// LR at 1-based step `t`.
+    pub fn at(&self, t: u64) -> f32 {
+        if self.warmup_steps > 0 && t <= self.warmup_steps {
+            return self.base * t as f32 / self.warmup_steps as f32;
+        }
+        match self.kind {
+            LrDecay::Constant => self.base,
+            LrDecay::InvSqrt => {
+                let t0 = self.warmup_steps.max(1) as f32;
+                self.base * (t0 / t as f32).sqrt()
+            }
+            LrDecay::Cosine => {
+                let total = self.total_steps.max(self.warmup_steps + 1);
+                let progress = (t.saturating_sub(self.warmup_steps)) as f32
+                    / (total - self.warmup_steps) as f32;
+                let progress = progress.clamp(0.0, 1.0);
+                self.min_lr
+                    + 0.5 * (self.base - self.min_lr)
+                        * (1.0 + (std::f32::consts::PI * progress).cos())
+            }
+        }
+    }
+}
+
+/// Full training-run configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Manifest model config name (`tiny`, `small`, ...).
+    pub model: String,
+    pub optimizer: OptimizerKind,
+    pub backend: OptimBackend,
+    /// N — micro-batches per mini-batch (accumulation steps).
+    pub accum_steps: usize,
+    /// Flat-buffer chunk size for the optimizer kernels.
+    pub chunk: usize,
+    pub lr: LrSchedule,
+    pub seed: u64,
+    pub steps: u64,
+    /// M — data-parallel worker count (1 = single device).
+    pub workers: usize,
+    /// ZeRO-S1: partition optimizer states across workers.
+    pub zero1: bool,
+    /// Decoupled weight decay (AdamW-A / SGDM-A §5 extensions); 0 = off.
+    pub weight_decay: f32,
+    /// Heavy-ball momentum for SGDM-A.
+    pub momentum: f32,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            model: "tiny".into(),
+            optimizer: OptimizerKind::AdamA,
+            backend: OptimBackend::Kernel,
+            accum_steps: 4,
+            chunk: 16384,
+            lr: LrSchedule::constant(1e-3),
+            seed: 42,
+            steps: 50,
+            workers: 1,
+            zero1: false,
+            weight_decay: 0.0,
+            momentum: 0.9,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub const CLI_FLAGS: &'static [&'static str] = &[
+        "model", "optimizer", "backend", "accum-steps", "chunk", "lr", "warmup", "total-steps",
+        "min-lr", "decay", "seed", "steps", "workers", "zero1", "weight-decay", "momentum",
+    ];
+
+    /// Build from parsed CLI flags (missing flags keep defaults).
+    pub fn from_args(args: &Args) -> Result<Self> {
+        let d = Self::default();
+        let base_lr = args.parse_or("lr", 1e-3f32)?;
+        let warmup = args.parse_or("warmup", 0u64)?;
+        let total = args.parse_or("total-steps", 0u64)?;
+        let min_lr = args.parse_or("min-lr", 0.0f32)?;
+        let decay = args.str_or("decay", "constant");
+        let lr = match decay.as_str() {
+            "constant" => LrSchedule::constant(base_lr),
+            "cosine" => LrSchedule::cosine(base_lr, warmup, total, min_lr),
+            "invsqrt" => LrSchedule::inv_sqrt(base_lr, warmup.max(1)),
+            other => bail!("unknown --decay '{other}'"),
+        };
+        Ok(Self {
+            model: args.str_or("model", &d.model),
+            optimizer: OptimizerKind::parse(&args.str_or("optimizer", "adama"))?,
+            backend: OptimBackend::parse(&args.str_or("backend", "kernel"))?,
+            accum_steps: args.parse_or("accum-steps", d.accum_steps)?,
+            chunk: args.parse_or("chunk", d.chunk)?,
+            lr,
+            seed: args.parse_or("seed", d.seed)?,
+            steps: args.parse_or("steps", d.steps)?,
+            workers: args.parse_or("workers", d.workers)?,
+            zero1: args.flag("zero1"),
+            weight_decay: args.parse_or("weight-decay", d.weight_decay)?,
+            momentum: args.parse_or("momentum", d.momentum)?,
+        })
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.accum_steps == 0 {
+            bail!("accum_steps must be >= 1");
+        }
+        if self.workers == 0 {
+            bail!("workers must be >= 1");
+        }
+        if self.chunk == 0 || self.chunk % 128 != 0 {
+            bail!("chunk must be a positive multiple of 128 (got {})", self.chunk);
+        }
+        if self.zero1 && self.workers < 2 {
+            bail!("zero1 requires workers >= 2");
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("model", self.model.as_str().into()),
+            ("optimizer", self.optimizer.name().into()),
+            ("accum_steps", self.accum_steps.into()),
+            ("chunk", self.chunk.into()),
+            ("seed", (self.seed as usize).into()),
+            ("steps", (self.steps as usize).into()),
+            ("workers", self.workers.into()),
+            ("zero1", Json::Bool(self.zero1)),
+            ("base_lr", (self.lr.base as f64).into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn optimizer_kind_parsing() {
+        assert_eq!(OptimizerKind::parse("adama").unwrap(), OptimizerKind::AdamA);
+        assert_eq!(OptimizerKind::parse("GA").unwrap(), OptimizerKind::AdamGA);
+        assert_eq!(OptimizerKind::parse("adafactor").unwrap(), OptimizerKind::Adafactor);
+        assert!(OptimizerKind::parse("sgd").is_err());
+    }
+
+    #[test]
+    fn lr_warmup_then_cosine() {
+        let s = LrSchedule::cosine(1.0, 10, 110, 0.1);
+        assert!((s.at(5) - 0.5).abs() < 1e-6);
+        assert!((s.at(10) - 1.0).abs() < 1e-6);
+        assert!((s.at(110) - 0.1).abs() < 1e-4);
+        let mid = s.at(60);
+        assert!(mid < 1.0 && mid > 0.1);
+    }
+
+    #[test]
+    fn lr_invsqrt_matches_theorem_rate() {
+        let s = LrSchedule::inv_sqrt(1.0, 1);
+        assert!((s.at(1) - 1.0).abs() < 1e-6);
+        assert!((s.at(4) - 0.5).abs() < 1e-6);
+        assert!((s.at(100) - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn config_from_args_and_validate() {
+        let args = Args::parse(
+            "--model tiny --optimizer adamga --accum-steps 8 --workers 2 --zero1"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let c = TrainConfig::from_args(&args).unwrap();
+        assert_eq!(c.optimizer, OptimizerKind::AdamGA);
+        assert_eq!(c.accum_steps, 8);
+        assert!(c.zero1);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_configs() {
+        let mut c = TrainConfig::default();
+        c.accum_steps = 0;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.chunk = 100;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.zero1 = true;
+        assert!(c.validate().is_err());
+    }
+}

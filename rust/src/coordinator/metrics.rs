@@ -1,0 +1,132 @@
+//! Per-step training metrics + CSV/JSON export for the bench harnesses.
+
+use crate::util::json::{obj, Json};
+
+#[derive(Debug, Clone)]
+pub struct StepStats {
+    pub step: u64,
+    pub loss: f32,
+    pub lr: f32,
+    pub duration_s: f64,
+    pub tokens: usize,
+}
+
+impl StepStats {
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.duration_s > 0.0 {
+            self.tokens as f64 / self.duration_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Append-only step log.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    steps: Vec<StepStats>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, s: StepStats) {
+        self.steps.push(s);
+    }
+
+    pub fn steps(&self) -> &[StepStats] {
+        &self.steps
+    }
+
+    pub fn last_loss(&self) -> Option<f32> {
+        self.steps.last().map(|s| s.loss)
+    }
+
+    /// Mean loss over the last `n` steps (smoother convergence signal).
+    pub fn mean_loss_tail(&self, n: usize) -> f32 {
+        let tail = &self.steps[self.steps.len().saturating_sub(n)..];
+        if tail.is_empty() {
+            return f32::NAN;
+        }
+        tail.iter().map(|s| s.loss).sum::<f32>() / tail.len() as f32
+    }
+
+    /// Aggregate samples/s over the last `n` steps.
+    pub fn throughput_tail(&self, n: usize) -> f64 {
+        let tail = &self.steps[self.steps.len().saturating_sub(n)..];
+        let toks: usize = tail.iter().map(|s| s.tokens).sum();
+        let secs: f64 = tail.iter().map(|s| s.duration_s).sum();
+        if secs > 0.0 {
+            toks as f64 / secs
+        } else {
+            0.0
+        }
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("step,loss,lr,duration_s,tokens_per_sec\n");
+        for st in &self.steps {
+            s.push_str(&format!(
+                "{},{:.6},{:.6e},{:.6},{:.1}\n",
+                st.step, st.loss, st.lr, st.duration_s, st.tokens_per_sec()
+            ));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.steps
+                .iter()
+                .map(|s| {
+                    obj(vec![
+                        ("step", (s.step as usize).into()),
+                        ("loss", (s.loss as f64).into()),
+                        ("lr", (s.lr as f64).into()),
+                        ("duration_s", s.duration_s.into()),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stat(step: u64, loss: f32, dur: f64, tokens: usize) -> StepStats {
+        StepStats { step, loss, lr: 1e-3, duration_s: dur, tokens }
+    }
+
+    #[test]
+    fn tail_means() {
+        let mut m = Metrics::new();
+        for i in 1..=10 {
+            m.push(stat(i, i as f32, 0.1, 100));
+        }
+        assert_eq!(m.mean_loss_tail(2), 9.5);
+        assert_eq!(m.last_loss(), Some(10.0));
+        assert!((m.throughput_tail(10) - 1000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut m = Metrics::new();
+        m.push(stat(1, 2.0, 0.5, 50));
+        let csv = m.to_csv();
+        assert!(csv.starts_with("step,loss"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut m = Metrics::new();
+        m.push(stat(1, 2.0, 0.5, 50));
+        let j = m.to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 1);
+    }
+}

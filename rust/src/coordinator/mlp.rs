@@ -1,0 +1,160 @@
+//! MLP classifier trainer over the `mlp_*` artifacts — the paper's
+//! convolution-model substitute (Fig. 3 / Fig. 7a parity experiments).
+//!
+//! Two release-granularity layers: `[W1, b1]` and `[W2, b2]`, driven
+//! through the same [`Optimizer`] trait as the transformer, so every
+//! optimizer (AdamA / AdamGA / Adafactor / SM3) runs unchanged.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::data::BlobBatch;
+use crate::memory::{Category, MemoryTracker};
+use crate::model::{LayerParams, ModelSpec, ParamView};
+use crate::optim::{build_optimizer, Optimizer};
+use crate::runtime::{lit_f32, lit_i32, scalar_f32, scalar_i32, ArtifactLibrary, Executable};
+use crate::tensor::Rng;
+
+pub struct MlpTrainer {
+    cfg: TrainConfig,
+    pub hyper: crate::runtime::MlpHyper,
+    spec: ModelSpec,
+    params: Vec<LayerParams>,
+    opt: Box<dyn Optimizer>,
+    tracker: MemoryTracker,
+    train_exe: Arc<Executable>,
+    eval_exe: Arc<Executable>,
+    step: u64,
+}
+
+/// Build a transformer-shaped `ModelSpec` for the MLP so the optimizer
+/// trait (which works on layer specs) applies. Two layers + head markers
+/// are faked with the embed/head grouping rules.
+fn mlp_spec(h: &crate::runtime::MlpHyper) -> ModelSpec {
+    use crate::runtime::{ModelConfigEntry, ModelHyper};
+    let entry = ModelConfigEntry {
+        model: ModelHyper {
+            vocab: h.classes,
+            hidden: h.hidden,
+            layers: 1,
+            heads: 1,
+            seq: 1,
+            microbatch: h.microbatch,
+            ffn: h.hidden,
+        },
+        param_shapes: vec![
+            ("embed.W1".into(), vec![h.features, h.hidden]),
+            ("embed.b1".into(), vec![h.hidden]),
+            ("block0.w2".into(), vec![h.hidden, h.classes]),
+            ("block0.b2".into(), vec![h.classes]),
+            ("head.unused".into(), vec![1]),
+        ],
+        artifacts: Default::default(),
+    };
+    ModelSpec::from_manifest("mlp", &entry).expect("mlp spec")
+}
+
+impl MlpTrainer {
+    pub fn new(lib: Arc<ArtifactLibrary>, cfg: TrainConfig) -> Result<Self> {
+        let hyper = lib.manifest().mlp_config(&cfg.model)?.model.clone();
+        let spec = mlp_spec(&hyper);
+        let tracker = MemoryTracker::new();
+        let mut rng = Rng::new(cfg.seed);
+        // init: He-style for W1, small for W2, zero biases
+        let params: Vec<LayerParams> = spec
+            .layers
+            .iter()
+            .map(|l| {
+                let mut flat = vec![0.0f32; l.flat_len];
+                for p in &l.params {
+                    if p.shape.len() == 2 {
+                        let std = (2.0 / p.shape[0] as f32).sqrt() * 0.7;
+                        for x in &mut flat[p.range.clone()] {
+                            *x = std * rng.normal();
+                        }
+                    }
+                }
+                tracker.alloc_raw(Category::Weights, flat.len() * 4);
+                LayerParams { flat }
+            })
+            .collect();
+        let opt = build_optimizer(&cfg, &spec, &lib, &tracker)?;
+        let train_exe = lib.get(&format!("mlp_{}/mlp_train", cfg.model))?;
+        let eval_exe = lib.get(&format!("mlp_{}/mlp_eval", cfg.model))?;
+        Ok(Self { cfg, hyper, spec, params, opt, tracker, train_exe, eval_exe, step: 0 })
+    }
+
+    pub fn tracker(&self) -> &MemoryTracker {
+        &self.tracker
+    }
+
+    pub fn params(&self) -> &[LayerParams] {
+        &self.params
+    }
+
+    fn view(&self, layer: usize, idx: usize) -> (&[f32], &ParamView) {
+        let p = &self.spec.layers[layer].params[idx];
+        (self.params[layer].view(p), p)
+    }
+
+    fn param_literals(&self) -> Result<Vec<xla::Literal>> {
+        let mut out = Vec::with_capacity(4);
+        for (layer, idx) in [(0usize, 0usize), (0, 1), (1, 0), (1, 1)] {
+            let (data, p) = self.view(layer, idx);
+            out.push(lit_f32(data, &p.shape)?);
+        }
+        Ok(out)
+    }
+
+    /// One mini-batch step over `micro_batches`.
+    pub fn train_step(&mut self, micro_batches: &[BlobBatch]) -> Result<f32> {
+        let t = self.step + 1;
+        let gscale = 1.0 / micro_batches.len() as f32;
+        self.opt.begin_minibatch(t)?;
+        let mut loss_sum = 0.0f64;
+        for mb in micro_batches {
+            let mut args = vec![
+                lit_f32(&mb.x, &[mb.batch, self.hyper.features])?,
+                lit_i32(&mb.y, &[mb.batch])?,
+            ];
+            args.extend(self.param_literals()?);
+            let out = self.train_exe.run(&args)?;
+            loss_sum += scalar_f32(&out[0])? as f64;
+            // (dW1, db1) -> layer 0 flat; (dW2, db2) -> layer 1 flat
+            for (layer, lits) in [(0usize, &out[1..3]), (1, &out[3..5])] {
+                let spec_l = &self.spec.layers[layer];
+                let mut grad = vec![0.0f32; spec_l.flat_len];
+                let _g = self.tracker.alloc(Category::Gradients, spec_l.flat_len * 4);
+                for (p, lit) in spec_l.params.iter().zip(lits.iter()) {
+                    crate::runtime::copy_into_f32(lit, &mut grad[p.range.clone()])?;
+                }
+                self.opt.accumulate(layer, &grad, gscale)?;
+            }
+        }
+        let lr = self.cfg.lr.at(t);
+        self.opt.apply(&mut self.params, lr)?;
+        self.step = t;
+        Ok((loss_sum / micro_batches.len() as f64) as f32)
+    }
+
+    /// (mean loss, accuracy) over held-out batches.
+    pub fn eval(&self, batches: &[BlobBatch]) -> Result<(f32, f32)> {
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for mb in batches {
+            let mut args = vec![
+                lit_f32(&mb.x, &[mb.batch, self.hyper.features])?,
+                lit_i32(&mb.y, &[mb.batch])?,
+            ];
+            args.extend(self.param_literals()?);
+            let out = self.eval_exe.run(&args)?;
+            loss_sum += scalar_f32(&out[0])? as f64;
+            correct += scalar_i32(&out[1])? as usize;
+            total += mb.batch;
+        }
+        Ok(((loss_sum / batches.len() as f64) as f32, correct as f32 / total as f32))
+    }
+}

@@ -1,0 +1,425 @@
+//! The training coordinator — the paper's Algorithm 2 as a rust event loop.
+//!
+//! [`Trainer`] drives mini-batch → micro-batch → layer loops over the AOT
+//! artifacts: forward stashes each block's input activation (per-layer
+//! remat protocol), backward walks the layers in reverse, and the moment a
+//! layer's gradient materialises it is handed to a *gradient sink* and
+//! **freed** — the release point that lets AdamA cap gradient memory at
+//! one layer.  The default sink is the configured optimizer's
+//! [`crate::optim::Optimizer::accumulate`]; distributed runners install
+//! their own sinks (optimizer-state all-reduce, ZeRO reduce-scatter).
+//!
+//! Every buffer is registered with the [`MemoryTracker`], so the paper's
+//! Figure-5/6 peak-memory claims are *measured*, not estimated.
+
+mod metrics;
+pub mod mlp;
+
+pub use metrics::{Metrics, StepStats};
+pub use mlp::MlpTrainer;
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::TrainConfig;
+use crate::data::MicroBatch;
+use crate::memory::{Category, MemoryTracker};
+use crate::model::{init_params, LayerKind, LayerParams, ModelSpec};
+use crate::optim::{build_optimizer, Optimizer};
+use crate::runtime::{
+    lit_f32, lit_i32, scalar_f32, scalar_i32, to_vec_f32, ArtifactLibrary, Executable,
+};
+
+/// Per-layer gradient consumer — called the instant a layer's gradient
+/// exists; the buffer is released when it returns.
+pub type GradSink<'a> = dyn FnMut(usize, &[f32]) -> Result<()> + 'a;
+
+/// Compiled model artifacts for one config.
+struct ModelExecutables {
+    embed_fwd: Arc<Executable>,
+    embed_bwd: Arc<Executable>,
+    block_fwd: Arc<Executable>,
+    block_bwd: Arc<Executable>,
+    head_loss: Arc<Executable>,
+    head_eval: Arc<Executable>,
+}
+
+impl ModelExecutables {
+    fn load(lib: &ArtifactLibrary, config: &str) -> Result<Self> {
+        let get = |n: &str| lib.get(&format!("{config}/{n}"));
+        Ok(Self {
+            embed_fwd: get("embed_fwd")?,
+            embed_bwd: get("embed_bwd")?,
+            block_fwd: get("block_fwd")?,
+            block_bwd: get("block_bwd")?,
+            head_loss: get("head_loss")?,
+            head_eval: get("head_eval")?,
+        })
+    }
+}
+
+/// Model execution state (everything except the optimizer) — split out so
+/// distributed sinks can borrow the optimizer mutably alongside it.
+pub struct TrainerCore {
+    lib: Arc<ArtifactLibrary>,
+    cfg: TrainConfig,
+    spec: ModelSpec,
+    params: Vec<LayerParams>,
+    tracker: MemoryTracker,
+    exe: ModelExecutables,
+}
+
+impl TrainerCore {
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    pub fn config(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    pub fn tracker(&self) -> &MemoryTracker {
+        &self.tracker
+    }
+
+    pub fn params(&self) -> &[LayerParams] {
+        &self.params
+    }
+
+    pub fn params_mut(&mut self) -> &mut [LayerParams] {
+        &mut self.params
+    }
+
+    pub fn library(&self) -> &Arc<ArtifactLibrary> {
+        &self.lib
+    }
+
+    /// Literals for one layer's parameter tensors (artifact argument order).
+    fn layer_literals(&self, layer: usize) -> Result<Vec<xla::Literal>> {
+        let spec_l = &self.spec.layers[layer];
+        let flat = &self.params[layer];
+        spec_l.params.iter().map(|p| lit_f32(flat.view(p), &p.shape)).collect()
+    }
+
+    /// Forward through embed + blocks. Returns the final hidden state and,
+    /// if `stash` is set, every block's input literal (for backward).
+    fn forward(
+        &self,
+        mb: &MicroBatch,
+        stash: Option<&mut Vec<(xla::Literal, crate::memory::Allocation)>>,
+    ) -> Result<xla::Literal> {
+        let h = &self.spec.hyper;
+        let tokens = lit_i32(&mb.tokens, &[mb.batch, mb.seq])?;
+        let mut embed_args = vec![tokens];
+        embed_args.extend(self.layer_literals(0)?);
+        let mut x = self
+            .exe
+            .embed_fwd
+            .run(&embed_args)?
+            .into_iter()
+            .next()
+            .context("embed_fwd output")?;
+        let act_bytes = mb.batch * mb.seq * h.hidden * 4;
+        let mut stash = stash;
+        for (li, layer) in self.spec.layers.iter().enumerate() {
+            if !matches!(layer.kind, LayerKind::Block(_)) {
+                continue;
+            }
+            let mut args = vec![x.clone()];
+            args.extend(self.layer_literals(li)?);
+            let y = self
+                .exe
+                .block_fwd
+                .run(&args)?
+                .into_iter()
+                .next()
+                .context("block_fwd output")?;
+            if let Some(st) = stash.as_deref_mut() {
+                let guard = self.tracker.alloc(Category::Activations, act_bytes);
+                st.push((x, guard));
+            }
+            x = y;
+        }
+        Ok(x)
+    }
+
+    /// One micro-batch forward + layer-wise backward (Alg. 2 inner loop),
+    /// streaming each layer gradient into `on_grad` and releasing it.
+    /// Returns the micro-batch mean loss.
+    pub fn run_microbatch(&self, mb: &MicroBatch, on_grad: &mut GradSink) -> Result<f32> {
+        let head_idx = self.spec.layers.len() - 1;
+
+        // ---- forward, stashing block inputs ----
+        let mut stash: Vec<(xla::Literal, crate::memory::Allocation)> = Vec::new();
+        let x_last = self.forward(mb, Some(&mut stash))?;
+
+        // ---- head: fused loss fwd+bwd ----
+        let labels = lit_i32(&mb.labels, &[mb.batch, mb.seq])?;
+        let head_w = self.layer_literals(head_idx)?;
+        let mut args = vec![x_last];
+        args.extend(head_w);
+        args.push(labels);
+        let out = self.exe.head_loss.run(&args)?;
+        let loss = scalar_f32(&out[0])?;
+        let mut dx = out[1].clone();
+        {
+            // head gradient: hand off and release immediately
+            let dw = to_vec_f32(&out[2])?;
+            let _g = self.tracker.alloc(Category::Gradients, dw.len() * 4);
+            on_grad(head_idx, &dw)?;
+        }
+        drop(out);
+
+        // ---- blocks in reverse: bwd, hand off, release ----
+        for li in (0..self.spec.layers.len()).rev() {
+            let layer = &self.spec.layers[li];
+            if !matches!(layer.kind, LayerKind::Block(_)) {
+                continue;
+            }
+            let (x_in, act_guard) = stash.pop().context("activation stash underflow")?;
+            let mut args = vec![x_in, dx];
+            args.extend(self.layer_literals(li)?);
+            let out = self.exe.block_bwd.run(&args)?;
+            drop(act_guard); // activation consumed
+            dx = out[0].clone();
+            // flatten the 12 per-tensor grads into the layer's flat order
+            let flat_len = layer.flat_len;
+            let mut grad = vec![0.0f32; flat_len];
+            let _g = self.tracker.alloc(Category::Gradients, flat_len * 4);
+            for (p, lit) in layer.params.iter().zip(&out[1..]) {
+                crate::runtime::copy_into_f32(lit, &mut grad[p.range.clone()])?;
+            }
+            on_grad(li, &grad)?;
+            // grad + guard dropped here — the paper's release point
+        }
+
+        // ---- embedding ----
+        let tokens = lit_i32(&mb.tokens, &[mb.batch, mb.seq])?;
+        let out = self.exe.embed_bwd.run(&[tokens, dx])?;
+        let embed_spec = &self.spec.layers[0];
+        let mut grad = vec![0.0f32; embed_spec.flat_len];
+        let _g = self.tracker.alloc(Category::Gradients, embed_spec.flat_len * 4);
+        for (p, lit) in embed_spec.params.iter().zip(&out[..]) {
+            crate::runtime::copy_into_f32(lit, &mut grad[p.range.clone()])?;
+        }
+        on_grad(0, &grad)?;
+        Ok(loss)
+    }
+
+    /// Evaluate mean loss + token accuracy on held-out micro-batches.
+    pub fn eval(&self, micro_batches: &[MicroBatch]) -> Result<(f32, f32)> {
+        let head_idx = self.spec.layers.len() - 1;
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for mb in micro_batches {
+            let x = self.forward(mb, None)?;
+            let labels = lit_i32(&mb.labels, &[mb.batch, mb.seq])?;
+            let mut args = vec![x];
+            args.extend(self.layer_literals(head_idx)?);
+            args.push(labels);
+            let out = self.exe.head_eval.run(&args)?;
+            loss_sum += scalar_f32(&out[0])? as f64;
+            correct += scalar_i32(&out[1])? as usize;
+            total += mb.batch * mb.seq;
+        }
+        Ok((
+            (loss_sum / micro_batches.len() as f64) as f32,
+            correct as f32 / total as f32,
+        ))
+    }
+}
+
+/// Single-device training coordinator (optimizer-in-the-loop).
+pub struct Trainer {
+    core: TrainerCore,
+    opt: Box<dyn Optimizer>,
+    metrics: Metrics,
+    step: u64,
+}
+
+impl Trainer {
+    /// Build a trainer: resolve the model spec from the manifest, init
+    /// parameters, construct the configured optimizer, compile artifacts.
+    pub fn new(lib: Arc<ArtifactLibrary>, cfg: TrainConfig) -> Result<Self> {
+        cfg.validate()?;
+        let tracker = MemoryTracker::new();
+        Self::with_tracker(lib, cfg, tracker)
+    }
+
+    /// As [`Trainer::new`] but sharing an external tracker (DP workers).
+    pub fn with_tracker(
+        lib: Arc<ArtifactLibrary>,
+        cfg: TrainConfig,
+        tracker: MemoryTracker,
+    ) -> Result<Self> {
+        let entry = lib.manifest().model_config(&cfg.model)?.clone();
+        let spec = ModelSpec::from_manifest(&cfg.model, &entry)?;
+        let params = init_params(&spec, cfg.seed, &tracker);
+        let opt = build_optimizer(&cfg, &spec, &lib, &tracker)?;
+        let exe = ModelExecutables::load(&lib, &cfg.model)
+            .with_context(|| format!("loading model artifacts for '{}'", cfg.model))?;
+        let core = TrainerCore { lib, cfg, spec, params, tracker, exe };
+        Ok(Self { core, opt, metrics: Metrics::new(), step: 0 })
+    }
+
+    /// Build with an externally-managed optimizer (e.g. [`crate::optim::NullOpt`]
+    /// for ZeRO-S1 flows where state lives in shards outside the trainer).
+    pub fn with_optimizer(
+        lib: Arc<ArtifactLibrary>,
+        cfg: TrainConfig,
+        tracker: MemoryTracker,
+        opt: Box<dyn Optimizer>,
+    ) -> Result<Self> {
+        let entry = lib.manifest().model_config(&cfg.model)?.clone();
+        let spec = ModelSpec::from_manifest(&cfg.model, &entry)?;
+        let params = init_params(&spec, cfg.seed, &tracker);
+        let exe = ModelExecutables::load(&lib, &cfg.model)
+            .with_context(|| format!("loading model artifacts for '{}'", cfg.model))?;
+        let core = TrainerCore { lib, cfg, spec, params, tracker, exe };
+        Ok(Self { core, opt, metrics: Metrics::new(), step: 0 })
+    }
+
+    // ---- accessors (delegate to core) ----
+
+    pub fn spec(&self) -> &ModelSpec {
+        self.core.spec()
+    }
+
+    pub fn config(&self) -> &TrainConfig {
+        self.core.config()
+    }
+
+    pub fn tracker(&self) -> &MemoryTracker {
+        self.core.tracker()
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    pub fn params(&self) -> &[LayerParams] {
+        self.core.params()
+    }
+
+    pub fn params_mut(&mut self) -> &mut [LayerParams] {
+        self.core.params_mut()
+    }
+
+    pub fn library(&self) -> &Arc<ArtifactLibrary> {
+        self.core.library()
+    }
+
+    pub fn core(&self) -> &TrainerCore {
+        &self.core
+    }
+
+    pub fn optimizer_mut(&mut self) -> &mut dyn Optimizer {
+        self.opt.as_mut()
+    }
+
+    /// Split borrow: model-execution core + optimizer, for distributed
+    /// sinks that need both simultaneously.
+    pub fn parts_mut(&mut self) -> (&mut TrainerCore, &mut dyn Optimizer) {
+        (&mut self.core, self.opt.as_mut())
+    }
+
+    /// One full training step over `micro_batches` (one mini-batch).
+    pub fn train_step(&mut self, micro_batches: &[MicroBatch]) -> Result<StepStats> {
+        self.train_step_scaled(micro_batches, 1.0 / micro_batches.len() as f32)
+    }
+
+    /// As [`Self::train_step`] with an explicit gradient scale (Eq. 5-6:
+    /// DP workers pass 1/N and let the all-reduce supply 1/M).
+    pub fn train_step_scaled(
+        &mut self,
+        micro_batches: &[MicroBatch],
+        gscale: f32,
+    ) -> Result<StepStats> {
+        let t0 = std::time::Instant::now();
+        let loss = self.accumulate_minibatch(micro_batches, gscale)?;
+        let stats = self.apply_update_timed(loss, micro_batches, t0)?;
+        Ok(stats)
+    }
+
+    /// Backward-only phase: decay states, stream all micro-batch gradients
+    /// into the optimizer. Distributed runners call this, synchronise
+    /// states (Eq. 7-8), then [`Self::apply_update`].
+    pub fn accumulate_minibatch(
+        &mut self,
+        micro_batches: &[MicroBatch],
+        gscale: f32,
+    ) -> Result<f32> {
+        let t = self.step + 1;
+        let (core, opt) = (&self.core, self.opt.as_mut());
+        opt.begin_minibatch(t)?;
+        let mut loss_sum = 0.0f64;
+        for mb in micro_batches {
+            let loss =
+                core.run_microbatch(mb, &mut |layer, grad| opt.accumulate(layer, grad, gscale))?;
+            loss_sum += loss as f64;
+        }
+        Ok((loss_sum / micro_batches.len() as f64) as f32)
+    }
+
+    /// Backward-only phase with a custom gradient sink (ZeRO flows).
+    pub fn accumulate_minibatch_sink(
+        &mut self,
+        micro_batches: &[MicroBatch],
+        sink: &mut GradSink,
+    ) -> Result<f32> {
+        let mut loss_sum = 0.0f64;
+        for mb in micro_batches {
+            loss_sum += self.core.run_microbatch(mb, sink)? as f64;
+        }
+        Ok((loss_sum / micro_batches.len() as f64) as f32)
+    }
+
+    /// Finish a step after external state synchronisation.
+    pub fn apply_update(&mut self) -> Result<StepStats> {
+        let t0 = std::time::Instant::now();
+        self.apply_update_timed(f32::NAN, &[], t0)
+    }
+
+    fn apply_update_timed(
+        &mut self,
+        loss: f32,
+        micro_batches: &[MicroBatch],
+        t0: std::time::Instant,
+    ) -> Result<StepStats> {
+        let t = self.step + 1;
+        let lr = self.core.cfg.lr.at(t);
+        self.opt.apply(&mut self.core.params, lr)?;
+        self.step = t;
+        let tokens: usize = micro_batches.iter().map(|m| m.batch * m.seq).sum();
+        let stats =
+            StepStats { step: t, loss, lr, duration_s: t0.elapsed().as_secs_f64(), tokens };
+        self.metrics.push(stats.clone());
+        Ok(stats)
+    }
+
+    /// Advance the step counter without an optimizer apply (ZeRO flows
+    /// apply shard updates themselves).
+    pub fn advance_step(&mut self) -> u64 {
+        self.step += 1;
+        self.step
+    }
+
+    pub fn eval(&self, micro_batches: &[MicroBatch]) -> Result<(f32, f32)> {
+        self.core.eval(micro_batches)
+    }
+
+    pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+        crate::model::checkpoint::save(path, &self.core.spec, &self.core.params)
+    }
+
+    pub fn load_checkpoint(&mut self, path: &std::path::Path) -> Result<()> {
+        self.core.params = crate::model::checkpoint::load(path, &self.core.spec)?;
+        Ok(())
+    }
+}

@@ -1,0 +1,37 @@
+//! # adama — Adam Accumulation for memory-efficient large-scale training
+//!
+//! Reproduction of *"Adam Accumulation to Reduce Memory Footprints of both
+//! Activations and Gradients for Large-scale DNN Training"* (Zhang et al.,
+//! 2023) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build time)** — Pallas optimizer kernels and a per-layer
+//!   transformer LM, AOT-lowered to HLO text by `python/compile/aot.py`.
+//! * **L3 (this crate)** — the training coordinator: micro-batch
+//!   scheduling, layer-by-layer backward with immediate gradient release,
+//!   optimizer-state accumulation (the paper's contribution), in-process
+//!   data-parallel workers with optimizer-state all-reduce (Eq. 5–8),
+//!   ZeRO-S1 partitioning, category-exact memory accounting, and an
+//!   analytic memory model that regenerates the paper's tables/figures.
+//!
+//! Python never runs on the training path: the [`runtime`] module loads
+//! the AOT artifacts through the PJRT C API (`xla` crate) and executes
+//! them from rust.
+//!
+//! Start with [`coordinator::Trainer`] (see `examples/quickstart.rs`).
+
+pub mod collective;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod memmodel;
+pub mod memory;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use config::{OptimizerKind, TrainConfig};
+pub use coordinator::Trainer;
+pub use memory::{Category, MemoryTracker};
+pub use runtime::{ArtifactLibrary, Engine};

@@ -1,0 +1,10 @@
+//! `adama` CLI — leader entrypoint for training runs and paper experiments.
+
+
+
+mod cli;
+
+fn main() -> anyhow::Result<()> {
+    let args = cli::Cli::parse();
+    cli::run(args)
+}

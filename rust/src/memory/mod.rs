@@ -1,0 +1,266 @@
+//! Category-exact training memory accounting.
+//!
+//! The paper's headline metric is peak device memory split into the four
+//! classic categories (weights / gradients / optimizer states /
+//! activations).  Instead of reading `nvidia-smi`, every buffer the
+//! coordinator materialises is registered here, giving bit-exact live and
+//! peak byte counts per category — the instrument behind Figures 5–6 and
+//! the tracker-vs-analytic-model validation tests.
+
+use std::fmt;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// The four memory categories of the paper (§2) plus transient workspace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Category {
+    Weights,
+    Gradients,
+    OptimizerStates,
+    Activations,
+    Workspace,
+}
+
+impl Category {
+    pub const ALL: [Category; 5] = [
+        Category::Weights,
+        Category::Gradients,
+        Category::OptimizerStates,
+        Category::Activations,
+        Category::Workspace,
+    ];
+
+    fn idx(self) -> usize {
+        match self {
+            Category::Weights => 0,
+            Category::Gradients => 1,
+            Category::OptimizerStates => 2,
+            Category::Activations => 3,
+            Category::Workspace => 4,
+        }
+    }
+}
+
+impl fmt::Display for Category {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Category::Weights => "weights",
+            Category::Gradients => "gradients",
+            Category::OptimizerStates => "optimizer_states",
+            Category::Activations => "activations",
+            Category::Workspace => "workspace",
+        };
+        f.write_str(s)
+    }
+}
+
+#[derive(Default)]
+struct Counters {
+    live: AtomicI64,
+    peak: AtomicI64,
+}
+
+impl Counters {
+    fn add(&self, delta: i64) {
+        let now = self.live.fetch_add(delta, Ordering::SeqCst) + delta;
+        debug_assert!(now >= 0, "negative live bytes");
+        self.peak.fetch_max(now, Ordering::SeqCst);
+    }
+}
+
+/// Thread-safe live/peak byte tracker. Cloneable handle (Arc inside).
+#[derive(Clone)]
+pub struct MemoryTracker {
+    inner: Arc<Inner>,
+}
+
+struct Inner {
+    cats: [Counters; 5],
+    total_live: AtomicI64,
+    total_peak: AtomicI64,
+    allocs: AtomicU64,
+}
+
+impl Default for MemoryTracker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MemoryTracker {
+    pub fn new() -> Self {
+        Self {
+            inner: Arc::new(Inner {
+                cats: Default::default(),
+                total_live: AtomicI64::new(0),
+                total_peak: AtomicI64::new(0),
+                allocs: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    fn record(&self, cat: Category, delta: i64) {
+        self.inner.cats[cat.idx()].add(delta);
+        let now = self.inner.total_live.fetch_add(delta, Ordering::SeqCst) + delta;
+        self.inner.total_peak.fetch_max(now, Ordering::SeqCst);
+        if delta > 0 {
+            self.inner.allocs.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Register an allocation; the returned guard frees it on drop.
+    pub fn alloc(&self, cat: Category, bytes: usize) -> Allocation {
+        self.record(cat, bytes as i64);
+        Allocation { tracker: self.clone(), cat, bytes }
+    }
+
+    /// Register a long-lived allocation without a guard (freed via `free`).
+    pub fn alloc_raw(&self, cat: Category, bytes: usize) {
+        self.record(cat, bytes as i64);
+    }
+
+    pub fn free_raw(&self, cat: Category, bytes: usize) {
+        self.record(cat, -(bytes as i64));
+    }
+
+    pub fn live(&self, cat: Category) -> usize {
+        self.inner.cats[cat.idx()].live.load(Ordering::SeqCst).max(0) as usize
+    }
+
+    pub fn peak(&self, cat: Category) -> usize {
+        self.inner.cats[cat.idx()].peak.load(Ordering::SeqCst).max(0) as usize
+    }
+
+    pub fn total_live(&self) -> usize {
+        self.inner.total_live.load(Ordering::SeqCst).max(0) as usize
+    }
+
+    pub fn total_peak(&self) -> usize {
+        self.inner.total_peak.load(Ordering::SeqCst).max(0) as usize
+    }
+
+    pub fn alloc_count(&self) -> u64 {
+        self.inner.allocs.load(Ordering::Relaxed)
+    }
+
+    /// Reset peaks to current live values (e.g. after warm-up steps).
+    pub fn reset_peaks(&self) {
+        for c in &self.inner.cats {
+            c.peak.store(c.live.load(Ordering::SeqCst), Ordering::SeqCst);
+        }
+        self.inner
+            .total_peak
+            .store(self.inner.total_live.load(Ordering::SeqCst), Ordering::SeqCst);
+    }
+
+    /// Snapshot of peaks per category, for reports.
+    pub fn report(&self) -> MemoryReport {
+        MemoryReport {
+            peak_weights: self.peak(Category::Weights),
+            peak_gradients: self.peak(Category::Gradients),
+            peak_optimizer: self.peak(Category::OptimizerStates),
+            peak_activations: self.peak(Category::Activations),
+            peak_workspace: self.peak(Category::Workspace),
+            peak_total: self.total_peak(),
+        }
+    }
+}
+
+/// RAII guard for a tracked allocation.
+pub struct Allocation {
+    tracker: MemoryTracker,
+    cat: Category,
+    bytes: usize,
+}
+
+impl Allocation {
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+impl Drop for Allocation {
+    fn drop(&mut self) {
+        self.tracker.record(self.cat, -(self.bytes as i64));
+    }
+}
+
+/// Peak-bytes snapshot per category.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemoryReport {
+    pub peak_weights: usize,
+    pub peak_gradients: usize,
+    pub peak_optimizer: usize,
+    pub peak_activations: usize,
+    pub peak_workspace: usize,
+    pub peak_total: usize,
+}
+
+impl fmt::Display for MemoryReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "peak memory (bytes):")?;
+        writeln!(f, "  weights          {:>14}", self.peak_weights)?;
+        writeln!(f, "  gradients        {:>14}", self.peak_gradients)?;
+        writeln!(f, "  optimizer states {:>14}", self.peak_optimizer)?;
+        writeln!(f, "  activations      {:>14}", self.peak_activations)?;
+        writeln!(f, "  workspace        {:>14}", self.peak_workspace)?;
+        write!(f, "  TOTAL            {:>14}", self.peak_total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn guard_frees_on_drop() {
+        let t = MemoryTracker::new();
+        {
+            let _a = t.alloc(Category::Gradients, 100);
+            assert_eq!(t.live(Category::Gradients), 100);
+        }
+        assert_eq!(t.live(Category::Gradients), 0);
+        assert_eq!(t.peak(Category::Gradients), 100);
+    }
+
+    #[test]
+    fn peak_tracks_maximum_concurrent() {
+        let t = MemoryTracker::new();
+        let a = t.alloc(Category::Activations, 10);
+        let b = t.alloc(Category::Activations, 20);
+        drop(a);
+        let _c = t.alloc(Category::Activations, 5);
+        drop(b);
+        assert_eq!(t.peak(Category::Activations), 30);
+        assert_eq!(t.live(Category::Activations), 5);
+    }
+
+    #[test]
+    fn total_spans_categories() {
+        let t = MemoryTracker::new();
+        let _a = t.alloc(Category::Weights, 7);
+        let _b = t.alloc(Category::Gradients, 8);
+        assert_eq!(t.total_live(), 15);
+        assert_eq!(t.total_peak(), 15);
+    }
+
+    #[test]
+    fn reset_peaks_to_live() {
+        let t = MemoryTracker::new();
+        {
+            let _a = t.alloc(Category::Workspace, 1000);
+        }
+        let _b = t.alloc(Category::Workspace, 10);
+        t.reset_peaks();
+        assert_eq!(t.peak(Category::Workspace), 10);
+    }
+
+    #[test]
+    fn raw_alloc_free_balance() {
+        let t = MemoryTracker::new();
+        t.alloc_raw(Category::OptimizerStates, 64);
+        t.free_raw(Category::OptimizerStates, 64);
+        assert_eq!(t.live(Category::OptimizerStates), 0);
+        assert_eq!(t.peak(Category::OptimizerStates), 64);
+    }
+}

@@ -1,0 +1,334 @@
+//! Model topology on the rust side: layer graph, parameter registry, init.
+//!
+//! The ground truth for shapes is `manifest.json` (written at AOT time from
+//! `python/compile/model.py::ModelConfig.param_shapes`); this module groups
+//! those tensors into *layers* — the granularity at which AdamA releases
+//! gradients — and lays each layer's tensors out in one contiguous flat
+//! buffer so the chunked optimizer kernels and collectives can stream it.
+
+use std::ops::Range;
+
+use anyhow::{bail, Result};
+
+use crate::memory::{Category, MemoryTracker};
+use crate::runtime::ModelConfigEntry;
+use crate::tensor::Rng;
+
+/// One tensor's view into its layer's flat buffer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamView {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub range: Range<usize>,
+}
+
+impl ParamView {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Layer role in the forward/backward sweep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    Embed,
+    Block(usize),
+    Head,
+}
+
+/// A release-granularity unit: all tensors updated together.
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    pub kind: LayerKind,
+    pub name: String,
+    pub params: Vec<ParamView>,
+    pub flat_len: usize,
+}
+
+/// The full layer graph for one manifest model config.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub config: String,
+    pub hyper: crate::runtime::ModelHyper,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl ModelSpec {
+    /// Group the manifest's ordered `param_shapes` into layers:
+    /// `embed.*` | `block{i}.*` | `head.*`.
+    pub fn from_manifest(config: &str, entry: &ModelConfigEntry) -> Result<Self> {
+        let mut layers: Vec<LayerSpec> = Vec::new();
+        for (name, shape) in &entry.param_shapes {
+            let (layer_name, kind) = match name.split_once('.') {
+                Some(("embed", _)) => ("embed".to_string(), LayerKind::Embed),
+                Some(("head", _)) => ("head".to_string(), LayerKind::Head),
+                Some((blk, _)) if blk.starts_with("block") => {
+                    let idx: usize = blk[5..].parse()?;
+                    (blk.to_string(), LayerKind::Block(idx))
+                }
+                _ => bail!("unparseable param name '{name}'"),
+            };
+            if layers.last().map(|l| l.name != layer_name).unwrap_or(true) {
+                layers.push(LayerSpec {
+                    kind,
+                    name: layer_name,
+                    params: Vec::new(),
+                    flat_len: 0,
+                });
+            }
+            let layer = layers.last_mut().unwrap();
+            let n: usize = shape.iter().product();
+            layer.params.push(ParamView {
+                name: name.clone(),
+                shape: shape.clone(),
+                range: layer.flat_len..layer.flat_len + n,
+            });
+            layer.flat_len += n;
+        }
+        // sanity: embed first, head last, blocks contiguous
+        if layers.first().map(|l| l.kind) != Some(LayerKind::Embed) {
+            bail!("expected embed layer first");
+        }
+        if layers.last().map(|l| l.kind) != Some(LayerKind::Head) {
+            bail!("expected head layer last");
+        }
+        Ok(Self { config: config.to_string(), hyper: entry.model.clone(), layers })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.layers.iter().filter(|l| matches!(l.kind, LayerKind::Block(_))).count()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.layers.iter().map(|l| l.flat_len).sum()
+    }
+
+    /// Largest single layer — AdamA's gradient-memory peak (paper's 1/M).
+    pub fn max_layer_params(&self) -> usize {
+        self.layers.iter().map(|l| l.flat_len).max().unwrap_or(0)
+    }
+
+    pub fn layer(&self, idx: usize) -> &LayerSpec {
+        &self.layers[idx]
+    }
+
+    /// Activation elements stashed per block input per micro-batch
+    /// (`[mb, seq, hidden]` — the per-layer remat protocol).
+    pub fn block_input_elems(&self) -> usize {
+        self.hyper.microbatch * self.hyper.seq * self.hyper.hidden
+    }
+}
+
+/// One layer's parameters in a contiguous flat buffer.
+#[derive(Debug, Clone)]
+pub struct LayerParams {
+    pub flat: Vec<f32>,
+}
+
+impl LayerParams {
+    pub fn view<'a>(&'a self, p: &ParamView) -> &'a [f32] {
+        &self.flat[p.range.clone()]
+    }
+
+    pub fn view_mut<'a>(&'a mut self, p: &ParamView) -> &'a mut [f32] {
+        &mut self.flat[p.range.clone()]
+    }
+}
+
+/// Initialise all layers (mirrors `python/compile/model.py::init_params`:
+/// std 0.02 for embeddings, fan_in^-1/2 for matrices, ones for LN gains,
+/// zeros for biases). Registers bytes with the tracker as `Weights`.
+pub fn init_params(spec: &ModelSpec, seed: u64, tracker: &MemoryTracker) -> Vec<LayerParams> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(spec.layers.len());
+    for layer in &spec.layers {
+        let mut flat = vec![0.0f32; layer.flat_len];
+        for p in &layer.params {
+            let dst = &mut flat[p.range.clone()];
+            init_tensor(&p.name, &p.shape, dst, &mut rng);
+        }
+        tracker.alloc_raw(Category::Weights, flat.len() * 4);
+        out.push(LayerParams { flat });
+    }
+    out
+}
+
+fn init_tensor(name: &str, shape: &[usize], dst: &mut [f32], rng: &mut Rng) {
+    let last = name.rsplit('.').next().unwrap_or("");
+    match last {
+        "g" => dst.fill(1.0),                            // LN gain
+        "b" | "bqkv" | "bo" | "b1" | "b2" => dst.fill(0.0), // biases
+        _ => {
+            let std = if name.starts_with("embed") {
+                0.02
+            } else {
+                let fan_in = shape.first().copied().unwrap_or(1).max(1);
+                (fan_in as f32).powf(-0.5)
+            };
+            for x in dst.iter_mut() {
+                *x = std * rng.normal();
+            }
+        }
+    }
+}
+
+/// Serialize parameters to a simple binary checkpoint (version + per-layer
+/// f32 blobs). Used by Table-1 style pretrain->finetune flows.
+pub mod checkpoint {
+    use std::io::{Read, Write};
+    use std::path::Path;
+
+    use anyhow::{bail, Context, Result};
+
+    use super::{LayerParams, ModelSpec};
+
+    const MAGIC: &[u8; 8] = b"ADAMACK1";
+
+    pub fn save(path: &Path, spec: &ModelSpec, params: &[LayerParams]) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&(params.len() as u64).to_le_bytes())?;
+        for (layer, spec_l) in params.iter().zip(&spec.layers) {
+            assert_eq!(layer.flat.len(), spec_l.flat_len);
+            f.write_all(&(layer.flat.len() as u64).to_le_bytes())?;
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(layer.flat.as_ptr() as *const u8, layer.flat.len() * 4)
+            };
+            f.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path, spec: &ModelSpec) -> Result<Vec<LayerParams>> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not an adama checkpoint");
+        }
+        let mut n8 = [0u8; 8];
+        f.read_exact(&mut n8)?;
+        let n_layers = u64::from_le_bytes(n8) as usize;
+        if n_layers != spec.layers.len() {
+            bail!("checkpoint has {} layers, spec wants {}", n_layers, spec.layers.len());
+        }
+        let mut out = Vec::with_capacity(n_layers);
+        for spec_l in &spec.layers {
+            f.read_exact(&mut n8)?;
+            let len = u64::from_le_bytes(n8) as usize;
+            if len != spec_l.flat_len {
+                bail!("layer '{}' len {} != {}", spec_l.name, len, spec_l.flat_len);
+            }
+            let mut flat = vec![0.0f32; len];
+            let bytes: &mut [u8] = unsafe {
+                std::slice::from_raw_parts_mut(flat.as_mut_ptr() as *mut u8, len * 4)
+            };
+            f.read_exact(bytes)?;
+            out.push(LayerParams { flat });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Manifest, ModelHyper};
+
+    fn toy_entry() -> ModelConfigEntry {
+        ModelConfigEntry {
+            model: ModelHyper {
+                vocab: 16, hidden: 8, layers: 2, heads: 2, seq: 4, microbatch: 2, ffn: 32,
+            },
+            param_shapes: vec![
+                ("embed.E".into(), vec![16, 8]),
+                ("embed.P".into(), vec![4, 8]),
+                ("block0.ln1.g".into(), vec![8]),
+                ("block0.attn.wqkv".into(), vec![8, 24]),
+                ("block1.ln1.g".into(), vec![8]),
+                ("block1.attn.wqkv".into(), vec![8, 24]),
+                ("head.W".into(), vec![8, 16]),
+            ],
+            artifacts: Default::default(),
+        }
+    }
+
+    use crate::runtime::ModelConfigEntry;
+
+    #[test]
+    fn groups_layers_in_order() {
+        let spec = ModelSpec::from_manifest("toy", &toy_entry()).unwrap();
+        let names: Vec<_> = spec.layers.iter().map(|l| l.name.as_str()).collect();
+        assert_eq!(names, vec!["embed", "block0", "block1", "head"]);
+        assert_eq!(spec.total_params(), 16 * 8 + 4 * 8 + 2 * (8 + 8 * 24) + 8 * 16);
+        assert_eq!(spec.max_layer_params(), 8 + 8 * 24); // block > embed here
+        assert_eq!(spec.n_blocks(), 2);
+    }
+
+    #[test]
+    fn param_views_are_contiguous_and_cover() {
+        let spec = ModelSpec::from_manifest("toy", &toy_entry()).unwrap();
+        for layer in &spec.layers {
+            let mut off = 0;
+            for p in &layer.params {
+                assert_eq!(p.range.start, off);
+                off = p.range.end;
+            }
+            assert_eq!(off, layer.flat_len);
+        }
+    }
+
+    #[test]
+    fn init_respects_tensor_roles() {
+        let spec = ModelSpec::from_manifest("toy", &toy_entry()).unwrap();
+        let tracker = MemoryTracker::new();
+        let params = init_params(&spec, 7, &tracker);
+        // LN gain = ones
+        let blk0 = &spec.layers[1];
+        let g = params[1].view(&blk0.params[0]);
+        assert!(g.iter().all(|&x| x == 1.0));
+        // embeddings have std ~0.02
+        let e = params[0].view(&spec.layers[0].params[0]);
+        let std = (e.iter().map(|x| x * x).sum::<f32>() / e.len() as f32).sqrt();
+        assert!((std - 0.02).abs() < 0.01, "std {std}");
+        // tracker saw all weights
+        assert_eq!(tracker.live(Category::Weights), spec.total_params() * 4);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let spec = ModelSpec::from_manifest("toy", &toy_entry()).unwrap();
+        let tracker = MemoryTracker::new();
+        let params = init_params(&spec, 9, &tracker);
+        let dir = std::env::temp_dir().join("adama_ck_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("toy.ck");
+        checkpoint::save(&path, &spec, &params).unwrap();
+        let loaded = checkpoint::load(&path, &spec).unwrap();
+        for (a, b) in params.iter().zip(&loaded) {
+            assert_eq!(a.flat, b.flat);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn from_real_manifest_if_present() {
+        let root = crate::runtime::ArtifactLibrary::default_root();
+        let Ok(m) = Manifest::load(root.join("manifest.json")) else { return };
+        let entry = m.model_config("tiny").unwrap();
+        let spec = ModelSpec::from_manifest("tiny", entry).unwrap();
+        assert_eq!(spec.n_blocks(), entry.model.layers);
+        // 12 tensors per block
+        for l in &spec.layers {
+            if matches!(l.kind, LayerKind::Block(_)) {
+                assert_eq!(l.params.len(), 12);
+            }
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! Adafactor (Shazeer & Stern 2018) — Table-2 comparator.
+//!
+//! Reduces *optimizer-state* memory by factoring the second moment of each
+//! matrix into row/column accumulators (R + C floats instead of R·C);
+//! vectors keep a full second moment. First moment disabled (β₁=0), per
+//! the memory-saving configuration the paper compares against.  Gradient
+//! handling is GA-style (full accumulator) — Adafactor does not release
+//! gradients early, which is exactly why AdamA beats it in Table 2.
+
+use anyhow::Result;
+
+use super::{Hyper, Optimizer};
+use crate::config::OptimizerKind;
+use crate::memory::{Category, MemoryTracker};
+use crate::model::{LayerParams, ModelSpec, ParamView};
+
+const EPS1: f32 = 1e-30;
+
+enum Second {
+    /// 2-D tensor: factored row/col mean-square accumulators.
+    Factored { rows: Vec<f32>, cols: Vec<f32>, r: usize, c: usize },
+    /// 1-D tensor: full accumulator.
+    Full(Vec<f32>),
+}
+
+struct TensorState {
+    view: ParamView,
+    second: Second,
+}
+
+pub struct Adafactor {
+    layers: Vec<Vec<TensorState>>,
+    acc: Vec<Vec<f32>>,
+    beta2: f32,
+    t: u64,
+    state_bytes: usize,
+    grad_bytes: usize,
+}
+
+impl Adafactor {
+    pub fn new(spec: &ModelSpec, hyper: Hyper, tracker: &MemoryTracker) -> Self {
+        let mut state_bytes = 0usize;
+        let layers = spec
+            .layers
+            .iter()
+            .map(|l| {
+                l.params
+                    .iter()
+                    .map(|p| {
+                        let second = if p.shape.len() == 2 {
+                            let (r, c) = (p.shape[0], p.shape[1]);
+                            state_bytes += (r + c) * 4;
+                            Second::Factored { rows: vec![0.0; r], cols: vec![0.0; c], r, c }
+                        } else {
+                            state_bytes += p.elements() * 4;
+                            Second::Full(vec![0.0; p.elements()])
+                        };
+                        TensorState { view: p.clone(), second }
+                    })
+                    .collect()
+            })
+            .collect();
+        let acc: Vec<Vec<f32>> = spec.layers.iter().map(|l| vec![0.0; l.flat_len]).collect();
+        let grad_bytes = spec.total_params() * 4;
+        tracker.alloc_raw(Category::OptimizerStates, state_bytes);
+        tracker.alloc_raw(Category::Gradients, grad_bytes);
+        Self { layers, acc, beta2: hyper.beta2, t: 0, state_bytes, grad_bytes }
+    }
+}
+
+impl Optimizer for Adafactor {
+    fn kind(&self) -> OptimizerKind {
+        OptimizerKind::Adafactor
+    }
+
+    fn begin_minibatch(&mut self, t: u64) -> Result<()> {
+        self.t = t;
+        for a in &mut self.acc {
+            a.fill(0.0);
+        }
+        Ok(())
+    }
+
+    fn accumulate(&mut self, layer: usize, grad: &[f32], gscale: f32) -> Result<()> {
+        super::host_math::grad_acc(&mut self.acc[layer], grad, gscale);
+        Ok(())
+    }
+
+    fn apply(&mut self, params: &mut [LayerParams], lr: f32) -> Result<()> {
+        // decaying beta2-hat per Shazeer-Stern (t^-0.8 schedule)
+        let b2 = 1.0 - (self.t as f32).powf(-0.8).min(1.0 - self.beta2);
+        for (l, p) in params.iter_mut().enumerate() {
+            for ts in &mut self.layers[l] {
+                let g = &self.acc[l][ts.view.range.clone()];
+                let dst = &mut p.flat[ts.view.range.clone()];
+                match &mut ts.second {
+                    Second::Factored { rows, cols, r, c } => {
+                        let (r, c) = (*r, *c);
+                        for i in 0..r {
+                            let mean: f32 = (0..c)
+                                .map(|j| g[i * c + j] * g[i * c + j] + EPS1)
+                                .sum::<f32>()
+                                / c as f32;
+                            rows[i] = b2 * rows[i] + (1.0 - b2) * mean;
+                        }
+                        for j in 0..c {
+                            let mean: f32 = (0..r)
+                                .map(|i| g[i * c + j] * g[i * c + j] + EPS1)
+                                .sum::<f32>()
+                                / r as f32;
+                            cols[j] = b2 * cols[j] + (1.0 - b2) * mean;
+                        }
+                        let row_mean =
+                            rows.iter().sum::<f32>().max(EPS1) / r as f32;
+                        for i in 0..r {
+                            for j in 0..c {
+                                let vhat = rows[i] * cols[j] / row_mean;
+                                dst[i * c + j] -= lr * g[i * c + j] / (vhat.sqrt() + 1e-8);
+                            }
+                        }
+                    }
+                    Second::Full(v) => {
+                        for i in 0..v.len() {
+                            v[i] = b2 * v[i] + (1.0 - b2) * (g[i] * g[i] + EPS1);
+                            dst[i] -= lr * g[i] / (v[i].sqrt() + 1e-8);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.state_bytes
+    }
+
+    fn persistent_grad_bytes(&self) -> usize {
+        self.grad_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{ModelConfigEntry, ModelHyper};
+
+    fn toy_spec() -> ModelSpec {
+        let entry = ModelConfigEntry {
+            model: ModelHyper {
+                vocab: 8, hidden: 4, layers: 1, heads: 1, seq: 2, microbatch: 2, ffn: 16,
+            },
+            param_shapes: vec![
+                ("embed.E".into(), vec![8, 4]),
+                ("block0.ln1.g".into(), vec![4]),
+                ("head.W".into(), vec![4, 8]),
+            ],
+            artifacts: Default::default(),
+        };
+        ModelSpec::from_manifest("toy", &entry).unwrap()
+    }
+
+    #[test]
+    fn factored_state_is_sublinear() {
+        let spec = toy_spec();
+        let tracker = MemoryTracker::new();
+        let opt = Adafactor::new(&spec, Hyper { beta1: 0.9, beta2: 0.999, eps: 1e-8 }, &tracker);
+        // matrices factored: (8+4) + (4+8); vector ln1.g full: 4
+        assert_eq!(opt.state_bytes(), (12 + 12 + 4) * 4);
+        assert!(opt.state_bytes() < spec.total_params() * 4); // < one copy of P
+        assert_eq!(opt.persistent_grad_bytes(), spec.total_params() * 4);
+    }
+
+    #[test]
+    fn descends_on_quadratic() {
+        // minimize 0.5*||p||^2 (grad = p): loss must shrink.
+        let spec = toy_spec();
+        let tracker = MemoryTracker::new();
+        let mut opt =
+            Adafactor::new(&spec, Hyper { beta1: 0.9, beta2: 0.999, eps: 1e-8 }, &tracker);
+        let mut params: Vec<LayerParams> =
+            spec.layers.iter().map(|l| LayerParams { flat: vec![1.0; l.flat_len] }).collect();
+        let norm0: f32 = params.iter().flat_map(|p| &p.flat).map(|x| x * x).sum();
+        for t in 1..=20 {
+            opt.begin_minibatch(t).unwrap();
+            let grads: Vec<Vec<f32>> = params.iter().map(|p| p.flat.clone()).collect();
+            for (l, g) in grads.iter().enumerate() {
+                opt.accumulate(l, g, 1.0).unwrap();
+            }
+            opt.apply(&mut params, 0.05).unwrap();
+        }
+        let norm1: f32 = params.iter().flat_map(|p| &p.flat).map(|x| x * x).sum();
+        assert!(norm1 < norm0 * 0.8, "{norm1} !< {norm0}");
+    }
+}

@@ -1,0 +1,250 @@
+//! AdamA — the paper's optimizer-accumulation method (Algorithm 2).
+//!
+//! State: per-layer (m, v) flat buffers, 2·P floats total.  At mini-batch
+//! start the states decay once (`m ← β₁m`, `v ← s·β₂v` where `s = M` in
+//! the distributed scheme, Eq. 6); each micro-batch layer gradient is then
+//! folded in immediately and *released by the caller* — no gradient
+//! accumulator exists anywhere.
+
+use anyhow::Result;
+
+use super::{AdamStatesMut, Hyper, Optimizer, UpdateBackend};
+use crate::config::OptimizerKind;
+use crate::memory::{Category, MemoryTracker};
+use crate::model::{LayerParams, ModelSpec};
+
+pub struct AdamA {
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    hyper: Hyper,
+    backend: UpdateBackend,
+    t: u64,
+    v_decay_factor: f32,
+    /// Decoupled weight decay (AdamW-A, §5 extension); 0 disables.
+    weight_decay: f32,
+    state_bytes: usize,
+    /// Lazy decay (perf pass): instead of a standalone decay sweep at
+    /// mini-batch start, each layer's first `accumulate` of the mini-batch
+    /// runs the fused decay+accumulate kernel — one HBM round-trip over
+    /// (m, v) saved per layer per step, which is exactly the pass-count
+    /// gap between AdamA (N+2) and Adam+GA (N+1).
+    decay_pending: Vec<bool>,
+}
+
+impl AdamA {
+    pub fn new(
+        spec: &ModelSpec,
+        hyper: Hyper,
+        backend: UpdateBackend,
+        tracker: &MemoryTracker,
+    ) -> Self {
+        let m: Vec<Vec<f32>> = spec.layers.iter().map(|l| vec![0.0; l.flat_len]).collect();
+        let v = m.clone();
+        let state_bytes = 2 * spec.total_params() * 4;
+        tracker.alloc_raw(Category::OptimizerStates, state_bytes);
+        let decay_pending = vec![false; m.len()];
+        Self {
+            m,
+            v,
+            hyper,
+            backend,
+            t: 0,
+            v_decay_factor: 1.0,
+            weight_decay: 0.0,
+            state_bytes,
+            decay_pending,
+        }
+    }
+
+    /// Enable decoupled weight decay (AdamW-A).
+    pub fn with_weight_decay(mut self, wd: f32) -> Self {
+        self.weight_decay = wd;
+        self
+    }
+
+    pub fn step(&self) -> u64 {
+        self.t
+    }
+}
+
+impl Optimizer for AdamA {
+    fn kind(&self) -> OptimizerKind {
+        OptimizerKind::AdamA
+    }
+
+    fn begin_minibatch(&mut self, t: u64) -> Result<()> {
+        self.t = t;
+        // decay deferred into each layer's first accumulate (fused kernel)
+        self.decay_pending.iter_mut().for_each(|p| *p = true);
+        Ok(())
+    }
+
+    fn accumulate(&mut self, layer: usize, grad: &[f32], gscale: f32) -> Result<()> {
+        if std::mem::take(&mut self.decay_pending[layer]) {
+            let ms = self.hyper.beta1;
+            let vs = self.v_decay_factor * self.hyper.beta2;
+            self.backend
+                .adama_decay_acc(&mut self.m[layer], &mut self.v[layer], grad, gscale, ms, vs)
+        } else {
+            self.backend.adama_acc(&mut self.m[layer], &mut self.v[layer], grad, gscale)
+        }
+    }
+
+    fn apply(&mut self, params: &mut [LayerParams], lr: f32) -> Result<()> {
+        let (bc1, bc2) = self.hyper.bias_corrections(self.t);
+        let ms = self.hyper.beta1;
+        let vs = self.v_decay_factor * self.hyper.beta2;
+        for (l, p) in params.iter_mut().enumerate() {
+            // a layer that saw no gradient this mini-batch still decays
+            if std::mem::take(&mut self.decay_pending[l]) {
+                self.backend.adama_decay(&mut self.m[l], &mut self.v[l], ms, vs)?;
+            }
+            if self.weight_decay > 0.0 {
+                self.backend.adamw_update(
+                    &mut p.flat, &self.m[l], &self.v[l], lr, bc1, bc2, self.weight_decay,
+                )?;
+            } else {
+                self.backend.adam_update(&mut p.flat, &self.m[l], &self.v[l], lr, bc1, bc2)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.state_bytes
+    }
+
+    fn adam_states_mut(&mut self) -> Option<AdamStatesMut<'_>> {
+        Some(AdamStatesMut { m: &mut self.m, v: &mut self.v })
+    }
+
+    fn set_v_decay_factor(&mut self, factor: f32) {
+        self.v_decay_factor = factor;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::host_math;
+
+    fn toy_spec() -> ModelSpec {
+        use crate::runtime::{ModelConfigEntry, ModelHyper};
+        let entry = ModelConfigEntry {
+            model: ModelHyper {
+                vocab: 8, hidden: 4, layers: 1, heads: 1, seq: 2, microbatch: 2, ffn: 16,
+            },
+            param_shapes: vec![
+                ("embed.E".into(), vec![8, 4]),
+                ("embed.P".into(), vec![2, 4]),
+                ("block0.ln1.g".into(), vec![4]),
+                ("head.W".into(), vec![4, 8]),
+            ],
+            artifacts: Default::default(),
+        };
+        ModelSpec::from_manifest("toy", &entry).unwrap()
+    }
+
+    fn hyper() -> Hyper {
+        Hyper { beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+
+    #[test]
+    fn n1_equals_fused_adam() {
+        // AdamA with one micro-batch must reproduce standard Adam exactly.
+        let spec = toy_spec();
+        let tracker = MemoryTracker::new();
+        let mut opt = AdamA::new(&spec, hyper(), UpdateBackend::host(hyper()), &tracker);
+
+        let mut params: Vec<LayerParams> = spec
+            .layers
+            .iter()
+            .map(|l| LayerParams { flat: (0..l.flat_len).map(|i| i as f32 * 0.1).collect() })
+            .collect();
+        let mut ref_params: Vec<Vec<f32>> = params.iter().map(|p| p.flat.clone()).collect();
+        let mut ref_m: Vec<Vec<f32>> =
+            spec.layers.iter().map(|l| vec![0.0; l.flat_len]).collect();
+        let mut ref_v = ref_m.clone();
+
+        for t in 1..=3u64 {
+            let grads: Vec<Vec<f32>> = spec
+                .layers
+                .iter()
+                .enumerate()
+                .map(|(li, l)| {
+                    (0..l.flat_len).map(|i| ((i + li) as f32 - 2.0) * 0.3 * t as f32).collect()
+                })
+                .collect();
+            opt.begin_minibatch(t).unwrap();
+            for (li, g) in grads.iter().enumerate() {
+                opt.accumulate(li, g, 1.0).unwrap();
+            }
+            opt.apply(&mut params, 0.01).unwrap();
+
+            let (bc1, bc2) = hyper().bias_corrections(t);
+            for li in 0..spec.layers.len() {
+                host_math::adam_full(
+                    &mut ref_params[li], &mut ref_m[li], &mut ref_v[li], &grads[li],
+                    0.01, bc1, bc2, 0.9, 0.999, 1e-8,
+                );
+            }
+        }
+        for (got, want) in params.iter().zip(&ref_params) {
+            for (a, b) in got.flat.iter().zip(want) {
+                assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn state_bytes_is_two_p() {
+        let spec = toy_spec();
+        let tracker = MemoryTracker::new();
+        let opt = AdamA::new(&spec, hyper(), UpdateBackend::host(hyper()), &tracker);
+        assert_eq!(opt.state_bytes(), 2 * spec.total_params() * 4);
+        assert_eq!(opt.persistent_grad_bytes(), 0); // the paper's point
+        assert_eq!(tracker.live(Category::OptimizerStates), opt.state_bytes());
+    }
+
+    #[test]
+    fn v_decay_factor_scales_v_only() {
+        let spec = toy_spec();
+        let tracker = MemoryTracker::new();
+        let mut opt = AdamA::new(&spec, hyper(), UpdateBackend::host(hyper()), &tracker);
+        // seed states
+        let g: Vec<f32> = vec![1.0; spec.layers[0].flat_len];
+        opt.begin_minibatch(1).unwrap();
+        opt.accumulate(0, &g, 1.0).unwrap();
+        let m_before = opt.m[0][0];
+        let v_before = opt.v[0][0];
+        opt.set_v_decay_factor(4.0);
+        opt.begin_minibatch(2).unwrap();
+        // decay is lazy: applied on the layer's first accumulate
+        let zeros = vec![0.0f32; spec.layers[0].flat_len];
+        opt.accumulate(0, &zeros, 1.0).unwrap();
+        assert!((opt.m[0][0] - 0.9 * m_before).abs() < 1e-7);
+        assert!((opt.v[0][0] - 4.0 * 0.999 * v_before).abs() < 1e-7);
+    }
+
+    #[test]
+    fn layers_without_grads_still_decay_at_apply() {
+        let spec = toy_spec();
+        let tracker = MemoryTracker::new();
+        let mut opt = AdamA::new(&spec, hyper(), UpdateBackend::host(hyper()), &tracker);
+        let g: Vec<f32> = vec![1.0; spec.layers[0].flat_len];
+        opt.begin_minibatch(1).unwrap();
+        opt.accumulate(0, &g, 1.0).unwrap();
+        let m_before = opt.m[0][0];
+        // layer 1/2 get no gradient this mini-batch
+        opt.begin_minibatch(2).unwrap();
+        opt.accumulate(0, &g, 1.0).unwrap();
+        let mut params: Vec<LayerParams> =
+            spec.layers.iter().map(|l| LayerParams { flat: vec![1.0; l.flat_len] }).collect();
+        opt.apply(&mut params, 0.01).unwrap();
+        // layer 0 decayed through the fused path
+        assert!((opt.m[0][0] - (0.9 * m_before + 0.1)).abs() < 1e-6);
+        // untouched layers decayed at apply (were zero, stay zero) and no
+        // pending flags remain
+        assert!(opt.decay_pending.iter().all(|p| !p));
+    }
+}

@@ -1,0 +1,195 @@
+//! Adam + gradient accumulation — the paper's baseline (Alg. 1, blue).
+//!
+//! Holds a full-model gradient accumulator (`P` floats, tracked under
+//! `Category::Gradients`) that lives across micro-batches; the mini-batch
+//! update is the fused standard-Adam step. This is exactly the memory
+//! profile AdamA eliminates.
+
+use anyhow::Result;
+
+use super::{AdamStatesMut, Hyper, Optimizer, UpdateBackend};
+use crate::config::OptimizerKind;
+use crate::memory::{Category, MemoryTracker};
+use crate::model::{LayerParams, ModelSpec};
+
+pub struct AdamGA {
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    /// Full-model gradient accumulator — the contended memory.
+    acc: Vec<Vec<f32>>,
+    hyper: Hyper,
+    backend: UpdateBackend,
+    t: u64,
+    state_bytes: usize,
+    grad_bytes: usize,
+}
+
+impl AdamGA {
+    pub fn new(
+        spec: &ModelSpec,
+        hyper: Hyper,
+        backend: UpdateBackend,
+        tracker: &MemoryTracker,
+    ) -> Self {
+        let zero: Vec<Vec<f32>> = spec.layers.iter().map(|l| vec![0.0; l.flat_len]).collect();
+        let state_bytes = 2 * spec.total_params() * 4;
+        let grad_bytes = spec.total_params() * 4;
+        tracker.alloc_raw(Category::OptimizerStates, state_bytes);
+        tracker.alloc_raw(Category::Gradients, grad_bytes);
+        Self {
+            m: zero.clone(),
+            v: zero.clone(),
+            acc: zero,
+            hyper,
+            backend,
+            t: 0,
+            state_bytes,
+            grad_bytes,
+        }
+    }
+}
+
+impl Optimizer for AdamGA {
+    fn kind(&self) -> OptimizerKind {
+        OptimizerKind::AdamGA
+    }
+
+    fn begin_minibatch(&mut self, t: u64) -> Result<()> {
+        self.t = t;
+        for a in &mut self.acc {
+            a.fill(0.0);
+        }
+        Ok(())
+    }
+
+    fn accumulate(&mut self, layer: usize, grad: &[f32], gscale: f32) -> Result<()> {
+        self.backend.grad_acc(&mut self.acc[layer], grad, gscale)
+    }
+
+    fn apply(&mut self, params: &mut [LayerParams], lr: f32) -> Result<()> {
+        let (bc1, bc2) = self.hyper.bias_corrections(self.t);
+        for (l, p) in params.iter_mut().enumerate() {
+            self.backend.adam_full(
+                &mut p.flat,
+                &mut self.m[l],
+                &mut self.v[l],
+                &self.acc[l],
+                lr,
+                bc1,
+                bc2,
+            )?;
+        }
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.state_bytes
+    }
+
+    fn persistent_grad_bytes(&self) -> usize {
+        self.grad_bytes
+    }
+
+    fn adam_states_mut(&mut self) -> Option<AdamStatesMut<'_>> {
+        Some(AdamStatesMut { m: &mut self.m, v: &mut self.v })
+    }
+
+    fn as_adamga_mut(&mut self) -> Option<&mut AdamGA> {
+        Some(self)
+    }
+}
+
+/// Mutable access to the gradient accumulator — used by the distributed
+/// gradient-all-reduce baseline and ZeRO flows.
+impl AdamGA {
+    pub fn grad_acc_mut(&mut self) -> &mut [Vec<f32>] {
+        &mut self.acc
+    }
+
+    pub fn grad_acc(&self) -> &[Vec<f32>] {
+        &self.acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::host_math;
+    use crate::runtime::{ModelConfigEntry, ModelHyper};
+
+    fn toy_spec() -> ModelSpec {
+        let entry = ModelConfigEntry {
+            model: ModelHyper {
+                vocab: 8, hidden: 4, layers: 1, heads: 1, seq: 2, microbatch: 2, ffn: 16,
+            },
+            param_shapes: vec![
+                ("embed.E".into(), vec![8, 4]),
+                ("block0.ln1.g".into(), vec![4]),
+                ("head.W".into(), vec![4, 8]),
+            ],
+            artifacts: Default::default(),
+        };
+        ModelSpec::from_manifest("toy", &entry).unwrap()
+    }
+
+    fn hyper() -> Hyper {
+        Hyper { beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+
+    #[test]
+    fn accumulates_scaled_microbatch_grads() {
+        let spec = toy_spec();
+        let tracker = MemoryTracker::new();
+        let mut opt = AdamGA::new(&spec, hyper(), UpdateBackend::host(hyper()), &tracker);
+        opt.begin_minibatch(1).unwrap();
+        let n = spec.layers[0].flat_len;
+        opt.accumulate(0, &vec![2.0; n], 0.25).unwrap();
+        opt.accumulate(0, &vec![4.0; n], 0.25).unwrap();
+        assert!(opt.acc[0].iter().all(|&x| (x - 1.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn matches_manual_adam_over_minibatch_mean() {
+        let spec = toy_spec();
+        let tracker = MemoryTracker::new();
+        let mut opt = AdamGA::new(&spec, hyper(), UpdateBackend::host(hyper()), &tracker);
+        let mut params: Vec<LayerParams> =
+            spec.layers.iter().map(|l| LayerParams { flat: vec![1.0; l.flat_len] }).collect();
+        let n_micro = 4;
+        let grads: Vec<Vec<f32>> = (0..n_micro)
+            .map(|k| (0..spec.layers[0].flat_len).map(|i| (i + k) as f32 * 0.1).collect())
+            .collect();
+
+        opt.begin_minibatch(1).unwrap();
+        for g in &grads {
+            opt.accumulate(0, g, 1.0 / n_micro as f32).unwrap();
+        }
+        // zero grads for other layers
+        for l in 1..spec.layers.len() {
+            opt.accumulate(l, &vec![0.0; spec.layers[l].flat_len], 1.0).unwrap();
+        }
+        opt.apply(&mut params, 0.01).unwrap();
+
+        // reference: fused Adam on the mean gradient
+        let mean: Vec<f32> = (0..spec.layers[0].flat_len)
+            .map(|i| grads.iter().map(|g| g[i]).sum::<f32>() / n_micro as f32)
+            .collect();
+        let mut rp = vec![1.0f32; spec.layers[0].flat_len];
+        let mut rm = vec![0.0f32; rp.len()];
+        let mut rv = vec![0.0f32; rp.len()];
+        let (bc1, bc2) = hyper().bias_corrections(1);
+        host_math::adam_full(&mut rp, &mut rm, &mut rv, &mean, 0.01, bc1, bc2, 0.9, 0.999, 1e-8);
+        for (a, b) in params[0].flat.iter().zip(&rp) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn holds_full_model_gradient_memory() {
+        let spec = toy_spec();
+        let tracker = MemoryTracker::new();
+        let opt = AdamGA::new(&spec, hyper(), UpdateBackend::host(hyper()), &tracker);
+        assert_eq!(opt.persistent_grad_bytes(), spec.total_params() * 4);
+        assert_eq!(tracker.live(Category::Gradients), spec.total_params() * 4);
+    }
+}

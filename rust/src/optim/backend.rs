@@ -1,0 +1,604 @@
+//! Update arithmetic backends: AOT Pallas kernels (via PJRT) or host loops.
+//!
+//! The kernel backend buckets a layer's flat buffer into fixed-size chunks
+//! (tail zero-padded into reusable scratch), mirroring fused-Adam-over-
+//! flat-buffer designs. Padding is safe by construction: zero (m, v, g)
+//! chunks stay zero through every kernel, and `adam_update` on zero state
+//! leaves parameters untouched (0/(sqrt(0)+eps) = 0).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::Hyper;
+use crate::runtime::{lit_f32, Arg, ArtifactLibrary, Executable};
+use crate::tensor::chunk_ranges;
+
+/// Dispatcher between the PJRT kernel path and host math.
+pub enum UpdateBackend {
+    Kernel(ChunkRunner),
+    Host(Hyper),
+}
+
+impl UpdateBackend {
+    pub fn kernel(lib: Arc<ArtifactLibrary>, chunk: usize) -> Result<Self> {
+        Ok(Self::Kernel(ChunkRunner::new(lib, chunk)?))
+    }
+
+    pub fn host(hyper: Hyper) -> Self {
+        Self::Host(hyper)
+    }
+
+    pub fn adama_acc(&mut self, m: &mut [f32], v: &mut [f32], g: &[f32], gscale: f32) -> Result<()> {
+        match self {
+            Self::Kernel(r) => r.adama_acc(m, v, g, gscale),
+            Self::Host(h) => {
+                host_math::adama_acc(m, v, g, gscale, h.beta1, h.beta2);
+                Ok(())
+            }
+        }
+    }
+
+    /// Fused decay + accumulate (first micro-batch of a mini-batch) —
+    /// one HBM round-trip instead of two (perf pass, EXPERIMENTS.md §Perf).
+    #[allow(clippy::too_many_arguments)]
+    pub fn adama_decay_acc(
+        &mut self,
+        m: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        gscale: f32,
+        ms: f32,
+        vs: f32,
+    ) -> Result<()> {
+        match self {
+            Self::Kernel(r) => r.adama_decay_acc(m, v, g, gscale, ms, vs),
+            Self::Host(h) => {
+                host_math::adama_decay_acc(m, v, g, gscale, ms, vs, h.beta1, h.beta2);
+                Ok(())
+            }
+        }
+    }
+
+    pub fn adama_decay(&mut self, m: &mut [f32], v: &mut [f32], ms: f32, vs: f32) -> Result<()> {
+        match self {
+            Self::Kernel(r) => r.adama_decay(m, v, ms, vs),
+            Self::Host(_) => {
+                host_math::scale(m, ms);
+                host_math::scale(v, vs);
+                Ok(())
+            }
+        }
+    }
+
+    pub fn adam_update(
+        &mut self,
+        p: &mut [f32],
+        m: &[f32],
+        v: &[f32],
+        lr: f32,
+        bc1: f32,
+        bc2: f32,
+    ) -> Result<()> {
+        match self {
+            Self::Kernel(r) => r.adam_update(p, m, v, lr, bc1, bc2),
+            Self::Host(h) => {
+                host_math::adam_update(p, m, v, lr, bc1, bc2, h.eps);
+                Ok(())
+            }
+        }
+    }
+
+    pub fn adam_full(
+        &mut self,
+        p: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        lr: f32,
+        bc1: f32,
+        bc2: f32,
+    ) -> Result<()> {
+        match self {
+            Self::Kernel(r) => r.adam_full(p, m, v, g, lr, bc1, bc2),
+            Self::Host(h) => {
+                host_math::adam_full(p, m, v, g, lr, bc1, bc2, h.beta1, h.beta2, h.eps);
+                Ok(())
+            }
+        }
+    }
+
+    pub fn grad_acc(&mut self, acc: &mut [f32], g: &[f32], gscale: f32) -> Result<()> {
+        match self {
+            Self::Kernel(r) => r.grad_acc(acc, g, gscale),
+            Self::Host(_) => {
+                host_math::grad_acc(acc, g, gscale);
+                Ok(())
+            }
+        }
+    }
+
+    /// AdamW parameter step (decoupled weight decay) — §5 extension.
+    #[allow(clippy::too_many_arguments)]
+    pub fn adamw_update(
+        &mut self,
+        p: &mut [f32],
+        m: &[f32],
+        v: &[f32],
+        lr: f32,
+        bc1: f32,
+        bc2: f32,
+        wd: f32,
+    ) -> Result<()> {
+        match self {
+            Self::Kernel(r) => r.adamw_update(p, m, v, lr, bc1, bc2, wd),
+            Self::Host(h) => {
+                host_math::adamw_update(p, m, v, lr, bc1, bc2, wd, h.eps);
+                Ok(())
+            }
+        }
+    }
+
+    pub fn sgdm_decay_acc(&mut self, u: &mut [f32], g: &[f32], gscale: f32, mu: f32) -> Result<()> {
+        match self {
+            Self::Kernel(r) => r.sgdm_decay_acc(u, g, gscale, mu),
+            Self::Host(_) => {
+                host_math::sgdm_decay_acc(u, g, gscale, mu);
+                Ok(())
+            }
+        }
+    }
+
+    pub fn sgdm_acc(&mut self, u: &mut [f32], g: &[f32], gscale: f32) -> Result<()> {
+        match self {
+            Self::Kernel(r) => r.sgdm_acc(u, g, gscale),
+            Self::Host(_) => {
+                host_math::sgdm_acc(u, g, gscale);
+                Ok(())
+            }
+        }
+    }
+
+    pub fn sgdm_update(&mut self, p: &mut [f32], u: &[f32], lr: f32, wd: f32) -> Result<()> {
+        match self {
+            Self::Kernel(r) => r.sgdm_update(p, u, lr, wd),
+            Self::Host(_) => {
+                host_math::sgdm_update(p, u, lr, wd);
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Chunked execution of the `common/*` optimizer artifacts.
+pub struct ChunkRunner {
+    chunk: usize,
+    acc: Arc<Executable>,
+    decay_acc: Arc<Executable>,
+    decay: Arc<Executable>,
+    update: Arc<Executable>,
+    full: Arc<Executable>,
+    gacc: Arc<Executable>,
+    adamw: Arc<Executable>,
+    sgdm_dacc: Arc<Executable>,
+    sgdm_acc_exe: Arc<Executable>,
+    sgdm_upd: Arc<Executable>,
+    // reusable zero-padded scratch (one per operand slot)
+    scratch: Vec<Vec<f32>>,
+}
+
+impl ChunkRunner {
+    pub fn new(lib: Arc<ArtifactLibrary>, chunk: usize) -> Result<Self> {
+        anyhow::ensure!(
+            lib.manifest().chunk_sizes.contains(&chunk),
+            "chunk {} not in AOT set {:?}",
+            chunk,
+            lib.manifest().chunk_sizes
+        );
+        Ok(Self {
+            acc: lib.get(&format!("common/adama_acc_{chunk}"))?,
+            decay_acc: lib.get(&format!("common/adama_decay_acc_{chunk}"))?,
+            decay: lib.get(&format!("common/adama_decay_{chunk}"))?,
+            update: lib.get(&format!("common/adam_update_{chunk}"))?,
+            full: lib.get(&format!("common/adam_full_{chunk}"))?,
+            gacc: lib.get(&format!("common/grad_acc_{chunk}"))?,
+            adamw: lib.get(&format!("common/adamw_update_{chunk}"))?,
+            sgdm_dacc: lib.get(&format!("common/sgdm_decay_acc_{chunk}"))?,
+            sgdm_acc_exe: lib.get(&format!("common/sgdm_acc_{chunk}"))?,
+            sgdm_upd: lib.get(&format!("common/sgdm_update_{chunk}"))?,
+            scratch: vec![vec![0.0; chunk]; 4],
+            chunk,
+        })
+    }
+
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    /// Literal for `src[off..off+len]`: full chunks are created straight
+    /// from the source slice (one memcpy into XLA storage, no staging);
+    /// only the tail chunk goes through a zero-padded scratch buffer.
+    fn chunk_lit(&mut self, slot: usize, src: &[f32], off: usize, len: usize) -> Result<xla::Literal> {
+        if len == self.chunk {
+            return lit_f32(&src[off..off + len], &[self.chunk]);
+        }
+        let buf = &mut self.scratch[slot];
+        buf[..len].copy_from_slice(&src[off..off + len]);
+        buf[len..].fill(0.0);
+        lit_f32(buf, &[self.chunk])
+    }
+
+    /// Fused decay+accumulate chunk sweep (slice->buffer fast path).
+    pub fn adama_decay_acc(
+        &mut self,
+        m: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        gscale: f32,
+        ms: f32,
+        vs: f32,
+    ) -> Result<()> {
+        let chunk = self.chunk;
+        let shape = [chunk];
+        let sc = [gscale, ms, vs];
+        for (off, len) in chunk_ranges(m.len(), chunk) {
+            if len < chunk {
+                stage(&mut self.scratch[0], &m[off..off + len]);
+                stage(&mut self.scratch[1], &v[off..off + len]);
+                stage(&mut self.scratch[2], &g[off..off + len]);
+            }
+            let (a0, a1, a2) = if len == chunk {
+                (&m[off..off + len], &v[off..off + len], &g[off..off + len])
+            } else {
+                (&self.scratch[0][..], &self.scratch[1][..], &self.scratch[2][..])
+            };
+            let out = self.decay_acc.run_args(&[
+                Arg::F32(a0, &shape),
+                Arg::F32(a1, &shape),
+                Arg::F32(a2, &shape),
+                Arg::F32(&sc, &[3]),
+            ])?;
+            crate::runtime::copy_chunk(&out[0], &mut m[off..off + len])?;
+            crate::runtime::copy_chunk(&out[1], &mut v[off..off + len])?;
+        }
+        Ok(())
+    }
+
+    pub fn adama_acc(&mut self, m: &mut [f32], v: &mut [f32], g: &[f32], gscale: f32) -> Result<()> {
+        debug_assert_eq!(m.len(), v.len());
+        debug_assert_eq!(m.len(), g.len());
+        let chunk = self.chunk;
+        let shape = [chunk];
+        let sc = [gscale];
+        for (off, len) in chunk_ranges(m.len(), chunk) {
+            // stage tails first (mutable), then borrow immutably for args
+            if len < chunk {
+                stage(&mut self.scratch[0], &m[off..off + len]);
+                stage(&mut self.scratch[1], &v[off..off + len]);
+                stage(&mut self.scratch[2], &g[off..off + len]);
+            }
+            let (a0, a1, a2) = if len == chunk {
+                (&m[off..off + len], &v[off..off + len], &g[off..off + len])
+            } else {
+                (&self.scratch[0][..], &self.scratch[1][..], &self.scratch[2][..])
+            };
+            let out = self.acc.run_args(&[
+                Arg::F32(a0, &shape),
+                Arg::F32(a1, &shape),
+                Arg::F32(a2, &shape),
+                Arg::F32(&sc, &[1]),
+            ])?;
+            crate::runtime::copy_chunk(&out[0], &mut m[off..off + len])?;
+            crate::runtime::copy_chunk(&out[1], &mut v[off..off + len])?;
+        }
+        Ok(())
+    }
+
+    pub fn adama_decay(&mut self, m: &mut [f32], v: &mut [f32], ms: f32, vs: f32) -> Result<()> {
+        for (off, len) in chunk_ranges(m.len(), self.chunk) {
+            let args = [
+                self.chunk_lit(0, m, off, len)?,
+                self.chunk_lit(1, v, off, len)?,
+                lit_f32(&[ms], &[1])?,
+                lit_f32(&[vs], &[1])?,
+            ];
+            let out = self.decay.run(&args)?;
+            crate::runtime::copy_chunk(&out[0], &mut m[off..off + len])?;
+            crate::runtime::copy_chunk(&out[1], &mut v[off..off + len])?;
+        }
+        Ok(())
+    }
+
+    pub fn adam_update(
+        &mut self,
+        p: &mut [f32],
+        m: &[f32],
+        v: &[f32],
+        lr: f32,
+        bc1: f32,
+        bc2: f32,
+    ) -> Result<()> {
+        let chunk = self.chunk;
+        let shape = [chunk];
+        let sc = [lr, bc1, bc2];
+        for (off, len) in chunk_ranges(p.len(), chunk) {
+            if len < chunk {
+                stage(&mut self.scratch[0], &p[off..off + len]);
+                stage(&mut self.scratch[1], &m[off..off + len]);
+                stage(&mut self.scratch[2], &v[off..off + len]);
+            }
+            let (a0, a1, a2) = if len == chunk {
+                (&p[off..off + len], &m[off..off + len], &v[off..off + len])
+            } else {
+                (&self.scratch[0][..], &self.scratch[1][..], &self.scratch[2][..])
+            };
+            let out = self.update.run_args(&[
+                Arg::F32(a0, &shape),
+                Arg::F32(a1, &shape),
+                Arg::F32(a2, &shape),
+                Arg::F32(&sc, &[3]),
+            ])?;
+            crate::runtime::copy_chunk(&out[0], &mut p[off..off + len])?;
+        }
+        Ok(())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn adam_full(
+        &mut self,
+        p: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        lr: f32,
+        bc1: f32,
+        bc2: f32,
+    ) -> Result<()> {
+        for (off, len) in chunk_ranges(p.len(), self.chunk) {
+            let args = [
+                self.chunk_lit(0, p, off, len)?,
+                self.chunk_lit(1, m, off, len)?,
+                self.chunk_lit(2, v, off, len)?,
+                self.chunk_lit(3, g, off, len)?,
+                lit_f32(&[lr, bc1, bc2], &[3])?,
+            ];
+            let out = self.full.run(&args)?;
+            crate::runtime::copy_chunk(&out[0], &mut p[off..off + len])?;
+            crate::runtime::copy_chunk(&out[1], &mut m[off..off + len])?;
+            crate::runtime::copy_chunk(&out[2], &mut v[off..off + len])?;
+        }
+        Ok(())
+    }
+
+    pub fn grad_acc(&mut self, acc: &mut [f32], g: &[f32], gscale: f32) -> Result<()> {
+        for (off, len) in chunk_ranges(acc.len(), self.chunk) {
+            let args = [
+                self.chunk_lit(0, acc, off, len)?,
+                self.chunk_lit(1, g, off, len)?,
+                lit_f32(&[gscale], &[1])?,
+            ];
+            let out = self.gacc.run(&args)?;
+            crate::runtime::copy_chunk(&out[0], &mut acc[off..off + len])?;
+        }
+        Ok(())
+    }
+
+    // ---- §5 extensions ----
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn adamw_update(
+        &mut self,
+        p: &mut [f32],
+        m: &[f32],
+        v: &[f32],
+        lr: f32,
+        bc1: f32,
+        bc2: f32,
+        wd: f32,
+    ) -> Result<()> {
+        for (off, len) in chunk_ranges(p.len(), self.chunk) {
+            let args = [
+                self.chunk_lit(0, p, off, len)?,
+                self.chunk_lit(1, m, off, len)?,
+                self.chunk_lit(2, v, off, len)?,
+                lit_f32(&[lr, bc1, bc2, wd], &[4])?,
+            ];
+            let out = self.adamw.run(&args)?;
+            crate::runtime::copy_chunk(&out[0], &mut p[off..off + len])?;
+        }
+        Ok(())
+    }
+
+    pub fn sgdm_decay_acc(&mut self, u: &mut [f32], g: &[f32], gscale: f32, mu: f32) -> Result<()> {
+        for (off, len) in chunk_ranges(u.len(), self.chunk) {
+            let args = [
+                self.chunk_lit(0, u, off, len)?,
+                self.chunk_lit(1, g, off, len)?,
+                lit_f32(&[gscale, mu], &[2])?,
+            ];
+            let out = self.sgdm_dacc.run(&args)?;
+            crate::runtime::copy_chunk(&out[0], &mut u[off..off + len])?;
+        }
+        Ok(())
+    }
+
+    pub fn sgdm_acc(&mut self, u: &mut [f32], g: &[f32], gscale: f32) -> Result<()> {
+        for (off, len) in chunk_ranges(u.len(), self.chunk) {
+            let args = [
+                self.chunk_lit(0, u, off, len)?,
+                self.chunk_lit(1, g, off, len)?,
+                lit_f32(&[gscale], &[1])?,
+            ];
+            let out = self.sgdm_acc_exe.run(&args)?;
+            crate::runtime::copy_chunk(&out[0], &mut u[off..off + len])?;
+        }
+        Ok(())
+    }
+
+    pub fn sgdm_update(&mut self, p: &mut [f32], u: &[f32], lr: f32, wd: f32) -> Result<()> {
+        for (off, len) in chunk_ranges(p.len(), self.chunk) {
+            let args = [
+                self.chunk_lit(0, p, off, len)?,
+                self.chunk_lit(1, u, off, len)?,
+                lit_f32(&[lr, wd], &[2])?,
+            ];
+            let out = self.sgdm_upd.run(&args)?;
+            crate::runtime::copy_chunk(&out[0], &mut p[off..off + len])?;
+        }
+        Ok(())
+    }
+}
+
+/// Zero-pad-stage a tail slice into a scratch chunk buffer.
+fn stage(buf: &mut [f32], src: &[f32]) {
+    buf[..src.len()].copy_from_slice(src);
+    buf[src.len()..].fill(0.0);
+}
+
+/// Pure-rust reference implementations (ablation baseline; also used by
+/// the comparator optimizers and tests).
+pub mod host_math {
+    pub fn adama_acc(m: &mut [f32], v: &mut [f32], g: &[f32], gscale: f32, b1: f32, b2: f32) {
+        for i in 0..m.len() {
+            let sg = g[i] * gscale;
+            m[i] += (1.0 - b1) * sg;
+            v[i] += (1.0 - b2) * sg * sg;
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn adama_decay_acc(
+        m: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        gscale: f32,
+        ms: f32,
+        vs: f32,
+        b1: f32,
+        b2: f32,
+    ) {
+        for i in 0..m.len() {
+            let sg = g[i] * gscale;
+            m[i] = ms * m[i] + (1.0 - b1) * sg;
+            v[i] = vs * v[i] + (1.0 - b2) * sg * sg;
+        }
+    }
+
+    pub fn scale(x: &mut [f32], s: f32) {
+        for a in x.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    pub fn adam_update(p: &mut [f32], m: &[f32], v: &[f32], lr: f32, bc1: f32, bc2: f32, eps: f32) {
+        for i in 0..p.len() {
+            p[i] -= lr * (m[i] / bc1) / ((v[i] / bc2).sqrt() + eps);
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn adam_full(
+        p: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        lr: f32,
+        bc1: f32,
+        bc2: f32,
+        b1: f32,
+        b2: f32,
+        eps: f32,
+    ) {
+        for i in 0..p.len() {
+            m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+            v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+            p[i] -= lr * (m[i] / bc1) / ((v[i] / bc2).sqrt() + eps);
+        }
+    }
+
+    pub fn grad_acc(acc: &mut [f32], g: &[f32], gscale: f32) {
+        for i in 0..acc.len() {
+            acc[i] += g[i] * gscale;
+        }
+    }
+
+    // ---- §5 extensions ----
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn adamw_update(
+        p: &mut [f32], m: &[f32], v: &[f32],
+        lr: f32, bc1: f32, bc2: f32, wd: f32, eps: f32,
+    ) {
+        for i in 0..p.len() {
+            p[i] -= lr * ((m[i] / bc1) / ((v[i] / bc2).sqrt() + eps) + wd * p[i]);
+        }
+    }
+
+    pub fn sgdm_decay_acc(u: &mut [f32], g: &[f32], gscale: f32, mu: f32) {
+        for i in 0..u.len() {
+            u[i] = mu * u[i] + gscale * g[i];
+        }
+    }
+
+    pub fn sgdm_acc(u: &mut [f32], g: &[f32], gscale: f32) {
+        for i in 0..u.len() {
+            u[i] += gscale * g[i];
+        }
+    }
+
+    pub fn sgdm_update(p: &mut [f32], u: &[f32], lr: f32, wd: f32) {
+        for i in 0..p.len() {
+            p[i] -= lr * (u[i] + wd * p[i]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_adama_acc_math() {
+        let mut m = vec![0.0, 1.0];
+        let mut v = vec![0.0, 2.0];
+        host_math::adama_acc(&mut m, &mut v, &[4.0, -4.0], 0.5, 0.9, 0.999);
+        assert!((m[0] - 0.2).abs() < 1e-6);
+        assert!((m[1] - 0.8).abs() < 1e-6);
+        assert!((v[0] - 0.004).abs() < 1e-6);
+        assert!((v[1] - 2.004).abs() < 1e-6);
+    }
+
+    #[test]
+    fn host_adam_update_is_standard() {
+        let mut p = vec![1.0];
+        host_math::adam_update(&mut p, &[0.1], &[0.001], 0.01, 0.1, 0.001, 1e-8);
+        // mhat=1, vhat=1 -> step = lr
+        assert!((p[0] - 0.99).abs() < 1e-5);
+    }
+
+    #[test]
+    fn host_full_step_equals_acc_plus_update_when_n1() {
+        // AdamA(N=1) == Adam: decay + single accumulate + update must equal
+        // the fused full step.
+        let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+        let g = vec![0.3, -0.7, 2.0];
+        let mut p1 = vec![1.0, 2.0, 3.0];
+        let mut m1 = vec![0.05, -0.02, 0.0];
+        let mut v1 = vec![0.01, 0.02, 0.0];
+        let (mut p2, mut m2, mut v2) = (p1.clone(), m1.clone(), v1.clone());
+        let (lr, bc1, bc2) = (0.01, 0.1, 0.001);
+
+        host_math::adam_full(&mut p1, &mut m1, &mut v1, &g, lr, bc1, bc2, b1, b2, eps);
+
+        host_math::scale(&mut m2, b1);
+        host_math::scale(&mut v2, b2);
+        host_math::adama_acc(&mut m2, &mut v2, &g, 1.0, b1, b2);
+        host_math::adam_update(&mut p2, &m2, &v2, lr, bc1, bc2, eps);
+
+        for i in 0..3 {
+            assert!((p1[i] - p2[i]).abs() < 1e-6);
+            assert!((m1[i] - m2[i]).abs() < 1e-6);
+            assert!((v1[i] - v2[i]).abs() < 1e-7);
+        }
+    }
+}

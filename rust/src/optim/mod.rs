@@ -1,0 +1,174 @@
+//! Optimizers at gradient-release granularity.
+//!
+//! The [`Optimizer`] trait is shaped by the paper's training pipeline
+//! (Alg. 2): the coordinator calls [`Optimizer::accumulate`] once per
+//! *layer* per *micro-batch* the moment that layer's gradient exists, and
+//! the implementation decides what to retain:
+//!
+//! * [`AdamA`] integrates into (m, v) — the gradient buffer can be freed
+//!   immediately (the paper's contribution);
+//! * [`AdamGA`] copies into a full-model accumulator — the baseline whose
+//!   gradient memory AdamA eliminates;
+//! * [`Adafactor`] / [`Sm3`] are the Table-2 comparators that shrink
+//!   optimizer states instead (GA-style gradient handling).
+
+mod adafactor;
+mod adama_opt;
+mod adamga;
+mod backend;
+mod sgdma;
+mod sm3;
+
+pub use adafactor::Adafactor;
+pub use adama_opt::AdamA;
+pub use adamga::AdamGA;
+pub use backend::{host_math, ChunkRunner, UpdateBackend};
+pub use sgdma::SgdmA;
+pub use sm3::Sm3;
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::{OptimBackend, OptimizerKind, TrainConfig};
+use crate::memory::MemoryTracker;
+use crate::model::{LayerParams, ModelSpec};
+use crate::runtime::ArtifactLibrary;
+
+/// Adam hyper-parameters (from the manifest; baked into the kernels).
+#[derive(Debug, Clone, Copy)]
+pub struct Hyper {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl Hyper {
+    pub fn from_manifest(m: &crate::runtime::Manifest) -> Self {
+        Self { beta1: m.hyper.beta1 as f32, beta2: m.hyper.beta2 as f32, eps: m.hyper.eps as f32 }
+    }
+
+    /// Bias corrections (1-β₁ᵗ, 1-β₂ᵗ) at 1-based step `t`.
+    pub fn bias_corrections(&self, t: u64) -> (f32, f32) {
+        (1.0 - self.beta1.powi(t as i32), 1.0 - self.beta2.powi(t as i32))
+    }
+}
+
+/// Mutable access to Adam-style first/second moments (per layer), used by
+/// the distributed optimizer-state all-reduce (Eq. 7–8) and ZeRO-S1.
+pub struct AdamStatesMut<'a> {
+    pub m: &'a mut [Vec<f32>],
+    pub v: &'a mut [Vec<f32>],
+}
+
+/// A mini-batch-granularity optimizer driven layer-by-layer.
+pub trait Optimizer: Send {
+    fn kind(&self) -> OptimizerKind;
+
+    /// Called once at mini-batch start with the 1-based step number.
+    /// AdamA decays states here (Alg. 2 line 3); GA zeroes accumulators.
+    fn begin_minibatch(&mut self, t: u64) -> Result<()>;
+
+    /// Integrate one layer's micro-batch gradient, scaled by `gscale`
+    /// (1/N single-device; 1/N per worker in DP, see Eq. 5-6). The caller
+    /// frees `grad` right after this returns — that's the whole point.
+    fn accumulate(&mut self, layer: usize, grad: &[f32], gscale: f32) -> Result<()>;
+
+    /// Apply the mini-batch update to the parameters.
+    fn apply(&mut self, params: &mut [LayerParams], lr: f32) -> Result<()>;
+
+    /// Bytes of persistent optimizer state (m, v, factored moments, ...).
+    fn state_bytes(&self) -> usize;
+
+    /// Bytes of *gradient* storage held across micro-batches (GA's
+    /// accumulator; 0 for AdamA — the paper's Figure 5 delta).
+    fn persistent_grad_bytes(&self) -> usize {
+        0
+    }
+
+    /// Adam-style (m, v) access for collectives; None for non-Adam shapes.
+    fn adam_states_mut(&mut self) -> Option<AdamStatesMut<'_>> {
+        None
+    }
+
+    /// Extra factor on the v-decay at mini-batch start: the distributed
+    /// scheme decays by `M·β₂` instead of `β₂` (Eq. 6). Default 1.
+    fn set_v_decay_factor(&mut self, _factor: f32) {}
+
+    /// Downcast for the DDP gradient-all-reduce baseline (needs the GA
+    /// accumulator buffers).
+    fn as_adamga_mut(&mut self) -> Option<&mut AdamGA> {
+        None
+    }
+}
+
+/// Placeholder optimizer for flows that manage state externally (ZeRO-S1
+/// shards): accumulating into it is a bug, so it errors loudly.
+pub struct NullOpt;
+
+impl Optimizer for NullOpt {
+    fn kind(&self) -> OptimizerKind {
+        OptimizerKind::AdamA
+    }
+
+    fn begin_minibatch(&mut self, _t: u64) -> Result<()> {
+        Ok(())
+    }
+
+    fn accumulate(&mut self, _layer: usize, _grad: &[f32], _gscale: f32) -> Result<()> {
+        anyhow::bail!("NullOpt: gradients must flow through the external sink")
+    }
+
+    fn apply(&mut self, _params: &mut [LayerParams], _lr: f32) -> Result<()> {
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> usize {
+        0
+    }
+}
+
+/// Build the optimizer selected by `cfg`, registering its state with
+/// `tracker`.
+pub fn build_optimizer(
+    cfg: &TrainConfig,
+    spec: &ModelSpec,
+    lib: &Arc<ArtifactLibrary>,
+    tracker: &MemoryTracker,
+) -> Result<Box<dyn Optimizer>> {
+    let hyper = Hyper::from_manifest(lib.manifest());
+    let backend = match cfg.backend {
+        OptimBackend::Kernel => UpdateBackend::kernel(lib.clone(), cfg.chunk)?,
+        OptimBackend::Host => UpdateBackend::host(hyper),
+    };
+    Ok(match cfg.optimizer {
+        OptimizerKind::AdamA => Box::new(
+            AdamA::new(spec, hyper, backend, tracker).with_weight_decay(cfg.weight_decay),
+        ),
+        OptimizerKind::AdamGA => Box::new(AdamGA::new(spec, hyper, backend, tracker)),
+        OptimizerKind::Adafactor => Box::new(Adafactor::new(spec, hyper, tracker)),
+        OptimizerKind::Sm3 => Box::new(Sm3::new(spec, tracker)),
+        OptimizerKind::SgdmA => Box::new(SgdmA::new(
+            spec,
+            cfg.momentum,
+            cfg.weight_decay,
+            backend,
+            tracker,
+        )),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bias_corrections_progression() {
+        let h = Hyper { beta1: 0.9, beta2: 0.999, eps: 1e-8 };
+        let (b1, b2) = h.bias_corrections(1);
+        assert!((b1 - 0.1).abs() < 1e-6);
+        assert!((b2 - 0.001).abs() < 1e-6);
+        let (b1, _) = h.bias_corrections(100);
+        assert!(b1 > 0.9999);
+    }
+}

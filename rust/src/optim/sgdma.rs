@@ -1,0 +1,161 @@
+//! SGDM-A — the paper's §5 generalisation: optimizer accumulation applied
+//! to heavy-ball momentum SGD.
+//!
+//! Momentum `u` plays the role of (m, v): at mini-batch start it decays
+//! once (`u ← μ·u`, fused lazily into the first accumulate), each layer's
+//! micro-batch gradient folds in immediately (`u += g/N`) and is released,
+//! and the mini-batch update is `θ ← θ − lr·(u + wd·θ)`. State = 1·P
+//! floats — even cheaper than AdamA — with the same 1/M gradient peak.
+
+use anyhow::Result;
+
+use super::{Optimizer, UpdateBackend};
+use crate::config::OptimizerKind;
+use crate::memory::{Category, MemoryTracker};
+use crate::model::{LayerParams, ModelSpec};
+
+pub struct SgdmA {
+    u: Vec<Vec<f32>>,
+    momentum: f32,
+    weight_decay: f32,
+    backend: UpdateBackend,
+    decay_pending: Vec<bool>,
+    state_bytes: usize,
+}
+
+impl SgdmA {
+    pub fn new(
+        spec: &ModelSpec,
+        momentum: f32,
+        weight_decay: f32,
+        backend: UpdateBackend,
+        tracker: &MemoryTracker,
+    ) -> Self {
+        let u: Vec<Vec<f32>> = spec.layers.iter().map(|l| vec![0.0; l.flat_len]).collect();
+        let state_bytes = spec.total_params() * 4;
+        tracker.alloc_raw(Category::OptimizerStates, state_bytes);
+        let decay_pending = vec![false; u.len()];
+        Self { u, momentum, weight_decay, backend, decay_pending, state_bytes }
+    }
+}
+
+impl Optimizer for SgdmA {
+    fn kind(&self) -> OptimizerKind {
+        OptimizerKind::SgdmA
+    }
+
+    fn begin_minibatch(&mut self, _t: u64) -> Result<()> {
+        self.decay_pending.iter_mut().for_each(|p| *p = true);
+        Ok(())
+    }
+
+    fn accumulate(&mut self, layer: usize, grad: &[f32], gscale: f32) -> Result<()> {
+        if std::mem::take(&mut self.decay_pending[layer]) {
+            self.backend.sgdm_decay_acc(&mut self.u[layer], grad, gscale, self.momentum)
+        } else {
+            self.backend.sgdm_acc(&mut self.u[layer], grad, gscale)
+        }
+    }
+
+    fn apply(&mut self, params: &mut [LayerParams], lr: f32) -> Result<()> {
+        for (l, p) in params.iter_mut().enumerate() {
+            if std::mem::take(&mut self.decay_pending[l]) {
+                let zero = vec![0.0f32; self.u[l].len()];
+                self.backend.sgdm_decay_acc(&mut self.u[l], &zero, 0.0, self.momentum)?;
+            }
+            self.backend.sgdm_update(&mut p.flat, &self.u[l], lr, self.weight_decay)?;
+        }
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.state_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::Hyper;
+    use crate::runtime::{ModelConfigEntry, ModelHyper};
+
+    fn toy_spec() -> ModelSpec {
+        let entry = ModelConfigEntry {
+            model: ModelHyper {
+                vocab: 8, hidden: 4, layers: 1, heads: 1, seq: 2, microbatch: 2, ffn: 16,
+            },
+            param_shapes: vec![
+                ("embed.E".into(), vec![8, 4]),
+                ("block0.ln1.g".into(), vec![4]),
+                ("head.W".into(), vec![4, 8]),
+            ],
+            artifacts: Default::default(),
+        };
+        ModelSpec::from_manifest("toy", &entry).unwrap()
+    }
+
+    fn host() -> UpdateBackend {
+        UpdateBackend::host(Hyper { beta1: 0.9, beta2: 0.999, eps: 1e-8 })
+    }
+
+    #[test]
+    fn matches_manual_heavy_ball_over_minibatch() {
+        let spec = toy_spec();
+        let tracker = MemoryTracker::new();
+        let mut opt = SgdmA::new(&spec, 0.9, 0.0, host(), &tracker);
+        let n = spec.layers[0].flat_len;
+        let mut params: Vec<LayerParams> =
+            spec.layers.iter().map(|l| LayerParams { flat: vec![1.0; l.flat_len] }).collect();
+
+        let mut u_ref = vec![0.0f32; n];
+        let mut p_ref = vec![1.0f32; n];
+        for step in 1..=3u64 {
+            let grads: Vec<Vec<f32>> =
+                (0..4).map(|k| (0..n).map(|i| (i + k + step as usize) as f32 * 0.1).collect())
+                    .collect();
+            opt.begin_minibatch(step).unwrap();
+            for g in &grads {
+                opt.accumulate(0, g, 0.25).unwrap();
+            }
+            for l in 1..spec.layers.len() {
+                opt.accumulate(l, &vec![0.0; spec.layers[l].flat_len], 1.0).unwrap();
+            }
+            opt.apply(&mut params, 0.1).unwrap();
+
+            // reference heavy-ball: u = mu*u + mean(g); p -= lr*u
+            for i in 0..n {
+                let mean: f32 = grads.iter().map(|g| g[i]).sum::<f32>() / 4.0;
+                u_ref[i] = 0.9 * u_ref[i] + mean;
+                p_ref[i] -= 0.1 * u_ref[i];
+            }
+        }
+        for (a, b) in params[0].flat.iter().zip(&p_ref) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let spec = toy_spec();
+        let tracker = MemoryTracker::new();
+        let mut opt = SgdmA::new(&spec, 0.0, 0.1, host(), &tracker);
+        let mut params: Vec<LayerParams> =
+            spec.layers.iter().map(|l| LayerParams { flat: vec![1.0; l.flat_len] }).collect();
+        opt.begin_minibatch(1).unwrap();
+        for l in 0..spec.layers.len() {
+            opt.accumulate(l, &vec![0.0; spec.layers[l].flat_len], 1.0).unwrap();
+        }
+        opt.apply(&mut params, 0.5).unwrap();
+        // p = 1 - 0.5*(0 + 0.1*1) = 0.95
+        assert!(params[0].flat.iter().all(|&x| (x - 0.95).abs() < 1e-6));
+    }
+
+    #[test]
+    fn state_is_one_p() {
+        let spec = toy_spec();
+        let tracker = MemoryTracker::new();
+        let opt = SgdmA::new(&spec, 0.9, 0.0, host(), &tracker);
+        assert_eq!(opt.state_bytes(), spec.total_params() * 4);
+        assert_eq!(opt.persistent_grad_bytes(), 0);
+    }
+}

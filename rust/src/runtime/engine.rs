@@ -1,0 +1,128 @@
+//! PJRT client + executable wrappers.
+//!
+//! The raw `xla` crate types hold C pointers and are `!Send`; PJRT's C API
+//! is documented thread-safe (clients, executables and literals may be used
+//! concurrently), so we expose `Send + Sync` wrappers and keep all mutation
+//! inside XLA. Worker threads in the data-parallel simulator share one CPU
+//! client and its compiled executables through these wrappers.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{Context, Result};
+
+/// Thread-safe PJRT CPU client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    /// Total `execute` calls issued through this engine (perf accounting).
+    exec_calls: AtomicU64,
+}
+
+// SAFETY: PJRT C API objects (client/executable/buffer) are thread-safe per
+// the PJRT API contract; the `xla` crate merely forgot the marker impls.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Create a CPU PJRT client (the testbed substrate for the paper's
+    /// GPUs — see DESIGN.md §Substitutions).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, exec_calls: AtomicU64::new(0) })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Parse HLO text and compile it to a loaded executable.
+    pub fn compile_hlo_file(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            client: self.client.clone(),
+            engine_calls: &self.exec_calls as *const AtomicU64,
+        })
+    }
+
+    /// Total number of PJRT `execute` calls issued (metrics).
+    pub fn exec_calls(&self) -> u64 {
+        self.exec_calls.load(Ordering::Relaxed)
+    }
+}
+
+/// A borrowed host-array argument for [`Executable::run_args`] — the
+/// zero-intermediate-copy input path (host slice → device buffer).
+pub enum Arg<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+}
+
+/// A compiled HLO module.
+///
+/// All artifacts are lowered with `return_tuple=True`, so execution always
+/// yields one tuple literal which [`Executable::run`] decomposes.
+///
+/// NOTE: execution goes through `execute_b` with buffers this wrapper owns.
+/// The published `xla` 0.1.6 crate's `execute()` (literal inputs) leaks
+/// every input device buffer — `input_buffer_ptrs.push_back(buffer
+/// .release())` in `xla_rs.cc` with no corresponding free — which at our
+/// call volume (~1.3k PJRT calls per small-model step) is ~250 MB/step.
+/// Creating `PjRtBuffer`s ourselves restores RAII ownership.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+    engine_calls: *const AtomicU64,
+}
+
+// SAFETY: see `Engine` — PJRT executables are thread-safe; the counter
+// pointer aliases the owning engine which outlives every executable in
+// this crate (both live inside the same `ArtifactLibrary`/`Arc<Engine>`).
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    fn finish(&self, bufs: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<xla::Literal>> {
+        unsafe { &*self.engine_calls }.fetch_add(1, Ordering::Relaxed);
+        let lit = bufs[0][0].to_literal_sync().context("device->host transfer")?;
+        lit.to_tuple().context("decomposing output tuple")
+    }
+
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let inputs: Vec<xla::PjRtBuffer> = args
+            .iter()
+            .map(|l| self.client.buffer_from_host_literal(None, l))
+            .collect::<Result<_, _>>()
+            .context("literal -> device buffer")?;
+        let bufs = self.exe.execute_b(&inputs).context("PJRT execute_b")?;
+        self.finish(bufs)
+    }
+
+    /// Execute straight from host slices (no intermediate `Literal`) —
+    /// the hot-path entry used by the chunked optimizer kernels.
+    pub fn run_args(&self, args: &[Arg<'_>]) -> Result<Vec<xla::Literal>> {
+        let inputs: Vec<xla::PjRtBuffer> = args
+            .iter()
+            .map(|a| match a {
+                Arg::F32(d, s) => self.client.buffer_from_host_buffer(d, s, None),
+                Arg::I32(d, s) => self.client.buffer_from_host_buffer(d, s, None),
+            })
+            .collect::<Result<_, _>>()
+            .context("host slice -> device buffer")?;
+        let bufs = self.exe.execute_b(&inputs).context("PJRT execute_b")?;
+        self.finish(bufs)
+    }
+}

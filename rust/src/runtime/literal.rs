@@ -1,0 +1,91 @@
+//! `xla::Literal` construction/extraction helpers for the hot path.
+//!
+//! Literals are created with `create_from_shape` + `copy_raw_from`, which
+//! is a single memcpy into XLA-owned storage (no per-element conversion).
+
+use anyhow::{ensure, Context, Result};
+use xla::{ArrayElement, ElementType, Literal};
+
+/// f32 literal with the given logical shape.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    ensure!(
+        shape.iter().product::<usize>() == data.len(),
+        "shape {:?} != data len {}",
+        shape,
+        data.len()
+    );
+    let mut lit = Literal::create_from_shape(ElementType::F32.primitive_type(), shape);
+    lit.copy_raw_from(data).context("copy_raw_from f32")?;
+    Ok(lit)
+}
+
+/// i32 literal with the given logical shape.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<Literal> {
+    ensure!(
+        shape.iter().product::<usize>() == data.len(),
+        "shape {:?} != data len {}",
+        shape,
+        data.len()
+    );
+    let mut lit = Literal::create_from_shape(ElementType::S32.primitive_type(), shape);
+    lit.copy_raw_from(data).context("copy_raw_from i32")?;
+    Ok(lit)
+}
+
+/// Rank-1 single-element f32 literal (runtime scalar inputs use shape [1]).
+pub fn lit_scalar_f32(x: f32) -> Result<Literal> {
+    lit_f32(&[x], &[1])
+}
+
+/// Extract an f32 literal (any rank) into a Vec.
+pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("literal -> Vec<f32>")
+}
+
+/// Extract an i32 literal into a Vec.
+pub fn to_vec_i32(lit: &Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>().context("literal -> Vec<i32>")
+}
+
+/// Copy a literal into a caller-provided buffer (alloc-free extraction).
+pub fn copy_into_f32(lit: &Literal, dst: &mut [f32]) -> Result<()> {
+    ensure!(lit.element_count() == dst.len(), "literal/dst length mismatch");
+    lit.copy_raw_to(dst).context("literal copy_raw_to")
+}
+
+/// Copy the first `dst.len()` elements of a (possibly zero-padded) chunk
+/// literal into `dst` — the tail-chunk extraction path of the optimizer
+/// kernels. Falls back to a temporary only when the literal is larger.
+pub fn copy_chunk(lit: &Literal, dst: &mut [f32]) -> Result<()> {
+    let n = lit.element_count();
+    if n == dst.len() {
+        return lit.copy_raw_to(dst).context("copy_chunk exact");
+    }
+    ensure!(n > dst.len(), "chunk literal smaller than destination");
+    let mut tmp = vec![0.0f32; n];
+    lit.copy_raw_to(&mut tmp).context("copy_chunk padded")?;
+    dst.copy_from_slice(&tmp[..dst.len()]);
+    Ok(())
+}
+
+/// Element count sanity helper.
+#[allow(dead_code)]
+pub fn element_count(lit: &Literal) -> usize {
+    lit.element_count()
+}
+
+/// f32 scalar (rank-0) extraction — for losses.
+pub fn scalar_f32(lit: &Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().context("scalar f32")
+}
+
+/// i32 scalar (rank-0) extraction — for correct-prediction counts.
+pub fn scalar_i32(lit: &Literal) -> Result<i32> {
+    lit.get_first_element::<i32>().context("scalar i32")
+}
+
+/// Size in bytes of `n` elements of the given element type.
+#[allow(dead_code)]
+pub fn bytes_of<T: ArrayElement>(n: usize) -> usize {
+    n * T::ELEMENT_SIZE_IN_BYTES
+}

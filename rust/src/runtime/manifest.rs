@@ -1,0 +1,247 @@
+//! `artifacts/manifest.json` schema (written by `python/compile/aot.py`),
+//! parsed with the in-tree JSON parser (no serde in the offline dep set).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "s32"
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elements() * 4 // f32 and s32 are both 4 bytes
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            shape: j.get("shape")?.usize_vec()?,
+            dtype: j.get("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub sha256: String,
+}
+
+impl ArtifactEntry {
+    fn from_json(j: &Json) -> Result<Self> {
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            j.get(key)?.as_arr()?.iter().map(TensorSpec::from_json).collect()
+        };
+        Ok(Self {
+            file: j.get("file")?.as_str()?.to_string(),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+            sha256: j.opt("sha256").and_then(|s| s.as_str().ok()).unwrap_or("").to_string(),
+        })
+    }
+}
+
+fn artifact_map(j: &Json) -> Result<BTreeMap<String, ArtifactEntry>> {
+    j.as_obj()?
+        .iter()
+        .map(|(k, v)| Ok((k.clone(), ArtifactEntry::from_json(v)?)))
+        .collect()
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelHyper {
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub seq: usize,
+    pub microbatch: usize,
+    pub ffn: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelConfigEntry {
+    pub model: ModelHyper,
+    /// Ordered (name, shape) pairs — the parameter registry ground truth.
+    pub param_shapes: Vec<(String, Vec<usize>)>,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+}
+
+#[derive(Debug, Clone)]
+pub struct MlpHyper {
+    pub features: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub microbatch: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct MlpConfigEntry {
+    pub model: MlpHyper,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Hyper {
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub hyper: Hyper,
+    pub chunk_sizes: Vec<usize>,
+    pub common: BTreeMap<String, ArtifactEntry>,
+    pub configs: BTreeMap<String, ModelConfigEntry>,
+    pub mlp_configs: BTreeMap<String, MlpConfigEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let hyper = j.get("hyper")?;
+        let hyper = Hyper {
+            beta1: hyper.get("beta1")?.as_f64()?,
+            beta2: hyper.get("beta2")?.as_f64()?,
+            eps: hyper.get("eps")?.as_f64()?,
+        };
+
+        let mut configs = BTreeMap::new();
+        for (name, c) in j.get("configs")?.as_obj()? {
+            let m = c.get("model")?;
+            let model = ModelHyper {
+                vocab: m.get("vocab")?.as_usize()?,
+                hidden: m.get("hidden")?.as_usize()?,
+                layers: m.get("layers")?.as_usize()?,
+                heads: m.get("heads")?.as_usize()?,
+                seq: m.get("seq")?.as_usize()?,
+                microbatch: m.get("microbatch")?.as_usize()?,
+                ffn: m.get("ffn")?.as_usize()?,
+            };
+            let mut param_shapes = Vec::new();
+            for pair in c.get("param_shapes")?.as_arr()? {
+                let pair = pair.as_arr()?;
+                if pair.len() != 2 {
+                    bail!("bad param_shapes entry");
+                }
+                param_shapes.push((pair[0].as_str()?.to_string(), pair[1].usize_vec()?));
+            }
+            configs.insert(
+                name.clone(),
+                ModelConfigEntry { model, param_shapes, artifacts: artifact_map(c.get("artifacts")?)? },
+            );
+        }
+
+        let mut mlp_configs = BTreeMap::new();
+        for (name, c) in j.get("mlp_configs")?.as_obj()? {
+            let m = c.get("model")?;
+            let model = MlpHyper {
+                features: m.get("features")?.as_usize()?,
+                hidden: m.get("hidden")?.as_usize()?,
+                classes: m.get("classes")?.as_usize()?,
+                microbatch: m.get("microbatch")?.as_usize()?,
+            };
+            mlp_configs.insert(
+                name.clone(),
+                MlpConfigEntry { model, artifacts: artifact_map(c.get("artifacts")?)? },
+            );
+        }
+
+        Ok(Self {
+            hyper,
+            chunk_sizes: j.get("chunk_sizes")?.usize_vec()?,
+            common: artifact_map(j.get("common")?)?,
+            configs,
+            mlp_configs,
+        })
+    }
+
+    /// Resolve `"group/name"` into its artifact entry.
+    pub fn entry(&self, name: &str) -> Option<&ArtifactEntry> {
+        let (group, short) = name.split_once('/')?;
+        match group {
+            "common" => self.common.get(short),
+            g if g.starts_with("mlp_") => {
+                self.mlp_configs.get(&g[4..]).and_then(|c| c.artifacts.get(short))
+            }
+            g => self.configs.get(g).and_then(|c| c.artifacts.get(short)),
+        }
+    }
+
+    pub fn model_config(&self, name: &str) -> Result<&ModelConfigEntry> {
+        self.configs.get(name).with_context(|| format!("no model config '{name}'"))
+    }
+
+    pub fn mlp_config(&self, name: &str) -> Result<&MlpConfigEntry> {
+        self.mlp_configs.get(name).with_context(|| format!("no mlp config '{name}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "hyper": {"beta1": 0.9, "beta2": 0.999, "eps": 1e-08},
+      "chunk_sizes": [16384],
+      "common": {"adama_acc_16384": {"file": "common/a.hlo.txt",
+        "inputs": [{"shape": [16384], "dtype": "f32"}],
+        "outputs": [{"shape": [16384], "dtype": "f32"}], "sha256": "x"}},
+      "configs": {"tiny": {
+        "model": {"vocab": 256, "hidden": 64, "layers": 2, "heads": 2,
+                  "seq": 32, "microbatch": 4, "ffn": 256},
+        "param_shapes": [["embed.E", [256, 64]], ["head.W", [64, 256]]],
+        "artifacts": {"block_fwd": {"file": "tiny/b.hlo.txt",
+          "inputs": [], "outputs": []}}}},
+      "mlp_configs": {"tiny": {
+        "model": {"features": 16, "hidden": 32, "classes": 4, "microbatch": 8},
+        "artifacts": {}}}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.hyper.beta1, 0.9);
+        assert_eq!(m.chunk_sizes, vec![16384]);
+        assert_eq!(m.configs["tiny"].model.hidden, 64);
+        assert_eq!(m.configs["tiny"].param_shapes[0].0, "embed.E");
+        assert_eq!(m.mlp_configs["tiny"].model.classes, 4);
+    }
+
+    #[test]
+    fn entry_resolution() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.entry("common/adama_acc_16384").is_some());
+        assert!(m.entry("tiny/block_fwd").is_some());
+        assert!(m.entry("tiny/missing").is_none());
+        assert!(m.entry("nope").is_none());
+    }
+
+    #[test]
+    fn tensor_spec_bytes() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let e = &m.common["adama_acc_16384"];
+        assert_eq!(e.inputs[0].elements(), 16384);
+        assert_eq!(e.inputs[0].bytes(), 65536);
+    }
+}

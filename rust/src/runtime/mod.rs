@@ -1,0 +1,109 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them from rust.
+//!
+//! The interchange format is HLO *text* — jax >= 0.5 serialized protos use
+//! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+
+mod engine;
+mod literal;
+mod manifest;
+
+pub use engine::{Arg, Engine, Executable};
+pub use literal::{
+    copy_chunk, copy_into_f32, lit_f32, lit_i32, lit_scalar_f32, scalar_f32, scalar_i32,
+    to_vec_f32, to_vec_i32,
+};
+pub use manifest::{
+    ArtifactEntry, Hyper as ManifestHyper, Manifest, MlpConfigEntry, MlpHyper, ModelConfigEntry,
+    ModelHyper, TensorSpec,
+};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+use std::sync::Mutex;
+
+/// Lazily-compiled, cached library of every artifact in `manifest.json`.
+///
+/// Artifact names are manifest-relative: `"common/adama_acc_65536"`,
+/// `"tiny/block_fwd"`, `"mlp_small/mlp_train"`.
+pub struct ArtifactLibrary {
+    engine: Arc<Engine>,
+    root: PathBuf,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl ArtifactLibrary {
+    /// Open the artifact directory produced by `make artifacts`.
+    pub fn open(root: impl AsRef<Path>, engine: Arc<Engine>) -> Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        let manifest = Manifest::load(root.join("manifest.json"))?;
+        Ok(Self { engine, root, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Locate the artifact root: `$ADAMA_ARTIFACTS`, `./artifacts`, or the
+    /// crate-relative default (useful for tests/benches run from anywhere).
+    pub fn default_root() -> PathBuf {
+        if let Ok(p) = std::env::var("ADAMA_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        let cwd = PathBuf::from("artifacts");
+        if cwd.join("manifest.json").exists() {
+            return cwd;
+        }
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    /// Open the default artifact root with a fresh CPU engine.
+    pub fn open_default() -> Result<Arc<Self>> {
+        let engine = Arc::new(Engine::cpu()?);
+        Ok(Arc::new(Self::open(Self::default_root(), engine)?))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    /// Manifest entry (shapes/dtypes) for `group/name`.
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.manifest
+            .entry(name)
+            .with_context(|| format!("no artifact '{name}' in manifest"))
+    }
+
+    /// Compile (or fetch from cache) the executable for `group/name`.
+    pub fn get(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self.entry(name)?;
+        let path = self.root.join(&entry.file);
+        let exe = Arc::new(
+            self.engine
+                .compile_hlo_file(&path)
+                .with_context(|| format!("compiling artifact '{name}'"))?,
+        );
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compile a set of artifacts (startup warm-up).
+    pub fn warm(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.get(n)?;
+        }
+        Ok(())
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}

@@ -1,0 +1,192 @@
+//! Minimal host tensor: shaped `Vec<f32>` with the chunking / RNG / math
+//! helpers the coordinator, optimizers and collectives need.
+//!
+//! This is deliberately not a general ndarray — the request path runs all
+//! heavy math through PJRT artifacts; host tensors exist for parameter and
+//! optimizer-state bookkeeping, collectives, baselines and tests.
+
+mod rng;
+
+pub use rng::Rng;
+
+use std::fmt;
+
+/// Dense f32 host tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} elems]", self.shape, self.data.len())
+    }
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(data: Vec<f32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn full(shape: &[usize], value: f32) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![value; n] }
+    }
+
+    /// Normal(0, std) init from a deterministic stream.
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Self {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.normal() * std).collect();
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(self.data.len(), shape.iter().product::<usize>());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    // ---- elementwise ops (bookkeeping-scale, not the hot path) ----
+
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn allclose(&self, other: &Tensor, rtol: f32, atol: f32) -> bool {
+        self.shape == other.shape
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+}
+
+/// Split a flat length into `chunk`-sized pieces; the last may be partial.
+/// Returned as (offset, len) pairs. This is the bucketing scheme the
+/// optimizer kernels use (fused-Adam-over-flat-buffer).
+pub fn chunk_ranges(total: usize, chunk: usize) -> Vec<(usize, usize)> {
+    assert!(chunk > 0);
+    let mut out = Vec::with_capacity(total.div_ceil(chunk));
+    let mut off = 0;
+    while off < total {
+        let len = chunk.min(total - off);
+        out.push((off, len));
+        off += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t = Tensor::zeros(&[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.bytes(), 24);
+        assert_eq!(t.shape(), &[2, 3]);
+    }
+
+    #[test]
+    fn axpy_and_norms() {
+        let mut a = Tensor::from_vec(vec![1.0, 2.0], &[2]);
+        let b = Tensor::from_vec(vec![3.0, 4.0], &[2]);
+        a.axpy(2.0, &b);
+        assert_eq!(a.data(), &[7.0, 10.0]);
+        assert!((b.l2_norm() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn chunking_covers_exactly() {
+        let r = chunk_ranges(10, 4);
+        assert_eq!(r, vec![(0, 4), (4, 4), (8, 2)]);
+        assert_eq!(chunk_ranges(8, 4), vec![(0, 4), (4, 4)]);
+        assert!(chunk_ranges(0, 4).is_empty());
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let mut r1 = Rng::new(42);
+        let mut r2 = Rng::new(42);
+        let a = Tensor::randn(&[16], 1.0, &mut r1);
+        let b = Tensor::randn(&[16], 1.0, &mut r2);
+        assert_eq!(a, b);
+        assert!(a.l2_norm() > 0.0);
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = Tensor::from_vec(vec![1.0, 2.0], &[2]);
+        let mut b = a.clone();
+        b.data_mut()[0] += 1e-7;
+        assert!(a.allclose(&b, 1e-5, 1e-6));
+        b.data_mut()[0] += 1.0;
+        assert!(!a.allclose(&b, 1e-5, 1e-6));
+    }
+}

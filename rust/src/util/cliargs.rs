@@ -1,0 +1,122 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Typed getters with defaults; unknown-flag detection.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse(args: impl IntoIterator<Item = String>) -> Self {
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut iter = args.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    flags.insert(rest.to_string(), iter.next().unwrap());
+                } else {
+                    flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Self { flags, positional }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key}={s}: {e}")),
+        }
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key).with_context(|| format!("missing required --{key}"))
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Error if any flag is not in `known` (catches typos in scripts).
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k}; known: {known:?}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_kv_and_flags() {
+        let a = args("train --steps 10 --lr=0.1 --verbose --out x.json");
+        assert_eq!(a.positional(), &["train"]);
+        assert_eq!(a.parse_or("steps", 0usize).unwrap(), 10);
+        assert_eq!(a.parse_or("lr", 0.0f64).unwrap(), 0.1);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.str_or("out", ""), "x.json");
+    }
+
+    #[test]
+    fn defaults_and_missing() {
+        let a = args("run");
+        assert_eq!(a.parse_or("steps", 7usize).unwrap(), 7);
+        assert!(a.require("model").is_err());
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let a = args("--steps abc");
+        assert!(a.parse_or("steps", 0usize).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = args("--good 1 --typo 2");
+        assert!(a.check_known(&["good"]).is_err());
+        assert!(a.check_known(&["good", "typo"]).is_ok());
+    }
+}

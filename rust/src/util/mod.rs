@@ -1,0 +1,9 @@
+//! Dependency-light utilities: JSON, CLI parsing, timing stats.
+//!
+//! The offline build environment only ships the `xla` crate's dependency
+//! closure, so the usual suspects (serde_json, clap, criterion) are
+//! re-implemented here at the scale this project needs.
+
+pub mod cliargs;
+pub mod json;
+pub mod stats;

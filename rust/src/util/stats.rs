@@ -1,0 +1,171 @@
+//! Timing / summary statistics for the in-tree bench harness
+//! (criterion is unavailable offline — see Cargo.toml header note).
+
+use std::time::{Duration, Instant};
+
+/// Online summary of a sample set (times, losses, ...).
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.samples.push(x);
+    }
+
+    pub fn n(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (self.samples.len() - 1) as f64)
+            .sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+}
+
+/// Measure a closure `iters` times after `warmup` runs; returns per-call
+/// seconds. The shared shape of every `rust/benches/*` harness.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Summary::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        s.push(t0.elapsed().as_secs_f64());
+    }
+    s
+}
+
+/// Wall-clock stopwatch with named laps (perf logs).
+pub struct Stopwatch {
+    start: Instant,
+    laps: Vec<(String, Duration)>,
+    last: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Self { start: now, laps: Vec::new(), last: now }
+    }
+
+    pub fn lap(&mut self, name: &str) -> Duration {
+        let now = Instant::now();
+        let d = now - self.last;
+        self.last = now;
+        self.laps.push((name.to_string(), d));
+        d
+    }
+
+    pub fn total(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn laps(&self) -> &[(String, Duration)] {
+        &self.laps
+    }
+}
+
+/// Human-readable byte count (GiB/MiB/KiB) for table output.
+pub fn fmt_bytes(b: usize) -> String {
+    const G: f64 = 1024.0 * 1024.0 * 1024.0;
+    const M: f64 = 1024.0 * 1024.0;
+    const K: f64 = 1024.0;
+    let b = b as f64;
+    if b >= G {
+        format!("{:.2} GiB", b / G)
+    } else if b >= M {
+        format!("{:.2} MiB", b / M)
+    } else if b >= K {
+        format!("{:.1} KiB", b / K)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_moments() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.push(x);
+        }
+        assert_eq!(s.mean(), 2.5);
+        assert!((s.std() - 1.2909944).abs() < 1e-5);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert_eq!(s.percentile(50.0), 3.0);
+    }
+
+    #[test]
+    fn bench_runs_expected_iters() {
+        let mut count = 0;
+        let s = bench(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.n(), 5);
+        assert!(s.mean() >= 0.0);
+    }
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+        assert!(fmt_bytes(5_368_709_120).starts_with("5.00 GiB"));
+    }
+
+    #[test]
+    fn stopwatch_laps() {
+        let mut w = Stopwatch::new();
+        w.lap("a");
+        w.lap("b");
+        assert_eq!(w.laps().len(), 2);
+        assert!(w.total().as_nanos() > 0);
+    }
+}

@@ -1,0 +1,377 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! Require `make artifacts` to have run (skipped otherwise).
+
+use adama::runtime::{lit_f32, lit_i32, to_vec_f32};
+use adama::tensor::Rng;
+
+mod common;
+use common::{artifacts_or_skip, B1, B2};
+
+#[test]
+fn adama_acc_kernel_matches_host_math() {
+    let Some(lib) = artifacts_or_skip() else { return };
+    let chunk = 16384usize;
+    let exe = lib.get(&format!("common/adama_acc_{chunk}")).unwrap();
+
+    let mut rng = Rng::new(1);
+    let m: Vec<f32> = (0..chunk).map(|_| rng.normal()).collect();
+    let v: Vec<f32> = (0..chunk).map(|_| rng.normal().abs()).collect();
+    let g: Vec<f32> = (0..chunk).map(|_| rng.normal()).collect();
+    let gscale = 0.25f32;
+
+    let out = exe
+        .run(&[
+            lit_f32(&m, &[chunk]).unwrap(),
+            lit_f32(&v, &[chunk]).unwrap(),
+            lit_f32(&g, &[chunk]).unwrap(),
+            lit_f32(&[gscale], &[1]).unwrap(),
+        ])
+        .unwrap();
+    assert_eq!(out.len(), 2);
+    let m2 = to_vec_f32(&out[0]).unwrap();
+    let v2 = to_vec_f32(&out[1]).unwrap();
+
+    for i in 0..chunk {
+        let sg = g[i] * gscale;
+        let want_m = m[i] + (1.0 - B1) * sg;
+        let want_v = v[i] + (1.0 - B2) * sg * sg;
+        assert!((m2[i] - want_m).abs() < 1e-6, "m[{i}]: {} vs {want_m}", m2[i]);
+        assert!((v2[i] - want_v).abs() < 1e-6, "v[{i}]: {} vs {want_v}", v2[i]);
+    }
+}
+
+#[test]
+fn adam_update_kernel_matches_host_math() {
+    let Some(lib) = artifacts_or_skip() else { return };
+    let chunk = 16384usize;
+    let exe = lib.get(&format!("common/adam_update_{chunk}")).unwrap();
+
+    let mut rng = Rng::new(2);
+    let p: Vec<f32> = (0..chunk).map(|_| rng.normal()).collect();
+    let m: Vec<f32> = (0..chunk).map(|_| rng.normal()).collect();
+    let v: Vec<f32> = (0..chunk).map(|_| rng.normal().abs()).collect();
+    let (lr, bc1, bc2) = (1e-3f32, 0.1f32, 0.001f32);
+
+    let out = exe
+        .run(&[
+            lit_f32(&p, &[chunk]).unwrap(),
+            lit_f32(&m, &[chunk]).unwrap(),
+            lit_f32(&v, &[chunk]).unwrap(),
+            lit_f32(&[lr, bc1, bc2], &[3]).unwrap(),
+        ])
+        .unwrap();
+    let p2 = to_vec_f32(&out[0]).unwrap();
+    for i in 0..chunk {
+        let want = p[i] - lr * (m[i] / bc1) / ((v[i] / bc2).sqrt() + 1e-8);
+        assert!((p2[i] - want).abs() < 1e-5, "p[{i}]: {} vs {want}", p2[i]);
+    }
+}
+
+#[test]
+fn tiny_model_forward_shapes_and_loss() {
+    let Some(lib) = artifacts_or_skip() else { return };
+    let cfg = lib.manifest().model_config("tiny").unwrap().clone();
+    let (b, s, h, v) = (cfg.model.microbatch, cfg.model.seq, cfg.model.hidden, cfg.model.vocab);
+
+    let embed = lib.get("tiny/embed_fwd").unwrap();
+    let head = lib.get("tiny/head_loss").unwrap();
+
+    let mut rng = Rng::new(3);
+    let tokens: Vec<i32> = (0..b * s).map(|_| rng.below(v) as i32).collect();
+    let e: Vec<f32> = (0..v * h).map(|_| 0.02 * rng.normal()).collect();
+    let p: Vec<f32> = (0..s * h).map(|_| 0.02 * rng.normal()).collect();
+
+    let x = embed
+        .run(&[
+            lit_i32(&tokens, &[b, s]).unwrap(),
+            lit_f32(&e, &[v, h]).unwrap(),
+            lit_f32(&p, &[s, h]).unwrap(),
+        ])
+        .unwrap();
+    assert_eq!(x.len(), 1);
+    let xv = to_vec_f32(&x[0]).unwrap();
+    assert_eq!(xv.len(), b * s * h);
+
+    let w: Vec<f32> = (0..h * v).map(|_| 0.02 * rng.normal()).collect();
+    let labels: Vec<i32> = (0..b * s).map(|_| rng.below(v) as i32).collect();
+    let out = head
+        .run(&[
+            lit_f32(&xv, &[b, s, h]).unwrap(),
+            lit_f32(&w, &[h, v]).unwrap(),
+            lit_i32(&labels, &[b, s]).unwrap(),
+        ])
+        .unwrap();
+    // (loss, dx, dW)
+    assert_eq!(out.len(), 3);
+    let loss = out[0].get_first_element::<f32>().unwrap();
+    // near-uniform logits => loss ~ ln(vocab)
+    let expect = (v as f32).ln();
+    assert!((loss - expect).abs() < 0.5, "loss {loss} vs ln(V) {expect}");
+    assert_eq!(out[1].element_count(), b * s * h);
+    assert_eq!(out[2].element_count(), h * v);
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(lib) = artifacts_or_skip() else { return };
+    let _a = lib.get("common/grad_acc_16384").unwrap();
+    let mid = lib.compiled_count();
+    let _b = lib.get("common/grad_acc_16384").unwrap();
+    assert_eq!(lib.compiled_count(), mid);
+}
+
+// ---------------------------------------------------------------------------
+// Trainer end-to-end (tiny config)
+// ---------------------------------------------------------------------------
+
+use adama::config::{OptimBackend, OptimizerKind, TrainConfig};
+use adama::data::MarkovCorpus;
+use adama::{Category, Trainer};
+
+fn tiny_cfg(opt: OptimizerKind, backend: OptimBackend, n: usize) -> TrainConfig {
+    TrainConfig {
+        model: "tiny".into(),
+        optimizer: opt,
+        backend,
+        accum_steps: n,
+        chunk: 16384,
+        steps: 8,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn trainer_loss_decreases_adama_kernel() {
+    let Some(lib) = artifacts_or_skip() else { return };
+    let cfg = tiny_cfg(OptimizerKind::AdamA, OptimBackend::Kernel, 2);
+    let mut t = Trainer::new(lib, cfg).unwrap();
+    let h = t.spec().hyper.clone();
+    let mut corpus = MarkovCorpus::new(h.vocab, 7, 100);
+    let mut first = 0.0;
+    let mut last = 0.0;
+    for step in 0..12 {
+        let mbs = corpus.minibatch(2, h.microbatch, h.seq);
+        let stats = t.train_step(&mbs).unwrap();
+        if step == 0 {
+            first = stats.loss;
+        }
+        last = stats.loss;
+    }
+    assert!(first > 4.0, "initial loss {first} ~ ln(256)=5.5");
+    assert!(last < first - 0.5, "loss must drop: {first} -> {last}");
+}
+
+#[test]
+fn adama_vs_ga_same_m_different_v() {
+    // m_t identical for any N; training trajectories stay close.
+    let Some(lib) = artifacts_or_skip() else { return };
+    let mk = |o| {
+        Trainer::new(lib.clone(), tiny_cfg(o, OptimBackend::Host, 4)).unwrap()
+    };
+    let mut ta = mk(OptimizerKind::AdamA);
+    let mut tg = mk(OptimizerKind::AdamGA);
+    let h = ta.spec().hyper.clone();
+    // identical data streams
+    let mut ca = MarkovCorpus::new(h.vocab, 7, 55);
+    let mut cg = MarkovCorpus::new(h.vocab, 7, 55);
+    for _ in 0..3 {
+        let a = ca.minibatch(4, h.microbatch, h.seq);
+        let g = cg.minibatch(4, h.microbatch, h.seq);
+        ta.train_step(&a).unwrap();
+        tg.train_step(&g).unwrap();
+    }
+    // params close but not identical (v differs by sum-of-squares)
+    let mut max_diff = 0.0f32;
+    let mut any_diff = false;
+    for (pa, pg) in ta.params().iter().zip(tg.params()) {
+        for (a, b) in pa.flat.iter().zip(&pg.flat) {
+            max_diff = max_diff.max((a - b).abs());
+            if (a - b).abs() > 1e-9 {
+                any_diff = true;
+            }
+        }
+    }
+    assert!(any_diff, "AdamA must differ from Adam pointwise when N>1");
+    assert!(max_diff < 0.05, "but trajectories stay close; max diff {max_diff}");
+}
+
+#[test]
+fn memory_invariants_adama_vs_ga() {
+    // DESIGN.md §5.4: GA's gradient peak carries the full model; AdamA's
+    // only the largest layer (transient).
+    let Some(lib) = artifacts_or_skip() else { return };
+    let run = |o| {
+        let mut t = Trainer::new(lib.clone(), tiny_cfg(o, OptimBackend::Host, 2)).unwrap();
+        let h = t.spec().hyper.clone();
+        let mut c = MarkovCorpus::new(h.vocab, 7, 9);
+        for _ in 0..2 {
+            let mbs = c.minibatch(2, h.microbatch, h.seq);
+            t.train_step(&mbs).unwrap();
+        }
+        let p = t.spec().total_params() * 4;
+        let maxl = t.spec().max_layer_params() * 4;
+        (t.tracker().peak(Category::Gradients), p, maxl)
+    };
+    let (ga_peak, p, maxl) = run(OptimizerKind::AdamGA);
+    let (aa_peak, _, _) = run(OptimizerKind::AdamA);
+    assert_eq!(aa_peak, maxl, "AdamA grad peak == max layer");
+    assert_eq!(ga_peak, p + maxl, "GA grad peak == full model + transient layer");
+    assert!(aa_peak < ga_peak);
+}
+
+#[test]
+fn kernel_and_host_backends_agree() {
+    let Some(lib) = artifacts_or_skip() else { return };
+    let mut tk =
+        Trainer::new(lib.clone(), tiny_cfg(OptimizerKind::AdamA, OptimBackend::Kernel, 2)).unwrap();
+    let mut th =
+        Trainer::new(lib.clone(), tiny_cfg(OptimizerKind::AdamA, OptimBackend::Host, 2)).unwrap();
+    let h = tk.spec().hyper.clone();
+    let mut c1 = MarkovCorpus::new(h.vocab, 7, 33);
+    let mut c2 = MarkovCorpus::new(h.vocab, 7, 33);
+
+    // After ONE step the backends must agree to float tolerance.
+    tk.train_step(&c1.minibatch(2, h.microbatch, h.seq)).unwrap();
+    th.train_step(&c2.minibatch(2, h.microbatch, h.seq)).unwrap();
+    for (pa, pb) in tk.params().iter().zip(th.params()) {
+        for (a, b) in pa.flat.iter().zip(&pb.flat) {
+            assert!((a - b).abs() < 2e-5, "kernel {a} vs host {b} after 1 step");
+        }
+    }
+
+    // Over more steps tiny f32 differences amplify through 1/sqrt(v) when
+    // v ~ 0, but the drift must stay bounded by ~one LR-sized step.
+    for _ in 0..3 {
+        tk.train_step(&c1.minibatch(2, h.microbatch, h.seq)).unwrap();
+        th.train_step(&c2.minibatch(2, h.microbatch, h.seq)).unwrap();
+    }
+    let lr = tk.config().lr.base;
+    for (pa, pb) in tk.params().iter().zip(th.params()) {
+        for (a, b) in pa.flat.iter().zip(&pb.flat) {
+            assert!((a - b).abs() < lr, "kernel {a} vs host {b} drift > lr");
+        }
+    }
+}
+
+#[test]
+fn eval_accuracy_improves_with_training() {
+    let Some(lib) = artifacts_or_skip() else { return };
+    let cfg = tiny_cfg(OptimizerKind::AdamA, OptimBackend::Kernel, 2);
+    let mut t = Trainer::new(lib, cfg).unwrap();
+    let h = t.spec().hyper.clone();
+    let mut corpus = MarkovCorpus::new(h.vocab, 7, 1);
+    let mut heldout = MarkovCorpus::new(h.vocab, 7, 999);
+    let eval_set = heldout.minibatch(4, h.microbatch, h.seq);
+    let (loss0, acc0) = t.eval(&eval_set).unwrap();
+    for _ in 0..15 {
+        let mbs = corpus.minibatch(2, h.microbatch, h.seq);
+        t.train_step(&mbs).unwrap();
+    }
+    let (loss1, acc1) = t.eval(&eval_set).unwrap();
+    assert!(loss1 < loss0, "eval loss {loss0} -> {loss1}");
+    assert!(acc1 >= acc0, "eval acc {acc0} -> {acc1}");
+}
+
+#[test]
+fn checkpoint_roundtrip_through_trainer() {
+    let Some(lib) = artifacts_or_skip() else { return };
+    let mut t =
+        Trainer::new(lib.clone(), tiny_cfg(OptimizerKind::AdamA, OptimBackend::Host, 2)).unwrap();
+    let h = t.spec().hyper.clone();
+    let mut c = MarkovCorpus::new(h.vocab, 7, 5);
+    t.train_step(&c.minibatch(2, h.microbatch, h.seq)).unwrap();
+    let dir = std::env::temp_dir().join("adama_it_ck");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("t.ck");
+    t.save_checkpoint(&path).unwrap();
+    let mut t2 =
+        Trainer::new(lib, tiny_cfg(OptimizerKind::AdamA, OptimBackend::Host, 2)).unwrap();
+    t2.load_checkpoint(&path).unwrap();
+    for (a, b) in t.params().iter().zip(t2.params()) {
+        assert_eq!(a.flat, b.flat);
+    }
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn rss_stays_flat_over_training() {
+    // Regression test for the upstream xla-0.1.6 `execute()` input-buffer
+    // leak (see runtime/engine.rs): 60 tiny steps must not grow RSS by
+    // more than a few MB once warm.
+    fn rss_kb() -> usize {
+        std::fs::read_to_string("/proc/self/statm")
+            .ok()
+            .and_then(|s| s.split_whitespace().nth(1).map(|x| x.parse::<usize>().ok()))
+            .flatten()
+            .map(|pages| pages * 4)
+            .unwrap_or(0)
+    }
+    let Some(lib) = artifacts_or_skip() else { return };
+    let mut t =
+        Trainer::new(lib, tiny_cfg(OptimizerKind::AdamA, OptimBackend::Kernel, 2)).unwrap();
+    let h = t.spec().hyper.clone();
+    let mut c = MarkovCorpus::new(h.vocab, 7, 1);
+    for _ in 0..10 {
+        t.train_step(&c.minibatch(2, h.microbatch, h.seq)).unwrap();
+    }
+    let warm = rss_kb();
+    for _ in 0..50 {
+        t.train_step(&c.minibatch(2, h.microbatch, h.seq)).unwrap();
+    }
+    let grown = rss_kb().saturating_sub(warm);
+    assert!(grown < 64 * 1024, "RSS grew {grown} KB over 50 steps (leak?)");
+}
+
+#[test]
+fn sgdma_extension_trains() {
+    // §5 extension: momentum-SGD accumulation learns the task through the
+    // same layer-wise release protocol.
+    let Some(lib) = artifacts_or_skip() else { return };
+    let mut cfg = tiny_cfg(OptimizerKind::SgdmA, OptimBackend::Kernel, 2);
+    cfg.lr = adama::config::LrSchedule::constant(0.05);
+    let mut t = Trainer::new(lib, cfg).unwrap();
+    let h = t.spec().hyper.clone();
+    let mut c = MarkovCorpus::new(h.vocab, 7, 3);
+    let mut first = 0.0;
+    let mut last = 0.0;
+    for step in 0..15 {
+        let s = t.train_step(&c.minibatch(2, h.microbatch, h.seq)).unwrap();
+        if step == 0 {
+            first = s.loss;
+        }
+        last = s.loss;
+    }
+    assert!(last < first - 0.2, "SGDM-A loss {first} -> {last}");
+    // and it holds only 1·P of optimizer state
+    assert_eq!(
+        t.tracker().peak(Category::OptimizerStates),
+        t.spec().total_params() * 4
+    );
+}
+
+#[test]
+fn adamwa_weight_decay_shrinks_weight_norm() {
+    let Some(lib) = artifacts_or_skip() else { return };
+    let norm_after = |wd: f32| {
+        let mut cfg = tiny_cfg(OptimizerKind::AdamA, OptimBackend::Kernel, 2);
+        cfg.weight_decay = wd;
+        let mut t = Trainer::new(lib.clone(), cfg).unwrap();
+        let h = t.spec().hyper.clone();
+        let mut c = MarkovCorpus::new(h.vocab, 7, 4);
+        for _ in 0..6 {
+            t.train_step(&c.minibatch(2, h.microbatch, h.seq)).unwrap();
+        }
+        t.params()
+            .iter()
+            .flat_map(|p| &p.flat)
+            .map(|x| (x * x) as f64)
+            .sum::<f64>()
+            .sqrt()
+    };
+    let plain = norm_after(0.0);
+    let decayed = norm_after(0.5);
+    // per-step shrink is (1 - lr*wd) = 0.9995; over 6 steps ~0.3% — small
+    // but strictly measurable above float noise.
+    assert!(decayed < plain - 0.05, "wd must shrink norm: {plain} vs {decayed}");
+}
