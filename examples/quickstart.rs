@@ -1,19 +1,55 @@
-//! Quickstart: train the tiny transformer with AdamA for a handful of
-//! steps and print the loss curve + the measured memory breakdown.
+//! Quickstart: train on the pure-rust host executor — no artifacts, no
+//! Python, no PJRT — and print loss curves plus the *measured* memory
+//! breakdown from the tracker.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Part 1 trains the MLP classifier (the paper's vision-parity model);
+//! part 2 trains the tiny transformer LM through the same AdamA
+//! release-per-layer protocol.
 
-use adama::config::{OptimizerKind, TrainConfig};
-use adama::data::MarkovCorpus;
-use adama::runtime::ArtifactLibrary;
+use adama::config::{LrSchedule, OptimizerKind, TrainConfig};
+use adama::coordinator::MlpTrainer;
+use adama::data::{BlobData, MarkovCorpus};
+use adama::runtime::Library;
 use adama::Trainer;
 
 fn main() -> anyhow::Result<()> {
-    // 1. open the AOT artifacts (built once by `make artifacts`)
-    let lib = ArtifactLibrary::open_default()?;
-    println!("PJRT platform: {}", lib.engine().platform_name());
+    // 1. open the default library: host executor on a clean machine,
+    //    PJRT artifacts when built with `--features pjrt` + `make artifacts`
+    let lib = Library::open_default()?;
+    println!("execution backend: {}", lib.executor().platform());
 
-    // 2. configure: tiny transformer, AdamA, 4 micro-batches per step
+    // ---- part 1: MLP classifier with AdamA ----
+    let cfg = TrainConfig {
+        model: "tiny".into(),
+        optimizer: OptimizerKind::AdamA,
+        accum_steps: 4,
+        lr: LrSchedule::constant(5e-2),
+        ..TrainConfig::default()
+    };
+    let mut mlp = MlpTrainer::new(lib.clone(), cfg)?;
+    let h = mlp.hyper.clone();
+    println!(
+        "\nMLP '{}': {} features -> {} hidden -> {} classes, N=4 micro-batches",
+        "tiny", h.features, h.hidden, h.classes
+    );
+    let mut blobs = BlobData::new(h.features, h.classes, 7, 1);
+    for step in 1..=30u64 {
+        let minibatch: Vec<_> = (0..4).map(|_| blobs.batch(h.microbatch)).collect();
+        let loss = mlp.train_step(&minibatch)?;
+        if step % 5 == 0 || step == 1 {
+            println!("step {step:>3}  loss {loss:.4}");
+        }
+    }
+    let eval: Vec<_> = (0..4).map(|_| blobs.batch(h.microbatch)).collect();
+    let (loss, acc) = mlp.eval(&eval)?;
+    println!("eval: loss {loss:.4}, accuracy {:.1}%", 100.0 * acc);
+    println!("\n{}", mlp.tracker().report());
+
+    // ---- part 2: tiny transformer LM, same optimizer protocol ----
     let cfg = TrainConfig {
         model: "tiny".into(),
         optimizer: OptimizerKind::AdamA,
@@ -21,22 +57,18 @@ fn main() -> anyhow::Result<()> {
         ..TrainConfig::default()
     };
     let mut trainer = Trainer::new(lib, cfg)?;
-    let h = trainer.spec().hyper.clone();
+    let th = trainer.spec().hyper.clone();
     println!(
-        "model '{}': {} params across {} layers (max layer {})",
+        "\ntransformer '{}': {} params across {} layers (max layer {})",
         trainer.spec().config,
         trainer.spec().total_params(),
         trainer.spec().n_layers(),
         trainer.spec().max_layer_params(),
     );
-
-    // 3. synthetic corpus (sparse Markov language; entropy ≈ ln 4)
-    let mut corpus = MarkovCorpus::new(h.vocab, 7, 1);
+    let mut corpus = MarkovCorpus::new(th.vocab, 7, 1);
     println!("corpus entropy floor: {:.3} nats", corpus.entropy());
-
-    // 4. train
-    for step in 1..=20u64 {
-        let minibatch = corpus.minibatch(4, h.microbatch, h.seq);
+    for step in 1..=10u64 {
+        let minibatch = corpus.minibatch(4, th.microbatch, th.seq);
         let stats = trainer.train_step(&minibatch)?;
         if step % 5 == 0 || step == 1 {
             println!(
@@ -48,11 +80,6 @@ fn main() -> anyhow::Result<()> {
             );
         }
     }
-
-    // 5. evaluate + memory report
-    let eval = corpus.minibatch(4, h.microbatch, h.seq);
-    let (loss, acc) = trainer.eval(&eval)?;
-    println!("\neval: loss {loss:.4}, next-token accuracy {:.1}%", 100.0 * acc);
     println!("\n{}", trainer.tracker().report());
     println!(
         "\nAdamA gradient peak = one layer ({} bytes), not the full model ({} bytes)",

@@ -1,16 +1,20 @@
 //! Perf microbenchmarks — the §Perf instrument (EXPERIMENTS.md).
 //!
 //! Times the building blocks of the hot path in isolation:
-//!   * chunked optimizer kernels (PJRT) vs host loops, per chunk size;
-//!   * model artifacts (block fwd/bwd, head, embed);
+//!   * chunked optimizer kernels (program dispatch) vs raw host loops,
+//!     per chunk size;
+//!   * a micro-batch forward+backward over the model programs;
 //!   * a full tiny train step (end-to-end floor).
 //!
-//! Run before/after each optimization; record deltas in EXPERIMENTS.md.
+//! Besides the human-readable table, writes `BENCH_perf.json` —
+//! machine-readable ns/elem per kernel per backend — so subsequent PRs
+//! have a perf trajectory to regress against.
 
 use adama::config::{OptimBackend, OptimizerKind};
 use adama::data::MarkovCorpus;
 use adama::optim::{host_math, ChunkRunner, Hyper};
 use adama::tensor::Rng;
+use adama::util::json::{obj, Json};
 use adama::util::stats::bench;
 use adama::Trainer;
 
@@ -21,27 +25,43 @@ use support::{banner, cfg, lib_or_exit, quick};
 fn main() {
     let lib = lib_or_exit();
     let iters = if quick() { 3 } else { 20 };
+    let platform = lib.executor().platform();
+    let mut results: Vec<Json> = Vec::new();
 
-    banner("optimizer kernels: PJRT chunk call vs host loop (1M elements)");
+    banner("optimizer kernels: chunked program dispatch vs raw host loop (1M elements)");
     println!(
         "{:<14} {:>10} {:>14} {:>14} {:>10}",
         "op", "chunk", "kernel (ms)", "host (ms)", "k/h"
     );
-    let n_total = 1 << 20;
+    let n_total: usize = 1 << 20;
     let mut rng = Rng::new(1);
     let mut m: Vec<f32> = (0..n_total).map(|_| rng.normal()).collect();
     let mut v: Vec<f32> = (0..n_total).map(|_| rng.normal().abs()).collect();
+    let mut p: Vec<f32> = (0..n_total).map(|_| rng.normal()).collect();
     let g: Vec<f32> = (0..n_total).map(|_| rng.normal()).collect();
     let hyper = Hyper { beta1: 0.9, beta2: 0.999, eps: 1e-8 };
 
+    let mut record = |op: &str, chunk: usize, backend: &str, secs_per_call: f64| {
+        results.push(obj(vec![
+            ("op", op.into()),
+            ("chunk", chunk.into()),
+            ("backend", backend.into()),
+            ("ns_per_elem", (secs_per_call * 1e9 / n_total as f64).into()),
+            ("ms_per_call", (secs_per_call * 1e3).into()),
+        ]));
+    };
+
     for chunk in lib.manifest().chunk_sizes.clone() {
         let mut runner = ChunkRunner::new(lib.clone(), chunk).unwrap();
+
         let kt = bench(2, iters, || {
             runner.adama_acc(&mut m, &mut v, &g, 0.25).unwrap();
         });
         let ht = bench(2, iters, || {
             host_math::adama_acc(&mut m, &mut v, &g, 0.25, hyper.beta1, hyper.beta2);
         });
+        record("adama_acc", chunk, "kernel", kt.mean());
+        record("adama_acc", chunk, "host", ht.mean());
         println!(
             "{:<14} {:>10} {:>14.3} {:>14.3} {:>10.2}",
             "adama_acc",
@@ -50,9 +70,26 @@ fn main() {
             1e3 * ht.mean(),
             kt.mean() / ht.mean()
         );
+
+        let ku = bench(2, iters, || {
+            runner.adam_update(&mut p, &m, &v, 1e-3, 0.1, 0.001).unwrap();
+        });
+        let hu = bench(2, iters, || {
+            host_math::adam_update(&mut p, &m, &v, 1e-3, 0.1, 0.001, hyper.eps);
+        });
+        record("adam_update", chunk, "kernel", ku.mean());
+        record("adam_update", chunk, "host", hu.mean());
+        println!(
+            "{:<14} {:>10} {:>14.3} {:>14.3} {:>10.2}",
+            "adam_update",
+            chunk,
+            1e3 * ku.mean(),
+            1e3 * hu.mean(),
+            ku.mean() / hu.mean()
+        );
     }
 
-    banner("model artifacts (tiny): per-call latency");
+    banner("model programs (tiny): per-call latency");
     let mut t =
         Trainer::new(lib.clone(), cfg("tiny", OptimizerKind::AdamA, 2, 42)).unwrap();
     let h = t.spec().hyper.clone();
@@ -69,6 +106,11 @@ fn main() {
             1e3 * s.percentile(50.0),
             1e3 * s.percentile(95.0)
         );
+        results.push(obj(vec![
+            ("op", "microbatch_fwd_bwd_tiny".into()),
+            ("backend", Json::Str(platform.clone())),
+            ("ms_per_call", (s.mean() * 1e3).into()),
+        ]));
     }
 
     banner("end-to-end train step (tiny, N=2): kernel vs host optimizer backend");
@@ -83,8 +125,32 @@ fn main() {
             t.train_step(&mbs).unwrap();
         });
         println!("{:?}: {:.2} ms/step", backend, 1e3 * s.mean());
+        results.push(obj(vec![
+            ("op", "train_step_tiny_n2".into()),
+            (
+                "backend",
+                match backend {
+                    OptimBackend::Kernel => "kernel",
+                    OptimBackend::Host => "host",
+                }
+                .into(),
+            ),
+            ("ms_per_call", (s.mean() * 1e3).into()),
+        ]));
     }
 
-    banner("PJRT execute-call count (engine instrumentation)");
-    println!("exec calls so far: {}", lib.engine().exec_calls());
+    banner("executor call count (instrumentation)");
+    println!("exec calls so far: {}", lib.executor().exec_calls());
+
+    let report = obj(vec![
+        ("platform", Json::Str(platform)),
+        ("elements", n_total.into()),
+        ("iters", iters.into()),
+        ("results", Json::Arr(results)),
+    ]);
+    let path = "BENCH_perf.json";
+    match std::fs::write(path, report.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
 }

@@ -1,22 +1,19 @@
 //! Shared bench-harness support (criterion is unavailable offline; each
 //! bench is a `harness = false` binary that regenerates one paper
-//! table/figure and prints it).
+//! table/figure).
+#![allow(dead_code)] // each bench binary uses a different subset
 
 use std::sync::Arc;
 
 use adama::config::{OptimBackend, OptimizerKind, TrainConfig};
-use adama::runtime::ArtifactLibrary;
+use adama::runtime::Library;
 use adama::util::cliargs::Args;
 
-/// Open artifacts or exit 0 with a notice (benches must not fail the
-/// pipeline when `make artifacts` hasn't run).
-pub fn lib_or_exit() -> Arc<ArtifactLibrary> {
-    let root = ArtifactLibrary::default_root();
-    if !root.join("manifest.json").exists() {
-        println!("SKIP: no artifacts at {} (run `make artifacts`)", root.display());
-        std::process::exit(0);
-    }
-    ArtifactLibrary::open_default().expect("opening artifacts")
+/// Open the default execution library. The host executor guarantees a
+/// backend on a clean machine; with the `pjrt` feature + artifacts the
+/// benches measure the PJRT path instead.
+pub fn lib_or_exit() -> Arc<Library> {
+    Library::open_default().expect("opening execution library")
 }
 
 /// `--quick` trims workloads for CI-style runs.

@@ -11,7 +11,7 @@ use adama::collective::{run_data_parallel, run_zero1, DpSpec, SyncStrategy, Zero
 use adama::config::TrainConfig;
 use adama::data::MarkovCorpus;
 use adama::memmodel::{peak_memory, DtypePolicy, PaperModel, Scenario, Strategy};
-use adama::runtime::ArtifactLibrary;
+use adama::runtime::Library;
 use adama::util::cliargs::Args;
 use adama::util::stats::fmt_bytes;
 use adama::Trainer;
@@ -53,7 +53,7 @@ pub fn run(cli: Cli) -> Result<()> {
 
 fn train(args: &Args) -> Result<()> {
     let cfg = TrainConfig::from_args(args)?;
-    let lib = ArtifactLibrary::open_default()?;
+    let lib = Library::open_default()?;
     let mut trainer = Trainer::new(lib, cfg.clone())?;
     let h = trainer.spec().hyper.clone();
     let mut corpus = MarkovCorpus::new(h.vocab, 7, cfg.seed);
@@ -87,7 +87,7 @@ fn dp(args: &Args) -> Result<()> {
         s => bail!("unknown --sync '{s}' (state|grad|naive)"),
     };
     let steps = cfg.steps;
-    let lib = ArtifactLibrary::open_default()?;
+    let lib = Library::open_default()?;
     let r = run_data_parallel(lib, DpSpec { cfg, sync, steps, data_seed: 7 })?;
     println!(
         "losses: {:.4} -> {:.4} over {} steps",
@@ -108,7 +108,7 @@ fn dp(args: &Args) -> Result<()> {
 fn zero1(args: &Args) -> Result<()> {
     let cfg = TrainConfig::from_args(args)?;
     let steps = cfg.steps;
-    let lib = ArtifactLibrary::open_default()?;
+    let lib = Library::open_default()?;
     let r = run_zero1(lib, Zero1Spec { cfg, steps, data_seed: 7 })?;
     println!(
         "losses: {:.4} -> {:.4}; comm/step {}; grad peak {}; optstate {}",
@@ -170,9 +170,9 @@ fn memmodel(args: &Args) -> Result<()> {
 }
 
 fn info() -> Result<()> {
-    let lib = ArtifactLibrary::open_default()?;
+    let lib = Library::open_default()?;
     let m = lib.manifest();
-    println!("platform: {}", lib.engine().platform_name());
+    println!("backend: {}", lib.executor().platform());
     println!("hyper: beta1={} beta2={} eps={}", m.hyper.beta1, m.hyper.beta2, m.hyper.eps);
     println!("chunk sizes: {:?}", m.chunk_sizes);
     for (name, c) in &m.configs {

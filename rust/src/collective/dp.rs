@@ -23,7 +23,7 @@ use crate::config::{OptimizerKind, TrainConfig};
 use crate::coordinator::Trainer;
 use crate::data::MarkovCorpus;
 use crate::memory::MemoryReport;
-use crate::runtime::ArtifactLibrary;
+use crate::runtime::Library;
 
 /// How workers synchronise per mini-batch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -66,7 +66,7 @@ pub struct DpReport {
 }
 
 /// Run `spec.steps` mini-batches across `spec.cfg.workers` worker threads.
-pub fn run_data_parallel(lib: Arc<ArtifactLibrary>, spec: DpSpec) -> Result<DpReport> {
+pub fn run_data_parallel(lib: Arc<Library>, spec: DpSpec) -> Result<DpReport> {
     let m = spec.cfg.workers;
     spec.cfg.validate()?;
     if spec.sync != SyncStrategy::Gradients
@@ -117,7 +117,7 @@ struct WorkerOut {
     memory: MemoryReport,
 }
 
-fn worker(lib: Arc<ArtifactLibrary>, spec: DpSpec, comm: CommHandle) -> Result<WorkerOut> {
+fn worker(lib: Arc<Library>, spec: DpSpec, comm: CommHandle) -> Result<WorkerOut> {
     let m = comm.world();
     let n = spec.cfg.accum_steps;
     let mut trainer = Trainer::new(lib, spec.cfg.clone())?;

@@ -28,7 +28,7 @@ use crate::data::MarkovCorpus;
 use crate::memory::{Category, MemoryReport, MemoryTracker};
 use crate::model::ModelSpec;
 use crate::optim::{host_math, Hyper, NullOpt, UpdateBackend};
-use crate::runtime::ArtifactLibrary;
+use crate::runtime::Library;
 
 #[derive(Debug, Clone)]
 pub struct Zero1Spec {
@@ -110,7 +110,7 @@ impl ShardState {
 
 /// Run ZeRO-S1 training: `cfg.optimizer` selects AdamA (combined scheme)
 /// or AdamGA (DeepSpeed-style baseline).
-pub fn run_zero1(lib: Arc<ArtifactLibrary>, spec: Zero1Spec) -> Result<Zero1Report> {
+pub fn run_zero1(lib: Arc<Library>, spec: Zero1Spec) -> Result<Zero1Report> {
     spec.cfg.validate()?;
     let m = spec.cfg.workers;
     if m < 2 {
@@ -158,7 +158,7 @@ struct WorkerOut {
     memory: MemoryReport,
 }
 
-fn make_backend(cfg: &TrainConfig, lib: &Arc<ArtifactLibrary>) -> Result<UpdateBackend> {
+fn make_backend(cfg: &TrainConfig, lib: &Arc<Library>) -> Result<UpdateBackend> {
     let hyper = Hyper::from_manifest(lib.manifest());
     Ok(match cfg.backend {
         OptimBackend::Kernel => UpdateBackend::kernel(lib.clone(), cfg.chunk)?,
@@ -168,7 +168,7 @@ fn make_backend(cfg: &TrainConfig, lib: &Arc<ArtifactLibrary>) -> Result<UpdateB
 
 /// ZeRO-S1 + AdamA: per-micro-batch per-layer reduce-scatter + shard
 /// integrate + release.
-fn worker_adama(lib: Arc<ArtifactLibrary>, spec: Zero1Spec, comm: CommHandle) -> Result<WorkerOut> {
+fn worker_adama(lib: Arc<Library>, spec: Zero1Spec, comm: CommHandle) -> Result<WorkerOut> {
     let n = spec.cfg.accum_steps;
     let m = comm.world();
     let tracker = MemoryTracker::new();
@@ -246,7 +246,7 @@ fn worker_adama(lib: Arc<ArtifactLibrary>, spec: Zero1Spec, comm: CommHandle) ->
 }
 
 /// ZeRO-S1 + GA: full local accumulator, one reduce-scatter per step.
-fn worker_ga(lib: Arc<ArtifactLibrary>, spec: Zero1Spec, comm: CommHandle) -> Result<WorkerOut> {
+fn worker_ga(lib: Arc<Library>, spec: Zero1Spec, comm: CommHandle) -> Result<WorkerOut> {
     let n = spec.cfg.accum_steps;
     let m = comm.world();
     let tracker = MemoryTracker::new();

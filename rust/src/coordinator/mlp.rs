@@ -14,7 +14,7 @@ use crate::data::BlobBatch;
 use crate::memory::{Category, MemoryTracker};
 use crate::model::{LayerParams, ModelSpec, ParamView};
 use crate::optim::{build_optimizer, Optimizer};
-use crate::runtime::{lit_f32, lit_i32, scalar_f32, scalar_i32, ArtifactLibrary, Executable};
+use crate::runtime::{lit_f32, lit_i32, scalar_f32, scalar_i32, Library, Program, Value};
 use crate::tensor::Rng;
 
 pub struct MlpTrainer {
@@ -24,8 +24,8 @@ pub struct MlpTrainer {
     params: Vec<LayerParams>,
     opt: Box<dyn Optimizer>,
     tracker: MemoryTracker,
-    train_exe: Arc<Executable>,
-    eval_exe: Arc<Executable>,
+    train_exe: Arc<dyn Program>,
+    eval_exe: Arc<dyn Program>,
     step: u64,
 }
 
@@ -57,7 +57,7 @@ fn mlp_spec(h: &crate::runtime::MlpHyper) -> ModelSpec {
 }
 
 impl MlpTrainer {
-    pub fn new(lib: Arc<ArtifactLibrary>, cfg: TrainConfig) -> Result<Self> {
+    pub fn new(lib: Arc<Library>, cfg: TrainConfig) -> Result<Self> {
         let hyper = lib.manifest().mlp_config(&cfg.model)?.model.clone();
         let spec = mlp_spec(&hyper);
         let tracker = MemoryTracker::new();
@@ -99,7 +99,7 @@ impl MlpTrainer {
         (self.params[layer].view(p), p)
     }
 
-    fn param_literals(&self) -> Result<Vec<xla::Literal>> {
+    fn param_values(&self) -> Result<Vec<Value>> {
         let mut out = Vec::with_capacity(4);
         for (layer, idx) in [(0usize, 0usize), (0, 1), (1, 0), (1, 1)] {
             let (data, p) = self.view(layer, idx);
@@ -119,8 +119,8 @@ impl MlpTrainer {
                 lit_f32(&mb.x, &[mb.batch, self.hyper.features])?,
                 lit_i32(&mb.y, &[mb.batch])?,
             ];
-            args.extend(self.param_literals()?);
-            let out = self.train_exe.run(&args)?;
+            args.extend(self.param_values()?);
+            let out = self.train_exe.run_v(&args)?;
             loss_sum += scalar_f32(&out[0])? as f64;
             // (dW1, db1) -> layer 0 flat; (dW2, db2) -> layer 1 flat
             for (layer, lits) in [(0usize, &out[1..3]), (1, &out[3..5])] {
@@ -149,8 +149,8 @@ impl MlpTrainer {
                 lit_f32(&mb.x, &[mb.batch, self.hyper.features])?,
                 lit_i32(&mb.y, &[mb.batch])?,
             ];
-            args.extend(self.param_literals()?);
-            let out = self.eval_exe.run(&args)?;
+            args.extend(self.param_values()?);
+            let out = self.eval_exe.run_v(&args)?;
             loss_sum += scalar_f32(&out[0])? as f64;
             correct += scalar_i32(&out[1])? as usize;
             total += mb.batch;

@@ -28,25 +28,26 @@ use crate::memory::{Category, MemoryTracker};
 use crate::model::{init_params, LayerKind, LayerParams, ModelSpec};
 use crate::optim::{build_optimizer, Optimizer};
 use crate::runtime::{
-    lit_f32, lit_i32, scalar_f32, scalar_i32, to_vec_f32, ArtifactLibrary, Executable,
+    lit_f32, lit_i32, scalar_f32, scalar_i32, to_vec_f32, Library, Program, Value,
 };
 
 /// Per-layer gradient consumer — called the instant a layer's gradient
 /// exists; the buffer is released when it returns.
 pub type GradSink<'a> = dyn FnMut(usize, &[f32]) -> Result<()> + 'a;
 
-/// Compiled model artifacts for one config.
-struct ModelExecutables {
-    embed_fwd: Arc<Executable>,
-    embed_bwd: Arc<Executable>,
-    block_fwd: Arc<Executable>,
-    block_bwd: Arc<Executable>,
-    head_loss: Arc<Executable>,
-    head_eval: Arc<Executable>,
+/// Loaded model programs for one config (backend-neutral: pure-rust host
+/// implementations or compiled PJRT artifacts, depending on the library).
+struct ModelPrograms {
+    embed_fwd: Arc<dyn Program>,
+    embed_bwd: Arc<dyn Program>,
+    block_fwd: Arc<dyn Program>,
+    block_bwd: Arc<dyn Program>,
+    head_loss: Arc<dyn Program>,
+    head_eval: Arc<dyn Program>,
 }
 
-impl ModelExecutables {
-    fn load(lib: &ArtifactLibrary, config: &str) -> Result<Self> {
+impl ModelPrograms {
+    fn load(lib: &Library, config: &str) -> Result<Self> {
         let get = |n: &str| lib.get(&format!("{config}/{n}"));
         Ok(Self {
             embed_fwd: get("embed_fwd")?,
@@ -62,12 +63,12 @@ impl ModelExecutables {
 /// Model execution state (everything except the optimizer) — split out so
 /// distributed sinks can borrow the optimizer mutably alongside it.
 pub struct TrainerCore {
-    lib: Arc<ArtifactLibrary>,
+    lib: Arc<Library>,
     cfg: TrainConfig,
     spec: ModelSpec,
     params: Vec<LayerParams>,
     tracker: MemoryTracker,
-    exe: ModelExecutables,
+    exe: ModelPrograms,
 }
 
 impl TrainerCore {
@@ -91,32 +92,32 @@ impl TrainerCore {
         &mut self.params
     }
 
-    pub fn library(&self) -> &Arc<ArtifactLibrary> {
+    pub fn library(&self) -> &Arc<Library> {
         &self.lib
     }
 
-    /// Literals for one layer's parameter tensors (artifact argument order).
-    fn layer_literals(&self, layer: usize) -> Result<Vec<xla::Literal>> {
+    /// Values for one layer's parameter tensors (artifact argument order).
+    fn layer_values(&self, layer: usize) -> Result<Vec<Value>> {
         let spec_l = &self.spec.layers[layer];
         let flat = &self.params[layer];
         spec_l.params.iter().map(|p| lit_f32(flat.view(p), &p.shape)).collect()
     }
 
     /// Forward through embed + blocks. Returns the final hidden state and,
-    /// if `stash` is set, every block's input literal (for backward).
+    /// if `stash` is set, every block's input activation (for backward).
     fn forward(
         &self,
         mb: &MicroBatch,
-        stash: Option<&mut Vec<(xla::Literal, crate::memory::Allocation)>>,
-    ) -> Result<xla::Literal> {
+        stash: Option<&mut Vec<(Value, crate::memory::Allocation)>>,
+    ) -> Result<Value> {
         let h = &self.spec.hyper;
         let tokens = lit_i32(&mb.tokens, &[mb.batch, mb.seq])?;
         let mut embed_args = vec![tokens];
-        embed_args.extend(self.layer_literals(0)?);
+        embed_args.extend(self.layer_values(0)?);
         let mut x = self
             .exe
             .embed_fwd
-            .run(&embed_args)?
+            .run_v(&embed_args)?
             .into_iter()
             .next()
             .context("embed_fwd output")?;
@@ -127,11 +128,11 @@ impl TrainerCore {
                 continue;
             }
             let mut args = vec![x.clone()];
-            args.extend(self.layer_literals(li)?);
+            args.extend(self.layer_values(li)?);
             let y = self
                 .exe
                 .block_fwd
-                .run(&args)?
+                .run_v(&args)?
                 .into_iter()
                 .next()
                 .context("block_fwd output")?;
@@ -151,16 +152,16 @@ impl TrainerCore {
         let head_idx = self.spec.layers.len() - 1;
 
         // ---- forward, stashing block inputs ----
-        let mut stash: Vec<(xla::Literal, crate::memory::Allocation)> = Vec::new();
+        let mut stash: Vec<(Value, crate::memory::Allocation)> = Vec::new();
         let x_last = self.forward(mb, Some(&mut stash))?;
 
         // ---- head: fused loss fwd+bwd ----
         let labels = lit_i32(&mb.labels, &[mb.batch, mb.seq])?;
-        let head_w = self.layer_literals(head_idx)?;
+        let head_w = self.layer_values(head_idx)?;
         let mut args = vec![x_last];
         args.extend(head_w);
         args.push(labels);
-        let out = self.exe.head_loss.run(&args)?;
+        let out = self.exe.head_loss.run_v(&args)?;
         let loss = scalar_f32(&out[0])?;
         let mut dx = out[1].clone();
         {
@@ -179,8 +180,8 @@ impl TrainerCore {
             }
             let (x_in, act_guard) = stash.pop().context("activation stash underflow")?;
             let mut args = vec![x_in, dx];
-            args.extend(self.layer_literals(li)?);
-            let out = self.exe.block_bwd.run(&args)?;
+            args.extend(self.layer_values(li)?);
+            let out = self.exe.block_bwd.run_v(&args)?;
             drop(act_guard); // activation consumed
             dx = out[0].clone();
             // flatten the 12 per-tensor grads into the layer's flat order
@@ -196,7 +197,7 @@ impl TrainerCore {
 
         // ---- embedding ----
         let tokens = lit_i32(&mb.tokens, &[mb.batch, mb.seq])?;
-        let out = self.exe.embed_bwd.run(&[tokens, dx])?;
+        let out = self.exe.embed_bwd.run_v(&[tokens, dx])?;
         let embed_spec = &self.spec.layers[0];
         let mut grad = vec![0.0f32; embed_spec.flat_len];
         let _g = self.tracker.alloc(Category::Gradients, embed_spec.flat_len * 4);
@@ -217,9 +218,9 @@ impl TrainerCore {
             let x = self.forward(mb, None)?;
             let labels = lit_i32(&mb.labels, &[mb.batch, mb.seq])?;
             let mut args = vec![x];
-            args.extend(self.layer_literals(head_idx)?);
+            args.extend(self.layer_values(head_idx)?);
             args.push(labels);
-            let out = self.exe.head_eval.run(&args)?;
+            let out = self.exe.head_eval.run_v(&args)?;
             loss_sum += scalar_f32(&out[0])? as f64;
             correct += scalar_i32(&out[1])? as usize;
             total += mb.batch * mb.seq;
@@ -242,7 +243,7 @@ pub struct Trainer {
 impl Trainer {
     /// Build a trainer: resolve the model spec from the manifest, init
     /// parameters, construct the configured optimizer, compile artifacts.
-    pub fn new(lib: Arc<ArtifactLibrary>, cfg: TrainConfig) -> Result<Self> {
+    pub fn new(lib: Arc<Library>, cfg: TrainConfig) -> Result<Self> {
         cfg.validate()?;
         let tracker = MemoryTracker::new();
         Self::with_tracker(lib, cfg, tracker)
@@ -250,7 +251,7 @@ impl Trainer {
 
     /// As [`Trainer::new`] but sharing an external tracker (DP workers).
     pub fn with_tracker(
-        lib: Arc<ArtifactLibrary>,
+        lib: Arc<Library>,
         cfg: TrainConfig,
         tracker: MemoryTracker,
     ) -> Result<Self> {
@@ -258,7 +259,7 @@ impl Trainer {
         let spec = ModelSpec::from_manifest(&cfg.model, &entry)?;
         let params = init_params(&spec, cfg.seed, &tracker);
         let opt = build_optimizer(&cfg, &spec, &lib, &tracker)?;
-        let exe = ModelExecutables::load(&lib, &cfg.model)
+        let exe = ModelPrograms::load(&lib, &cfg.model)
             .with_context(|| format!("loading model artifacts for '{}'", cfg.model))?;
         let core = TrainerCore { lib, cfg, spec, params, tracker, exe };
         Ok(Self { core, opt, metrics: Metrics::new(), step: 0 })
@@ -267,7 +268,7 @@ impl Trainer {
     /// Build with an externally-managed optimizer (e.g. [`crate::optim::NullOpt`]
     /// for ZeRO-S1 flows where state lives in shards outside the trainer).
     pub fn with_optimizer(
-        lib: Arc<ArtifactLibrary>,
+        lib: Arc<Library>,
         cfg: TrainConfig,
         tracker: MemoryTracker,
         opt: Box<dyn Optimizer>,
@@ -275,7 +276,7 @@ impl Trainer {
         let entry = lib.manifest().model_config(&cfg.model)?.clone();
         let spec = ModelSpec::from_manifest(&cfg.model, &entry)?;
         let params = init_params(&spec, cfg.seed, &tracker);
-        let exe = ModelExecutables::load(&lib, &cfg.model)
+        let exe = ModelPrograms::load(&lib, &cfg.model)
             .with_context(|| format!("loading model artifacts for '{}'", cfg.model))?;
         let core = TrainerCore { lib, cfg, spec, params, tracker, exe };
         Ok(Self { core, opt, metrics: Metrics::new(), step: 0 })
@@ -311,7 +312,7 @@ impl Trainer {
         self.core.params_mut()
     }
 
-    pub fn library(&self) -> &Arc<ArtifactLibrary> {
+    pub fn library(&self) -> &Arc<Library> {
         self.core.library()
     }
 

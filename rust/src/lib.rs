@@ -2,22 +2,46 @@
 //!
 //! Reproduction of *"Adam Accumulation to Reduce Memory Footprints of both
 //! Activations and Gradients for Large-scale DNN Training"* (Zhang et al.,
-//! 2023) as a three-layer rust + JAX + Pallas stack:
+//! 2023) as a multi-backend training system.
 //!
-//! * **L1/L2 (build time)** — Pallas optimizer kernels and a per-layer
-//!   transformer LM, AOT-lowered to HLO text by `python/compile/aot.py`.
-//! * **L3 (this crate)** — the training coordinator: micro-batch
-//!   scheduling, layer-by-layer backward with immediate gradient release,
-//!   optimizer-state accumulation (the paper's contribution), in-process
-//!   data-parallel workers with optimizer-state all-reduce (Eq. 5–8),
-//!   ZeRO-S1 partitioning, category-exact memory accounting, and an
-//!   analytic memory model that regenerates the paper's tables/figures.
+//! ## Architecture: the backend seam
 //!
-//! Python never runs on the training path: the [`runtime`] module loads
-//! the AOT artifacts through the PJRT C API (`xla` crate) and executes
-//! them from rust.
+//! The training stack is layered over the [`runtime`] execution seam
+//! (`Value` / `Arg` / `Program` / `Executor`):
 //!
-//! Start with [`coordinator::Trainer`] (see `examples/quickstart.rs`).
+//! * **coordinator** — the paper's Algorithm 2: micro-batch scheduling,
+//!   layer-by-layer backward with immediate gradient release,
+//!   category-exact memory accounting. Speaks only `runtime::Value`.
+//! * **optim** — the optimizer zoo (AdamA, Adam+GA, Adafactor, SM3,
+//!   SGDM-A). Update arithmetic dispatches through `runtime::Program`
+//!   (chunked kernel path) or direct host loops (`optim::host_math`).
+//! * **collective** — in-process data-parallel workers with
+//!   optimizer-state all-reduce (Eq. 5–8) and ZeRO-S1 partitioning.
+//! * **runtime** — `Library` resolves manifest program names through one
+//!   of two `Executor` backends:
+//!     * `hostexec` (default): pure-rust reference implementations of the
+//!       optimizer kernels, the per-layer transformer LM and the MLP
+//!       classifier. Zero native dependencies — everything in this crate,
+//!       including the distributed simulators, runs on a clean machine.
+//!     * `pjrt` (cargo feature `pjrt`): executes the AOT HLO artifacts
+//!       produced by `python/compile/aot.py` through the PJRT C API.
+//!       Builds against the `vendor/xla` stub by default; patch in the
+//!       real bindings to execute artifacts.
+//!
+//! ## Feature flags & backend selection
+//!
+//! | build | behaviour |
+//! |---|---|
+//! | default | host executor + built-in manifest (`Manifest::builtin`) |
+//! | `--features pjrt` + artifacts | PJRT over `$ADAMA_ARTIFACTS` / `./artifacts` |
+//! | `ADAMA_BACKEND=host` | force the host executor even with `pjrt` |
+//! | `ADAMA_BACKEND=pjrt` | require PJRT; fail loudly instead of falling back |
+//!
+//! Python never runs on the training path; with default features nothing
+//! outside this workspace runs at all.
+//!
+//! Start with [`coordinator::Trainer`] / [`coordinator::MlpTrainer`]
+//! (see `examples/quickstart.rs`).
 
 pub mod collective;
 pub mod config;
@@ -34,4 +58,4 @@ pub mod util;
 pub use config::{OptimizerKind, TrainConfig};
 pub use coordinator::Trainer;
 pub use memory::{Category, MemoryTracker};
-pub use runtime::{ArtifactLibrary, Engine};
+pub use runtime::{ArtifactLibrary, Library};

@@ -319,7 +319,7 @@ mod tests {
 
     #[test]
     fn from_real_manifest_if_present() {
-        let root = crate::runtime::ArtifactLibrary::default_root();
+        let root = crate::runtime::Library::default_root();
         let Ok(m) = Manifest::load(root.join("manifest.json")) else { return };
         let entry = m.model_config("tiny").unwrap();
         let spec = ModelSpec::from_manifest("tiny", entry).unwrap();

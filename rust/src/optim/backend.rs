@@ -1,27 +1,37 @@
-//! Update arithmetic backends: AOT Pallas kernels (via PJRT) or host loops.
+//! Update arithmetic backends: chunked kernel programs (host or PJRT,
+//! dispatched through [`Program`]) or direct host loops.
 //!
 //! The kernel backend buckets a layer's flat buffer into fixed-size chunks
 //! (tail zero-padded into reusable scratch), mirroring fused-Adam-over-
 //! flat-buffer designs. Padding is safe by construction: zero (m, v, g)
 //! chunks stay zero through every kernel, and `adam_update` on zero state
 //! leaves parameters untouched (0/(sqrt(0)+eps) = 0).
+//!
+//! `host_math` — the scalar reference kernels — now lives with the host
+//! executor (`runtime::hostexec::kernels`) and is re-exported here, so on
+//! the host backend the kernel-dispatch path and the direct-loop path are
+//! bit-for-bit identical.
 
 use std::sync::Arc;
 
 use anyhow::Result;
 
+/// Pure-rust reference kernel math (ablation baseline; also used by the
+/// comparator optimizers, collectives and tests).
+pub use crate::runtime::hostexec::kernels as host_math;
+
 use super::Hyper;
-use crate::runtime::{lit_f32, Arg, ArtifactLibrary, Executable};
+use crate::runtime::{lit_f32, Arg, Library, Program, Value};
 use crate::tensor::chunk_ranges;
 
-/// Dispatcher between the PJRT kernel path and host math.
+/// Dispatcher between the chunked kernel-program path and host math.
 pub enum UpdateBackend {
     Kernel(ChunkRunner),
     Host(Hyper),
 }
 
 impl UpdateBackend {
-    pub fn kernel(lib: Arc<ArtifactLibrary>, chunk: usize) -> Result<Self> {
+    pub fn kernel(lib: Arc<Library>, chunk: usize) -> Result<Self> {
         Ok(Self::Kernel(ChunkRunner::new(lib, chunk)?))
     }
 
@@ -170,28 +180,29 @@ impl UpdateBackend {
     }
 }
 
-/// Chunked execution of the `common/*` optimizer artifacts.
+/// Chunked execution of the `common/*` optimizer kernel programs (backend
+/// neutral — the same code drives PJRT artifacts and host kernels).
 pub struct ChunkRunner {
     chunk: usize,
-    acc: Arc<Executable>,
-    decay_acc: Arc<Executable>,
-    decay: Arc<Executable>,
-    update: Arc<Executable>,
-    full: Arc<Executable>,
-    gacc: Arc<Executable>,
-    adamw: Arc<Executable>,
-    sgdm_dacc: Arc<Executable>,
-    sgdm_acc_exe: Arc<Executable>,
-    sgdm_upd: Arc<Executable>,
+    acc: Arc<dyn Program>,
+    decay_acc: Arc<dyn Program>,
+    decay: Arc<dyn Program>,
+    update: Arc<dyn Program>,
+    full: Arc<dyn Program>,
+    gacc: Arc<dyn Program>,
+    adamw: Arc<dyn Program>,
+    sgdm_dacc: Arc<dyn Program>,
+    sgdm_acc_prog: Arc<dyn Program>,
+    sgdm_upd: Arc<dyn Program>,
     // reusable zero-padded scratch (one per operand slot)
     scratch: Vec<Vec<f32>>,
 }
 
 impl ChunkRunner {
-    pub fn new(lib: Arc<ArtifactLibrary>, chunk: usize) -> Result<Self> {
+    pub fn new(lib: Arc<Library>, chunk: usize) -> Result<Self> {
         anyhow::ensure!(
             lib.manifest().chunk_sizes.contains(&chunk),
-            "chunk {} not in AOT set {:?}",
+            "chunk {} not in kernel set {:?}",
             chunk,
             lib.manifest().chunk_sizes
         );
@@ -204,7 +215,7 @@ impl ChunkRunner {
             gacc: lib.get(&format!("common/grad_acc_{chunk}"))?,
             adamw: lib.get(&format!("common/adamw_update_{chunk}"))?,
             sgdm_dacc: lib.get(&format!("common/sgdm_decay_acc_{chunk}"))?,
-            sgdm_acc_exe: lib.get(&format!("common/sgdm_acc_{chunk}"))?,
+            sgdm_acc_prog: lib.get(&format!("common/sgdm_acc_{chunk}"))?,
             sgdm_upd: lib.get(&format!("common/sgdm_update_{chunk}"))?,
             scratch: vec![vec![0.0; chunk]; 4],
             chunk,
@@ -215,10 +226,10 @@ impl ChunkRunner {
         self.chunk
     }
 
-    /// Literal for `src[off..off+len]`: full chunks are created straight
-    /// from the source slice (one memcpy into XLA storage, no staging);
-    /// only the tail chunk goes through a zero-padded scratch buffer.
-    fn chunk_lit(&mut self, slot: usize, src: &[f32], off: usize, len: usize) -> Result<xla::Literal> {
+    /// Value for `src[off..off+len]`: full chunks are created straight
+    /// from the source slice (one memcpy); only the tail chunk goes
+    /// through a zero-padded scratch buffer.
+    fn chunk_value(&mut self, slot: usize, src: &[f32], off: usize, len: usize) -> Result<Value> {
         if len == self.chunk {
             return lit_f32(&src[off..off + len], &[self.chunk]);
         }
@@ -228,7 +239,7 @@ impl ChunkRunner {
         lit_f32(buf, &[self.chunk])
     }
 
-    /// Fused decay+accumulate chunk sweep (slice->buffer fast path).
+    /// Fused decay+accumulate chunk sweep (slice->backend fast path).
     pub fn adama_decay_acc(
         &mut self,
         m: &mut [f32],
@@ -252,7 +263,7 @@ impl ChunkRunner {
             } else {
                 (&self.scratch[0][..], &self.scratch[1][..], &self.scratch[2][..])
             };
-            let out = self.decay_acc.run_args(&[
+            let out = self.decay_acc.run(&[
                 Arg::F32(a0, &shape),
                 Arg::F32(a1, &shape),
                 Arg::F32(a2, &shape),
@@ -282,7 +293,7 @@ impl ChunkRunner {
             } else {
                 (&self.scratch[0][..], &self.scratch[1][..], &self.scratch[2][..])
             };
-            let out = self.acc.run_args(&[
+            let out = self.acc.run(&[
                 Arg::F32(a0, &shape),
                 Arg::F32(a1, &shape),
                 Arg::F32(a2, &shape),
@@ -297,12 +308,12 @@ impl ChunkRunner {
     pub fn adama_decay(&mut self, m: &mut [f32], v: &mut [f32], ms: f32, vs: f32) -> Result<()> {
         for (off, len) in chunk_ranges(m.len(), self.chunk) {
             let args = [
-                self.chunk_lit(0, m, off, len)?,
-                self.chunk_lit(1, v, off, len)?,
+                self.chunk_value(0, m, off, len)?,
+                self.chunk_value(1, v, off, len)?,
                 lit_f32(&[ms], &[1])?,
                 lit_f32(&[vs], &[1])?,
             ];
-            let out = self.decay.run(&args)?;
+            let out = self.decay.run_v(&args)?;
             crate::runtime::copy_chunk(&out[0], &mut m[off..off + len])?;
             crate::runtime::copy_chunk(&out[1], &mut v[off..off + len])?;
         }
@@ -332,7 +343,7 @@ impl ChunkRunner {
             } else {
                 (&self.scratch[0][..], &self.scratch[1][..], &self.scratch[2][..])
             };
-            let out = self.update.run_args(&[
+            let out = self.update.run(&[
                 Arg::F32(a0, &shape),
                 Arg::F32(a1, &shape),
                 Arg::F32(a2, &shape),
@@ -356,13 +367,13 @@ impl ChunkRunner {
     ) -> Result<()> {
         for (off, len) in chunk_ranges(p.len(), self.chunk) {
             let args = [
-                self.chunk_lit(0, p, off, len)?,
-                self.chunk_lit(1, m, off, len)?,
-                self.chunk_lit(2, v, off, len)?,
-                self.chunk_lit(3, g, off, len)?,
+                self.chunk_value(0, p, off, len)?,
+                self.chunk_value(1, m, off, len)?,
+                self.chunk_value(2, v, off, len)?,
+                self.chunk_value(3, g, off, len)?,
                 lit_f32(&[lr, bc1, bc2], &[3])?,
             ];
-            let out = self.full.run(&args)?;
+            let out = self.full.run_v(&args)?;
             crate::runtime::copy_chunk(&out[0], &mut p[off..off + len])?;
             crate::runtime::copy_chunk(&out[1], &mut m[off..off + len])?;
             crate::runtime::copy_chunk(&out[2], &mut v[off..off + len])?;
@@ -373,11 +384,11 @@ impl ChunkRunner {
     pub fn grad_acc(&mut self, acc: &mut [f32], g: &[f32], gscale: f32) -> Result<()> {
         for (off, len) in chunk_ranges(acc.len(), self.chunk) {
             let args = [
-                self.chunk_lit(0, acc, off, len)?,
-                self.chunk_lit(1, g, off, len)?,
+                self.chunk_value(0, acc, off, len)?,
+                self.chunk_value(1, g, off, len)?,
                 lit_f32(&[gscale], &[1])?,
             ];
-            let out = self.gacc.run(&args)?;
+            let out = self.gacc.run_v(&args)?;
             crate::runtime::copy_chunk(&out[0], &mut acc[off..off + len])?;
         }
         Ok(())
@@ -398,12 +409,12 @@ impl ChunkRunner {
     ) -> Result<()> {
         for (off, len) in chunk_ranges(p.len(), self.chunk) {
             let args = [
-                self.chunk_lit(0, p, off, len)?,
-                self.chunk_lit(1, m, off, len)?,
-                self.chunk_lit(2, v, off, len)?,
+                self.chunk_value(0, p, off, len)?,
+                self.chunk_value(1, m, off, len)?,
+                self.chunk_value(2, v, off, len)?,
                 lit_f32(&[lr, bc1, bc2, wd], &[4])?,
             ];
-            let out = self.adamw.run(&args)?;
+            let out = self.adamw.run_v(&args)?;
             crate::runtime::copy_chunk(&out[0], &mut p[off..off + len])?;
         }
         Ok(())
@@ -412,11 +423,11 @@ impl ChunkRunner {
     pub fn sgdm_decay_acc(&mut self, u: &mut [f32], g: &[f32], gscale: f32, mu: f32) -> Result<()> {
         for (off, len) in chunk_ranges(u.len(), self.chunk) {
             let args = [
-                self.chunk_lit(0, u, off, len)?,
-                self.chunk_lit(1, g, off, len)?,
+                self.chunk_value(0, u, off, len)?,
+                self.chunk_value(1, g, off, len)?,
                 lit_f32(&[gscale, mu], &[2])?,
             ];
-            let out = self.sgdm_dacc.run(&args)?;
+            let out = self.sgdm_dacc.run_v(&args)?;
             crate::runtime::copy_chunk(&out[0], &mut u[off..off + len])?;
         }
         Ok(())
@@ -425,11 +436,11 @@ impl ChunkRunner {
     pub fn sgdm_acc(&mut self, u: &mut [f32], g: &[f32], gscale: f32) -> Result<()> {
         for (off, len) in chunk_ranges(u.len(), self.chunk) {
             let args = [
-                self.chunk_lit(0, u, off, len)?,
-                self.chunk_lit(1, g, off, len)?,
+                self.chunk_value(0, u, off, len)?,
+                self.chunk_value(1, g, off, len)?,
                 lit_f32(&[gscale], &[1])?,
             ];
-            let out = self.sgdm_acc_exe.run(&args)?;
+            let out = self.sgdm_acc_prog.run_v(&args)?;
             crate::runtime::copy_chunk(&out[0], &mut u[off..off + len])?;
         }
         Ok(())
@@ -438,11 +449,11 @@ impl ChunkRunner {
     pub fn sgdm_update(&mut self, p: &mut [f32], u: &[f32], lr: f32, wd: f32) -> Result<()> {
         for (off, len) in chunk_ranges(p.len(), self.chunk) {
             let args = [
-                self.chunk_lit(0, p, off, len)?,
-                self.chunk_lit(1, u, off, len)?,
+                self.chunk_value(0, p, off, len)?,
+                self.chunk_value(1, u, off, len)?,
                 lit_f32(&[lr, wd], &[2])?,
             ];
-            let out = self.sgdm_upd.run(&args)?;
+            let out = self.sgdm_upd.run_v(&args)?;
             crate::runtime::copy_chunk(&out[0], &mut p[off..off + len])?;
         }
         Ok(())
@@ -455,150 +466,39 @@ fn stage(buf: &mut [f32], src: &[f32]) {
     buf[src.len()..].fill(0.0);
 }
 
-/// Pure-rust reference implementations (ablation baseline; also used by
-/// the comparator optimizers and tests).
-pub mod host_math {
-    pub fn adama_acc(m: &mut [f32], v: &mut [f32], g: &[f32], gscale: f32, b1: f32, b2: f32) {
-        for i in 0..m.len() {
-            let sg = g[i] * gscale;
-            m[i] += (1.0 - b1) * sg;
-            v[i] += (1.0 - b2) * sg * sg;
-        }
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    pub fn adama_decay_acc(
-        m: &mut [f32],
-        v: &mut [f32],
-        g: &[f32],
-        gscale: f32,
-        ms: f32,
-        vs: f32,
-        b1: f32,
-        b2: f32,
-    ) {
-        for i in 0..m.len() {
-            let sg = g[i] * gscale;
-            m[i] = ms * m[i] + (1.0 - b1) * sg;
-            v[i] = vs * v[i] + (1.0 - b2) * sg * sg;
-        }
-    }
-
-    pub fn scale(x: &mut [f32], s: f32) {
-        for a in x.iter_mut() {
-            *a *= s;
-        }
-    }
-
-    pub fn adam_update(p: &mut [f32], m: &[f32], v: &[f32], lr: f32, bc1: f32, bc2: f32, eps: f32) {
-        for i in 0..p.len() {
-            p[i] -= lr * (m[i] / bc1) / ((v[i] / bc2).sqrt() + eps);
-        }
-    }
-
-    #[allow(clippy::too_many_arguments)]
-    pub fn adam_full(
-        p: &mut [f32],
-        m: &mut [f32],
-        v: &mut [f32],
-        g: &[f32],
-        lr: f32,
-        bc1: f32,
-        bc2: f32,
-        b1: f32,
-        b2: f32,
-        eps: f32,
-    ) {
-        for i in 0..p.len() {
-            m[i] = b1 * m[i] + (1.0 - b1) * g[i];
-            v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
-            p[i] -= lr * (m[i] / bc1) / ((v[i] / bc2).sqrt() + eps);
-        }
-    }
-
-    pub fn grad_acc(acc: &mut [f32], g: &[f32], gscale: f32) {
-        for i in 0..acc.len() {
-            acc[i] += g[i] * gscale;
-        }
-    }
-
-    // ---- §5 extensions ----
-
-    #[allow(clippy::too_many_arguments)]
-    pub fn adamw_update(
-        p: &mut [f32], m: &[f32], v: &[f32],
-        lr: f32, bc1: f32, bc2: f32, wd: f32, eps: f32,
-    ) {
-        for i in 0..p.len() {
-            p[i] -= lr * ((m[i] / bc1) / ((v[i] / bc2).sqrt() + eps) + wd * p[i]);
-        }
-    }
-
-    pub fn sgdm_decay_acc(u: &mut [f32], g: &[f32], gscale: f32, mu: f32) {
-        for i in 0..u.len() {
-            u[i] = mu * u[i] + gscale * g[i];
-        }
-    }
-
-    pub fn sgdm_acc(u: &mut [f32], g: &[f32], gscale: f32) {
-        for i in 0..u.len() {
-            u[i] += gscale * g[i];
-        }
-    }
-
-    pub fn sgdm_update(p: &mut [f32], u: &[f32], lr: f32, wd: f32) {
-        for i in 0..p.len() {
-            p[i] -= lr * (u[i] + wd * p[i]);
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
-    fn host_adama_acc_math() {
-        let mut m = vec![0.0, 1.0];
-        let mut v = vec![0.0, 2.0];
-        host_math::adama_acc(&mut m, &mut v, &[4.0, -4.0], 0.5, 0.9, 0.999);
-        assert!((m[0] - 0.2).abs() < 1e-6);
-        assert!((m[1] - 0.8).abs() < 1e-6);
-        assert!((v[0] - 0.004).abs() < 1e-6);
-        assert!((v[1] - 2.004).abs() < 1e-6);
+    fn kernel_runner_matches_host_loops_including_tails() {
+        // buffer length deliberately NOT a multiple of the chunk so the
+        // zero-padded tail path is exercised
+        let lib = Library::host();
+        let chunk = *lib.manifest().chunk_sizes.first().unwrap();
+        let (b1, b2) =
+            (lib.manifest().hyper.beta1 as f32, lib.manifest().hyper.beta2 as f32);
+        let n = chunk + chunk / 2 + 7;
+        let mut runner = ChunkRunner::new(lib, chunk).unwrap();
+
+        let mut rng = crate::tensor::Rng::new(3);
+        let m0: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let v0: Vec<f32> = (0..n).map(|_| rng.normal().abs()).collect();
+        let g: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+
+        let (mut mk, mut vk) = (m0.clone(), v0.clone());
+        runner.adama_acc(&mut mk, &mut vk, &g, 0.25).unwrap();
+
+        let (mut mh, mut vh) = (m0, v0);
+        host_math::adama_acc(&mut mh, &mut vh, &g, 0.25, b1, b2);
+
+        assert_eq!(mk, mh, "kernel path must be bit-identical to host math");
+        assert_eq!(vk, vh);
     }
 
     #[test]
-    fn host_adam_update_is_standard() {
-        let mut p = vec![1.0];
-        host_math::adam_update(&mut p, &[0.1], &[0.001], 0.01, 0.1, 0.001, 1e-8);
-        // mhat=1, vhat=1 -> step = lr
-        assert!((p[0] - 0.99).abs() < 1e-5);
-    }
-
-    #[test]
-    fn host_full_step_equals_acc_plus_update_when_n1() {
-        // AdamA(N=1) == Adam: decay + single accumulate + update must equal
-        // the fused full step.
-        let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
-        let g = vec![0.3, -0.7, 2.0];
-        let mut p1 = vec![1.0, 2.0, 3.0];
-        let mut m1 = vec![0.05, -0.02, 0.0];
-        let mut v1 = vec![0.01, 0.02, 0.0];
-        let (mut p2, mut m2, mut v2) = (p1.clone(), m1.clone(), v1.clone());
-        let (lr, bc1, bc2) = (0.01, 0.1, 0.001);
-
-        host_math::adam_full(&mut p1, &mut m1, &mut v1, &g, lr, bc1, bc2, b1, b2, eps);
-
-        host_math::scale(&mut m2, b1);
-        host_math::scale(&mut v2, b2);
-        host_math::adama_acc(&mut m2, &mut v2, &g, 1.0, b1, b2);
-        host_math::adam_update(&mut p2, &m2, &v2, lr, bc1, bc2, eps);
-
-        for i in 0..3 {
-            assert!((p1[i] - p2[i]).abs() < 1e-6);
-            assert!((m1[i] - m2[i]).abs() < 1e-6);
-            assert!((v1[i] - v2[i]).abs() < 1e-7);
-        }
+    fn rejects_unknown_chunk_size() {
+        let lib = Library::host();
+        assert!(ChunkRunner::new(lib, 12345).is_err());
     }
 }

@@ -33,7 +33,7 @@ use anyhow::Result;
 use crate::config::{OptimBackend, OptimizerKind, TrainConfig};
 use crate::memory::MemoryTracker;
 use crate::model::{LayerParams, ModelSpec};
-use crate::runtime::ArtifactLibrary;
+use crate::runtime::Library;
 
 /// Adam hyper-parameters (from the manifest; baked into the kernels).
 #[derive(Debug, Clone, Copy)]
@@ -49,8 +49,12 @@ impl Hyper {
     }
 
     /// Bias corrections (1-β₁ᵗ, 1-β₂ᵗ) at 1-based step `t`.
+    ///
+    /// Uses `powf`: the previous `powi(t as i32)` wrapped for
+    /// `t > i32::MAX`, flipping β₁ᵗ to a huge β₁⁻ᵏ and producing negative
+    /// corrections deep into long runs.
     pub fn bias_corrections(&self, t: u64) -> (f32, f32) {
-        (1.0 - self.beta1.powi(t as i32), 1.0 - self.beta2.powi(t as i32))
+        (1.0 - self.beta1.powf(t as f32), 1.0 - self.beta2.powf(t as f32))
     }
 }
 
@@ -133,7 +137,7 @@ impl Optimizer for NullOpt {
 pub fn build_optimizer(
     cfg: &TrainConfig,
     spec: &ModelSpec,
-    lib: &Arc<ArtifactLibrary>,
+    lib: &Arc<Library>,
     tracker: &MemoryTracker,
 ) -> Result<Box<dyn Optimizer>> {
     let hyper = Hyper::from_manifest(lib.manifest());
@@ -170,5 +174,35 @@ mod tests {
         assert!((b2 - 0.001).abs() < 1e-6);
         let (b1, _) = h.bias_corrections(100);
         assert!(b1 > 0.9999);
+    }
+
+    #[test]
+    fn bias_corrections_no_overflow_past_i32_max_steps() {
+        // Regression: powi(t as i32) wrapped for t > i32::MAX, producing
+        // corrections far outside (0, 1].
+        let h = Hyper { beta1: 0.9, beta2: 0.999, eps: 1e-8 };
+        let t = i32::MAX as u64 + 12345;
+        let (b1, b2) = h.bias_corrections(t);
+        assert!((0.0..=1.0).contains(&b1), "bc1 {b1} out of range at t={t}");
+        assert!((0.0..=1.0).contains(&b2), "bc2 {b2} out of range at t={t}");
+        assert!(b1 > 0.999_999, "bc1 must saturate toward 1, got {b1}");
+        assert!(b2 > 0.999_999, "bc2 must saturate toward 1, got {b2}");
+        // monotone across the i32 boundary
+        let (early, _) = h.bias_corrections(1);
+        assert!(early < b1);
+    }
+
+    #[test]
+    fn null_opt_accumulate_errors_loudly() {
+        let mut opt = NullOpt;
+        opt.begin_minibatch(1).unwrap();
+        let err = opt.accumulate(0, &[1.0, 2.0], 0.5).unwrap_err();
+        assert!(
+            format!("{err:?}").contains("external sink"),
+            "NullOpt must explain itself: {err:?}"
+        );
+        // apply stays a no-op
+        assert!(opt.apply(&mut [], 1e-3).is_ok());
+        assert_eq!(opt.state_bytes(), 0);
     }
 }

@@ -1,0 +1,288 @@
+//! Backend-neutral execution interface: [`Value`], [`Arg`], [`Program`]
+//! and [`Executor`].
+//!
+//! This is the seam that decouples the training stack from any particular
+//! runtime. The coordinator, optimizers and collectives speak only these
+//! types; `runtime::hostexec` implements them in pure rust (the default),
+//! and `runtime::pjrt` (cargo feature `pjrt`) implements them over the
+//! PJRT C API and the AOT HLO artifacts.
+
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::manifest::{ArtifactEntry, Manifest};
+
+/// An owned host tensor crossing the executor boundary (f32 or s32, the
+/// only dtypes the artifact set uses). Replaces the raw PJRT literal type
+/// in all public signatures.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+}
+
+impl Value {
+    /// f32 value with the given logical shape.
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Result<Self> {
+        ensure!(
+            shape.iter().product::<usize>() == data.len(),
+            "shape {:?} != data len {}",
+            shape,
+            data.len()
+        );
+        Ok(Self::F32 { data, shape: shape.to_vec() })
+    }
+
+    /// i32 value with the given logical shape.
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Result<Self> {
+        ensure!(
+            shape.iter().product::<usize>() == data.len(),
+            "shape {:?} != data len {}",
+            shape,
+            data.len()
+        );
+        Ok(Self::I32 { data, shape: shape.to_vec() })
+    }
+
+    /// Rank-0 f32 scalar (losses).
+    pub fn scalar_f32(x: f32) -> Self {
+        Self::F32 { data: vec![x], shape: Vec::new() }
+    }
+
+    /// Rank-0 i32 scalar (counts).
+    pub fn scalar_i32(x: i32) -> Self {
+        Self::I32 { data: vec![x], shape: Vec::new() }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Self::F32 { shape, .. } | Self::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Self::F32 { data, .. } => data.len(),
+            Self::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Self::F32 { .. } => "f32",
+            Self::I32 { .. } => "s32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Self::F32 { data, .. } => Ok(data),
+            Self::I32 { .. } => bail!("expected f32 value, got s32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Self::I32 { data, .. } => Ok(data),
+            Self::F32 { .. } => bail!("expected s32 value, got f32"),
+        }
+    }
+
+    /// First element of an f32 value (rank-0 or rank-1 scalars).
+    pub fn first_f32(&self) -> Result<f32> {
+        self.as_f32()?.first().copied().context("empty f32 value")
+    }
+
+    /// First element of an i32 value.
+    pub fn first_i32(&self) -> Result<i32> {
+        self.as_i32()?.first().copied().context("empty i32 value")
+    }
+
+    /// Borrow as a program argument.
+    pub fn as_arg(&self) -> Arg<'_> {
+        match self {
+            Self::F32 { data, shape } => Arg::F32(data, shape),
+            Self::I32 { data, shape } => Arg::I32(data, shape),
+        }
+    }
+}
+
+/// A borrowed host-array argument for [`Program::run`] — the
+/// zero-intermediate-copy input path (host slice → backend).
+#[derive(Debug, Clone, Copy)]
+pub enum Arg<'a> {
+    F32(&'a [f32], &'a [usize]),
+    I32(&'a [i32], &'a [usize]),
+}
+
+impl<'a> Arg<'a> {
+    pub fn shape(&self) -> &'a [usize] {
+        match *self {
+            Arg::F32(_, s) | Arg::I32(_, s) => s,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match *self {
+            Arg::F32(d, _) => d.len(),
+            Arg::I32(d, _) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn f32(&self) -> Result<&'a [f32]> {
+        match *self {
+            Arg::F32(d, _) => Ok(d),
+            Arg::I32(..) => bail!("expected f32 argument, got s32"),
+        }
+    }
+
+    pub fn i32(&self) -> Result<&'a [i32]> {
+        match *self {
+            Arg::I32(d, _) => Ok(d),
+            Arg::F32(..) => bail!("expected s32 argument, got f32"),
+        }
+    }
+}
+
+/// A loaded, executable program (an AOT artifact on PJRT; a pure-rust
+/// implementation on the host executor). Thread-safe: worker threads in
+/// the data-parallel simulators share programs through `Arc`.
+pub trait Program: Send + Sync {
+    /// Execute with borrowed host-slice arguments; returns owned outputs.
+    fn run(&self, args: &[Arg<'_>]) -> Result<Vec<Value>>;
+
+    /// Execute with owned [`Value`] arguments (convenience over [`run`]).
+    ///
+    /// [`run`]: Program::run
+    fn run_v(&self, args: &[Value]) -> Result<Vec<Value>> {
+        let views: Vec<Arg<'_>> = args.iter().map(Value::as_arg).collect();
+        self.run(&views)
+    }
+}
+
+/// A program-loading backend. Implementations: `hostexec::HostExecutor`
+/// (pure rust, always available) and `pjrt::PjrtExecutor` (feature
+/// `pjrt`, compiles HLO artifacts).
+pub trait Executor: Send + Sync {
+    /// Human-readable backend name ("host", "cpu", ...).
+    fn platform(&self) -> String;
+
+    /// Resolve a manifest program name (e.g. `"common/adama_acc_16384"`,
+    /// `"tiny/block_fwd"`, `"mlp_small/mlp_train"`) into an executable.
+    fn load(
+        &self,
+        name: &str,
+        entry: &ArtifactEntry,
+        manifest: &Manifest,
+    ) -> Result<Arc<dyn Program>>;
+
+    /// Total program executions issued through this executor (perf
+    /// accounting; mirrors the PJRT execute-call counter).
+    fn exec_calls(&self) -> u64;
+}
+
+// ---------------------------------------------------------------------------
+// Construction/extraction helpers (the former `literal.rs` surface, now
+// backend-neutral).
+// ---------------------------------------------------------------------------
+
+/// f32 value with the given logical shape (single copy of the slice).
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<Value> {
+    Value::f32(data.to_vec(), shape)
+}
+
+/// i32 value with the given logical shape.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<Value> {
+    Value::i32(data.to_vec(), shape)
+}
+
+/// Rank-1 single-element f32 value (runtime scalar inputs use shape [1]).
+pub fn lit_scalar_f32(x: f32) -> Result<Value> {
+    Value::f32(vec![x], &[1])
+}
+
+/// Extract an f32 value (any rank) into a Vec.
+pub fn to_vec_f32(v: &Value) -> Result<Vec<f32>> {
+    Ok(v.as_f32()?.to_vec())
+}
+
+/// Extract an i32 value into a Vec.
+pub fn to_vec_i32(v: &Value) -> Result<Vec<i32>> {
+    Ok(v.as_i32()?.to_vec())
+}
+
+/// Copy a value into a caller-provided buffer (alloc-free extraction).
+pub fn copy_into_f32(v: &Value, dst: &mut [f32]) -> Result<()> {
+    let src = v.as_f32()?;
+    ensure!(src.len() == dst.len(), "value/dst length mismatch");
+    dst.copy_from_slice(src);
+    Ok(())
+}
+
+/// Copy the first `dst.len()` elements of a (possibly zero-padded) chunk
+/// value into `dst` — the tail-chunk extraction path of the optimizer
+/// kernels.
+pub fn copy_chunk(v: &Value, dst: &mut [f32]) -> Result<()> {
+    let src = v.as_f32()?;
+    if src.len() == dst.len() {
+        dst.copy_from_slice(src);
+        return Ok(());
+    }
+    ensure!(src.len() > dst.len(), "chunk value smaller than destination");
+    dst.copy_from_slice(&src[..dst.len()]);
+    Ok(())
+}
+
+/// f32 scalar extraction — for losses.
+pub fn scalar_f32(v: &Value) -> Result<f32> {
+    v.first_f32().context("scalar f32")
+}
+
+/// i32 scalar extraction — for correct-prediction counts.
+pub fn scalar_i32(v: &Value) -> Result<i32> {
+    v.first_i32().context("scalar i32")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_shape_checks() {
+        assert!(Value::f32(vec![1.0, 2.0], &[2]).is_ok());
+        assert!(Value::f32(vec![1.0, 2.0], &[3]).is_err());
+        let s = Value::scalar_f32(4.0);
+        assert_eq!(s.shape(), &[] as &[usize]);
+        assert_eq!(scalar_f32(&s).unwrap(), 4.0);
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let v = Value::i32(vec![1, 2], &[2]).unwrap();
+        assert!(v.as_f32().is_err());
+        assert_eq!(v.as_i32().unwrap(), &[1, 2]);
+        assert_eq!(v.dtype(), "s32");
+    }
+
+    #[test]
+    fn copy_chunk_handles_padded_tails() {
+        let v = Value::f32(vec![1.0, 2.0, 3.0, 0.0], &[4]).unwrap();
+        let mut dst = [0.0f32; 3];
+        copy_chunk(&v, &mut dst).unwrap();
+        assert_eq!(dst, [1.0, 2.0, 3.0]);
+        let mut exact = [0.0f32; 4];
+        copy_chunk(&v, &mut exact).unwrap();
+        assert_eq!(exact, [1.0, 2.0, 3.0, 0.0]);
+        let mut too_big = [0.0f32; 5];
+        assert!(copy_chunk(&v, &mut too_big).is_err());
+    }
+}

@@ -1,0 +1,375 @@
+//! Reference optimizer kernels — the host executor's `common/*` program
+//! set, mirroring `python/compile/kernels/ref.py` exactly.
+//!
+//! The free functions are the scalar reference math (re-exported as
+//! `optim::host_math` for the direct host-loop backend, comparator
+//! optimizers and tests); [`build`] wraps them as chunked [`Program`]s
+//! with the same positional signatures as the AOT artifacts, so the
+//! kernel-dispatch path (`ChunkRunner`) is bit-for-bit identical to the
+//! host-loop path.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::runtime::exec::{Arg, Program, Value};
+use crate::runtime::manifest::Hyper;
+
+// ---------------------------------------------------------------------------
+// scalar reference math (ref.py oracles)
+// ---------------------------------------------------------------------------
+
+/// AdamA inner-loop accumulation (Alg. 2): m += (1-β₁)·s·g, v += (1-β₂)·(s·g)².
+pub fn adama_acc(m: &mut [f32], v: &mut [f32], g: &[f32], gscale: f32, b1: f32, b2: f32) {
+    for i in 0..m.len() {
+        let sg = g[i] * gscale;
+        m[i] += (1.0 - b1) * sg;
+        v[i] += (1.0 - b2) * sg * sg;
+    }
+}
+
+/// Fused mini-batch-start decay + first micro-batch accumulation.
+#[allow(clippy::too_many_arguments)]
+pub fn adama_decay_acc(
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    gscale: f32,
+    ms: f32,
+    vs: f32,
+    b1: f32,
+    b2: f32,
+) {
+    for i in 0..m.len() {
+        let sg = g[i] * gscale;
+        m[i] = ms * m[i] + (1.0 - b1) * sg;
+        v[i] = vs * v[i] + (1.0 - b2) * sg * sg;
+    }
+}
+
+/// In-place scale (the mini-batch-start decay, Alg. 2 line 3).
+pub fn scale(x: &mut [f32], s: f32) {
+    for a in x.iter_mut() {
+        *a *= s;
+    }
+}
+
+/// Bias-corrected Adam parameter step shared by Adam and AdamA.
+pub fn adam_update(p: &mut [f32], m: &[f32], v: &[f32], lr: f32, bc1: f32, bc2: f32, eps: f32) {
+    for i in 0..p.len() {
+        p[i] -= lr * (m[i] / bc1) / ((v[i] / bc2).sqrt() + eps);
+    }
+}
+
+/// Baseline fused Adam step from a fully-accumulated gradient.
+#[allow(clippy::too_many_arguments)]
+pub fn adam_full(
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    lr: f32,
+    bc1: f32,
+    bc2: f32,
+    b1: f32,
+    b2: f32,
+    eps: f32,
+) {
+    for i in 0..p.len() {
+        m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+        v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+        p[i] -= lr * (m[i] / bc1) / ((v[i] / bc2).sqrt() + eps);
+    }
+}
+
+/// Gradient-accumulation baseline: acc += gscale · g.
+pub fn grad_acc(acc: &mut [f32], g: &[f32], gscale: f32) {
+    for i in 0..acc.len() {
+        acc[i] += g[i] * gscale;
+    }
+}
+
+// ---- §5 extensions ----
+
+/// AdamW (decoupled weight decay) parameter step.
+#[allow(clippy::too_many_arguments)]
+pub fn adamw_update(
+    p: &mut [f32],
+    m: &[f32],
+    v: &[f32],
+    lr: f32,
+    bc1: f32,
+    bc2: f32,
+    wd: f32,
+    eps: f32,
+) {
+    for i in 0..p.len() {
+        p[i] -= lr * ((m[i] / bc1) / ((v[i] / bc2).sqrt() + eps) + wd * p[i]);
+    }
+}
+
+/// Momentum-SGD accumulation, first micro-batch (fused decay).
+pub fn sgdm_decay_acc(u: &mut [f32], g: &[f32], gscale: f32, mu: f32) {
+    for i in 0..u.len() {
+        u[i] = mu * u[i] + gscale * g[i];
+    }
+}
+
+pub fn sgdm_acc(u: &mut [f32], g: &[f32], gscale: f32) {
+    for i in 0..u.len() {
+        u[i] += gscale * g[i];
+    }
+}
+
+pub fn sgdm_update(p: &mut [f32], u: &[f32], lr: f32, wd: f32) {
+    for i in 0..p.len() {
+        p[i] -= lr * (u[i] + wd * p[i]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Program wrappers (the `common/<op>_<chunk>` artifact signatures)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    AdamaAcc,
+    AdamaDecayAcc,
+    AdamaDecay,
+    AdamUpdate,
+    AdamFull,
+    GradAcc,
+    AdamaAccUpdate,
+    AdamwUpdate,
+    SgdmDecayAcc,
+    SgdmAcc,
+    SgdmUpdate,
+}
+
+struct Kernel {
+    kind: Kind,
+    b1: f32,
+    b2: f32,
+    eps: f32,
+}
+
+/// Resolve a `common/` short name (e.g. `"adama_decay_acc_16384"`) to its
+/// host program. The trailing chunk size is parsed but not enforced — the
+/// host kernels are shape-polymorphic over the buffer length.
+pub(super) fn build(short: &str, hyper: &Hyper) -> Result<Box<dyn Program>> {
+    let (op, chunk) = short
+        .rsplit_once('_')
+        .and_then(|(op, c)| c.parse::<usize>().ok().map(|c| (op, c)))
+        .with_context(|| format!("host executor: unparseable kernel name '{short}'"))?;
+    ensure!(chunk > 0, "kernel '{short}': zero chunk");
+    let kind = match op {
+        "adama_acc" => Kind::AdamaAcc,
+        "adama_decay_acc" => Kind::AdamaDecayAcc,
+        "adama_decay" => Kind::AdamaDecay,
+        "adam_update" => Kind::AdamUpdate,
+        "adam_full" => Kind::AdamFull,
+        "grad_acc" => Kind::GradAcc,
+        "adama_acc_update" => Kind::AdamaAccUpdate,
+        "adamw_update" => Kind::AdamwUpdate,
+        "sgdm_decay_acc" => Kind::SgdmDecayAcc,
+        "sgdm_acc" => Kind::SgdmAcc,
+        "sgdm_update" => Kind::SgdmUpdate,
+        other => bail!("host executor: unknown optimizer kernel '{other}'"),
+    };
+    Ok(Box::new(Kernel {
+        kind,
+        b1: hyper.beta1 as f32,
+        b2: hyper.beta2 as f32,
+        eps: hyper.eps as f32,
+    }))
+}
+
+/// Pull `args[idx]` as an f32 buffer and check it against the first
+/// buffer's length.
+fn buf<'a>(args: &[Arg<'a>], idx: usize, len: usize) -> Result<&'a [f32]> {
+    let a = args.get(idx).with_context(|| format!("kernel: missing argument #{idx}"))?;
+    let d = a.f32()?;
+    ensure!(d.len() == len, "kernel arg #{idx}: length {} != {}", d.len(), len);
+    Ok(d)
+}
+
+/// Pull the trailing scalar-vector argument with an exact length.
+fn scalars<'a>(args: &[Arg<'a>], idx: usize, n: usize) -> Result<&'a [f32]> {
+    let a = args.get(idx).with_context(|| format!("kernel: missing scalars #{idx}"))?;
+    let d = a.f32()?;
+    ensure!(d.len() == n, "kernel scalars #{idx}: length {} != {}", d.len(), n);
+    Ok(d)
+}
+
+fn out(data: Vec<f32>, shape: &[usize]) -> Value {
+    Value::F32 { data, shape: shape.to_vec() }
+}
+
+impl Program for Kernel {
+    fn run(&self, args: &[Arg<'_>]) -> Result<Vec<Value>> {
+        ensure!(!args.is_empty(), "kernel: no arguments");
+        let n = args[0].len();
+        let shape = args[0].shape();
+        let (b1, b2, eps) = (self.b1, self.b2, self.eps);
+        Ok(match self.kind {
+            Kind::AdamaAcc => {
+                let (mut m, mut v) = (buf(args, 0, n)?.to_vec(), buf(args, 1, n)?.to_vec());
+                let g = buf(args, 2, n)?;
+                let sc = scalars(args, 3, 1)?;
+                adama_acc(&mut m, &mut v, g, sc[0], b1, b2);
+                vec![out(m, shape), out(v, shape)]
+            }
+            Kind::AdamaDecayAcc => {
+                let (mut m, mut v) = (buf(args, 0, n)?.to_vec(), buf(args, 1, n)?.to_vec());
+                let g = buf(args, 2, n)?;
+                let sc = scalars(args, 3, 3)?; // [gscale, ms, vs]
+                adama_decay_acc(&mut m, &mut v, g, sc[0], sc[1], sc[2], b1, b2);
+                vec![out(m, shape), out(v, shape)]
+            }
+            Kind::AdamaDecay => {
+                let (mut m, mut v) = (buf(args, 0, n)?.to_vec(), buf(args, 1, n)?.to_vec());
+                let ms = scalars(args, 2, 1)?[0];
+                let vs = scalars(args, 3, 1)?[0];
+                scale(&mut m, ms);
+                scale(&mut v, vs);
+                vec![out(m, shape), out(v, shape)]
+            }
+            Kind::AdamUpdate => {
+                let mut p = buf(args, 0, n)?.to_vec();
+                let m = buf(args, 1, n)?;
+                let v = buf(args, 2, n)?;
+                let sc = scalars(args, 3, 3)?; // [lr, bc1, bc2]
+                adam_update(&mut p, m, v, sc[0], sc[1], sc[2], eps);
+                vec![out(p, shape)]
+            }
+            Kind::AdamFull => {
+                let mut p = buf(args, 0, n)?.to_vec();
+                let (mut m, mut v) = (buf(args, 1, n)?.to_vec(), buf(args, 2, n)?.to_vec());
+                let g = buf(args, 3, n)?;
+                let sc = scalars(args, 4, 3)?;
+                adam_full(&mut p, &mut m, &mut v, g, sc[0], sc[1], sc[2], b1, b2, eps);
+                vec![out(p, shape), out(m, shape), out(v, shape)]
+            }
+            Kind::GradAcc => {
+                let mut acc = buf(args, 0, n)?.to_vec();
+                let g = buf(args, 1, n)?;
+                let sc = scalars(args, 2, 1)?;
+                grad_acc(&mut acc, g, sc[0]);
+                vec![out(acc, shape)]
+            }
+            Kind::AdamaAccUpdate => {
+                let mut p = buf(args, 0, n)?.to_vec();
+                let (mut m, mut v) = (buf(args, 1, n)?.to_vec(), buf(args, 2, n)?.to_vec());
+                let g = buf(args, 3, n)?;
+                let gscale = scalars(args, 4, 1)?[0];
+                let sc = scalars(args, 5, 3)?;
+                adama_acc(&mut m, &mut v, g, gscale, b1, b2);
+                adam_update(&mut p, &m, &v, sc[0], sc[1], sc[2], eps);
+                vec![out(p, shape), out(m, shape), out(v, shape)]
+            }
+            Kind::AdamwUpdate => {
+                let mut p = buf(args, 0, n)?.to_vec();
+                let m = buf(args, 1, n)?;
+                let v = buf(args, 2, n)?;
+                let sc = scalars(args, 3, 4)?; // [lr, bc1, bc2, wd]
+                adamw_update(&mut p, m, v, sc[0], sc[1], sc[2], sc[3], eps);
+                vec![out(p, shape)]
+            }
+            Kind::SgdmDecayAcc => {
+                let mut u = buf(args, 0, n)?.to_vec();
+                let g = buf(args, 1, n)?;
+                let sc = scalars(args, 2, 2)?; // [gscale, mu]
+                sgdm_decay_acc(&mut u, g, sc[0], sc[1]);
+                vec![out(u, shape)]
+            }
+            Kind::SgdmAcc => {
+                let mut u = buf(args, 0, n)?.to_vec();
+                let g = buf(args, 1, n)?;
+                let sc = scalars(args, 2, 1)?;
+                sgdm_acc(&mut u, g, sc[0]);
+                vec![out(u, shape)]
+            }
+            Kind::SgdmUpdate => {
+                let mut p = buf(args, 0, n)?.to_vec();
+                let u = buf(args, 1, n)?;
+                let sc = scalars(args, 2, 2)?; // [lr, wd]
+                sgdm_update(&mut p, u, sc[0], sc[1]);
+                vec![out(p, shape)]
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Hyper;
+
+    fn hyper() -> Hyper {
+        Hyper { beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+
+    #[test]
+    fn kernel_name_parsing() {
+        assert!(build("adama_acc_16384", &hyper()).is_ok());
+        assert!(build("adama_decay_acc_1048576", &hyper()).is_ok());
+        assert!(build("sgdm_update_16384", &hyper()).is_ok());
+        assert!(build("nonsense_16384", &hyper()).is_err());
+        assert!(build("adama_acc", &hyper()).is_err());
+    }
+
+    #[test]
+    fn program_matches_scalar_math_bitwise() {
+        let prog = build("adama_acc_8", &hyper()).unwrap();
+        let m = vec![0.5f32, -1.0, 2.0, 0.0];
+        let v = vec![0.1f32, 0.2, 0.0, 3.0];
+        let g = vec![1.0f32, -2.0, 0.25, 4.0];
+        let outv = prog
+            .run(&[
+                Arg::F32(&m, &[4]),
+                Arg::F32(&v, &[4]),
+                Arg::F32(&g, &[4]),
+                Arg::F32(&[0.5], &[1]),
+            ])
+            .unwrap();
+        let (mut m2, mut v2) = (m.clone(), v.clone());
+        adama_acc(&mut m2, &mut v2, &g, 0.5, 0.9, 0.999);
+        assert_eq!(outv[0].as_f32().unwrap(), &m2[..]);
+        assert_eq!(outv[1].as_f32().unwrap(), &v2[..]);
+    }
+
+    #[test]
+    fn host_adama_acc_math() {
+        let mut m = vec![0.0, 1.0];
+        let mut v = vec![0.0, 2.0];
+        adama_acc(&mut m, &mut v, &[4.0, -4.0], 0.5, 0.9, 0.999);
+        assert!((m[0] - 0.2).abs() < 1e-6);
+        assert!((m[1] - 0.8).abs() < 1e-6);
+        assert!((v[0] - 0.004).abs() < 1e-6);
+        assert!((v[1] - 2.004).abs() < 1e-6);
+    }
+
+    #[test]
+    fn host_full_step_equals_acc_plus_update_when_n1() {
+        // AdamA(N=1) == Adam: decay + single accumulate + update must equal
+        // the fused full step.
+        let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+        let g = vec![0.3, -0.7, 2.0];
+        let mut p1 = vec![1.0, 2.0, 3.0];
+        let mut m1 = vec![0.05, -0.02, 0.0];
+        let mut v1 = vec![0.01, 0.02, 0.0];
+        let (mut p2, mut m2, mut v2) = (p1.clone(), m1.clone(), v1.clone());
+        let (lr, bc1, bc2) = (0.01, 0.1, 0.001);
+
+        adam_full(&mut p1, &mut m1, &mut v1, &g, lr, bc1, bc2, b1, b2, eps);
+
+        scale(&mut m2, b1);
+        scale(&mut v2, b2);
+        adama_acc(&mut m2, &mut v2, &g, 1.0, b1, b2);
+        adam_update(&mut p2, &m2, &v2, lr, bc1, bc2, eps);
+
+        for i in 0..3 {
+            assert!((p1[i] - p2[i]).abs() < 1e-6);
+            assert!((m1[i] - m2[i]).abs() < 1e-6);
+            assert!((v1[i] - v2[i]).abs() < 1e-7);
+        }
+    }
+}

@@ -1,0 +1,311 @@
+//! Dense f32 math for the host executor's model programs.
+//!
+//! Deliberately simple loops (ikj matmul ordering for cache behaviour) —
+//! the host backend is the reference/CI substrate, not the speed record;
+//! the shapes involved (tiny/small configs) are far below BLAS crossover.
+
+/// `out[m,n] = a[m,k] @ b[k,n]`.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let row = &mut out[i * n..(i + 1) * n];
+        row.fill(0.0);
+        for p in 0..k {
+            let aip = a[i * k + p];
+            let brow = &b[p * n..(p + 1) * n];
+            for (o, &bv) in row.iter_mut().zip(brow) {
+                *o += aip * bv;
+            }
+        }
+    }
+}
+
+/// `out[m,n] = aᵀ @ b` with `a:[p,m]`, `b:[p,n]` (weight-gradient shape).
+pub fn matmul_tn(a: &[f32], b: &[f32], p: usize, m: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), p * m);
+    debug_assert_eq!(b.len(), p * n);
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    for r in 0..p {
+        let brow = &b[r * n..(r + 1) * n];
+        for i in 0..m {
+            let ari = a[r * m + i];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += ari * bv;
+            }
+        }
+    }
+}
+
+/// `out[m,n] = a @ bᵀ` with `a:[m,k]`, `b:[n,k]` (input-gradient shape).
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            out[i * n + j] = acc;
+        }
+    }
+}
+
+/// Add a `[cols]` bias to every row of `x:[rows, cols]`.
+pub fn add_bias(x: &mut [f32], bias: &[f32]) {
+    for row in x.chunks_mut(bias.len()) {
+        for (v, &b) in row.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// `out[j] = Σ_i x[i,j]` — bias-gradient column sums.
+pub fn col_sums(x: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), rows * cols);
+    debug_assert_eq!(out.len(), cols);
+    out.fill(0.0);
+    for row in x.chunks(cols) {
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+}
+
+const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi)
+const GELU_A: f32 = 0.044_715;
+
+/// Tanh-approximated GELU (jax.nn.gelu with approximate=True — the form
+/// baked into the AOT artifacts).
+pub fn gelu(x: f32) -> f32 {
+    let u = GELU_C * (x + GELU_A * x * x * x);
+    0.5 * x * (1.0 + u.tanh())
+}
+
+/// d gelu(x) / dx for the tanh approximation.
+pub fn gelu_grad(x: f32) -> f32 {
+    let u = GELU_C * (x + GELU_A * x * x * x);
+    let t = u.tanh();
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * GELU_C * (1.0 + 3.0 * GELU_A * x * x)
+}
+
+/// LayerNorm eps matching `model.py::layer_norm`.
+pub const LN_EPS: f32 = 1e-5;
+
+/// Row-wise layer norm: `out = (x - mu)/sqrt(var + eps) * g + b` with the
+/// biased variance (1/cols), matching `jnp.var`.
+pub fn layer_norm(x: &[f32], g: &[f32], b: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), rows * cols);
+    debug_assert_eq!(out.len(), rows * cols);
+    for r in 0..rows {
+        let xi = &x[r * cols..(r + 1) * cols];
+        let oi = &mut out[r * cols..(r + 1) * cols];
+        let mu = xi.iter().sum::<f32>() / cols as f32;
+        let var = xi.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / cols as f32;
+        let rstd = 1.0 / (var + LN_EPS).sqrt();
+        for j in 0..cols {
+            oi[j] = (xi[j] - mu) * rstd * g[j] + b[j];
+        }
+    }
+}
+
+/// Layer-norm backward: accumulates `dx` (+=, for residual fan-in) and
+/// fills `dg`/`db` gradients (+= as well, caller zeroes).
+pub fn layer_norm_bwd(
+    x: &[f32],
+    g: &[f32],
+    dy: &[f32],
+    rows: usize,
+    cols: usize,
+    dx: &mut [f32],
+    dg: &mut [f32],
+    db: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), rows * cols);
+    debug_assert_eq!(dy.len(), rows * cols);
+    debug_assert_eq!(dx.len(), rows * cols);
+    let inv_c = 1.0 / cols as f32;
+    for r in 0..rows {
+        let xi = &x[r * cols..(r + 1) * cols];
+        let di = &dy[r * cols..(r + 1) * cols];
+        let mu = xi.iter().sum::<f32>() * inv_c;
+        let var = xi.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() * inv_c;
+        let rstd = 1.0 / (var + LN_EPS).sqrt();
+        // dxhat, plus the two row means the closed form needs
+        let mut mean_dxhat = 0.0f32;
+        let mut mean_dxhat_xhat = 0.0f32;
+        for j in 0..cols {
+            let xhat = (xi[j] - mu) * rstd;
+            let dxhat = di[j] * g[j];
+            mean_dxhat += dxhat;
+            mean_dxhat_xhat += dxhat * xhat;
+            dg[j] += di[j] * xhat;
+            db[j] += di[j];
+        }
+        mean_dxhat *= inv_c;
+        mean_dxhat_xhat *= inv_c;
+        let oi = &mut dx[r * cols..(r + 1) * cols];
+        for j in 0..cols {
+            let xhat = (xi[j] - mu) * rstd;
+            let dxhat = di[j] * g[j];
+            oi[j] += rstd * (dxhat - mean_dxhat - xhat * mean_dxhat_xhat);
+        }
+    }
+}
+
+/// Per-row softmax cross-entropy over `logits:[rows, cols]` with integer
+/// labels. Returns `(total_nll, ncorrect)` and fills `dlogits` with the
+/// *unscaled* `(softmax - onehot)` — callers divide by the token count.
+pub fn softmax_xent(
+    logits: &[f32],
+    labels: &[i32],
+    rows: usize,
+    cols: usize,
+    dlogits: &mut [f32],
+) -> (f64, i32) {
+    debug_assert_eq!(logits.len(), rows * cols);
+    debug_assert_eq!(labels.len(), rows);
+    debug_assert_eq!(dlogits.len(), rows * cols);
+    let mut nll = 0.0f64;
+    let mut ncorrect = 0i32;
+    for r in 0..rows {
+        let li = &logits[r * cols..(r + 1) * cols];
+        let label = labels[r] as usize;
+        debug_assert!(label < cols);
+        // max + argmax (first occurrence, matching jnp.argmax)
+        let mut mx = f32::NEG_INFINITY;
+        let mut amax = 0usize;
+        for (j, &v) in li.iter().enumerate() {
+            if v > mx {
+                mx = v;
+                amax = j;
+            }
+        }
+        if amax == label {
+            ncorrect += 1;
+        }
+        let mut sum = 0.0f32;
+        let di = &mut dlogits[r * cols..(r + 1) * cols];
+        for (d, &v) in di.iter_mut().zip(li) {
+            let e = (v - mx).exp();
+            *d = e;
+            sum += e;
+        }
+        let inv_sum = 1.0 / sum;
+        for d in di.iter_mut() {
+            *d *= inv_sum; // now softmax probabilities
+        }
+        nll += -((li[label] - mx) - sum.ln()) as f64;
+        di[label] -= 1.0; // softmax - onehot
+    }
+    (nll, ncorrect)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_agrees_with_transposed_forms() {
+        // a:[2,3], b:[3,2]
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [7.0, 8.0, 9.0, 10.0, 11.0, 12.0];
+        let mut ab = [0.0f32; 4];
+        matmul(&a, &b, 2, 3, 2, &mut ab);
+        assert_eq!(ab, [58.0, 64.0, 139.0, 154.0]);
+
+        // aᵀ@b with a stored as [p=2, m=3] must equal matmul of transposed a
+        let mut tn = [0.0f32; 9];
+        matmul_tn(&a, &a, 2, 3, 3, &mut tn);
+        // (aᵀa)[i][j] = sum_r a[r,i] a[r,j]
+        assert_eq!(tn[0], 1.0 * 1.0 + 4.0 * 4.0);
+        assert_eq!(tn[4], 2.0 * 2.0 + 5.0 * 5.0);
+
+        // a@bᵀ with b stored as [n=3, k=3]
+        let c = [1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0];
+        let mut nt = [0.0f32; 6];
+        matmul_nt(&a, &c, 2, 3, 3, &mut nt);
+        assert_eq!(nt, a);
+    }
+
+    #[test]
+    fn layer_norm_rows_are_standardised() {
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let g = [1.0f32, 1.0, 1.0, 1.0];
+        let b = [0.0f32; 4];
+        let mut out = [0.0f32; 4];
+        layer_norm(&x, &g, &b, 1, 4, &mut out);
+        let mean: f32 = out.iter().sum::<f32>() / 4.0;
+        let var: f32 = out.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn layer_norm_bwd_matches_finite_differences() {
+        let x = [0.3f32, -0.7, 1.1, 0.4, 0.9, -0.2, 0.05, -1.3];
+        let g = [1.1f32, 0.9, 1.0, 1.2];
+        let b = [0.1f32, -0.1, 0.0, 0.2];
+        let dy = [0.7f32, -0.3, 0.5, 0.2, -0.6, 0.4, 0.1, 0.8];
+        let (rows, cols) = (2usize, 4usize);
+
+        let mut dx = vec![0.0f32; 8];
+        let mut dg = vec![0.0f32; 4];
+        let mut db = vec![0.0f32; 4];
+        layer_norm_bwd(&x, &g, &dy, rows, cols, &mut dx, &mut dg, &mut db);
+
+        let loss = |x: &[f32], g: &[f32], b: &[f32]| -> f32 {
+            let mut out = vec![0.0f32; 8];
+            layer_norm(x, g, b, rows, cols, &mut out);
+            out.iter().zip(&dy).map(|(o, d)| o * d).sum()
+        };
+        let eps = 1e-2f32;
+        for i in 0..8 {
+            let mut xp = x;
+            xp[i] += eps;
+            let mut xm = x;
+            xm[i] -= eps;
+            let fd = (loss(&xp, &g, &b) - loss(&xm, &g, &b)) / (2.0 * eps);
+            assert!((fd - dx[i]).abs() < 1e-2, "dx[{i}]: fd {fd} vs {}", dx[i]);
+        }
+        for i in 0..4 {
+            let mut gp = g;
+            gp[i] += eps;
+            let mut gm = g;
+            gm[i] -= eps;
+            let fd = (loss(&x, &gp, &b) - loss(&x, &gm, &b)) / (2.0 * eps);
+            assert!((fd - dg[i]).abs() < 1e-2, "dg[{i}]: fd {fd} vs {}", dg[i]);
+        }
+    }
+
+    #[test]
+    fn gelu_grad_matches_finite_differences() {
+        for &x in &[-2.0f32, -0.5, 0.0, 0.3, 1.7] {
+            let eps = 1e-3f32;
+            let fd = (gelu(x + eps) - gelu(x - eps)) / (2.0 * eps);
+            assert!((fd - gelu_grad(x)).abs() < 1e-3, "x={x}: {fd} vs {}", gelu_grad(x));
+        }
+    }
+
+    #[test]
+    fn softmax_xent_uniform_is_ln_n_and_grads_sum_to_zero() {
+        let logits = [0.0f32; 8]; // 2 rows x 4 classes
+        let labels = [1i32, 3];
+        let mut d = [0.0f32; 8];
+        let (nll, ncorrect) = softmax_xent(&logits, &labels, 2, 4, &mut d);
+        assert!(((nll / 2.0) - (4.0f64).ln()).abs() < 1e-6);
+        assert_eq!(ncorrect, 0); // argmax is index 0 on ties
+        for r in 0..2 {
+            let s: f32 = d[r * 4..(r + 1) * 4].iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+        assert!((d[1] - (0.25 - 1.0)).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,259 @@
+//! Host implementations of the `mlp_*/{mlp_train, mlp_eval}` programs,
+//! mirroring `python/compile/model.py::make_mlp_train / make_mlp_eval`.
+//!
+//! Model: `logits = relu(x @ W1 + b1) @ W2 + b2`, mean token cross-entropy
+//! over the micro-batch. `mlp_train` returns the loss and the gradients
+//! w.r.t. (W1, b1, W2, b2) — not x — exactly like the lowered artifact.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::math;
+use crate::runtime::exec::{Arg, Program, Value};
+use crate::runtime::manifest::MlpHyper;
+
+pub(super) fn build(short: &str, hyper: &MlpHyper) -> Result<Box<dyn Program>> {
+    match short {
+        "mlp_train" => Ok(Box::new(MlpProgram { hyper: hyper.clone(), train: true })),
+        "mlp_eval" => Ok(Box::new(MlpProgram { hyper: hyper.clone(), train: false })),
+        other => bail!("host executor: unknown mlp program '{other}'"),
+    }
+}
+
+struct MlpProgram {
+    hyper: MlpHyper,
+    train: bool,
+}
+
+struct MlpArgs<'a> {
+    x: &'a [f32],
+    labels: &'a [i32],
+    w1: &'a [f32],
+    b1: &'a [f32],
+    w2: &'a [f32],
+    b2: &'a [f32],
+    batch: usize,
+}
+
+impl MlpProgram {
+    fn unpack<'a>(&self, args: &[Arg<'a>]) -> Result<MlpArgs<'a>> {
+        ensure!(args.len() == 6, "mlp program takes 6 args, got {}", args.len());
+        let (d, hd, c) = (self.hyper.features, self.hyper.hidden, self.hyper.classes);
+        let x = args[0].f32().context("mlp x")?;
+        let labels = args[1].i32().context("mlp labels")?;
+        ensure!(!labels.is_empty(), "mlp: empty batch");
+        ensure!(x.len() == labels.len() * d, "mlp: x/labels shape mismatch");
+        let w1 = args[2].f32()?;
+        let b1 = args[3].f32()?;
+        let w2 = args[4].f32()?;
+        let b2 = args[5].f32()?;
+        ensure!(w1.len() == d * hd, "mlp W1 shape");
+        ensure!(b1.len() == hd, "mlp b1 shape");
+        ensure!(w2.len() == hd * c, "mlp W2 shape");
+        ensure!(b2.len() == c, "mlp b2 shape");
+        for &l in labels {
+            ensure!((0..c as i32).contains(&l), "mlp label {l} out of range 0..{c}");
+        }
+        Ok(MlpArgs { x, labels, w1, b1, w2, b2, batch: labels.len() })
+    }
+}
+
+impl Program for MlpProgram {
+    fn run(&self, args: &[Arg<'_>]) -> Result<Vec<Value>> {
+        let a = self.unpack(args)?;
+        let (d, hd, c) = (self.hyper.features, self.hyper.hidden, self.hyper.classes);
+        let b = a.batch;
+
+        // forward
+        let mut h1 = vec![0.0f32; b * hd];
+        math::matmul(a.x, a.w1, b, d, hd, &mut h1);
+        math::add_bias(&mut h1, a.b1);
+        let hr: Vec<f32> = h1.iter().map(|&v| v.max(0.0)).collect();
+        let mut logits = vec![0.0f32; b * c];
+        math::matmul(&hr, a.w2, b, hd, c, &mut logits);
+        math::add_bias(&mut logits, a.b2);
+
+        let mut dlogits = vec![0.0f32; b * c];
+        let (nll, ncorrect) = math::softmax_xent(&logits, a.labels, b, c, &mut dlogits);
+        let loss = (nll / b as f64) as f32;
+
+        if !self.train {
+            return Ok(vec![Value::scalar_f32(loss), Value::scalar_i32(ncorrect)]);
+        }
+
+        // backward (mean loss: scale softmax-onehot by 1/B)
+        let inv_b = 1.0 / b as f32;
+        for v in dlogits.iter_mut() {
+            *v *= inv_b;
+        }
+        let mut dw2 = vec![0.0f32; hd * c];
+        math::matmul_tn(&hr, &dlogits, b, hd, c, &mut dw2);
+        let mut db2 = vec![0.0f32; c];
+        math::col_sums(&dlogits, b, c, &mut db2);
+        let mut dhr = vec![0.0f32; b * hd];
+        math::matmul_nt(&dlogits, a.w2, b, c, hd, &mut dhr);
+        // relu'
+        let dh1: Vec<f32> =
+            dhr.iter().zip(&h1).map(|(&g, &u)| if u > 0.0 { g } else { 0.0 }).collect();
+        let mut dw1 = vec![0.0f32; d * hd];
+        math::matmul_tn(a.x, &dh1, b, d, hd, &mut dw1);
+        let mut db1 = vec![0.0f32; hd];
+        math::col_sums(&dh1, b, hd, &mut db1);
+
+        Ok(vec![
+            Value::scalar_f32(loss),
+            Value::f32(dw1, &[d, hd])?,
+            Value::f32(db1, &[hd])?,
+            Value::f32(dw2, &[hd, c])?,
+            Value::f32(db2, &[c])?,
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn hyper() -> MlpHyper {
+        MlpHyper { features: 5, hidden: 7, classes: 3, microbatch: 4 }
+    }
+
+    struct Setup {
+        x: Vec<f32>,
+        labels: Vec<i32>,
+        w1: Vec<f32>,
+        b1: Vec<f32>,
+        w2: Vec<f32>,
+        b2: Vec<f32>,
+    }
+
+    fn setup() -> Setup {
+        let h = hyper();
+        let mut rng = Rng::new(11);
+        let b = 4usize;
+        Setup {
+            x: (0..b * h.features).map(|_| rng.normal()).collect(),
+            labels: (0..b).map(|_| rng.below(h.classes) as i32).collect(),
+            w1: (0..h.features * h.hidden).map(|_| 0.5 * rng.normal()).collect(),
+            b1: (0..h.hidden).map(|_| 0.1 * rng.normal()).collect(),
+            w2: (0..h.hidden * h.classes).map(|_| 0.5 * rng.normal()).collect(),
+            b2: (0..h.classes).map(|_| 0.1 * rng.normal()).collect(),
+        }
+    }
+
+    fn loss_of(s: &Setup) -> f32 {
+        let prog = MlpProgram { hyper: hyper(), train: false };
+        let out = prog
+            .run(&[
+                Arg::F32(&s.x, &[4, 5]),
+                Arg::I32(&s.labels, &[4]),
+                Arg::F32(&s.w1, &[5, 7]),
+                Arg::F32(&s.b1, &[7]),
+                Arg::F32(&s.w2, &[7, 3]),
+                Arg::F32(&s.b2, &[3]),
+            ])
+            .unwrap();
+        out[0].first_f32().unwrap()
+    }
+
+    #[test]
+    fn train_grads_match_finite_differences() {
+        let s = setup();
+        let prog = MlpProgram { hyper: hyper(), train: true };
+        let out = prog
+            .run(&[
+                Arg::F32(&s.x, &[4, 5]),
+                Arg::I32(&s.labels, &[4]),
+                Arg::F32(&s.w1, &[5, 7]),
+                Arg::F32(&s.b1, &[7]),
+                Arg::F32(&s.w2, &[7, 3]),
+                Arg::F32(&s.b2, &[3]),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 5);
+
+        let eps = 1e-2f32;
+        let tol = |fd: f32, an: f32| (fd - an).abs() < 0.01 + 0.05 * fd.abs().max(an.abs());
+
+        // dW1
+        let dw1 = out[1].as_f32().unwrap();
+        for i in 0..dw1.len() {
+            let mut sp = setup();
+            sp.w1[i] += eps;
+            let mut sm = setup();
+            sm.w1[i] -= eps;
+            let fd = (loss_of(&sp) - loss_of(&sm)) / (2.0 * eps);
+            assert!(tol(fd, dw1[i]), "dW1[{i}]: fd {fd} vs {}", dw1[i]);
+        }
+        // db1
+        let db1 = out[2].as_f32().unwrap();
+        for i in 0..db1.len() {
+            let mut sp = setup();
+            sp.b1[i] += eps;
+            let mut sm = setup();
+            sm.b1[i] -= eps;
+            let fd = (loss_of(&sp) - loss_of(&sm)) / (2.0 * eps);
+            assert!(tol(fd, db1[i]), "db1[{i}]: fd {fd} vs {}", db1[i]);
+        }
+        // dW2
+        let dw2 = out[3].as_f32().unwrap();
+        for i in 0..dw2.len() {
+            let mut sp = setup();
+            sp.w2[i] += eps;
+            let mut sm = setup();
+            sm.w2[i] -= eps;
+            let fd = (loss_of(&sp) - loss_of(&sm)) / (2.0 * eps);
+            assert!(tol(fd, dw2[i]), "dW2[{i}]: fd {fd} vs {}", dw2[i]);
+        }
+        // db2
+        let db2 = out[4].as_f32().unwrap();
+        for i in 0..db2.len() {
+            let mut sp = setup();
+            sp.b2[i] += eps;
+            let mut sm = setup();
+            sm.b2[i] -= eps;
+            let fd = (loss_of(&sp) - loss_of(&sm)) / (2.0 * eps);
+            assert!(tol(fd, db2[i]), "db2[{i}]: fd {fd} vs {}", db2[i]);
+        }
+    }
+
+    #[test]
+    fn eval_counts_correct_predictions() {
+        let s = setup();
+        let prog = MlpProgram { hyper: hyper(), train: false };
+        let out = prog
+            .run(&[
+                Arg::F32(&s.x, &[4, 5]),
+                Arg::I32(&s.labels, &[4]),
+                Arg::F32(&s.w1, &[5, 7]),
+                Arg::F32(&s.b1, &[7]),
+                Arg::F32(&s.w2, &[7, 3]),
+                Arg::F32(&s.b2, &[3]),
+            ])
+            .unwrap();
+        let loss = out[0].first_f32().unwrap();
+        let ncorrect = out[1].first_i32().unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert!((0..=4).contains(&ncorrect));
+    }
+
+    #[test]
+    fn rejects_malformed_arguments() {
+        let s = setup();
+        let prog = MlpProgram { hyper: hyper(), train: true };
+        // wrong arg count
+        assert!(prog.run(&[Arg::F32(&s.x, &[4, 5])]).is_err());
+        // out-of-range label
+        let bad = vec![99i32; 4];
+        assert!(prog
+            .run(&[
+                Arg::F32(&s.x, &[4, 5]),
+                Arg::I32(&bad, &[4]),
+                Arg::F32(&s.w1, &[5, 7]),
+                Arg::F32(&s.b1, &[7]),
+                Arg::F32(&s.w2, &[7, 3]),
+                Arg::F32(&s.b2, &[3]),
+            ])
+            .is_err());
+    }
+}

@@ -1,0 +1,757 @@
+//! Host implementations of the per-layer transformer programs
+//! (`embed_fwd`, `embed_bwd`, `block_fwd`, `block_bwd`, `head_loss`,
+//! `head_eval`), mirroring `python/compile/model.py` exactly:
+//!
+//! * pre-LN block: `x + attn(ln1(x))` then `+ mlp(ln2(·))`, causal
+//!   multi-head attention, tanh-GELU MLP;
+//! * `block_bwd` recomputes its forward internally (per-layer remat) and
+//!   returns `(dx, *12 dparams)` in manifest parameter order;
+//! * `head_loss` is the fused mean-token-cross-entropy fwd+bwd returning
+//!   `(loss, dx, dW)`.
+//!
+//! Gradients are hand-derived VJPs, verified against central finite
+//! differences in the test module below.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::math;
+use crate::runtime::exec::{Arg, Program, Value};
+use crate::runtime::manifest::ModelHyper;
+
+pub(super) fn build(short: &str, h: &ModelHyper) -> Result<Box<dyn Program>> {
+    ensure!(h.heads > 0 && h.hidden % h.heads == 0, "hidden {} not divisible by heads {}", h.hidden, h.heads);
+    Ok(match short {
+        "embed_fwd" => Box::new(EmbedFwd { vocab: h.vocab, hidden: h.hidden }) as Box<dyn Program>,
+        "embed_bwd" => Box::new(EmbedBwd { vocab: h.vocab, hidden: h.hidden }),
+        "block_fwd" => Box::new(BlockFwd { heads: h.heads }),
+        "block_bwd" => Box::new(BlockBwd { heads: h.heads }),
+        "head_loss" => Box::new(HeadLoss),
+        "head_eval" => Box::new(HeadEval),
+        other => bail!("host executor: unknown model program '{other}'"),
+    })
+}
+
+/// Extract `[b, s, h]` dims from a rank-3 f32 activation argument.
+fn act_dims(a: &Arg<'_>) -> Result<(usize, usize, usize)> {
+    let sh = a.shape();
+    ensure!(sh.len() == 3, "expected rank-3 activation, got shape {sh:?}");
+    Ok((sh[0], sh[1], sh[2]))
+}
+
+// ---------------------------------------------------------------------------
+// embedding
+// ---------------------------------------------------------------------------
+
+struct EmbedFwd {
+    vocab: usize,
+    hidden: usize,
+}
+
+impl Program for EmbedFwd {
+    fn run(&self, args: &[Arg<'_>]) -> Result<Vec<Value>> {
+        ensure!(args.len() == 3, "embed_fwd takes (tokens, E, P)");
+        let tokens = args[0].i32().context("embed_fwd tokens")?;
+        let e = args[1].f32()?;
+        let p = args[2].f32()?;
+        let sh = args[0].shape();
+        ensure!(sh.len() == 2, "tokens must be [B,S]");
+        let (b, s, h, v) = (sh[0], sh[1], self.hidden, self.vocab);
+        ensure!(e.len() == v * h, "embed E shape");
+        ensure!(p.len() == s * h, "embed P shape (seq {s})");
+
+        let mut x = vec![0.0f32; b * s * h];
+        for bi in 0..b {
+            for si in 0..s {
+                let tok = tokens[bi * s + si];
+                ensure!((0..v as i32).contains(&tok), "token {tok} out of range 0..{v}");
+                let erow = &e[tok as usize * h..(tok as usize + 1) * h];
+                let prow = &p[si * h..(si + 1) * h];
+                let orow = &mut x[(bi * s + si) * h..(bi * s + si + 1) * h];
+                for j in 0..h {
+                    orow[j] = erow[j] + prow[j];
+                }
+            }
+        }
+        Ok(vec![Value::f32(x, &[b, s, h])?])
+    }
+}
+
+struct EmbedBwd {
+    vocab: usize,
+    hidden: usize,
+}
+
+impl Program for EmbedBwd {
+    fn run(&self, args: &[Arg<'_>]) -> Result<Vec<Value>> {
+        ensure!(args.len() == 2, "embed_bwd takes (tokens, dx)");
+        let tokens = args[0].i32()?;
+        let dx = args[1].f32()?;
+        let (b, s, h) = act_dims(&args[1])?;
+        ensure!(h == self.hidden, "embed_bwd hidden mismatch");
+        ensure!(tokens.len() == b * s, "tokens/dx mismatch");
+
+        let v = self.vocab;
+        let mut de = vec![0.0f32; v * h];
+        let mut dp = vec![0.0f32; s * h];
+        for bi in 0..b {
+            for si in 0..s {
+                let tok = tokens[bi * s + si];
+                ensure!((0..v as i32).contains(&tok), "token {tok} out of range 0..{v}");
+                let drow = &dx[(bi * s + si) * h..(bi * s + si + 1) * h];
+                let erow = &mut de[tok as usize * h..(tok as usize + 1) * h];
+                for j in 0..h {
+                    erow[j] += drow[j];
+                }
+                let prow = &mut dp[si * h..(si + 1) * h];
+                for j in 0..h {
+                    prow[j] += drow[j];
+                }
+            }
+        }
+        Ok(vec![Value::f32(de, &[v, h])?, Value::f32(dp, &[s, h])?])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// transformer block
+// ---------------------------------------------------------------------------
+
+/// The 12 per-block tensors, in manifest/artifact argument order.
+struct BlockParams<'a> {
+    ln1g: &'a [f32],
+    ln1b: &'a [f32],
+    wqkv: &'a [f32],
+    bqkv: &'a [f32],
+    wo: &'a [f32],
+    bo: &'a [f32],
+    ln2g: &'a [f32],
+    ln2b: &'a [f32],
+    w1: &'a [f32],
+    b1: &'a [f32],
+    w2: &'a [f32],
+    b2: &'a [f32],
+    /// FFN width, inferred from w1.
+    f: usize,
+}
+
+fn unpack_block<'a>(args: &[Arg<'a>], off: usize, h: usize) -> Result<BlockParams<'a>> {
+    ensure!(args.len() == off + 12, "block program takes {} args, got {}", off + 12, args.len());
+    let get = |i: usize| args[off + i].f32();
+    let p = BlockParams {
+        ln1g: get(0)?,
+        ln1b: get(1)?,
+        wqkv: get(2)?,
+        bqkv: get(3)?,
+        wo: get(4)?,
+        bo: get(5)?,
+        ln2g: get(6)?,
+        ln2b: get(7)?,
+        w1: get(8)?,
+        b1: get(9)?,
+        w2: get(10)?,
+        b2: get(11)?,
+        f: get(8)?.len() / h.max(1),
+    };
+    ensure!(p.ln1g.len() == h && p.ln1b.len() == h, "ln1 shape");
+    ensure!(p.wqkv.len() == h * 3 * h && p.bqkv.len() == 3 * h, "attn qkv shape");
+    ensure!(p.wo.len() == h * h && p.bo.len() == h, "attn out shape");
+    ensure!(p.ln2g.len() == h && p.ln2b.len() == h, "ln2 shape");
+    ensure!(p.f > 0 && p.w1.len() == h * p.f && p.b1.len() == p.f, "mlp w1 shape");
+    ensure!(p.w2.len() == p.f * h && p.b2.len() == h, "mlp w2 shape");
+    Ok(p)
+}
+
+/// Forward intermediates kept for the backward sweep.
+struct FwdState {
+    hn1: Vec<f32>,   // ln1(x)                [bs, h]
+    qkv: Vec<f32>,   // hn1 @ wqkv + bqkv     [bs, 3h]
+    probs: Vec<f32>, // causal softmax        [b*heads*s*s]
+    ao: Vec<f32>,    // merged head outputs   [bs, h]
+    x1: Vec<f32>,    // x + attn              [bs, h]
+    hn2: Vec<f32>,   // ln2(x1)               [bs, h]
+    m1: Vec<f32>,    // hn2 @ w1 + b1         [bs, f]
+    gm: Vec<f32>,    // gelu(m1)              [bs, f]
+    y: Vec<f32>,     // x1 + mlp out          [bs, h]
+}
+
+fn block_forward(
+    x: &[f32],
+    p: &BlockParams<'_>,
+    b: usize,
+    s: usize,
+    h: usize,
+    heads: usize,
+) -> FwdState {
+    let bs = b * s;
+    let f = p.f;
+    let dh = h / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let w3 = 3 * h;
+
+    let mut hn1 = vec![0.0f32; bs * h];
+    math::layer_norm(x, p.ln1g, p.ln1b, bs, h, &mut hn1);
+    let mut qkv = vec![0.0f32; bs * w3];
+    math::matmul(&hn1, p.wqkv, bs, h, w3, &mut qkv);
+    math::add_bias(&mut qkv, p.bqkv);
+
+    let mut probs = vec![0.0f32; b * heads * s * s];
+    let mut ao = vec![0.0f32; bs * h];
+    for bi in 0..b {
+        for hd in 0..heads {
+            let qc = hd * dh;
+            let kc = h + hd * dh;
+            let vc = 2 * h + hd * dh;
+            for i in 0..s {
+                let qrow = &qkv[(bi * s + i) * w3..(bi * s + i + 1) * w3];
+                // causal scores over j <= i, softmaxed in place
+                let mut scores = vec![0.0f32; i + 1];
+                let mut mx = f32::NEG_INFINITY;
+                for (j, sc) in scores.iter_mut().enumerate() {
+                    let krow = &qkv[(bi * s + j) * w3..(bi * s + j + 1) * w3];
+                    let mut dot = 0.0f32;
+                    for d in 0..dh {
+                        dot += qrow[qc + d] * krow[kc + d];
+                    }
+                    *sc = dot * scale;
+                    if *sc > mx {
+                        mx = *sc;
+                    }
+                }
+                let mut sum = 0.0f32;
+                for sc in scores.iter_mut() {
+                    *sc = (*sc - mx).exp();
+                    sum += *sc;
+                }
+                let inv = 1.0 / sum;
+                let prow = &mut probs[((bi * heads + hd) * s + i) * s..][..s];
+                for (j, &sc) in scores.iter().enumerate() {
+                    prow[j] = sc * inv; // j > i stays zero (causal mask)
+                }
+                // weighted value sum into the merged output slot
+                let orow = &mut ao[(bi * s + i) * h..(bi * s + i + 1) * h];
+                for (j, &pij) in prow[..=i].iter().enumerate() {
+                    let vrow = &qkv[(bi * s + j) * w3..(bi * s + j + 1) * w3];
+                    for d in 0..dh {
+                        orow[qc + d] += pij * vrow[vc + d];
+                    }
+                }
+            }
+        }
+    }
+
+    let mut attn = vec![0.0f32; bs * h];
+    math::matmul(&ao, p.wo, bs, h, h, &mut attn);
+    math::add_bias(&mut attn, p.bo);
+    let x1: Vec<f32> = x.iter().zip(&attn).map(|(a, c)| a + c).collect();
+
+    let mut hn2 = vec![0.0f32; bs * h];
+    math::layer_norm(&x1, p.ln2g, p.ln2b, bs, h, &mut hn2);
+    let mut m1 = vec![0.0f32; bs * f];
+    math::matmul(&hn2, p.w1, bs, h, f, &mut m1);
+    math::add_bias(&mut m1, p.b1);
+    let gm: Vec<f32> = m1.iter().map(|&u| math::gelu(u)).collect();
+    let mut m2 = vec![0.0f32; bs * h];
+    math::matmul(&gm, p.w2, bs, f, h, &mut m2);
+    math::add_bias(&mut m2, p.b2);
+    let y: Vec<f32> = x1.iter().zip(&m2).map(|(a, c)| a + c).collect();
+
+    FwdState { hn1, qkv, probs, ao, x1, hn2, m1, gm, y }
+}
+
+/// Recompute-forward + pull back `dy`: returns `(dx, 12 dparams)`.
+fn block_backward(
+    x: &[f32],
+    dy: &[f32],
+    p: &BlockParams<'_>,
+    b: usize,
+    s: usize,
+    h: usize,
+    heads: usize,
+) -> (Vec<f32>, Vec<Vec<f32>>) {
+    let st = block_forward(x, p, b, s, h, heads);
+    let bs = b * s;
+    let f = p.f;
+    let dh = h / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let w3 = 3 * h;
+
+    // y = x1 + m2: residual copies dy to both branches
+    let dm2 = dy;
+    let mut dx1 = dy.to_vec();
+
+    // m2 = gm @ w2 + b2
+    let mut dgm = vec![0.0f32; bs * f];
+    math::matmul_nt(dm2, p.w2, bs, h, f, &mut dgm);
+    let mut dw2 = vec![0.0f32; f * h];
+    math::matmul_tn(&st.gm, dm2, bs, f, h, &mut dw2);
+    let mut db2 = vec![0.0f32; h];
+    math::col_sums(dm2, bs, h, &mut db2);
+
+    // gm = gelu(m1)
+    let dm1: Vec<f32> =
+        dgm.iter().zip(&st.m1).map(|(&g, &u)| g * math::gelu_grad(u)).collect();
+
+    // m1 = hn2 @ w1 + b1
+    let mut dhn2 = vec![0.0f32; bs * h];
+    math::matmul_nt(&dm1, p.w1, bs, f, h, &mut dhn2);
+    let mut dw1 = vec![0.0f32; h * f];
+    math::matmul_tn(&st.hn2, &dm1, bs, h, f, &mut dw1);
+    let mut db1 = vec![0.0f32; f];
+    math::col_sums(&dm1, bs, f, &mut db1);
+
+    // hn2 = ln2(x1): contributes into dx1
+    let mut dln2g = vec![0.0f32; h];
+    let mut dln2b = vec![0.0f32; h];
+    math::layer_norm_bwd(&st.x1, p.ln2g, &dhn2, bs, h, &mut dx1, &mut dln2g, &mut dln2b);
+
+    // x1 = x + attn: residual again
+    let mut dx = dx1.clone();
+    let dattn = dx1;
+
+    // attn = ao @ wo + bo
+    let mut dao = vec![0.0f32; bs * h];
+    math::matmul_nt(&dattn, p.wo, bs, h, h, &mut dao);
+    let mut dwo = vec![0.0f32; h * h];
+    math::matmul_tn(&st.ao, &dattn, bs, h, h, &mut dwo);
+    let mut dbo = vec![0.0f32; h];
+    math::col_sums(&dattn, bs, h, &mut dbo);
+
+    // attention core: softmax(qkᵀ·scale, causal) @ v, per (batch, head)
+    let mut dqkv = vec![0.0f32; bs * w3];
+    for bi in 0..b {
+        for hd in 0..heads {
+            let qc = hd * dh;
+            let kc = h + hd * dh;
+            let vc = 2 * h + hd * dh;
+            for i in 0..s {
+                let drow = &dao[(bi * s + i) * h..(bi * s + i + 1) * h];
+                let prow = &st.probs[((bi * heads + hd) * s + i) * s..][..s];
+                // dprobs[j] = datt[i]·v[j]; softmax row VJP needs Σ dp·p
+                let mut dp = vec![0.0f32; i + 1];
+                let mut dot = 0.0f32;
+                for (j, dpj) in dp.iter_mut().enumerate() {
+                    let vrow = &st.qkv[(bi * s + j) * w3..(bi * s + j + 1) * w3];
+                    let mut acc = 0.0f32;
+                    for d in 0..dh {
+                        acc += drow[qc + d] * vrow[vc + d];
+                    }
+                    *dpj = acc;
+                    dot += acc * prow[j];
+                }
+                for j in 0..=i {
+                    let ds = prow[j] * (dp[j] - dot); // masked scores: prob 0 ⇒ ds 0
+                    for d in 0..dh {
+                        let kjd = st.qkv[(bi * s + j) * w3 + kc + d];
+                        let qid = st.qkv[(bi * s + i) * w3 + qc + d];
+                        dqkv[(bi * s + i) * w3 + qc + d] += scale * ds * kjd;
+                        dqkv[(bi * s + j) * w3 + kc + d] += scale * ds * qid;
+                    }
+                    let pij = prow[j];
+                    for d in 0..dh {
+                        dqkv[(bi * s + j) * w3 + vc + d] += pij * drow[qc + d];
+                    }
+                }
+            }
+        }
+    }
+
+    // qkv = hn1 @ wqkv + bqkv
+    let mut dhn1 = vec![0.0f32; bs * h];
+    math::matmul_nt(&dqkv, p.wqkv, bs, w3, h, &mut dhn1);
+    let mut dwqkv = vec![0.0f32; h * w3];
+    math::matmul_tn(&st.hn1, &dqkv, bs, h, w3, &mut dwqkv);
+    let mut dbqkv = vec![0.0f32; w3];
+    math::col_sums(&dqkv, bs, w3, &mut dbqkv);
+
+    // hn1 = ln1(x): contributes into dx
+    let mut dln1g = vec![0.0f32; h];
+    let mut dln1b = vec![0.0f32; h];
+    math::layer_norm_bwd(x, p.ln1g, &dhn1, bs, h, &mut dx, &mut dln1g, &mut dln1b);
+
+    (
+        dx,
+        vec![
+            dln1g, dln1b, dwqkv, dbqkv, dwo, dbo, dln2g, dln2b, dw1, db1, dw2, db2,
+        ],
+    )
+}
+
+struct BlockFwd {
+    heads: usize,
+}
+
+impl Program for BlockFwd {
+    fn run(&self, args: &[Arg<'_>]) -> Result<Vec<Value>> {
+        let (b, s, h) = act_dims(args.first().context("block_fwd: missing x")?)?;
+        ensure!(h % self.heads == 0, "hidden {h} not divisible by heads {}", self.heads);
+        let x = args[0].f32()?;
+        let p = unpack_block(args, 1, h)?;
+        let st = block_forward(x, &p, b, s, h, self.heads);
+        Ok(vec![Value::f32(st.y, &[b, s, h])?])
+    }
+}
+
+struct BlockBwd {
+    heads: usize,
+}
+
+impl Program for BlockBwd {
+    fn run(&self, args: &[Arg<'_>]) -> Result<Vec<Value>> {
+        ensure!(args.len() >= 2, "block_bwd takes (x, dy, *params)");
+        let (b, s, h) = act_dims(&args[0])?;
+        ensure!(h % self.heads == 0, "hidden {h} not divisible by heads {}", self.heads);
+        let x = args[0].f32()?;
+        let dy = args[1].f32()?;
+        ensure!(dy.len() == x.len(), "block_bwd: x/dy shape mismatch");
+        let p = unpack_block(args, 2, h)?;
+        let f = p.f;
+        let (dx, dparams) = block_backward(x, dy, &p, b, s, h, self.heads);
+
+        let shapes: [Vec<usize>; 12] = [
+            vec![h],
+            vec![h],
+            vec![h, 3 * h],
+            vec![3 * h],
+            vec![h, h],
+            vec![h],
+            vec![h],
+            vec![h],
+            vec![h, f],
+            vec![f],
+            vec![f, h],
+            vec![h],
+        ];
+        let mut out = Vec::with_capacity(13);
+        out.push(Value::f32(dx, &[b, s, h])?);
+        for (d, shape) in dparams.into_iter().zip(shapes.iter()) {
+            out.push(Value::f32(d, shape)?);
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// head
+// ---------------------------------------------------------------------------
+
+struct HeadLoss;
+
+/// Shared head plumbing: logits + mean-token cross-entropy.
+/// Returns (loss, dlogits_unscaled, ncorrect, dims).
+fn head_common(
+    args: &[Arg<'_>],
+) -> Result<(f32, Vec<f32>, i32, (usize, usize, usize, usize))> {
+    ensure!(args.len() == 3, "head program takes (x, W, labels)");
+    let (b, s, h) = act_dims(&args[0])?;
+    let x = args[0].f32()?;
+    let w = args[1].f32()?;
+    ensure!(!w.is_empty() && w.len() % h == 0, "head W shape");
+    let v = w.len() / h;
+    let labels = args[2].i32()?;
+    ensure!(labels.len() == b * s, "head labels shape");
+    for &l in labels {
+        ensure!((0..v as i32).contains(&l), "label {l} out of range 0..{v}");
+    }
+    let bs = b * s;
+    let mut logits = vec![0.0f32; bs * v];
+    math::matmul(x, w, bs, h, v, &mut logits);
+    let mut dlogits = vec![0.0f32; bs * v];
+    let (nll, ncorrect) = math::softmax_xent(&logits, labels, bs, v, &mut dlogits);
+    let loss = (nll / bs as f64) as f32;
+    Ok((loss, dlogits, ncorrect, (b, s, h, v)))
+}
+
+impl Program for HeadLoss {
+    fn run(&self, args: &[Arg<'_>]) -> Result<Vec<Value>> {
+        let (loss, mut dlogits, _nc, (b, s, h, v)) = head_common(args)?;
+        let x = args[0].f32()?;
+        let w = args[1].f32()?;
+        let bs = b * s;
+        let inv = 1.0 / bs as f32;
+        for d in dlogits.iter_mut() {
+            *d *= inv;
+        }
+        let mut dx = vec![0.0f32; bs * h];
+        math::matmul_nt(&dlogits, w, bs, v, h, &mut dx);
+        let mut dw = vec![0.0f32; h * v];
+        math::matmul_tn(x, &dlogits, bs, h, v, &mut dw);
+        Ok(vec![
+            Value::scalar_f32(loss),
+            Value::f32(dx, &[b, s, h])?,
+            Value::f32(dw, &[h, v])?,
+        ])
+    }
+}
+
+struct HeadEval;
+
+impl Program for HeadEval {
+    fn run(&self, args: &[Arg<'_>]) -> Result<Vec<Value>> {
+        let (loss, _dl, ncorrect, _dims) = head_common(args)?;
+        Ok(vec![Value::scalar_f32(loss), Value::scalar_i32(ncorrect)])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// tests: finite-difference verification of every hand-derived VJP
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    const B: usize = 2;
+    const S: usize = 3;
+    const H: usize = 4;
+    const HEADS: usize = 2;
+    const F: usize = 8;
+
+    /// Owned block parameters in manifest order.
+    struct Params {
+        t: Vec<Vec<f32>>,
+    }
+
+    impl Params {
+        fn sizes() -> [usize; 12] {
+            [H, H, H * 3 * H, 3 * H, H * H, H, H, H, H * F, F, F * H, H]
+        }
+
+        fn random(seed: u64) -> Self {
+            let mut rng = Rng::new(seed);
+            let t = Self::sizes()
+                .iter()
+                .enumerate()
+                .map(|(idx, &n)| {
+                    (0..n)
+                        .map(|_| match idx {
+                            0 | 6 => 1.0 + 0.1 * rng.normal(), // LN gains near 1
+                            1 | 7 | 3 | 5 | 9 | 11 => 0.1 * rng.normal(), // biases small
+                            _ => 0.4 * rng.normal(),
+                        })
+                        .collect()
+                })
+                .collect();
+            Self { t }
+        }
+
+        fn view(&self) -> BlockParams<'_> {
+            BlockParams {
+                ln1g: &self.t[0],
+                ln1b: &self.t[1],
+                wqkv: &self.t[2],
+                bqkv: &self.t[3],
+                wo: &self.t[4],
+                bo: &self.t[5],
+                ln2g: &self.t[6],
+                ln2b: &self.t[7],
+                w1: &self.t[8],
+                b1: &self.t[9],
+                w2: &self.t[10],
+                b2: &self.t[11],
+                f: F,
+            }
+        }
+    }
+
+    fn randvec(seed: u64, n: usize, scale: f32) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| scale * rng.normal()).collect()
+    }
+
+    /// Scalar objective: L = Σ y ∘ r for a fixed random cotangent r.
+    fn objective(x: &[f32], p: &Params, r: &[f32]) -> f32 {
+        let st = block_forward(x, &p.view(), B, S, H, HEADS);
+        st.y.iter().zip(r).map(|(a, c)| a * c).sum()
+    }
+
+    fn close(fd: f32, an: f32) -> bool {
+        (fd - an).abs() < 0.02 + 0.05 * fd.abs().max(an.abs())
+    }
+
+    #[test]
+    fn block_backward_dx_matches_finite_differences() {
+        let x = randvec(1, B * S * H, 0.8);
+        let p = Params::random(2);
+        let r = randvec(3, B * S * H, 1.0);
+        let (dx, _dp) = block_backward(&x, &r, &p.view(), B, S, H, HEADS);
+        let eps = 1e-2f32;
+        for i in 0..x.len() {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let fd = (objective(&xp, &p, &r) - objective(&xm, &p, &r)) / (2.0 * eps);
+            assert!(close(fd, dx[i]), "dx[{i}]: fd {fd} vs analytic {}", dx[i]);
+        }
+    }
+
+    #[test]
+    fn block_backward_dparams_match_finite_differences() {
+        let x = randvec(4, B * S * H, 0.8);
+        let p = Params::random(5);
+        let r = randvec(6, B * S * H, 1.0);
+        let (_dx, dp) = block_backward(&x, &r, &p.view(), B, S, H, HEADS);
+        let eps = 1e-2f32;
+        for (ti, size) in Params::sizes().iter().enumerate() {
+            assert_eq!(dp[ti].len(), *size, "tensor {ti} grad size");
+            for i in 0..*size {
+                let mut pp = Params::random(5);
+                pp.t[ti][i] += eps;
+                let mut pm = Params::random(5);
+                pm.t[ti][i] -= eps;
+                let fd = (objective(&x, &pp, &r) - objective(&x, &pm, &r)) / (2.0 * eps);
+                assert!(
+                    close(fd, dp[ti][i]),
+                    "param {ti}[{i}]: fd {fd} vs analytic {}",
+                    dp[ti][i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn block_is_causal() {
+        // Perturbing position s0 must not change outputs at earlier
+        // positions (causal mask), and must change later ones.
+        let x = randvec(7, B * S * H, 0.8);
+        let p = Params::random(8);
+        let y0 = block_forward(&x, &p.view(), B, S, H, HEADS).y;
+        let mut x2 = x.clone();
+        for j in 0..H {
+            x2[(S - 1) * H + j] += 0.5; // batch 0, last position
+        }
+        let y1 = block_forward(&x2, &p.view(), B, S, H, HEADS).y;
+        for si in 0..S - 1 {
+            for j in 0..H {
+                let idx = si * H + j;
+                assert_eq!(y0[idx], y1[idx], "earlier position {si} changed");
+            }
+        }
+        let last: f32 = (0..H)
+            .map(|j| (y0[(S - 1) * H + j] - y1[(S - 1) * H + j]).abs())
+            .sum();
+        assert!(last > 1e-3, "perturbed position must change");
+    }
+
+    #[test]
+    fn head_loss_grads_match_finite_differences() {
+        let (b, s, h, v) = (1usize, 2usize, 3usize, 5usize);
+        let x = randvec(9, b * s * h, 1.0);
+        let w = randvec(10, h * v, 0.7);
+        let labels: Vec<i32> = vec![1, 4];
+
+        let head = HeadLoss;
+        let run = |x: &[f32], w: &[f32]| -> (f32, Vec<Value>) {
+            let out = head
+                .run(&[
+                    Arg::F32(x, &[b, s, h]),
+                    Arg::F32(w, &[h, v]),
+                    Arg::I32(&labels, &[b, s]),
+                ])
+                .unwrap();
+            (out[0].first_f32().unwrap(), out)
+        };
+        let (_, out) = run(&x, &w);
+        let dx = out[1].as_f32().unwrap().to_vec();
+        let dw = out[2].as_f32().unwrap().to_vec();
+
+        let eps = 1e-2f32;
+        for i in 0..x.len() {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let fd = (run(&xp, &w).0 - run(&xm, &w).0) / (2.0 * eps);
+            assert!((fd - dx[i]).abs() < 5e-3, "dx[{i}]: fd {fd} vs {}", dx[i]);
+        }
+        for i in 0..w.len() {
+            let mut wp = w.clone();
+            wp[i] += eps;
+            let mut wm = w.clone();
+            wm[i] -= eps;
+            let fd = (run(&x, &wp).0 - run(&x, &wm).0) / (2.0 * eps);
+            assert!((fd - dw[i]).abs() < 5e-3, "dW[{i}]: fd {fd} vs {}", dw[i]);
+        }
+    }
+
+    #[test]
+    fn embed_roundtrip_and_grads() {
+        let (vocab, hidden, b, s) = (6usize, 4usize, 2usize, 3usize);
+        let tokens: Vec<i32> = vec![0, 2, 5, 2, 1, 0];
+        let e = randvec(11, vocab * hidden, 0.5);
+        let p = randvec(12, s * hidden, 0.5);
+
+        let fwd = EmbedFwd { vocab, hidden };
+        let out = fwd
+            .run(&[
+                Arg::I32(&tokens, &[b, s]),
+                Arg::F32(&e, &[vocab, hidden]),
+                Arg::F32(&p, &[s, hidden]),
+            ])
+            .unwrap();
+        let x = out[0].as_f32().unwrap();
+        // spot-check: x[0,0] = E[0] + P[0]
+        for j in 0..hidden {
+            assert!((x[j] - (e[j] + p[j])).abs() < 1e-6);
+        }
+
+        // embed_bwd: scatter-add over tokens, batch-sum over positions
+        let dx = randvec(13, b * s * hidden, 1.0);
+        let bwd = EmbedBwd { vocab, hidden };
+        let out = bwd
+            .run(&[Arg::I32(&tokens, &[b, s]), Arg::F32(&dx, &[b, s, hidden])])
+            .unwrap();
+        let de = out[0].as_f32().unwrap();
+        let dp = out[1].as_f32().unwrap();
+        // token 2 appears at flat positions 1 and 3
+        for j in 0..hidden {
+            let want = dx[hidden + j] + dx[3 * hidden + j];
+            assert!((de[2 * hidden + j] - want).abs() < 1e-6);
+            // dP[si] sums over batch
+            let want_p = dx[j] + dx[(s * hidden) + j];
+            assert!((dp[j] - want_p).abs() < 1e-6);
+        }
+        // totals conserved
+        let total_dx: f32 = dx.iter().sum();
+        let total_de: f32 = de.iter().sum();
+        assert!((total_dx - total_de).abs() < 1e-4);
+    }
+
+    #[test]
+    fn block_programs_have_artifact_shapes() {
+        let x = randvec(14, B * S * H, 0.5);
+        let dy = randvec(15, B * S * H, 0.5);
+        let p = Params::random(16);
+        let mut args: Vec<Arg<'_>> = vec![Arg::F32(&x, &[B, S, H]), Arg::F32(&dy, &[B, S, H])];
+        let shapes: [Vec<usize>; 12] = [
+            vec![H],
+            vec![H],
+            vec![H, 3 * H],
+            vec![3 * H],
+            vec![H, H],
+            vec![H],
+            vec![H],
+            vec![H],
+            vec![H, F],
+            vec![F],
+            vec![F, H],
+            vec![H],
+        ];
+        for (t, sh) in p.t.iter().zip(shapes.iter()) {
+            args.push(Arg::F32(t, sh));
+        }
+        let out = BlockBwd { heads: HEADS }.run(&args).unwrap();
+        assert_eq!(out.len(), 13);
+        assert_eq!(out[0].shape(), &[B, S, H]);
+        for (o, sh) in out[1..].iter().zip(shapes.iter()) {
+            assert_eq!(o.shape(), &sh[..]);
+        }
+
+        let fwd_args: Vec<Arg<'_>> =
+            args.iter().enumerate().filter(|(i, _)| *i != 1).map(|(_, a)| *a).collect();
+        let out = BlockFwd { heads: HEADS }.run(&fwd_args).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape(), &[B, S, H]);
+    }
+}

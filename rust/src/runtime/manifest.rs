@@ -176,6 +176,69 @@ impl Manifest {
         })
     }
 
+    /// Built-in default manifest for the pure-rust host executor.
+    ///
+    /// Mirrors what `python/compile/aot.py` writes (same configs, same
+    /// program names, same hyper-parameters), so `Trainer`, `MlpTrainer`
+    /// and the optimizer kernels run on a clean machine with no
+    /// `artifacts/` directory at all. `file` fields are advisory — the
+    /// host executor dispatches on program *names*.
+    pub fn builtin() -> Self {
+        let hyper = Hyper { beta1: 0.9, beta2: 0.999, eps: 1e-8 };
+        let chunk_sizes = vec![16384, 65536, 1048576];
+
+        let mut common = BTreeMap::new();
+        for &c in &chunk_sizes {
+            for (op, n_bufs, n_scalars, n_outs) in [
+                ("adama_acc", 3usize, 1usize, 2usize),
+                ("adama_decay_acc", 3, 3, 2),
+                ("adama_decay", 2, 0, 2), // + two [1] scalar args, see below
+                ("adam_update", 3, 3, 1),
+                ("adam_full", 4, 3, 3),
+                ("grad_acc", 2, 1, 1),
+                ("adama_acc_update", 4, 0, 3), // gscale [1] + [lr,bc1,bc2]
+                ("adamw_update", 3, 4, 1),
+                ("sgdm_decay_acc", 2, 2, 1),
+                ("sgdm_acc", 2, 1, 1),
+                ("sgdm_update", 2, 2, 1),
+            ] {
+                let mut inputs: Vec<TensorSpec> = (0..n_bufs).map(|_| f32_spec(&[c])).collect();
+                match op {
+                    "adama_decay" => {
+                        inputs.push(f32_spec(&[1]));
+                        inputs.push(f32_spec(&[1]));
+                    }
+                    "adama_acc_update" => {
+                        inputs.push(f32_spec(&[1]));
+                        inputs.push(f32_spec(&[3]));
+                    }
+                    _ if n_scalars > 0 => inputs.push(f32_spec(&[n_scalars])),
+                    _ => {}
+                }
+                let outputs: Vec<TensorSpec> = (0..n_outs).map(|_| f32_spec(&[c])).collect();
+                common.insert(
+                    format!("{op}_{c}"),
+                    ArtifactEntry {
+                        file: format!("common/{op}_{c}.hlo.txt"),
+                        inputs,
+                        outputs,
+                        sha256: String::new(),
+                    },
+                );
+            }
+        }
+
+        let mut configs = BTreeMap::new();
+        configs.insert("tiny".to_string(), builtin_model_entry("tiny", 256, 64, 2, 2, 32, 4));
+        configs.insert("small".to_string(), builtin_model_entry("small", 2048, 256, 4, 4, 64, 8));
+
+        let mut mlp_configs = BTreeMap::new();
+        mlp_configs.insert("tiny".to_string(), builtin_mlp_entry("tiny", 16, 32, 4, 8));
+        mlp_configs.insert("small".to_string(), builtin_mlp_entry("small", 32, 128, 10, 16));
+
+        Self { hyper, chunk_sizes, common, configs, mlp_configs }
+    }
+
     /// Resolve `"group/name"` into its artifact entry.
     pub fn entry(&self, name: &str) -> Option<&ArtifactEntry> {
         let (group, short) = name.split_once('/')?;
@@ -194,6 +257,162 @@ impl Manifest {
 
     pub fn mlp_config(&self, name: &str) -> Result<&MlpConfigEntry> {
         self.mlp_configs.get(name).with_context(|| format!("no mlp config '{name}'"))
+    }
+}
+
+fn f32_spec(shape: &[usize]) -> TensorSpec {
+    TensorSpec { shape: shape.to_vec(), dtype: "f32".to_string() }
+}
+
+fn s32_spec(shape: &[usize]) -> TensorSpec {
+    TensorSpec { shape: shape.to_vec(), dtype: "s32".to_string() }
+}
+
+/// One transformer config entry mirroring
+/// `python/compile/model.py::ModelConfig` (ffn_mult = 4) and the artifact
+/// signatures lowered by `aot.py::lower_model_config`.
+fn builtin_model_entry(
+    name: &str,
+    vocab: usize,
+    hidden: usize,
+    layers: usize,
+    heads: usize,
+    seq: usize,
+    microbatch: usize,
+) -> ModelConfigEntry {
+    let ffn = hidden * 4;
+    let (v, h, f, s, b) = (vocab, hidden, ffn, seq, microbatch);
+
+    let mut param_shapes: Vec<(String, Vec<usize>)> =
+        vec![("embed.E".into(), vec![v, h]), ("embed.P".into(), vec![s, h])];
+    for i in 0..layers {
+        let p = format!("block{i}.");
+        for (tensor, shape) in [
+            ("ln1.g", vec![h]),
+            ("ln1.b", vec![h]),
+            ("attn.wqkv", vec![h, 3 * h]),
+            ("attn.bqkv", vec![3 * h]),
+            ("attn.wo", vec![h, h]),
+            ("attn.bo", vec![h]),
+            ("ln2.g", vec![h]),
+            ("ln2.b", vec![h]),
+            ("mlp.w1", vec![h, f]),
+            ("mlp.b1", vec![f]),
+            ("mlp.w2", vec![f, h]),
+            ("mlp.b2", vec![h]),
+        ] {
+            param_shapes.push((format!("{p}{tensor}"), shape));
+        }
+    }
+    param_shapes.push(("head.W".into(), vec![h, v]));
+
+    // the 12 per-block tensors, in artifact argument order
+    let block_specs: Vec<TensorSpec> = param_shapes
+        .iter()
+        .filter(|(n, _)| n.starts_with("block0."))
+        .map(|(_, shape)| f32_spec(shape))
+        .collect();
+
+    let entry = |file: String, inputs: Vec<TensorSpec>, outputs: Vec<TensorSpec>| ArtifactEntry {
+        file,
+        inputs,
+        outputs,
+        sha256: String::new(),
+    };
+    let mut artifacts = BTreeMap::new();
+    artifacts.insert(
+        "embed_fwd".to_string(),
+        entry(
+            format!("{name}/embed_fwd.hlo.txt"),
+            vec![s32_spec(&[b, s]), f32_spec(&[v, h]), f32_spec(&[s, h])],
+            vec![f32_spec(&[b, s, h])],
+        ),
+    );
+    artifacts.insert(
+        "embed_bwd".to_string(),
+        entry(
+            format!("{name}/embed_bwd.hlo.txt"),
+            vec![s32_spec(&[b, s]), f32_spec(&[b, s, h])],
+            vec![f32_spec(&[v, h]), f32_spec(&[s, h])],
+        ),
+    );
+    let mut block_fwd_in = vec![f32_spec(&[b, s, h])];
+    block_fwd_in.extend(block_specs.iter().cloned());
+    artifacts.insert(
+        "block_fwd".to_string(),
+        entry(format!("{name}/block_fwd.hlo.txt"), block_fwd_in, vec![f32_spec(&[b, s, h])]),
+    );
+    let mut block_bwd_in = vec![f32_spec(&[b, s, h]), f32_spec(&[b, s, h])];
+    block_bwd_in.extend(block_specs.iter().cloned());
+    let mut block_bwd_out = vec![f32_spec(&[b, s, h])];
+    block_bwd_out.extend(block_specs.iter().cloned());
+    artifacts.insert(
+        "block_bwd".to_string(),
+        entry(format!("{name}/block_bwd.hlo.txt"), block_bwd_in, block_bwd_out),
+    );
+    artifacts.insert(
+        "head_loss".to_string(),
+        entry(
+            format!("{name}/head_loss.hlo.txt"),
+            vec![f32_spec(&[b, s, h]), f32_spec(&[h, v]), s32_spec(&[b, s])],
+            vec![f32_spec(&[]), f32_spec(&[b, s, h]), f32_spec(&[h, v])],
+        ),
+    );
+    artifacts.insert(
+        "head_eval".to_string(),
+        entry(
+            format!("{name}/head_eval.hlo.txt"),
+            vec![f32_spec(&[b, s, h]), f32_spec(&[h, v]), s32_spec(&[b, s])],
+            vec![f32_spec(&[]), s32_spec(&[])],
+        ),
+    );
+
+    ModelConfigEntry {
+        model: ModelHyper { vocab, hidden, layers, heads, seq, microbatch, ffn },
+        param_shapes,
+        artifacts,
+    }
+}
+
+/// One MLP config entry mirroring `model.py::MlpConfig` and
+/// `aot.py::lower_mlp_config`.
+fn builtin_mlp_entry(
+    name: &str,
+    features: usize,
+    hidden: usize,
+    classes: usize,
+    microbatch: usize,
+) -> MlpConfigEntry {
+    let (d, hd, c, b) = (features, hidden, classes, microbatch);
+    let params = [f32_spec(&[d, hd]), f32_spec(&[hd]), f32_spec(&[hd, c]), f32_spec(&[c])];
+    let mut inputs = vec![f32_spec(&[b, d]), s32_spec(&[b])];
+    inputs.extend(params.iter().cloned());
+    let mut train_out = vec![f32_spec(&[])];
+    train_out.extend(params.iter().cloned());
+
+    let mut artifacts = BTreeMap::new();
+    artifacts.insert(
+        "mlp_train".to_string(),
+        ArtifactEntry {
+            file: format!("mlp_{name}/mlp_train.hlo.txt"),
+            inputs: inputs.clone(),
+            outputs: train_out,
+            sha256: String::new(),
+        },
+    );
+    artifacts.insert(
+        "mlp_eval".to_string(),
+        ArtifactEntry {
+            file: format!("mlp_{name}/mlp_eval.hlo.txt"),
+            inputs,
+            outputs: vec![f32_spec(&[]), s32_spec(&[])],
+            sha256: String::new(),
+        },
+    );
+
+    MlpConfigEntry {
+        model: MlpHyper { features, hidden, classes, microbatch },
+        artifacts,
     }
 }
 
@@ -235,6 +454,37 @@ mod tests {
         assert!(m.entry("tiny/block_fwd").is_some());
         assert!(m.entry("tiny/missing").is_none());
         assert!(m.entry("nope").is_none());
+    }
+
+    #[test]
+    fn builtin_manifest_is_complete() {
+        let m = Manifest::builtin();
+        // kernel programs for every chunk size
+        for &c in &m.chunk_sizes {
+            for op in ["adama_acc", "adama_decay_acc", "adam_update", "adam_full", "grad_acc"] {
+                assert!(
+                    m.entry(&format!("common/{op}_{c}")).is_some(),
+                    "missing common/{op}_{c}"
+                );
+            }
+        }
+        // model configs group into valid layer specs
+        for name in ["tiny", "small"] {
+            let cfg = m.model_config(name).unwrap();
+            assert_eq!(cfg.param_shapes.len(), 2 + 12 * cfg.model.layers + 1);
+            assert!(m.entry(&format!("{name}/block_bwd")).is_some());
+            // block_bwd: (x, dy, 12 params) -> (dx, 12 grads)
+            let bwd = &cfg.artifacts["block_bwd"];
+            assert_eq!(bwd.inputs.len(), 14);
+            assert_eq!(bwd.outputs.len(), 13);
+        }
+        for name in ["tiny", "small"] {
+            let cfg = m.mlp_config(name).unwrap();
+            assert!(cfg.artifacts.contains_key("mlp_train"));
+            assert!(cfg.artifacts.contains_key("mlp_eval"));
+            assert!(m.entry(&format!("mlp_{name}/mlp_train")).is_some());
+        }
+        assert_eq!(m.hyper.beta1, 0.9);
     }
 
     #[test]

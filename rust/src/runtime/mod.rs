@@ -1,47 +1,77 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them from rust.
+//! Pluggable execution runtime.
 //!
-//! The interchange format is HLO *text* — jax >= 0.5 serialized protos use
-//! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+//! [`Library`] resolves manifest program names (`"common/adama_acc_16384"`,
+//! `"tiny/block_fwd"`, `"mlp_small/mlp_train"`) to executable [`Program`]s
+//! through an [`Executor`] backend:
+//!
+//! * [`hostexec::HostExecutor`] — pure-rust reference implementations of
+//!   every program (optimizer kernels, transformer layers, MLP). Always
+//!   available; needs no artifacts, no Python, no native libraries. When
+//!   no `artifacts/` directory exists, [`Library::open_default`] uses this
+//!   backend with a built-in manifest ([`Manifest::builtin`]).
+//! * `pjrt::PjrtExecutor` (cargo feature `pjrt`) — compiles the AOT HLO
+//!   artifacts produced by `python/compile/aot.py` through the PJRT C API.
+//!   Selected automatically when the feature is enabled and artifacts are
+//!   found; `ADAMA_BACKEND=host|pjrt` overrides the choice.
 
-mod engine;
-mod literal;
+mod exec;
+pub mod hostexec;
 mod manifest;
+#[cfg(feature = "pjrt")]
+mod pjrt;
 
-pub use engine::{Arg, Engine, Executable};
-pub use literal::{
+pub use exec::{
     copy_chunk, copy_into_f32, lit_f32, lit_i32, lit_scalar_f32, scalar_f32, scalar_i32,
-    to_vec_f32, to_vec_i32,
+    to_vec_f32, to_vec_i32, Arg, Executor, Program, Value,
 };
+pub use hostexec::HostExecutor;
 pub use manifest::{
     ArtifactEntry, Hyper as ManifestHyper, Manifest, MlpConfigEntry, MlpHyper, ModelConfigEntry,
     ModelHyper, TensorSpec,
 };
+#[cfg(feature = "pjrt")]
+pub use pjrt::{Engine, Executable, PjrtExecutor};
 
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Arc;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
 
-use anyhow::{Context, Result};
-use std::sync::Mutex;
+use anyhow::{bail, Context, Result};
 
-/// Lazily-compiled, cached library of every artifact in `manifest.json`.
-///
-/// Artifact names are manifest-relative: `"common/adama_acc_65536"`,
-/// `"tiny/block_fwd"`, `"mlp_small/mlp_train"`.
-pub struct ArtifactLibrary {
-    engine: Arc<Engine>,
-    root: PathBuf,
+/// Lazily-loaded, cached library of every program in the manifest,
+/// dispatched through a backend-neutral [`Executor`].
+pub struct Library {
+    executor: Arc<dyn Executor>,
     manifest: Manifest,
-    cache: Mutex<HashMap<String, Arc<Executable>>>,
+    cache: Mutex<HashMap<String, Arc<dyn Program>>>,
 }
 
-impl ArtifactLibrary {
-    /// Open the artifact directory produced by `make artifacts`.
-    pub fn open(root: impl AsRef<Path>, engine: Arc<Engine>) -> Result<Self> {
+/// Backward-compatible name from the PJRT-only era.
+pub type ArtifactLibrary = Library;
+
+impl Library {
+    /// Pure-rust host library with the built-in default manifest — runs on
+    /// a clean machine with zero native dependencies.
+    pub fn host() -> Arc<Self> {
+        Self::with_executor(Arc::new(HostExecutor::new()), Manifest::builtin())
+    }
+
+    /// Library over an explicit executor + manifest pair.
+    pub fn with_executor(executor: Arc<dyn Executor>, manifest: Manifest) -> Arc<Self> {
+        Arc::new(Self { executor, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Open the artifact directory produced by `make artifacts` on a PJRT
+    /// engine.
+    #[cfg(feature = "pjrt")]
+    pub fn open(root: impl AsRef<std::path::Path>, engine: Arc<Engine>) -> Result<Self> {
         let root = root.as_ref().to_path_buf();
         let manifest = Manifest::load(root.join("manifest.json"))?;
-        Ok(Self { engine, root, manifest, cache: Mutex::new(HashMap::new()) })
+        Ok(Self {
+            executor: Arc::new(PjrtExecutor::new(root, engine)),
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
     }
 
     /// Locate the artifact root: `$ADAMA_ARTIFACTS`, `./artifacts`, or the
@@ -57,44 +87,83 @@ impl ArtifactLibrary {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
 
-    /// Open the default artifact root with a fresh CPU engine.
+    /// Open the default library.
+    ///
+    /// With the `pjrt` feature and an artifact directory present this is
+    /// the PJRT backend; otherwise the pure-rust host executor with the
+    /// built-in manifest. `ADAMA_BACKEND=host` forces the host executor;
+    /// `ADAMA_BACKEND=pjrt` fails loudly instead of falling back.
     pub fn open_default() -> Result<Arc<Self>> {
+        let forced = std::env::var("ADAMA_BACKEND").unwrap_or_default();
+        match forced.as_str() {
+            "" | "host" | "pjrt" => {}
+            other => bail!("unknown ADAMA_BACKEND '{other}' (expected host|pjrt)"),
+        }
+        if forced == "pjrt" && !cfg!(feature = "pjrt") {
+            bail!("ADAMA_BACKEND=pjrt but this build lacks the `pjrt` cargo feature");
+        }
+        if forced != "host" {
+            if let Some(lib) = Self::try_open_pjrt()? {
+                return Ok(lib);
+            }
+            if forced == "pjrt" {
+                bail!(
+                    "ADAMA_BACKEND=pjrt but no artifacts at {} (run `make artifacts`)",
+                    Self::default_root().display()
+                );
+            }
+        }
+        Ok(Self::host())
+    }
+
+    /// PJRT arm of [`Library::open_default`]: `Some` when the feature is
+    /// compiled in and an artifact directory exists.
+    #[cfg(feature = "pjrt")]
+    fn try_open_pjrt() -> Result<Option<Arc<Self>>> {
+        let root = Self::default_root();
+        if !root.join("manifest.json").exists() {
+            return Ok(None);
+        }
         let engine = Arc::new(Engine::cpu()?);
-        Ok(Arc::new(Self::open(Self::default_root(), engine)?))
+        Ok(Some(Arc::new(Self::open(root, engine)?)))
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn try_open_pjrt() -> Result<Option<Arc<Self>>> {
+        Ok(None)
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
-    pub fn engine(&self) -> &Arc<Engine> {
-        &self.engine
+    /// The backend this library dispatches to.
+    pub fn executor(&self) -> &Arc<dyn Executor> {
+        &self.executor
     }
 
     /// Manifest entry (shapes/dtypes) for `group/name`.
     pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
         self.manifest
             .entry(name)
-            .with_context(|| format!("no artifact '{name}' in manifest"))
+            .with_context(|| format!("no program '{name}' in manifest"))
     }
 
-    /// Compile (or fetch from cache) the executable for `group/name`.
-    pub fn get(&self, name: &str) -> Result<Arc<Executable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(name) {
-            return Ok(exe.clone());
+    /// Load (or fetch from cache) the program for `group/name`.
+    pub fn get(&self, name: &str) -> Result<Arc<dyn Program>> {
+        if let Some(p) = self.cache.lock().unwrap().get(name) {
+            return Ok(p.clone());
         }
         let entry = self.entry(name)?;
-        let path = self.root.join(&entry.file);
-        let exe = Arc::new(
-            self.engine
-                .compile_hlo_file(&path)
-                .with_context(|| format!("compiling artifact '{name}'"))?,
-        );
-        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
-        Ok(exe)
+        let prog = self
+            .executor
+            .load(name, entry, &self.manifest)
+            .with_context(|| format!("loading program '{name}'"))?;
+        self.cache.lock().unwrap().insert(name.to_string(), prog.clone());
+        Ok(prog)
     }
 
-    /// Eagerly compile a set of artifacts (startup warm-up).
+    /// Eagerly load a set of programs (startup warm-up).
     pub fn warm(&self, names: &[&str]) -> Result<()> {
         for n in names {
             self.get(n)?;
@@ -102,8 +171,42 @@ impl ArtifactLibrary {
         Ok(())
     }
 
-    /// Number of compiled executables currently cached.
+    /// Number of loaded programs currently cached.
     pub fn compiled_count(&self) -> usize {
         self.cache.lock().unwrap().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_library_loads_and_caches_programs() {
+        let lib = Library::host();
+        assert_eq!(lib.executor().platform(), "host");
+        let a = lib.get("common/adama_acc_16384").unwrap();
+        let n = lib.compiled_count();
+        let _b = lib.get("common/adama_acc_16384").unwrap();
+        assert_eq!(lib.compiled_count(), n, "cache must be reused");
+        // programs execute and bump the call counter
+        let m = vec![0.0f32; 8];
+        let out = a
+            .run(&[
+                Arg::F32(&m, &[8]),
+                Arg::F32(&m, &[8]),
+                Arg::F32(&m, &[8]),
+                Arg::F32(&[1.0], &[1]),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        assert!(lib.executor().exec_calls() >= 1);
+    }
+
+    #[test]
+    fn unknown_program_is_a_clear_error() {
+        let lib = Library::host();
+        let err = lib.get("common/definitely_missing_1").unwrap_err();
+        assert!(format!("{err:?}").contains("definitely_missing"), "{err:?}");
     }
 }

@@ -1,0 +1,190 @@
+//! PJRT backend (cargo feature `pjrt`): loads AOT artifacts (HLO text)
+//! and executes them through the PJRT C API.
+//!
+//! The interchange format is HLO *text* — jax >= 0.5 serialized protos use
+//! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids and round-trips cleanly.
+//!
+//! The raw `xla` crate types hold C pointers and are `!Send`; PJRT's C API
+//! is documented thread-safe (clients, executables and literals may be
+//! used concurrently), so we expose `Send + Sync` wrappers and keep all
+//! mutation inside XLA. Worker threads in the data-parallel simulator
+//! share one CPU client and its compiled executables through these
+//! wrappers.
+//!
+//! This is the only module in the crate that names `xla` types; everything
+//! above it speaks [`Value`]/[`Program`]/[`Executor`].
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{ensure, Context, Result};
+
+use super::exec::{Arg, Executor, Program, Value};
+use super::manifest::{ArtifactEntry, Manifest, TensorSpec};
+
+/// Thread-safe PJRT CPU client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    /// Total `execute` calls issued through this engine (perf accounting).
+    exec_calls: Arc<AtomicU64>,
+}
+
+// SAFETY: PJRT C API objects (client/executable/buffer) are thread-safe per
+// the PJRT API contract; the `xla` crate merely forgot the marker impls.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Create a CPU PJRT client (the testbed substrate for the paper's
+    /// GPUs — see DESIGN.md §Substitutions).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, exec_calls: Arc::new(AtomicU64::new(0)) })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Parse HLO text and compile it to a loaded executable.
+    pub fn compile_hlo_file(&self, path: &Path, entry: &ArtifactEntry) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            exe,
+            client: self.client.clone(),
+            calls: self.exec_calls.clone(),
+            outputs: entry.outputs.clone(),
+        })
+    }
+
+    /// Total number of PJRT `execute` calls issued (metrics).
+    pub fn exec_calls(&self) -> u64 {
+        self.exec_calls.load(Ordering::Relaxed)
+    }
+}
+
+/// A compiled HLO module.
+///
+/// All artifacts are lowered with `return_tuple=True`, so execution always
+/// yields one tuple literal which [`Program::run`] decomposes.
+///
+/// NOTE: inputs go through `buffer_from_host_buffer` + `execute_b` with
+/// buffers this wrapper owns. The published `xla` 0.1.6 crate's
+/// `execute()` (literal inputs) leaks every input device buffer —
+/// `input_buffer_ptrs.push_back(buffer.release())` in `xla_rs.cc` with no
+/// corresponding free — which at our call volume (~1.3k PJRT calls per
+/// small-model step) is ~250 MB/step. Creating `PjRtBuffer`s ourselves
+/// restores RAII ownership.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    client: xla::PjRtClient,
+    calls: Arc<AtomicU64>,
+    /// Output dtypes/shapes from the manifest (PJRT literals do not carry
+    /// enough metadata through the thin bindings to recover them).
+    outputs: Vec<TensorSpec>,
+}
+
+// SAFETY: see `Engine` — PJRT executables are thread-safe.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    fn literal_to_value(&self, idx: usize, lit: &xla::Literal) -> Result<Value> {
+        let spec = self
+            .outputs
+            .get(idx)
+            .with_context(|| format!("artifact returned unexpected output #{idx}"))?;
+        ensure!(
+            lit.element_count() == spec.elements(),
+            "output #{idx}: literal has {} elements, manifest says {}",
+            lit.element_count(),
+            spec.elements()
+        );
+        match spec.dtype.as_str() {
+            "s32" => Value::i32(lit.to_vec::<i32>().context("literal -> Vec<i32>")?, &spec.shape),
+            "f32" => Value::f32(lit.to_vec::<f32>().context("literal -> Vec<f32>")?, &spec.shape),
+            other => anyhow::bail!("output #{idx}: unsupported manifest dtype '{other}'"),
+        }
+    }
+}
+
+impl Program for Executable {
+    /// Execute straight from host slices (no intermediate `Literal`) —
+    /// one memcpy per argument into XLA-owned device buffers.
+    fn run(&self, args: &[Arg<'_>]) -> Result<Vec<Value>> {
+        let inputs: Vec<xla::PjRtBuffer> = args
+            .iter()
+            .map(|a| match a {
+                Arg::F32(d, s) => self.client.buffer_from_host_buffer(d, s, None),
+                Arg::I32(d, s) => self.client.buffer_from_host_buffer(d, s, None),
+            })
+            .collect::<std::result::Result<_, _>>()
+            .context("host slice -> device buffer")?;
+        let bufs = self.exe.execute_b(&inputs).context("PJRT execute_b")?;
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        ensure!(
+            !bufs.is_empty() && !bufs[0].is_empty(),
+            "PJRT execution returned no output buffers"
+        );
+        let lit = bufs[0][0].to_literal_sync().context("device->host transfer")?;
+        let lits = lit.to_tuple().context("decomposing output tuple")?;
+        lits.iter()
+            .enumerate()
+            .map(|(i, l)| self.literal_to_value(i, l))
+            .collect()
+    }
+}
+
+/// [`Executor`] over a PJRT engine + an artifact directory.
+pub struct PjrtExecutor {
+    engine: Arc<Engine>,
+    root: PathBuf,
+}
+
+impl PjrtExecutor {
+    pub fn new(root: impl Into<PathBuf>, engine: Arc<Engine>) -> Self {
+        Self { engine, root: root.into() }
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn platform(&self) -> String {
+        self.engine.platform_name()
+    }
+
+    fn load(
+        &self,
+        name: &str,
+        entry: &ArtifactEntry,
+        _manifest: &Manifest,
+    ) -> Result<Arc<dyn Program>> {
+        let path = self.root.join(&entry.file);
+        let exe = self
+            .engine
+            .compile_hlo_file(&path, entry)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        Ok(Arc::new(exe))
+    }
+
+    fn exec_calls(&self) -> u64 {
+        self.engine.exec_calls()
+    }
+}

@@ -1,22 +1,19 @@
-//! Shared test helpers: artifact discovery + hyper constants.
+//! Shared test helpers: library discovery + hyper constants.
+#![allow(dead_code)] // each test crate uses a different subset
 
 use std::sync::Arc;
 
-use adama::runtime::ArtifactLibrary;
+use adama::runtime::Library;
 
-/// Adam hyper-parameters baked into the artifacts (mirrors ref.py).
+/// Adam hyper-parameters baked into the kernels (mirrors ref.py).
 pub const B1: f32 = 0.9;
 pub const B2: f32 = 0.999;
-#[allow(dead_code)]
 pub const EPS: f32 = 1e-8;
 
-/// Open the artifact library, or skip (return None) when `make artifacts`
-/// has not run — keeps `cargo test` usable before the python build.
-pub fn artifacts_or_skip() -> Option<Arc<ArtifactLibrary>> {
-    let root = ArtifactLibrary::default_root();
-    if !root.join("manifest.json").exists() {
-        eprintln!("SKIP: no artifacts at {} (run `make artifacts`)", root.display());
-        return None;
-    }
-    Some(ArtifactLibrary::open_default().expect("opening artifact library"))
+/// Open the default execution library. With the `pjrt` feature *and* an
+/// artifact directory this is the PJRT backend; otherwise the pure-rust
+/// host executor with the built-in manifest — so these tests always have
+/// a backend and never skip.
+pub fn library() -> Arc<Library> {
+    Library::open_default().expect("opening execution library")
 }

@@ -11,7 +11,7 @@ use adama::runtime::ArtifactLibrary;
 use adama::{Category, Trainer};
 
 mod common;
-use common::artifacts_or_skip;
+use common::library;
 
 const DATA_SEED: u64 = 77;
 
@@ -64,7 +64,7 @@ fn dp_state_allreduce_equals_single_device_nm() {
     // step the match is float-exact (modulo reduction order); over more
     // steps tiny differences amplify through 1/sqrt(v)≈1/|g| when v is
     // still near zero, so drift is bounded by ~one LR-sized step.
-    let Some(lib) = artifacts_or_skip() else { return };
+    let lib = library();
     let (m, n) = (2usize, 2usize);
     for (steps, tol) in [(1u64, 2e-5f32), (3u64, 1e-3f32)] {
         let report = run_data_parallel(
@@ -93,7 +93,7 @@ fn dp_state_allreduce_equals_single_device_nm() {
 
 #[test]
 fn dp_grad_allreduce_equals_single_device_ga() {
-    let Some(lib) = artifacts_or_skip() else { return };
+    let lib = library();
     let (m, n) = (2usize, 2usize);
     for (steps, tol) in [(1u64, 2e-5f32), (3u64, 1e-3f32)] {
         let report = run_data_parallel(
@@ -121,7 +121,7 @@ fn dp_grad_allreduce_equals_single_device_ga() {
 
 #[test]
 fn dp_four_workers_converges_and_ranks_agree() {
-    let Some(lib) = artifacts_or_skip() else { return };
+    let lib = library();
     let report = run_data_parallel(
         lib,
         DpSpec {
@@ -140,7 +140,7 @@ fn dp_four_workers_converges_and_ranks_agree() {
 #[test]
 fn comm_volume_state_sync_constant_in_n_grad_sync_linear() {
     // §3.3: state all-reduce is O(1) per mini-batch, naive grad sync O(N).
-    let Some(lib) = artifacts_or_skip() else { return };
+    let lib = library();
     let vol = |sync, n| {
         let r = run_data_parallel(
             lib.clone(),
@@ -166,7 +166,7 @@ fn comm_volume_state_sync_constant_in_n_grad_sync_linear() {
 
 #[test]
 fn comm_volume_state_vs_grad_ratio_is_two() {
-    let Some(lib) = artifacts_or_skip() else { return };
+    let lib = library();
     let run = |sync, opt| {
         run_data_parallel(
             lib.clone(),
@@ -187,7 +187,7 @@ fn comm_volume_state_vs_grad_ratio_is_two() {
 #[test]
 fn zero1_ga_matches_ddp_ga() {
     // ZeRO-S1 partitioning must not change the math, only the memory.
-    let Some(lib) = artifacts_or_skip() else { return };
+    let lib = library();
     let (m, n, steps) = (2usize, 2usize, 3u64);
     let zero = run_zero1(
         lib.clone(),
@@ -210,7 +210,7 @@ fn zero1_ga_matches_ddp_ga() {
 
 #[test]
 fn zero1_adama_converges_and_shards_states() {
-    let Some(lib) = artifacts_or_skip() else { return };
+    let lib = library();
     let (m, n, steps) = (2usize, 2usize, 4u64);
     let report = run_zero1(
         lib.clone(),
@@ -237,7 +237,7 @@ fn zero1_adama_converges_and_shards_states() {
 #[test]
 fn zero1_adama_memory_beats_zero1_ga() {
     // Fig 6b shape: ZeRO-S1+AdamA < ZeRO-S1(+GA) on gradients.
-    let Some(lib) = artifacts_or_skip() else { return };
+    let lib = library();
     let run = |opt| {
         run_zero1(
             lib.clone(),
@@ -256,7 +256,7 @@ fn zero1_adama_memory_beats_zero1_ga() {
 
 #[test]
 fn dp_rejects_invalid_combos() {
-    let Some(lib) = artifacts_or_skip() else { return };
+    let lib = library();
     // state sync without AdamA is an error
     let err = run_data_parallel(
         lib.clone(),
@@ -278,7 +278,7 @@ fn dp_rejects_invalid_combos() {
 
 #[test]
 fn single_worker_dp_matches_plain_trainer() {
-    let Some(lib) = artifacts_or_skip() else { return };
+    let lib = library();
     let report = run_data_parallel(
         lib.clone(),
         DpSpec {
@@ -304,7 +304,7 @@ fn single_worker_dp_matches_plain_trainer() {
 #[test]
 fn tracker_gradient_category_zero_when_idle() {
     // after a run, transient gradient allocations must balance out
-    let Some(lib) = artifacts_or_skip() else { return };
+    let lib = library();
     let mut t = Trainer::new(lib, cfg(OptimizerKind::AdamA, 1, 2)).unwrap();
     let h = t.spec().hyper.clone();
     let mut c = MarkovCorpus::new(h.vocab, 1, 2);

@@ -1,16 +1,19 @@
-//! Integration tests over the PJRT runtime + AOT artifacts.
+//! Integration tests over the execution runtime — kernel programs, model
+//! programs and the end-to-end `Trainer`.
 //!
-//! Require `make artifacts` to have run (skipped otherwise).
+//! Run against whichever backend `Library::open_default` selects: the
+//! pure-rust host executor on a clean machine, or PJRT + AOT artifacts
+//! when built with the `pjrt` feature and `make artifacts` has run.
 
-use adama::runtime::{lit_f32, lit_i32, to_vec_f32};
+use adama::runtime::{lit_f32, lit_i32, scalar_f32, to_vec_f32};
 use adama::tensor::Rng;
 
 mod common;
-use common::{artifacts_or_skip, B1, B2};
+use common::{library, B1, B2};
 
 #[test]
 fn adama_acc_kernel_matches_host_math() {
-    let Some(lib) = artifacts_or_skip() else { return };
+    let lib = library();
     let chunk = 16384usize;
     let exe = lib.get(&format!("common/adama_acc_{chunk}")).unwrap();
 
@@ -21,7 +24,7 @@ fn adama_acc_kernel_matches_host_math() {
     let gscale = 0.25f32;
 
     let out = exe
-        .run(&[
+        .run_v(&[
             lit_f32(&m, &[chunk]).unwrap(),
             lit_f32(&v, &[chunk]).unwrap(),
             lit_f32(&g, &[chunk]).unwrap(),
@@ -43,7 +46,7 @@ fn adama_acc_kernel_matches_host_math() {
 
 #[test]
 fn adam_update_kernel_matches_host_math() {
-    let Some(lib) = artifacts_or_skip() else { return };
+    let lib = library();
     let chunk = 16384usize;
     let exe = lib.get(&format!("common/adam_update_{chunk}")).unwrap();
 
@@ -54,7 +57,7 @@ fn adam_update_kernel_matches_host_math() {
     let (lr, bc1, bc2) = (1e-3f32, 0.1f32, 0.001f32);
 
     let out = exe
-        .run(&[
+        .run_v(&[
             lit_f32(&p, &[chunk]).unwrap(),
             lit_f32(&m, &[chunk]).unwrap(),
             lit_f32(&v, &[chunk]).unwrap(),
@@ -70,7 +73,7 @@ fn adam_update_kernel_matches_host_math() {
 
 #[test]
 fn tiny_model_forward_shapes_and_loss() {
-    let Some(lib) = artifacts_or_skip() else { return };
+    let lib = library();
     let cfg = lib.manifest().model_config("tiny").unwrap().clone();
     let (b, s, h, v) = (cfg.model.microbatch, cfg.model.seq, cfg.model.hidden, cfg.model.vocab);
 
@@ -83,7 +86,7 @@ fn tiny_model_forward_shapes_and_loss() {
     let p: Vec<f32> = (0..s * h).map(|_| 0.02 * rng.normal()).collect();
 
     let x = embed
-        .run(&[
+        .run_v(&[
             lit_i32(&tokens, &[b, s]).unwrap(),
             lit_f32(&e, &[v, h]).unwrap(),
             lit_f32(&p, &[s, h]).unwrap(),
@@ -96,7 +99,7 @@ fn tiny_model_forward_shapes_and_loss() {
     let w: Vec<f32> = (0..h * v).map(|_| 0.02 * rng.normal()).collect();
     let labels: Vec<i32> = (0..b * s).map(|_| rng.below(v) as i32).collect();
     let out = head
-        .run(&[
+        .run_v(&[
             lit_f32(&xv, &[b, s, h]).unwrap(),
             lit_f32(&w, &[h, v]).unwrap(),
             lit_i32(&labels, &[b, s]).unwrap(),
@@ -104,17 +107,17 @@ fn tiny_model_forward_shapes_and_loss() {
         .unwrap();
     // (loss, dx, dW)
     assert_eq!(out.len(), 3);
-    let loss = out[0].get_first_element::<f32>().unwrap();
+    let loss = scalar_f32(&out[0]).unwrap();
     // near-uniform logits => loss ~ ln(vocab)
     let expect = (v as f32).ln();
     assert!((loss - expect).abs() < 0.5, "loss {loss} vs ln(V) {expect}");
-    assert_eq!(out[1].element_count(), b * s * h);
-    assert_eq!(out[2].element_count(), h * v);
+    assert_eq!(out[1].len(), b * s * h);
+    assert_eq!(out[2].len(), h * v);
 }
 
 #[test]
 fn executable_cache_reuses_compilations() {
-    let Some(lib) = artifacts_or_skip() else { return };
+    let lib = library();
     let _a = lib.get("common/grad_acc_16384").unwrap();
     let mid = lib.compiled_count();
     let _b = lib.get("common/grad_acc_16384").unwrap();
@@ -143,7 +146,7 @@ fn tiny_cfg(opt: OptimizerKind, backend: OptimBackend, n: usize) -> TrainConfig 
 
 #[test]
 fn trainer_loss_decreases_adama_kernel() {
-    let Some(lib) = artifacts_or_skip() else { return };
+    let lib = library();
     let cfg = tiny_cfg(OptimizerKind::AdamA, OptimBackend::Kernel, 2);
     let mut t = Trainer::new(lib, cfg).unwrap();
     let h = t.spec().hyper.clone();
@@ -165,7 +168,7 @@ fn trainer_loss_decreases_adama_kernel() {
 #[test]
 fn adama_vs_ga_same_m_different_v() {
     // m_t identical for any N; training trajectories stay close.
-    let Some(lib) = artifacts_or_skip() else { return };
+    let lib = library();
     let mk = |o| {
         Trainer::new(lib.clone(), tiny_cfg(o, OptimBackend::Host, 4)).unwrap()
     };
@@ -200,7 +203,7 @@ fn adama_vs_ga_same_m_different_v() {
 fn memory_invariants_adama_vs_ga() {
     // DESIGN.md §5.4: GA's gradient peak carries the full model; AdamA's
     // only the largest layer (transient).
-    let Some(lib) = artifacts_or_skip() else { return };
+    let lib = library();
     let run = |o| {
         let mut t = Trainer::new(lib.clone(), tiny_cfg(o, OptimBackend::Host, 2)).unwrap();
         let h = t.spec().hyper.clone();
@@ -222,7 +225,7 @@ fn memory_invariants_adama_vs_ga() {
 
 #[test]
 fn kernel_and_host_backends_agree() {
-    let Some(lib) = artifacts_or_skip() else { return };
+    let lib = library();
     let mut tk =
         Trainer::new(lib.clone(), tiny_cfg(OptimizerKind::AdamA, OptimBackend::Kernel, 2)).unwrap();
     let mut th =
@@ -256,7 +259,7 @@ fn kernel_and_host_backends_agree() {
 
 #[test]
 fn eval_accuracy_improves_with_training() {
-    let Some(lib) = artifacts_or_skip() else { return };
+    let lib = library();
     let cfg = tiny_cfg(OptimizerKind::AdamA, OptimBackend::Kernel, 2);
     let mut t = Trainer::new(lib, cfg).unwrap();
     let h = t.spec().hyper.clone();
@@ -275,7 +278,7 @@ fn eval_accuracy_improves_with_training() {
 
 #[test]
 fn checkpoint_roundtrip_through_trainer() {
-    let Some(lib) = artifacts_or_skip() else { return };
+    let lib = library();
     let mut t =
         Trainer::new(lib.clone(), tiny_cfg(OptimizerKind::AdamA, OptimBackend::Host, 2)).unwrap();
     let h = t.spec().hyper.clone();
@@ -297,8 +300,9 @@ fn checkpoint_roundtrip_through_trainer() {
 #[test]
 fn rss_stays_flat_over_training() {
     // Regression test for the upstream xla-0.1.6 `execute()` input-buffer
-    // leak (see runtime/engine.rs): 60 tiny steps must not grow RSS by
-    // more than a few MB once warm.
+    // leak (see runtime/pjrt.rs); on the host backend it doubles as a
+    // buffer-churn leak check. 60 tiny steps must not grow RSS by more
+    // than a few MB once warm.
     fn rss_kb() -> usize {
         std::fs::read_to_string("/proc/self/statm")
             .ok()
@@ -307,7 +311,7 @@ fn rss_stays_flat_over_training() {
             .map(|pages| pages * 4)
             .unwrap_or(0)
     }
-    let Some(lib) = artifacts_or_skip() else { return };
+    let lib = library();
     let mut t =
         Trainer::new(lib, tiny_cfg(OptimizerKind::AdamA, OptimBackend::Kernel, 2)).unwrap();
     let h = t.spec().hyper.clone();
@@ -327,7 +331,7 @@ fn rss_stays_flat_over_training() {
 fn sgdma_extension_trains() {
     // §5 extension: momentum-SGD accumulation learns the task through the
     // same layer-wise release protocol.
-    let Some(lib) = artifacts_or_skip() else { return };
+    let lib = library();
     let mut cfg = tiny_cfg(OptimizerKind::SgdmA, OptimBackend::Kernel, 2);
     cfg.lr = adama::config::LrSchedule::constant(0.05);
     let mut t = Trainer::new(lib, cfg).unwrap();
@@ -352,7 +356,7 @@ fn sgdma_extension_trains() {
 
 #[test]
 fn adamwa_weight_decay_shrinks_weight_norm() {
-    let Some(lib) = artifacts_or_skip() else { return };
+    let lib = library();
     let norm_after = |wd: f32| {
         let mut cfg = tiny_cfg(OptimizerKind::AdamA, OptimBackend::Kernel, 2);
         cfg.weight_decay = wd;

@@ -1,0 +1,178 @@
+//! Offline shim for the `anyhow` crate.
+//!
+//! The build environment for this repository has no registry access, so the
+//! subset of the `anyhow` API the workspace uses is reimplemented here as a
+//! path dependency: [`Error`], [`Result`], the [`Context`] extension trait
+//! (for both `Result` and `Option`), and the `anyhow!` / `bail!` /
+//! `ensure!` macros. Drop-in source compatibility with real `anyhow` is the
+//! goal — swapping the path dependency for the crates.io release must not
+//! require any code change.
+
+use std::fmt;
+
+/// A context-carrying error: an outermost message plus a cause chain.
+pub struct Error {
+    /// Outermost context first; the last entry is the root cause.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an additional layer of context.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.chain.split_first() {
+            None => Ok(()),
+            Some((head, rest)) => {
+                f.write_str(head)?;
+                for cause in rest {
+                    write!(f, "\n\nCaused by:\n    {cause}")?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+// Like real anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which keeps this blanket conversion coherent.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Self { chain }
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` defaulting its error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("root {}", 42)
+    }
+
+    #[test]
+    fn context_layers_display_and_debug() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: root 42");
+        assert_eq!(e.root_cause(), "root 42");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+    }
+
+    #[test]
+    fn option_context_and_ensure() {
+        let v: Option<u32> = None;
+        assert!(v.context("missing").is_err());
+        let ok: Option<u32> = Some(3);
+        assert_eq!(ok.with_context(|| "never").unwrap(), 3);
+
+        fn check(x: i32) -> Result<()> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            ensure!(x < 10);
+            Ok(())
+        }
+        assert!(check(5).is_ok());
+        assert!(check(-1).unwrap_err().to_string().contains("positive"));
+        assert!(check(11).unwrap_err().to_string().contains("x < 10"));
+    }
+
+    #[test]
+    fn std_errors_convert_with_source_chain() {
+        fn io_fail() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/real/path")?;
+            Ok(s)
+        }
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+}

@@ -1,0 +1,212 @@
+//! Compile-time **stub** of the `xla` PJRT bindings.
+//!
+//! The `pjrt` cargo feature of the `adama` crate must type-check on any
+//! machine — including ones without the native `xla_extension` toolchain —
+//! so this crate mirrors exactly the API surface `runtime::pjrt` uses.
+//! Every runtime entry point returns [`Error`] with a clear message; to
+//! actually execute AOT artifacts, patch the real bindings in at the
+//! workspace level:
+//!
+//! ```toml
+//! [patch."crates-io"]          # or a [patch] on this path dependency
+//! xla = { path = "/path/to/real/xla-rs" }
+//! ```
+
+use std::fmt;
+
+/// Error returned by every stubbed runtime entry point.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: this build links the stub `vendor/xla` crate; patch in the \
+         real xla PJRT bindings to execute AOT artifacts"
+    )))
+}
+
+/// XLA primitive types (subset used by the artifacts: f32 / s32).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    F32,
+    S32,
+}
+
+/// Element-type tags mirroring the real crate's `ElementType`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    pub fn primitive_type(self) -> PrimitiveType {
+        match self {
+            ElementType::F32 => PrimitiveType::F32,
+            ElementType::S32 => PrimitiveType::S32,
+        }
+    }
+}
+
+/// Host element types storable in literals/buffers.
+pub trait ArrayElement: Copy {
+    const TY: ElementType;
+    const ELEMENT_SIZE_IN_BYTES: usize;
+}
+
+impl ArrayElement for f32 {
+    const TY: ElementType = ElementType::F32;
+    const ELEMENT_SIZE_IN_BYTES: usize = 4;
+}
+
+impl ArrayElement for i32 {
+    const TY: ElementType = ElementType::S32;
+    const ELEMENT_SIZE_IN_BYTES: usize = 4;
+}
+
+/// PJRT client handle (stub).
+#[derive(Clone)]
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_literal")
+    }
+
+    pub fn buffer_from_host_buffer<T: ArrayElement>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        Self { _priv: () }
+    }
+}
+
+/// Loaded executable (stub).
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// Device buffer (stub).
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Host literal (stub).
+pub struct Literal {
+    _priv: (),
+}
+
+impl Literal {
+    pub fn create_from_shape(_ty: PrimitiveType, _dims: &[usize]) -> Literal {
+        Literal { _priv: () }
+    }
+
+    pub fn copy_raw_from<T: ArrayElement>(&mut self, _src: &[T]) -> Result<()> {
+        unavailable("Literal::copy_raw_from")
+    }
+
+    pub fn copy_raw_to<T: ArrayElement>(&self, _dst: &mut [T]) -> Result<()> {
+        unavailable("Literal::copy_raw_to")
+    }
+
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn element_count(&self) -> usize {
+        0
+    }
+
+    pub fn get_first_element<T: ArrayElement>(&self) -> Result<T> {
+        unavailable("Literal::get_first_element")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_loudly_with_guidance() {
+        let err = PjRtClient::cpu().err().expect("stub must not create clients");
+        assert!(err.to_string().contains("stub"), "{err}");
+    }
+
+    #[test]
+    fn element_types_map() {
+        assert_eq!(ElementType::F32.primitive_type(), PrimitiveType::F32);
+        assert_eq!(<i32 as ArrayElement>::ELEMENT_SIZE_IN_BYTES, 4);
+    }
+}
