@@ -20,7 +20,12 @@ fn main() -> anyhow::Result<()> {
     // 1. open the default library: host executor on a clean machine,
     //    PJRT artifacts when built with `--features pjrt` + `make artifacts`
     let lib = Library::open_default()?;
-    println!("execution backend: {}", lib.executor().platform());
+    println!(
+        "execution backend: {} ({} pool thread(s); set ADAMA_THREADS to override — \
+         results are bit-identical at any thread count)",
+        lib.executor().platform(),
+        lib.executor().threads()
+    );
 
     // ---- part 1: MLP classifier with AdamA ----
     let cfg = TrainConfig {

@@ -4,15 +4,21 @@
 //!   * chunked optimizer kernels (program dispatch) vs raw host loops,
 //!     per chunk size;
 //!   * a micro-batch forward+backward over the model programs;
-//!   * a full tiny train step (end-to-end floor).
+//!   * a full tiny train step (end-to-end floor);
+//!   * thread-pool scaling: matmul and the `small` transformer block
+//!     forward at 1/2/4 pool threads (per-thread-count rows, so the
+//!     speedup is machine-recorded in the trajectory).
 //!
 //! Besides the human-readable table, writes `BENCH_perf.json` —
-//! machine-readable ns/elem per kernel per backend — so subsequent PRs
-//! have a perf trajectory to regress against.
+//! machine-readable ns/elem per kernel per backend (each row tagged with
+//! its pool thread count) — so subsequent PRs have a perf trajectory to
+//! regress against.
 
 use adama::config::{OptimBackend, OptimizerKind};
 use adama::data::MarkovCorpus;
 use adama::optim::{host_math, ChunkRunner, Hyper};
+use adama::runtime::hostexec::math;
+use adama::runtime::{Library, ThreadPool, Value};
 use adama::tensor::Rng;
 use adama::util::json::{obj, Json};
 use adama::util::stats::bench;
@@ -41,11 +47,13 @@ fn main() {
     let g: Vec<f32> = (0..n_total).map(|_| rng.normal()).collect();
     let hyper = Hyper { beta1: 0.9, beta2: 0.999, eps: 1e-8 };
 
+    let pool_threads = lib.executor().threads();
     let mut record = |op: &str, chunk: usize, backend: &str, secs_per_call: f64| {
         results.push(obj(vec![
             ("op", op.into()),
             ("chunk", chunk.into()),
             ("backend", backend.into()),
+            ("threads", pool_threads.into()),
             ("ns_per_elem", (secs_per_call * 1e9 / n_total as f64).into()),
             ("ms_per_call", (secs_per_call * 1e3).into()),
         ]));
@@ -109,6 +117,7 @@ fn main() {
         results.push(obj(vec![
             ("op", "microbatch_fwd_bwd_tiny".into()),
             ("backend", Json::Str(platform.clone())),
+            ("threads", pool_threads.into()),
             ("ms_per_call", (s.mean() * 1e3).into()),
         ]));
     }
@@ -135,7 +144,76 @@ fn main() {
                 }
                 .into(),
             ),
+            ("threads", pool_threads.into()),
             ("ms_per_call", (s.mean() * 1e3).into()),
+        ]));
+    }
+
+    banner("threadpool scaling: matmul + transformer block (1/2/4 threads)");
+    println!("{:<18} {:>8} {:>12} {:>10}", "op", "threads", "ms/call", "speedup");
+    let dim = if quick() { 96 } else { 256 };
+    let mut mrng = Rng::new(7);
+    let ma: Vec<f32> = (0..dim * dim).map(|_| mrng.normal()).collect();
+    let mb: Vec<f32> = (0..dim * dim).map(|_| mrng.normal()).collect();
+    let mut mo = vec![0.0f32; dim * dim];
+    let mut matmul_1t = 0.0f64;
+    for threads in [1usize, 2, 4] {
+        let pool = ThreadPool::new(threads);
+        let s = bench(1, iters, || {
+            math::matmul(&pool, &ma, &mb, dim, dim, dim, &mut mo);
+        });
+        if threads == 1 {
+            matmul_1t = s.mean();
+        }
+        let speedup = matmul_1t / s.mean();
+        println!(
+            "{:<18} {:>8} {:>12.3} {:>9.2}x",
+            format!("matmul_{dim}"),
+            threads,
+            1e3 * s.mean(),
+            speedup
+        );
+        results.push(obj(vec![
+            ("op", Json::Str(format!("matmul_{dim}"))),
+            ("backend", "host".into()),
+            ("threads", threads.into()),
+            ("ms_per_call", (s.mean() * 1e3).into()),
+            ("speedup_vs_1thread", speedup.into()),
+        ]));
+    }
+    // attention-dominated path: the `small` transformer block forward
+    let mut arng = Rng::new(11);
+    let mut block_1t = 0.0f64;
+    for threads in [1usize, 2, 4] {
+        let tlib = Library::host_with_threads(threads);
+        let entry = tlib.entry("small/block_fwd").expect("small/block_fwd entry");
+        let inputs: Vec<Value> = entry
+            .inputs
+            .iter()
+            .map(|spec| {
+                let data: Vec<f32> =
+                    (0..spec.elements()).map(|_| 0.1 * arng.normal()).collect();
+                Value::f32(data, &spec.shape).unwrap()
+            })
+            .collect();
+        let prog = tlib.get("small/block_fwd").expect("small/block_fwd program");
+        let s = bench(1, iters.min(5), || {
+            prog.run_v(&inputs).unwrap();
+        });
+        if threads == 1 {
+            block_1t = s.mean();
+        }
+        let speedup = block_1t / s.mean();
+        println!(
+            "{:<18} {:>8} {:>12.3} {:>9.2}x",
+            "block_fwd_small", threads, 1e3 * s.mean(), speedup
+        );
+        results.push(obj(vec![
+            ("op", "block_fwd_small".into()),
+            ("backend", "host".into()),
+            ("threads", threads.into()),
+            ("ms_per_call", (s.mean() * 1e3).into()),
+            ("speedup_vs_1thread", speedup.into()),
         ]));
     }
 

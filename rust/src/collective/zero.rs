@@ -116,6 +116,9 @@ pub fn run_zero1(lib: Arc<Library>, spec: Zero1Spec) -> Result<Zero1Report> {
     if m < 2 {
         bail!("ZeRO-S1 needs >= 2 workers");
     }
+    // One OS thread per rank: pin the host pool to 1 worker per rank
+    // (see `run_data_parallel`) — avoids oversubscription, same bits.
+    let lib = lib.fork_with_threads(1);
     let handles = CommGroup::new(m);
     let stats = handles[0].stats().clone();
     let t0 = std::time::Instant::now();

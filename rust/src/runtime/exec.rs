@@ -188,6 +188,13 @@ pub trait Executor: Send + Sync {
     /// Total program executions issued through this executor (perf
     /// accounting; mirrors the PJRT execute-call counter).
     fn exec_calls(&self) -> u64;
+
+    /// Worker threads the backend uses for intra-program parallelism
+    /// (1 = serial). The host executor sizes this from `ADAMA_THREADS`;
+    /// backends without an in-process pool report 1.
+    fn threads(&self) -> usize {
+        1
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -7,11 +7,19 @@
 //! with the same positional signatures as the AOT artifacts, so the
 //! kernel-dispatch path (`ChunkRunner`) is bit-for-bit identical to the
 //! host-loop path.
+//!
+//! The program wrappers split each chunk into contiguous element spans
+//! across the executor's thread pool; every kernel is purely element-wise,
+//! so the split cannot change a single bit regardless of thread count
+//! (the serial free functions below remain the oracles).
+
+use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::runtime::exec::{Arg, Program, Value};
 use crate::runtime::manifest::Hyper;
+use crate::runtime::pool::ThreadPool;
 
 // ---------------------------------------------------------------------------
 // scalar reference math (ref.py oracles)
@@ -149,12 +157,13 @@ struct Kernel {
     b1: f32,
     b2: f32,
     eps: f32,
+    pool: Arc<ThreadPool>,
 }
 
 /// Resolve a `common/` short name (e.g. `"adama_decay_acc_16384"`) to its
 /// host program. The trailing chunk size is parsed but not enforced — the
 /// host kernels are shape-polymorphic over the buffer length.
-pub(super) fn build(short: &str, hyper: &Hyper) -> Result<Box<dyn Program>> {
+pub(super) fn build(short: &str, hyper: &Hyper, pool: Arc<ThreadPool>) -> Result<Box<dyn Program>> {
     let (op, chunk) = short
         .rsplit_once('_')
         .and_then(|(op, c)| c.parse::<usize>().ok().map(|c| (op, c)))
@@ -179,6 +188,7 @@ pub(super) fn build(short: &str, hyper: &Hyper) -> Result<Box<dyn Program>> {
         b1: hyper.beta1 as f32,
         b2: hyper.beta2 as f32,
         eps: hyper.eps as f32,
+        pool,
     }))
 }
 
@@ -209,27 +219,35 @@ impl Program for Kernel {
         let n = args[0].len();
         let shape = args[0].shape();
         let (b1, b2, eps) = (self.b1, self.b2, self.eps);
+        let pool = &self.pool;
         Ok(match self.kind {
             Kind::AdamaAcc => {
                 let (mut m, mut v) = (buf(args, 0, n)?.to_vec(), buf(args, 1, n)?.to_vec());
                 let g = buf(args, 2, n)?;
-                let sc = scalars(args, 3, 1)?;
-                adama_acc(&mut m, &mut v, g, sc[0], b1, b2);
+                let gscale = scalars(args, 3, 1)?[0];
+                pool.for_spans2(&mut m, &mut v, |off, mm, vv| {
+                    adama_acc(mm, vv, &g[off..off + mm.len()], gscale, b1, b2);
+                });
                 vec![out(m, shape), out(v, shape)]
             }
             Kind::AdamaDecayAcc => {
                 let (mut m, mut v) = (buf(args, 0, n)?.to_vec(), buf(args, 1, n)?.to_vec());
                 let g = buf(args, 2, n)?;
                 let sc = scalars(args, 3, 3)?; // [gscale, ms, vs]
-                adama_decay_acc(&mut m, &mut v, g, sc[0], sc[1], sc[2], b1, b2);
+                let (gscale, msc, vsc) = (sc[0], sc[1], sc[2]);
+                pool.for_spans2(&mut m, &mut v, |off, mm, vv| {
+                    adama_decay_acc(mm, vv, &g[off..off + mm.len()], gscale, msc, vsc, b1, b2);
+                });
                 vec![out(m, shape), out(v, shape)]
             }
             Kind::AdamaDecay => {
                 let (mut m, mut v) = (buf(args, 0, n)?.to_vec(), buf(args, 1, n)?.to_vec());
                 let ms = scalars(args, 2, 1)?[0];
                 let vs = scalars(args, 3, 1)?[0];
-                scale(&mut m, ms);
-                scale(&mut v, vs);
+                pool.for_spans2(&mut m, &mut v, |_, mm, vv| {
+                    scale(mm, ms);
+                    scale(vv, vs);
+                });
                 vec![out(m, shape), out(v, shape)]
             }
             Kind::AdamUpdate => {
@@ -237,7 +255,11 @@ impl Program for Kernel {
                 let m = buf(args, 1, n)?;
                 let v = buf(args, 2, n)?;
                 let sc = scalars(args, 3, 3)?; // [lr, bc1, bc2]
-                adam_update(&mut p, m, v, sc[0], sc[1], sc[2], eps);
+                let (lr, bc1, bc2) = (sc[0], sc[1], sc[2]);
+                pool.for_spans(&mut p, |off, pp| {
+                    let end = off + pp.len();
+                    adam_update(pp, &m[off..end], &v[off..end], lr, bc1, bc2, eps);
+                });
                 vec![out(p, shape)]
             }
             Kind::AdamFull => {
@@ -245,14 +267,19 @@ impl Program for Kernel {
                 let (mut m, mut v) = (buf(args, 1, n)?.to_vec(), buf(args, 2, n)?.to_vec());
                 let g = buf(args, 3, n)?;
                 let sc = scalars(args, 4, 3)?;
-                adam_full(&mut p, &mut m, &mut v, g, sc[0], sc[1], sc[2], b1, b2, eps);
+                let (lr, bc1, bc2) = (sc[0], sc[1], sc[2]);
+                pool.for_spans3(&mut p, &mut m, &mut v, |off, pp, mm, vv| {
+                    adam_full(pp, mm, vv, &g[off..off + pp.len()], lr, bc1, bc2, b1, b2, eps);
+                });
                 vec![out(p, shape), out(m, shape), out(v, shape)]
             }
             Kind::GradAcc => {
                 let mut acc = buf(args, 0, n)?.to_vec();
                 let g = buf(args, 1, n)?;
-                let sc = scalars(args, 2, 1)?;
-                grad_acc(&mut acc, g, sc[0]);
+                let gscale = scalars(args, 2, 1)?[0];
+                pool.for_spans(&mut acc, |off, aa| {
+                    grad_acc(aa, &g[off..off + aa.len()], gscale);
+                });
                 vec![out(acc, shape)]
             }
             Kind::AdamaAccUpdate => {
@@ -261,8 +288,11 @@ impl Program for Kernel {
                 let g = buf(args, 3, n)?;
                 let gscale = scalars(args, 4, 1)?[0];
                 let sc = scalars(args, 5, 3)?;
-                adama_acc(&mut m, &mut v, g, gscale, b1, b2);
-                adam_update(&mut p, &m, &v, sc[0], sc[1], sc[2], eps);
+                let (lr, bc1, bc2) = (sc[0], sc[1], sc[2]);
+                pool.for_spans3(&mut p, &mut m, &mut v, |off, pp, mm, vv| {
+                    adama_acc(mm, vv, &g[off..off + pp.len()], gscale, b1, b2);
+                    adam_update(pp, mm, vv, lr, bc1, bc2, eps);
+                });
                 vec![out(p, shape), out(m, shape), out(v, shape)]
             }
             Kind::AdamwUpdate => {
@@ -270,28 +300,40 @@ impl Program for Kernel {
                 let m = buf(args, 1, n)?;
                 let v = buf(args, 2, n)?;
                 let sc = scalars(args, 3, 4)?; // [lr, bc1, bc2, wd]
-                adamw_update(&mut p, m, v, sc[0], sc[1], sc[2], sc[3], eps);
+                let (lr, bc1, bc2, wd) = (sc[0], sc[1], sc[2], sc[3]);
+                pool.for_spans(&mut p, |off, pp| {
+                    let end = off + pp.len();
+                    adamw_update(pp, &m[off..end], &v[off..end], lr, bc1, bc2, wd, eps);
+                });
                 vec![out(p, shape)]
             }
             Kind::SgdmDecayAcc => {
                 let mut u = buf(args, 0, n)?.to_vec();
                 let g = buf(args, 1, n)?;
                 let sc = scalars(args, 2, 2)?; // [gscale, mu]
-                sgdm_decay_acc(&mut u, g, sc[0], sc[1]);
+                let (gscale, mu) = (sc[0], sc[1]);
+                pool.for_spans(&mut u, |off, uu| {
+                    sgdm_decay_acc(uu, &g[off..off + uu.len()], gscale, mu);
+                });
                 vec![out(u, shape)]
             }
             Kind::SgdmAcc => {
                 let mut u = buf(args, 0, n)?.to_vec();
                 let g = buf(args, 1, n)?;
-                let sc = scalars(args, 2, 1)?;
-                sgdm_acc(&mut u, g, sc[0]);
+                let gscale = scalars(args, 2, 1)?[0];
+                pool.for_spans(&mut u, |off, uu| {
+                    sgdm_acc(uu, &g[off..off + uu.len()], gscale);
+                });
                 vec![out(u, shape)]
             }
             Kind::SgdmUpdate => {
                 let mut p = buf(args, 0, n)?.to_vec();
                 let u = buf(args, 1, n)?;
                 let sc = scalars(args, 2, 2)?; // [lr, wd]
-                sgdm_update(&mut p, u, sc[0], sc[1]);
+                let (lr, wd) = (sc[0], sc[1]);
+                pool.for_spans(&mut p, |off, pp| {
+                    sgdm_update(pp, &u[off..off + pp.len()], lr, wd);
+                });
                 vec![out(p, shape)]
             }
         })
@@ -307,18 +349,22 @@ mod tests {
         Hyper { beta1: 0.9, beta2: 0.999, eps: 1e-8 }
     }
 
+    fn tp(threads: usize) -> Arc<ThreadPool> {
+        Arc::new(ThreadPool::new(threads))
+    }
+
     #[test]
     fn kernel_name_parsing() {
-        assert!(build("adama_acc_16384", &hyper()).is_ok());
-        assert!(build("adama_decay_acc_1048576", &hyper()).is_ok());
-        assert!(build("sgdm_update_16384", &hyper()).is_ok());
-        assert!(build("nonsense_16384", &hyper()).is_err());
-        assert!(build("adama_acc", &hyper()).is_err());
+        assert!(build("adama_acc_16384", &hyper(), tp(1)).is_ok());
+        assert!(build("adama_decay_acc_1048576", &hyper(), tp(1)).is_ok());
+        assert!(build("sgdm_update_16384", &hyper(), tp(1)).is_ok());
+        assert!(build("nonsense_16384", &hyper(), tp(1)).is_err());
+        assert!(build("adama_acc", &hyper(), tp(1)).is_err());
     }
 
     #[test]
     fn program_matches_scalar_math_bitwise() {
-        let prog = build("adama_acc_8", &hyper()).unwrap();
+        let prog = build("adama_acc_8", &hyper(), tp(2)).unwrap();
         let m = vec![0.5f32, -1.0, 2.0, 0.0];
         let v = vec![0.1f32, 0.2, 0.0, 3.0];
         let g = vec![1.0f32, -2.0, 0.25, 4.0];
@@ -334,6 +380,45 @@ mod tests {
         adama_acc(&mut m2, &mut v2, &g, 0.5, 0.9, 0.999);
         assert_eq!(outv[0].as_f32().unwrap(), &m2[..]);
         assert_eq!(outv[1].as_f32().unwrap(), &v2[..]);
+    }
+
+    #[test]
+    fn parallel_program_matches_scalar_math_bitwise_on_big_chunks() {
+        // 5000 elements clears the pool's serial cutoff: the span split is
+        // live, and must not change a single bit vs the serial oracle.
+        let n = 5000usize;
+        let m: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+        let v: Vec<f32> = (0..n).map(|i| (i as f32 * 0.11).cos().abs()).collect();
+        let g: Vec<f32> = (0..n).map(|i| (i as f32 * 0.73).sin() * 2.0).collect();
+        let p: Vec<f32> = (0..n).map(|i| (i as f32 * 0.19).cos()).collect();
+        for threads in [1usize, 4] {
+            let acc = build("adama_acc_16384", &hyper(), tp(threads)).unwrap();
+            let got = acc
+                .run(&[
+                    Arg::F32(&m, &[n]),
+                    Arg::F32(&v, &[n]),
+                    Arg::F32(&g, &[n]),
+                    Arg::F32(&[0.25], &[1]),
+                ])
+                .unwrap();
+            let (mut m2, mut v2) = (m.clone(), v.clone());
+            adama_acc(&mut m2, &mut v2, &g, 0.25, 0.9, 0.999);
+            assert_eq!(got[0].as_f32().unwrap(), &m2[..], "{threads} threads: m");
+            assert_eq!(got[1].as_f32().unwrap(), &v2[..], "{threads} threads: v");
+
+            let upd = build("adam_update_16384", &hyper(), tp(threads)).unwrap();
+            let got = upd
+                .run(&[
+                    Arg::F32(&p, &[n]),
+                    Arg::F32(&m2, &[n]),
+                    Arg::F32(&v2, &[n]),
+                    Arg::F32(&[1e-3, 0.1, 0.001], &[3]),
+                ])
+                .unwrap();
+            let mut p2 = p.clone();
+            adam_update(&mut p2, &m2, &v2, 1e-3, 0.1, 0.001, 1e-8);
+            assert_eq!(got[0].as_f32().unwrap(), &p2[..], "{threads} threads: p");
+        }
     }
 
     #[test]

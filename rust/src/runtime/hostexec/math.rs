@@ -1,16 +1,35 @@
-//! Dense f32 math for the host executor's model programs.
+//! Dense f32 math for the host executor's model programs, parallelised
+//! over the deterministic chunked thread pool ([`crate::runtime::pool`]).
 //!
-//! Deliberately simple loops (ikj matmul ordering for cache behaviour) —
-//! the host backend is the reference/CI substrate, not the speed record;
-//! the shapes involved (tiny/small configs) are far below BLAS crossover.
+//! Loops stay deliberately simple (ikj matmul ordering for cache
+//! behaviour) — the host backend is the reference/CI substrate, not the
+//! speed record — but the row-independent kernels (`matmul*`,
+//! `layer_norm`, `softmax_xent`) split their *output rows* across pool
+//! workers. Each output cell keeps the exact per-element accumulation
+//! order of the serial loop, so results are bit-for-bit identical at any
+//! thread count (locked down by `rust/tests/determinism.rs`).
+//!
+//! Cross-row reductions (`col_sums`, `layer_norm_bwd`'s dg/db, the NLL
+//! sum) are order-sensitive, so they either stay serial or reduce
+//! fixed-size per-row partials in ascending row order.
 
-/// `out[m,n] = a[m,k] @ b[k,n]`.
-pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+use crate::runtime::pool::ThreadPool;
+
+/// `out[m,n] = a[m,k] @ b[k,n]`. Output rows are pool-parallel; each row's
+/// accumulation order (p ascending) matches the serial loop.
+pub fn matmul(
+    pool: &ThreadPool,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
-    for i in 0..m {
-        let row = &mut out[i * n..(i + 1) * n];
+    pool.for_rows(out, n, |i, row| {
         row.fill(0.0);
         for p in 0..k {
             let aip = a[i * k + p];
@@ -19,46 +38,64 @@ pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32
                 *o += aip * bv;
             }
         }
-    }
+    });
 }
 
 /// `out[m,n] = aᵀ @ b` with `a:[p,m]`, `b:[p,n]` (weight-gradient shape).
-pub fn matmul_tn(a: &[f32], b: &[f32], p: usize, m: usize, n: usize, out: &mut [f32]) {
+/// Restructured from the r-outer serial form to row-parallel with the
+/// same per-cell accumulation order (r ascending).
+pub fn matmul_tn(
+    pool: &ThreadPool,
+    a: &[f32],
+    b: &[f32],
+    p: usize,
+    m: usize,
+    n: usize,
+    out: &mut [f32],
+) {
     debug_assert_eq!(a.len(), p * m);
     debug_assert_eq!(b.len(), p * n);
     debug_assert_eq!(out.len(), m * n);
-    out.fill(0.0);
-    for r in 0..p {
-        let brow = &b[r * n..(r + 1) * n];
-        for i in 0..m {
+    pool.for_rows(out, n, |i, row| {
+        row.fill(0.0);
+        for r in 0..p {
             let ari = a[r * m + i];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
+            let brow = &b[r * n..(r + 1) * n];
+            for (o, &bv) in row.iter_mut().zip(brow) {
                 *o += ari * bv;
             }
         }
-    }
+    });
 }
 
 /// `out[m,n] = a @ bᵀ` with `a:[m,k]`, `b:[n,k]` (input-gradient shape).
-pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+pub fn matmul_nt(
+    pool: &ThreadPool,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     debug_assert_eq!(out.len(), m * n);
-    for i in 0..m {
+    pool.for_rows(out, n, |i, row| {
         let arow = &a[i * k..(i + 1) * k];
-        for j in 0..n {
+        for (j, o) in row.iter_mut().enumerate() {
             let brow = &b[j * k..(j + 1) * k];
             let mut acc = 0.0f32;
             for (&av, &bv) in arow.iter().zip(brow) {
                 acc += av * bv;
             }
-            out[i * n + j] = acc;
+            *o = acc;
         }
-    }
+    });
 }
 
-/// Add a `[cols]` bias to every row of `x:[rows, cols]`.
+/// Add a `[cols]` bias to every row of `x:[rows, cols]`. Serial: cheap
+/// O(rows·cols) relative to the adjacent matmuls.
 pub fn add_bias(x: &mut [f32], bias: &[f32]) {
     for row in x.chunks_mut(bias.len()) {
         for (v, &b) in row.iter_mut().zip(bias) {
@@ -67,7 +104,8 @@ pub fn add_bias(x: &mut [f32], bias: &[f32]) {
     }
 }
 
-/// `out[j] = Σ_i x[i,j]` — bias-gradient column sums.
+/// `out[j] = Σ_i x[i,j]` — bias-gradient column sums. Serial on purpose:
+/// the row-order float accumulation is the determinism contract.
 pub fn col_sums(x: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
     debug_assert_eq!(x.len(), rows * cols);
     debug_assert_eq!(out.len(), cols);
@@ -100,24 +138,34 @@ pub fn gelu_grad(x: f32) -> f32 {
 pub const LN_EPS: f32 = 1e-5;
 
 /// Row-wise layer norm: `out = (x - mu)/sqrt(var + eps) * g + b` with the
-/// biased variance (1/cols), matching `jnp.var`.
-pub fn layer_norm(x: &[f32], g: &[f32], b: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
+/// biased variance (1/cols), matching `jnp.var`. Rows are pool-parallel
+/// (each output row depends only on its input row).
+pub fn layer_norm(
+    pool: &ThreadPool,
+    x: &[f32],
+    g: &[f32],
+    b: &[f32],
+    rows: usize,
+    cols: usize,
+    out: &mut [f32],
+) {
     debug_assert_eq!(x.len(), rows * cols);
     debug_assert_eq!(out.len(), rows * cols);
-    for r in 0..rows {
+    pool.for_rows(out, cols, |r, oi| {
         let xi = &x[r * cols..(r + 1) * cols];
-        let oi = &mut out[r * cols..(r + 1) * cols];
         let mu = xi.iter().sum::<f32>() / cols as f32;
         let var = xi.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / cols as f32;
         let rstd = 1.0 / (var + LN_EPS).sqrt();
         for j in 0..cols {
             oi[j] = (xi[j] - mu) * rstd * g[j] + b[j];
         }
-    }
+    });
 }
 
 /// Layer-norm backward: accumulates `dx` (+=, for residual fan-in) and
-/// fills `dg`/`db` gradients (+= as well, caller zeroes).
+/// fills `dg`/`db` gradients (+= as well, caller zeroes). Serial: dg/db
+/// accumulate across rows, which is the order-sensitive part.
+#[allow(clippy::too_many_arguments)]
 pub fn layer_norm_bwd(
     x: &[f32],
     g: &[f32],
@@ -163,7 +211,12 @@ pub fn layer_norm_bwd(
 /// Per-row softmax cross-entropy over `logits:[rows, cols]` with integer
 /// labels. Returns `(total_nll, ncorrect)` and fills `dlogits` with the
 /// *unscaled* `(softmax - onehot)` — callers divide by the token count.
+///
+/// Rows are pool-parallel into `dlogits` plus per-row `[nll, correct]`
+/// partials; the partials then reduce serially in ascending row order, so
+/// the f64 NLL sum is bit-identical to the fully serial loop.
 pub fn softmax_xent(
+    pool: &ThreadPool,
     logits: &[f32],
     labels: &[i32],
     rows: usize,
@@ -173,9 +226,8 @@ pub fn softmax_xent(
     debug_assert_eq!(logits.len(), rows * cols);
     debug_assert_eq!(labels.len(), rows);
     debug_assert_eq!(dlogits.len(), rows * cols);
-    let mut nll = 0.0f64;
-    let mut ncorrect = 0i32;
-    for r in 0..rows {
+    let mut row_stats = vec![0.0f64; rows * 2]; // [nll, correct] per row
+    pool.for_rows2(dlogits, cols, &mut row_stats, 2, |r, di, stat| {
         let li = &logits[r * cols..(r + 1) * cols];
         let label = labels[r] as usize;
         debug_assert!(label < cols);
@@ -188,11 +240,7 @@ pub fn softmax_xent(
                 amax = j;
             }
         }
-        if amax == label {
-            ncorrect += 1;
-        }
         let mut sum = 0.0f32;
-        let di = &mut dlogits[r * cols..(r + 1) * cols];
         for (d, &v) in di.iter_mut().zip(li) {
             let e = (v - mx).exp();
             *d = e;
@@ -202,8 +250,15 @@ pub fn softmax_xent(
         for d in di.iter_mut() {
             *d *= inv_sum; // now softmax probabilities
         }
-        nll += -((li[label] - mx) - sum.ln()) as f64;
+        stat[0] = -((li[label] - mx) - sum.ln()) as f64;
+        stat[1] = f64::from(u8::from(amax == label));
         di[label] -= 1.0; // softmax - onehot
+    });
+    let mut nll = 0.0f64;
+    let mut ncorrect = 0i32;
+    for stat in row_stats.chunks_exact(2) {
+        nll += stat[0];
+        ncorrect += stat[1] as i32;
     }
     (nll, ncorrect)
 }
@@ -212,18 +267,23 @@ pub fn softmax_xent(
 mod tests {
     use super::*;
 
+    fn serial() -> ThreadPool {
+        ThreadPool::new(1)
+    }
+
     #[test]
     fn matmul_agrees_with_transposed_forms() {
+        let pool = serial();
         // a:[2,3], b:[3,2]
         let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
         let b = [7.0, 8.0, 9.0, 10.0, 11.0, 12.0];
         let mut ab = [0.0f32; 4];
-        matmul(&a, &b, 2, 3, 2, &mut ab);
+        matmul(&pool, &a, &b, 2, 3, 2, &mut ab);
         assert_eq!(ab, [58.0, 64.0, 139.0, 154.0]);
 
         // aᵀ@b with a stored as [p=2, m=3] must equal matmul of transposed a
         let mut tn = [0.0f32; 9];
-        matmul_tn(&a, &a, 2, 3, 3, &mut tn);
+        matmul_tn(&pool, &a, &a, 2, 3, 3, &mut tn);
         // (aᵀa)[i][j] = sum_r a[r,i] a[r,j]
         assert_eq!(tn[0], 1.0 * 1.0 + 4.0 * 4.0);
         assert_eq!(tn[4], 2.0 * 2.0 + 5.0 * 5.0);
@@ -231,17 +291,52 @@ mod tests {
         // a@bᵀ with b stored as [n=3, k=3]
         let c = [1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0];
         let mut nt = [0.0f32; 6];
-        matmul_nt(&a, &c, 2, 3, 3, &mut nt);
+        matmul_nt(&pool, &a, &c, 2, 3, 3, &mut nt);
         assert_eq!(nt, a);
     }
 
     #[test]
+    fn parallel_rows_bitwise_match_serial() {
+        // big enough to clear the pool's inline cutoff on every path
+        let (m, k, n) = (48usize, 17usize, 40usize);
+        let a: Vec<f32> = (0..m * k).map(|i| ((i * 37 + 11) as f32 * 0.01).sin()).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| ((i * 13 + 5) as f32 * 0.02).cos()).collect();
+        let pool1 = ThreadPool::new(1);
+        for threads in [2usize, 3, 7] {
+            let poolt = ThreadPool::new(threads);
+            let mut o1 = vec![0.0f32; m * n];
+            let mut o2 = vec![0.0f32; m * n];
+            matmul(&pool1, &a, &b, m, k, n, &mut o1);
+            matmul(&poolt, &a, &b, m, k, n, &mut o2);
+            assert!(o1.iter().zip(&o2).all(|(x, y)| x.to_bits() == y.to_bits()));
+
+            let g: Vec<f32> = (0..n).map(|j| 1.0 + 0.01 * j as f32).collect();
+            let bias = vec![0.1f32; n];
+            let mut l1 = vec![0.0f32; m * n];
+            let mut l2 = vec![0.0f32; m * n];
+            layer_norm(&pool1, &o1, &g, &bias, m, n, &mut l1);
+            layer_norm(&poolt, &o1, &g, &bias, m, n, &mut l2);
+            assert!(l1.iter().zip(&l2).all(|(x, y)| x.to_bits() == y.to_bits()));
+
+            let labels: Vec<i32> = (0..m).map(|r| (r % n) as i32).collect();
+            let mut d1 = vec![0.0f32; m * n];
+            let mut d2 = vec![0.0f32; m * n];
+            let (nll1, nc1) = softmax_xent(&pool1, &l1, &labels, m, n, &mut d1);
+            let (nll2, nc2) = softmax_xent(&poolt, &l1, &labels, m, n, &mut d2);
+            assert_eq!(nll1.to_bits(), nll2.to_bits());
+            assert_eq!(nc1, nc2);
+            assert!(d1.iter().zip(&d2).all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
+    }
+
+    #[test]
     fn layer_norm_rows_are_standardised() {
+        let pool = serial();
         let x = [1.0f32, 2.0, 3.0, 4.0];
         let g = [1.0f32, 1.0, 1.0, 1.0];
         let b = [0.0f32; 4];
         let mut out = [0.0f32; 4];
-        layer_norm(&x, &g, &b, 1, 4, &mut out);
+        layer_norm(&pool, &x, &g, &b, 1, 4, &mut out);
         let mean: f32 = out.iter().sum::<f32>() / 4.0;
         let var: f32 = out.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
         assert!(mean.abs() < 1e-6);
@@ -250,6 +345,7 @@ mod tests {
 
     #[test]
     fn layer_norm_bwd_matches_finite_differences() {
+        let pool = serial();
         let x = [0.3f32, -0.7, 1.1, 0.4, 0.9, -0.2, 0.05, -1.3];
         let g = [1.1f32, 0.9, 1.0, 1.2];
         let b = [0.1f32, -0.1, 0.0, 0.2];
@@ -263,7 +359,7 @@ mod tests {
 
         let loss = |x: &[f32], g: &[f32], b: &[f32]| -> f32 {
             let mut out = vec![0.0f32; 8];
-            layer_norm(x, g, b, rows, cols, &mut out);
+            layer_norm(&pool, x, g, b, rows, cols, &mut out);
             out.iter().zip(&dy).map(|(o, d)| o * d).sum()
         };
         let eps = 1e-2f32;
@@ -296,10 +392,11 @@ mod tests {
 
     #[test]
     fn softmax_xent_uniform_is_ln_n_and_grads_sum_to_zero() {
+        let pool = serial();
         let logits = [0.0f32; 8]; // 2 rows x 4 classes
         let labels = [1i32, 3];
         let mut d = [0.0f32; 8];
-        let (nll, ncorrect) = softmax_xent(&logits, &labels, 2, 4, &mut d);
+        let (nll, ncorrect) = softmax_xent(&pool, &logits, &labels, 2, 4, &mut d);
         assert!(((nll / 2.0) - (4.0f64).ln()).abs() < 1e-6);
         assert_eq!(ncorrect, 0); // argmax is index 0 on ties
         for r in 0..2 {

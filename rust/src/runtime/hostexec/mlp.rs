@@ -4,17 +4,28 @@
 //! Model: `logits = relu(x @ W1 + b1) @ W2 + b2`, mean token cross-entropy
 //! over the micro-batch. `mlp_train` returns the loss and the gradients
 //! w.r.t. (W1, b1, W2, b2) — not x — exactly like the lowered artifact.
+//!
+//! The matmuls and the softmax run on the executor's deterministic thread
+//! pool; the element-wise relu maps stay serial (trivial next to the
+//! matmuls, and unaffected by the determinism contract either way).
+
+use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use super::math;
 use crate::runtime::exec::{Arg, Program, Value};
 use crate::runtime::manifest::MlpHyper;
+use crate::runtime::pool::ThreadPool;
 
-pub(super) fn build(short: &str, hyper: &MlpHyper) -> Result<Box<dyn Program>> {
+pub(super) fn build(
+    short: &str,
+    hyper: &MlpHyper,
+    pool: Arc<ThreadPool>,
+) -> Result<Box<dyn Program>> {
     match short {
-        "mlp_train" => Ok(Box::new(MlpProgram { hyper: hyper.clone(), train: true })),
-        "mlp_eval" => Ok(Box::new(MlpProgram { hyper: hyper.clone(), train: false })),
+        "mlp_train" => Ok(Box::new(MlpProgram { hyper: hyper.clone(), train: true, pool })),
+        "mlp_eval" => Ok(Box::new(MlpProgram { hyper: hyper.clone(), train: false, pool })),
         other => bail!("host executor: unknown mlp program '{other}'"),
     }
 }
@@ -22,6 +33,7 @@ pub(super) fn build(short: &str, hyper: &MlpHyper) -> Result<Box<dyn Program>> {
 struct MlpProgram {
     hyper: MlpHyper,
     train: bool,
+    pool: Arc<ThreadPool>,
 }
 
 struct MlpArgs<'a> {
@@ -62,18 +74,19 @@ impl Program for MlpProgram {
         let a = self.unpack(args)?;
         let (d, hd, c) = (self.hyper.features, self.hyper.hidden, self.hyper.classes);
         let b = a.batch;
+        let pool = &self.pool;
 
         // forward
         let mut h1 = vec![0.0f32; b * hd];
-        math::matmul(a.x, a.w1, b, d, hd, &mut h1);
+        math::matmul(pool, a.x, a.w1, b, d, hd, &mut h1);
         math::add_bias(&mut h1, a.b1);
         let hr: Vec<f32> = h1.iter().map(|&v| v.max(0.0)).collect();
         let mut logits = vec![0.0f32; b * c];
-        math::matmul(&hr, a.w2, b, hd, c, &mut logits);
+        math::matmul(pool, &hr, a.w2, b, hd, c, &mut logits);
         math::add_bias(&mut logits, a.b2);
 
         let mut dlogits = vec![0.0f32; b * c];
-        let (nll, ncorrect) = math::softmax_xent(&logits, a.labels, b, c, &mut dlogits);
+        let (nll, ncorrect) = math::softmax_xent(pool, &logits, a.labels, b, c, &mut dlogits);
         let loss = (nll / b as f64) as f32;
 
         if !self.train {
@@ -86,16 +99,16 @@ impl Program for MlpProgram {
             *v *= inv_b;
         }
         let mut dw2 = vec![0.0f32; hd * c];
-        math::matmul_tn(&hr, &dlogits, b, hd, c, &mut dw2);
+        math::matmul_tn(pool, &hr, &dlogits, b, hd, c, &mut dw2);
         let mut db2 = vec![0.0f32; c];
         math::col_sums(&dlogits, b, c, &mut db2);
         let mut dhr = vec![0.0f32; b * hd];
-        math::matmul_nt(&dlogits, a.w2, b, c, hd, &mut dhr);
+        math::matmul_nt(pool, &dlogits, a.w2, b, c, hd, &mut dhr);
         // relu'
         let dh1: Vec<f32> =
             dhr.iter().zip(&h1).map(|(&g, &u)| if u > 0.0 { g } else { 0.0 }).collect();
         let mut dw1 = vec![0.0f32; d * hd];
-        math::matmul_tn(a.x, &dh1, b, d, hd, &mut dw1);
+        math::matmul_tn(pool, a.x, &dh1, b, d, hd, &mut dw1);
         let mut db1 = vec![0.0f32; hd];
         math::col_sums(&dh1, b, hd, &mut db1);
 
@@ -116,6 +129,10 @@ mod tests {
 
     fn hyper() -> MlpHyper {
         MlpHyper { features: 5, hidden: 7, classes: 3, microbatch: 4 }
+    }
+
+    fn tp() -> Arc<ThreadPool> {
+        Arc::new(ThreadPool::new(1))
     }
 
     struct Setup {
@@ -142,7 +159,7 @@ mod tests {
     }
 
     fn loss_of(s: &Setup) -> f32 {
-        let prog = MlpProgram { hyper: hyper(), train: false };
+        let prog = MlpProgram { hyper: hyper(), train: false, pool: tp() };
         let out = prog
             .run(&[
                 Arg::F32(&s.x, &[4, 5]),
@@ -159,7 +176,7 @@ mod tests {
     #[test]
     fn train_grads_match_finite_differences() {
         let s = setup();
-        let prog = MlpProgram { hyper: hyper(), train: true };
+        let prog = MlpProgram { hyper: hyper(), train: true, pool: tp() };
         let out = prog
             .run(&[
                 Arg::F32(&s.x, &[4, 5]),
@@ -220,7 +237,7 @@ mod tests {
     #[test]
     fn eval_counts_correct_predictions() {
         let s = setup();
-        let prog = MlpProgram { hyper: hyper(), train: false };
+        let prog = MlpProgram { hyper: hyper(), train: false, pool: tp() };
         let out = prog
             .run(&[
                 Arg::F32(&s.x, &[4, 5]),
@@ -240,7 +257,7 @@ mod tests {
     #[test]
     fn rejects_malformed_arguments() {
         let s = setup();
-        let prog = MlpProgram { hyper: hyper(), train: true };
+        let prog = MlpProgram { hyper: hyper(), train: true, pool: tp() };
         // wrong arg count
         assert!(prog.run(&[Arg::F32(&s.x, &[4, 5])]).is_err());
         // out-of-range label

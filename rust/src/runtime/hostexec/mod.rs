@@ -13,8 +13,24 @@
 //! With this backend the full training stack — `Trainer`, `MlpTrainer`,
 //! the optimizer zoo, the DP/ZeRO thread simulators and the memory
 //! tracker — runs end-to-end with zero native dependencies.
+//!
+//! ## Parallelism & the determinism contract
+//!
+//! Every program runs its hot loops on the executor's in-tree
+//! deterministic thread pool ([`crate::runtime::pool`]): matmuls,
+//! layer norm, softmax-xent and attention split output rows across
+//! workers; the chunked optimizer kernels split element spans. Work is
+//! assigned as fixed contiguous ranges (no stealing) and each output
+//! element is written by exactly one worker with unchanged per-element
+//! arithmetic order, while cross-row reductions stay serial — so **every
+//! program is bit-for-bit identical at any thread count**
+//! (`rust/tests/determinism.rs` enforces this at `ADAMA_THREADS=1,2,3,8`).
+//!
+//! Thread count: `ADAMA_THREADS` (default: available parallelism);
+//! [`HostExecutor::with_threads`] pins it programmatically — the DP/ZeRO
+//! simulators pin 1 thread per rank via `Library::fork_with_threads`.
 
-mod math;
+pub mod math;
 
 pub mod kernels;
 mod mlp;
@@ -27,16 +43,32 @@ use anyhow::{Context, Result};
 
 use super::exec::{Arg, Executor, Program, Value};
 use super::manifest::{ArtifactEntry, Manifest};
+use super::pool::{self, ThreadPool};
 
 /// The always-available pure-rust executor.
-#[derive(Default)]
 pub struct HostExecutor {
     calls: Arc<AtomicU64>,
+    pool: Arc<ThreadPool>,
+}
+
+impl Default for HostExecutor {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl HostExecutor {
+    /// Pool size from `ADAMA_THREADS` / available parallelism.
     pub fn new() -> Self {
-        Self::default()
+        Self::with_threads(pool::default_threads())
+    }
+
+    /// Pin the intra-program pool to `threads` workers (1 = fully serial).
+    pub fn with_threads(threads: usize) -> Self {
+        Self {
+            calls: Arc::new(AtomicU64::new(0)),
+            pool: Arc::new(ThreadPool::new(threads)),
+        }
     }
 }
 
@@ -69,19 +101,23 @@ impl Executor for HostExecutor {
             .split_once('/')
             .with_context(|| format!("host executor: program name '{name}' lacks a group"))?;
         let inner: Box<dyn Program> = if group == "common" {
-            kernels::build(short, &manifest.hyper)?
+            kernels::build(short, &manifest.hyper, self.pool.clone())?
         } else if let Some(mlp_name) = group.strip_prefix("mlp_") {
             let cfg = manifest.mlp_config(mlp_name)?;
-            mlp::build(short, &cfg.model)?
+            mlp::build(short, &cfg.model, self.pool.clone())?
         } else {
             let cfg = manifest.model_config(group)?;
-            transformer::build(short, &cfg.model)?
+            transformer::build(short, &cfg.model, self.pool.clone())?
         };
         Ok(Arc::new(Counted { inner, calls: self.calls.clone() }))
     }
 
     fn exec_calls(&self) -> u64 {
         self.calls.load(Ordering::Relaxed)
+    }
+
+    fn threads(&self) -> usize {
+        self.pool.threads()
     }
 }
 
@@ -92,7 +128,8 @@ mod tests {
     #[test]
     fn loads_every_builtin_program() {
         let manifest = Manifest::builtin();
-        let exec = HostExecutor::new();
+        let exec = HostExecutor::with_threads(2);
+        assert_eq!(exec.threads(), 2);
         // every manifest entry must resolve to a host implementation
         let mut names: Vec<String> = Vec::new();
         for key in manifest.common.keys() {
@@ -119,7 +156,7 @@ mod tests {
     #[test]
     fn call_counter_increments() {
         let manifest = Manifest::builtin();
-        let exec = HostExecutor::new();
+        let exec = HostExecutor::with_threads(1);
         let entry = manifest.entry("common/grad_acc_16384").unwrap();
         let prog = exec.load("common/grad_acc_16384", entry, &manifest).unwrap();
         let acc = vec![0.0f32; 4];

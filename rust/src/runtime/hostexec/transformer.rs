@@ -11,22 +11,38 @@
 //!
 //! Gradients are hand-derived VJPs, verified against central finite
 //! differences in the test module below.
+//!
+//! Hot paths run on the deterministic thread pool: matmuls/layer-norm
+//! via [`math`], and the attention core parallelised over
+//! `(batch, head[, query-row])` tasks into disjoint per-task scratch that
+//! is merged serially afterwards. Each scratch element receives its
+//! contributions from exactly one task with the serial loop's
+//! accumulation order, so outputs are bit-identical at any thread count.
+
+use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use super::math;
 use crate::runtime::exec::{Arg, Program, Value};
 use crate::runtime::manifest::ModelHyper;
+use crate::runtime::pool::ThreadPool;
 
-pub(super) fn build(short: &str, h: &ModelHyper) -> Result<Box<dyn Program>> {
+pub(super) fn build(
+    short: &str,
+    h: &ModelHyper,
+    pool: Arc<ThreadPool>,
+) -> Result<Box<dyn Program>> {
     ensure!(h.heads > 0 && h.hidden % h.heads == 0, "hidden {} not divisible by heads {}", h.hidden, h.heads);
     Ok(match short {
-        "embed_fwd" => Box::new(EmbedFwd { vocab: h.vocab, hidden: h.hidden }) as Box<dyn Program>,
+        "embed_fwd" => {
+            Box::new(EmbedFwd { vocab: h.vocab, hidden: h.hidden, pool }) as Box<dyn Program>
+        }
         "embed_bwd" => Box::new(EmbedBwd { vocab: h.vocab, hidden: h.hidden }),
-        "block_fwd" => Box::new(BlockFwd { heads: h.heads }),
-        "block_bwd" => Box::new(BlockBwd { heads: h.heads }),
-        "head_loss" => Box::new(HeadLoss),
-        "head_eval" => Box::new(HeadEval),
+        "block_fwd" => Box::new(BlockFwd { heads: h.heads, pool }),
+        "block_bwd" => Box::new(BlockBwd { heads: h.heads, pool }),
+        "head_loss" => Box::new(HeadLoss { pool }),
+        "head_eval" => Box::new(HeadEval { pool }),
         other => bail!("host executor: unknown model program '{other}'"),
     })
 }
@@ -45,6 +61,7 @@ fn act_dims(a: &Arg<'_>) -> Result<(usize, usize, usize)> {
 struct EmbedFwd {
     vocab: usize,
     hidden: usize,
+    pool: Arc<ThreadPool>,
 }
 
 impl Program for EmbedFwd {
@@ -58,20 +75,20 @@ impl Program for EmbedFwd {
         let (b, s, h, v) = (sh[0], sh[1], self.hidden, self.vocab);
         ensure!(e.len() == v * h, "embed E shape");
         ensure!(p.len() == s * h, "embed P shape (seq {s})");
+        for &tok in tokens {
+            ensure!((0..v as i32).contains(&tok), "token {tok} out of range 0..{v}");
+        }
 
         let mut x = vec![0.0f32; b * s * h];
-        for bi in 0..b {
-            for si in 0..s {
-                let tok = tokens[bi * s + si];
-                ensure!((0..v as i32).contains(&tok), "token {tok} out of range 0..{v}");
-                let erow = &e[tok as usize * h..(tok as usize + 1) * h];
-                let prow = &p[si * h..(si + 1) * h];
-                let orow = &mut x[(bi * s + si) * h..(bi * s + si + 1) * h];
-                for j in 0..h {
-                    orow[j] = erow[j] + prow[j];
-                }
+        // one gather row per (batch, position) — row-parallel
+        self.pool.for_rows(&mut x, h, |rs, orow| {
+            let tok = tokens[rs] as usize;
+            let erow = &e[tok * h..(tok + 1) * h];
+            let prow = &p[(rs % s) * h..(rs % s + 1) * h];
+            for j in 0..h {
+                orow[j] = erow[j] + prow[j];
             }
-        }
+        });
         Ok(vec![Value::f32(x, &[b, s, h])?])
     }
 }
@@ -90,6 +107,8 @@ impl Program for EmbedBwd {
         ensure!(h == self.hidden, "embed_bwd hidden mismatch");
         ensure!(tokens.len() == b * s, "tokens/dx mismatch");
 
+        // serial: the dE scatter-add races on repeated tokens and is cheap
+        // (O(bs·h)) next to the block backward sweeps.
         let v = self.vocab;
         let mut de = vec![0.0f32; v * h];
         let mut dp = vec![0.0f32; s * h];
@@ -175,6 +194,7 @@ struct FwdState {
 }
 
 fn block_forward(
+    pool: &ThreadPool,
     x: &[f32],
     p: &BlockParams<'_>,
     b: usize,
@@ -189,69 +209,86 @@ fn block_forward(
     let w3 = 3 * h;
 
     let mut hn1 = vec![0.0f32; bs * h];
-    math::layer_norm(x, p.ln1g, p.ln1b, bs, h, &mut hn1);
+    math::layer_norm(pool, x, p.ln1g, p.ln1b, bs, h, &mut hn1);
     let mut qkv = vec![0.0f32; bs * w3];
-    math::matmul(&hn1, p.wqkv, bs, h, w3, &mut qkv);
+    math::matmul(pool, &hn1, p.wqkv, bs, h, w3, &mut qkv);
     math::add_bias(&mut qkv, p.bqkv);
 
+    // attention core, parallel over (batch, head, query-row) tasks: task t
+    // writes its probs row and its dh-wide head-output row `aoh[t]`; the
+    // head-major scratch is re-interleaved into [bs, h] serially below
+    // (pure copy — each element has exactly one producer).
     let mut probs = vec![0.0f32; b * heads * s * s];
+    let mut aoh = vec![0.0f32; b * heads * s * dh];
+    pool.for_rows2(&mut probs, s, &mut aoh, dh, |t, prow, orow| {
+        let i = t % s;
+        let hd = (t / s) % heads;
+        let bi = t / (s * heads);
+        let qc = hd * dh;
+        let kc = h + hd * dh;
+        let vc = 2 * h + hd * dh;
+        let qrow = &qkv[(bi * s + i) * w3..(bi * s + i + 1) * w3];
+        // causal scores over j <= i, softmaxed in place
+        let mut scores = vec![0.0f32; i + 1];
+        let mut mx = f32::NEG_INFINITY;
+        for (j, sc) in scores.iter_mut().enumerate() {
+            let krow = &qkv[(bi * s + j) * w3..(bi * s + j + 1) * w3];
+            let mut dot = 0.0f32;
+            for d in 0..dh {
+                dot += qrow[qc + d] * krow[kc + d];
+            }
+            *sc = dot * scale;
+            if *sc > mx {
+                mx = *sc;
+            }
+        }
+        let mut sum = 0.0f32;
+        for sc in scores.iter_mut() {
+            *sc = (*sc - mx).exp();
+            sum += *sc;
+        }
+        let inv = 1.0 / sum;
+        for (j, &sc) in scores.iter().enumerate() {
+            prow[j] = sc * inv; // j > i stays zero (causal mask)
+        }
+        // weighted value sum into this task's head-output row
+        for (j, &pij) in prow[..=i].iter().enumerate() {
+            let vrow = &qkv[(bi * s + j) * w3..(bi * s + j + 1) * w3];
+            for d in 0..dh {
+                orow[d] += pij * vrow[vc + d];
+            }
+        }
+    });
     let mut ao = vec![0.0f32; bs * h];
     for bi in 0..b {
         for hd in 0..heads {
-            let qc = hd * dh;
-            let kc = h + hd * dh;
-            let vc = 2 * h + hd * dh;
             for i in 0..s {
-                let qrow = &qkv[(bi * s + i) * w3..(bi * s + i + 1) * w3];
-                // causal scores over j <= i, softmaxed in place
-                let mut scores = vec![0.0f32; i + 1];
-                let mut mx = f32::NEG_INFINITY;
-                for (j, sc) in scores.iter_mut().enumerate() {
-                    let krow = &qkv[(bi * s + j) * w3..(bi * s + j + 1) * w3];
-                    let mut dot = 0.0f32;
-                    for d in 0..dh {
-                        dot += qrow[qc + d] * krow[kc + d];
-                    }
-                    *sc = dot * scale;
-                    if *sc > mx {
-                        mx = *sc;
-                    }
-                }
-                let mut sum = 0.0f32;
-                for sc in scores.iter_mut() {
-                    *sc = (*sc - mx).exp();
-                    sum += *sc;
-                }
-                let inv = 1.0 / sum;
-                let prow = &mut probs[((bi * heads + hd) * s + i) * s..][..s];
-                for (j, &sc) in scores.iter().enumerate() {
-                    prow[j] = sc * inv; // j > i stays zero (causal mask)
-                }
-                // weighted value sum into the merged output slot
-                let orow = &mut ao[(bi * s + i) * h..(bi * s + i + 1) * h];
-                for (j, &pij) in prow[..=i].iter().enumerate() {
-                    let vrow = &qkv[(bi * s + j) * w3..(bi * s + j + 1) * w3];
-                    for d in 0..dh {
-                        orow[qc + d] += pij * vrow[vc + d];
-                    }
-                }
+                let t = (bi * heads + hd) * s + i;
+                ao[(bi * s + i) * h + hd * dh..][..dh]
+                    .copy_from_slice(&aoh[t * dh..(t + 1) * dh]);
             }
         }
     }
 
     let mut attn = vec![0.0f32; bs * h];
-    math::matmul(&ao, p.wo, bs, h, h, &mut attn);
+    math::matmul(pool, &ao, p.wo, bs, h, h, &mut attn);
     math::add_bias(&mut attn, p.bo);
     let x1: Vec<f32> = x.iter().zip(&attn).map(|(a, c)| a + c).collect();
 
     let mut hn2 = vec![0.0f32; bs * h];
-    math::layer_norm(&x1, p.ln2g, p.ln2b, bs, h, &mut hn2);
+    math::layer_norm(pool, &x1, p.ln2g, p.ln2b, bs, h, &mut hn2);
     let mut m1 = vec![0.0f32; bs * f];
-    math::matmul(&hn2, p.w1, bs, h, f, &mut m1);
+    math::matmul(pool, &hn2, p.w1, bs, h, f, &mut m1);
     math::add_bias(&mut m1, p.b1);
-    let gm: Vec<f32> = m1.iter().map(|&u| math::gelu(u)).collect();
+    let mut gm = vec![0.0f32; bs * f];
+    pool.for_rows(&mut gm, f, |r, row| {
+        let mi = &m1[r * f..(r + 1) * f];
+        for (o, &u) in row.iter_mut().zip(mi) {
+            *o = math::gelu(u);
+        }
+    });
     let mut m2 = vec![0.0f32; bs * h];
-    math::matmul(&gm, p.w2, bs, f, h, &mut m2);
+    math::matmul(pool, &gm, p.w2, bs, f, h, &mut m2);
     math::add_bias(&mut m2, p.b2);
     let y: Vec<f32> = x1.iter().zip(&m2).map(|(a, c)| a + c).collect();
 
@@ -259,7 +296,9 @@ fn block_forward(
 }
 
 /// Recompute-forward + pull back `dy`: returns `(dx, 12 dparams)`.
+#[allow(clippy::too_many_arguments)]
 fn block_backward(
+    pool: &ThreadPool,
     x: &[f32],
     dy: &[f32],
     p: &BlockParams<'_>,
@@ -268,7 +307,7 @@ fn block_backward(
     h: usize,
     heads: usize,
 ) -> (Vec<f32>, Vec<Vec<f32>>) {
-    let st = block_forward(x, p, b, s, h, heads);
+    let st = block_forward(pool, x, p, b, s, h, heads);
     let bs = b * s;
     let f = p.f;
     let dh = h / heads;
@@ -281,21 +320,26 @@ fn block_backward(
 
     // m2 = gm @ w2 + b2
     let mut dgm = vec![0.0f32; bs * f];
-    math::matmul_nt(dm2, p.w2, bs, h, f, &mut dgm);
+    math::matmul_nt(pool, dm2, p.w2, bs, h, f, &mut dgm);
     let mut dw2 = vec![0.0f32; f * h];
-    math::matmul_tn(&st.gm, dm2, bs, f, h, &mut dw2);
+    math::matmul_tn(pool, &st.gm, dm2, bs, f, h, &mut dw2);
     let mut db2 = vec![0.0f32; h];
     math::col_sums(dm2, bs, h, &mut db2);
 
     // gm = gelu(m1)
-    let dm1: Vec<f32> =
-        dgm.iter().zip(&st.m1).map(|(&g, &u)| g * math::gelu_grad(u)).collect();
+    let mut dm1 = vec![0.0f32; bs * f];
+    pool.for_rows(&mut dm1, f, |r, row| {
+        for (j, o) in row.iter_mut().enumerate() {
+            let idx = r * f + j;
+            *o = dgm[idx] * math::gelu_grad(st.m1[idx]);
+        }
+    });
 
     // m1 = hn2 @ w1 + b1
     let mut dhn2 = vec![0.0f32; bs * h];
-    math::matmul_nt(&dm1, p.w1, bs, f, h, &mut dhn2);
+    math::matmul_nt(pool, &dm1, p.w1, bs, f, h, &mut dhn2);
     let mut dw1 = vec![0.0f32; h * f];
-    math::matmul_tn(&st.hn2, &dm1, bs, h, f, &mut dw1);
+    math::matmul_tn(pool, &st.hn2, &dm1, bs, h, f, &mut dw1);
     let mut db1 = vec![0.0f32; f];
     math::col_sums(&dm1, bs, f, &mut db1);
 
@@ -310,56 +354,72 @@ fn block_backward(
 
     // attn = ao @ wo + bo
     let mut dao = vec![0.0f32; bs * h];
-    math::matmul_nt(&dattn, p.wo, bs, h, h, &mut dao);
+    math::matmul_nt(pool, &dattn, p.wo, bs, h, h, &mut dao);
     let mut dwo = vec![0.0f32; h * h];
-    math::matmul_tn(&st.ao, &dattn, bs, h, h, &mut dwo);
+    math::matmul_tn(pool, &st.ao, &dattn, bs, h, h, &mut dwo);
     let mut dbo = vec![0.0f32; h];
     math::col_sums(&dattn, bs, h, &mut dbo);
 
-    // attention core: softmax(qkᵀ·scale, causal) @ v, per (batch, head)
+    // attention core VJP: softmax(qkᵀ·scale, causal) @ v, parallel over
+    // (batch, head) tasks. Each task accumulates its dq/dk/dv into a
+    // private [s, 3·dh] scratch row block (q | k | v), replicating the
+    // serial i-then-j loop order; the scratch is re-interleaved into
+    // [bs, 3h] serially below (pure copy — one producer per element).
+    let mut scratch = vec![0.0f32; b * heads * s * 3 * dh];
+    pool.for_rows(&mut scratch, s * 3 * dh, |t, dq| {
+        let hd = t % heads;
+        let bi = t / heads;
+        let qc = hd * dh;
+        let vc = 2 * h + hd * dh;
+        for i in 0..s {
+            let drow = &dao[(bi * s + i) * h..(bi * s + i + 1) * h];
+            let prow = &st.probs[((bi * heads + hd) * s + i) * s..][..s];
+            // dprobs[j] = datt[i]·v[j]; softmax row VJP needs Σ dp·p
+            let mut dp = vec![0.0f32; i + 1];
+            let mut dot = 0.0f32;
+            for (j, dpj) in dp.iter_mut().enumerate() {
+                let vrow = &st.qkv[(bi * s + j) * w3..(bi * s + j + 1) * w3];
+                let mut acc = 0.0f32;
+                for d in 0..dh {
+                    acc += drow[qc + d] * vrow[vc + d];
+                }
+                *dpj = acc;
+                dot += acc * prow[j];
+            }
+            for j in 0..=i {
+                let ds = prow[j] * (dp[j] - dot); // masked scores: prob 0 ⇒ ds 0
+                for d in 0..dh {
+                    let kjd = st.qkv[(bi * s + j) * w3 + h + hd * dh + d];
+                    let qid = st.qkv[(bi * s + i) * w3 + qc + d];
+                    dq[i * 3 * dh + d] += scale * ds * kjd;
+                    dq[j * 3 * dh + dh + d] += scale * ds * qid;
+                }
+                let pij = prow[j];
+                for d in 0..dh {
+                    dq[j * 3 * dh + 2 * dh + d] += pij * drow[qc + d];
+                }
+            }
+        }
+    });
     let mut dqkv = vec![0.0f32; bs * w3];
     for bi in 0..b {
         for hd in 0..heads {
-            let qc = hd * dh;
-            let kc = h + hd * dh;
-            let vc = 2 * h + hd * dh;
-            for i in 0..s {
-                let drow = &dao[(bi * s + i) * h..(bi * s + i + 1) * h];
-                let prow = &st.probs[((bi * heads + hd) * s + i) * s..][..s];
-                // dprobs[j] = datt[i]·v[j]; softmax row VJP needs Σ dp·p
-                let mut dp = vec![0.0f32; i + 1];
-                let mut dot = 0.0f32;
-                for (j, dpj) in dp.iter_mut().enumerate() {
-                    let vrow = &st.qkv[(bi * s + j) * w3..(bi * s + j + 1) * w3];
-                    let mut acc = 0.0f32;
-                    for d in 0..dh {
-                        acc += drow[qc + d] * vrow[vc + d];
-                    }
-                    *dpj = acc;
-                    dot += acc * prow[j];
-                }
-                for j in 0..=i {
-                    let ds = prow[j] * (dp[j] - dot); // masked scores: prob 0 ⇒ ds 0
-                    for d in 0..dh {
-                        let kjd = st.qkv[(bi * s + j) * w3 + kc + d];
-                        let qid = st.qkv[(bi * s + i) * w3 + qc + d];
-                        dqkv[(bi * s + i) * w3 + qc + d] += scale * ds * kjd;
-                        dqkv[(bi * s + j) * w3 + kc + d] += scale * ds * qid;
-                    }
-                    let pij = prow[j];
-                    for d in 0..dh {
-                        dqkv[(bi * s + j) * w3 + vc + d] += pij * drow[qc + d];
-                    }
-                }
+            let base = (bi * heads + hd) * s * 3 * dh;
+            for r in 0..s {
+                let row = &scratch[base + r * 3 * dh..][..3 * dh];
+                let dst = &mut dqkv[(bi * s + r) * w3..(bi * s + r + 1) * w3];
+                dst[hd * dh..hd * dh + dh].copy_from_slice(&row[..dh]);
+                dst[h + hd * dh..h + hd * dh + dh].copy_from_slice(&row[dh..2 * dh]);
+                dst[2 * h + hd * dh..2 * h + hd * dh + dh].copy_from_slice(&row[2 * dh..]);
             }
         }
     }
 
     // qkv = hn1 @ wqkv + bqkv
     let mut dhn1 = vec![0.0f32; bs * h];
-    math::matmul_nt(&dqkv, p.wqkv, bs, w3, h, &mut dhn1);
+    math::matmul_nt(pool, &dqkv, p.wqkv, bs, w3, h, &mut dhn1);
     let mut dwqkv = vec![0.0f32; h * w3];
-    math::matmul_tn(&st.hn1, &dqkv, bs, h, w3, &mut dwqkv);
+    math::matmul_tn(pool, &st.hn1, &dqkv, bs, h, w3, &mut dwqkv);
     let mut dbqkv = vec![0.0f32; w3];
     math::col_sums(&dqkv, bs, w3, &mut dbqkv);
 
@@ -378,6 +438,7 @@ fn block_backward(
 
 struct BlockFwd {
     heads: usize,
+    pool: Arc<ThreadPool>,
 }
 
 impl Program for BlockFwd {
@@ -386,13 +447,14 @@ impl Program for BlockFwd {
         ensure!(h % self.heads == 0, "hidden {h} not divisible by heads {}", self.heads);
         let x = args[0].f32()?;
         let p = unpack_block(args, 1, h)?;
-        let st = block_forward(x, &p, b, s, h, self.heads);
+        let st = block_forward(&self.pool, x, &p, b, s, h, self.heads);
         Ok(vec![Value::f32(st.y, &[b, s, h])?])
     }
 }
 
 struct BlockBwd {
     heads: usize,
+    pool: Arc<ThreadPool>,
 }
 
 impl Program for BlockBwd {
@@ -405,7 +467,7 @@ impl Program for BlockBwd {
         ensure!(dy.len() == x.len(), "block_bwd: x/dy shape mismatch");
         let p = unpack_block(args, 2, h)?;
         let f = p.f;
-        let (dx, dparams) = block_backward(x, dy, &p, b, s, h, self.heads);
+        let (dx, dparams) = block_backward(&self.pool, x, dy, &p, b, s, h, self.heads);
 
         let shapes: [Vec<usize>; 12] = [
             vec![h],
@@ -434,11 +496,14 @@ impl Program for BlockBwd {
 // head
 // ---------------------------------------------------------------------------
 
-struct HeadLoss;
+struct HeadLoss {
+    pool: Arc<ThreadPool>,
+}
 
 /// Shared head plumbing: logits + mean-token cross-entropy.
 /// Returns (loss, dlogits_unscaled, ncorrect, dims).
 fn head_common(
+    pool: &ThreadPool,
     args: &[Arg<'_>],
 ) -> Result<(f32, Vec<f32>, i32, (usize, usize, usize, usize))> {
     ensure!(args.len() == 3, "head program takes (x, W, labels)");
@@ -454,27 +519,29 @@ fn head_common(
     }
     let bs = b * s;
     let mut logits = vec![0.0f32; bs * v];
-    math::matmul(x, w, bs, h, v, &mut logits);
+    math::matmul(pool, x, w, bs, h, v, &mut logits);
     let mut dlogits = vec![0.0f32; bs * v];
-    let (nll, ncorrect) = math::softmax_xent(&logits, labels, bs, v, &mut dlogits);
+    let (nll, ncorrect) = math::softmax_xent(pool, &logits, labels, bs, v, &mut dlogits);
     let loss = (nll / bs as f64) as f32;
     Ok((loss, dlogits, ncorrect, (b, s, h, v)))
 }
 
 impl Program for HeadLoss {
     fn run(&self, args: &[Arg<'_>]) -> Result<Vec<Value>> {
-        let (loss, mut dlogits, _nc, (b, s, h, v)) = head_common(args)?;
+        let (loss, mut dlogits, _nc, (b, s, h, v)) = head_common(&self.pool, args)?;
         let x = args[0].f32()?;
         let w = args[1].f32()?;
         let bs = b * s;
         let inv = 1.0 / bs as f32;
-        for d in dlogits.iter_mut() {
-            *d *= inv;
-        }
+        self.pool.for_spans(&mut dlogits, |_, span| {
+            for d in span.iter_mut() {
+                *d *= inv;
+            }
+        });
         let mut dx = vec![0.0f32; bs * h];
-        math::matmul_nt(&dlogits, w, bs, v, h, &mut dx);
+        math::matmul_nt(&self.pool, &dlogits, w, bs, v, h, &mut dx);
         let mut dw = vec![0.0f32; h * v];
-        math::matmul_tn(x, &dlogits, bs, h, v, &mut dw);
+        math::matmul_tn(&self.pool, x, &dlogits, bs, h, v, &mut dw);
         Ok(vec![
             Value::scalar_f32(loss),
             Value::f32(dx, &[b, s, h])?,
@@ -483,11 +550,13 @@ impl Program for HeadLoss {
     }
 }
 
-struct HeadEval;
+struct HeadEval {
+    pool: Arc<ThreadPool>,
+}
 
 impl Program for HeadEval {
     fn run(&self, args: &[Arg<'_>]) -> Result<Vec<Value>> {
-        let (loss, _dl, ncorrect, _dims) = head_common(args)?;
+        let (loss, _dl, ncorrect, _dims) = head_common(&self.pool, args)?;
         Ok(vec![Value::scalar_f32(loss), Value::scalar_i32(ncorrect)])
     }
 }
@@ -506,6 +575,10 @@ mod tests {
     const H: usize = 4;
     const HEADS: usize = 2;
     const F: usize = 8;
+
+    fn tp() -> Arc<ThreadPool> {
+        Arc::new(ThreadPool::new(1))
+    }
 
     /// Owned block parameters in manifest order.
     struct Params {
@@ -560,8 +633,8 @@ mod tests {
     }
 
     /// Scalar objective: L = Σ y ∘ r for a fixed random cotangent r.
-    fn objective(x: &[f32], p: &Params, r: &[f32]) -> f32 {
-        let st = block_forward(x, &p.view(), B, S, H, HEADS);
+    fn objective(pool: &ThreadPool, x: &[f32], p: &Params, r: &[f32]) -> f32 {
+        let st = block_forward(pool, x, &p.view(), B, S, H, HEADS);
         st.y.iter().zip(r).map(|(a, c)| a * c).sum()
     }
 
@@ -571,27 +644,30 @@ mod tests {
 
     #[test]
     fn block_backward_dx_matches_finite_differences() {
+        let pool = tp();
         let x = randvec(1, B * S * H, 0.8);
         let p = Params::random(2);
         let r = randvec(3, B * S * H, 1.0);
-        let (dx, _dp) = block_backward(&x, &r, &p.view(), B, S, H, HEADS);
+        let (dx, _dp) = block_backward(&pool, &x, &r, &p.view(), B, S, H, HEADS);
         let eps = 1e-2f32;
         for i in 0..x.len() {
             let mut xp = x.clone();
             xp[i] += eps;
             let mut xm = x.clone();
             xm[i] -= eps;
-            let fd = (objective(&xp, &p, &r) - objective(&xm, &p, &r)) / (2.0 * eps);
+            let fd =
+                (objective(&pool, &xp, &p, &r) - objective(&pool, &xm, &p, &r)) / (2.0 * eps);
             assert!(close(fd, dx[i]), "dx[{i}]: fd {fd} vs analytic {}", dx[i]);
         }
     }
 
     #[test]
     fn block_backward_dparams_match_finite_differences() {
+        let pool = tp();
         let x = randvec(4, B * S * H, 0.8);
         let p = Params::random(5);
         let r = randvec(6, B * S * H, 1.0);
-        let (_dx, dp) = block_backward(&x, &r, &p.view(), B, S, H, HEADS);
+        let (_dx, dp) = block_backward(&pool, &x, &r, &p.view(), B, S, H, HEADS);
         let eps = 1e-2f32;
         for (ti, size) in Params::sizes().iter().enumerate() {
             assert_eq!(dp[ti].len(), *size, "tensor {ti} grad size");
@@ -600,7 +676,8 @@ mod tests {
                 pp.t[ti][i] += eps;
                 let mut pm = Params::random(5);
                 pm.t[ti][i] -= eps;
-                let fd = (objective(&x, &pp, &r) - objective(&x, &pm, &r)) / (2.0 * eps);
+                let fd =
+                    (objective(&pool, &x, &pp, &r) - objective(&pool, &x, &pm, &r)) / (2.0 * eps);
                 assert!(
                     close(fd, dp[ti][i]),
                     "param {ti}[{i}]: fd {fd} vs analytic {}",
@@ -614,14 +691,15 @@ mod tests {
     fn block_is_causal() {
         // Perturbing position s0 must not change outputs at earlier
         // positions (causal mask), and must change later ones.
+        let pool = tp();
         let x = randvec(7, B * S * H, 0.8);
         let p = Params::random(8);
-        let y0 = block_forward(&x, &p.view(), B, S, H, HEADS).y;
+        let y0 = block_forward(&pool, &x, &p.view(), B, S, H, HEADS).y;
         let mut x2 = x.clone();
         for j in 0..H {
             x2[(S - 1) * H + j] += 0.5; // batch 0, last position
         }
-        let y1 = block_forward(&x2, &p.view(), B, S, H, HEADS).y;
+        let y1 = block_forward(&pool, &x2, &p.view(), B, S, H, HEADS).y;
         for si in 0..S - 1 {
             for j in 0..H {
                 let idx = si * H + j;
@@ -635,13 +713,53 @@ mod tests {
     }
 
     #[test]
+    fn block_forward_and_backward_thread_count_invariant() {
+        // Bigger-than-cutoff shapes so the attention fan-out is live, then
+        // bit-compare 1-thread vs 3-thread results.
+        let (b, s, h, heads) = (2usize, 32usize, 8usize, 2usize);
+        let f = 4 * h;
+        let sizes = [h, h, h * 3 * h, 3 * h, h * h, h, h, h, h * f, f, f * h, h];
+        let mut rng = Rng::new(99);
+        let t: Vec<Vec<f32>> =
+            sizes.iter().map(|&n| (0..n).map(|_| 0.3 * rng.normal()).collect()).collect();
+        let p = BlockParams {
+            ln1g: &t[0],
+            ln1b: &t[1],
+            wqkv: &t[2],
+            bqkv: &t[3],
+            wo: &t[4],
+            bo: &t[5],
+            ln2g: &t[6],
+            ln2b: &t[7],
+            w1: &t[8],
+            b1: &t[9],
+            w2: &t[10],
+            b2: &t[11],
+            f,
+        };
+        let x = randvec(100, b * s * h, 0.8);
+        let dy = randvec(101, b * s * h, 1.0);
+        let p1 = ThreadPool::new(1);
+        let p3 = ThreadPool::new(3);
+        let y1 = block_forward(&p1, &x, &p, b, s, h, heads).y;
+        let y3 = block_forward(&p3, &x, &p, b, s, h, heads).y;
+        assert!(y1.iter().zip(&y3).all(|(a, c)| a.to_bits() == c.to_bits()));
+        let (dx1, dp1) = block_backward(&p1, &x, &dy, &p, b, s, h, heads);
+        let (dx3, dp3) = block_backward(&p3, &x, &dy, &p, b, s, h, heads);
+        assert!(dx1.iter().zip(&dx3).all(|(a, c)| a.to_bits() == c.to_bits()));
+        for (g1, g3) in dp1.iter().zip(&dp3) {
+            assert!(g1.iter().zip(g3).all(|(a, c)| a.to_bits() == c.to_bits()));
+        }
+    }
+
+    #[test]
     fn head_loss_grads_match_finite_differences() {
         let (b, s, h, v) = (1usize, 2usize, 3usize, 5usize);
         let x = randvec(9, b * s * h, 1.0);
         let w = randvec(10, h * v, 0.7);
         let labels: Vec<i32> = vec![1, 4];
 
-        let head = HeadLoss;
+        let head = HeadLoss { pool: tp() };
         let run = |x: &[f32], w: &[f32]| -> (f32, Vec<Value>) {
             let out = head
                 .run(&[
@@ -682,7 +800,7 @@ mod tests {
         let e = randvec(11, vocab * hidden, 0.5);
         let p = randvec(12, s * hidden, 0.5);
 
-        let fwd = EmbedFwd { vocab, hidden };
+        let fwd = EmbedFwd { vocab, hidden, pool: tp() };
         let out = fwd
             .run(&[
                 Arg::I32(&tokens, &[b, s]),
@@ -741,7 +859,7 @@ mod tests {
         for (t, sh) in p.t.iter().zip(shapes.iter()) {
             args.push(Arg::F32(t, sh));
         }
-        let out = BlockBwd { heads: HEADS }.run(&args).unwrap();
+        let out = BlockBwd { heads: HEADS, pool: tp() }.run(&args).unwrap();
         assert_eq!(out.len(), 13);
         assert_eq!(out[0].shape(), &[B, S, H]);
         for (o, sh) in out[1..].iter().zip(shapes.iter()) {
@@ -750,7 +868,7 @@ mod tests {
 
         let fwd_args: Vec<Arg<'_>> =
             args.iter().enumerate().filter(|(i, _)| *i != 1).map(|(_, a)| *a).collect();
-        let out = BlockFwd { heads: HEADS }.run(&fwd_args).unwrap();
+        let out = BlockFwd { heads: HEADS, pool: tp() }.run(&fwd_args).unwrap();
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].shape(), &[B, S, H]);
     }

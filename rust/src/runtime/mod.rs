@@ -8,7 +8,10 @@
 //!   every program (optimizer kernels, transformer layers, MLP). Always
 //!   available; needs no artifacts, no Python, no native libraries. When
 //!   no `artifacts/` directory exists, [`Library::open_default`] uses this
-//!   backend with a built-in manifest ([`Manifest::builtin`]).
+//!   backend with a built-in manifest ([`Manifest::builtin`]). Hot paths
+//!   run on the in-tree deterministic thread pool ([`pool`]); thread
+//!   count comes from `ADAMA_THREADS` (default: available parallelism)
+//!   and results are bit-for-bit identical at any setting.
 //! * `pjrt::PjrtExecutor` (cargo feature `pjrt`) — compiles the AOT HLO
 //!   artifacts produced by `python/compile/aot.py` through the PJRT C API.
 //!   Selected automatically when the feature is enabled and artifacts are
@@ -19,12 +22,14 @@ pub mod hostexec;
 mod manifest;
 #[cfg(feature = "pjrt")]
 mod pjrt;
+pub mod pool;
 
 pub use exec::{
     copy_chunk, copy_into_f32, lit_f32, lit_i32, lit_scalar_f32, scalar_f32, scalar_i32,
     to_vec_f32, to_vec_i32, Arg, Executor, Program, Value,
 };
 pub use hostexec::HostExecutor;
+pub use pool::ThreadPool;
 pub use manifest::{
     ArtifactEntry, Hyper as ManifestHyper, Manifest, MlpConfigEntry, MlpHyper, ModelConfigEntry,
     ModelHyper, TensorSpec,
@@ -51,9 +56,32 @@ pub type ArtifactLibrary = Library;
 
 impl Library {
     /// Pure-rust host library with the built-in default manifest — runs on
-    /// a clean machine with zero native dependencies.
+    /// a clean machine with zero native dependencies. Pool size comes from
+    /// `ADAMA_THREADS` (default: available parallelism).
     pub fn host() -> Arc<Self> {
         Self::with_executor(Arc::new(HostExecutor::new()), Manifest::builtin())
+    }
+
+    /// [`Library::host`] with the executor's thread pool pinned to
+    /// `threads` workers (1 = fully serial) — the determinism suite and
+    /// the perf benches sweep this.
+    pub fn host_with_threads(threads: usize) -> Arc<Self> {
+        Self::with_executor(Arc::new(HostExecutor::with_threads(threads)), Manifest::builtin())
+    }
+
+    /// Same manifest, host executor re-pinned to `threads` pool workers;
+    /// non-host backends (and already-matching pools) are returned
+    /// unchanged. The DP/ZeRO thread simulators use this to pin each rank
+    /// to one pool thread so M ranks don't fan out into M·T threads.
+    pub fn fork_with_threads(self: &Arc<Self>, threads: usize) -> Arc<Self> {
+        if self.executor.platform() == "host" && self.executor.threads() != threads {
+            Self::with_executor(
+                Arc::new(HostExecutor::with_threads(threads)),
+                self.manifest.clone(),
+            )
+        } else {
+            self.clone()
+        }
     }
 
     /// Library over an explicit executor + manifest pair.
@@ -201,6 +229,20 @@ mod tests {
             .unwrap();
         assert_eq!(out.len(), 2);
         assert!(lib.executor().exec_calls() >= 1);
+    }
+
+    #[test]
+    fn fork_with_threads_repins_the_host_pool() {
+        let lib = Library::host_with_threads(3);
+        assert_eq!(lib.executor().threads(), 3);
+        let serial = lib.fork_with_threads(1);
+        assert_eq!(serial.executor().threads(), 1);
+        assert_eq!(serial.executor().platform(), "host");
+        // same pool size: no re-wrap, the same library comes back
+        let same = lib.fork_with_threads(3);
+        assert!(Arc::ptr_eq(&lib, &same));
+        // forked library still resolves the same manifest
+        assert!(serial.get("common/adama_acc_16384").is_ok());
     }
 
     #[test]

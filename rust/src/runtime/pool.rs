@@ -1,0 +1,522 @@
+//! In-tree deterministic chunked thread pool (the offline workspace has
+//! no rayon; this is the subset the host executor needs).
+//!
+//! ## Determinism contract
+//!
+//! Work is only ever split into **contiguous, balanced ranges** of rows or
+//! spans ([`partition`]), each processed start-to-end by exactly one
+//! worker, and every helper requires the per-item computation to be
+//! independent of the split (each output row/element is written by exactly
+//! one closure invocation, with unchanged per-element arithmetic order).
+//! Under that contract results are bit-for-bit identical at **any** thread
+//! count — including the serial inline fallbacks below — which is what
+//! `rust/tests/determinism.rs` locks down. There is deliberately no work
+//! stealing: chunk→worker assignment is a pure function of `(n, threads)`.
+//!
+//! Cross-row *reductions* (column sums, scalar losses) are not expressible
+//! through these helpers on purpose; callers keep them serial or reduce
+//! fixed per-row partials in row order (see `hostexec::math`).
+//!
+//! ## Configuration
+//!
+//! `ADAMA_THREADS=N` pins the pool size ([`resolve_threads`]); unset (or
+//! unparseable) defaults to the machine's available parallelism. The
+//! DP/ZeRO thread simulators re-pin their ranks to 1 pool thread each via
+//! `Library::fork_with_threads` to avoid oversubscription.
+//!
+//! ## Nesting and concurrent callers
+//!
+//! [`ThreadPool::run`] takes an issue lock with `try_lock`: a nested or
+//! concurrent parallel region simply degrades to an inline serial sweep of
+//! the same ranges (bit-identical by the contract above), so the pool can
+//! never deadlock on itself.
+
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+/// Hard upper bound on pool size (sanity cap for bogus `ADAMA_THREADS`).
+pub const MAX_THREADS: usize = 256;
+
+/// Below this many elements in the primary buffer the helpers run inline —
+/// broadcast latency would dominate. Safe: the split never affects bits.
+const SERIAL_CUTOFF: usize = 1024;
+
+/// Resolve a thread-count spec (the `ADAMA_THREADS` value): a positive
+/// integer pins the count (capped at [`MAX_THREADS`]); anything else —
+/// unset, empty, `0`, garbage — falls back to available parallelism.
+pub fn resolve_threads(spec: Option<&str>) -> usize {
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    match spec.map(str::trim) {
+        Some(s) if !s.is_empty() => match s.parse::<usize>() {
+            Ok(n) if n >= 1 => n.min(MAX_THREADS),
+            _ => hw,
+        },
+        _ => hw,
+    }
+}
+
+/// Thread count from the `ADAMA_THREADS` environment variable.
+pub fn default_threads() -> usize {
+    resolve_threads(std::env::var("ADAMA_THREADS").ok().as_deref())
+}
+
+/// Contiguous balanced split of `0..n` into at most `parts` non-empty
+/// `(offset, len)` ranges: the first `n % parts` ranges get one extra
+/// element. `n = 0` yields no ranges; `n < parts` yields `n` unit ranges.
+pub fn partition(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    assert!(parts > 0, "partition: zero parts");
+    let k = parts.min(n);
+    let mut out = Vec::with_capacity(k);
+    if k == 0 {
+        return out;
+    }
+    let (base, rem) = (n / k, n % k);
+    let mut off = 0;
+    for i in 0..k {
+        let len = base + usize::from(i < rem);
+        out.push((off, len));
+        off += len;
+    }
+    debug_assert_eq!(off, n);
+    out
+}
+
+/// A job broadcast to every worker: called once per worker index. The
+/// `'static` is a lie erased in [`ThreadPool::run`], which joins all
+/// workers before returning.
+type Job = &'static (dyn Fn(usize) + Sync);
+
+struct State {
+    epoch: u64,
+    job: Option<Job>,
+    remaining: usize,
+    shutdown: bool,
+    panicked: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    start: Condvar,
+    done: Condvar,
+}
+
+impl Shared {
+    fn lock(&self) -> MutexGuard<'_, State> {
+        self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+}
+
+/// Raw base pointer that may cross into workers; each worker only touches
+/// the disjoint range [`partition`] assigned to it.
+struct SendPtr<T>(*mut T);
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+/// Deterministic fixed-assignment thread pool. `new(1)` spawns no threads
+/// and every helper runs inline (zero overhead), so a 1-thread pool *is*
+/// the serial executor.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+    issue: Mutex<()>,
+}
+
+fn worker_loop(shared: Arc<Shared>, id: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job;
+        {
+            let mut st = shared.lock();
+            job = loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    break st.job.expect("pool: epoch bumped without a job");
+                }
+                st = shared
+                    .start
+                    .wait(st)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+            };
+        }
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(id)));
+        let mut st = shared.lock();
+        if res.is_err() {
+            st.panicked = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+impl ThreadPool {
+    /// Pool with `threads` total workers (the caller thread is worker 0;
+    /// `threads - 1` OS threads are spawned).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.clamp(1, MAX_THREADS);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                remaining: 0,
+                shutdown: false,
+                panicked: false,
+            }),
+            start: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (1..threads)
+            .map(|id| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("adama-pool-{id}"))
+                    .spawn(move || worker_loop(sh, id))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        Self { shared, handles, threads, issue: Mutex::new(()) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Invoke `f(worker)` once for every worker index `0..threads`,
+    /// concurrently. The caller participates as worker 0. If the pool is
+    /// busy (nested or concurrent region) the sweep runs inline serially —
+    /// bit-identical under the determinism contract.
+    pub fn run<F: Fn(usize) + Sync>(&self, f: F) {
+        if self.handles.is_empty() {
+            f(0);
+            return;
+        }
+        let _guard = match self.issue.try_lock() {
+            Ok(g) => g,
+            // a previous caught panic may have poisoned the lock — recover
+            Err(std::sync::TryLockError::Poisoned(p)) => p.into_inner(),
+            // busy: nested or concurrent region — degrade to inline serial
+            Err(std::sync::TryLockError::WouldBlock) => {
+                for w in 0..self.threads {
+                    f(w);
+                }
+                return;
+            }
+        };
+        let f_ref: &(dyn Fn(usize) + Sync) = &f;
+        // SAFETY: the reference only escapes into worker threads, and this
+        // function does not return until `remaining` hits 0 (every worker
+        // has finished executing the job) and the slot is cleared.
+        let job: Job = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f_ref)
+        };
+        {
+            let mut st = self.shared.lock();
+            st.job = Some(job);
+            st.epoch = st.epoch.wrapping_add(1);
+            st.remaining = self.handles.len();
+            self.shared.start.notify_all();
+        }
+        let caller = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(0)));
+        let worker_panicked;
+        {
+            let mut st = self.shared.lock();
+            while st.remaining > 0 {
+                st = self
+                    .shared
+                    .done
+                    .wait(st)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+            }
+            st.job = None;
+            worker_panicked = std::mem::take(&mut st.panicked);
+        }
+        if let Err(e) = caller {
+            std::panic::resume_unwind(e);
+        }
+        if worker_panicked {
+            panic!("thread pool worker panicked");
+        }
+    }
+
+    /// Parallel loop over the rows of `data` (`width` elements each):
+    /// `f(row_index, row)`. Rows are assigned to workers in contiguous
+    /// balanced blocks; each row is written by exactly one invocation.
+    pub fn for_rows<T, F>(&self, data: &mut [T], width: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(width > 0, "for_rows: zero width");
+        assert_eq!(data.len() % width, 0, "for_rows: len {} % width {width} != 0", data.len());
+        let rows = data.len() / width;
+        if self.threads == 1 || rows < 2 || data.len() < SERIAL_CUTOFF {
+            for (r, row) in data.chunks_mut(width).enumerate() {
+                f(r, row);
+            }
+            return;
+        }
+        let ranges = partition(rows, self.threads);
+        let base = SendPtr(data.as_mut_ptr());
+        self.run(|w| {
+            if let Some(&(r0, cnt)) = ranges.get(w) {
+                for r in r0..r0 + cnt {
+                    // SAFETY: row ranges are disjoint across workers and
+                    // `data` outlives `run`, which joins every worker.
+                    let row =
+                        unsafe { std::slice::from_raw_parts_mut(base.0.add(r * width), width) };
+                    f(r, row);
+                }
+            }
+        });
+    }
+
+    /// Two-output variant of [`for_rows`]: `a` and `b` must have the same
+    /// row count (widths `wa`, `wb`); `f(row, a_row, b_row)`.
+    ///
+    /// [`for_rows`]: ThreadPool::for_rows
+    pub fn for_rows2<T, U, F>(&self, a: &mut [T], wa: usize, b: &mut [U], wb: usize, f: F)
+    where
+        T: Send,
+        U: Send,
+        F: Fn(usize, &mut [T], &mut [U]) + Sync,
+    {
+        assert!(wa > 0 && wb > 0, "for_rows2: zero width");
+        assert_eq!(a.len() % wa, 0, "for_rows2: a len/width mismatch");
+        assert_eq!(b.len() % wb, 0, "for_rows2: b len/width mismatch");
+        let rows = a.len() / wa;
+        assert_eq!(rows, b.len() / wb, "for_rows2: row-count mismatch");
+        if self.threads == 1 || rows < 2 || a.len().max(b.len()) < SERIAL_CUTOFF {
+            for (r, (ra, rb)) in a.chunks_mut(wa).zip(b.chunks_mut(wb)).enumerate() {
+                f(r, ra, rb);
+            }
+            return;
+        }
+        let ranges = partition(rows, self.threads);
+        let pa = SendPtr(a.as_mut_ptr());
+        let pb = SendPtr(b.as_mut_ptr());
+        self.run(|w| {
+            if let Some(&(r0, cnt)) = ranges.get(w) {
+                for r in r0..r0 + cnt {
+                    // SAFETY: as in `for_rows`; the two buffers are distinct
+                    // allocations with disjoint per-worker row ranges.
+                    let ra = unsafe { std::slice::from_raw_parts_mut(pa.0.add(r * wa), wa) };
+                    let rb = unsafe { std::slice::from_raw_parts_mut(pb.0.add(r * wb), wb) };
+                    f(r, ra, rb);
+                }
+            }
+        });
+    }
+
+    /// Parallel sweep over contiguous spans of a flat buffer:
+    /// `f(offset, span)`, one span per worker. For element-wise kernels.
+    pub fn for_spans<T, F>(&self, data: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let n = data.len();
+        if self.threads == 1 || n < SERIAL_CUTOFF {
+            if n > 0 {
+                f(0, data);
+            }
+            return;
+        }
+        let ranges = partition(n, self.threads);
+        let p = SendPtr(data.as_mut_ptr());
+        self.run(|w| {
+            if let Some(&(off, len)) = ranges.get(w) {
+                // SAFETY: spans are disjoint; `data` outlives `run`.
+                let s = unsafe { std::slice::from_raw_parts_mut(p.0.add(off), len) };
+                f(off, s);
+            }
+        });
+    }
+
+    /// [`for_spans`] over two equal-length buffers sharing offsets.
+    ///
+    /// [`for_spans`]: ThreadPool::for_spans
+    pub fn for_spans2<T, F>(&self, a: &mut [T], b: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T], &mut [T]) + Sync,
+    {
+        assert_eq!(a.len(), b.len(), "for_spans2: length mismatch");
+        let n = a.len();
+        if self.threads == 1 || n < SERIAL_CUTOFF {
+            if n > 0 {
+                f(0, a, b);
+            }
+            return;
+        }
+        let ranges = partition(n, self.threads);
+        let pa = SendPtr(a.as_mut_ptr());
+        let pb = SendPtr(b.as_mut_ptr());
+        self.run(|w| {
+            if let Some(&(off, len)) = ranges.get(w) {
+                // SAFETY: disjoint spans over two distinct buffers.
+                let sa = unsafe { std::slice::from_raw_parts_mut(pa.0.add(off), len) };
+                let sb = unsafe { std::slice::from_raw_parts_mut(pb.0.add(off), len) };
+                f(off, sa, sb);
+            }
+        });
+    }
+
+    /// [`for_spans`] over three equal-length buffers sharing offsets.
+    ///
+    /// [`for_spans`]: ThreadPool::for_spans
+    pub fn for_spans3<T, F>(&self, a: &mut [T], b: &mut [T], c: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T], &mut [T], &mut [T]) + Sync,
+    {
+        assert!(a.len() == b.len() && b.len() == c.len(), "for_spans3: length mismatch");
+        let n = a.len();
+        if self.threads == 1 || n < SERIAL_CUTOFF {
+            if n > 0 {
+                f(0, a, b, c);
+            }
+            return;
+        }
+        let ranges = partition(n, self.threads);
+        let pa = SendPtr(a.as_mut_ptr());
+        let pb = SendPtr(b.as_mut_ptr());
+        let pc = SendPtr(c.as_mut_ptr());
+        self.run(|w| {
+            if let Some(&(off, len)) = ranges.get(w) {
+                // SAFETY: disjoint spans over three distinct buffers.
+                let sa = unsafe { std::slice::from_raw_parts_mut(pa.0.add(off), len) };
+                let sb = unsafe { std::slice::from_raw_parts_mut(pb.0.add(off), len) };
+                let sc = unsafe { std::slice::from_raw_parts_mut(pc.0.add(off), len) };
+                f(off, sa, sb, sc);
+            }
+        });
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.lock();
+            st.shutdown = true;
+        }
+        self.shared.start.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn partition_covers_and_balances() {
+        assert!(partition(0, 4).is_empty());
+        assert_eq!(partition(3, 8), vec![(0, 1), (1, 1), (2, 1)]);
+        assert_eq!(partition(10, 3), vec![(0, 4), (4, 3), (7, 3)]);
+        assert_eq!(partition(8, 4), vec![(0, 2), (2, 2), (4, 2), (6, 2)]);
+    }
+
+    #[test]
+    fn run_visits_every_worker_once() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        for _ in 0..50 {
+            pool.run(|w| {
+                hits[w].fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        for h in &hits {
+            assert_eq!(h.load(Ordering::Relaxed), 50);
+        }
+    }
+
+    #[test]
+    fn for_rows_is_bitwise_thread_count_invariant() {
+        let n_rows = 64;
+        let width = 32; // 2048 elements: above the serial cutoff
+        let fill = |pool: &ThreadPool| {
+            let mut data = vec![0.0f32; n_rows * width];
+            pool.for_rows(&mut data, width, |r, row| {
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v = ((r * 31 + j) as f32).sin();
+                }
+            });
+            data
+        };
+        let serial = fill(&ThreadPool::new(1));
+        for t in [2usize, 3, 8] {
+            let par = fill(&ThreadPool::new(t));
+            assert!(
+                serial.iter().zip(&par).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "for_rows drifted at {t} threads"
+            );
+        }
+    }
+
+    #[test]
+    fn for_spans_cover_all_offsets() {
+        let pool = ThreadPool::new(3);
+        let mut data = vec![0u32; 5000];
+        pool.for_spans(&mut data, |off, span| {
+            for (i, v) in span.iter_mut().enumerate() {
+                *v = (off + i) as u32;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u32);
+        }
+        let mut a = vec![1.0f32; 4096];
+        let mut b = vec![2.0f32; 4096];
+        pool.for_spans2(&mut a, &mut b, |_, sa, sb| {
+            for (x, y) in sa.iter_mut().zip(sb.iter_mut()) {
+                *x += *y;
+                *y = 0.0;
+            }
+        });
+        assert!(a.iter().all(|&x| x == 3.0) && b.iter().all(|&y| y == 0.0));
+    }
+
+    #[test]
+    fn nested_run_degrades_serially_without_deadlock() {
+        let pool = ThreadPool::new(4);
+        let inner = AtomicUsize::new(0);
+        pool.run(|_| {
+            // nested region: issue lock is held, must fall back inline
+            pool.run(|_| {
+                inner.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        // each of the 4 outer workers swept all 4 inner indices serially
+        assert_eq!(inner.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "panicked")]
+    fn worker_panic_propagates_to_caller() {
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0.0f32; 8192];
+        pool.for_rows(&mut data, 64, |r, _| {
+            assert!(r != 100, "row 100 panicked");
+        });
+    }
+
+    #[test]
+    fn resolve_threads_spec() {
+        assert_eq!(resolve_threads(Some("3")), 3);
+        assert_eq!(resolve_threads(Some(" 12 ")), 12);
+        assert_eq!(resolve_threads(Some("999999")), MAX_THREADS);
+        let hw = resolve_threads(None);
+        assert!(hw >= 1);
+        assert_eq!(resolve_threads(Some("0")), hw);
+        assert_eq!(resolve_threads(Some("banana")), hw);
+        assert_eq!(resolve_threads(Some("")), hw);
+    }
+}

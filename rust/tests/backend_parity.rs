@@ -2,6 +2,11 @@
 //! executor): AdamA through the chunked kernel-program path must match
 //! plain host-math Adam-then-accumulate semantics **bit for bit**, across
 //! micro-batch counts, plus end-to-end host-executor smoke tests.
+//!
+//! The parity suites run at 1 *and* 4 pool threads: the kernel programs
+//! dispatch through the parallel thread pool while the host-math
+//! reference stays a serial loop, so bit-equality here proves the pool's
+//! span split never perturbs the optimizer arithmetic.
 
 use std::sync::Arc;
 
@@ -29,10 +34,17 @@ fn make_grads(spec: &ModelSpec, seed: u64) -> Vec<Vec<f32>> {
 
 /// AdamA on the kernel path (host executor programs, chunked with
 /// zero-padded tails) vs the literal Adam-then-accumulate reference from
-/// `host_math`, for N = 1, 2, 4, 8 micro-batches: bit-for-bit equal.
+/// `host_math`, for N = 1, 2, 4, 8 micro-batches and a serial *and*
+/// parallel pool: bit-for-bit equal.
 #[test]
 fn adama_kernel_path_matches_host_math_bit_for_bit() {
-    let lib = Library::host();
+    for pool_threads in [1usize, 4] {
+        adama_kernel_path_parity(pool_threads);
+    }
+}
+
+fn adama_kernel_path_parity(pool_threads: usize) {
+    let lib = Library::host_with_threads(pool_threads);
     let spec = tiny_spec(&lib);
     let hyper = Hyper::from_manifest(lib.manifest());
     let chunk = *lib.manifest().chunk_sizes.first().unwrap();
@@ -89,7 +101,8 @@ fn adama_kernel_path_matches_host_math_bit_for_bit() {
         for (li, (got, want)) in params.iter().zip(&ref_p).enumerate() {
             assert_eq!(
                 got.flat, *want,
-                "N={n_micro}: layer {li} params diverged from host_math reference"
+                "N={n_micro}, {pool_threads} pool threads: layer {li} params diverged \
+                 from host_math reference"
             );
         }
     }
@@ -97,10 +110,17 @@ fn adama_kernel_path_matches_host_math_bit_for_bit() {
 
 /// The kernel path must also agree with a `UpdateBackend::Host` AdamA
 /// (the two dispatch arms share the same scalar kernels on the host
-/// executor, so equality is exact).
+/// executor, so equality is exact) — under both a serial and a parallel
+/// kernel pool.
 #[test]
 fn kernel_and_host_update_backends_bitwise_identical() {
-    let lib = Library::host();
+    for pool_threads in [1usize, 4] {
+        kernel_vs_host_backend_parity(pool_threads);
+    }
+}
+
+fn kernel_vs_host_backend_parity(pool_threads: usize) {
+    let lib = Library::host_with_threads(pool_threads);
     let spec = tiny_spec(&lib);
     let hyper = Hyper::from_manifest(lib.manifest());
     let chunk = *lib.manifest().chunk_sizes.first().unwrap();
@@ -131,7 +151,7 @@ fn kernel_and_host_update_backends_bitwise_identical() {
         host.apply(&mut ph, 1e-3).unwrap();
     }
     for (a, b) in pk.iter().zip(&ph) {
-        assert_eq!(a.flat, b.flat);
+        assert_eq!(a.flat, b.flat, "{pool_threads} pool threads: kernel/host divergence");
     }
 }
 

@@ -1,0 +1,229 @@
+//! Determinism suite: the host executor's thread pool must be a pure
+//! performance knob — **bit-for-bit identical** results at any
+//! `ADAMA_THREADS` setting.
+//!
+//! * every builtin host program (optimizer kernels at all chunk sizes,
+//!   MLP train/eval, transformer embed/block/head fwd+bwd, both configs)
+//!   is run on identical inputs at 1, 2, 3 and 8 pool threads and the
+//!   outputs compared by bit pattern;
+//! * a full 20-step MLP training run and a 20-step tiny-transformer
+//!   training run must reach identical per-step losses and identical
+//!   final parameter bit patterns serial vs parallel;
+//! * the `ADAMA_THREADS` resolution rules are pinned down.
+
+use std::sync::Arc;
+
+use adama::config::{LrSchedule, OptimBackend, OptimizerKind, TrainConfig};
+use adama::coordinator::MlpTrainer;
+use adama::data::{BlobData, MarkovCorpus};
+use adama::runtime::{ArtifactEntry, Library, Manifest, Value};
+use adama::tensor::Rng;
+use adama::Trainer;
+
+const THREAD_COUNTS: [usize; 4] = [1, 2, 3, 8];
+
+/// Stable per-program input seed (FNV-1a over the name).
+fn name_seed(name: &str) -> u64 {
+    name.bytes().fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
+}
+
+/// Generate inputs straight from the manifest entry's tensor specs:
+/// s32 tensors get values in `[0, i32_cap)` (tokens/labels), tiny f32
+/// tensors (scalar packs like `[lr, bc1, bc2]`) get positive values away
+/// from zero, everything else is standard normal.
+fn gen_inputs(entry: &ArtifactEntry, i32_cap: usize, seed: u64) -> Vec<Value> {
+    let mut rng = Rng::new(seed);
+    entry
+        .inputs
+        .iter()
+        .map(|spec| {
+            if spec.dtype == "s32" {
+                let data: Vec<i32> =
+                    (0..spec.elements()).map(|_| rng.below(i32_cap) as i32).collect();
+                Value::i32(data, &spec.shape).unwrap()
+            } else if spec.elements() <= 4 {
+                let data: Vec<f32> =
+                    (0..spec.elements()).map(|_| 0.5 + rng.uniform()).collect();
+                Value::f32(data, &spec.shape).unwrap()
+            } else {
+                let data: Vec<f32> = (0..spec.elements()).map(|_| rng.normal()).collect();
+                Value::f32(data, &spec.shape).unwrap()
+            }
+        })
+        .collect()
+}
+
+fn assert_values_bit_equal(name: &str, threads: usize, base: &[Value], got: &[Value]) {
+    assert_eq!(base.len(), got.len(), "{name}: output arity changed at {threads} threads");
+    for (i, (va, vb)) in base.iter().zip(got).enumerate() {
+        assert_eq!(va.shape(), vb.shape(), "{name} out[{i}]: shape drift at {threads} threads");
+        match (va.as_f32(), vb.as_f32()) {
+            (Ok(a), Ok(b)) => {
+                for (j, (x, y)) in a.iter().zip(b).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{name} out[{i}][{j}]: {x} != {y} at {threads} threads"
+                    );
+                }
+            }
+            _ => {
+                assert_eq!(
+                    va.as_i32().unwrap(),
+                    vb.as_i32().unwrap(),
+                    "{name} out[{i}]: i32 drift at {threads} threads"
+                );
+            }
+        }
+    }
+}
+
+/// Every builtin program, identical inputs, 1/2/3/8 pool threads →
+/// identical output bits.
+#[test]
+fn every_host_program_is_bitwise_identical_across_thread_counts() {
+    let manifest = Manifest::builtin();
+    let libs: Vec<Arc<Library>> =
+        THREAD_COUNTS.iter().map(|&t| Library::host_with_threads(t)).collect();
+
+    // (program name, cap for s32 inputs)
+    let mut names: Vec<(String, usize)> = Vec::new();
+    for key in manifest.common.keys() {
+        names.push((format!("common/{key}"), 1));
+    }
+    for (cfg, entry) in &manifest.configs {
+        for key in entry.artifacts.keys() {
+            names.push((format!("{cfg}/{key}"), entry.model.vocab));
+        }
+    }
+    for (cfg, entry) in &manifest.mlp_configs {
+        for key in entry.artifacts.keys() {
+            names.push((format!("mlp_{cfg}/{key}"), entry.model.classes));
+        }
+    }
+    assert!(names.len() > 40, "builtin manifest unexpectedly small");
+
+    for (name, cap) in names {
+        let entry = manifest.entry(&name).unwrap_or_else(|| panic!("no entry {name}"));
+        let inputs = gen_inputs(entry, cap, name_seed(&name));
+        let mut baseline: Option<Vec<Value>> = None;
+        for (lib, &threads) in libs.iter().zip(THREAD_COUNTS.iter()) {
+            let prog = lib.get(&name).unwrap_or_else(|e| panic!("loading {name}: {e:?}"));
+            let out = prog
+                .run_v(&inputs)
+                .unwrap_or_else(|e| panic!("running {name} at {threads} threads: {e:?}"));
+            match &baseline {
+                None => baseline = Some(out),
+                Some(base) => assert_values_bit_equal(&name, threads, base, &out),
+            }
+        }
+    }
+}
+
+/// 20 MLP training steps (AdamA, kernel backend): per-step loss bits and
+/// final parameter bits are identical at every thread count.
+fn mlp_training_run(threads: usize) -> (Vec<u32>, Vec<Vec<u32>>) {
+    let lib = Library::host_with_threads(threads);
+    let cfg = TrainConfig {
+        model: "tiny".into(),
+        optimizer: OptimizerKind::AdamA,
+        backend: OptimBackend::Kernel,
+        accum_steps: 4,
+        lr: LrSchedule::constant(5e-2),
+        ..TrainConfig::default()
+    };
+    let mut trainer = MlpTrainer::new(lib, cfg).unwrap();
+    let h = trainer.hyper.clone();
+    let mut data = BlobData::new(h.features, h.classes, 5, 6);
+    let mut losses = Vec::with_capacity(20);
+    for _ in 0..20 {
+        let mbs: Vec<_> = (0..4).map(|_| data.batch(h.microbatch)).collect();
+        losses.push(trainer.train_step(&mbs).unwrap().to_bits());
+    }
+    let params = trainer
+        .params()
+        .iter()
+        .map(|p| p.flat.iter().map(|x| x.to_bits()).collect())
+        .collect();
+    (losses, params)
+}
+
+#[test]
+fn mlp_training_is_bitwise_identical_serial_vs_parallel() {
+    let (base_losses, base_params) = mlp_training_run(1);
+    assert!(base_losses.len() == 20);
+    for threads in [2usize, 3, 8] {
+        let (losses, params) = mlp_training_run(threads);
+        assert_eq!(base_losses, losses, "MLP loss bits drifted at {threads} threads");
+        assert_eq!(base_params, params, "MLP final params drifted at {threads} threads");
+    }
+}
+
+/// 20 tiny-transformer training steps (AdamA release-per-layer, kernel
+/// backend): identical loss trajectory and final parameter bits.
+fn lm_training_run(threads: usize) -> (Vec<u32>, Vec<Vec<u32>>) {
+    let lib = Library::host_with_threads(threads);
+    let cfg = TrainConfig {
+        model: "tiny".into(),
+        optimizer: OptimizerKind::AdamA,
+        backend: OptimBackend::Kernel,
+        accum_steps: 2,
+        chunk: 16384,
+        seed: 42,
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::new(lib, cfg).unwrap();
+    let h = trainer.spec().hyper.clone();
+    let mut corpus = MarkovCorpus::new(h.vocab, 7, 1);
+    let mut losses = Vec::with_capacity(20);
+    for _ in 0..20 {
+        let mbs = corpus.minibatch(2, h.microbatch, h.seq);
+        let stats = trainer.train_step(&mbs).unwrap();
+        losses.push(stats.loss.to_bits());
+    }
+    let params = trainer
+        .params()
+        .iter()
+        .map(|p| p.flat.iter().map(|x| x.to_bits()).collect())
+        .collect();
+    (losses, params)
+}
+
+#[test]
+fn transformer_training_is_bitwise_identical_serial_vs_parallel() {
+    let (base_losses, base_params) = lm_training_run(1);
+    assert!(base_losses.len() == 20);
+    for threads in [2usize, 3, 8] {
+        let (losses, params) = lm_training_run(threads);
+        assert_eq!(base_losses, losses, "LM loss bits drifted at {threads} threads");
+        assert_eq!(base_params, params, "LM final params drifted at {threads} threads");
+    }
+}
+
+/// `ADAMA_THREADS` resolution: positive integers pin the pool, everything
+/// else falls back to available parallelism; the executor reads it at
+/// construction time.
+#[test]
+fn adama_threads_env_knob() {
+    use adama::runtime::pool::resolve_threads;
+    use adama::runtime::Executor;
+
+    assert_eq!(resolve_threads(Some("3")), 3);
+    assert_eq!(resolve_threads(Some(" 8 ")), 8);
+    let hw = resolve_threads(None);
+    assert!(hw >= 1);
+    assert_eq!(resolve_threads(Some("0")), hw);
+    assert_eq!(resolve_threads(Some("not-a-number")), hw);
+
+    // executor construction honours the env var (no other test in this
+    // binary reads it — they pin thread counts explicitly); restore the
+    // prior value so a CI-wide ADAMA_THREADS setting survives this test
+    let prior = std::env::var("ADAMA_THREADS").ok();
+    std::env::set_var("ADAMA_THREADS", "3");
+    let exec = adama::runtime::HostExecutor::new();
+    match prior {
+        Some(v) => std::env::set_var("ADAMA_THREADS", v),
+        None => std::env::remove_var("ADAMA_THREADS"),
+    }
+    assert_eq!(exec.threads(), 3);
+}

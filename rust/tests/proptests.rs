@@ -6,6 +6,10 @@
 //!   * coordinator math: AdamA(N=1) ≡ fused Adam, for random states;
 //!   * m_t identical Adam vs AdamA for any N; v_t = Σg² exactly;
 //!   * routing/chunking: chunk_ranges covers exactly, for random sizes;
+//!   * pool chunking: partition(n, threads) covers 0..n exactly for
+//!     arbitrary n/threads (incl. n < threads and n = 0), balanced ±1;
+//!   * pool numerics: parallel matmul ≡ serial reference within 0 ULP
+//!     (the per-cell dot-product order is unchanged by the row split);
 //!   * ring collectives: all-reduce ≡ sequential sum for random worlds;
 //!   * shard layout: reduce-scatter ownership partitions the buffer;
 //!   * batching/state: optimizer state bytes are conserved across steps;
@@ -14,6 +18,8 @@
 use adama::collective::{CommGroup, CommHandle};
 use adama::memmodel::{peak_memory, DtypePolicy, PaperModel, Scenario, Strategy};
 use adama::optim::host_math;
+use adama::runtime::hostexec::math;
+use adama::runtime::pool::{partition, ThreadPool};
 use adama::tensor::{chunk_ranges, Rng};
 
 const B1: f32 = 0.9;
@@ -107,6 +113,115 @@ fn prop_chunk_ranges_partition_exactly() {
             expect_off += len;
         }
         assert_eq!(expect_off, total, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_pool_partition_covers_exactly() {
+    for seed in 0..300u64 {
+        let mut rng = Rng::new(7000 + seed);
+        let n = rng.below(10_000); // includes 0 and n < parts cases
+        let parts = 1 + rng.below(12);
+        let ranges = partition(n, parts);
+        assert!(ranges.len() <= parts, "seed {seed}");
+        assert_eq!(ranges.len(), parts.min(n), "seed {seed}: range count");
+        let mut off = 0usize;
+        let mut sizes = Vec::new();
+        for &(o, l) in &ranges {
+            assert_eq!(o, off, "seed {seed}: non-contiguous");
+            assert!(l > 0, "seed {seed}: empty range");
+            sizes.push(l);
+            off += l;
+        }
+        assert_eq!(off, n, "seed {seed}: does not cover 0..{n}");
+        if let (Some(mn), Some(mx)) = (sizes.iter().min(), sizes.iter().max()) {
+            assert!(mx - mn <= 1, "seed {seed}: unbalanced {sizes:?}");
+        }
+    }
+    // pinned edges: n = 0, n < threads, exact division
+    assert!(partition(0, 4).is_empty());
+    assert_eq!(partition(3, 8).len(), 3);
+    assert_eq!(partition(8, 4), vec![(0, 2), (2, 2), (4, 2), (6, 2)]);
+}
+
+#[test]
+fn prop_parallel_matmul_equals_serial_within_0_ulp() {
+    // The row split must leave every per-cell accumulation order intact,
+    // so parallel == serial == hand-rolled reference *bitwise* (0 ULP).
+    let serial = ThreadPool::new(1);
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(8000 + seed);
+        let threads = 2 + rng.below(7);
+        let par = ThreadPool::new(threads);
+        // m·n above the pool's inline cutoff so the split is actually live
+        let m = 33 + rng.below(31);
+        let n = 33 + rng.below(31);
+        let k = 1 + rng.below(48);
+        let a = randvec(&mut rng, m * k, 1.5);
+        let b = randvec(&mut rng, k * n, 1.5);
+
+        // matmul: reference with the serial ikj loop order
+        let mut reference = vec![0.0f32; m * n];
+        for i in 0..m {
+            let row = &mut reference[i * n..(i + 1) * n];
+            for p in 0..k {
+                let aip = a[i * k + p];
+                for (o, &bv) in row.iter_mut().zip(&b[p * n..(p + 1) * n]) {
+                    *o += aip * bv;
+                }
+            }
+        }
+        let mut got_s = vec![0.0f32; m * n];
+        let mut got_p = vec![0.0f32; m * n];
+        math::matmul(&serial, &a, &b, m, k, n, &mut got_s);
+        math::matmul(&par, &a, &b, m, k, n, &mut got_p);
+        for i in 0..m * n {
+            assert_eq!(reference[i].to_bits(), got_s[i].to_bits(), "seed {seed}: serial matmul");
+            assert_eq!(
+                reference[i].to_bits(),
+                got_p[i].to_bits(),
+                "seed {seed}: parallel matmul ({threads} threads)"
+            );
+        }
+
+        // matmul_tn: a:[p,m], b:[p,n], reference accumulates r ascending
+        let p_rows = 1 + rng.below(48);
+        let at = randvec(&mut rng, p_rows * m, 1.0);
+        let bt = randvec(&mut rng, p_rows * n, 1.0);
+        let mut ref_tn = vec![0.0f32; m * n];
+        for r in 0..p_rows {
+            for i in 0..m {
+                let ari = at[r * m + i];
+                for (o, &bv) in
+                    ref_tn[i * n..(i + 1) * n].iter_mut().zip(&bt[r * n..(r + 1) * n])
+                {
+                    *o += ari * bv;
+                }
+            }
+        }
+        let mut got_tn = vec![0.0f32; m * n];
+        math::matmul_tn(&par, &at, &bt, p_rows, m, n, &mut got_tn);
+        for i in 0..m * n {
+            assert_eq!(ref_tn[i].to_bits(), got_tn[i].to_bits(), "seed {seed}: matmul_tn");
+        }
+
+        // matmul_nt: a:[m,k], b:[n,k], plain dot products
+        let bn = randvec(&mut rng, n * k, 1.0);
+        let mut ref_nt = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for (&av, &bv) in a[i * k..(i + 1) * k].iter().zip(&bn[j * k..(j + 1) * k]) {
+                    acc += av * bv;
+                }
+                ref_nt[i * n + j] = acc;
+            }
+        }
+        let mut got_nt = vec![0.0f32; m * n];
+        math::matmul_nt(&par, &a, &bn, m, k, n, &mut got_nt);
+        for i in 0..m * n {
+            assert_eq!(ref_nt[i].to_bits(), got_nt[i].to_bits(), "seed {seed}: matmul_nt");
+        }
     }
 }
 
