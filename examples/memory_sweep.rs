@@ -1,14 +1,15 @@
 //! Memory sweep: measured per-category peaks across optimizers and
 //! accumulation depths at `tiny`/`small` scale, next to the analytic
-//! model's projection of the same run — then the paper-scale projection
-//! for BERT-Large and BERT-4B.
+//! model's projection of the same run — then the host executor's
+//! stash-vs-remat activation budget sweep (`ADAMA_ACT_BUDGET`), and
+//! finally the paper-scale projection for BERT-Large and BERT-4B.
 //!
 //!     cargo run --release --example memory_sweep -- --model tiny
 
 use adama::config::{OptimBackend, OptimizerKind, TrainConfig};
 use adama::data::MarkovCorpus;
-use adama::memmodel::{peak_memory, DtypePolicy, PaperModel, Scenario, Strategy};
-use adama::runtime::ArtifactLibrary;
+use adama::memmodel::{peak_memory, DtypePolicy, HostBlockDims, PaperModel, Scenario, Strategy};
+use adama::runtime::{ArtifactLibrary, Library, MemoryPlan};
 use adama::util::cliargs::Args;
 use adama::util::stats::fmt_bytes;
 use adama::{Category, Trainer};
@@ -49,6 +50,51 @@ fn main() -> anyhow::Result<()> {
             );
         }
     }
+
+    println!("\n=== activation budget sweep ({model} scale, ADAMA_ACT_BUDGET) ===");
+    let hyper = lib.manifest().model_config(&model)?.model.clone();
+    let dims = HostBlockDims::from_model(&hyper);
+    let blocks = hyper.layers as u64;
+    let entry = dims.stash_entry_bytes();
+    println!("per-block stash entry: {} ({} blocks)", fmt_bytes(entry as usize), blocks);
+    println!(
+        "{:<10} {:>12} {:>12} {:>12} {:>6} {:>7} {:>10}",
+        "budget", "stash peak", "predicted", "ws peak", "hits", "remats", "steps/s"
+    );
+    for (name, plan) in [
+        ("0", MemoryPlan::remat()),
+        ("half", MemoryPlan::bytes(entry * blocks / 2)),
+        ("unlimited", MemoryPlan::unlimited()),
+    ] {
+        let plib = Library::host_with_plan(lib.executor().threads(), plan);
+        let cfg = TrainConfig {
+            model: model.clone(),
+            optimizer: OptimizerKind::AdamA,
+            backend: OptimBackend::Kernel,
+            accum_steps: 2,
+            ..TrainConfig::default()
+        };
+        let mut t = Trainer::new(plib.clone(), cfg)?;
+        let h = t.spec().hyper.clone();
+        let mut c = MarkovCorpus::new(h.vocab, 7, 1);
+        let t0 = std::time::Instant::now();
+        let steps = 4;
+        for _ in 0..steps {
+            t.train_step(&c.minibatch(2, h.microbatch, h.seq))?;
+        }
+        let mem = plib.executor().memory().expect("host executor memory stats");
+        println!(
+            "{:<10} {:>12} {:>12} {:>12} {:>6} {:>7} {:>10.2}",
+            name,
+            fmt_bytes(mem.stash_peak_bytes as usize),
+            fmt_bytes(dims.predicted_stash_peak_bytes(plan, blocks) as usize),
+            fmt_bytes(mem.workspace_peak_bytes as usize),
+            mem.stash_hits,
+            mem.remats,
+            steps as f64 / t0.elapsed().as_secs_f64(),
+        );
+    }
+    println!("(stash skips the block-forward recompute inside block_bwd; remat re-runs it)");
 
     println!("\n=== analytic projection (paper scale, fp32 policy) ===");
     println!(

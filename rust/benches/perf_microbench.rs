@@ -7,7 +7,10 @@
 //!   * a full tiny train step (end-to-end floor);
 //!   * thread-pool scaling: matmul and the `small` transformer block
 //!     forward at 1/2/4 pool threads (per-thread-count rows, so the
-//!     speedup is machine-recorded in the trajectory).
+//!     speedup is machine-recorded in the trajectory);
+//!   * activation stash vs remat: the `small` block forward+backward
+//!     pair at budget 0 (per-layer remat) vs unlimited (stash hit —
+//!     backward skips the recompute), at 1 and 4 threads.
 //!
 //! Besides the human-readable table, writes `BENCH_perf.json` —
 //! machine-readable ns/elem per kernel per backend (each row tagged with
@@ -18,7 +21,7 @@ use adama::config::{OptimBackend, OptimizerKind};
 use adama::data::MarkovCorpus;
 use adama::optim::{host_math, ChunkRunner, Hyper};
 use adama::runtime::hostexec::math;
-use adama::runtime::{Library, ThreadPool, Value};
+use adama::runtime::{Library, MemoryPlan, ThreadPool, Value};
 use adama::tensor::Rng;
 use adama::util::json::{obj, Json};
 use adama::util::stats::bench;
@@ -216,6 +219,73 @@ fn main() {
             ("speedup_vs_1thread", speedup.into()),
         ]));
     }
+
+    banner("activation stash vs remat: `small` block fwd+bwd pair (ADAMA_ACT_BUDGET)");
+    println!(
+        "{:<10} {:>8} {:>12} {:>10} {:>8} {:>8}",
+        "budget", "threads", "ms/pair", "vs remat", "hits", "remats"
+    );
+    for threads in [1usize, 4] {
+        let mut remat_pair_ms = 0.0f64;
+        for (mode, plan) in
+            [("0", MemoryPlan::remat()), ("unlimited", MemoryPlan::unlimited())]
+        {
+            let tlib = Library::host_with_plan(threads, plan);
+            let entry = tlib.entry("small/block_fwd").expect("small/block_fwd entry");
+            let mut arng = Rng::new(13);
+            // fwd inputs: (x, *12 params); bwd reuses the SAME x and
+            // params (a stash hit requires a bit-identical input)
+            let fwd_inputs: Vec<Value> = entry
+                .inputs
+                .iter()
+                .map(|spec| {
+                    let data: Vec<f32> =
+                        (0..spec.elements()).map(|_| 0.1 * arng.normal()).collect();
+                    Value::f32(data, &spec.shape).unwrap()
+                })
+                .collect();
+            let x_spec = &entry.inputs[0];
+            let dy: Vec<f32> =
+                (0..x_spec.elements()).map(|_| 0.1 * arng.normal()).collect();
+            let mut bwd_inputs: Vec<Value> = vec![
+                fwd_inputs[0].clone(),
+                Value::f32(dy, &x_spec.shape).unwrap(),
+            ];
+            bwd_inputs.extend(fwd_inputs[1..].iter().cloned());
+
+            let fwd = tlib.get("small/block_fwd").expect("small/block_fwd program");
+            let bwd = tlib.get("small/block_bwd").expect("small/block_bwd program");
+            let s = bench(1, iters.min(5), || {
+                fwd.run_v(&fwd_inputs).unwrap();
+                bwd.run_v(&bwd_inputs).unwrap();
+            });
+            if mode == "0" {
+                remat_pair_ms = s.mean();
+            }
+            let speedup = remat_pair_ms / s.mean();
+            let mem = tlib.executor().memory().unwrap_or_default();
+            println!(
+                "{:<10} {:>8} {:>12.3} {:>9.2}x {:>8} {:>8}",
+                mode,
+                threads,
+                1e3 * s.mean(),
+                speedup,
+                mem.stash_hits,
+                mem.remats
+            );
+            results.push(obj(vec![
+                ("op", "block_bwd_stash_vs_remat_small".into()),
+                ("backend", "host".into()),
+                ("act_budget", mode.into()),
+                ("threads", threads.into()),
+                ("ms_per_fwd_bwd_pair", (s.mean() * 1e3).into()),
+                ("speedup_vs_remat", speedup.into()),
+                ("stash_hits", (mem.stash_hits as usize).into()),
+                ("remats", (mem.remats as usize).into()),
+            ]));
+        }
+    }
+    println!("(the stashed backward skips the in-call forward recompute entirely)");
 
     banner("executor call count (instrumentation)");
     println!("exec calls so far: {}", lib.executor().exec_calls());

@@ -74,18 +74,21 @@ pub fn run_data_parallel(lib: Arc<Library>, spec: DpSpec) -> Result<DpReport> {
     {
         bail!("{:?} sync requires AdamA", spec.sync);
     }
-    // Each rank is already its own OS thread: pin the host executor's
-    // intra-op pool to one worker per rank so M ranks don't fan out into
-    // M·T pool threads (oversubscription). Numerics are unaffected — the
-    // pool is bit-for-bit identical at any thread count.
-    let lib = lib.fork_with_threads(1);
     let handles = CommGroup::new(m);
     let stats = handles[0].stats().clone();
     let t0 = std::time::Instant::now();
 
     let mut joins = Vec::new();
     for comm in handles {
-        let lib = lib.clone();
+        // Per-rank fork. Each rank is already its own OS thread: pin the
+        // host executor's intra-op pool to one worker per rank so M ranks
+        // don't fan out into M·T pool threads (oversubscription), and —
+        // when an activation stash budget is set — give every rank a
+        // private arena so concurrent ranks never evict or meter each
+        // other's entries. Numerics are unaffected — the pool is
+        // bit-for-bit identical at any thread count, and stash/remat are
+        // bit-identical.
+        let lib = lib.fork_with_threads(1);
         let spec = spec.clone();
         joins.push(std::thread::spawn(move || worker(lib, spec, comm)));
     }

@@ -116,16 +116,16 @@ pub fn run_zero1(lib: Arc<Library>, spec: Zero1Spec) -> Result<Zero1Report> {
     if m < 2 {
         bail!("ZeRO-S1 needs >= 2 workers");
     }
-    // One OS thread per rank: pin the host pool to 1 worker per rank
-    // (see `run_data_parallel`) — avoids oversubscription, same bits.
-    let lib = lib.fork_with_threads(1);
     let handles = CommGroup::new(m);
     let stats = handles[0].stats().clone();
     let t0 = std::time::Instant::now();
 
     let mut joins = Vec::new();
     for comm in handles {
-        let lib = lib.clone();
+        // Per-rank fork: pins the host pool to 1 worker per rank (see
+        // `run_data_parallel`) and gives each rank a private activation
+        // arena when stashing is enabled — same bits either way.
+        let lib = lib.fork_with_threads(1);
         let spec = spec.clone();
         joins.push(std::thread::spawn(move || match spec.cfg.optimizer {
             OptimizerKind::AdamA => worker_adama(lib, spec, comm),

@@ -1,6 +1,54 @@
 //! Per-step training metrics + CSV/JSON export for the bench harnesses.
+//!
+//! Besides the per-step loss/throughput log, [`Metrics`] carries the
+//! latest [`MemorySnapshot`]: the coordinator-level tracker peaks
+//! (weights/grads/states/activations) next to the executor-level
+//! activation instrumentation ([`crate::runtime::MemStats`] — stash
+//! arena + kernel workspace), so one object answers both "what did the
+//! training loop hold" and "what did the backend hold".
 
+use crate::memory::MemoryReport;
+use crate::runtime::MemStats;
 use crate::util::json::{obj, Json};
+
+/// Coordinator + executor memory peaks, recorded once per train step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemorySnapshot {
+    /// Category-exact peaks from the coordinator's `MemoryTracker`.
+    pub tracker: MemoryReport,
+    /// Backend activation instrumentation (None: backend not
+    /// instrumented, e.g. PJRT).
+    pub host: Option<MemStats>,
+}
+
+impl MemorySnapshot {
+    /// Total measured activation bytes: tracker-level stashed block
+    /// inputs plus backend-level stash arena.
+    pub fn activation_peak_bytes(&self) -> u64 {
+        self.tracker.peak_activations as u64
+            + self.host.map(|m| m.stash_peak_bytes).unwrap_or(0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("peak_weights", self.tracker.peak_weights.into()),
+            ("peak_gradients", self.tracker.peak_gradients.into()),
+            ("peak_optimizer", self.tracker.peak_optimizer.into()),
+            ("peak_activations", self.tracker.peak_activations.into()),
+            ("peak_workspace", self.tracker.peak_workspace.into()),
+            ("peak_total", self.tracker.peak_total.into()),
+        ];
+        if let Some(m) = self.host {
+            fields.push(("host_stash_peak", (m.stash_peak_bytes as usize).into()));
+            fields.push(("host_stash_live", (m.stash_live_bytes as usize).into()));
+            fields.push(("host_ws_peak", (m.workspace_peak_bytes as usize).into()));
+            fields.push(("host_stash_hits", (m.stash_hits as usize).into()));
+            fields.push(("host_remats", (m.remats as usize).into()));
+            fields.push(("host_evictions", (m.stash_evictions as usize).into()));
+        }
+        obj(fields)
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct StepStats {
@@ -21,10 +69,11 @@ impl StepStats {
     }
 }
 
-/// Append-only step log.
+/// Append-only step log + the latest memory snapshot.
 #[derive(Debug, Clone, Default)]
 pub struct Metrics {
     steps: Vec<StepStats>,
+    memory: Option<MemorySnapshot>,
 }
 
 impl Metrics {
@@ -34,6 +83,16 @@ impl Metrics {
 
     pub fn push(&mut self, s: StepStats) {
         self.steps.push(s);
+    }
+
+    /// Record the current memory peaks (overwrites — peaks are
+    /// monotonic, so the latest snapshot is the step-wise maximum).
+    pub fn set_memory(&mut self, m: MemorySnapshot) {
+        self.memory = Some(m);
+    }
+
+    pub fn memory(&self) -> Option<&MemorySnapshot> {
+        self.memory.as_ref()
     }
 
     pub fn steps(&self) -> &[StepStats] {
@@ -91,6 +150,15 @@ impl Metrics {
                 .collect(),
         )
     }
+
+    /// Steps + memory snapshot as one report object.
+    pub fn to_json_full(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![("steps", self.to_json())];
+        if let Some(m) = &self.memory {
+            fields.push(("memory", m.to_json()));
+        }
+        obj(fields)
+    }
 }
 
 #[cfg(test)]
@@ -128,5 +196,29 @@ mod tests {
         let j = m.to_json();
         let parsed = crate::util::json::Json::parse(&j.to_string_compact()).unwrap();
         assert_eq!(parsed.as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn memory_snapshot_surfaces_in_full_json() {
+        let mut m = Metrics::new();
+        m.push(stat(1, 2.0, 0.5, 50));
+        let tracker = MemoryReport {
+            peak_weights: 10,
+            peak_gradients: 20,
+            peak_optimizer: 30,
+            peak_activations: 40,
+            peak_workspace: 5,
+            peak_total: 105,
+        };
+        let host = MemStats { stash_peak_bytes: 7, stash_hits: 3, ..MemStats::default() };
+        let snap = MemorySnapshot { tracker, host: Some(host) };
+        assert_eq!(snap.activation_peak_bytes(), 47);
+        m.set_memory(snap);
+        let j = m.to_json_full();
+        let parsed = crate::util::json::Json::parse(&j.to_string_compact()).unwrap();
+        let mem = parsed.get("memory").unwrap();
+        assert_eq!(mem.get("peak_activations").unwrap().as_usize().unwrap(), 40);
+        assert_eq!(mem.get("host_stash_peak").unwrap().as_usize().unwrap(), 7);
+        assert_eq!(mem.get("host_stash_hits").unwrap().as_usize().unwrap(), 3);
     }
 }

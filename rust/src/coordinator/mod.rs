@@ -11,11 +11,18 @@
 //!
 //! Every buffer is registered with the [`MemoryTracker`], so the paper's
 //! Figure-5/6 peak-memory claims are *measured*, not estimated.
+//!
+//! Activation accounting is two-level: the coordinator stashes each
+//! block's **input** (the per-layer remat protocol, tracked here under
+//! [`Category::Activations`]), while the host executor may additionally
+//! stash full block **intermediates** under its `ADAMA_ACT_BUDGET`
+//! arena — surfaced per step through [`MemorySnapshot`] so both levels
+//! appear side by side in [`Metrics`].
 
 mod metrics;
 pub mod mlp;
 
-pub use metrics::{Metrics, StepStats};
+pub use metrics::{MemorySnapshot, Metrics, StepStats};
 pub use mlp::MlpTrainer;
 
 use std::sync::Arc;
@@ -224,6 +231,11 @@ impl TrainerCore {
             loss_sum += scalar_f32(&out[0])? as f64;
             correct += scalar_i32(&out[1])? as usize;
             total += mb.batch * mb.seq;
+            // eval is forward-only: any activation stash the executor
+            // kept for this micro-batch will never be consumed by a
+            // backward — release it immediately so eval phases don't
+            // inflate the stash accounting (live or peak)
+            self.lib.executor().clear_stash();
         }
         Ok((
             (loss_sum / micro_batches.len() as f64) as f32,
@@ -401,6 +413,12 @@ impl Trainer {
         let stats =
             StepStats { step: t, loss, lr, duration_s: t0.elapsed().as_secs_f64(), tokens };
         self.metrics.push(stats.clone());
+        // surface coordinator + executor memory peaks alongside the step
+        // log (peaks are monotonic: the latest snapshot is the maximum)
+        self.metrics.set_memory(MemorySnapshot {
+            tracker: self.core.tracker.report(),
+            host: self.core.lib.executor().memory(),
+        });
         Ok(stats)
     }
 

@@ -36,6 +36,8 @@
 //! | `--features pjrt` + artifacts | PJRT over `$ADAMA_ARTIFACTS` / `./artifacts` |
 //! | `ADAMA_BACKEND=host` | force the host executor even with `pjrt` |
 //! | `ADAMA_BACKEND=pjrt` | require PJRT; fail loudly instead of falling back |
+//! | `ADAMA_THREADS=N` | host thread-pool size (bit-identical at any N) |
+//! | `ADAMA_ACT_BUDGET=0\|<n>[k\|m\|g]\|unlimited` | activation stash budget: remat (default) ↔ stash per-block intermediates |
 //!
 //! Python never runs on the training path; with default features nothing
 //! outside this workspace runs at all.

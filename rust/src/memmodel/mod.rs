@@ -13,8 +13,14 @@
 //! seq 128) then gives 5.44 GB static + activations; Table 2 reports
 //! 6.15 GB total, fixing the activation coefficient K ≈ 28 bytes per
 //! (token × layer × hidden).
+//!
+//! [`HostBlockDims`] extends the model to the host executor's
+//! stash-vs-remat activation trade (`ADAMA_ACT_BUDGET`): exact per-block
+//! stash and workspace byte formulas, reconciled against the executor's
+//! measured [`crate::runtime::MemStats`] in `rust/tests/actstash.rs`.
 
 use crate::config::OptimizerKind;
+use crate::runtime::{MemoryPlan, ModelHyper};
 
 /// A paper-scale transformer description.
 #[derive(Debug, Clone)]
@@ -250,6 +256,130 @@ pub fn max_model_params(
     lo
 }
 
+// ---------------------------------------------------------------------------
+// Host-executor activation accounting (stash vs remat)
+// ---------------------------------------------------------------------------
+
+/// Exact byte model of the host executor's transformer **block** programs
+/// — the analytic twin of the measured
+/// [`crate::runtime::MemStats`]. Every formula mirrors the allocation
+/// sites in `runtime::hostexec::transformer` one-for-one, and
+/// `rust/tests/actstash.rs` asserts measured == predicted, so a new
+/// buffer in the kernel code that is not reflected here is a test
+/// failure, not silent drift.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HostBlockDims {
+    /// Micro-batch rows.
+    pub batch: u64,
+    pub seq: u64,
+    pub hidden: u64,
+    pub heads: u64,
+    /// FFN width (4·hidden for every builtin config).
+    pub ffn: u64,
+}
+
+impl HostBlockDims {
+    /// Dims of one block of a manifest model config at its configured
+    /// micro-batch.
+    pub fn from_model(h: &ModelHyper) -> Self {
+        Self {
+            batch: h.microbatch as u64,
+            seq: h.seq as u64,
+            hidden: h.hidden as u64,
+            heads: h.heads as u64,
+            ffn: h.ffn as u64,
+        }
+    }
+
+    fn bs(&self) -> u64 {
+        self.batch * self.seq
+    }
+
+    /// Elements of the causal attention probability tensor
+    /// `[b, heads, s, s]`.
+    fn probs_elems(&self) -> u64 {
+        self.batch * self.heads * self.seq * self.seq
+    }
+
+    /// Bytes one stash entry occupies in the activation arena: the
+    /// forward state minus the output `y` (which leaves as the program
+    /// output) plus the verbatim copy of the block input `x`.
+    ///
+    /// State kept: `hn1 + qkv(3h) + probs + ao + x1 + hn2 + m1(f) +
+    /// gm(f)`; plus `x` — net `bs·(8h + 2f) + b·heads·s²` floats.
+    pub fn stash_entry_bytes(&self) -> u64 {
+        let (h, f) = (self.hidden, self.ffn);
+        4 * (self.bs() * (8 * h + 2 * f) + self.probs_elems())
+    }
+
+    /// Transient workspace bytes one `block_fwd` call registers:
+    /// `hn1 + qkv(3h) + probs + aoh + ao + attn + x1 + hn2 + m1(f) +
+    /// gm(f) + m2 + y` — `bs·(11h + 2f) + b·heads·s²` floats.
+    pub fn fwd_workspace_bytes(&self) -> u64 {
+        let (h, f) = (self.hidden, self.ffn);
+        4 * (self.bs() * (11 * h + 2 * f) + self.probs_elems())
+    }
+
+    /// Bytes of stashed forward state that survive a `take()`: the entry
+    /// minus the verbatim `x` copy (which is dropped on lookup). A
+    /// stash-hit backward holds exactly this on top of its gradient
+    /// workspace.
+    pub fn stash_state_bytes(&self) -> u64 {
+        self.stash_entry_bytes() - 4 * self.bs() * self.hidden
+    }
+
+    /// Transient workspace bytes of the gradient sweep alone (shared by
+    /// both backward paths): the activation-shaped gradients
+    /// `bs·(11h + 2f)`, the parameter gradients `2hf + 4h²`, and the
+    /// bias-shaped gradients `9h + f` (db2 + dln2g/b + dbo + dbqkv(3h) +
+    /// dln1g/b).
+    fn grad_sweep_bytes(&self) -> u64 {
+        let (h, f) = (self.hidden, self.ffn);
+        4 * (self.bs() * (11 * h + 2 * f) + 2 * h * f + 4 * h * h + 9 * h + f)
+    }
+
+    /// Workspace of a stash-hit `block_bwd` call: the gradient sweep plus
+    /// the consumed forward state, which stays physically live (and is
+    /// metered as workspace) until the call returns.
+    pub fn bwd_workspace_bytes(&self) -> u64 {
+        self.grad_sweep_bytes() + self.stash_state_bytes()
+    }
+
+    /// Workspace of a rematerialising `block_bwd` call: the recomputed
+    /// forward's buffers plus the gradient sweep.
+    pub fn remat_bwd_workspace_bytes(&self) -> u64 {
+        self.fwd_workspace_bytes() + self.grad_sweep_bytes()
+    }
+
+    /// Predicted arena peak for a model with `blocks` layers trained
+    /// under `plan`: the budget admits whole entries, newest-needed
+    /// first, so the steady-state peak is exactly
+    /// `stashable · entry_bytes`.
+    pub fn predicted_stash_peak_bytes(&self, plan: MemoryPlan, blocks: u64) -> u64 {
+        plan.stashable_blocks(self.stash_entry_bytes(), blocks) * self.stash_entry_bytes()
+    }
+
+    /// Predicted workspace peak over a training step: remat backward is
+    /// the fattest call when any block rematerialises; otherwise the
+    /// larger of forward and pure backward.
+    pub fn predicted_workspace_peak_bytes(&self, plan: MemoryPlan, blocks: u64) -> u64 {
+        if plan.stashable_blocks(self.stash_entry_bytes(), blocks) < blocks {
+            self.remat_bwd_workspace_bytes()
+        } else {
+            self.fwd_workspace_bytes().max(self.bwd_workspace_bytes())
+        }
+    }
+
+    /// The stash-policy analogue of [`DtypePolicy::act_coeff`]: bytes per
+    /// (token × layer × hidden) when every block stashes. Where the
+    /// remat policy keeps K=4 (block inputs only), full stashing keeps
+    /// `4·(8 + 2·f/h) + 4·heads·s/h` — the paper-scale projection of the
+    /// memory side of the stash-vs-recompute trade (Fig. 5/7 context).
+    pub fn stash_act_coeff(&self) -> f64 {
+        self.stash_entry_bytes() as f64 / (self.bs() * self.hidden) as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -363,6 +493,61 @@ mod tests {
             let ratio = m.params as f64 / t as f64;
             assert!((0.7..1.3).contains(&ratio), "{t} -> {} ({ratio:.2})", m.params);
         }
+    }
+
+    #[test]
+    fn host_block_dims_formulas_are_consistent() {
+        // tiny config dims: b=4, s=32, h=64, heads=2, f=256
+        let d = HostBlockDims { batch: 4, seq: 32, hidden: 64, heads: 2, ffn: 256 };
+        let bs = 4 * 32u64;
+        let probs = 4 * 2 * 32 * 32u64;
+        assert_eq!(d.stash_entry_bytes(), 4 * (bs * (8 * 64 + 2 * 256) + probs));
+        assert_eq!(d.fwd_workspace_bytes(), 4 * (bs * (11 * 64 + 2 * 256) + probs));
+        assert_eq!(d.stash_state_bytes(), 4 * (bs * (7 * 64 + 2 * 256) + probs));
+        assert_eq!(
+            d.grad_sweep_bytes(),
+            4 * (bs * (11 * 64 + 2 * 256) + 2 * 64 * 256 + 4 * 64 * 64 + 9 * 64 + 256)
+        );
+        assert_eq!(d.bwd_workspace_bytes(), d.grad_sweep_bytes() + d.stash_state_bytes());
+        assert_eq!(
+            d.remat_bwd_workspace_bytes(),
+            d.fwd_workspace_bytes() + d.grad_sweep_bytes()
+        );
+        // a stash entry is strictly smaller than the forward recompute
+        // it saves, and a stash-hit backward is strictly lighter than a
+        // rematerialising one (that's the whole trade)
+        assert!(d.stash_entry_bytes() < d.fwd_workspace_bytes());
+        assert!(d.bwd_workspace_bytes() < d.remat_bwd_workspace_bytes());
+    }
+
+    #[test]
+    fn predicted_stash_peak_follows_budget() {
+        let d = HostBlockDims { batch: 4, seq: 32, hidden: 64, heads: 2, ffn: 256 };
+        let e = d.stash_entry_bytes();
+        let blocks = 2u64;
+        assert_eq!(d.predicted_stash_peak_bytes(MemoryPlan::remat(), blocks), 0);
+        assert_eq!(
+            d.predicted_stash_peak_bytes(MemoryPlan::unlimited(), blocks),
+            blocks * e
+        );
+        // half budget fits exactly one of the two blocks
+        assert_eq!(d.predicted_stash_peak_bytes(MemoryPlan::bytes(e * blocks / 2), blocks), e);
+        // remat workspace dominates whenever any block recomputes
+        assert!(
+            d.predicted_workspace_peak_bytes(MemoryPlan::remat(), blocks)
+                > d.predicted_workspace_peak_bytes(MemoryPlan::unlimited(), blocks)
+        );
+    }
+
+    #[test]
+    fn stash_coefficient_dwarfs_remat_coefficient() {
+        // the remat policy keeps K=4 bytes per token·layer·hidden (block
+        // inputs only); full stashing keeps an order of magnitude more —
+        // the memory side of the recompute trade at any scale
+        let d = HostBlockDims { batch: 8, seq: 128, hidden: 1024, heads: 16, ffn: 4096 };
+        let k = d.stash_act_coeff();
+        let remat_k = DtypePolicy::runtime_remat().act_coeff as f64;
+        assert!(k > 10.0 * remat_k, "stash coeff {k:.1} vs remat {remat_k}");
     }
 
     #[test]

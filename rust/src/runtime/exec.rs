@@ -6,6 +6,28 @@
 //! types; `runtime::hostexec` implements them in pure rust (the default),
 //! and `runtime::pjrt` (cargo feature `pjrt`) implements them over the
 //! PJRT C API and the AOT HLO artifacts.
+//!
+//! ## How the seam fits together
+//!
+//! * A [`Program`] is one executable unit — an optimizer kernel, a
+//!   transformer layer, the fused MLP — resolved by manifest name
+//!   (`"common/adama_acc_16384"`, `"tiny/block_fwd"`, ...). Programs are
+//!   pure functions of their arguments plus backend-internal caches; the
+//!   training stack never sees backend types.
+//! * An [`Executor`] turns manifest entries into loaded programs and
+//!   reports backend facts (platform, thread count, execute-call count,
+//!   [`MemStats`] when the backend instruments memory).
+//! * [`crate::runtime::Library`] caches loaded programs and picks the
+//!   backend (`ADAMA_BACKEND=host|pjrt`).
+//!
+//! ## Determinism contract
+//!
+//! Backends must be *run-to-run and thread-count deterministic*: the same
+//! program on the same argument bits returns the same output bits,
+//! regardless of `ADAMA_THREADS` or pool contention. The host executor
+//! guarantees this via fixed contiguous work assignment (see
+//! [`crate::runtime::pool`]); `rust/tests/determinism.rs` enforces it for
+//! every builtin program at 1/2/3/8 threads.
 
 use std::sync::Arc;
 
@@ -169,6 +191,38 @@ pub trait Program: Send + Sync {
     }
 }
 
+/// Backend-neutral memory instrumentation snapshot (see
+/// [`Executor::memory`]): the activation stash arena plus the transient
+/// per-call workspace of the executing backend. Byte counts are exact
+/// for the programs the backend meters — on the host executor that is
+/// the transformer **block** programs and the fused MLP (each buffer
+/// registered at its allocation site); embed/head transients are
+/// outside the meter (see ROADMAP). The metered subset is what lets
+/// `crate::memmodel` predictions be reconciled against measurements as
+/// a tested invariant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct MemStats {
+    /// Configured stash budget; `None` = unlimited, `Some(0)` = pure
+    /// remat (never stash).
+    pub stash_budget_bytes: Option<u64>,
+    /// Bytes currently held by stashed activation entries.
+    pub stash_live_bytes: u64,
+    /// High-water mark of `stash_live_bytes`.
+    pub stash_peak_bytes: u64,
+    /// Transient workspace bytes live right now (usually 0 between calls).
+    pub workspace_live_bytes: u64,
+    /// High-water mark of per-call transient workspace.
+    pub workspace_peak_bytes: u64,
+    /// Forward calls that stashed their intermediates.
+    pub stashed: u64,
+    /// Backward calls that consumed a stash (recompute skipped).
+    pub stash_hits: u64,
+    /// Entries evicted to make room under the byte budget.
+    pub stash_evictions: u64,
+    /// Backward calls that fell back to rematerialisation.
+    pub remats: u64,
+}
+
 /// A program-loading backend. Implementations: `hostexec::HostExecutor`
 /// (pure rust, always available) and `pjrt::PjrtExecutor` (feature
 /// `pjrt`, compiles HLO artifacts).
@@ -195,6 +249,20 @@ pub trait Executor: Send + Sync {
     fn threads(&self) -> usize {
         1
     }
+
+    /// Memory instrumentation snapshot, when the backend provides one.
+    /// The host executor reports its activation stash arena and per-call
+    /// workspace meters; backends without instrumentation return `None`.
+    fn memory(&self) -> Option<MemStats> {
+        None
+    }
+
+    /// Drop any retained activation stash entries (no-op for backends
+    /// without a stash). The coordinator calls this after forward-only
+    /// phases (eval), whose stashed intermediates no backward will ever
+    /// consume — without it they would sit in the arena until budget or
+    /// entry-count recycling, inflating the measured stash peaks.
+    fn clear_stash(&self) {}
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,553 @@
+//! Activation memory manager for the host executor: budget-gated
+//! stash-vs-recompute for the per-layer transformer backward.
+//!
+//! The artifact contract (and the AdamA paper's activation story) is
+//! *per-layer rematerialisation*: `block_bwd` recomputes its forward
+//! internally, so only the block **inputs** survive between forward and
+//! backward. That minimises activation memory but doubles the forward
+//! FLOPs of every backward sweep. This module adds the other end of the
+//! trade-off: `block_fwd` may **stash** its full intermediate state
+//! (attention scores/softmax, head outputs, MLP hidden) into a tracked
+//! [`ActivationArena`], and `block_bwd` consumes the stash when present —
+//! skipping the recompute — falling back to remat otherwise.
+//!
+//! ## Budget semantics ([`MemoryPlan`] / `ADAMA_ACT_BUDGET`)
+//!
+//! The arena is gated by a byte budget:
+//!
+//! * [`ActBudget::Remat`] (`ADAMA_ACT_BUDGET` unset, empty, or `0`) —
+//!   never stash; bitwise-identical to the pre-existing remat path. This
+//!   is the default so that the artifact contract stays the baseline.
+//! * [`ActBudget::Bytes`] (`ADAMA_ACT_BUDGET=<n>`, with optional
+//!   `k`/`m`/`g` suffix) — stash while the arena's live bytes fit; when a
+//!   new entry would overflow, the **oldest** entries are evicted first
+//!   (they are the least likely to be consumed next: backward walks
+//!   layers in reverse, so the newest stash is needed first). Because
+//!   every block of a config stashes the same number of bytes, greedy
+//!   admission maximises the number of recomputes avoided under the
+//!   budget.
+//! * [`ActBudget::Unlimited`] (`ADAMA_ACT_BUDGET=unlimited`) — stash
+//!   every block; backward never recomputes.
+//!
+//! ## Correctness & the determinism contract
+//!
+//! A stash entry is keyed by an FNV-1a hash over the block input `x` and
+//! all 12 parameter tensors (bit patterns), and additionally stores a
+//! verbatim copy of `x` that is compared bit-for-bit on lookup. A hit
+//! therefore guarantees the stashed state is exactly what recompute would
+//! produce (the host executor is bit-deterministic at any thread count),
+//! so **stashed and rematerialised backward are bit-identical** —
+//! `rust/tests/actstash.rs` locks this down at 1 and 4 threads. A miss
+//! (evicted entry, changed parameters, forward-only callers such as eval)
+//! silently falls back to remat; it can never produce wrong gradients,
+//! only a slower correct one.
+//!
+//! Forward-only callers (eval loops) push entries that no backward ever
+//! consumes. The coordinator releases them eagerly
+//! (`Executor::clear_stash` after each eval micro-batch); for other
+//! forward-only users, budgeted arenas recycle leftovers through
+//! oldest-first eviction and unlimited arenas are bounded by
+//! [`MAX_ENTRIES`] as a backstop.
+//!
+//! ## Accounting
+//!
+//! The arena tracks live/peak stashed bytes plus stash/hit/evict/remat
+//! counters, and a [`WsMeter`] tracks the transient workspace the
+//! transformer/MLP programs allocate per call. Both surface through
+//! [`crate::runtime::Executor::memory`] as a backend-neutral
+//! [`MemStats`], and `crate::memmodel::HostBlockDims` predicts the same
+//! numbers analytically — the measured-vs-predicted gap is a tested
+//! invariant (`rust/tests/actstash.rs`).
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::runtime::exec::MemStats;
+
+/// Backstop on arena entry count so forward-only callers (eval) cannot
+/// grow an [`ActBudget::Unlimited`] arena without bound.
+pub const MAX_ENTRIES: usize = 512;
+
+/// Activation byte budget for the stash arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ActBudget {
+    /// Never stash: pure per-layer remat (the artifact contract).
+    Remat,
+    /// Stash while live bytes fit; evict oldest-first on overflow.
+    Bytes(u64),
+    /// Stash every block; backward never recomputes.
+    Unlimited,
+}
+
+/// Per-executor activation policy — the API twin of `ADAMA_ACT_BUDGET`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemoryPlan {
+    pub budget: ActBudget,
+}
+
+impl Default for MemoryPlan {
+    fn default() -> Self {
+        Self::remat()
+    }
+}
+
+impl MemoryPlan {
+    /// Pure remat (budget 0) — the default, matching the artifact contract.
+    pub fn remat() -> Self {
+        Self { budget: ActBudget::Remat }
+    }
+
+    /// Stash everything (no byte cap).
+    pub fn unlimited() -> Self {
+        Self { budget: ActBudget::Unlimited }
+    }
+
+    /// Stash under an explicit byte cap (0 collapses to [`Self::remat`]).
+    pub fn bytes(n: u64) -> Self {
+        if n == 0 {
+            Self::remat()
+        } else {
+            Self { budget: ActBudget::Bytes(n) }
+        }
+    }
+
+    /// Parse an `ADAMA_ACT_BUDGET` value: unset/empty/`0` → remat,
+    /// `unlimited|inf|max` → unlimited, a number with an optional
+    /// `k`/`m`/`g` (×1024) suffix → byte cap. Unparseable values fall
+    /// back to remat (never a panic on a bad env var).
+    pub fn parse(spec: Option<&str>) -> Self {
+        let s = match spec.map(str::trim) {
+            Some(s) if !s.is_empty() => s.to_ascii_lowercase(),
+            _ => return Self::remat(),
+        };
+        if matches!(s.as_str(), "unlimited" | "inf" | "max") {
+            return Self::unlimited();
+        }
+        let (digits, mult): (&str, u64) = match s.as_bytes().last() {
+            Some(b'k') => (&s[..s.len() - 1], 1 << 10),
+            Some(b'm') => (&s[..s.len() - 1], 1 << 20),
+            Some(b'g') => (&s[..s.len() - 1], 1 << 30),
+            _ => (s.as_str(), 1),
+        };
+        match digits.trim().parse::<u64>() {
+            Ok(n) => Self::bytes(n.saturating_mul(mult)),
+            Err(_) => Self::remat(),
+        }
+    }
+
+    /// Plan from the `ADAMA_ACT_BUDGET` environment variable.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::var("ADAMA_ACT_BUDGET").ok().as_deref())
+    }
+
+    /// Inverse of the `MemStats::stash_budget_bytes` encoding produced
+    /// by [`ActivationArena::stats`] (`Some(0)` = remat, `Some(n)` =
+    /// byte cap, `None` = unlimited) — both directions live in this file
+    /// so they cannot drift apart. `Library::fork_with_threads` uses
+    /// this to carry a running executor's plan into per-rank forks.
+    pub fn from_budget_bytes(budget: Option<u64>) -> Self {
+        match budget {
+            Some(0) => Self::remat(),
+            Some(n) => Self::bytes(n),
+            None => Self::unlimited(),
+        }
+    }
+
+    /// How many uniform `entry_bytes`-sized blocks fit under this budget
+    /// (capped at `blocks`) — the arena's steady-state stash depth, and
+    /// what `crate::memmodel` uses for the analytic prediction. Every
+    /// stashed block saves one full block-forward recompute, so for
+    /// uniform entries greedy admission is the optimal plan.
+    pub fn stashable_blocks(&self, entry_bytes: u64, blocks: u64) -> u64 {
+        match self.budget {
+            ActBudget::Remat => 0,
+            ActBudget::Unlimited => blocks,
+            ActBudget::Bytes(cap) => {
+                if entry_bytes == 0 {
+                    blocks
+                } else {
+                    (cap / entry_bytes).min(blocks)
+                }
+            }
+        }
+    }
+}
+
+/// FNV-1a over raw bytes — the stash key hash (serial, thread-count
+/// independent by construction).
+pub(crate) struct Fnv(u64);
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv {
+    pub fn new() -> Self {
+        Self(0xcbf29ce484222325)
+    }
+
+    pub fn u64(&mut self, x: u64) {
+        for b in x.to_le_bytes() {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+    }
+
+    pub fn f32s(&mut self, xs: &[f32]) {
+        self.u64(xs.len() as u64);
+        for x in xs {
+            self.0 = (self.0 ^ x.to_bits() as u64).wrapping_mul(0x100000001b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+struct Entry {
+    key: u64,
+    /// Verbatim copy of the block input: hits are verified bit-for-bit,
+    /// so a hash collision can never corrupt gradients.
+    x: Vec<f32>,
+    bytes: u64,
+    payload: Box<dyn Any + Send>,
+}
+
+#[derive(Default)]
+struct ArenaCounters {
+    stashed: AtomicU64,
+    hits: AtomicU64,
+    evictions: AtomicU64,
+    remats: AtomicU64,
+}
+
+/// Tracked stash arena shared by every `block_fwd`/`block_bwd` program of
+/// a [`crate::runtime::hostexec::HostExecutor`]. See the module docs for
+/// budget and correctness semantics.
+pub struct ActivationArena {
+    plan: MemoryPlan,
+    entries: Mutex<VecDeque<Entry>>,
+    live: AtomicI64,
+    peak: AtomicI64,
+    counters: ArenaCounters,
+    ws: WsMeter,
+}
+
+impl ActivationArena {
+    pub fn new(plan: MemoryPlan) -> Self {
+        Self {
+            plan,
+            entries: Mutex::new(VecDeque::new()),
+            live: AtomicI64::new(0),
+            peak: AtomicI64::new(0),
+            counters: ArenaCounters::default(),
+            ws: WsMeter::default(),
+        }
+    }
+
+    pub fn plan(&self) -> MemoryPlan {
+        self.plan
+    }
+
+    /// Fast gate for callers: `false` means "never stash" — skip the key
+    /// hash entirely (the remat default must cost nothing extra).
+    pub fn enabled(&self) -> bool {
+        self.plan.budget != ActBudget::Remat
+    }
+
+    /// Workspace meter for transient per-call buffers.
+    pub fn ws(&self) -> &WsMeter {
+        &self.ws
+    }
+
+    fn add_live(&self, delta: i64) {
+        let now = self.live.fetch_add(delta, Ordering::SeqCst) + delta;
+        debug_assert!(now >= 0, "arena live bytes went negative");
+        self.peak.fetch_max(now, Ordering::SeqCst);
+    }
+
+    /// Try to admit a stash entry under the budget; evicts oldest entries
+    /// as needed. Returns whether the entry was stored (callers drop the
+    /// payload otherwise — remat will cover it).
+    pub fn try_stash(
+        &self,
+        key: u64,
+        x: &[f32],
+        payload_bytes: u64,
+        payload: Box<dyn Any + Send>,
+    ) -> bool {
+        let bytes = payload_bytes + (x.len() * 4) as u64;
+        let cap = match self.plan.budget {
+            ActBudget::Remat => return false,
+            ActBudget::Bytes(cap) if bytes > cap => return false,
+            ActBudget::Bytes(cap) => Some(cap),
+            ActBudget::Unlimited => None,
+        };
+        let mut q = self.entries.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let mut live = self.live.load(Ordering::SeqCst).max(0) as u64;
+        while q.len() >= MAX_ENTRIES || cap.is_some_and(|c| live + bytes > c) {
+            match q.pop_front() {
+                Some(old) => {
+                    live = live.saturating_sub(old.bytes);
+                    self.add_live(-(old.bytes as i64));
+                    self.counters.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                None => break,
+            }
+        }
+        q.push_back(Entry { key, x: x.to_vec(), bytes, payload });
+        self.add_live(bytes as i64);
+        self.counters.stashed.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Record a backward that rematerialised without consulting the
+    /// stash (the zero-overhead remat default skips key hashing).
+    pub fn note_remat(&self) {
+        self.counters.remats.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Consume the newest entry matching `(key, x)`; `x` is compared
+    /// bit-for-bit. `None` means the caller must rematerialise (recorded
+    /// in the remat counter).
+    pub fn take(&self, key: u64, x: &[f32]) -> Option<Box<dyn Any + Send>> {
+        if self.enabled() {
+            let mut q =
+                self.entries.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            // newest-first: backward walks layers in reverse order
+            if let Some(i) = q.iter().rposition(|e| {
+                e.key == key
+                    && e.x.len() == x.len()
+                    && e.x.iter().zip(x).all(|(a, b)| a.to_bits() == b.to_bits())
+            }) {
+                let e = q.remove(i).expect("rposition returned a valid index");
+                self.add_live(-(e.bytes as i64));
+                drop(q);
+                self.counters.hits.fetch_add(1, Ordering::Relaxed);
+                return Some(e.payload);
+            }
+        }
+        self.counters.remats.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// Drop every stashed entry (peaks and counters are kept). Useful
+    /// for long eval-only phases under an unlimited budget, where
+    /// forward-only entries would otherwise sit until [`MAX_ENTRIES`]
+    /// recycling kicks in.
+    pub fn clear(&self) {
+        let mut q = self.entries.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let freed: u64 = q.iter().map(|e| e.bytes).sum();
+        q.clear();
+        if freed > 0 {
+            // under the lock, like every other live-counter mutation, so
+            // concurrent admission decisions never see stale live bytes
+            self.add_live(-(freed as i64));
+        }
+    }
+
+    /// Backend-neutral snapshot for [`crate::runtime::Executor::memory`].
+    pub fn stats(&self) -> MemStats {
+        MemStats {
+            stash_budget_bytes: match self.plan.budget {
+                ActBudget::Remat => Some(0),
+                ActBudget::Bytes(n) => Some(n),
+                ActBudget::Unlimited => None,
+            },
+            stash_live_bytes: self.live.load(Ordering::SeqCst).max(0) as u64,
+            stash_peak_bytes: self.peak.load(Ordering::SeqCst).max(0) as u64,
+            workspace_live_bytes: self.ws.live(),
+            workspace_peak_bytes: self.ws.peak(),
+            stashed: self.counters.stashed.load(Ordering::Relaxed),
+            stash_hits: self.counters.hits.load(Ordering::Relaxed),
+            stash_evictions: self.counters.evictions.load(Ordering::Relaxed),
+            remats: self.counters.remats.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Live/peak meter for transient per-call workspace buffers, the second
+/// half of the host executor's activation accounting (the arena tracks
+/// what *survives* a call; this tracks what a call allocates and frees).
+#[derive(Default)]
+pub struct WsMeter {
+    live: AtomicI64,
+    peak: AtomicI64,
+}
+
+impl WsMeter {
+    /// Open a per-call scope; buffers registered with [`WsScope::add`]
+    /// count as live until the scope drops (call exit).
+    pub fn scope(&self) -> WsScope<'_> {
+        WsScope { meter: self, bytes: 0 }
+    }
+
+    pub fn live(&self) -> u64 {
+        self.live.load(Ordering::SeqCst).max(0) as u64
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak.load(Ordering::SeqCst).max(0) as u64
+    }
+}
+
+/// RAII accounting scope for one program call's workspace.
+pub struct WsScope<'a> {
+    meter: &'a WsMeter,
+    bytes: i64,
+}
+
+impl WsScope<'_> {
+    /// Register `elems` f32 elements of freshly allocated workspace.
+    pub fn add(&mut self, elems: usize) {
+        self.add_bytes((elems * 4) as u64);
+    }
+
+    /// Register workspace by byte count (e.g. a consumed stash payload,
+    /// which stays physically live until the backward finishes).
+    pub fn add_bytes(&mut self, bytes: u64) {
+        let bytes = bytes as i64;
+        self.bytes += bytes;
+        let now = self.meter.live.fetch_add(bytes, Ordering::SeqCst) + bytes;
+        self.meter.peak.fetch_max(now, Ordering::SeqCst);
+    }
+}
+
+impl Drop for WsScope<'_> {
+    fn drop(&mut self) {
+        self.meter.live.fetch_sub(self.bytes, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_parsing() {
+        assert_eq!(MemoryPlan::parse(None), MemoryPlan::remat());
+        assert_eq!(MemoryPlan::parse(Some("")), MemoryPlan::remat());
+        assert_eq!(MemoryPlan::parse(Some("0")), MemoryPlan::remat());
+        assert_eq!(MemoryPlan::parse(Some("garbage")), MemoryPlan::remat());
+        assert_eq!(MemoryPlan::parse(Some("unlimited")), MemoryPlan::unlimited());
+        assert_eq!(MemoryPlan::parse(Some("INF")), MemoryPlan::unlimited());
+        assert_eq!(MemoryPlan::parse(Some("4096")), MemoryPlan::bytes(4096));
+        assert_eq!(MemoryPlan::parse(Some("64k")), MemoryPlan::bytes(64 << 10));
+        assert_eq!(MemoryPlan::parse(Some("2M")), MemoryPlan::bytes(2 << 20));
+        assert_eq!(MemoryPlan::parse(Some("1g")), MemoryPlan::bytes(1 << 30));
+    }
+
+    #[test]
+    fn budget_bytes_encoding_roundtrips_through_stats() {
+        for plan in [MemoryPlan::remat(), MemoryPlan::bytes(123), MemoryPlan::unlimited()] {
+            let a = ActivationArena::new(plan);
+            assert_eq!(MemoryPlan::from_budget_bytes(a.stats().stash_budget_bytes), plan);
+        }
+    }
+
+    #[test]
+    fn stashable_blocks_under_budgets() {
+        assert_eq!(MemoryPlan::remat().stashable_blocks(100, 4), 0);
+        assert_eq!(MemoryPlan::unlimited().stashable_blocks(100, 4), 4);
+        assert_eq!(MemoryPlan::bytes(250).stashable_blocks(100, 4), 2);
+        assert_eq!(MemoryPlan::bytes(1000).stashable_blocks(100, 4), 4);
+        assert_eq!(MemoryPlan::bytes(99).stashable_blocks(100, 4), 0);
+    }
+
+    #[test]
+    fn arena_stash_take_roundtrip_and_accounting() {
+        let a = ActivationArena::new(MemoryPlan::unlimited());
+        let x = vec![1.0f32, 2.0, 3.0];
+        assert!(a.try_stash(7, &x, 100, Box::new(42usize)));
+        let s = a.stats();
+        assert_eq!(s.stash_live_bytes, 100 + 12);
+        assert_eq!(s.stashed, 1);
+
+        // wrong key, then wrong x bits: both miss (and count as remats)
+        assert!(a.take(8, &x).is_none());
+        let x2 = vec![1.0f32, 2.0, 4.0];
+        assert!(a.take(7, &x2).is_none());
+        // exact match consumes
+        let got = a.take(7, &x).expect("hit");
+        assert_eq!(*got.downcast::<usize>().unwrap(), 42);
+        let s = a.stats();
+        assert_eq!(s.stash_live_bytes, 0);
+        assert_eq!(s.stash_peak_bytes, 112);
+        assert_eq!(s.stash_hits, 1);
+        assert_eq!(s.remats, 2);
+    }
+
+    #[test]
+    fn budget_evicts_oldest_first() {
+        // budget fits two 112-byte entries, not three
+        let a = ActivationArena::new(MemoryPlan::bytes(250));
+        let xs: Vec<Vec<f32>> = (0..3).map(|i| vec![i as f32; 3]).collect();
+        for (i, x) in xs.iter().enumerate() {
+            assert!(a.try_stash(i as u64, x, 100, Box::new(i)));
+        }
+        let s = a.stats();
+        assert_eq!(s.stash_evictions, 1);
+        assert_eq!(s.stash_live_bytes, 224);
+        // entry 0 was evicted; 1 and 2 remain
+        assert!(a.take(0, &xs[0]).is_none());
+        assert!(a.take(2, &xs[2]).is_some());
+        assert!(a.take(1, &xs[1]).is_some());
+    }
+
+    #[test]
+    fn clear_frees_everything_but_keeps_peaks() {
+        let a = ActivationArena::new(MemoryPlan::unlimited());
+        assert!(a.try_stash(1, &[1.0], 100, Box::new(())));
+        assert!(a.try_stash(2, &[2.0], 100, Box::new(())));
+        a.clear();
+        let s = a.stats();
+        assert_eq!(s.stash_live_bytes, 0);
+        assert_eq!(s.stash_peak_bytes, 208);
+        assert!(a.take(1, &[1.0]).is_none(), "cleared entries are gone");
+    }
+
+    #[test]
+    fn remat_plan_never_stashes() {
+        let a = ActivationArena::new(MemoryPlan::remat());
+        assert!(!a.enabled());
+        assert!(!a.try_stash(1, &[1.0], 100, Box::new(())));
+        assert_eq!(a.stats().stash_peak_bytes, 0);
+    }
+
+    #[test]
+    fn oversized_entry_is_rejected_not_thrashed() {
+        let a = ActivationArena::new(MemoryPlan::bytes(50));
+        assert!(!a.try_stash(1, &[1.0], 100, Box::new(())));
+        assert_eq!(a.stats().stash_evictions, 0);
+    }
+
+    #[test]
+    fn ws_meter_scopes_nest_and_free() {
+        let m = WsMeter::default();
+        {
+            let mut outer = m.scope();
+            outer.add(10);
+            {
+                let mut inner = m.scope();
+                inner.add(5);
+                assert_eq!(m.live(), 60);
+            }
+            assert_eq!(m.live(), 40);
+        }
+        assert_eq!(m.live(), 0);
+        assert_eq!(m.peak(), 60);
+    }
+
+    #[test]
+    fn fnv_distinguishes_bit_patterns() {
+        let mut a = Fnv::new();
+        a.f32s(&[0.0, 1.0]);
+        let mut b = Fnv::new();
+        b.f32s(&[-0.0, 1.0]);
+        assert_ne!(a.finish(), b.finish(), "0.0 vs -0.0 must differ");
+    }
+}

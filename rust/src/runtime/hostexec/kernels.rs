@@ -3,7 +3,8 @@
 //!
 //! The free functions are the scalar reference math (re-exported as
 //! `optim::host_math` for the direct host-loop backend, comparator
-//! optimizers and tests); [`build`] wraps them as chunked [`Program`]s
+//! optimizers and tests); the crate-internal `build` entry point wraps
+//! them as chunked [`Program`]s
 //! with the same positional signatures as the AOT artifacts, so the
 //! kernel-dispatch path (`ChunkRunner`) is bit-for-bit identical to the
 //! host-loop path.

@@ -8,11 +8,17 @@
 //! The matmuls and the softmax run on the executor's deterministic thread
 //! pool; the element-wise relu maps stay serial (trivial next to the
 //! matmuls, and unaffected by the determinism contract either way).
+//!
+//! The MLP is a single fused fwd+bwd program, so there is nothing to
+//! stash — but its transient workspace is metered through the executor's
+//! [`super::actmem::WsMeter`] like the transformer's, so the host
+//! executor's measured activation accounting covers every model program.
 
 use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
+use super::actmem::ActivationArena;
 use super::math;
 use crate::runtime::exec::{Arg, Program, Value};
 use crate::runtime::manifest::MlpHyper;
@@ -22,10 +28,15 @@ pub(super) fn build(
     short: &str,
     hyper: &MlpHyper,
     pool: Arc<ThreadPool>,
+    arena: Arc<ActivationArena>,
 ) -> Result<Box<dyn Program>> {
     match short {
-        "mlp_train" => Ok(Box::new(MlpProgram { hyper: hyper.clone(), train: true, pool })),
-        "mlp_eval" => Ok(Box::new(MlpProgram { hyper: hyper.clone(), train: false, pool })),
+        "mlp_train" => {
+            Ok(Box::new(MlpProgram { hyper: hyper.clone(), train: true, pool, arena }))
+        }
+        "mlp_eval" => {
+            Ok(Box::new(MlpProgram { hyper: hyper.clone(), train: false, pool, arena }))
+        }
         other => bail!("host executor: unknown mlp program '{other}'"),
     }
 }
@@ -34,6 +45,7 @@ struct MlpProgram {
     hyper: MlpHyper,
     train: bool,
     pool: Arc<ThreadPool>,
+    arena: Arc<ActivationArena>,
 }
 
 struct MlpArgs<'a> {
@@ -75,17 +87,22 @@ impl Program for MlpProgram {
         let (d, hd, c) = (self.hyper.features, self.hyper.hidden, self.hyper.classes);
         let b = a.batch;
         let pool = &self.pool;
+        let mut ws = self.arena.ws().scope();
 
         // forward
         let mut h1 = vec![0.0f32; b * hd];
+        ws.add(h1.len());
         math::matmul(pool, a.x, a.w1, b, d, hd, &mut h1);
         math::add_bias(&mut h1, a.b1);
         let hr: Vec<f32> = h1.iter().map(|&v| v.max(0.0)).collect();
+        ws.add(hr.len());
         let mut logits = vec![0.0f32; b * c];
+        ws.add(logits.len());
         math::matmul(pool, &hr, a.w2, b, hd, c, &mut logits);
         math::add_bias(&mut logits, a.b2);
 
         let mut dlogits = vec![0.0f32; b * c];
+        ws.add(dlogits.len());
         let (nll, ncorrect) = math::softmax_xent(pool, &logits, a.labels, b, c, &mut dlogits);
         let loss = (nll / b as f64) as f32;
 
@@ -104,13 +121,16 @@ impl Program for MlpProgram {
         math::col_sums(&dlogits, b, c, &mut db2);
         let mut dhr = vec![0.0f32; b * hd];
         math::matmul_nt(pool, &dlogits, a.w2, b, c, hd, &mut dhr);
+        ws.add(dw2.len() + db2.len() + dhr.len());
         // relu'
         let dh1: Vec<f32> =
             dhr.iter().zip(&h1).map(|(&g, &u)| if u > 0.0 { g } else { 0.0 }).collect();
+        ws.add(dh1.len());
         let mut dw1 = vec![0.0f32; d * hd];
         math::matmul_tn(pool, a.x, &dh1, b, d, hd, &mut dw1);
         let mut db1 = vec![0.0f32; hd];
         math::col_sums(&dh1, b, hd, &mut db1);
+        ws.add(dw1.len() + db1.len());
 
         Ok(vec![
             Value::scalar_f32(loss),
@@ -133,6 +153,10 @@ mod tests {
 
     fn tp() -> Arc<ThreadPool> {
         Arc::new(ThreadPool::new(1))
+    }
+
+    fn ar() -> Arc<ActivationArena> {
+        Arc::new(ActivationArena::new(super::super::actmem::MemoryPlan::remat()))
     }
 
     struct Setup {
@@ -159,7 +183,7 @@ mod tests {
     }
 
     fn loss_of(s: &Setup) -> f32 {
-        let prog = MlpProgram { hyper: hyper(), train: false, pool: tp() };
+        let prog = MlpProgram { hyper: hyper(), train: false, pool: tp(), arena: ar() };
         let out = prog
             .run(&[
                 Arg::F32(&s.x, &[4, 5]),
@@ -176,7 +200,7 @@ mod tests {
     #[test]
     fn train_grads_match_finite_differences() {
         let s = setup();
-        let prog = MlpProgram { hyper: hyper(), train: true, pool: tp() };
+        let prog = MlpProgram { hyper: hyper(), train: true, pool: tp(), arena: ar() };
         let out = prog
             .run(&[
                 Arg::F32(&s.x, &[4, 5]),
@@ -237,7 +261,7 @@ mod tests {
     #[test]
     fn eval_counts_correct_predictions() {
         let s = setup();
-        let prog = MlpProgram { hyper: hyper(), train: false, pool: tp() };
+        let prog = MlpProgram { hyper: hyper(), train: false, pool: tp(), arena: ar() };
         let out = prog
             .run(&[
                 Arg::F32(&s.x, &[4, 5]),
@@ -257,7 +281,7 @@ mod tests {
     #[test]
     fn rejects_malformed_arguments() {
         let s = setup();
-        let prog = MlpProgram { hyper: hyper(), train: true, pool: tp() };
+        let prog = MlpProgram { hyper: hyper(), train: true, pool: tp(), arena: ar() };
         // wrong arg count
         assert!(prog.run(&[Arg::F32(&s.x, &[4, 5])]).is_err());
         // out-of-range label

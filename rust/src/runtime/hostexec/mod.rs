@@ -29,7 +29,23 @@
 //! Thread count: `ADAMA_THREADS` (default: available parallelism);
 //! [`HostExecutor::with_threads`] pins it programmatically — the DP/ZeRO
 //! simulators pin 1 thread per rank via `Library::fork_with_threads`.
+//!
+//! ## Activation memory: stash vs recompute
+//!
+//! `block_bwd` rematerialises its forward by default (the artifact
+//! contract). Setting an activation byte budget — `ADAMA_ACT_BUDGET`
+//! (`0` = remat, `<n>[k|m|g]` = byte cap, `unlimited`) or
+//! [`HostExecutor::with_plan`] — lets `block_fwd` **stash** its
+//! intermediates into a tracked [`actmem::ActivationArena`] that
+//! `block_bwd` consumes, trading activation bytes for the recompute.
+//! Stashed and rematerialised backward are bit-identical (the stash
+//! holds exactly what recompute would rebuild, and hits require a
+//! bit-for-bit input match), so the budget is a pure memory/throughput
+//! knob — `rust/tests/actstash.rs` locks this down and reconciles the
+//! arena's live/peak accounting against `crate::memmodel` predictions.
+//! [`Executor::memory`] exposes the measured counters.
 
+pub mod actmem;
 pub mod math;
 
 pub mod kernels;
@@ -41,7 +57,8 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use super::exec::{Arg, Executor, Program, Value};
+use self::actmem::{ActivationArena, MemoryPlan};
+use super::exec::{Arg, Executor, MemStats, Program, Value};
 use super::manifest::{ArtifactEntry, Manifest};
 use super::pool::{self, ThreadPool};
 
@@ -49,6 +66,7 @@ use super::pool::{self, ThreadPool};
 pub struct HostExecutor {
     calls: Arc<AtomicU64>,
     pool: Arc<ThreadPool>,
+    arena: Arc<ActivationArena>,
 }
 
 impl Default for HostExecutor {
@@ -58,17 +76,31 @@ impl Default for HostExecutor {
 }
 
 impl HostExecutor {
-    /// Pool size from `ADAMA_THREADS` / available parallelism.
+    /// Pool size from `ADAMA_THREADS` / available parallelism; activation
+    /// plan from `ADAMA_ACT_BUDGET` (default: pure remat).
     pub fn new() -> Self {
-        Self::with_threads(pool::default_threads())
+        Self::with_plan(pool::default_threads(), MemoryPlan::from_env())
     }
 
-    /// Pin the intra-program pool to `threads` workers (1 = fully serial).
+    /// Pin the intra-program pool to `threads` workers (1 = fully serial);
+    /// activation plan still comes from `ADAMA_ACT_BUDGET`.
     pub fn with_threads(threads: usize) -> Self {
+        Self::with_plan(threads, MemoryPlan::from_env())
+    }
+
+    /// Fully explicit construction: pool size + activation stash plan.
+    pub fn with_plan(threads: usize, plan: MemoryPlan) -> Self {
         Self {
             calls: Arc::new(AtomicU64::new(0)),
             pool: Arc::new(ThreadPool::new(threads)),
+            arena: Arc::new(ActivationArena::new(plan)),
         }
+    }
+
+    /// The executor's activation stash arena (shared by all of its block
+    /// programs).
+    pub fn arena(&self) -> &Arc<ActivationArena> {
+        &self.arena
     }
 }
 
@@ -104,10 +136,10 @@ impl Executor for HostExecutor {
             kernels::build(short, &manifest.hyper, self.pool.clone())?
         } else if let Some(mlp_name) = group.strip_prefix("mlp_") {
             let cfg = manifest.mlp_config(mlp_name)?;
-            mlp::build(short, &cfg.model, self.pool.clone())?
+            mlp::build(short, &cfg.model, self.pool.clone(), self.arena.clone())?
         } else {
             let cfg = manifest.model_config(group)?;
-            transformer::build(short, &cfg.model, self.pool.clone())?
+            transformer::build(short, &cfg.model, self.pool.clone(), self.arena.clone())?
         };
         Ok(Arc::new(Counted { inner, calls: self.calls.clone() }))
     }
@@ -118,6 +150,14 @@ impl Executor for HostExecutor {
 
     fn threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    fn memory(&self) -> Option<MemStats> {
+        Some(self.arena.stats())
+    }
+
+    fn clear_stash(&self) {
+        self.arena.clear();
     }
 }
 

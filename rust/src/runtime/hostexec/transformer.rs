@@ -4,13 +4,19 @@
 //!
 //! * pre-LN block: `x + attn(ln1(x))` then `+ mlp(ln2(·))`, causal
 //!   multi-head attention, tanh-GELU MLP;
-//! * `block_bwd` recomputes its forward internally (per-layer remat) and
-//!   returns `(dx, *12 dparams)` in manifest parameter order;
+//! * `block_bwd` rematerialises its forward internally (per-layer remat,
+//!   the artifact contract) **unless** the executor's activation arena
+//!   holds a stash for its input — then the recompute is skipped
+//!   entirely (see [`super::actmem`] for the budget semantics);
 //! * `head_loss` is the fused mean-token-cross-entropy fwd+bwd returning
 //!   `(loss, dx, dW)`.
 //!
 //! Gradients are hand-derived VJPs, verified against central finite
-//! differences in the test module below.
+//! differences in the test module below. Stashed and rematerialised
+//! backward are bit-identical: the stash stores exactly the
+//! [`FwdState`] the recompute would reproduce (the executor is
+//! bit-deterministic), and a stash hit requires a bit-for-bit match of
+//! the block input.
 //!
 //! Hot paths run on the deterministic thread pool: matmuls/layer-norm
 //! via [`math`], and the attention core parallelised over
@@ -18,11 +24,17 @@
 //! is merged serially afterwards. Each scratch element receives its
 //! contributions from exactly one task with the serial loop's
 //! accumulation order, so outputs are bit-identical at any thread count.
+//!
+//! Every buffer the block programs allocate is registered with the
+//! arena's workspace meter ([`super::actmem::WsMeter`]), so measured
+//! activation bytes reconcile exactly against the
+//! `crate::memmodel::HostBlockDims` predictions.
 
 use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
+use super::actmem::{ActivationArena, Fnv, WsScope};
 use super::math;
 use crate::runtime::exec::{Arg, Program, Value};
 use crate::runtime::manifest::ModelHyper;
@@ -32,6 +44,7 @@ pub(super) fn build(
     short: &str,
     h: &ModelHyper,
     pool: Arc<ThreadPool>,
+    arena: Arc<ActivationArena>,
 ) -> Result<Box<dyn Program>> {
     ensure!(h.heads > 0 && h.hidden % h.heads == 0, "hidden {} not divisible by heads {}", h.hidden, h.heads);
     Ok(match short {
@@ -39,8 +52,8 @@ pub(super) fn build(
             Box::new(EmbedFwd { vocab: h.vocab, hidden: h.hidden, pool }) as Box<dyn Program>
         }
         "embed_bwd" => Box::new(EmbedBwd { vocab: h.vocab, hidden: h.hidden }),
-        "block_fwd" => Box::new(BlockFwd { heads: h.heads, pool }),
-        "block_bwd" => Box::new(BlockBwd { heads: h.heads, pool }),
+        "block_fwd" => Box::new(BlockFwd { heads: h.heads, pool, arena }),
+        "block_bwd" => Box::new(BlockBwd { heads: h.heads, pool, arena }),
         "head_loss" => Box::new(HeadLoss { pool }),
         "head_eval" => Box::new(HeadEval { pool }),
         other => bail!("host executor: unknown model program '{other}'"),
@@ -180,7 +193,9 @@ fn unpack_block<'a>(args: &[Arg<'a>], off: usize, h: usize) -> Result<BlockParam
     Ok(p)
 }
 
-/// Forward intermediates kept for the backward sweep.
+/// Forward intermediates kept for the backward sweep. This is also the
+/// stash-arena payload: when `block_fwd` stashes, the backward consumes
+/// exactly this state (minus `y`, which left as the forward output).
 struct FwdState {
     hn1: Vec<f32>,   // ln1(x)                [bs, h]
     qkv: Vec<f32>,   // hn1 @ wqkv + bqkv     [bs, 3h]
@@ -193,8 +208,45 @@ struct FwdState {
     y: Vec<f32>,     // x1 + mlp out          [bs, h]
 }
 
+impl FwdState {
+    /// Exact payload bytes (used for arena accounting).
+    fn bytes(&self) -> u64 {
+        let elems = self.hn1.len()
+            + self.qkv.len()
+            + self.probs.len()
+            + self.ao.len()
+            + self.x1.len()
+            + self.hn2.len()
+            + self.m1.len()
+            + self.gm.len()
+            + self.y.len();
+        (elems * 4) as u64
+    }
+}
+
+/// Stash key: FNV-1a over the block input and all 12 parameter tensors
+/// (bit patterns + dims). A key match is additionally verified by a
+/// bit-for-bit compare of `x` inside the arena, so collisions cannot
+/// corrupt gradients — at worst the parameters collide, which would
+/// require ~2^64 luck on top of an identical input.
+fn stash_key(x: &[f32], p: &BlockParams<'_>, b: usize, s: usize, h: usize) -> u64 {
+    let mut f = Fnv::new();
+    f.u64(b as u64);
+    f.u64(s as u64);
+    f.u64(h as u64);
+    f.f32s(x);
+    for t in [
+        p.ln1g, p.ln1b, p.wqkv, p.bqkv, p.wo, p.bo, p.ln2g, p.ln2b, p.w1, p.b1, p.w2, p.b2,
+    ] {
+        f.f32s(t);
+    }
+    f.finish()
+}
+
+#[allow(clippy::too_many_arguments)]
 fn block_forward(
     pool: &ThreadPool,
+    ws: &mut WsScope<'_>,
     x: &[f32],
     p: &BlockParams<'_>,
     b: usize,
@@ -209,8 +261,10 @@ fn block_forward(
     let w3 = 3 * h;
 
     let mut hn1 = vec![0.0f32; bs * h];
+    ws.add(hn1.len());
     math::layer_norm(pool, x, p.ln1g, p.ln1b, bs, h, &mut hn1);
     let mut qkv = vec![0.0f32; bs * w3];
+    ws.add(qkv.len());
     math::matmul(pool, &hn1, p.wqkv, bs, h, w3, &mut qkv);
     math::add_bias(&mut qkv, p.bqkv);
 
@@ -220,6 +274,7 @@ fn block_forward(
     // (pure copy — each element has exactly one producer).
     let mut probs = vec![0.0f32; b * heads * s * s];
     let mut aoh = vec![0.0f32; b * heads * s * dh];
+    ws.add(probs.len() + aoh.len());
     pool.for_rows2(&mut probs, s, &mut aoh, dh, |t, prow, orow| {
         let i = t % s;
         let hd = (t / s) % heads;
@@ -260,6 +315,7 @@ fn block_forward(
         }
     });
     let mut ao = vec![0.0f32; bs * h];
+    ws.add(ao.len());
     for bi in 0..b {
         for hd in 0..heads {
             for i in 0..s {
@@ -271,16 +327,21 @@ fn block_forward(
     }
 
     let mut attn = vec![0.0f32; bs * h];
+    ws.add(attn.len());
     math::matmul(pool, &ao, p.wo, bs, h, h, &mut attn);
     math::add_bias(&mut attn, p.bo);
     let x1: Vec<f32> = x.iter().zip(&attn).map(|(a, c)| a + c).collect();
+    ws.add(x1.len());
 
     let mut hn2 = vec![0.0f32; bs * h];
+    ws.add(hn2.len());
     math::layer_norm(pool, &x1, p.ln2g, p.ln2b, bs, h, &mut hn2);
     let mut m1 = vec![0.0f32; bs * f];
+    ws.add(m1.len());
     math::matmul(pool, &hn2, p.w1, bs, h, f, &mut m1);
     math::add_bias(&mut m1, p.b1);
     let mut gm = vec![0.0f32; bs * f];
+    ws.add(gm.len());
     pool.for_rows(&mut gm, f, |r, row| {
         let mi = &m1[r * f..(r + 1) * f];
         for (o, &u) in row.iter_mut().zip(mi) {
@@ -288,17 +349,21 @@ fn block_forward(
         }
     });
     let mut m2 = vec![0.0f32; bs * h];
+    ws.add(m2.len());
     math::matmul(pool, &gm, p.w2, bs, f, h, &mut m2);
     math::add_bias(&mut m2, p.b2);
     let y: Vec<f32> = x1.iter().zip(&m2).map(|(a, c)| a + c).collect();
+    ws.add(y.len());
 
     FwdState { hn1, qkv, probs, ao, x1, hn2, m1, gm, y }
 }
 
-/// Recompute-forward + pull back `dy`: returns `(dx, 12 dparams)`.
+/// Rematerialise the forward, then pull back `dy` — the stash-miss path
+/// (and the test harness's entry point).
 #[allow(clippy::too_many_arguments)]
-fn block_backward(
+fn block_backward_remat(
     pool: &ThreadPool,
+    ws: &mut WsScope<'_>,
     x: &[f32],
     dy: &[f32],
     p: &BlockParams<'_>,
@@ -307,7 +372,25 @@ fn block_backward(
     h: usize,
     heads: usize,
 ) -> (Vec<f32>, Vec<Vec<f32>>) {
-    let st = block_forward(pool, x, p, b, s, h, heads);
+    let st = block_forward(pool, ws, x, p, b, s, h, heads);
+    block_backward(pool, ws, x, dy, p, &st, b, s, h, heads)
+}
+
+/// Pull back `dy` through a block given its forward state (stashed or
+/// just rematerialised): returns `(dx, 12 dparams)`.
+#[allow(clippy::too_many_arguments)]
+fn block_backward(
+    pool: &ThreadPool,
+    ws: &mut WsScope<'_>,
+    x: &[f32],
+    dy: &[f32],
+    p: &BlockParams<'_>,
+    st: &FwdState,
+    b: usize,
+    s: usize,
+    h: usize,
+    heads: usize,
+) -> (Vec<f32>, Vec<Vec<f32>>) {
     let bs = b * s;
     let f = p.f;
     let dh = h / heads;
@@ -317,6 +400,7 @@ fn block_backward(
     // y = x1 + m2: residual copies dy to both branches
     let dm2 = dy;
     let mut dx1 = dy.to_vec();
+    ws.add(dx1.len());
 
     // m2 = gm @ w2 + b2
     let mut dgm = vec![0.0f32; bs * f];
@@ -325,9 +409,11 @@ fn block_backward(
     math::matmul_tn(pool, &st.gm, dm2, bs, f, h, &mut dw2);
     let mut db2 = vec![0.0f32; h];
     math::col_sums(dm2, bs, h, &mut db2);
+    ws.add(dgm.len() + dw2.len() + db2.len());
 
     // gm = gelu(m1)
     let mut dm1 = vec![0.0f32; bs * f];
+    ws.add(dm1.len());
     pool.for_rows(&mut dm1, f, |r, row| {
         for (j, o) in row.iter_mut().enumerate() {
             let idx = r * f + j;
@@ -342,14 +428,17 @@ fn block_backward(
     math::matmul_tn(pool, &st.hn2, &dm1, bs, h, f, &mut dw1);
     let mut db1 = vec![0.0f32; f];
     math::col_sums(&dm1, bs, f, &mut db1);
+    ws.add(dhn2.len() + dw1.len() + db1.len());
 
     // hn2 = ln2(x1): contributes into dx1
     let mut dln2g = vec![0.0f32; h];
     let mut dln2b = vec![0.0f32; h];
+    ws.add(dln2g.len() + dln2b.len());
     math::layer_norm_bwd(&st.x1, p.ln2g, &dhn2, bs, h, &mut dx1, &mut dln2g, &mut dln2b);
 
     // x1 = x + attn: residual again
     let mut dx = dx1.clone();
+    ws.add(dx.len());
     let dattn = dx1;
 
     // attn = ao @ wo + bo
@@ -359,6 +448,7 @@ fn block_backward(
     math::matmul_tn(pool, &st.ao, &dattn, bs, h, h, &mut dwo);
     let mut dbo = vec![0.0f32; h];
     math::col_sums(&dattn, bs, h, &mut dbo);
+    ws.add(dao.len() + dwo.len() + dbo.len());
 
     // attention core VJP: softmax(qkᵀ·scale, causal) @ v, parallel over
     // (batch, head) tasks. Each task accumulates its dq/dk/dv into a
@@ -366,6 +456,7 @@ fn block_backward(
     // serial i-then-j loop order; the scratch is re-interleaved into
     // [bs, 3h] serially below (pure copy — one producer per element).
     let mut scratch = vec![0.0f32; b * heads * s * 3 * dh];
+    ws.add(scratch.len());
     pool.for_rows(&mut scratch, s * 3 * dh, |t, dq| {
         let hd = t % heads;
         let bi = t / heads;
@@ -402,6 +493,7 @@ fn block_backward(
         }
     });
     let mut dqkv = vec![0.0f32; bs * w3];
+    ws.add(dqkv.len());
     for bi in 0..b {
         for hd in 0..heads {
             let base = (bi * heads + hd) * s * 3 * dh;
@@ -422,10 +514,12 @@ fn block_backward(
     math::matmul_tn(pool, &st.hn1, &dqkv, bs, h, w3, &mut dwqkv);
     let mut dbqkv = vec![0.0f32; w3];
     math::col_sums(&dqkv, bs, w3, &mut dbqkv);
+    ws.add(dhn1.len() + dwqkv.len() + dbqkv.len());
 
     // hn1 = ln1(x): contributes into dx
     let mut dln1g = vec![0.0f32; h];
     let mut dln1b = vec![0.0f32; h];
+    ws.add(dln1g.len() + dln1b.len());
     math::layer_norm_bwd(x, p.ln1g, &dhn1, bs, h, &mut dx, &mut dln1g, &mut dln1b);
 
     (
@@ -439,6 +533,7 @@ fn block_backward(
 struct BlockFwd {
     heads: usize,
     pool: Arc<ThreadPool>,
+    arena: Arc<ActivationArena>,
 }
 
 impl Program for BlockFwd {
@@ -447,14 +542,21 @@ impl Program for BlockFwd {
         ensure!(h % self.heads == 0, "hidden {h} not divisible by heads {}", self.heads);
         let x = args[0].f32()?;
         let p = unpack_block(args, 1, h)?;
-        let st = block_forward(&self.pool, x, &p, b, s, h, self.heads);
-        Ok(vec![Value::f32(st.y, &[b, s, h])?])
+        let mut ws = self.arena.ws().scope();
+        let mut st = block_forward(&self.pool, &mut ws, x, &p, b, s, h, self.heads);
+        let y = std::mem::take(&mut st.y);
+        if self.arena.enabled() {
+            let key = stash_key(x, &p, b, s, h);
+            self.arena.try_stash(key, x, st.bytes(), Box::new(st));
+        }
+        Ok(vec![Value::f32(y, &[b, s, h])?])
     }
 }
 
 struct BlockBwd {
     heads: usize,
     pool: Arc<ThreadPool>,
+    arena: Arc<ActivationArena>,
 }
 
 impl Program for BlockBwd {
@@ -467,7 +569,33 @@ impl Program for BlockBwd {
         ensure!(dy.len() == x.len(), "block_bwd: x/dy shape mismatch");
         let p = unpack_block(args, 2, h)?;
         let f = p.f;
-        let (dx, dparams) = block_backward(&self.pool, x, dy, &p, b, s, h, self.heads);
+        let mut ws = self.arena.ws().scope();
+        let stashed = if self.arena.enabled() {
+            self.arena.take(stash_key(x, &p, b, s, h), x)
+        } else {
+            // remat default: skip the key hash entirely, cost nothing
+            self.arena.note_remat();
+            None
+        };
+        let (dx, dparams) = match stashed {
+            // stash hit: the state block_fwd computed for this exact
+            // (x, params) — bit-identical to what remat would rebuild
+            Some(payload) => {
+                let st = payload
+                    .downcast::<FwdState>()
+                    .map_err(|_| anyhow::anyhow!("stash payload is not a FwdState"))?;
+                // the consumed state left the arena's books but stays
+                // physically live until this call returns — count it as
+                // workspace so measured bytes track real memory
+                ws.add_bytes(st.bytes());
+                block_backward(&self.pool, &mut ws, x, dy, &p, &st, b, s, h, self.heads)
+            }
+            // miss (remat default, evicted, or forward-only leftover):
+            // recompute the forward in place
+            None => {
+                block_backward_remat(&self.pool, &mut ws, x, dy, &p, b, s, h, self.heads)
+            }
+        };
 
         let shapes: [Vec<usize>; 12] = [
             vec![h],
@@ -568,7 +696,38 @@ impl Program for HeadEval {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::hostexec::actmem::{MemoryPlan, WsMeter};
     use crate::tensor::Rng;
+
+    /// Forward with a throwaway workspace meter (signature helper).
+    fn fwd(
+        pool: &ThreadPool,
+        x: &[f32],
+        p: &BlockParams<'_>,
+        b: usize,
+        s: usize,
+        h: usize,
+        heads: usize,
+    ) -> FwdState {
+        let m = WsMeter::default();
+        block_forward(pool, &mut m.scope(), x, p, b, s, h, heads)
+    }
+
+    /// Remat backward with a throwaway workspace meter.
+    #[allow(clippy::too_many_arguments)]
+    fn bwd(
+        pool: &ThreadPool,
+        x: &[f32],
+        dy: &[f32],
+        p: &BlockParams<'_>,
+        b: usize,
+        s: usize,
+        h: usize,
+        heads: usize,
+    ) -> (Vec<f32>, Vec<Vec<f32>>) {
+        let m = WsMeter::default();
+        block_backward_remat(pool, &mut m.scope(), x, dy, p, b, s, h, heads)
+    }
 
     const B: usize = 2;
     const S: usize = 3;
@@ -634,7 +793,7 @@ mod tests {
 
     /// Scalar objective: L = Σ y ∘ r for a fixed random cotangent r.
     fn objective(pool: &ThreadPool, x: &[f32], p: &Params, r: &[f32]) -> f32 {
-        let st = block_forward(pool, x, &p.view(), B, S, H, HEADS);
+        let st = fwd(pool, x, &p.view(), B, S, H, HEADS);
         st.y.iter().zip(r).map(|(a, c)| a * c).sum()
     }
 
@@ -648,7 +807,7 @@ mod tests {
         let x = randvec(1, B * S * H, 0.8);
         let p = Params::random(2);
         let r = randvec(3, B * S * H, 1.0);
-        let (dx, _dp) = block_backward(&pool, &x, &r, &p.view(), B, S, H, HEADS);
+        let (dx, _dp) = bwd(&pool, &x, &r, &p.view(), B, S, H, HEADS);
         let eps = 1e-2f32;
         for i in 0..x.len() {
             let mut xp = x.clone();
@@ -667,7 +826,7 @@ mod tests {
         let x = randvec(4, B * S * H, 0.8);
         let p = Params::random(5);
         let r = randvec(6, B * S * H, 1.0);
-        let (_dx, dp) = block_backward(&pool, &x, &r, &p.view(), B, S, H, HEADS);
+        let (_dx, dp) = bwd(&pool, &x, &r, &p.view(), B, S, H, HEADS);
         let eps = 1e-2f32;
         for (ti, size) in Params::sizes().iter().enumerate() {
             assert_eq!(dp[ti].len(), *size, "tensor {ti} grad size");
@@ -694,12 +853,12 @@ mod tests {
         let pool = tp();
         let x = randvec(7, B * S * H, 0.8);
         let p = Params::random(8);
-        let y0 = block_forward(&pool, &x, &p.view(), B, S, H, HEADS).y;
+        let y0 = fwd(&pool, &x, &p.view(), B, S, H, HEADS).y;
         let mut x2 = x.clone();
         for j in 0..H {
             x2[(S - 1) * H + j] += 0.5; // batch 0, last position
         }
-        let y1 = block_forward(&pool, &x2, &p.view(), B, S, H, HEADS).y;
+        let y1 = fwd(&pool, &x2, &p.view(), B, S, H, HEADS).y;
         for si in 0..S - 1 {
             for j in 0..H {
                 let idx = si * H + j;
@@ -741,11 +900,11 @@ mod tests {
         let dy = randvec(101, b * s * h, 1.0);
         let p1 = ThreadPool::new(1);
         let p3 = ThreadPool::new(3);
-        let y1 = block_forward(&p1, &x, &p, b, s, h, heads).y;
-        let y3 = block_forward(&p3, &x, &p, b, s, h, heads).y;
+        let y1 = fwd(&p1, &x, &p, b, s, h, heads).y;
+        let y3 = fwd(&p3, &x, &p, b, s, h, heads).y;
         assert!(y1.iter().zip(&y3).all(|(a, c)| a.to_bits() == c.to_bits()));
-        let (dx1, dp1) = block_backward(&p1, &x, &dy, &p, b, s, h, heads);
-        let (dx3, dp3) = block_backward(&p3, &x, &dy, &p, b, s, h, heads);
+        let (dx1, dp1) = bwd(&p1, &x, &dy, &p, b, s, h, heads);
+        let (dx3, dp3) = bwd(&p3, &x, &dy, &p, b, s, h, heads);
         assert!(dx1.iter().zip(&dx3).all(|(a, c)| a.to_bits() == c.to_bits()));
         for (g1, g3) in dp1.iter().zip(&dp3) {
             assert!(g1.iter().zip(g3).all(|(a, c)| a.to_bits() == c.to_bits()));
@@ -859,7 +1018,8 @@ mod tests {
         for (t, sh) in p.t.iter().zip(shapes.iter()) {
             args.push(Arg::F32(t, sh));
         }
-        let out = BlockBwd { heads: HEADS, pool: tp() }.run(&args).unwrap();
+        let arena = Arc::new(ActivationArena::new(MemoryPlan::remat()));
+        let out = BlockBwd { heads: HEADS, pool: tp(), arena: arena.clone() }.run(&args).unwrap();
         assert_eq!(out.len(), 13);
         assert_eq!(out[0].shape(), &[B, S, H]);
         for (o, sh) in out[1..].iter().zip(shapes.iter()) {
@@ -868,8 +1028,141 @@ mod tests {
 
         let fwd_args: Vec<Arg<'_>> =
             args.iter().enumerate().filter(|(i, _)| *i != 1).map(|(_, a)| *a).collect();
-        let out = BlockFwd { heads: HEADS, pool: tp() }.run(&fwd_args).unwrap();
+        let out = BlockFwd { heads: HEADS, pool: tp(), arena }.run(&fwd_args).unwrap();
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].shape(), &[B, S, H]);
+    }
+
+    /// Build the (x, dy, params) argument vectors for the block programs.
+    fn block_args<'a>(
+        x: &'a [f32],
+        dy: &'a [f32],
+        p: &'a Params,
+    ) -> (Vec<Arg<'a>>, Vec<Arg<'a>>) {
+        let shapes: [Vec<usize>; 12] = [
+            vec![H],
+            vec![H],
+            vec![H, 3 * H],
+            vec![3 * H],
+            vec![H, H],
+            vec![H],
+            vec![H],
+            vec![H],
+            vec![H, F],
+            vec![F],
+            vec![F, H],
+            vec![H],
+        ];
+        let shapes: Vec<Vec<usize>> = shapes.to_vec();
+        // leak the shapes: test-only, keeps the borrow story trivial
+        let shapes: &'static [Vec<usize>] = Box::leak(shapes.into_boxed_slice());
+        let mut fwd_args: Vec<Arg<'a>> = vec![Arg::F32(x, &[B, S, H])];
+        let mut bwd_args: Vec<Arg<'a>> =
+            vec![Arg::F32(x, &[B, S, H]), Arg::F32(dy, &[B, S, H])];
+        for (t, sh) in p.t.iter().zip(shapes.iter()) {
+            fwd_args.push(Arg::F32(t, sh));
+            bwd_args.push(Arg::F32(t, sh));
+        }
+        (fwd_args, bwd_args)
+    }
+
+    #[test]
+    fn stashed_backward_is_bit_identical_to_remat() {
+        let x = randvec(21, B * S * H, 0.8);
+        let dy = randvec(22, B * S * H, 1.0);
+        let p = Params::random(23);
+        let (fwd_args, bwd_args) = block_args(&x, &dy, &p);
+
+        // remat reference
+        let remat = Arc::new(ActivationArena::new(MemoryPlan::remat()));
+        let ref_out =
+            BlockBwd { heads: HEADS, pool: tp(), arena: remat }.run(&bwd_args).unwrap();
+
+        // stash path: forward populates the arena, backward consumes it
+        let arena = Arc::new(ActivationArena::new(MemoryPlan::unlimited()));
+        let y = BlockFwd { heads: HEADS, pool: tp(), arena: arena.clone() }
+            .run(&fwd_args)
+            .unwrap();
+        assert_eq!(arena.stats().stashed, 1, "forward must stash");
+        let stash_out = BlockBwd { heads: HEADS, pool: tp(), arena: arena.clone() }
+            .run(&bwd_args)
+            .unwrap();
+        let s = arena.stats();
+        assert_eq!(s.stash_hits, 1, "backward must consume the stash");
+        assert_eq!(s.stash_live_bytes, 0, "consumed entry must be freed");
+        assert!(s.stash_peak_bytes > 0);
+
+        assert_eq!(ref_out.len(), stash_out.len());
+        for (a, b) in ref_out.iter().zip(&stash_out) {
+            let (a, b) = (a.as_f32().unwrap(), b.as_f32().unwrap());
+            assert!(a.iter().zip(b).all(|(u, v)| u.to_bits() == v.to_bits()));
+        }
+        // the forward output is unaffected by stashing
+        assert_eq!(y[0].shape(), &[B, S, H]);
+    }
+
+    #[test]
+    fn workspace_and_stash_accounting_match_memmodel() {
+        // the allocation-site-level reconciliation: every ws.add()/stash
+        // in this file must be mirrored by memmodel::HostBlockDims
+        use crate::memmodel::HostBlockDims;
+        let dims = HostBlockDims {
+            batch: B as u64,
+            seq: S as u64,
+            hidden: H as u64,
+            heads: HEADS as u64,
+            ffn: F as u64,
+        };
+        let x = randvec(41, B * S * H, 0.8);
+        let dy = randvec(42, B * S * H, 1.0);
+        let p = Params::random(43);
+        let (fwd_args, bwd_args) = block_args(&x, &dy, &p);
+
+        let arena = Arc::new(ActivationArena::new(MemoryPlan::unlimited()));
+        BlockFwd { heads: HEADS, pool: tp(), arena: arena.clone() }.run(&fwd_args).unwrap();
+        let s1 = arena.stats();
+        assert_eq!(s1.workspace_peak_bytes, dims.fwd_workspace_bytes());
+        assert_eq!(s1.stash_live_bytes, dims.stash_entry_bytes());
+
+        BlockBwd { heads: HEADS, pool: tp(), arena: arena.clone() }.run(&bwd_args).unwrap();
+        let s2 = arena.stats();
+        assert_eq!(
+            s2.workspace_peak_bytes,
+            dims.fwd_workspace_bytes().max(dims.bwd_workspace_bytes()),
+            "stash-hit backward must not pay the recompute workspace"
+        );
+        assert_eq!(s2.workspace_live_bytes, 0);
+
+        let remat = Arc::new(ActivationArena::new(MemoryPlan::remat()));
+        BlockBwd { heads: HEADS, pool: tp(), arena: remat.clone() }.run(&bwd_args).unwrap();
+        assert_eq!(remat.stats().workspace_peak_bytes, dims.remat_bwd_workspace_bytes());
+    }
+
+    #[test]
+    fn stash_misses_on_changed_input_and_rematerialises() {
+        let x = randvec(31, B * S * H, 0.8);
+        let dy = randvec(32, B * S * H, 1.0);
+        let p = Params::random(33);
+        let arena = Arc::new(ActivationArena::new(MemoryPlan::unlimited()));
+        let (fwd_args, _) = block_args(&x, &dy, &p);
+        BlockFwd { heads: HEADS, pool: tp(), arena: arena.clone() }.run(&fwd_args).unwrap();
+
+        // different x: the stashed entry must NOT be consumed
+        let x2 = randvec(34, B * S * H, 0.8);
+        let (_, bwd_args2) = block_args(&x2, &dy, &p);
+        let remat = Arc::new(ActivationArena::new(MemoryPlan::remat()));
+        let want =
+            BlockBwd { heads: HEADS, pool: tp(), arena: remat }.run(&bwd_args2).unwrap();
+        let got = BlockBwd { heads: HEADS, pool: tp(), arena: arena.clone() }
+            .run(&bwd_args2)
+            .unwrap();
+        let s = arena.stats();
+        assert_eq!(s.stash_hits, 0);
+        assert_eq!(s.remats, 1);
+        assert_eq!(s.stash_live_bytes, s.stash_peak_bytes);
+        for (a, b) in want.iter().zip(&got) {
+            let (a, b) = (a.as_f32().unwrap(), b.as_f32().unwrap());
+            assert!(a.iter().zip(b).all(|(u, v)| u.to_bits() == v.to_bits()));
+        }
     }
 }

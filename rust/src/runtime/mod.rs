@@ -12,12 +12,17 @@
 //!   run on the in-tree deterministic thread pool ([`pool`]); thread
 //!   count comes from `ADAMA_THREADS` (default: available parallelism)
 //!   and results are bit-for-bit identical at any setting.
+//!   `ADAMA_ACT_BUDGET` (or [`Library::host_with_plan`]) sets the
+//!   activation stash budget: `0`/unset = per-layer remat (default),
+//!   `<n>[k|m|g]` = stash under a byte cap, `unlimited` = always stash —
+//!   see [`hostexec::actmem`]. Stashed and remat backward are
+//!   bit-identical, so the budget is a pure memory/throughput knob.
 //! * `pjrt::PjrtExecutor` (cargo feature `pjrt`) — compiles the AOT HLO
 //!   artifacts produced by `python/compile/aot.py` through the PJRT C API.
 //!   Selected automatically when the feature is enabled and artifacts are
 //!   found; `ADAMA_BACKEND=host|pjrt` overrides the choice.
 
-mod exec;
+pub mod exec;
 pub mod hostexec;
 mod manifest;
 #[cfg(feature = "pjrt")]
@@ -26,8 +31,9 @@ pub mod pool;
 
 pub use exec::{
     copy_chunk, copy_into_f32, lit_f32, lit_i32, lit_scalar_f32, scalar_f32, scalar_i32,
-    to_vec_f32, to_vec_i32, Arg, Executor, Program, Value,
+    to_vec_f32, to_vec_i32, Arg, Executor, MemStats, Program, Value,
 };
+pub use hostexec::actmem::{ActBudget, MemoryPlan};
 pub use hostexec::HostExecutor;
 pub use pool::ThreadPool;
 pub use manifest::{
@@ -69,19 +75,45 @@ impl Library {
         Self::with_executor(Arc::new(HostExecutor::with_threads(threads)), Manifest::builtin())
     }
 
+    /// [`Library::host_with_threads`] with an explicit activation stash
+    /// plan (the API twin of `ADAMA_ACT_BUDGET`): the stash-vs-remat
+    /// tests and benches construct remat/budgeted/unlimited libraries
+    /// side by side with this.
+    pub fn host_with_plan(threads: usize, plan: MemoryPlan) -> Arc<Self> {
+        Self::with_executor(
+            Arc::new(HostExecutor::with_plan(threads, plan)),
+            Manifest::builtin(),
+        )
+    }
+
     /// Same manifest, host executor re-pinned to `threads` pool workers;
-    /// non-host backends (and already-matching pools) are returned
-    /// unchanged. The DP/ZeRO thread simulators use this to pin each rank
-    /// to one pool thread so M ranks don't fan out into M·T threads.
+    /// non-host backends (and already-matching pools under the remat
+    /// default) are returned unchanged. The DP/ZeRO thread simulators
+    /// call this **once per rank** so M ranks don't fan out into M·T
+    /// pool threads — and, when an activation stash budget is set, so
+    /// every rank owns a private arena (the fork then happens even at a
+    /// matching thread count).
     pub fn fork_with_threads(self: &Arc<Self>, threads: usize) -> Arc<Self> {
-        if self.executor.platform() == "host" && self.executor.threads() != threads {
-            Self::with_executor(
-                Arc::new(HostExecutor::with_threads(threads)),
-                self.manifest.clone(),
-            )
-        } else {
-            self.clone()
+        if self.executor.platform() != "host" {
+            return self.clone();
         }
+        // carry the activation plan over so forked ranks keep the same
+        // stash-vs-remat behaviour (encode/decode both live in actmem)
+        let plan = match self.executor.memory() {
+            Some(m) => MemoryPlan::from_budget_bytes(m.stash_budget_bytes),
+            None => MemoryPlan::from_env(),
+        };
+        // with stashing enabled, concurrently-running ranks must NOT
+        // share one arena/meter (interleaving-dependent accounting,
+        // cross-rank eviction) — fork even at a matching thread count so
+        // each rank gets a private arena
+        if self.executor.threads() == threads && plan == MemoryPlan::remat() {
+            return self.clone();
+        }
+        Self::with_executor(
+            Arc::new(HostExecutor::with_plan(threads, plan)),
+            self.manifest.clone(),
+        )
     }
 
     /// Library over an explicit executor + manifest pair.

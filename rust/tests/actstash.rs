@@ -1,0 +1,180 @@
+//! Stash-vs-remat acceptance suite for the host executor's activation
+//! memory manager (`ADAMA_ACT_BUDGET` / `MemoryPlan`).
+//!
+//! * **Bit parity** — full training runs with stashed and rematerialised
+//!   `block_bwd` must produce identical per-step loss bits and final
+//!   parameter bits, at 1 and 4 pool threads, for budgets half and
+//!   unlimited against the remat baseline.
+//! * **Accounting reconciliation** — the executor's measured stash-arena
+//!   and workspace peaks must match the analytic
+//!   `memmodel::HostBlockDims` predictions at budgets 0, half and
+//!   unlimited: the measured-vs-predicted gap is an invariant, not a
+//!   report.
+
+use adama::config::{OptimBackend, OptimizerKind, TrainConfig};
+use adama::data::MarkovCorpus;
+use adama::memmodel::HostBlockDims;
+use adama::runtime::{Library, MemoryPlan};
+use adama::Trainer;
+
+fn cfg() -> TrainConfig {
+    TrainConfig {
+        model: "tiny".into(),
+        optimizer: OptimizerKind::AdamA,
+        backend: OptimBackend::Kernel,
+        accum_steps: 2,
+        chunk: 16384,
+        seed: 42,
+        ..TrainConfig::default()
+    }
+}
+
+/// Byte budget that fits exactly half of the tiny model's blocks.
+fn half_budget(lib: &Library) -> MemoryPlan {
+    let hyper = lib.manifest().model_config("tiny").unwrap().model.clone();
+    let dims = HostBlockDims::from_model(&hyper);
+    MemoryPlan::bytes(dims.stash_entry_bytes() * hyper.layers as u64 / 2)
+}
+
+/// Train 6 steps; return (per-step loss bits, final parameter bits).
+fn train_run(threads: usize, plan: MemoryPlan) -> (Vec<u32>, Vec<Vec<u32>>) {
+    let lib = Library::host_with_plan(threads, plan);
+    let mut trainer = Trainer::new(lib, cfg()).unwrap();
+    let h = trainer.spec().hyper.clone();
+    let mut corpus = MarkovCorpus::new(h.vocab, 7, 1);
+    let mut losses = Vec::new();
+    for _ in 0..6 {
+        let mbs = corpus.minibatch(2, h.microbatch, h.seq);
+        losses.push(trainer.train_step(&mbs).unwrap().loss.to_bits());
+    }
+    let params = trainer
+        .params()
+        .iter()
+        .map(|p| p.flat.iter().map(|x| x.to_bits()).collect())
+        .collect();
+    (losses, params)
+}
+
+#[test]
+fn stashed_training_is_bit_identical_to_remat_at_1_and_4_threads() {
+    for threads in [1usize, 4] {
+        let (base_losses, base_params) = train_run(threads, MemoryPlan::remat());
+        let half = half_budget(&Library::host());
+        for (name, plan) in [("half", half), ("unlimited", MemoryPlan::unlimited())] {
+            let (losses, params) = train_run(threads, plan);
+            assert_eq!(
+                base_losses, losses,
+                "loss bits drifted under budget {name} at {threads} threads"
+            );
+            assert_eq!(
+                base_params, params,
+                "final params drifted under budget {name} at {threads} threads"
+            );
+        }
+    }
+}
+
+#[test]
+fn stash_counters_reflect_the_budget() {
+    let lib = Library::host_with_plan(1, MemoryPlan::unlimited());
+    let mut trainer = Trainer::new(lib.clone(), cfg()).unwrap();
+    let h = trainer.spec().hyper.clone();
+    let blocks = h.layers as u64;
+    let mut corpus = MarkovCorpus::new(h.vocab, 7, 1);
+    let steps = 3u64;
+    let micro = 2u64;
+    for _ in 0..steps {
+        trainer.train_step(&corpus.minibatch(micro as usize, h.microbatch, h.seq)).unwrap();
+    }
+    let mem = lib.executor().memory().unwrap();
+    // every block forward stashed, every block backward hit the stash
+    assert_eq!(mem.stashed, steps * micro * blocks);
+    assert_eq!(mem.stash_hits, steps * micro * blocks);
+    assert_eq!(mem.remats, 0, "unlimited budget must never rematerialise");
+    assert_eq!(mem.stash_evictions, 0);
+    assert_eq!(mem.stash_live_bytes, 0, "all stashes consumed at step end");
+}
+
+#[test]
+fn measured_peaks_match_memmodel_for_budget_0_half_unlimited() {
+    let base = Library::host();
+    let hyper = base.manifest().model_config("tiny").unwrap().model.clone();
+    let dims = HostBlockDims::from_model(&hyper);
+    let blocks = hyper.layers as u64;
+    let entry = dims.stash_entry_bytes();
+
+    for (name, plan, want_hits) in [
+        ("0", MemoryPlan::remat(), false),
+        ("half", MemoryPlan::bytes(entry * blocks / 2), true),
+        ("unlimited", MemoryPlan::unlimited(), true),
+    ] {
+        let lib = Library::host_with_plan(1, plan);
+        let mut trainer = Trainer::new(lib.clone(), cfg()).unwrap();
+        let h = trainer.spec().hyper.clone();
+        let mut corpus = MarkovCorpus::new(h.vocab, 7, 1);
+        for _ in 0..2 {
+            trainer.train_step(&corpus.minibatch(2, h.microbatch, h.seq)).unwrap();
+        }
+        let mem = lib.executor().memory().unwrap();
+
+        // stash arena: measured peak == analytic prediction, exactly
+        let predicted = dims.predicted_stash_peak_bytes(plan, blocks);
+        assert_eq!(
+            mem.stash_peak_bytes, predicted,
+            "stash peak mismatch under budget {name}"
+        );
+
+        // workspace: the block programs dominate and are modelled
+        // exactly; measured peak must stay within the prediction
+        let ws_pred = dims.predicted_workspace_peak_bytes(plan, blocks);
+        assert_eq!(
+            mem.workspace_peak_bytes, ws_pred,
+            "workspace peak mismatch under budget {name}"
+        );
+        assert_eq!(mem.workspace_live_bytes, 0, "workspace must drain between calls");
+
+        if want_hits {
+            assert!(mem.stash_hits > 0, "budget {name} must produce stash hits");
+        } else {
+            assert_eq!(mem.stashed, 0, "budget 0 must never stash");
+        }
+    }
+}
+
+#[test]
+fn coordinator_metrics_surface_the_memory_snapshot() {
+    let lib = Library::host_with_plan(1, MemoryPlan::unlimited());
+    let mut trainer = Trainer::new(lib, cfg()).unwrap();
+    let h = trainer.spec().hyper.clone();
+    let mut corpus = MarkovCorpus::new(h.vocab, 7, 1);
+    trainer.train_step(&corpus.minibatch(2, h.microbatch, h.seq)).unwrap();
+    let snap = trainer.metrics().memory().expect("train_step records a memory snapshot");
+    let host = snap.host.expect("host executor instruments memory");
+    assert!(host.stash_peak_bytes > 0);
+    assert!(snap.tracker.peak_activations > 0);
+    assert!(snap.activation_peak_bytes() >= host.stash_peak_bytes);
+    // the report serialises with both coordinator and executor fields
+    let json = trainer.metrics().to_json_full().to_string_compact();
+    assert!(json.contains("host_stash_peak") && json.contains("peak_activations"));
+}
+
+#[test]
+fn eviction_keeps_the_arena_within_a_byte_budget() {
+    let base = Library::host();
+    let hyper = base.manifest().model_config("tiny").unwrap().model.clone();
+    let dims = HostBlockDims::from_model(&hyper);
+    // room for exactly one block of the two
+    let plan = MemoryPlan::bytes(dims.stash_entry_bytes());
+    let lib = Library::host_with_plan(1, plan);
+    let mut trainer = Trainer::new(lib.clone(), cfg()).unwrap();
+    let h = trainer.spec().hyper.clone();
+    let mut corpus = MarkovCorpus::new(h.vocab, 7, 1);
+    for _ in 0..2 {
+        trainer.train_step(&corpus.minibatch(2, h.microbatch, h.seq)).unwrap();
+    }
+    let mem = lib.executor().memory().unwrap();
+    assert!(mem.stash_peak_bytes <= dims.stash_entry_bytes());
+    assert!(mem.stash_evictions > 0, "overflow must evict, not grow");
+    assert!(mem.stash_hits > 0, "the newest block still hits");
+    assert!(mem.remats > 0, "the evicted block rematerialises");
+}
