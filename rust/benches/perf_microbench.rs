@@ -8,20 +8,25 @@
 //!   * thread-pool scaling: matmul and the `small` transformer block
 //!     forward at 1/2/4 pool threads (per-thread-count rows, so the
 //!     speedup is machine-recorded in the trajectory);
+//!   * SIMD dispatch: every optimizer kernel plus the `small` block
+//!     forward/backward at `ADAMA_SIMD=scalar` vs the detected level —
+//!     and a full (non-`--quick`) run **fails** (non-zero exit) if any
+//!     SIMD row regresses below its scalar twin beyond a 10% noise
+//!     allowance;
 //!   * activation stash vs remat: the `small` block forward+backward
 //!     pair at budget 0 (per-layer remat) vs unlimited (stash hit —
 //!     backward skips the recompute), at 1 and 4 threads.
 //!
 //! Besides the human-readable table, writes `BENCH_perf.json` —
 //! machine-readable ns/elem per kernel per backend (each row tagged with
-//! its pool thread count) — so subsequent PRs have a perf trajectory to
-//! regress against.
+//! its pool thread count and SIMD level) — so subsequent PRs have a perf
+//! trajectory to regress against.
 
 use adama::config::{OptimBackend, OptimizerKind};
 use adama::data::MarkovCorpus;
 use adama::optim::{host_math, ChunkRunner, Hyper};
 use adama::runtime::hostexec::math;
-use adama::runtime::{Library, MemoryPlan, ThreadPool, Value};
+use adama::runtime::{simd, Library, MemoryPlan, ThreadPool, Value};
 use adama::tensor::Rng;
 use adama::util::json::{obj, Json};
 use adama::util::stats::bench;
@@ -36,6 +41,7 @@ fn main() {
     let iters = if quick() { 3 } else { 20 };
     let platform = lib.executor().platform();
     let mut results: Vec<Json> = Vec::new();
+    let mut simd_regressions: Vec<String> = Vec::new();
 
     banner("optimizer kernels: chunked program dispatch vs raw host loop (1M elements)");
     println!(
@@ -155,6 +161,7 @@ fn main() {
     banner("threadpool scaling: matmul + transformer block (1/2/4 threads)");
     println!("{:<18} {:>8} {:>12} {:>10}", "op", "threads", "ms/call", "speedup");
     let dim = if quick() { 96 } else { 256 };
+    let env_lvl = simd::Level::from_env();
     let mut mrng = Rng::new(7);
     let ma: Vec<f32> = (0..dim * dim).map(|_| mrng.normal()).collect();
     let mb: Vec<f32> = (0..dim * dim).map(|_| mrng.normal()).collect();
@@ -163,7 +170,7 @@ fn main() {
     for threads in [1usize, 2, 4] {
         let pool = ThreadPool::new(threads);
         let s = bench(1, iters, || {
-            math::matmul(&pool, &ma, &mb, dim, dim, dim, &mut mo);
+            math::matmul(&pool, env_lvl, &ma, &mb, dim, dim, dim, &mut mo);
         });
         if threads == 1 {
             matmul_1t = s.mean();
@@ -218,6 +225,120 @@ fn main() {
             ("ms_per_call", (s.mean() * 1e3).into()),
             ("speedup_vs_1thread", speedup.into()),
         ]));
+    }
+
+    banner("SIMD dispatch: optimizer kernels + `small` block fwd/bwd, scalar vs vector");
+    let detected = simd::detect();
+    println!("detected level: {} (ADAMA_SIMD resolves to {})", detected.name(), env_lvl.name());
+    println!(
+        "{:<18} {:>8} {:>12} {:>12} {:>9}",
+        "op", "lanes", "scalar ms", "simd ms", "speedup"
+    );
+    {
+        let mut srng = Rng::new(17);
+        let mut sm: Vec<f32> = (0..n_total).map(|_| srng.normal()).collect();
+        let mut sv: Vec<f32> = (0..n_total).map(|_| srng.normal().abs()).collect();
+        let mut sp: Vec<f32> = (0..n_total).map(|_| srng.normal()).collect();
+        let sg: Vec<f32> = (0..n_total).map(|_| srng.normal()).collect();
+        let (b1, b2, eps) = (hyper.beta1, hyper.beta2, hyper.eps);
+        let (res, reg) = (&mut results, &mut simd_regressions);
+        simd_row(res, reg, "adama_acc", iters, n_total, detected, &mut |l| {
+            simd::adama_acc(l, &mut sm, &mut sv, &sg, 0.25, b1, b2);
+        });
+        simd_row(res, reg, "adama_decay_acc", iters, n_total, detected, &mut |l| {
+            simd::adama_decay_acc(l, &mut sm, &mut sv, &sg, 0.25, b1, b2, b1, b2);
+        });
+        simd_row(res, reg, "adam_update", iters, n_total, detected, &mut |l| {
+            simd::adam_update(l, &mut sp, &sm, &sv, 1e-3, 0.1, 0.001, eps);
+        });
+        simd_row(res, reg, "adam_full", iters, n_total, detected, &mut |l| {
+            simd::adam_full(l, &mut sp, &mut sm, &mut sv, &sg, 1e-3, 0.1, 0.001, b1, b2, eps);
+        });
+        simd_row(res, reg, "adamw_update", iters, n_total, detected, &mut |l| {
+            simd::adamw_update(l, &mut sp, &sm, &sv, 1e-3, 0.1, 0.001, 0.01, eps);
+        });
+        simd_row(res, reg, "grad_acc", iters, n_total, detected, &mut |l| {
+            simd::grad_acc(l, &mut sp, &sg, 0.25);
+        });
+        simd_row(res, reg, "sgdm_decay_acc", iters, n_total, detected, &mut |l| {
+            simd::sgdm_decay_acc(l, &mut sm, &sg, 0.5, 0.9);
+        });
+        simd_row(res, reg, "sgdm_acc", iters, n_total, detected, &mut |l| {
+            simd::sgdm_acc(l, &mut sm, &sg, 0.5);
+        });
+        simd_row(res, reg, "sgdm_update", iters, n_total, detected, &mut |l| {
+            simd::sgdm_update(l, &mut sp, &sm, 1e-2, 0.01);
+        });
+        simd_row(res, reg, "scale", iters, n_total, detected, &mut |l| {
+            simd::scale(l, &mut sv, 0.999);
+        });
+    }
+    // `small` block forward/backward at scalar vs vector dispatch
+    let block_levels = if detected == simd::Level::Scalar {
+        vec![simd::Level::Scalar]
+    } else {
+        vec![simd::Level::Scalar, detected]
+    };
+    let mut scalar_block = [0.0f64; 2]; // [fwd, bwd]
+    for level in block_levels {
+        let tlib = Library::host_with_simd(1, MemoryPlan::remat(), level);
+        let entry = tlib.entry("small/block_fwd").expect("small/block_fwd entry");
+        let mut arng = Rng::new(23);
+        let fwd_inputs: Vec<Value> = entry
+            .inputs
+            .iter()
+            .map(|spec| {
+                let data: Vec<f32> =
+                    (0..spec.elements()).map(|_| 0.1 * arng.normal()).collect();
+                Value::f32(data, &spec.shape).unwrap()
+            })
+            .collect();
+        let x_spec = &entry.inputs[0];
+        let dy: Vec<f32> = (0..x_spec.elements()).map(|_| 0.1 * arng.normal()).collect();
+        let mut bwd_inputs: Vec<Value> =
+            vec![fwd_inputs[0].clone(), Value::f32(dy, &x_spec.shape).unwrap()];
+        bwd_inputs.extend(fwd_inputs[1..].iter().cloned());
+        let fwd = tlib.get("small/block_fwd").expect("small/block_fwd program");
+        let bwd = tlib.get("small/block_bwd").expect("small/block_bwd program");
+        let cases = [
+            ("block_fwd_small", &fwd, &fwd_inputs),
+            ("block_bwd_small", &bwd, &bwd_inputs),
+        ];
+        for (idx, (op, prog, inputs)) in cases.into_iter().enumerate() {
+            let s = bench(1, iters.min(5), || {
+                prog.run_v(inputs).unwrap();
+            });
+            let speedup = if level == simd::Level::Scalar {
+                scalar_block[idx] = s.mean();
+                1.0
+            } else {
+                scalar_block[idx] / s.mean()
+            };
+            println!(
+                "{:<18} {:>8} {:>12} {:>12.3} {:>8.2}x",
+                op,
+                level.name(),
+                "-",
+                1e3 * s.mean(),
+                speedup
+            );
+            results.push(obj(vec![
+                ("op", Json::Str(format!("{op}_simd"))),
+                ("backend", "host".into()),
+                ("simd", level.name().into()),
+                ("threads", 1usize.into()),
+                ("ms_per_call", (s.mean() * 1e3).into()),
+                ("speedup_vs_scalar", speedup.into()),
+            ]));
+            if level != simd::Level::Scalar && speedup < 0.9 {
+                simd_regressions.push(format!(
+                    "{op}: {} {:.3} ms vs scalar {:.3} ms",
+                    level.name(),
+                    1e3 * s.mean(),
+                    1e3 * scalar_block[idx]
+                ));
+            }
+        }
     }
 
     banner("activation stash vs remat: `small` block fwd+bwd pair (ADAMA_ACT_BUDGET)");
@@ -300,5 +421,76 @@ fn main() {
     match std::fs::write(path, report.to_string_pretty()) {
         Ok(()) => println!("\nwrote {path}"),
         Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+
+    // hard gate: the SIMD path must never run slower than scalar (with a
+    // noise allowance) — a regression fails the bench run. Only armed at
+    // the full iteration count: 3-iteration --quick samples on shared CI
+    // are too jittery to turn into a red build.
+    if !simd_regressions.is_empty() {
+        eprintln!("\nSIMD regression vs scalar:");
+        for r in &simd_regressions {
+            eprintln!("  {r}");
+        }
+        if quick() {
+            eprintln!("(--quick run: regression gate not armed, rows recorded only)");
+        } else {
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Bench one SIMD kernel at `Level::Scalar` vs the detected dispatch
+/// level, record both rows, and note a regression when the vector path
+/// is slower than scalar beyond a 10% noise allowance.
+#[allow(clippy::too_many_arguments)]
+fn simd_row(
+    results: &mut Vec<Json>,
+    regressions: &mut Vec<String>,
+    op: &str,
+    iters: usize,
+    n_total: usize,
+    detected: simd::Level,
+    f: &mut dyn FnMut(simd::Level),
+) {
+    let ts = bench(2, iters, || f(simd::Level::Scalar));
+    results.push(obj(vec![
+        ("op", Json::Str(format!("simd_{op}"))),
+        ("backend", "simd".into()),
+        ("simd", "scalar".into()),
+        ("threads", 1usize.into()),
+        ("ns_per_elem", (ts.mean() * 1e9 / n_total as f64).into()),
+        ("ms_per_call", (ts.mean() * 1e3).into()),
+    ]));
+    if detected == simd::Level::Scalar {
+        println!("{:<18} {:>8} {:>12.3} {:>12} {:>9}", op, "-", 1e3 * ts.mean(), "-", "-");
+        return;
+    }
+    let tv = bench(2, iters, || f(detected));
+    let speedup = ts.mean() / tv.mean();
+    results.push(obj(vec![
+        ("op", Json::Str(format!("simd_{op}"))),
+        ("backend", "simd".into()),
+        ("simd", detected.name().into()),
+        ("threads", 1usize.into()),
+        ("ns_per_elem", (tv.mean() * 1e9 / n_total as f64).into()),
+        ("ms_per_call", (tv.mean() * 1e3).into()),
+        ("speedup_vs_scalar", speedup.into()),
+    ]));
+    println!(
+        "{:<18} {:>8} {:>12.3} {:>12.3} {:>8.2}x",
+        op,
+        detected.name(),
+        1e3 * ts.mean(),
+        1e3 * tv.mean(),
+        speedup
+    );
+    if speedup < 0.9 {
+        regressions.push(format!(
+            "{op}: {} {:.3} ms vs scalar {:.3} ms",
+            detected.name(),
+            1e3 * tv.mean(),
+            1e3 * ts.mean()
+        ));
     }
 }

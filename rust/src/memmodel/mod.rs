@@ -351,6 +351,36 @@ impl HostBlockDims {
         self.fwd_workspace_bytes() + self.grad_sweep_bytes()
     }
 
+    /// Transient workspace of one fused `head_loss` call: logits +
+    /// dlogits (`2·bs·v` — the largest single buffer of a training step
+    /// at realistic vocab sizes) plus `dx` (`bs·h`) and `dW` (`h·v`).
+    /// Mirrors the allocation sites in
+    /// `runtime::hostexec::transformer::{head_common, HeadLoss}`.
+    pub fn head_loss_workspace_bytes(&self, vocab: u64) -> u64 {
+        let h = self.hidden;
+        4 * (2 * self.bs() * vocab + self.bs() * h + h * vocab)
+    }
+
+    /// Transient workspace of one `head_eval` call: logits + dlogits
+    /// only (`head_common` allocates both on the eval path too).
+    pub fn head_eval_workspace_bytes(&self, vocab: u64) -> u64 {
+        4 * 2 * self.bs() * vocab
+    }
+
+    /// Predicted executor workspace peak over a full **training step**:
+    /// the fattest block-program call under `plan`, or the head-loss
+    /// call, whichever is larger (calls never overlap — the workspace
+    /// drains between programs).
+    pub fn predicted_step_workspace_peak_bytes(
+        &self,
+        plan: MemoryPlan,
+        blocks: u64,
+        vocab: u64,
+    ) -> u64 {
+        self.predicted_workspace_peak_bytes(plan, blocks)
+            .max(self.head_loss_workspace_bytes(vocab))
+    }
+
     /// Predicted arena peak for a model with `blocks` layers trained
     /// under `plan`: the budget admits whole entries, newest-needed
     /// first, so the steady-state peak is exactly
@@ -512,6 +542,23 @@ mod tests {
         assert_eq!(
             d.remat_bwd_workspace_bytes(),
             d.fwd_workspace_bytes() + d.grad_sweep_bytes()
+        );
+        // head programs (tiny vocab = 256): logits dominate the head side
+        let v = 256u64;
+        assert_eq!(d.head_loss_workspace_bytes(v), 4 * (2 * bs * v + bs * 64 + 64 * v));
+        assert_eq!(d.head_eval_workspace_bytes(v), 4 * 2 * bs * v);
+        assert!(d.head_loss_workspace_bytes(v) > d.head_eval_workspace_bytes(v));
+        // at tiny scale the remat block backward still dominates the step
+        // peak; at BERT-vocab scale the head takes over — the step-level
+        // prediction covers both regimes
+        assert_eq!(
+            d.predicted_step_workspace_peak_bytes(MemoryPlan::remat(), 2, v),
+            d.remat_bwd_workspace_bytes()
+        );
+        let big_vocab = 30522u64;
+        assert_eq!(
+            d.predicted_step_workspace_peak_bytes(MemoryPlan::remat(), 2, big_vocab),
+            d.head_loss_workspace_bytes(big_vocab)
         );
         // a stash entry is strictly smaller than the forward recompute
         // it saves, and a stash-hit backward is strictly lighter than a

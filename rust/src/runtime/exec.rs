@@ -195,11 +195,13 @@ pub trait Program: Send + Sync {
 /// [`Executor::memory`]): the activation stash arena plus the transient
 /// per-call workspace of the executing backend. Byte counts are exact
 /// for the programs the backend meters — on the host executor that is
-/// the transformer **block** programs and the fused MLP (each buffer
-/// registered at its allocation site); embed/head transients are
-/// outside the meter (see ROADMAP). The metered subset is what lets
-/// `crate::memmodel` predictions be reconciled against measurements as
-/// a tested invariant.
+/// the transformer **block** programs, the **head** programs (whose
+/// logits are the largest single buffer of a step at realistic vocab
+/// sizes) and the fused MLP, each buffer registered at its allocation
+/// site; only the embed transients remain outside the meter (cheap,
+/// O(bs·h)). The metered subset is what lets `crate::memmodel`
+/// predictions be reconciled against measurements as a tested
+/// invariant.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct MemStats {
     /// Configured stash budget; `None` = unlimited, `Some(0)` = pure
@@ -248,6 +250,14 @@ pub trait Executor: Send + Sync {
     /// backends without an in-process pool report 1.
     fn threads(&self) -> usize {
         1
+    }
+
+    /// SIMD dispatch level of the backend's vector kernels, when it has
+    /// one. The host executor reports its `ADAMA_SIMD`-resolved
+    /// [`crate::runtime::simd::Level`]; backends without an in-process
+    /// SIMD layer return `None`.
+    fn simd_level(&self) -> Option<crate::runtime::simd::Level> {
+        None
     }
 
     /// Memory instrumentation snapshot, when the backend provides one.

@@ -10,9 +10,12 @@
 //! host-loop path.
 //!
 //! The program wrappers split each chunk into contiguous element spans
-//! across the executor's thread pool; every kernel is purely element-wise,
-//! so the split cannot change a single bit regardless of thread count
-//! (the serial free functions below remain the oracles).
+//! across the executor's thread pool and run each span through the
+//! executor's [`crate::runtime::simd`] dispatch level; every kernel is
+//! purely element-wise and the SIMD layer is bit-exact by contract, so
+//! neither the split nor the lane width can change a single bit at any
+//! thread count or `ADAMA_SIMD` setting (the serial free functions below
+//! remain the oracles — `rust/tests/simd_parity.rs` sweeps the parity).
 
 use std::sync::Arc;
 
@@ -21,6 +24,7 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::runtime::exec::{Arg, Program, Value};
 use crate::runtime::manifest::Hyper;
 use crate::runtime::pool::ThreadPool;
+use crate::runtime::simd;
 
 // ---------------------------------------------------------------------------
 // scalar reference math (ref.py oracles)
@@ -159,12 +163,18 @@ struct Kernel {
     b2: f32,
     eps: f32,
     pool: Arc<ThreadPool>,
+    simd: simd::Level,
 }
 
 /// Resolve a `common/` short name (e.g. `"adama_decay_acc_16384"`) to its
 /// host program. The trailing chunk size is parsed but not enforced — the
 /// host kernels are shape-polymorphic over the buffer length.
-pub(super) fn build(short: &str, hyper: &Hyper, pool: Arc<ThreadPool>) -> Result<Box<dyn Program>> {
+pub(super) fn build(
+    short: &str,
+    hyper: &Hyper,
+    pool: Arc<ThreadPool>,
+    level: simd::Level,
+) -> Result<Box<dyn Program>> {
     let (op, chunk) = short
         .rsplit_once('_')
         .and_then(|(op, c)| c.parse::<usize>().ok().map(|c| (op, c)))
@@ -190,6 +200,7 @@ pub(super) fn build(short: &str, hyper: &Hyper, pool: Arc<ThreadPool>) -> Result
         b2: hyper.beta2 as f32,
         eps: hyper.eps as f32,
         pool,
+        simd: level,
     }))
 }
 
@@ -221,13 +232,14 @@ impl Program for Kernel {
         let shape = args[0].shape();
         let (b1, b2, eps) = (self.b1, self.b2, self.eps);
         let pool = &self.pool;
+        let lvl = self.simd;
         Ok(match self.kind {
             Kind::AdamaAcc => {
                 let (mut m, mut v) = (buf(args, 0, n)?.to_vec(), buf(args, 1, n)?.to_vec());
                 let g = buf(args, 2, n)?;
                 let gscale = scalars(args, 3, 1)?[0];
                 pool.for_spans2(&mut m, &mut v, |off, mm, vv| {
-                    adama_acc(mm, vv, &g[off..off + mm.len()], gscale, b1, b2);
+                    simd::adama_acc(lvl, mm, vv, &g[off..off + mm.len()], gscale, b1, b2);
                 });
                 vec![out(m, shape), out(v, shape)]
             }
@@ -237,7 +249,17 @@ impl Program for Kernel {
                 let sc = scalars(args, 3, 3)?; // [gscale, ms, vs]
                 let (gscale, msc, vsc) = (sc[0], sc[1], sc[2]);
                 pool.for_spans2(&mut m, &mut v, |off, mm, vv| {
-                    adama_decay_acc(mm, vv, &g[off..off + mm.len()], gscale, msc, vsc, b1, b2);
+                    simd::adama_decay_acc(
+                        lvl,
+                        mm,
+                        vv,
+                        &g[off..off + mm.len()],
+                        gscale,
+                        msc,
+                        vsc,
+                        b1,
+                        b2,
+                    );
                 });
                 vec![out(m, shape), out(v, shape)]
             }
@@ -246,8 +268,8 @@ impl Program for Kernel {
                 let ms = scalars(args, 2, 1)?[0];
                 let vs = scalars(args, 3, 1)?[0];
                 pool.for_spans2(&mut m, &mut v, |_, mm, vv| {
-                    scale(mm, ms);
-                    scale(vv, vs);
+                    simd::scale(lvl, mm, ms);
+                    simd::scale(lvl, vv, vs);
                 });
                 vec![out(m, shape), out(v, shape)]
             }
@@ -259,7 +281,7 @@ impl Program for Kernel {
                 let (lr, bc1, bc2) = (sc[0], sc[1], sc[2]);
                 pool.for_spans(&mut p, |off, pp| {
                     let end = off + pp.len();
-                    adam_update(pp, &m[off..end], &v[off..end], lr, bc1, bc2, eps);
+                    simd::adam_update(lvl, pp, &m[off..end], &v[off..end], lr, bc1, bc2, eps);
                 });
                 vec![out(p, shape)]
             }
@@ -270,7 +292,19 @@ impl Program for Kernel {
                 let sc = scalars(args, 4, 3)?;
                 let (lr, bc1, bc2) = (sc[0], sc[1], sc[2]);
                 pool.for_spans3(&mut p, &mut m, &mut v, |off, pp, mm, vv| {
-                    adam_full(pp, mm, vv, &g[off..off + pp.len()], lr, bc1, bc2, b1, b2, eps);
+                    simd::adam_full(
+                        lvl,
+                        pp,
+                        mm,
+                        vv,
+                        &g[off..off + pp.len()],
+                        lr,
+                        bc1,
+                        bc2,
+                        b1,
+                        b2,
+                        eps,
+                    );
                 });
                 vec![out(p, shape), out(m, shape), out(v, shape)]
             }
@@ -279,7 +313,7 @@ impl Program for Kernel {
                 let g = buf(args, 1, n)?;
                 let gscale = scalars(args, 2, 1)?[0];
                 pool.for_spans(&mut acc, |off, aa| {
-                    grad_acc(aa, &g[off..off + aa.len()], gscale);
+                    simd::grad_acc(lvl, aa, &g[off..off + aa.len()], gscale);
                 });
                 vec![out(acc, shape)]
             }
@@ -291,8 +325,8 @@ impl Program for Kernel {
                 let sc = scalars(args, 5, 3)?;
                 let (lr, bc1, bc2) = (sc[0], sc[1], sc[2]);
                 pool.for_spans3(&mut p, &mut m, &mut v, |off, pp, mm, vv| {
-                    adama_acc(mm, vv, &g[off..off + pp.len()], gscale, b1, b2);
-                    adam_update(pp, mm, vv, lr, bc1, bc2, eps);
+                    simd::adama_acc(lvl, mm, vv, &g[off..off + pp.len()], gscale, b1, b2);
+                    simd::adam_update(lvl, pp, mm, vv, lr, bc1, bc2, eps);
                 });
                 vec![out(p, shape), out(m, shape), out(v, shape)]
             }
@@ -304,7 +338,7 @@ impl Program for Kernel {
                 let (lr, bc1, bc2, wd) = (sc[0], sc[1], sc[2], sc[3]);
                 pool.for_spans(&mut p, |off, pp| {
                     let end = off + pp.len();
-                    adamw_update(pp, &m[off..end], &v[off..end], lr, bc1, bc2, wd, eps);
+                    simd::adamw_update(lvl, pp, &m[off..end], &v[off..end], lr, bc1, bc2, wd, eps);
                 });
                 vec![out(p, shape)]
             }
@@ -314,7 +348,7 @@ impl Program for Kernel {
                 let sc = scalars(args, 2, 2)?; // [gscale, mu]
                 let (gscale, mu) = (sc[0], sc[1]);
                 pool.for_spans(&mut u, |off, uu| {
-                    sgdm_decay_acc(uu, &g[off..off + uu.len()], gscale, mu);
+                    simd::sgdm_decay_acc(lvl, uu, &g[off..off + uu.len()], gscale, mu);
                 });
                 vec![out(u, shape)]
             }
@@ -323,7 +357,7 @@ impl Program for Kernel {
                 let g = buf(args, 1, n)?;
                 let gscale = scalars(args, 2, 1)?[0];
                 pool.for_spans(&mut u, |off, uu| {
-                    sgdm_acc(uu, &g[off..off + uu.len()], gscale);
+                    simd::sgdm_acc(lvl, uu, &g[off..off + uu.len()], gscale);
                 });
                 vec![out(u, shape)]
             }
@@ -333,7 +367,7 @@ impl Program for Kernel {
                 let sc = scalars(args, 2, 2)?; // [lr, wd]
                 let (lr, wd) = (sc[0], sc[1]);
                 pool.for_spans(&mut p, |off, pp| {
-                    sgdm_update(pp, &u[off..off + pp.len()], lr, wd);
+                    simd::sgdm_update(lvl, pp, &u[off..off + pp.len()], lr, wd);
                 });
                 vec![out(p, shape)]
             }
@@ -354,18 +388,24 @@ mod tests {
         Arc::new(ThreadPool::new(threads))
     }
 
+    /// Build at the detected SIMD level, so these unit tests exercise the
+    /// vector path wherever the test host supports one.
+    fn lvl() -> simd::Level {
+        simd::detect()
+    }
+
     #[test]
     fn kernel_name_parsing() {
-        assert!(build("adama_acc_16384", &hyper(), tp(1)).is_ok());
-        assert!(build("adama_decay_acc_1048576", &hyper(), tp(1)).is_ok());
-        assert!(build("sgdm_update_16384", &hyper(), tp(1)).is_ok());
-        assert!(build("nonsense_16384", &hyper(), tp(1)).is_err());
-        assert!(build("adama_acc", &hyper(), tp(1)).is_err());
+        assert!(build("adama_acc_16384", &hyper(), tp(1), lvl()).is_ok());
+        assert!(build("adama_decay_acc_1048576", &hyper(), tp(1), lvl()).is_ok());
+        assert!(build("sgdm_update_16384", &hyper(), tp(1), lvl()).is_ok());
+        assert!(build("nonsense_16384", &hyper(), tp(1), lvl()).is_err());
+        assert!(build("adama_acc", &hyper(), tp(1), lvl()).is_err());
     }
 
     #[test]
     fn program_matches_scalar_math_bitwise() {
-        let prog = build("adama_acc_8", &hyper(), tp(2)).unwrap();
+        let prog = build("adama_acc_8", &hyper(), tp(2), lvl()).unwrap();
         let m = vec![0.5f32, -1.0, 2.0, 0.0];
         let v = vec![0.1f32, 0.2, 0.0, 3.0];
         let g = vec![1.0f32, -2.0, 0.25, 4.0];
@@ -393,7 +433,7 @@ mod tests {
         let g: Vec<f32> = (0..n).map(|i| (i as f32 * 0.73).sin() * 2.0).collect();
         let p: Vec<f32> = (0..n).map(|i| (i as f32 * 0.19).cos()).collect();
         for threads in [1usize, 4] {
-            let acc = build("adama_acc_16384", &hyper(), tp(threads)).unwrap();
+            let acc = build("adama_acc_16384", &hyper(), tp(threads), lvl()).unwrap();
             let got = acc
                 .run(&[
                     Arg::F32(&m, &[n]),
@@ -407,7 +447,7 @@ mod tests {
             assert_eq!(got[0].as_f32().unwrap(), &m2[..], "{threads} threads: m");
             assert_eq!(got[1].as_f32().unwrap(), &v2[..], "{threads} threads: v");
 
-            let upd = build("adam_update_16384", &hyper(), tp(threads)).unwrap();
+            let upd = build("adam_update_16384", &hyper(), tp(threads), lvl()).unwrap();
             let got = upd
                 .run(&[
                     Arg::F32(&p, &[n]),

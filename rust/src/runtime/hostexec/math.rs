@@ -1,24 +1,35 @@
 //! Dense f32 math for the host executor's model programs, parallelised
-//! over the deterministic chunked thread pool ([`crate::runtime::pool`]).
+//! over the deterministic chunked thread pool ([`crate::runtime::pool`])
+//! and vectorised through the runtime-dispatched SIMD layer
+//! ([`crate::runtime::simd`]).
 //!
 //! Loops stay deliberately simple (ikj matmul ordering for cache
-//! behaviour) — the host backend is the reference/CI substrate, not the
-//! speed record — but the row-independent kernels (`matmul*`,
-//! `layer_norm`, `softmax_xent`) split their *output rows* across pool
-//! workers. Each output cell keeps the exact per-element accumulation
-//! order of the serial loop, so results are bit-for-bit identical at any
-//! thread count (locked down by `rust/tests/determinism.rs`).
+//! behaviour) — the row-independent kernels (`matmul*`, `layer_norm`,
+//! `softmax_xent`) split their *output rows* across pool workers, and
+//! the lane-parallel inner steps (the matmul axpy rows, bias adds, the
+//! layer-norm normalise/backward-dx rows, softmax probability scaling)
+//! dispatch through `simd`. Each output cell keeps the exact per-element
+//! accumulation order of the serial scalar loop — the SIMD layer
+//! vectorises only across independent outputs — so results are
+//! bit-for-bit identical at any thread count *and* any `ADAMA_SIMD`
+//! level (locked down by `rust/tests/determinism.rs` and
+//! `rust/tests/simd_parity.rs`).
 //!
 //! Cross-row reductions (`col_sums`, `layer_norm_bwd`'s dg/db, the NLL
-//! sum) are order-sensitive, so they either stay serial or reduce
-//! fixed-size per-row partials in ascending row order.
+//! sum) and in-row dot products (`matmul_nt`, attention scores) are
+//! order-sensitive, so they stay serial scalar or reduce fixed-size
+//! per-row partials in ascending row order.
 
 use crate::runtime::pool::ThreadPool;
+use crate::runtime::simd;
 
-/// `out[m,n] = a[m,k] @ b[k,n]`. Output rows are pool-parallel; each row's
-/// accumulation order (p ascending) matches the serial loop.
+/// `out[m,n] = a[m,k] @ b[k,n]`. Output rows are pool-parallel and the
+/// per-`p` axpy rows are lane-parallel; each row's accumulation order
+/// (p ascending) matches the serial loop.
+#[allow(clippy::too_many_arguments)]
 pub fn matmul(
     pool: &ThreadPool,
+    lvl: simd::Level,
     a: &[f32],
     b: &[f32],
     m: usize,
@@ -33,10 +44,7 @@ pub fn matmul(
         row.fill(0.0);
         for p in 0..k {
             let aip = a[i * k + p];
-            let brow = &b[p * n..(p + 1) * n];
-            for (o, &bv) in row.iter_mut().zip(brow) {
-                *o += aip * bv;
-            }
+            simd::axpy(lvl, row, &b[p * n..(p + 1) * n], aip);
         }
     });
 }
@@ -44,8 +52,10 @@ pub fn matmul(
 /// `out[m,n] = aᵀ @ b` with `a:[p,m]`, `b:[p,n]` (weight-gradient shape).
 /// Restructured from the r-outer serial form to row-parallel with the
 /// same per-cell accumulation order (r ascending).
+#[allow(clippy::too_many_arguments)]
 pub fn matmul_tn(
     pool: &ThreadPool,
+    lvl: simd::Level,
     a: &[f32],
     b: &[f32],
     p: usize,
@@ -60,17 +70,19 @@ pub fn matmul_tn(
         row.fill(0.0);
         for r in 0..p {
             let ari = a[r * m + i];
-            let brow = &b[r * n..(r + 1) * n];
-            for (o, &bv) in row.iter_mut().zip(brow) {
-                *o += ari * bv;
-            }
+            simd::axpy(lvl, row, &b[r * n..(r + 1) * n], ari);
         }
     });
 }
 
 /// `out[m,n] = a @ bᵀ` with `a:[m,k]`, `b:[n,k]` (input-gradient shape).
+/// The inner dot product is an in-order reduction over `k`, which the
+/// bit-exactness contract forbids folding into lanes — it stays a serial
+/// scalar loop per output cell (rows are still pool-parallel).
+#[allow(clippy::too_many_arguments)]
 pub fn matmul_nt(
     pool: &ThreadPool,
+    lvl: simd::Level,
     a: &[f32],
     b: &[f32],
     m: usize,
@@ -81,6 +93,7 @@ pub fn matmul_nt(
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     debug_assert_eq!(out.len(), m * n);
+    let _ = lvl; // reduction kernel: no lane-parallel inner step
     pool.for_rows(out, n, |i, row| {
         let arow = &a[i * k..(i + 1) * k];
         for (j, o) in row.iter_mut().enumerate() {
@@ -94,13 +107,12 @@ pub fn matmul_nt(
     });
 }
 
-/// Add a `[cols]` bias to every row of `x:[rows, cols]`. Serial: cheap
-/// O(rows·cols) relative to the adjacent matmuls.
-pub fn add_bias(x: &mut [f32], bias: &[f32]) {
+/// Add a `[cols]` bias to every row of `x:[rows, cols]`. Rows stay
+/// serial (cheap O(rows·cols) next to the adjacent matmuls) but each
+/// row's add is lane-parallel.
+pub fn add_bias(lvl: simd::Level, x: &mut [f32], bias: &[f32]) {
     for row in x.chunks_mut(bias.len()) {
-        for (v, &b) in row.iter_mut().zip(bias) {
-            *v += b;
-        }
+        simd::add_assign(lvl, row, bias);
     }
 }
 
@@ -121,7 +133,8 @@ const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi)
 const GELU_A: f32 = 0.044_715;
 
 /// Tanh-approximated GELU (jax.nn.gelu with approximate=True — the form
-/// baked into the AOT artifacts).
+/// baked into the AOT artifacts). Scalar: `tanh` is a libm call whose
+/// bits a vector polynomial could not reproduce.
 pub fn gelu(x: f32) -> f32 {
     let u = GELU_C * (x + GELU_A * x * x * x);
     0.5 * x * (1.0 + u.tanh())
@@ -139,9 +152,12 @@ pub const LN_EPS: f32 = 1e-5;
 
 /// Row-wise layer norm: `out = (x - mu)/sqrt(var + eps) * g + b` with the
 /// biased variance (1/cols), matching `jnp.var`. Rows are pool-parallel
-/// (each output row depends only on its input row).
+/// (each output row depends only on its input row); the mean/variance
+/// reductions stay serial per row, the normalise step is lane-parallel.
+#[allow(clippy::too_many_arguments)]
 pub fn layer_norm(
     pool: &ThreadPool,
+    lvl: simd::Level,
     x: &[f32],
     g: &[f32],
     b: &[f32],
@@ -156,17 +172,17 @@ pub fn layer_norm(
         let mu = xi.iter().sum::<f32>() / cols as f32;
         let var = xi.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / cols as f32;
         let rstd = 1.0 / (var + LN_EPS).sqrt();
-        for j in 0..cols {
-            oi[j] = (xi[j] - mu) * rstd * g[j] + b[j];
-        }
+        simd::norm_affine(lvl, oi, xi, g, b, mu, rstd);
     });
 }
 
 /// Layer-norm backward: accumulates `dx` (+=, for residual fan-in) and
-/// fills `dg`/`db` gradients (+= as well, caller zeroes). Serial: dg/db
-/// accumulate across rows, which is the order-sensitive part.
+/// fills `dg`/`db` gradients (+= as well, caller zeroes). Serial across
+/// rows (dg/db accumulate in row order — the order-sensitive part); the
+/// per-row dx closed form is lane-parallel.
 #[allow(clippy::too_many_arguments)]
 pub fn layer_norm_bwd(
+    lvl: simd::Level,
     x: &[f32],
     g: &[f32],
     dy: &[f32],
@@ -200,11 +216,7 @@ pub fn layer_norm_bwd(
         mean_dxhat *= inv_c;
         mean_dxhat_xhat *= inv_c;
         let oi = &mut dx[r * cols..(r + 1) * cols];
-        for j in 0..cols {
-            let xhat = (xi[j] - mu) * rstd;
-            let dxhat = di[j] * g[j];
-            oi[j] += rstd * (dxhat - mean_dxhat - xhat * mean_dxhat_xhat);
-        }
+        simd::ln_bwd_dx(lvl, oi, xi, di, g, mu, rstd, mean_dxhat, mean_dxhat_xhat);
     }
 }
 
@@ -214,9 +226,13 @@ pub fn layer_norm_bwd(
 ///
 /// Rows are pool-parallel into `dlogits` plus per-row `[nll, correct]`
 /// partials; the partials then reduce serially in ascending row order, so
-/// the f64 NLL sum is bit-identical to the fully serial loop.
+/// the f64 NLL sum is bit-identical to the fully serial loop. The max/exp
+/// sweeps stay scalar (reduction + libm); the probability normalisation
+/// is lane-parallel.
+#[allow(clippy::too_many_arguments)]
 pub fn softmax_xent(
     pool: &ThreadPool,
+    lvl: simd::Level,
     logits: &[f32],
     labels: &[i32],
     rows: usize,
@@ -247,9 +263,7 @@ pub fn softmax_xent(
             sum += e;
         }
         let inv_sum = 1.0 / sum;
-        for d in di.iter_mut() {
-            *d *= inv_sum; // now softmax probabilities
-        }
+        simd::scale(lvl, di, inv_sum); // now softmax probabilities
         stat[0] = -((li[label] - mx) - sum.ln()) as f64;
         stat[1] = f64::from(u8::from(amax == label));
         di[label] -= 1.0; // softmax - onehot
@@ -271,6 +285,13 @@ mod tests {
         ThreadPool::new(1)
     }
 
+    /// Detected SIMD level — unit tests run the vector path where the
+    /// host supports one (parity with scalar is pinned in
+    /// `rust/tests/simd_parity.rs`).
+    fn lv() -> simd::Level {
+        simd::detect()
+    }
+
     #[test]
     fn matmul_agrees_with_transposed_forms() {
         let pool = serial();
@@ -278,12 +299,12 @@ mod tests {
         let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
         let b = [7.0, 8.0, 9.0, 10.0, 11.0, 12.0];
         let mut ab = [0.0f32; 4];
-        matmul(&pool, &a, &b, 2, 3, 2, &mut ab);
+        matmul(&pool, lv(), &a, &b, 2, 3, 2, &mut ab);
         assert_eq!(ab, [58.0, 64.0, 139.0, 154.0]);
 
         // aᵀ@b with a stored as [p=2, m=3] must equal matmul of transposed a
         let mut tn = [0.0f32; 9];
-        matmul_tn(&pool, &a, &a, 2, 3, 3, &mut tn);
+        matmul_tn(&pool, lv(), &a, &a, 2, 3, 3, &mut tn);
         // (aᵀa)[i][j] = sum_r a[r,i] a[r,j]
         assert_eq!(tn[0], 1.0 * 1.0 + 4.0 * 4.0);
         assert_eq!(tn[4], 2.0 * 2.0 + 5.0 * 5.0);
@@ -291,7 +312,7 @@ mod tests {
         // a@bᵀ with b stored as [n=3, k=3]
         let c = [1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0];
         let mut nt = [0.0f32; 6];
-        matmul_nt(&pool, &a, &c, 2, 3, 3, &mut nt);
+        matmul_nt(&pool, lv(), &a, &c, 2, 3, 3, &mut nt);
         assert_eq!(nt, a);
     }
 
@@ -306,23 +327,23 @@ mod tests {
             let poolt = ThreadPool::new(threads);
             let mut o1 = vec![0.0f32; m * n];
             let mut o2 = vec![0.0f32; m * n];
-            matmul(&pool1, &a, &b, m, k, n, &mut o1);
-            matmul(&poolt, &a, &b, m, k, n, &mut o2);
+            matmul(&pool1, lv(), &a, &b, m, k, n, &mut o1);
+            matmul(&poolt, lv(), &a, &b, m, k, n, &mut o2);
             assert!(o1.iter().zip(&o2).all(|(x, y)| x.to_bits() == y.to_bits()));
 
             let g: Vec<f32> = (0..n).map(|j| 1.0 + 0.01 * j as f32).collect();
             let bias = vec![0.1f32; n];
             let mut l1 = vec![0.0f32; m * n];
             let mut l2 = vec![0.0f32; m * n];
-            layer_norm(&pool1, &o1, &g, &bias, m, n, &mut l1);
-            layer_norm(&poolt, &o1, &g, &bias, m, n, &mut l2);
+            layer_norm(&pool1, lv(), &o1, &g, &bias, m, n, &mut l1);
+            layer_norm(&poolt, lv(), &o1, &g, &bias, m, n, &mut l2);
             assert!(l1.iter().zip(&l2).all(|(x, y)| x.to_bits() == y.to_bits()));
 
             let labels: Vec<i32> = (0..m).map(|r| (r % n) as i32).collect();
             let mut d1 = vec![0.0f32; m * n];
             let mut d2 = vec![0.0f32; m * n];
-            let (nll1, nc1) = softmax_xent(&pool1, &l1, &labels, m, n, &mut d1);
-            let (nll2, nc2) = softmax_xent(&poolt, &l1, &labels, m, n, &mut d2);
+            let (nll1, nc1) = softmax_xent(&pool1, lv(), &l1, &labels, m, n, &mut d1);
+            let (nll2, nc2) = softmax_xent(&poolt, lv(), &l1, &labels, m, n, &mut d2);
             assert_eq!(nll1.to_bits(), nll2.to_bits());
             assert_eq!(nc1, nc2);
             assert!(d1.iter().zip(&d2).all(|(x, y)| x.to_bits() == y.to_bits()));
@@ -336,7 +357,7 @@ mod tests {
         let g = [1.0f32, 1.0, 1.0, 1.0];
         let b = [0.0f32; 4];
         let mut out = [0.0f32; 4];
-        layer_norm(&pool, &x, &g, &b, 1, 4, &mut out);
+        layer_norm(&pool, lv(), &x, &g, &b, 1, 4, &mut out);
         let mean: f32 = out.iter().sum::<f32>() / 4.0;
         let var: f32 = out.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 4.0;
         assert!(mean.abs() < 1e-6);
@@ -355,11 +376,11 @@ mod tests {
         let mut dx = vec![0.0f32; 8];
         let mut dg = vec![0.0f32; 4];
         let mut db = vec![0.0f32; 4];
-        layer_norm_bwd(&x, &g, &dy, rows, cols, &mut dx, &mut dg, &mut db);
+        layer_norm_bwd(lv(), &x, &g, &dy, rows, cols, &mut dx, &mut dg, &mut db);
 
         let loss = |x: &[f32], g: &[f32], b: &[f32]| -> f32 {
             let mut out = vec![0.0f32; 8];
-            layer_norm(&pool, x, g, b, rows, cols, &mut out);
+            layer_norm(&pool, lv(), x, g, b, rows, cols, &mut out);
             out.iter().zip(&dy).map(|(o, d)| o * d).sum()
         };
         let eps = 1e-2f32;
@@ -396,7 +417,7 @@ mod tests {
         let logits = [0.0f32; 8]; // 2 rows x 4 classes
         let labels = [1i32, 3];
         let mut d = [0.0f32; 8];
-        let (nll, ncorrect) = softmax_xent(&pool, &logits, &labels, 2, 4, &mut d);
+        let (nll, ncorrect) = softmax_xent(&pool, lv(), &logits, &labels, 2, 4, &mut d);
         assert!(((nll / 2.0) - (4.0f64).ln()).abs() < 1e-6);
         assert_eq!(ncorrect, 0); // argmax is index 0 on ties
         for r in 0..2 {
@@ -404,5 +425,18 @@ mod tests {
             assert!(s.abs() < 1e-6);
         }
         assert!((d[1] - (0.25 - 1.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn add_bias_is_level_invariant() {
+        let bias: Vec<f32> = (0..13).map(|j| 0.1 * j as f32 - 0.5).collect();
+        let base: Vec<f32> = (0..3 * 13).map(|i| (i as f32 * 0.37).sin()).collect();
+        let mut want = base.clone();
+        add_bias(simd::Level::Scalar, &mut want, &bias);
+        for level in simd::Level::all_supported() {
+            let mut got = base.clone();
+            add_bias(level, &mut got, &bias);
+            assert!(got.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
     }
 }

@@ -6,8 +6,10 @@
 //! w.r.t. (W1, b1, W2, b2) — not x — exactly like the lowered artifact.
 //!
 //! The matmuls and the softmax run on the executor's deterministic thread
-//! pool; the element-wise relu maps stay serial (trivial next to the
-//! matmuls, and unaffected by the determinism contract either way).
+//! pool and dispatch through the bit-exact SIMD layer
+//! ([`crate::runtime::simd`]); the element-wise relu maps stay serial
+//! scalar (trivial next to the matmuls, and `f32::max` NaN/−0.0
+//! semantics are not worth re-stating in lanes).
 //!
 //! The MLP is a single fused fwd+bwd program, so there is nothing to
 //! stash — but its transient workspace is metered through the executor's
@@ -23,20 +25,19 @@ use super::math;
 use crate::runtime::exec::{Arg, Program, Value};
 use crate::runtime::manifest::MlpHyper;
 use crate::runtime::pool::ThreadPool;
+use crate::runtime::simd;
 
 pub(super) fn build(
     short: &str,
     hyper: &MlpHyper,
     pool: Arc<ThreadPool>,
     arena: Arc<ActivationArena>,
+    level: simd::Level,
 ) -> Result<Box<dyn Program>> {
+    let (hyper, simd) = (hyper.clone(), level);
     match short {
-        "mlp_train" => {
-            Ok(Box::new(MlpProgram { hyper: hyper.clone(), train: true, pool, arena }))
-        }
-        "mlp_eval" => {
-            Ok(Box::new(MlpProgram { hyper: hyper.clone(), train: false, pool, arena }))
-        }
+        "mlp_train" => Ok(Box::new(MlpProgram { hyper, train: true, pool, arena, simd })),
+        "mlp_eval" => Ok(Box::new(MlpProgram { hyper, train: false, pool, arena, simd })),
         other => bail!("host executor: unknown mlp program '{other}'"),
     }
 }
@@ -46,6 +47,7 @@ struct MlpProgram {
     train: bool,
     pool: Arc<ThreadPool>,
     arena: Arc<ActivationArena>,
+    simd: simd::Level,
 }
 
 struct MlpArgs<'a> {
@@ -87,47 +89,46 @@ impl Program for MlpProgram {
         let (d, hd, c) = (self.hyper.features, self.hyper.hidden, self.hyper.classes);
         let b = a.batch;
         let pool = &self.pool;
+        let lvl = self.simd;
         let mut ws = self.arena.ws().scope();
 
         // forward
         let mut h1 = vec![0.0f32; b * hd];
         ws.add(h1.len());
-        math::matmul(pool, a.x, a.w1, b, d, hd, &mut h1);
-        math::add_bias(&mut h1, a.b1);
+        math::matmul(pool, lvl, a.x, a.w1, b, d, hd, &mut h1);
+        math::add_bias(lvl, &mut h1, a.b1);
         let hr: Vec<f32> = h1.iter().map(|&v| v.max(0.0)).collect();
         ws.add(hr.len());
         let mut logits = vec![0.0f32; b * c];
         ws.add(logits.len());
-        math::matmul(pool, &hr, a.w2, b, hd, c, &mut logits);
-        math::add_bias(&mut logits, a.b2);
+        math::matmul(pool, lvl, &hr, a.w2, b, hd, c, &mut logits);
+        math::add_bias(lvl, &mut logits, a.b2);
 
         let mut dlogits = vec![0.0f32; b * c];
         ws.add(dlogits.len());
-        let (nll, ncorrect) = math::softmax_xent(pool, &logits, a.labels, b, c, &mut dlogits);
+        let (nll, ncorrect) = math::softmax_xent(pool, lvl, &logits, a.labels, b, c, &mut dlogits);
         let loss = (nll / b as f64) as f32;
 
         if !self.train {
             return Ok(vec![Value::scalar_f32(loss), Value::scalar_i32(ncorrect)]);
         }
 
-        // backward (mean loss: scale softmax-onehot by 1/B)
+        // backward (mean loss: scale softmax-onehot by 1/B, lane-parallel)
         let inv_b = 1.0 / b as f32;
-        for v in dlogits.iter_mut() {
-            *v *= inv_b;
-        }
+        simd::scale(lvl, &mut dlogits, inv_b);
         let mut dw2 = vec![0.0f32; hd * c];
-        math::matmul_tn(pool, &hr, &dlogits, b, hd, c, &mut dw2);
+        math::matmul_tn(pool, lvl, &hr, &dlogits, b, hd, c, &mut dw2);
         let mut db2 = vec![0.0f32; c];
         math::col_sums(&dlogits, b, c, &mut db2);
         let mut dhr = vec![0.0f32; b * hd];
-        math::matmul_nt(pool, &dlogits, a.w2, b, c, hd, &mut dhr);
+        math::matmul_nt(pool, lvl, &dlogits, a.w2, b, c, hd, &mut dhr);
         ws.add(dw2.len() + db2.len() + dhr.len());
         // relu'
         let dh1: Vec<f32> =
             dhr.iter().zip(&h1).map(|(&g, &u)| if u > 0.0 { g } else { 0.0 }).collect();
         ws.add(dh1.len());
         let mut dw1 = vec![0.0f32; d * hd];
-        math::matmul_tn(pool, a.x, &dh1, b, d, hd, &mut dw1);
+        math::matmul_tn(pool, lvl, a.x, &dh1, b, d, hd, &mut dw1);
         let mut db1 = vec![0.0f32; hd];
         math::col_sums(&dh1, b, hd, &mut db1);
         ws.add(dw1.len() + db1.len());
@@ -159,6 +160,10 @@ mod tests {
         Arc::new(ActivationArena::new(super::super::actmem::MemoryPlan::remat()))
     }
 
+    fn lv() -> simd::Level {
+        simd::Level::from_env()
+    }
+
     struct Setup {
         x: Vec<f32>,
         labels: Vec<i32>,
@@ -183,7 +188,7 @@ mod tests {
     }
 
     fn loss_of(s: &Setup) -> f32 {
-        let prog = MlpProgram { hyper: hyper(), train: false, pool: tp(), arena: ar() };
+        let prog = MlpProgram { hyper: hyper(), train: false, pool: tp(), arena: ar(), simd: lv() };
         let out = prog
             .run(&[
                 Arg::F32(&s.x, &[4, 5]),
@@ -200,7 +205,7 @@ mod tests {
     #[test]
     fn train_grads_match_finite_differences() {
         let s = setup();
-        let prog = MlpProgram { hyper: hyper(), train: true, pool: tp(), arena: ar() };
+        let prog = MlpProgram { hyper: hyper(), train: true, pool: tp(), arena: ar(), simd: lv() };
         let out = prog
             .run(&[
                 Arg::F32(&s.x, &[4, 5]),
@@ -261,7 +266,7 @@ mod tests {
     #[test]
     fn eval_counts_correct_predictions() {
         let s = setup();
-        let prog = MlpProgram { hyper: hyper(), train: false, pool: tp(), arena: ar() };
+        let prog = MlpProgram { hyper: hyper(), train: false, pool: tp(), arena: ar(), simd: lv() };
         let out = prog
             .run(&[
                 Arg::F32(&s.x, &[4, 5]),
@@ -281,7 +286,7 @@ mod tests {
     #[test]
     fn rejects_malformed_arguments() {
         let s = setup();
-        let prog = MlpProgram { hyper: hyper(), train: true, pool: tp(), arena: ar() };
+        let prog = MlpProgram { hyper: hyper(), train: true, pool: tp(), arena: ar(), simd: lv() };
         // wrong arg count
         assert!(prog.run(&[Arg::F32(&s.x, &[4, 5])]).is_err());
         // out-of-range label

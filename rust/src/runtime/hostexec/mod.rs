@@ -30,6 +30,13 @@
 //! [`HostExecutor::with_threads`] pins it programmatically — the DP/ZeRO
 //! simulators pin 1 thread per rank via `Library::fork_with_threads`.
 //!
+//! The lane-parallel inner loops (optimizer kernels, matmul rows,
+//! layer-norm, the element-wise softmax/attention stages) additionally
+//! dispatch through [`crate::runtime::simd`] — `ADAMA_SIMD` /
+//! [`HostExecutor::with_simd`] pick scalar, SSE2 or AVX2 code paths that
+//! are **bit-for-bit identical** by construction, so the determinism
+//! contract is unchanged (`rust/tests/simd_parity.rs`).
+//!
 //! ## Activation memory: stash vs recompute
 //!
 //! `block_bwd` rematerialises its forward by default (the artifact
@@ -61,12 +68,14 @@ use self::actmem::{ActivationArena, MemoryPlan};
 use super::exec::{Arg, Executor, MemStats, Program, Value};
 use super::manifest::{ArtifactEntry, Manifest};
 use super::pool::{self, ThreadPool};
+use super::simd;
 
 /// The always-available pure-rust executor.
 pub struct HostExecutor {
     calls: Arc<AtomicU64>,
     pool: Arc<ThreadPool>,
     arena: Arc<ActivationArena>,
+    simd: simd::Level,
 }
 
 impl Default for HostExecutor {
@@ -77,7 +86,8 @@ impl Default for HostExecutor {
 
 impl HostExecutor {
     /// Pool size from `ADAMA_THREADS` / available parallelism; activation
-    /// plan from `ADAMA_ACT_BUDGET` (default: pure remat).
+    /// plan from `ADAMA_ACT_BUDGET` (default: pure remat); SIMD level
+    /// from `ADAMA_SIMD` (default: best the CPU supports).
     pub fn new() -> Self {
         Self::with_plan(pool::default_threads(), MemoryPlan::from_env())
     }
@@ -88,12 +98,22 @@ impl HostExecutor {
         Self::with_plan(threads, MemoryPlan::from_env())
     }
 
-    /// Fully explicit construction: pool size + activation stash plan.
+    /// Explicit pool size + activation stash plan; SIMD level still comes
+    /// from `ADAMA_SIMD`.
     pub fn with_plan(threads: usize, plan: MemoryPlan) -> Self {
+        Self::with_simd(threads, plan, simd::Level::from_env())
+    }
+
+    /// Fully explicit construction: pool size, activation stash plan and
+    /// SIMD dispatch level. Every level is bit-identical (the SIMD layer's
+    /// contract, see [`crate::runtime::simd`]), so the level — like the
+    /// thread count — is a pure performance knob.
+    pub fn with_simd(threads: usize, plan: MemoryPlan, level: simd::Level) -> Self {
         Self {
             calls: Arc::new(AtomicU64::new(0)),
             pool: Arc::new(ThreadPool::new(threads)),
             arena: Arc::new(ActivationArena::new(plan)),
+            simd: level,
         }
     }
 
@@ -101,6 +121,11 @@ impl HostExecutor {
     /// programs).
     pub fn arena(&self) -> &Arc<ActivationArena> {
         &self.arena
+    }
+
+    /// The executor's SIMD dispatch level.
+    pub fn simd(&self) -> simd::Level {
+        self.simd
     }
 }
 
@@ -133,13 +158,13 @@ impl Executor for HostExecutor {
             .split_once('/')
             .with_context(|| format!("host executor: program name '{name}' lacks a group"))?;
         let inner: Box<dyn Program> = if group == "common" {
-            kernels::build(short, &manifest.hyper, self.pool.clone())?
+            kernels::build(short, &manifest.hyper, self.pool.clone(), self.simd)?
         } else if let Some(mlp_name) = group.strip_prefix("mlp_") {
             let cfg = manifest.mlp_config(mlp_name)?;
-            mlp::build(short, &cfg.model, self.pool.clone(), self.arena.clone())?
+            mlp::build(short, &cfg.model, self.pool.clone(), self.arena.clone(), self.simd)?
         } else {
             let cfg = manifest.model_config(group)?;
-            transformer::build(short, &cfg.model, self.pool.clone(), self.arena.clone())?
+            transformer::build(short, &cfg.model, self.pool.clone(), self.arena.clone(), self.simd)?
         };
         Ok(Arc::new(Counted { inner, calls: self.calls.clone() }))
     }
@@ -150,6 +175,10 @@ impl Executor for HostExecutor {
 
     fn threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    fn simd_level(&self) -> Option<simd::Level> {
+        Some(self.simd)
     }
 
     fn memory(&self) -> Option<MemStats> {

@@ -24,11 +24,18 @@
 //! is merged serially afterwards. Each scratch element receives its
 //! contributions from exactly one task with the serial loop's
 //! accumulation order, so outputs are bit-identical at any thread count.
+//! The lane-parallel element-wise stages (probability normalisation, the
+//! weighted value sums and attention VJP axpys, residual adds, embedding
+//! gathers/scatters) additionally dispatch through
+//! [`crate::runtime::simd`], which is bit-exact by contract — only the
+//! order-sensitive reductions (score dots, softmax max/exp sums) and the
+//! transcendental GELU maps stay scalar.
 //!
-//! Every buffer the block programs allocate is registered with the
-//! arena's workspace meter ([`super::actmem::WsMeter`]), so measured
-//! activation bytes reconcile exactly against the
-//! `crate::memmodel::HostBlockDims` predictions.
+//! Every buffer the block **and head** programs allocate is registered
+//! with the arena's workspace meter ([`super::actmem::WsMeter`]), so
+//! measured activation bytes reconcile exactly against the
+//! `crate::memmodel::HostBlockDims` predictions — including the head
+//! logits, the largest single buffer of a step at realistic vocab sizes.
 
 use std::sync::Arc;
 
@@ -39,23 +46,26 @@ use super::math;
 use crate::runtime::exec::{Arg, Program, Value};
 use crate::runtime::manifest::ModelHyper;
 use crate::runtime::pool::ThreadPool;
+use crate::runtime::simd;
 
 pub(super) fn build(
     short: &str,
     h: &ModelHyper,
     pool: Arc<ThreadPool>,
     arena: Arc<ActivationArena>,
+    level: simd::Level,
 ) -> Result<Box<dyn Program>> {
     ensure!(h.heads > 0 && h.hidden % h.heads == 0, "hidden {} not divisible by heads {}", h.hidden, h.heads);
     Ok(match short {
         "embed_fwd" => {
-            Box::new(EmbedFwd { vocab: h.vocab, hidden: h.hidden, pool }) as Box<dyn Program>
+            let (vocab, hidden) = (h.vocab, h.hidden);
+            Box::new(EmbedFwd { vocab, hidden, pool, simd: level }) as Box<dyn Program>
         }
-        "embed_bwd" => Box::new(EmbedBwd { vocab: h.vocab, hidden: h.hidden }),
-        "block_fwd" => Box::new(BlockFwd { heads: h.heads, pool, arena }),
-        "block_bwd" => Box::new(BlockBwd { heads: h.heads, pool, arena }),
-        "head_loss" => Box::new(HeadLoss { pool }),
-        "head_eval" => Box::new(HeadEval { pool }),
+        "embed_bwd" => Box::new(EmbedBwd { vocab: h.vocab, hidden: h.hidden, simd: level }),
+        "block_fwd" => Box::new(BlockFwd { heads: h.heads, pool, arena, simd: level }),
+        "block_bwd" => Box::new(BlockBwd { heads: h.heads, pool, arena, simd: level }),
+        "head_loss" => Box::new(HeadLoss { pool, arena, simd: level }),
+        "head_eval" => Box::new(HeadEval { pool, arena, simd: level }),
         other => bail!("host executor: unknown model program '{other}'"),
     })
 }
@@ -75,6 +85,7 @@ struct EmbedFwd {
     vocab: usize,
     hidden: usize,
     pool: Arc<ThreadPool>,
+    simd: simd::Level,
 }
 
 impl Program for EmbedFwd {
@@ -92,15 +103,15 @@ impl Program for EmbedFwd {
             ensure!((0..v as i32).contains(&tok), "token {tok} out of range 0..{v}");
         }
 
+        let lvl = self.simd;
         let mut x = vec![0.0f32; b * s * h];
-        // one gather row per (batch, position) — row-parallel
+        // one gather row per (batch, position) — row-parallel, lane-
+        // parallel within the row
         self.pool.for_rows(&mut x, h, |rs, orow| {
             let tok = tokens[rs] as usize;
             let erow = &e[tok * h..(tok + 1) * h];
             let prow = &p[(rs % s) * h..(rs % s + 1) * h];
-            for j in 0..h {
-                orow[j] = erow[j] + prow[j];
-            }
+            simd::add(lvl, orow, erow, prow);
         });
         Ok(vec![Value::f32(x, &[b, s, h])?])
     }
@@ -109,6 +120,7 @@ impl Program for EmbedFwd {
 struct EmbedBwd {
     vocab: usize,
     hidden: usize,
+    simd: simd::Level,
 }
 
 impl Program for EmbedBwd {
@@ -120,8 +132,10 @@ impl Program for EmbedBwd {
         ensure!(h == self.hidden, "embed_bwd hidden mismatch");
         ensure!(tokens.len() == b * s, "tokens/dx mismatch");
 
-        // serial: the dE scatter-add races on repeated tokens and is cheap
-        // (O(bs·h)) next to the block backward sweeps.
+        // serial across rows: the dE scatter-add races on repeated tokens
+        // and is cheap (O(bs·h)) next to the block backward sweeps; each
+        // row add is lane-parallel.
+        let lvl = self.simd;
         let v = self.vocab;
         let mut de = vec![0.0f32; v * h];
         let mut dp = vec![0.0f32; s * h];
@@ -131,13 +145,9 @@ impl Program for EmbedBwd {
                 ensure!((0..v as i32).contains(&tok), "token {tok} out of range 0..{v}");
                 let drow = &dx[(bi * s + si) * h..(bi * s + si + 1) * h];
                 let erow = &mut de[tok as usize * h..(tok as usize + 1) * h];
-                for j in 0..h {
-                    erow[j] += drow[j];
-                }
+                simd::add_assign(lvl, erow, drow);
                 let prow = &mut dp[si * h..(si + 1) * h];
-                for j in 0..h {
-                    prow[j] += drow[j];
-                }
+                simd::add_assign(lvl, prow, drow);
             }
         }
         Ok(vec![Value::f32(de, &[v, h])?, Value::f32(dp, &[s, h])?])
@@ -246,6 +256,7 @@ fn stash_key(x: &[f32], p: &BlockParams<'_>, b: usize, s: usize, h: usize) -> u6
 #[allow(clippy::too_many_arguments)]
 fn block_forward(
     pool: &ThreadPool,
+    lvl: simd::Level,
     ws: &mut WsScope<'_>,
     x: &[f32],
     p: &BlockParams<'_>,
@@ -262,11 +273,11 @@ fn block_forward(
 
     let mut hn1 = vec![0.0f32; bs * h];
     ws.add(hn1.len());
-    math::layer_norm(pool, x, p.ln1g, p.ln1b, bs, h, &mut hn1);
+    math::layer_norm(pool, lvl, x, p.ln1g, p.ln1b, bs, h, &mut hn1);
     let mut qkv = vec![0.0f32; bs * w3];
     ws.add(qkv.len());
-    math::matmul(pool, &hn1, p.wqkv, bs, h, w3, &mut qkv);
-    math::add_bias(&mut qkv, p.bqkv);
+    math::matmul(pool, lvl, &hn1, p.wqkv, bs, h, w3, &mut qkv);
+    math::add_bias(lvl, &mut qkv, p.bqkv);
 
     // attention core, parallel over (batch, head, query-row) tasks: task t
     // writes its probs row and its dh-wide head-output row `aoh[t]`; the
@@ -303,15 +314,14 @@ fn block_forward(
             sum += *sc;
         }
         let inv = 1.0 / sum;
-        for (j, &sc) in scores.iter().enumerate() {
-            prow[j] = sc * inv; // j > i stays zero (causal mask)
-        }
-        // weighted value sum into this task's head-output row
+        // j > i stays zero (causal mask); the normalisation is
+        // lane-parallel
+        simd::scale_into(lvl, &mut prow[..=i], &scores, inv);
+        // weighted value sum into this task's head-output row: one
+        // lane-parallel axpy per key position, j ascending
         for (j, &pij) in prow[..=i].iter().enumerate() {
             let vrow = &qkv[(bi * s + j) * w3..(bi * s + j + 1) * w3];
-            for d in 0..dh {
-                orow[d] += pij * vrow[vc + d];
-            }
+            simd::axpy(lvl, orow, &vrow[vc..vc + dh], pij);
         }
     });
     let mut ao = vec![0.0f32; bs * h];
@@ -328,20 +338,22 @@ fn block_forward(
 
     let mut attn = vec![0.0f32; bs * h];
     ws.add(attn.len());
-    math::matmul(pool, &ao, p.wo, bs, h, h, &mut attn);
-    math::add_bias(&mut attn, p.bo);
-    let x1: Vec<f32> = x.iter().zip(&attn).map(|(a, c)| a + c).collect();
+    math::matmul(pool, lvl, &ao, p.wo, bs, h, h, &mut attn);
+    math::add_bias(lvl, &mut attn, p.bo);
+    let mut x1 = vec![0.0f32; bs * h];
     ws.add(x1.len());
+    simd::add(lvl, &mut x1, x, &attn);
 
     let mut hn2 = vec![0.0f32; bs * h];
     ws.add(hn2.len());
-    math::layer_norm(pool, &x1, p.ln2g, p.ln2b, bs, h, &mut hn2);
+    math::layer_norm(pool, lvl, &x1, p.ln2g, p.ln2b, bs, h, &mut hn2);
     let mut m1 = vec![0.0f32; bs * f];
     ws.add(m1.len());
-    math::matmul(pool, &hn2, p.w1, bs, h, f, &mut m1);
-    math::add_bias(&mut m1, p.b1);
+    math::matmul(pool, lvl, &hn2, p.w1, bs, h, f, &mut m1);
+    math::add_bias(lvl, &mut m1, p.b1);
     let mut gm = vec![0.0f32; bs * f];
     ws.add(gm.len());
+    // scalar map on purpose: tanh-GELU is a libm call, not lane-exact
     pool.for_rows(&mut gm, f, |r, row| {
         let mi = &m1[r * f..(r + 1) * f];
         for (o, &u) in row.iter_mut().zip(mi) {
@@ -350,10 +362,11 @@ fn block_forward(
     });
     let mut m2 = vec![0.0f32; bs * h];
     ws.add(m2.len());
-    math::matmul(pool, &gm, p.w2, bs, f, h, &mut m2);
-    math::add_bias(&mut m2, p.b2);
-    let y: Vec<f32> = x1.iter().zip(&m2).map(|(a, c)| a + c).collect();
+    math::matmul(pool, lvl, &gm, p.w2, bs, f, h, &mut m2);
+    math::add_bias(lvl, &mut m2, p.b2);
+    let mut y = vec![0.0f32; bs * h];
     ws.add(y.len());
+    simd::add(lvl, &mut y, &x1, &m2);
 
     FwdState { hn1, qkv, probs, ao, x1, hn2, m1, gm, y }
 }
@@ -363,6 +376,7 @@ fn block_forward(
 #[allow(clippy::too_many_arguments)]
 fn block_backward_remat(
     pool: &ThreadPool,
+    lvl: simd::Level,
     ws: &mut WsScope<'_>,
     x: &[f32],
     dy: &[f32],
@@ -372,8 +386,8 @@ fn block_backward_remat(
     h: usize,
     heads: usize,
 ) -> (Vec<f32>, Vec<Vec<f32>>) {
-    let st = block_forward(pool, ws, x, p, b, s, h, heads);
-    block_backward(pool, ws, x, dy, p, &st, b, s, h, heads)
+    let st = block_forward(pool, lvl, ws, x, p, b, s, h, heads);
+    block_backward(pool, lvl, ws, x, dy, p, &st, b, s, h, heads)
 }
 
 /// Pull back `dy` through a block given its forward state (stashed or
@@ -381,6 +395,7 @@ fn block_backward_remat(
 #[allow(clippy::too_many_arguments)]
 fn block_backward(
     pool: &ThreadPool,
+    lvl: simd::Level,
     ws: &mut WsScope<'_>,
     x: &[f32],
     dy: &[f32],
@@ -404,14 +419,14 @@ fn block_backward(
 
     // m2 = gm @ w2 + b2
     let mut dgm = vec![0.0f32; bs * f];
-    math::matmul_nt(pool, dm2, p.w2, bs, h, f, &mut dgm);
+    math::matmul_nt(pool, lvl, dm2, p.w2, bs, h, f, &mut dgm);
     let mut dw2 = vec![0.0f32; f * h];
-    math::matmul_tn(pool, &st.gm, dm2, bs, f, h, &mut dw2);
+    math::matmul_tn(pool, lvl, &st.gm, dm2, bs, f, h, &mut dw2);
     let mut db2 = vec![0.0f32; h];
     math::col_sums(dm2, bs, h, &mut db2);
     ws.add(dgm.len() + dw2.len() + db2.len());
 
-    // gm = gelu(m1)
+    // gm = gelu(m1) — scalar map (libm tanh in the derivative)
     let mut dm1 = vec![0.0f32; bs * f];
     ws.add(dm1.len());
     pool.for_rows(&mut dm1, f, |r, row| {
@@ -423,9 +438,9 @@ fn block_backward(
 
     // m1 = hn2 @ w1 + b1
     let mut dhn2 = vec![0.0f32; bs * h];
-    math::matmul_nt(pool, &dm1, p.w1, bs, f, h, &mut dhn2);
+    math::matmul_nt(pool, lvl, &dm1, p.w1, bs, f, h, &mut dhn2);
     let mut dw1 = vec![0.0f32; h * f];
-    math::matmul_tn(pool, &st.hn2, &dm1, bs, h, f, &mut dw1);
+    math::matmul_tn(pool, lvl, &st.hn2, &dm1, bs, h, f, &mut dw1);
     let mut db1 = vec![0.0f32; f];
     math::col_sums(&dm1, bs, f, &mut db1);
     ws.add(dhn2.len() + dw1.len() + db1.len());
@@ -434,7 +449,7 @@ fn block_backward(
     let mut dln2g = vec![0.0f32; h];
     let mut dln2b = vec![0.0f32; h];
     ws.add(dln2g.len() + dln2b.len());
-    math::layer_norm_bwd(&st.x1, p.ln2g, &dhn2, bs, h, &mut dx1, &mut dln2g, &mut dln2b);
+    math::layer_norm_bwd(lvl, &st.x1, p.ln2g, &dhn2, bs, h, &mut dx1, &mut dln2g, &mut dln2b);
 
     // x1 = x + attn: residual again
     let mut dx = dx1.clone();
@@ -443,9 +458,9 @@ fn block_backward(
 
     // attn = ao @ wo + bo
     let mut dao = vec![0.0f32; bs * h];
-    math::matmul_nt(pool, &dattn, p.wo, bs, h, h, &mut dao);
+    math::matmul_nt(pool, lvl, &dattn, p.wo, bs, h, h, &mut dao);
     let mut dwo = vec![0.0f32; h * h];
-    math::matmul_tn(pool, &st.ao, &dattn, bs, h, h, &mut dwo);
+    math::matmul_tn(pool, lvl, &st.ao, &dattn, bs, h, h, &mut dwo);
     let mut dbo = vec![0.0f32; h];
     math::col_sums(&dattn, bs, h, &mut dbo);
     ws.add(dao.len() + dwo.len() + dbo.len());
@@ -479,16 +494,22 @@ fn block_backward(
             }
             for j in 0..=i {
                 let ds = prow[j] * (dp[j] - dot); // masked scores: prob 0 ⇒ ds 0
-                for d in 0..dh {
-                    let kjd = st.qkv[(bi * s + j) * w3 + h + hd * dh + d];
-                    let qid = st.qkv[(bi * s + i) * w3 + qc + d];
-                    dq[i * 3 * dh + d] += scale * ds * kjd;
-                    dq[j * 3 * dh + dh + d] += scale * ds * qid;
-                }
-                let pij = prow[j];
-                for d in 0..dh {
-                    dq[j * 3 * dh + 2 * dh + d] += pij * drow[qc + d];
-                }
+                // `scale * ds * x` is left-associative: hoist (scale·ds)
+                // and the per-d updates become lane-parallel axpys into
+                // three disjoint dh-wide scratch segments (q@row i,
+                // k/v@row j) — per-element accumulation order across j
+                // is unchanged
+                let c = scale * ds;
+                let krow = &st.qkv[(bi * s + j) * w3 + h + hd * dh..][..dh];
+                let qrow = &st.qkv[(bi * s + i) * w3 + qc..][..dh];
+                simd::axpy(lvl, &mut dq[i * 3 * dh..i * 3 * dh + dh], krow, c);
+                simd::axpy(lvl, &mut dq[j * 3 * dh + dh..j * 3 * dh + 2 * dh], qrow, c);
+                simd::axpy(
+                    lvl,
+                    &mut dq[j * 3 * dh + 2 * dh..(j + 1) * 3 * dh],
+                    &drow[qc..qc + dh],
+                    prow[j],
+                );
             }
         }
     });
@@ -509,9 +530,9 @@ fn block_backward(
 
     // qkv = hn1 @ wqkv + bqkv
     let mut dhn1 = vec![0.0f32; bs * h];
-    math::matmul_nt(pool, &dqkv, p.wqkv, bs, w3, h, &mut dhn1);
+    math::matmul_nt(pool, lvl, &dqkv, p.wqkv, bs, w3, h, &mut dhn1);
     let mut dwqkv = vec![0.0f32; h * w3];
-    math::matmul_tn(pool, &st.hn1, &dqkv, bs, h, w3, &mut dwqkv);
+    math::matmul_tn(pool, lvl, &st.hn1, &dqkv, bs, h, w3, &mut dwqkv);
     let mut dbqkv = vec![0.0f32; w3];
     math::col_sums(&dqkv, bs, w3, &mut dbqkv);
     ws.add(dhn1.len() + dwqkv.len() + dbqkv.len());
@@ -520,7 +541,7 @@ fn block_backward(
     let mut dln1g = vec![0.0f32; h];
     let mut dln1b = vec![0.0f32; h];
     ws.add(dln1g.len() + dln1b.len());
-    math::layer_norm_bwd(x, p.ln1g, &dhn1, bs, h, &mut dx, &mut dln1g, &mut dln1b);
+    math::layer_norm_bwd(lvl, x, p.ln1g, &dhn1, bs, h, &mut dx, &mut dln1g, &mut dln1b);
 
     (
         dx,
@@ -534,6 +555,7 @@ struct BlockFwd {
     heads: usize,
     pool: Arc<ThreadPool>,
     arena: Arc<ActivationArena>,
+    simd: simd::Level,
 }
 
 impl Program for BlockFwd {
@@ -543,7 +565,7 @@ impl Program for BlockFwd {
         let x = args[0].f32()?;
         let p = unpack_block(args, 1, h)?;
         let mut ws = self.arena.ws().scope();
-        let mut st = block_forward(&self.pool, &mut ws, x, &p, b, s, h, self.heads);
+        let mut st = block_forward(&self.pool, self.simd, &mut ws, x, &p, b, s, h, self.heads);
         let y = std::mem::take(&mut st.y);
         if self.arena.enabled() {
             let key = stash_key(x, &p, b, s, h);
@@ -557,6 +579,7 @@ struct BlockBwd {
     heads: usize,
     pool: Arc<ThreadPool>,
     arena: Arc<ActivationArena>,
+    simd: simd::Level,
 }
 
 impl Program for BlockBwd {
@@ -588,12 +611,14 @@ impl Program for BlockBwd {
                 // physically live until this call returns — count it as
                 // workspace so measured bytes track real memory
                 ws.add_bytes(st.bytes());
-                block_backward(&self.pool, &mut ws, x, dy, &p, &st, b, s, h, self.heads)
+                let (pool, lvl) = (&self.pool, self.simd);
+                block_backward(pool, lvl, &mut ws, x, dy, &p, &st, b, s, h, self.heads)
             }
             // miss (remat default, evicted, or forward-only leftover):
             // recompute the forward in place
             None => {
-                block_backward_remat(&self.pool, &mut ws, x, dy, &p, b, s, h, self.heads)
+                let (pool, lvl) = (&self.pool, self.simd);
+                block_backward_remat(pool, lvl, &mut ws, x, dy, &p, b, s, h, self.heads)
             }
         };
 
@@ -626,12 +651,20 @@ impl Program for BlockBwd {
 
 struct HeadLoss {
     pool: Arc<ThreadPool>,
+    arena: Arc<ActivationArena>,
+    simd: simd::Level,
 }
 
 /// Shared head plumbing: logits + mean-token cross-entropy.
-/// Returns (loss, dlogits_unscaled, ncorrect, dims).
+/// Returns (loss, dlogits_unscaled, ncorrect, dims). The logits are the
+/// largest single buffer of a training step at realistic vocab sizes, so
+/// both head buffers are registered with the arena's workspace meter —
+/// `memmodel::HostBlockDims::head_*_workspace_bytes` predicts exactly
+/// these registrations.
 fn head_common(
     pool: &ThreadPool,
+    lvl: simd::Level,
+    ws: &mut WsScope<'_>,
     args: &[Arg<'_>],
 ) -> Result<(f32, Vec<f32>, i32, (usize, usize, usize, usize))> {
     ensure!(args.len() == 3, "head program takes (x, W, labels)");
@@ -647,29 +680,32 @@ fn head_common(
     }
     let bs = b * s;
     let mut logits = vec![0.0f32; bs * v];
-    math::matmul(pool, x, w, bs, h, v, &mut logits);
+    ws.add(logits.len());
+    math::matmul(pool, lvl, x, w, bs, h, v, &mut logits);
     let mut dlogits = vec![0.0f32; bs * v];
-    let (nll, ncorrect) = math::softmax_xent(pool, &logits, labels, bs, v, &mut dlogits);
+    ws.add(dlogits.len());
+    let (nll, ncorrect) = math::softmax_xent(pool, lvl, &logits, labels, bs, v, &mut dlogits);
     let loss = (nll / bs as f64) as f32;
     Ok((loss, dlogits, ncorrect, (b, s, h, v)))
 }
 
 impl Program for HeadLoss {
     fn run(&self, args: &[Arg<'_>]) -> Result<Vec<Value>> {
-        let (loss, mut dlogits, _nc, (b, s, h, v)) = head_common(&self.pool, args)?;
+        let lvl = self.simd;
+        let mut ws = self.arena.ws().scope();
+        let (loss, mut dlogits, _nc, (b, s, h, v)) = head_common(&self.pool, lvl, &mut ws, args)?;
         let x = args[0].f32()?;
         let w = args[1].f32()?;
         let bs = b * s;
         let inv = 1.0 / bs as f32;
         self.pool.for_spans(&mut dlogits, |_, span| {
-            for d in span.iter_mut() {
-                *d *= inv;
-            }
+            simd::scale(lvl, span, inv);
         });
         let mut dx = vec![0.0f32; bs * h];
-        math::matmul_nt(&self.pool, &dlogits, w, bs, v, h, &mut dx);
+        math::matmul_nt(&self.pool, lvl, &dlogits, w, bs, v, h, &mut dx);
         let mut dw = vec![0.0f32; h * v];
-        math::matmul_tn(&self.pool, x, &dlogits, bs, h, v, &mut dw);
+        math::matmul_tn(&self.pool, lvl, x, &dlogits, bs, h, v, &mut dw);
+        ws.add(dx.len() + dw.len());
         Ok(vec![
             Value::scalar_f32(loss),
             Value::f32(dx, &[b, s, h])?,
@@ -680,11 +716,14 @@ impl Program for HeadLoss {
 
 struct HeadEval {
     pool: Arc<ThreadPool>,
+    arena: Arc<ActivationArena>,
+    simd: simd::Level,
 }
 
 impl Program for HeadEval {
     fn run(&self, args: &[Arg<'_>]) -> Result<Vec<Value>> {
-        let (loss, _dl, ncorrect, _dims) = head_common(&self.pool, args)?;
+        let mut ws = self.arena.ws().scope();
+        let (loss, _dl, ncorrect, _dims) = head_common(&self.pool, self.simd, &mut ws, args)?;
         Ok(vec![Value::scalar_f32(loss), Value::scalar_i32(ncorrect)])
     }
 }
@@ -699,6 +738,12 @@ mod tests {
     use crate::runtime::hostexec::actmem::{MemoryPlan, WsMeter};
     use crate::tensor::Rng;
 
+    /// SIMD level for the tests: from `ADAMA_SIMD`, so the CI matrix
+    /// exercises both the scalar and vector paths through these suites.
+    fn lv() -> simd::Level {
+        simd::Level::from_env()
+    }
+
     /// Forward with a throwaway workspace meter (signature helper).
     fn fwd(
         pool: &ThreadPool,
@@ -710,7 +755,7 @@ mod tests {
         heads: usize,
     ) -> FwdState {
         let m = WsMeter::default();
-        block_forward(pool, &mut m.scope(), x, p, b, s, h, heads)
+        block_forward(pool, lv(), &mut m.scope(), x, p, b, s, h, heads)
     }
 
     /// Remat backward with a throwaway workspace meter.
@@ -726,7 +771,7 @@ mod tests {
         heads: usize,
     ) -> (Vec<f32>, Vec<Vec<f32>>) {
         let m = WsMeter::default();
-        block_backward_remat(pool, &mut m.scope(), x, dy, p, b, s, h, heads)
+        block_backward_remat(pool, lv(), &mut m.scope(), x, dy, p, b, s, h, heads)
     }
 
     const B: usize = 2;
@@ -918,7 +963,8 @@ mod tests {
         let w = randvec(10, h * v, 0.7);
         let labels: Vec<i32> = vec![1, 4];
 
-        let head = HeadLoss { pool: tp() };
+        let arena = Arc::new(ActivationArena::new(MemoryPlan::remat()));
+        let head = HeadLoss { pool: tp(), arena, simd: lv() };
         let run = |x: &[f32], w: &[f32]| -> (f32, Vec<Value>) {
             let out = head
                 .run(&[
@@ -959,7 +1005,7 @@ mod tests {
         let e = randvec(11, vocab * hidden, 0.5);
         let p = randvec(12, s * hidden, 0.5);
 
-        let fwd = EmbedFwd { vocab, hidden, pool: tp() };
+        let fwd = EmbedFwd { vocab, hidden, pool: tp(), simd: lv() };
         let out = fwd
             .run(&[
                 Arg::I32(&tokens, &[b, s]),
@@ -975,7 +1021,7 @@ mod tests {
 
         // embed_bwd: scatter-add over tokens, batch-sum over positions
         let dx = randvec(13, b * s * hidden, 1.0);
-        let bwd = EmbedBwd { vocab, hidden };
+        let bwd = EmbedBwd { vocab, hidden, simd: lv() };
         let out = bwd
             .run(&[Arg::I32(&tokens, &[b, s]), Arg::F32(&dx, &[b, s, hidden])])
             .unwrap();
@@ -1019,7 +1065,9 @@ mod tests {
             args.push(Arg::F32(t, sh));
         }
         let arena = Arc::new(ActivationArena::new(MemoryPlan::remat()));
-        let out = BlockBwd { heads: HEADS, pool: tp(), arena: arena.clone() }.run(&args).unwrap();
+        let out = BlockBwd { heads: HEADS, pool: tp(), arena: arena.clone(), simd: lv() }
+            .run(&args)
+            .unwrap();
         assert_eq!(out.len(), 13);
         assert_eq!(out[0].shape(), &[B, S, H]);
         for (o, sh) in out[1..].iter().zip(shapes.iter()) {
@@ -1028,7 +1076,7 @@ mod tests {
 
         let fwd_args: Vec<Arg<'_>> =
             args.iter().enumerate().filter(|(i, _)| *i != 1).map(|(_, a)| *a).collect();
-        let out = BlockFwd { heads: HEADS, pool: tp(), arena }.run(&fwd_args).unwrap();
+        let out = BlockFwd { heads: HEADS, pool: tp(), arena, simd: lv() }.run(&fwd_args).unwrap();
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].shape(), &[B, S, H]);
     }
@@ -1076,15 +1124,15 @@ mod tests {
         // remat reference
         let remat = Arc::new(ActivationArena::new(MemoryPlan::remat()));
         let ref_out =
-            BlockBwd { heads: HEADS, pool: tp(), arena: remat }.run(&bwd_args).unwrap();
+            BlockBwd { heads: HEADS, pool: tp(), arena: remat, simd: lv() }.run(&bwd_args).unwrap();
 
         // stash path: forward populates the arena, backward consumes it
         let arena = Arc::new(ActivationArena::new(MemoryPlan::unlimited()));
-        let y = BlockFwd { heads: HEADS, pool: tp(), arena: arena.clone() }
+        let y = BlockFwd { heads: HEADS, pool: tp(), arena: arena.clone(), simd: lv() }
             .run(&fwd_args)
             .unwrap();
         assert_eq!(arena.stats().stashed, 1, "forward must stash");
-        let stash_out = BlockBwd { heads: HEADS, pool: tp(), arena: arena.clone() }
+        let stash_out = BlockBwd { heads: HEADS, pool: tp(), arena: arena.clone(), simd: lv() }
             .run(&bwd_args)
             .unwrap();
         let s = arena.stats();
@@ -1119,12 +1167,16 @@ mod tests {
         let (fwd_args, bwd_args) = block_args(&x, &dy, &p);
 
         let arena = Arc::new(ActivationArena::new(MemoryPlan::unlimited()));
-        BlockFwd { heads: HEADS, pool: tp(), arena: arena.clone() }.run(&fwd_args).unwrap();
+        BlockFwd { heads: HEADS, pool: tp(), arena: arena.clone(), simd: lv() }
+            .run(&fwd_args)
+            .unwrap();
         let s1 = arena.stats();
         assert_eq!(s1.workspace_peak_bytes, dims.fwd_workspace_bytes());
         assert_eq!(s1.stash_live_bytes, dims.stash_entry_bytes());
 
-        BlockBwd { heads: HEADS, pool: tp(), arena: arena.clone() }.run(&bwd_args).unwrap();
+        BlockBwd { heads: HEADS, pool: tp(), arena: arena.clone(), simd: lv() }
+            .run(&bwd_args)
+            .unwrap();
         let s2 = arena.stats();
         assert_eq!(
             s2.workspace_peak_bytes,
@@ -1134,8 +1186,40 @@ mod tests {
         assert_eq!(s2.workspace_live_bytes, 0);
 
         let remat = Arc::new(ActivationArena::new(MemoryPlan::remat()));
-        BlockBwd { heads: HEADS, pool: tp(), arena: remat.clone() }.run(&bwd_args).unwrap();
+        BlockBwd { heads: HEADS, pool: tp(), arena: remat.clone(), simd: lv() }
+            .run(&bwd_args)
+            .unwrap();
         assert_eq!(remat.stats().workspace_peak_bytes, dims.remat_bwd_workspace_bytes());
+    }
+
+    #[test]
+    fn head_workspace_accounting_matches_memmodel() {
+        // PR-3 follow-up: the head logits (largest single buffer at
+        // realistic vocab sizes) are metered through the actmem arena and
+        // predicted exactly by memmodel.
+        use crate::memmodel::HostBlockDims;
+        let dims = HostBlockDims {
+            batch: B as u64,
+            seq: S as u64,
+            hidden: H as u64,
+            heads: HEADS as u64,
+            ffn: F as u64,
+        };
+        let v = 5usize;
+        let x = randvec(51, B * S * H, 0.8);
+        let w = randvec(52, H * v, 0.6);
+        let labels: Vec<i32> = (0..B * S).map(|i| (i % v) as i32).collect();
+        let args = [Arg::F32(&x, &[B, S, H]), Arg::F32(&w, &[H, v]), Arg::I32(&labels, &[B, S])];
+
+        let arena = Arc::new(ActivationArena::new(MemoryPlan::remat()));
+        HeadLoss { pool: tp(), arena: arena.clone(), simd: lv() }.run(&args).unwrap();
+        let stats = arena.stats();
+        assert_eq!(stats.workspace_peak_bytes, dims.head_loss_workspace_bytes(v as u64));
+        assert_eq!(stats.workspace_live_bytes, 0, "head workspace must drain");
+
+        let arena = Arc::new(ActivationArena::new(MemoryPlan::remat()));
+        HeadEval { pool: tp(), arena: arena.clone(), simd: lv() }.run(&args).unwrap();
+        assert_eq!(arena.stats().workspace_peak_bytes, dims.head_eval_workspace_bytes(v as u64));
     }
 
     #[test]
@@ -1145,15 +1229,18 @@ mod tests {
         let p = Params::random(33);
         let arena = Arc::new(ActivationArena::new(MemoryPlan::unlimited()));
         let (fwd_args, _) = block_args(&x, &dy, &p);
-        BlockFwd { heads: HEADS, pool: tp(), arena: arena.clone() }.run(&fwd_args).unwrap();
+        BlockFwd { heads: HEADS, pool: tp(), arena: arena.clone(), simd: lv() }
+            .run(&fwd_args)
+            .unwrap();
 
         // different x: the stashed entry must NOT be consumed
         let x2 = randvec(34, B * S * H, 0.8);
         let (_, bwd_args2) = block_args(&x2, &dy, &p);
         let remat = Arc::new(ActivationArena::new(MemoryPlan::remat()));
-        let want =
-            BlockBwd { heads: HEADS, pool: tp(), arena: remat }.run(&bwd_args2).unwrap();
-        let got = BlockBwd { heads: HEADS, pool: tp(), arena: arena.clone() }
+        let want = BlockBwd { heads: HEADS, pool: tp(), arena: remat, simd: lv() }
+            .run(&bwd_args2)
+            .unwrap();
+        let got = BlockBwd { heads: HEADS, pool: tp(), arena: arena.clone(), simd: lv() }
             .run(&bwd_args2)
             .unwrap();
         let s = arena.stats();

@@ -12,6 +12,10 @@
 //!   run on the in-tree deterministic thread pool ([`pool`]); thread
 //!   count comes from `ADAMA_THREADS` (default: available parallelism)
 //!   and results are bit-for-bit identical at any setting.
+//!   `ADAMA_SIMD=auto|avx2|sse2|scalar` picks the [`simd`] dispatch
+//!   level for the vectorised hot loops (default `auto` = best the CPU
+//!   supports); every level is bit-for-bit identical to scalar, so this
+//!   too is a pure performance knob.
 //!   `ADAMA_ACT_BUDGET` (or [`Library::host_with_plan`]) sets the
 //!   activation stash budget: `0`/unset = per-layer remat (default),
 //!   `<n>[k|m|g]` = stash under a byte cap, `unlimited` = always stash —
@@ -28,6 +32,7 @@ mod manifest;
 #[cfg(feature = "pjrt")]
 mod pjrt;
 pub mod pool;
+pub mod simd;
 
 pub use exec::{
     copy_chunk, copy_into_f32, lit_f32, lit_i32, lit_scalar_f32, scalar_f32, scalar_i32,
@@ -36,6 +41,7 @@ pub use exec::{
 pub use hostexec::actmem::{ActBudget, MemoryPlan};
 pub use hostexec::HostExecutor;
 pub use pool::ThreadPool;
+pub use simd::Level as SimdLevel;
 pub use manifest::{
     ArtifactEntry, Hyper as ManifestHyper, Manifest, MlpConfigEntry, MlpHyper, ModelConfigEntry,
     ModelHyper, TensorSpec,
@@ -78,10 +84,21 @@ impl Library {
     /// [`Library::host_with_threads`] with an explicit activation stash
     /// plan (the API twin of `ADAMA_ACT_BUDGET`): the stash-vs-remat
     /// tests and benches construct remat/budgeted/unlimited libraries
-    /// side by side with this.
+    /// side by side with this. SIMD level still comes from `ADAMA_SIMD`.
     pub fn host_with_plan(threads: usize, plan: MemoryPlan) -> Arc<Self> {
         Self::with_executor(
             Arc::new(HostExecutor::with_plan(threads, plan)),
+            Manifest::builtin(),
+        )
+    }
+
+    /// Fully explicit host library: pool size, activation stash plan and
+    /// SIMD dispatch level (the API twin of `ADAMA_SIMD`) — the SIMD
+    /// parity tests and the `perf_microbench` SIMD-vs-scalar rows
+    /// construct scalar/vector libraries side by side with this.
+    pub fn host_with_simd(threads: usize, plan: MemoryPlan, level: simd::Level) -> Arc<Self> {
+        Self::with_executor(
+            Arc::new(HostExecutor::with_simd(threads, plan, level)),
             Manifest::builtin(),
         )
     }
@@ -110,8 +127,11 @@ impl Library {
         if self.executor.threads() == threads && plan == MemoryPlan::remat() {
             return self.clone();
         }
+        // forked ranks keep the parent's SIMD dispatch level, so a rank
+        // fork is bit-identical to (and as fast as) the parent executor
+        let level = self.executor.simd_level().unwrap_or_else(simd::Level::from_env);
         Self::with_executor(
-            Arc::new(HostExecutor::with_plan(threads, plan)),
+            Arc::new(HostExecutor::with_simd(threads, plan, level)),
             self.manifest.clone(),
         )
     }

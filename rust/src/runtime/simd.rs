@@ -1,0 +1,1110 @@
+//! Runtime-dispatched SIMD kernels for the host executor's element-wise
+//! hot loops — **bit-for-bit identical** to the scalar reference at every
+//! dispatch level.
+//!
+//! The host executor's dominant cost under the AdamA micro-batch loop is
+//! a family of embarrassingly lane-parallel f32 sweeps: the chunked
+//! optimizer kernels (`adama_acc`, `adam_update`, ...), the matmul inner
+//! loops, layer-norm's normalise step and the element-wise stages of
+//! softmax/attention. This module implements them once, generically over
+//! a [`Lanes`] block abstraction, with `core::arch` AVX2/SSE2
+//! instantiations selected at runtime (`is_x86_feature_detected!`) and a
+//! portable scalar instantiation that *is* the reference semantics.
+//!
+//! ## The bit-exactness contract
+//!
+//! Every function here must return exactly the bits the scalar reference
+//! (the plain loops in [`crate::runtime::hostexec::kernels`], equal to
+//! dispatching at [`Level::Scalar`]) returns, for any input and any lane
+//! width. The rules that make this possible:
+//!
+//! * vectorise only **across independent output elements** — never fold
+//!   a reduction (dot product, row mean, NLL sum) into lanes, because
+//!   that reassociates floating-point addition;
+//! * keep each output element's expression tree identical to the scalar
+//!   code: same operations, same order, same rounding points;
+//! * use only IEEE-754 correctly-rounded single operations (`add`,
+//!   `sub`, `mul`, `div`, `sqrt`) — **no FMA contraction** (the scalar
+//!   code does not contract) and no approximate `rcpps`/`rsqrtps`;
+//! * sweep the remainder (`len % WIDTH`) with the literal scalar
+//!   expressions.
+//!
+//! Under these rules an SSE2/AVX2 lane block computes exactly what
+//! `WIDTH` independent scalar iterations compute, so the determinism
+//! suite, the backend-parity suite and the actstash bit-identity tests
+//! pass unmodified at any `ADAMA_SIMD` setting —
+//! `rust/tests/simd_parity.rs` sweeps every kernel × dispatch level ×
+//! thread count at 0 ULP, including remainder-length slices. (The one
+//! caveat: NaN *payload* propagation follows whatever the hardware does
+//! for the chosen operand order, as it already did for the scalar code.)
+//!
+//! ## Dispatch
+//!
+//! [`Level`] is resolved once per executor from `ADAMA_SIMD`
+//! (`auto|avx2|sse2|scalar`, default `auto` = the best level the CPU
+//! reports). Requests the CPU cannot honour, and unparseable values,
+//! fall back to detection — never a panic on a bad env var. Non-x86_64
+//! targets always dispatch scalar. [`crate::runtime::Library`] threads
+//! the level through [`crate::runtime::hostexec::HostExecutor`] into
+//! every program.
+//!
+//! ## Adding a new ISA
+//!
+//! 1. add a [`Level`] variant and wire it through [`detect`],
+//!    [`Level::parse`] and [`Level::supported`];
+//! 2. implement [`Lanes`] for the new register type: `WIDTH`, unaligned
+//!    `load`/`store`, `splat`, and the five exact ops — they must be the
+//!    ISA's IEEE correctly-rounded instructions, with FMA left unused;
+//! 3. add a `#[target_feature]` wrapper arm to the `dispatch!` macro
+//!    (gate it on the runtime detection check exactly like `avx2`);
+//! 4. run `rust/tests/simd_parity.rs` — the 0-ULP sweep is the gate, and
+//!    `cargo bench --bench perf_microbench` must show the new level at
+//!    least matching scalar.
+
+/// SIMD dispatch level for the host executor's vector kernels.
+///
+/// `Scalar` is the reference semantics; `Sse2`/`Avx2` are bit-identical
+/// accelerations (see the module docs for the contract). Construct via
+/// [`Level::from_env`] / [`Level::parse`] / [`detect`] — the kernel
+/// entry points re-check CPU support at dispatch time, so even a
+/// hand-constructed unsupported level degrades safely instead of
+/// executing unavailable instructions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Level {
+    /// Plain scalar loops — the reference semantics, always available.
+    Scalar,
+    /// 128-bit `core::arch` lanes (4 × f32). Baseline on x86_64.
+    Sse2,
+    /// 256-bit `core::arch` lanes (8 × f32), runtime-detected.
+    Avx2,
+}
+
+/// Best level the running CPU supports (`Scalar` off x86_64).
+pub fn detect() -> Level {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            Level::Avx2
+        } else {
+            // SSE2 is part of the x86_64 baseline
+            Level::Sse2
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        Level::Scalar
+    }
+}
+
+impl Level {
+    /// Whether the running CPU can execute this level.
+    pub fn supported(self) -> bool {
+        match self {
+            Level::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Level::Sse2 => true,
+            #[cfg(target_arch = "x86_64")]
+            Level::Avx2 => is_x86_feature_detected!("avx2"),
+            #[cfg(not(target_arch = "x86_64"))]
+            _ => false,
+        }
+    }
+
+    /// Resolve an `ADAMA_SIMD` value: `scalar`/`sse2`/`avx2` pin the
+    /// level (clamped to what the CPU supports), `auto`, unset, empty or
+    /// unparseable values detect the best level. Never panics.
+    pub fn parse(spec: Option<&str>) -> Level {
+        let req = match spec.map(str::trim) {
+            Some(s) if !s.is_empty() => s.to_ascii_lowercase(),
+            _ => return detect(),
+        };
+        let want = match req.as_str() {
+            "scalar" => Level::Scalar,
+            "sse2" => Level::Sse2,
+            "avx2" => Level::Avx2,
+            _ => return detect(), // incl. "auto"
+        };
+        if want.supported() {
+            want
+        } else {
+            detect()
+        }
+    }
+
+    /// Level from the `ADAMA_SIMD` environment variable.
+    pub fn from_env() -> Level {
+        Self::parse(std::env::var("ADAMA_SIMD").ok().as_deref())
+    }
+
+    /// Stable lower-case name (the `ADAMA_SIMD` spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Scalar => "scalar",
+            Level::Sse2 => "sse2",
+            Level::Avx2 => "avx2",
+        }
+    }
+
+    /// Every level the running CPU supports, scalar first — the sweep
+    /// set for parity tests and benches.
+    pub fn all_supported() -> Vec<Level> {
+        [Level::Scalar, Level::Sse2, Level::Avx2].into_iter().filter(|l| l.supported()).collect()
+    }
+}
+
+/// A block of `WIDTH` f32 lanes with exactly-rounded element-wise ops.
+///
+/// Implementations must make every operation behave as `WIDTH`
+/// independent scalar f32 operations (IEEE-754 correctly rounded, no
+/// FMA, no approximations) — that property is what lets the generic
+/// kernel bodies below be bit-identical across instantiations. See the
+/// module docs for the full contract and how to add an ISA.
+pub trait Lanes: Copy {
+    /// Lanes per block.
+    const WIDTH: usize;
+
+    /// Load `WIDTH` consecutive f32s from `src` (unaligned).
+    ///
+    /// # Safety
+    /// `src` must be valid for reading `WIDTH` consecutive f32s.
+    unsafe fn load(src: *const f32) -> Self;
+
+    /// Store `WIDTH` consecutive f32s to `dst` (unaligned).
+    ///
+    /// # Safety
+    /// `dst` must be valid for writing `WIDTH` consecutive f32s.
+    unsafe fn store(self, dst: *mut f32);
+
+    /// Broadcast a scalar into every lane.
+    fn splat(x: f32) -> Self;
+
+    fn add(self, o: Self) -> Self;
+    fn sub(self, o: Self) -> Self;
+    fn mul(self, o: Self) -> Self;
+    fn div(self, o: Self) -> Self;
+    fn sqrt(self) -> Self;
+}
+
+/// One f32 "lane block": the portable reference instantiation.
+#[derive(Clone, Copy)]
+struct Scalar(f32);
+
+impl Lanes for Scalar {
+    const WIDTH: usize = 1;
+
+    #[inline(always)]
+    unsafe fn load(src: *const f32) -> Self {
+        Scalar(*src)
+    }
+
+    #[inline(always)]
+    unsafe fn store(self, dst: *mut f32) {
+        *dst = self.0;
+    }
+
+    #[inline(always)]
+    fn splat(x: f32) -> Self {
+        Scalar(x)
+    }
+
+    #[inline(always)]
+    fn add(self, o: Self) -> Self {
+        Scalar(self.0 + o.0)
+    }
+
+    #[inline(always)]
+    fn sub(self, o: Self) -> Self {
+        Scalar(self.0 - o.0)
+    }
+
+    #[inline(always)]
+    fn mul(self, o: Self) -> Self {
+        Scalar(self.0 * o.0)
+    }
+
+    #[inline(always)]
+    fn div(self, o: Self) -> Self {
+        Scalar(self.0 / o.0)
+    }
+
+    #[inline(always)]
+    fn sqrt(self) -> Self {
+        Scalar(self.0.sqrt())
+    }
+}
+
+// `unused_unsafe` allowance: on toolchains where the arithmetic
+// intrinsics are safe-to-call (target feature statically enabled) the
+// `unsafe` blocks below would warn; older toolchains require them.
+#[cfg(target_arch = "x86_64")]
+#[allow(unused_unsafe)]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    use super::Lanes;
+
+    /// 4 × f32 SSE2 lanes (`__m128`).
+    #[derive(Clone, Copy)]
+    pub(super) struct Sse2(__m128);
+
+    impl Lanes for Sse2 {
+        const WIDTH: usize = 4;
+
+        #[inline(always)]
+        unsafe fn load(src: *const f32) -> Self {
+            Sse2(unsafe { _mm_loadu_ps(src) })
+        }
+
+        #[inline(always)]
+        unsafe fn store(self, dst: *mut f32) {
+            unsafe { _mm_storeu_ps(dst, self.0) }
+        }
+
+        #[inline(always)]
+        fn splat(x: f32) -> Self {
+            Sse2(unsafe { _mm_set1_ps(x) })
+        }
+
+        #[inline(always)]
+        fn add(self, o: Self) -> Self {
+            Sse2(unsafe { _mm_add_ps(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn sub(self, o: Self) -> Self {
+            Sse2(unsafe { _mm_sub_ps(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn mul(self, o: Self) -> Self {
+            Sse2(unsafe { _mm_mul_ps(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn div(self, o: Self) -> Self {
+            Sse2(unsafe { _mm_div_ps(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn sqrt(self) -> Self {
+            Sse2(unsafe { _mm_sqrt_ps(self.0) })
+        }
+    }
+
+    /// 8 × f32 AVX lanes (`__m256`), dispatched under the avx2 check.
+    #[derive(Clone, Copy)]
+    pub(super) struct Avx2(__m256);
+
+    impl Lanes for Avx2 {
+        const WIDTH: usize = 8;
+
+        #[inline(always)]
+        unsafe fn load(src: *const f32) -> Self {
+            Avx2(unsafe { _mm256_loadu_ps(src) })
+        }
+
+        #[inline(always)]
+        unsafe fn store(self, dst: *mut f32) {
+            unsafe { _mm256_storeu_ps(dst, self.0) }
+        }
+
+        #[inline(always)]
+        fn splat(x: f32) -> Self {
+            Avx2(unsafe { _mm256_set1_ps(x) })
+        }
+
+        #[inline(always)]
+        fn add(self, o: Self) -> Self {
+            Avx2(unsafe { _mm256_add_ps(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn sub(self, o: Self) -> Self {
+            Avx2(unsafe { _mm256_sub_ps(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn mul(self, o: Self) -> Self {
+            Avx2(unsafe { _mm256_mul_ps(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn div(self, o: Self) -> Self {
+            Avx2(unsafe { _mm256_div_ps(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn sqrt(self) -> Self {
+            Avx2(unsafe { _mm256_sqrt_ps(self.0) })
+        }
+    }
+}
+
+/// Generate the public runtime-dispatched entry point for one generic
+/// kernel body: `$name(level, args...)` monomorphises `$body` at the
+/// requested [`Level`], re-checking CPU support so an unsupported level
+/// degrades to the next one down instead of executing missing
+/// instructions. New ISAs add an arm here.
+macro_rules! dispatch {
+    ($(#[$meta:meta])* $name:ident => $body:ident ( $($arg:ident : $ty:ty),* $(,)? )) => {
+        $(#[$meta])*
+        #[allow(clippy::too_many_arguments)]
+        pub fn $name(level: Level, $($arg: $ty),*) {
+            #[cfg(target_arch = "x86_64")]
+            {
+                #[allow(clippy::too_many_arguments)]
+                #[target_feature(enable = "sse2")]
+                unsafe fn sse2($($arg: $ty),*) {
+                    $body::<x86::Sse2>($($arg),*)
+                }
+                #[allow(clippy::too_many_arguments)]
+                #[target_feature(enable = "avx2")]
+                unsafe fn avx2($($arg: $ty),*) {
+                    $body::<x86::Avx2>($($arg),*)
+                }
+                match level {
+                    // SAFETY: avx2 is gated on runtime CPUID detection
+                    // and sse2 is part of the x86_64 baseline, so the
+                    // target-feature code only runs on silicon that
+                    // implements it.
+                    Level::Avx2 if is_x86_feature_detected!("avx2") => {
+                        return unsafe { avx2($($arg),*) };
+                    }
+                    Level::Sse2 | Level::Avx2 => return unsafe { sse2($($arg),*) },
+                    Level::Scalar => {}
+                }
+            }
+            let _ = level;
+            $body::<Scalar>($($arg),*)
+        }
+    };
+}
+
+// ---------------------------------------------------------------------------
+// generic kernel bodies
+//
+// Each body is the scalar reference loop, restated once over `L: Lanes`
+// with a literal-scalar remainder sweep. Expression trees (operation
+// order, rounding points) are kept EXACTLY as in
+// `runtime::hostexec::kernels` / `runtime::hostexec::math` — that
+// correspondence is the bit-exactness contract, locked down by
+// `rust/tests/simd_parity.rs`.
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+fn adama_acc_g<L: Lanes>(m: &mut [f32], v: &mut [f32], g: &[f32], gscale: f32, b1: f32, b2: f32) {
+    let n = m.len();
+    debug_assert!(v.len() == n && g.len() == n);
+    let c1 = L::splat(1.0 - b1);
+    let c2 = L::splat(1.0 - b2);
+    let gs = L::splat(gscale);
+    let mut i = 0usize;
+    while i + L::WIDTH <= n {
+        // SAFETY: `i + WIDTH <= n` bounds every lane access below.
+        unsafe {
+            let sg = L::load(g.as_ptr().add(i)).mul(gs);
+            L::load(m.as_ptr().add(i)).add(c1.mul(sg)).store(m.as_mut_ptr().add(i));
+            L::load(v.as_ptr().add(i)).add(c2.mul(sg).mul(sg)).store(v.as_mut_ptr().add(i));
+        }
+        i += L::WIDTH;
+    }
+    while i < n {
+        let sg = g[i] * gscale;
+        m[i] += (1.0 - b1) * sg;
+        v[i] += (1.0 - b2) * sg * sg;
+        i += 1;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn adama_decay_acc_g<L: Lanes>(
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    gscale: f32,
+    ms: f32,
+    vs: f32,
+    b1: f32,
+    b2: f32,
+) {
+    let n = m.len();
+    debug_assert!(v.len() == n && g.len() == n);
+    let c1 = L::splat(1.0 - b1);
+    let c2 = L::splat(1.0 - b2);
+    let gs = L::splat(gscale);
+    let msv = L::splat(ms);
+    let vsv = L::splat(vs);
+    let mut i = 0usize;
+    while i + L::WIDTH <= n {
+        // SAFETY: `i + WIDTH <= n` bounds every lane access below.
+        unsafe {
+            let sg = L::load(g.as_ptr().add(i)).mul(gs);
+            let mv = msv.mul(L::load(m.as_ptr().add(i))).add(c1.mul(sg));
+            mv.store(m.as_mut_ptr().add(i));
+            let vv = vsv.mul(L::load(v.as_ptr().add(i))).add(c2.mul(sg).mul(sg));
+            vv.store(v.as_mut_ptr().add(i));
+        }
+        i += L::WIDTH;
+    }
+    while i < n {
+        let sg = g[i] * gscale;
+        m[i] = ms * m[i] + (1.0 - b1) * sg;
+        v[i] = vs * v[i] + (1.0 - b2) * sg * sg;
+        i += 1;
+    }
+}
+
+#[inline(always)]
+fn scale_g<L: Lanes>(x: &mut [f32], s: f32) {
+    let n = x.len();
+    let sv = L::splat(s);
+    let mut i = 0usize;
+    while i + L::WIDTH <= n {
+        // SAFETY: `i + WIDTH <= n` bounds the lane access.
+        unsafe {
+            L::load(x.as_ptr().add(i)).mul(sv).store(x.as_mut_ptr().add(i));
+        }
+        i += L::WIDTH;
+    }
+    while i < n {
+        x[i] *= s;
+        i += 1;
+    }
+}
+
+#[inline(always)]
+fn adam_update_g<L: Lanes>(
+    p: &mut [f32],
+    m: &[f32],
+    v: &[f32],
+    lr: f32,
+    bc1: f32,
+    bc2: f32,
+    eps: f32,
+) {
+    let n = p.len();
+    debug_assert!(m.len() == n && v.len() == n);
+    let lrv = L::splat(lr);
+    let bc1v = L::splat(bc1);
+    let bc2v = L::splat(bc2);
+    let epsv = L::splat(eps);
+    let mut i = 0usize;
+    while i + L::WIDTH <= n {
+        // SAFETY: `i + WIDTH <= n` bounds every lane access below.
+        unsafe {
+            let mh = L::load(m.as_ptr().add(i)).div(bc1v);
+            let den = L::load(v.as_ptr().add(i)).div(bc2v).sqrt().add(epsv);
+            let pv = L::load(p.as_ptr().add(i)).sub(lrv.mul(mh).div(den));
+            pv.store(p.as_mut_ptr().add(i));
+        }
+        i += L::WIDTH;
+    }
+    while i < n {
+        p[i] -= lr * (m[i] / bc1) / ((v[i] / bc2).sqrt() + eps);
+        i += 1;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn adam_full_g<L: Lanes>(
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    lr: f32,
+    bc1: f32,
+    bc2: f32,
+    b1: f32,
+    b2: f32,
+    eps: f32,
+) {
+    let n = p.len();
+    debug_assert!(m.len() == n && v.len() == n && g.len() == n);
+    let b1v = L::splat(b1);
+    let b2v = L::splat(b2);
+    let c1 = L::splat(1.0 - b1);
+    let c2 = L::splat(1.0 - b2);
+    let lrv = L::splat(lr);
+    let bc1v = L::splat(bc1);
+    let bc2v = L::splat(bc2);
+    let epsv = L::splat(eps);
+    let mut i = 0usize;
+    while i + L::WIDTH <= n {
+        // SAFETY: `i + WIDTH <= n` bounds every lane access below.
+        unsafe {
+            let gv = L::load(g.as_ptr().add(i));
+            let mv = b1v.mul(L::load(m.as_ptr().add(i))).add(c1.mul(gv));
+            mv.store(m.as_mut_ptr().add(i));
+            let vv = b2v.mul(L::load(v.as_ptr().add(i))).add(c2.mul(gv).mul(gv));
+            vv.store(v.as_mut_ptr().add(i));
+            let den = vv.div(bc2v).sqrt().add(epsv);
+            let pv = L::load(p.as_ptr().add(i)).sub(lrv.mul(mv.div(bc1v)).div(den));
+            pv.store(p.as_mut_ptr().add(i));
+        }
+        i += L::WIDTH;
+    }
+    while i < n {
+        m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+        v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+        p[i] -= lr * (m[i] / bc1) / ((v[i] / bc2).sqrt() + eps);
+        i += 1;
+    }
+}
+
+#[inline(always)]
+fn grad_acc_g<L: Lanes>(acc: &mut [f32], g: &[f32], gscale: f32) {
+    let n = acc.len();
+    debug_assert!(g.len() == n);
+    let gs = L::splat(gscale);
+    let mut i = 0usize;
+    while i + L::WIDTH <= n {
+        // SAFETY: `i + WIDTH <= n` bounds the lane accesses.
+        unsafe {
+            let av = L::load(acc.as_ptr().add(i)).add(L::load(g.as_ptr().add(i)).mul(gs));
+            av.store(acc.as_mut_ptr().add(i));
+        }
+        i += L::WIDTH;
+    }
+    while i < n {
+        acc[i] += g[i] * gscale;
+        i += 1;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn adamw_update_g<L: Lanes>(
+    p: &mut [f32],
+    m: &[f32],
+    v: &[f32],
+    lr: f32,
+    bc1: f32,
+    bc2: f32,
+    wd: f32,
+    eps: f32,
+) {
+    let n = p.len();
+    debug_assert!(m.len() == n && v.len() == n);
+    let lrv = L::splat(lr);
+    let bc1v = L::splat(bc1);
+    let bc2v = L::splat(bc2);
+    let wdv = L::splat(wd);
+    let epsv = L::splat(eps);
+    let mut i = 0usize;
+    while i + L::WIDTH <= n {
+        // SAFETY: `i + WIDTH <= n` bounds every lane access below.
+        unsafe {
+            let pv = L::load(p.as_ptr().add(i));
+            let mh = L::load(m.as_ptr().add(i)).div(bc1v);
+            let den = L::load(v.as_ptr().add(i)).div(bc2v).sqrt().add(epsv);
+            pv.sub(lrv.mul(mh.div(den).add(wdv.mul(pv)))).store(p.as_mut_ptr().add(i));
+        }
+        i += L::WIDTH;
+    }
+    while i < n {
+        p[i] -= lr * ((m[i] / bc1) / ((v[i] / bc2).sqrt() + eps) + wd * p[i]);
+        i += 1;
+    }
+}
+
+#[inline(always)]
+fn sgdm_decay_acc_g<L: Lanes>(u: &mut [f32], g: &[f32], gscale: f32, mu: f32) {
+    let n = u.len();
+    debug_assert!(g.len() == n);
+    let gs = L::splat(gscale);
+    let muv = L::splat(mu);
+    let mut i = 0usize;
+    while i + L::WIDTH <= n {
+        // SAFETY: `i + WIDTH <= n` bounds the lane accesses.
+        unsafe {
+            let uv = muv.mul(L::load(u.as_ptr().add(i))).add(gs.mul(L::load(g.as_ptr().add(i))));
+            uv.store(u.as_mut_ptr().add(i));
+        }
+        i += L::WIDTH;
+    }
+    while i < n {
+        u[i] = mu * u[i] + gscale * g[i];
+        i += 1;
+    }
+}
+
+#[inline(always)]
+fn sgdm_acc_g<L: Lanes>(u: &mut [f32], g: &[f32], gscale: f32) {
+    let n = u.len();
+    debug_assert!(g.len() == n);
+    let gs = L::splat(gscale);
+    let mut i = 0usize;
+    while i + L::WIDTH <= n {
+        // SAFETY: `i + WIDTH <= n` bounds the lane accesses.
+        unsafe {
+            let uv = L::load(u.as_ptr().add(i)).add(gs.mul(L::load(g.as_ptr().add(i))));
+            uv.store(u.as_mut_ptr().add(i));
+        }
+        i += L::WIDTH;
+    }
+    while i < n {
+        u[i] += gscale * g[i];
+        i += 1;
+    }
+}
+
+#[inline(always)]
+fn sgdm_update_g<L: Lanes>(p: &mut [f32], u: &[f32], lr: f32, wd: f32) {
+    let n = p.len();
+    debug_assert!(u.len() == n);
+    let lrv = L::splat(lr);
+    let wdv = L::splat(wd);
+    let mut i = 0usize;
+    while i + L::WIDTH <= n {
+        // SAFETY: `i + WIDTH <= n` bounds the lane accesses.
+        unsafe {
+            let pv = L::load(p.as_ptr().add(i));
+            let uv = L::load(u.as_ptr().add(i));
+            pv.sub(lrv.mul(uv.add(wdv.mul(pv)))).store(p.as_mut_ptr().add(i));
+        }
+        i += L::WIDTH;
+    }
+    while i < n {
+        p[i] -= lr * (u[i] + wd * p[i]);
+        i += 1;
+    }
+}
+
+#[inline(always)]
+fn axpy_g<L: Lanes>(out: &mut [f32], x: &[f32], a: f32) {
+    let n = out.len();
+    debug_assert!(x.len() >= n);
+    let av = L::splat(a);
+    let mut i = 0usize;
+    while i + L::WIDTH <= n {
+        // SAFETY: `i + WIDTH <= n <= x.len()` bounds the lane accesses.
+        unsafe {
+            let ov = L::load(out.as_ptr().add(i)).add(av.mul(L::load(x.as_ptr().add(i))));
+            ov.store(out.as_mut_ptr().add(i));
+        }
+        i += L::WIDTH;
+    }
+    while i < n {
+        out[i] += a * x[i];
+        i += 1;
+    }
+}
+
+#[inline(always)]
+fn add_assign_g<L: Lanes>(out: &mut [f32], x: &[f32]) {
+    let n = out.len();
+    debug_assert!(x.len() >= n);
+    let mut i = 0usize;
+    while i + L::WIDTH <= n {
+        // SAFETY: `i + WIDTH <= n <= x.len()` bounds the lane accesses.
+        unsafe {
+            let ov = L::load(out.as_ptr().add(i)).add(L::load(x.as_ptr().add(i)));
+            ov.store(out.as_mut_ptr().add(i));
+        }
+        i += L::WIDTH;
+    }
+    while i < n {
+        out[i] += x[i];
+        i += 1;
+    }
+}
+
+#[inline(always)]
+fn add_g<L: Lanes>(out: &mut [f32], a: &[f32], b: &[f32]) {
+    let n = out.len();
+    debug_assert!(a.len() == n && b.len() == n);
+    let mut i = 0usize;
+    while i + L::WIDTH <= n {
+        // SAFETY: `i + WIDTH <= n` bounds the lane accesses.
+        unsafe {
+            let ov = L::load(a.as_ptr().add(i)).add(L::load(b.as_ptr().add(i)));
+            ov.store(out.as_mut_ptr().add(i));
+        }
+        i += L::WIDTH;
+    }
+    while i < n {
+        out[i] = a[i] + b[i];
+        i += 1;
+    }
+}
+
+#[inline(always)]
+fn scale_into_g<L: Lanes>(out: &mut [f32], x: &[f32], s: f32) {
+    let n = out.len();
+    debug_assert!(x.len() >= n);
+    let sv = L::splat(s);
+    let mut i = 0usize;
+    while i + L::WIDTH <= n {
+        // SAFETY: `i + WIDTH <= n <= x.len()` bounds the lane accesses.
+        unsafe {
+            L::load(x.as_ptr().add(i)).mul(sv).store(out.as_mut_ptr().add(i));
+        }
+        i += L::WIDTH;
+    }
+    while i < n {
+        out[i] = x[i] * s;
+        i += 1;
+    }
+}
+
+#[inline(always)]
+fn norm_affine_g<L: Lanes>(out: &mut [f32], x: &[f32], g: &[f32], b: &[f32], mu: f32, rstd: f32) {
+    let n = out.len();
+    debug_assert!(x.len() == n && g.len() == n && b.len() == n);
+    let muv = L::splat(mu);
+    let rstdv = L::splat(rstd);
+    let mut i = 0usize;
+    while i + L::WIDTH <= n {
+        // SAFETY: `i + WIDTH <= n` bounds every lane access below.
+        unsafe {
+            let xv = L::load(x.as_ptr().add(i));
+            let gv = L::load(g.as_ptr().add(i));
+            let bv = L::load(b.as_ptr().add(i));
+            xv.sub(muv).mul(rstdv).mul(gv).add(bv).store(out.as_mut_ptr().add(i));
+        }
+        i += L::WIDTH;
+    }
+    while i < n {
+        out[i] = (x[i] - mu) * rstd * g[i] + b[i];
+        i += 1;
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn ln_bwd_dx_g<L: Lanes>(
+    dx: &mut [f32],
+    x: &[f32],
+    dy: &[f32],
+    g: &[f32],
+    mu: f32,
+    rstd: f32,
+    mean_dxhat: f32,
+    mean_dxhat_xhat: f32,
+) {
+    let n = dx.len();
+    debug_assert!(x.len() == n && dy.len() == n && g.len() == n);
+    let muv = L::splat(mu);
+    let rstdv = L::splat(rstd);
+    let m1v = L::splat(mean_dxhat);
+    let m2v = L::splat(mean_dxhat_xhat);
+    let mut i = 0usize;
+    while i + L::WIDTH <= n {
+        // SAFETY: `i + WIDTH <= n` bounds every lane access below.
+        unsafe {
+            let xhat = L::load(x.as_ptr().add(i)).sub(muv).mul(rstdv);
+            let dxhat = L::load(dy.as_ptr().add(i)).mul(L::load(g.as_ptr().add(i)));
+            let adj = rstdv.mul(dxhat.sub(m1v).sub(xhat.mul(m2v)));
+            L::load(dx.as_ptr().add(i)).add(adj).store(dx.as_mut_ptr().add(i));
+        }
+        i += L::WIDTH;
+    }
+    while i < n {
+        let xhat = (x[i] - mu) * rstd;
+        let dxhat = dy[i] * g[i];
+        dx[i] += rstd * (dxhat - mean_dxhat - xhat * mean_dxhat_xhat);
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dispatched entry points
+// ---------------------------------------------------------------------------
+
+dispatch! {
+    /// AdamA inner-loop accumulation: `m += (1-β₁)·s·g, v += (1-β₂)·(s·g)²`.
+    adama_acc => adama_acc_g(
+        m: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        gscale: f32,
+        b1: f32,
+        b2: f32,
+    )
+}
+
+dispatch! {
+    /// Fused mini-batch-start decay + first micro-batch accumulation.
+    #[allow(clippy::too_many_arguments)]
+    adama_decay_acc => adama_decay_acc_g(
+        m: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        gscale: f32,
+        ms: f32,
+        vs: f32,
+        b1: f32,
+        b2: f32,
+    )
+}
+
+dispatch! {
+    /// In-place scale: `x *= s`.
+    scale => scale_g(x: &mut [f32], s: f32)
+}
+
+dispatch! {
+    /// Bias-corrected Adam parameter step.
+    #[allow(clippy::too_many_arguments)]
+    adam_update => adam_update_g(
+        p: &mut [f32],
+        m: &[f32],
+        v: &[f32],
+        lr: f32,
+        bc1: f32,
+        bc2: f32,
+        eps: f32,
+    )
+}
+
+dispatch! {
+    /// Baseline fused Adam step from a fully-accumulated gradient.
+    #[allow(clippy::too_many_arguments)]
+    adam_full => adam_full_g(
+        p: &mut [f32],
+        m: &mut [f32],
+        v: &mut [f32],
+        g: &[f32],
+        lr: f32,
+        bc1: f32,
+        bc2: f32,
+        b1: f32,
+        b2: f32,
+        eps: f32,
+    )
+}
+
+dispatch! {
+    /// Gradient-accumulation baseline: `acc += gscale·g`.
+    grad_acc => grad_acc_g(acc: &mut [f32], g: &[f32], gscale: f32)
+}
+
+dispatch! {
+    /// AdamW (decoupled weight decay) parameter step.
+    #[allow(clippy::too_many_arguments)]
+    adamw_update => adamw_update_g(
+        p: &mut [f32],
+        m: &[f32],
+        v: &[f32],
+        lr: f32,
+        bc1: f32,
+        bc2: f32,
+        wd: f32,
+        eps: f32,
+    )
+}
+
+dispatch! {
+    /// Momentum-SGD accumulation, first micro-batch (fused decay).
+    sgdm_decay_acc => sgdm_decay_acc_g(u: &mut [f32], g: &[f32], gscale: f32, mu: f32)
+}
+
+dispatch! {
+    /// Momentum-SGD accumulation: `u += gscale·g`.
+    sgdm_acc => sgdm_acc_g(u: &mut [f32], g: &[f32], gscale: f32)
+}
+
+dispatch! {
+    /// Momentum-SGD parameter step: `p -= lr·(u + wd·p)`.
+    sgdm_update => sgdm_update_g(p: &mut [f32], u: &[f32], lr: f32, wd: f32)
+}
+
+dispatch! {
+    /// `out += a·x` — the matmul/attention inner step (`out[j] += a * x[j]`).
+    axpy => axpy_g(out: &mut [f32], x: &[f32], a: f32)
+}
+
+dispatch! {
+    /// `out += x` element-wise (bias rows, residual fan-in).
+    add_assign => add_assign_g(out: &mut [f32], x: &[f32])
+}
+
+dispatch! {
+    /// `out = a + b` element-wise (residual connections).
+    add => add_g(out: &mut [f32], a: &[f32], b: &[f32])
+}
+
+dispatch! {
+    /// `out = x·s` element-wise (softmax probability normalisation).
+    scale_into => scale_into_g(out: &mut [f32], x: &[f32], s: f32)
+}
+
+dispatch! {
+    /// Layer-norm normalise step: `out = (x - mu)·rstd·g + b`.
+    norm_affine => norm_affine_g(
+        out: &mut [f32],
+        x: &[f32],
+        g: &[f32],
+        b: &[f32],
+        mu: f32,
+        rstd: f32,
+    )
+}
+
+dispatch! {
+    /// Layer-norm backward dx row:
+    /// `dx += rstd·(dy·g - mean_dxhat - (x-mu)·rstd·mean_dxhat_xhat)`.
+    #[allow(clippy::too_many_arguments)]
+    ln_bwd_dx => ln_bwd_dx_g(
+        dx: &mut [f32],
+        x: &[f32],
+        dy: &[f32],
+        g: &[f32],
+        mu: f32,
+        rstd: f32,
+        mean_dxhat: f32,
+        mean_dxhat_xhat: f32,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bits(xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// Deterministic "awkward" test vector: mixed signs/magnitudes plus
+    /// exact zeros, sized to cover lane remainders.
+    fn vector(seed: u64, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| {
+                let k = (i as u64).wrapping_mul(6364136223846793005).wrapping_add(seed);
+                let u = ((k >> 33) as f32) / (1u64 << 31) as f32 - 0.5;
+                if i % 17 == 0 {
+                    0.0
+                } else {
+                    u * (1.0 + (i % 7) as f32)
+                }
+            })
+            .collect()
+    }
+
+    const LENS: [usize; 12] = [0, 1, 2, 3, 4, 5, 7, 8, 9, 31, 33, 1025];
+
+    #[test]
+    fn parse_and_detect() {
+        assert_eq!(Level::parse(Some("scalar")), Level::Scalar);
+        assert_eq!(Level::parse(None), detect());
+        assert_eq!(Level::parse(Some("")), detect());
+        assert_eq!(Level::parse(Some("auto")), detect());
+        assert_eq!(Level::parse(Some("garbage")), detect());
+        assert!(detect().supported());
+        let all = Level::all_supported();
+        assert_eq!(all[0], Level::Scalar);
+        assert!(all.contains(&detect()));
+        #[cfg(target_arch = "x86_64")]
+        assert!(all.contains(&Level::Sse2));
+    }
+
+    #[test]
+    fn every_level_matches_scalar_optimizer_kernels() {
+        for &n in &LENS {
+            let m0 = vector(1, n);
+            let v0: Vec<f32> = vector(2, n).iter().map(|x| x.abs()).collect();
+            let p0 = vector(3, n);
+            let g = vector(4, n);
+            for level in Level::all_supported() {
+                let (mut m, mut v, mut p) = (m0.clone(), v0.clone(), p0.clone());
+                adama_acc(level, &mut m, &mut v, &g, 0.25, 0.9, 0.999);
+                adama_decay_acc(level, &mut m, &mut v, &g, 0.25, 0.9, 0.999, 0.9, 0.999);
+                adam_update(level, &mut p, &m, &v, 1e-3, 0.1, 0.001, 1e-8);
+                adam_full(level, &mut p, &mut m, &mut v, &g, 1e-3, 0.1, 0.001, 0.9, 0.999, 1e-8);
+                adamw_update(level, &mut p, &m, &v, 1e-3, 0.1, 0.001, 0.01, 1e-8);
+                grad_acc(level, &mut p, &g, 0.5);
+                sgdm_decay_acc(level, &mut m, &g, 0.5, 0.9);
+                sgdm_acc(level, &mut m, &g, 0.5);
+                sgdm_update(level, &mut p, &m, 1e-2, 0.01);
+                scale(level, &mut v, 0.999);
+
+                let (mut ms, mut vs, mut ps) = (m0.clone(), v0.clone(), p0.clone());
+                adama_acc(Level::Scalar, &mut ms, &mut vs, &g, 0.25, 0.9, 0.999);
+                adama_decay_acc(Level::Scalar, &mut ms, &mut vs, &g, 0.25, 0.9, 0.999, 0.9, 0.999);
+                adam_update(Level::Scalar, &mut ps, &ms, &vs, 1e-3, 0.1, 0.001, 1e-8);
+                adam_full(
+                    Level::Scalar,
+                    &mut ps,
+                    &mut ms,
+                    &mut vs,
+                    &g,
+                    1e-3,
+                    0.1,
+                    0.001,
+                    0.9,
+                    0.999,
+                    1e-8,
+                );
+                adamw_update(Level::Scalar, &mut ps, &ms, &vs, 1e-3, 0.1, 0.001, 0.01, 1e-8);
+                grad_acc(Level::Scalar, &mut ps, &g, 0.5);
+                sgdm_decay_acc(Level::Scalar, &mut ms, &g, 0.5, 0.9);
+                sgdm_acc(Level::Scalar, &mut ms, &g, 0.5);
+                sgdm_update(Level::Scalar, &mut ps, &ms, 1e-2, 0.01);
+                scale(Level::Scalar, &mut vs, 0.999);
+
+                assert_eq!(bits(&m), bits(&ms), "{} n={n}: m", level.name());
+                assert_eq!(bits(&v), bits(&vs), "{} n={n}: v", level.name());
+                assert_eq!(bits(&p), bits(&ps), "{} n={n}: p", level.name());
+            }
+        }
+    }
+
+    #[test]
+    fn every_level_matches_scalar_dense_helpers() {
+        for &n in &LENS {
+            let a = vector(11, n);
+            let b = vector(12, n);
+            let g = vector(13, n);
+            let bias = vector(14, n);
+            let base = vector(15, n);
+            for level in Level::all_supported() {
+                let check = |name: &str, got: &[f32], want: &[f32]| {
+                    assert_eq!(bits(got), bits(want), "{name} at {} n={n}", level.name());
+                };
+
+                let (mut got, mut want) = (base.clone(), base.clone());
+                axpy(level, &mut got, &a, 0.37);
+                axpy(Level::Scalar, &mut want, &a, 0.37);
+                check("axpy", &got, &want);
+
+                let (mut got, mut want) = (base.clone(), base.clone());
+                add_assign(level, &mut got, &a);
+                add_assign(Level::Scalar, &mut want, &a);
+                check("add_assign", &got, &want);
+
+                let (mut got, mut want) = (base.clone(), base.clone());
+                add(level, &mut got, &a, &b);
+                add(Level::Scalar, &mut want, &a, &b);
+                check("add", &got, &want);
+
+                let (mut got, mut want) = (base.clone(), base.clone());
+                scale_into(level, &mut got, &a, 0.73);
+                scale_into(Level::Scalar, &mut want, &a, 0.73);
+                check("scale_into", &got, &want);
+
+                let (mut got, mut want) = (base.clone(), base.clone());
+                norm_affine(level, &mut got, &a, &g, &bias, 0.11, 1.7);
+                norm_affine(Level::Scalar, &mut want, &a, &g, &bias, 0.11, 1.7);
+                check("norm_affine", &got, &want);
+
+                let (mut got, mut want) = (base.clone(), base.clone());
+                ln_bwd_dx(level, &mut got, &a, &b, &g, 0.11, 1.7, 0.05, -0.02);
+                ln_bwd_dx(Level::Scalar, &mut want, &a, &b, &g, 0.11, 1.7, 0.05, -0.02);
+                check("ln_bwd_dx", &got, &want);
+            }
+        }
+    }
+
+    #[test]
+    fn unsupported_level_degrades_instead_of_crashing() {
+        // Even a hand-constructed Avx2 level must run (dispatch re-checks
+        // CPU support); on machines with AVX2 this is just the fast path.
+        let mut x = vector(9, 37);
+        let mut y = x.clone();
+        scale(Level::Avx2, &mut x, 0.5);
+        scale(Level::Scalar, &mut y, 0.5);
+        assert_eq!(bits(&x), bits(&y));
+    }
+}

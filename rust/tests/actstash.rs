@@ -101,6 +101,7 @@ fn measured_peaks_match_memmodel_for_budget_0_half_unlimited() {
     let hyper = base.manifest().model_config("tiny").unwrap().model.clone();
     let dims = HostBlockDims::from_model(&hyper);
     let blocks = hyper.layers as u64;
+    let vocab = hyper.vocab as u64;
     let entry = dims.stash_entry_bytes();
 
     for (name, plan, want_hits) in [
@@ -124,9 +125,10 @@ fn measured_peaks_match_memmodel_for_budget_0_half_unlimited() {
             "stash peak mismatch under budget {name}"
         );
 
-        // workspace: the block programs dominate and are modelled
-        // exactly; measured peak must stay within the prediction
-        let ws_pred = dims.predicted_workspace_peak_bytes(plan, blocks);
+        // workspace: every transient of the step (block programs AND the
+        // metered head logits) is modelled exactly; measured peak must
+        // equal the step-level prediction
+        let ws_pred = dims.predicted_step_workspace_peak_bytes(plan, blocks, vocab);
         assert_eq!(
             mem.workspace_peak_bytes, ws_pred,
             "workspace peak mismatch under budget {name}"

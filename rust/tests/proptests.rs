@@ -20,6 +20,7 @@ use adama::memmodel::{peak_memory, DtypePolicy, PaperModel, Scenario, Strategy};
 use adama::optim::host_math;
 use adama::runtime::hostexec::math;
 use adama::runtime::pool::{partition, ThreadPool};
+use adama::runtime::simd;
 use adama::tensor::{chunk_ranges, Rng};
 
 const B1: f32 = 0.9;
@@ -147,7 +148,10 @@ fn prop_pool_partition_covers_exactly() {
 #[test]
 fn prop_parallel_matmul_equals_serial_within_0_ulp() {
     // The row split must leave every per-cell accumulation order intact,
-    // so parallel == serial == hand-rolled reference *bitwise* (0 ULP).
+    // so parallel == serial == hand-rolled reference *bitwise* (0 ULP) —
+    // and the SIMD axpy rows (level from ADAMA_SIMD, so the CI matrix
+    // sweeps scalar and vector) must not change that.
+    let lvl = simd::Level::from_env();
     let serial = ThreadPool::new(1);
     for seed in 0..25u64 {
         let mut rng = Rng::new(8000 + seed);
@@ -173,8 +177,8 @@ fn prop_parallel_matmul_equals_serial_within_0_ulp() {
         }
         let mut got_s = vec![0.0f32; m * n];
         let mut got_p = vec![0.0f32; m * n];
-        math::matmul(&serial, &a, &b, m, k, n, &mut got_s);
-        math::matmul(&par, &a, &b, m, k, n, &mut got_p);
+        math::matmul(&serial, lvl, &a, &b, m, k, n, &mut got_s);
+        math::matmul(&par, lvl, &a, &b, m, k, n, &mut got_p);
         for i in 0..m * n {
             assert_eq!(reference[i].to_bits(), got_s[i].to_bits(), "seed {seed}: serial matmul");
             assert_eq!(
@@ -200,7 +204,7 @@ fn prop_parallel_matmul_equals_serial_within_0_ulp() {
             }
         }
         let mut got_tn = vec![0.0f32; m * n];
-        math::matmul_tn(&par, &at, &bt, p_rows, m, n, &mut got_tn);
+        math::matmul_tn(&par, lvl, &at, &bt, p_rows, m, n, &mut got_tn);
         for i in 0..m * n {
             assert_eq!(ref_tn[i].to_bits(), got_tn[i].to_bits(), "seed {seed}: matmul_tn");
         }
@@ -218,7 +222,7 @@ fn prop_parallel_matmul_equals_serial_within_0_ulp() {
             }
         }
         let mut got_nt = vec![0.0f32; m * n];
-        math::matmul_nt(&par, &a, &bn, m, k, n, &mut got_nt);
+        math::matmul_nt(&par, lvl, &a, &bn, m, k, n, &mut got_nt);
         for i in 0..m * n {
             assert_eq!(ref_nt[i].to_bits(), got_nt[i].to_bits(), "seed {seed}: matmul_nt");
         }

@@ -1,0 +1,287 @@
+//! SIMD parity suite: every vector kernel, at every dispatch level the
+//! host CPU supports, must be **0-ULP identical** to the scalar
+//! reference — at the slice level (against the `host_math` oracles,
+//! including remainder lengths that don't divide the lane width) and at
+//! the program level (every host program, scalar/SSE2/AVX2 × 1/4 pool
+//! threads, bit-compared against the scalar serial baseline).
+//!
+//! This is the gate of the `runtime::simd` bit-exactness contract: if a
+//! lane kernel reassociates, contracts into FMA, or mishandles a tail,
+//! this suite fails before the determinism/backend-parity suites do.
+
+use adama::optim::host_math;
+use adama::runtime::simd::{self, Level};
+use adama::runtime::{ArtifactEntry, Library, Manifest, MemoryPlan, Value};
+use adama::tensor::Rng;
+
+const B1: f32 = 0.9;
+const B2: f32 = 0.999;
+const EPS: f32 = 1e-8;
+
+fn randvec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| scale * rng.normal()).collect()
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Random lengths spanning sub-lane, lane-multiple and remainder cases,
+/// plus pinned awkward edges.
+fn sweep_lengths(rng: &mut Rng) -> Vec<usize> {
+    let mut lens = vec![0, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 1023, 1024, 1025];
+    for _ in 0..12 {
+        lens.push(1 + rng.below(5000));
+    }
+    lens
+}
+
+/// Slice-level sweep: each dispatched kernel against its `host_math`
+/// scalar oracle, all supported levels, remainder lengths included.
+#[test]
+fn every_simd_kernel_matches_host_math_at_0_ulp() {
+    let mut rng = Rng::new(71);
+    let levels = Level::all_supported();
+    assert!(!levels.is_empty() && levels[0] == Level::Scalar);
+    for (case, n) in sweep_lengths(&mut rng).into_iter().enumerate() {
+        let m0 = randvec(&mut rng, n, 0.8);
+        let v0: Vec<f32> = randvec(&mut rng, n, 0.5).iter().map(|x| x.abs()).collect();
+        let p0 = randvec(&mut rng, n, 1.2);
+        let g = randvec(&mut rng, n, 2.0);
+        for &level in &levels {
+            // adama_acc
+            let (mut m, mut v) = (m0.clone(), v0.clone());
+            simd::adama_acc(level, &mut m, &mut v, &g, 0.25, B1, B2);
+            let (mut mw, mut vw) = (m0.clone(), v0.clone());
+            host_math::adama_acc(&mut mw, &mut vw, &g, 0.25, B1, B2);
+            assert_eq!(bits(&m), bits(&mw), "adama_acc m {} case {case} n={n}", level.name());
+            assert_eq!(bits(&v), bits(&vw), "adama_acc v {} case {case} n={n}", level.name());
+
+            // adama_decay_acc
+            let (mut m, mut v) = (m0.clone(), v0.clone());
+            simd::adama_decay_acc(level, &mut m, &mut v, &g, 0.5, B1, B2, B1, B2);
+            let (mut mw, mut vw) = (m0.clone(), v0.clone());
+            host_math::adama_decay_acc(&mut mw, &mut vw, &g, 0.5, B1, B2, B1, B2);
+            assert_eq!(bits(&m), bits(&mw), "adama_decay_acc m {} n={n}", level.name());
+            assert_eq!(bits(&v), bits(&vw), "adama_decay_acc v {} n={n}", level.name());
+
+            // scale
+            let mut x = m0.clone();
+            simd::scale(level, &mut x, 0.731);
+            let mut xw = m0.clone();
+            host_math::scale(&mut xw, 0.731);
+            assert_eq!(bits(&x), bits(&xw), "scale {} n={n}", level.name());
+
+            // adam_update (v0 is non-negative, as in training)
+            let mut p = p0.clone();
+            simd::adam_update(level, &mut p, &m0, &v0, 1e-3, 0.1, 0.001, EPS);
+            let mut pw = p0.clone();
+            host_math::adam_update(&mut pw, &m0, &v0, 1e-3, 0.1, 0.001, EPS);
+            assert_eq!(bits(&p), bits(&pw), "adam_update {} n={n}", level.name());
+
+            // adam_full
+            let (mut p, mut m, mut v) = (p0.clone(), m0.clone(), v0.clone());
+            simd::adam_full(level, &mut p, &mut m, &mut v, &g, 1e-3, 0.1, 0.001, B1, B2, EPS);
+            let (mut pw, mut mw, mut vw) = (p0.clone(), m0.clone(), v0.clone());
+            host_math::adam_full(&mut pw, &mut mw, &mut vw, &g, 1e-3, 0.1, 0.001, B1, B2, EPS);
+            assert_eq!(bits(&p), bits(&pw), "adam_full p {} n={n}", level.name());
+            assert_eq!(bits(&m), bits(&mw), "adam_full m {} n={n}", level.name());
+            assert_eq!(bits(&v), bits(&vw), "adam_full v {} n={n}", level.name());
+
+            // adamw_update
+            let mut p = p0.clone();
+            simd::adamw_update(level, &mut p, &m0, &v0, 1e-3, 0.1, 0.001, 0.01, EPS);
+            let mut pw = p0.clone();
+            host_math::adamw_update(&mut pw, &m0, &v0, 1e-3, 0.1, 0.001, 0.01, EPS);
+            assert_eq!(bits(&p), bits(&pw), "adamw_update {} n={n}", level.name());
+
+            // grad_acc
+            let mut acc = p0.clone();
+            simd::grad_acc(level, &mut acc, &g, 0.25);
+            let mut accw = p0.clone();
+            host_math::grad_acc(&mut accw, &g, 0.25);
+            assert_eq!(bits(&acc), bits(&accw), "grad_acc {} n={n}", level.name());
+
+            // sgdm family
+            let mut u = m0.clone();
+            simd::sgdm_decay_acc(level, &mut u, &g, 0.5, 0.9);
+            simd::sgdm_acc(level, &mut u, &g, 0.5);
+            let mut p = p0.clone();
+            simd::sgdm_update(level, &mut p, &u, 1e-2, 0.01);
+            let mut uw = m0.clone();
+            host_math::sgdm_decay_acc(&mut uw, &g, 0.5, 0.9);
+            host_math::sgdm_acc(&mut uw, &g, 0.5);
+            let mut pw = p0.clone();
+            host_math::sgdm_update(&mut pw, &uw, 1e-2, 0.01);
+            assert_eq!(bits(&u), bits(&uw), "sgdm acc {} n={n}", level.name());
+            assert_eq!(bits(&p), bits(&pw), "sgdm_update {} n={n}", level.name());
+        }
+    }
+}
+
+/// Stable per-program input seed (FNV-1a over the name).
+fn name_seed(name: &str) -> u64 {
+    name.bytes().fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
+}
+
+/// Inputs straight from the manifest entry's tensor specs, with kernel
+/// chunk buffers shrunk to an awkward length (5003: above the pool's
+/// serial cutoff, not a multiple of any lane width, splits into
+/// non-lane-multiple spans at 4 threads). The host kernels are
+/// shape-polymorphic, so the chunk size in the name is not binding.
+fn gen_inputs(
+    entry: &ArtifactEntry,
+    i32_cap: usize,
+    seed: u64,
+    shrink: Option<usize>,
+) -> Vec<Value> {
+    let mut rng = Rng::new(seed);
+    entry
+        .inputs
+        .iter()
+        .map(|spec| {
+            if spec.dtype == "s32" {
+                let data: Vec<i32> =
+                    (0..spec.elements()).map(|_| rng.below(i32_cap) as i32).collect();
+                Value::i32(data, &spec.shape).unwrap()
+            } else if spec.elements() <= 4 {
+                let data: Vec<f32> =
+                    (0..spec.elements()).map(|_| 0.5 + rng.uniform()).collect();
+                Value::f32(data, &spec.shape).unwrap()
+            } else if let Some(n) = shrink {
+                // chunk kernels are shape-polymorphic: shrink to the
+                // remainder length
+                let data: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+                Value::f32(data, &[n]).unwrap()
+            } else {
+                let data: Vec<f32> =
+                    (0..spec.elements()).map(|_| rng.normal()).collect();
+                Value::f32(data, &spec.shape).unwrap()
+            }
+        })
+        .collect()
+}
+
+fn assert_outputs_bit_equal(name: &str, tag: &str, base: &[Value], got: &[Value]) {
+    assert_eq!(base.len(), got.len(), "{name}: arity drift at {tag}");
+    for (i, (va, vb)) in base.iter().zip(got).enumerate() {
+        match (va.as_f32(), vb.as_f32()) {
+            (Ok(a), Ok(b)) => {
+                assert_eq!(a.len(), b.len(), "{name} out[{i}]: len drift at {tag}");
+                for (j, (x, y)) in a.iter().zip(b).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{name} out[{i}][{j}]: {x} != {y} at {tag}"
+                    );
+                }
+            }
+            _ => assert_eq!(
+                va.as_i32().unwrap(),
+                vb.as_i32().unwrap(),
+                "{name} out[{i}]: i32 drift at {tag}"
+            ),
+        }
+    }
+}
+
+/// Program-level sweep of the chunked optimizer kernels: every dispatch
+/// level × 1/4 pool threads, on a remainder-length buffer, bit-compared
+/// against the scalar 1-thread baseline.
+#[test]
+fn optimizer_kernel_programs_bit_identical_across_levels_and_threads() {
+    let manifest = Manifest::builtin();
+    let chunk = *manifest.chunk_sizes.first().unwrap();
+    let n = 5003usize;
+    let levels = Level::all_supported();
+
+    let names: Vec<String> = manifest
+        .common
+        .keys()
+        .filter(|k| k.ends_with(&format!("_{chunk}")))
+        .map(|k| format!("common/{k}"))
+        .collect();
+    assert!(names.len() >= 11, "expected the full kernel family, got {names:?}");
+
+    for name in names {
+        let entry = manifest.entry(&name).unwrap();
+        let inputs = gen_inputs(entry, 1, name_seed(&name), Some(n));
+        let mut baseline: Option<Vec<Value>> = None;
+        for &level in &levels {
+            for threads in [1usize, 4] {
+                let lib = Library::host_with_simd(threads, MemoryPlan::remat(), level);
+                let prog = lib.get(&name).unwrap();
+                let out = prog.run_v(&inputs).unwrap();
+                match &baseline {
+                    None => baseline = Some(out),
+                    Some(base) => {
+                        let tag = format!("{} x{threads} threads", level.name());
+                        assert_outputs_bit_equal(&name, &tag, base, &out);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Program-level sweep of the model programs (transformer blocks, heads,
+/// embeddings, MLP): every dispatch level × 1/4 pool threads must be
+/// bit-identical — this covers the SIMD paths inside matmul, layer norm,
+/// attention and softmax end to end.
+#[test]
+fn model_programs_bit_identical_across_levels_and_threads() {
+    let manifest = Manifest::builtin();
+    let levels = Level::all_supported();
+
+    let mut names: Vec<(String, usize)> = Vec::new();
+    for (cfg, entry) in &manifest.configs {
+        for key in entry.artifacts.keys() {
+            names.push((format!("{cfg}/{key}"), entry.model.vocab));
+        }
+    }
+    for (cfg, entry) in &manifest.mlp_configs {
+        for key in entry.artifacts.keys() {
+            names.push((format!("mlp_{cfg}/{key}"), entry.model.classes));
+        }
+    }
+    assert!(names.len() >= 12, "model program set unexpectedly small");
+
+    for (name, cap) in names {
+        let entry = manifest.entry(&name).unwrap();
+        let inputs = gen_inputs(entry, cap, name_seed(&name), None);
+        let mut baseline: Option<Vec<Value>> = None;
+        for &level in &levels {
+            for threads in [1usize, 4] {
+                let lib = Library::host_with_simd(threads, MemoryPlan::remat(), level);
+                let prog = lib.get(&name).unwrap();
+                let out = prog.run_v(&inputs).unwrap();
+                match &baseline {
+                    None => baseline = Some(out),
+                    Some(base) => {
+                        let tag = format!("{} x{threads} threads", level.name());
+                        assert_outputs_bit_equal(&name, &tag, base, &out);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The executor reports its dispatch level, and the level survives a
+/// DP-style per-rank fork.
+#[test]
+fn executor_reports_and_forks_its_simd_level() {
+    for &level in &Level::all_supported() {
+        let lib = Library::host_with_simd(2, MemoryPlan::remat(), level);
+        let exec = lib.executor();
+        assert_eq!(exec.simd_level(), Some(level));
+        let rank = lib.fork_with_threads(1);
+        assert_eq!(rank.executor().simd_level(), Some(level), "fork must keep the level");
+    }
+    // ADAMA_SIMD spellings resolve without panicking
+    for spec in ["auto", "avx2", "sse2", "scalar", "garbage", ""] {
+        let _ = Level::parse(Some(spec));
+    }
+    assert_eq!(Level::parse(Some("scalar")), Level::Scalar);
+    assert_eq!(Level::parse(Some("auto")), simd::detect());
+}

@@ -1,0 +1,107 @@
+#!/usr/bin/env python3
+"""Append one dated row to the nightly trajectory table in EXPERIMENTS.md.
+
+Usage: nightly_trajectory.py <fig7_output.txt> <BENCH_perf.json>
+
+Pulls three headline numbers out of the nightly bench run:
+  * E2.1 — the AdamA/Adam samples/s ratio at the largest swept N
+    (last data row of the "Fig 7a" section of fig7_throughput's stdout);
+  * E3 — the stash-vs-remat fwd+bwd pair speedup at budget=unlimited,
+    4 threads (from BENCH_perf.json);
+  * SIMD — the mean speedup_vs_scalar over the `simd_*` kernel rows and
+    the dispatched level (from BENCH_perf.json).
+
+Every field degrades to "n/a" rather than failing the job: a missing
+number in the table is a visible signal, a red nightly for a parse
+hiccup is just noise. The table itself lives at the bottom of
+EXPERIMENTS.md ("## Nightly trajectory").
+"""
+
+import datetime
+import json
+import platform
+import re
+import sys
+
+
+def fig7_ratio(path):
+    """Last data row of the Fig 7a section: (N, AdamA/Adam ratio)."""
+    try:
+        text = open(path, encoding="utf-8", errors="replace").read()
+    except OSError:
+        return None
+    section = text.split("Fig 7a", 1)
+    if len(section) < 2:
+        return None
+    best = None
+    for line in section[1].splitlines():
+        m = re.match(r"\s*(\d+)\s+[\d.]+\s+[\d.]+\s+([\d.]+)\s*$", line)
+        if m:
+            best = (int(m.group(1)), float(m.group(2)))
+        elif line.startswith("==="):
+            break  # next banner: stop at the end of the 7a section
+    return best
+
+
+def bench_rows(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            return json.load(f).get("results", [])
+    except (OSError, ValueError):
+        return []
+
+
+def stash_speedup(rows):
+    for r in rows:
+        if (
+            r.get("op") == "block_bwd_stash_vs_remat_small"
+            and r.get("act_budget") == "unlimited"
+            and r.get("threads") == 4
+        ):
+            return r.get("speedup_vs_remat")
+    return None
+
+
+def simd_speedup(rows):
+    """Mean speedup_vs_scalar over the simd_* kernel rows + the level."""
+    speedups, level = [], None
+    for r in rows:
+        op = r.get("op", "")
+        if op.startswith("simd_") and "speedup_vs_scalar" in r:
+            speedups.append(float(r["speedup_vs_scalar"]))
+            level = r.get("simd", level)
+    if not speedups:
+        return None
+    return (sum(speedups) / len(speedups), level)
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(__doc__)
+    fig7_path, bench_path = sys.argv[1], sys.argv[2]
+    rows = bench_rows(bench_path)
+
+    ratio = fig7_ratio(fig7_path)
+    e2 = f"{ratio[1]:.3f} (N={ratio[0]})" if ratio else "n/a"
+    stash = stash_speedup(rows)
+    e3 = f"{stash:.2f}x" if stash else "n/a"
+    simd = simd_speedup(rows)
+    note = f"simd {simd[0]:.2f}x ({simd[1]})" if simd else "simd n/a"
+
+    threads = next((str(r["threads"]) for r in rows if "threads" in r), "?")
+    date = datetime.date.today().isoformat()
+    host = platform.machine() or "ci"
+    row = f"| {date} | {host} | {threads} | {e2} | {e3} | {note} |\n"
+
+    path = "EXPERIMENTS.md"
+    text = open(path, encoding="utf-8").read()
+    if "## Nightly trajectory" not in text:
+        sys.exit("EXPERIMENTS.md has no '## Nightly trajectory' section")
+    if not text.endswith("\n"):
+        text += "\n"
+    open(path, "w", encoding="utf-8").write(text + row)
+    print("appended:", row.strip())
+
+
+if __name__ == "__main__":
+    main()
