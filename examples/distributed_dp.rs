@@ -1,10 +1,17 @@
 //! Distributed data-parallel demo: the paper's optimizer-state all-reduce
 //! (Eq. 5-8) vs gradient all-reduce vs the naive per-micro-batch scheme,
-//! with measured communication volumes.
+//! with measured communication volumes and per-rank memory peaks.
 //!
 //!     cargo run --release --example distributed_dp -- --workers 2 --steps 5
+//!
+//! `--engine fabric|channel|serial` picks the execution engine (default:
+//! the concurrent fabric; all engines are bit-identical). `--workers`
+//! defaults to `ADAMA_RANKS` when set; `ADAMA_FABRIC=ring|tree` picks the
+//! reduction topology.
 
-use adama::collective::{run_data_parallel, run_zero1, DpSpec, SyncStrategy, Zero1Spec};
+use adama::collective::{
+    run_data_parallel, run_zero1, CollectiveEngine, DpSpec, SyncStrategy, Zero1Spec,
+};
 use adama::config::{OptimBackend, OptimizerKind, TrainConfig};
 use adama::runtime::ArtifactLibrary;
 use adama::util::cliargs::Args;
@@ -12,9 +19,28 @@ use adama::util::stats::fmt_bytes;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse_env();
-    let workers = args.parse_or("workers", 2usize)?;
+    // ADAMA_RANKS accepts an integer or a comma list (the sweep spelling
+    // the distributed tests use); the example runs the first entry
+    let default_workers = match std::env::var("ADAMA_RANKS") {
+        Ok(s) if !s.trim().is_empty() => {
+            let first = s.split(',').next().unwrap_or("").trim();
+            first.parse::<usize>().map_err(|_| {
+                anyhow::anyhow!(
+                    "invalid ADAMA_RANKS '{s}': expected a positive integer or comma list"
+                )
+            })?
+        }
+        _ => 2,
+    };
+    let workers = args.parse_or("workers", default_workers)?;
     let steps = args.parse_or("steps", 5u64)?;
     let n = args.parse_or("accum-steps", 4usize)?;
+    let engine = match args.get("engine").unwrap_or("fabric") {
+        "serial" => CollectiveEngine::Serial,
+        "channel" => CollectiveEngine::Channel,
+        "fabric" => CollectiveEngine::Fabric,
+        other => anyhow::bail!("unknown --engine '{other}' (expected serial|channel|fabric)"),
+    };
     let lib = ArtifactLibrary::open_default()?;
 
     let cfg = |opt| TrainConfig {
@@ -26,11 +52,12 @@ fn main() -> anyhow::Result<()> {
         ..TrainConfig::default()
     };
 
-    println!("=== {workers} workers, N={n}, {steps} steps ===\n");
+    println!("=== {workers} workers, N={n}, {steps} steps, engine={} ===\n", engine.name());
     println!(
         "{:<24} {:>10} {:>10} {:>14} {:>10}",
         "strategy", "loss[0]", "loss[-1]", "comm/step", "wall (s)"
     );
+    let mut state_world = None;
     for (sync, opt) in [
         (SyncStrategy::OptimizerStates, OptimizerKind::AdamA),
         (SyncStrategy::Gradients, OptimizerKind::AdamGA),
@@ -38,7 +65,7 @@ fn main() -> anyhow::Result<()> {
     ] {
         let r = run_data_parallel(
             lib.clone(),
-            DpSpec { cfg: cfg(opt), sync, steps, data_seed: 7 },
+            DpSpec::new(cfg(opt), sync, steps, 7).with_engine(engine),
         )?;
         println!(
             "{:<24} {:>10.4} {:>10.4} {:>14} {:>10.2}",
@@ -48,20 +75,49 @@ fn main() -> anyhow::Result<()> {
             fmt_bytes((r.comm_bytes / steps) as usize),
             r.elapsed_s,
         );
+        if sync == SyncStrategy::OptimizerStates {
+            state_world = Some(r.world_memory());
+        }
     }
 
-    println!("\n--- ZeRO-S1 (optimizer states partitioned across workers) ---");
-    for opt in [OptimizerKind::AdamA, OptimizerKind::AdamGA] {
-        let r = run_zero1(lib.clone(), Zero1Spec { cfg: cfg(opt), steps, data_seed: 7 })?;
-        println!(
-            "ZeRO-S1+{:<8} loss {:.4} -> {:.4}   comm/step {}   grads peak {}   optstate {}",
-            opt.name(),
-            r.losses[0],
-            r.losses.last().unwrap(),
-            fmt_bytes((r.comm_bytes / steps) as usize),
-            fmt_bytes(r.memory.peak_gradients),
-            fmt_bytes(r.memory.peak_optimizer),
-        );
+    if let Some(world) = state_world {
+        println!("\n--- per-rank memory (state-allreduce run) ---");
+        for (rank, snap) in world.ranks.iter().enumerate() {
+            println!(
+                "rank {rank}: weights {} grads {} states {} activations {} total {}",
+                fmt_bytes(snap.tracker.peak_weights),
+                fmt_bytes(snap.tracker.peak_gradients),
+                fmt_bytes(snap.tracker.peak_optimizer),
+                fmt_bytes(snap.tracker.peak_activations),
+                fmt_bytes(snap.tracker.peak_total),
+            );
+        }
+        if let Some(mx) = world.max_per_rank() {
+            println!(
+                "max/rank total {}   cluster total {}",
+                fmt_bytes(mx.tracker.peak_total),
+                fmt_bytes(world.total_peak_bytes() as usize),
+            );
+        }
+    }
+
+    if workers >= 2 {
+        println!("\n--- ZeRO-S1 (optimizer states partitioned across workers) ---");
+        for opt in [OptimizerKind::AdamA, OptimizerKind::AdamGA] {
+            let r = run_zero1(
+                lib.clone(),
+                Zero1Spec::new(cfg(opt), steps, 7).with_engine(engine),
+            )?;
+            println!(
+                "ZeRO-S1+{:<8} loss {:.4} -> {:.4}   comm/step {}   grads peak {}   optstate {}",
+                opt.name(),
+                r.losses[0],
+                r.losses.last().unwrap(),
+                fmt_bytes((r.comm_bytes / steps) as usize),
+                fmt_bytes(r.memory.peak_gradients),
+                fmt_bytes(r.memory.peak_optimizer),
+            );
+        }
     }
     println!("\nall ranks verified bit-identical after every run (asserted in the runner)");
     Ok(())

@@ -15,13 +15,21 @@
 //!     allowance;
 //!   * activation stash vs remat: the `small` block forward+backward
 //!     pair at budget 0 (per-layer remat) vs unlimited (stash hit —
-//!     backward skips the recompute), at 1 and 4 threads.
+//!     backward skips the recompute), at 1 and 4 threads;
+//!   * distributed engines: DP state-sync step time under the serial
+//!     simulator vs the concurrent fabric at 1/2/4 ranks, plus the
+//!     ZeRO-S1+AdamA per-layer overlap flow at 2 ranks (bit-identical
+//!     engines — `rust/tests/fabric_parity.rs` — so the rows measure
+//!     pure scheduling).
 //!
 //! Besides the human-readable table, writes `BENCH_perf.json` —
 //! machine-readable ns/elem per kernel per backend (each row tagged with
 //! its pool thread count and SIMD level) — so subsequent PRs have a perf
 //! trajectory to regress against.
 
+use adama::collective::{
+    run_data_parallel, run_zero1, CollectiveEngine, DpSpec, SyncStrategy, Zero1Spec,
+};
 use adama::config::{OptimBackend, OptimizerKind};
 use adama::data::MarkovCorpus;
 use adama::optim::{host_math, ChunkRunner, Hyper};
@@ -161,7 +169,7 @@ fn main() {
     banner("threadpool scaling: matmul + transformer block (1/2/4 threads)");
     println!("{:<18} {:>8} {:>12} {:>10}", "op", "threads", "ms/call", "speedup");
     let dim = if quick() { 96 } else { 256 };
-    let env_lvl = simd::Level::from_env();
+    let env_lvl = simd::Level::from_env().expect("valid ADAMA_SIMD");
     let mut mrng = Rng::new(7);
     let ma: Vec<f32> = (0..dim * dim).map(|_| mrng.normal()).collect();
     let mb: Vec<f32> = (0..dim * dim).map(|_| mrng.normal()).collect();
@@ -407,6 +415,73 @@ fn main() {
         }
     }
     println!("(the stashed backward skips the in-call forward recompute entirely)");
+
+    banner("distributed: concurrent fabric vs serial simulator (per rank count)");
+    println!(
+        "{:<24} {:>6} {:>12} {:>12} {:>8}",
+        "flow", "ranks", "serial ms", "fabric ms", "speedup"
+    );
+    let dsteps: u64 = if quick() { 1 } else { 2 };
+    for m in [1usize, 2, 4] {
+        let mut dcfg = cfg("tiny", OptimizerKind::AdamA, 2, 42);
+        dcfg.workers = m;
+        let time_dp = |engine: CollectiveEngine| {
+            let t0 = std::time::Instant::now();
+            run_data_parallel(
+                lib.clone(),
+                DpSpec::new(dcfg.clone(), SyncStrategy::OptimizerStates, dsteps, 7)
+                    .with_engine(engine),
+            )
+            .expect("dp run");
+            1e3 * t0.elapsed().as_secs_f64() / dsteps as f64
+        };
+        let serial_ms = time_dp(CollectiveEngine::Serial);
+        let fabric_ms = time_dp(CollectiveEngine::Fabric);
+        println!(
+            "{:<24} {:>6} {:>12.2} {:>12.2} {:>7.2}x",
+            "dp_state_allreduce", m, serial_ms, fabric_ms, serial_ms / fabric_ms
+        );
+        results.push(obj(vec![
+            ("op", "dp_fabric_vs_serial".into()),
+            ("backend", "host".into()),
+            ("ranks", m.into()),
+            ("threads", pool_threads.into()),
+            ("serial_ms_per_step", serial_ms.into()),
+            ("fabric_ms_per_step", fabric_ms.into()),
+            ("speedup_fabric_vs_serial", (serial_ms / fabric_ms).into()),
+        ]));
+    }
+    {
+        // ZeRO-S1+AdamA: the per-layer release-immediately reduce-scatter
+        // (paper's backward/reduce overlap) under both engines
+        let mut zcfg = cfg("tiny", OptimizerKind::AdamA, 2, 42);
+        zcfg.workers = 2;
+        let time_zero = |engine: CollectiveEngine| {
+            let t0 = std::time::Instant::now();
+            run_zero1(
+                lib.clone(),
+                Zero1Spec::new(zcfg.clone(), dsteps, 7).with_engine(engine),
+            )
+            .expect("zero1 run");
+            1e3 * t0.elapsed().as_secs_f64() / dsteps as f64
+        };
+        let serial_ms = time_zero(CollectiveEngine::Serial);
+        let fabric_ms = time_zero(CollectiveEngine::Fabric);
+        println!(
+            "{:<24} {:>6} {:>12.2} {:>12.2} {:>7.2}x",
+            "zero1_adama_overlap", 2, serial_ms, fabric_ms, serial_ms / fabric_ms
+        );
+        results.push(obj(vec![
+            ("op", "zero1_fabric_vs_serial".into()),
+            ("backend", "host".into()),
+            ("ranks", 2usize.into()),
+            ("threads", pool_threads.into()),
+            ("serial_ms_per_step", serial_ms.into()),
+            ("fabric_ms_per_step", fabric_ms.into()),
+            ("speedup_fabric_vs_serial", (serial_ms / fabric_ms).into()),
+        ]));
+    }
+    println!("(engines verified bit-identical in rust/tests/fabric_parity.rs)");
 
     banner("executor call count (instrumentation)");
     println!("exec calls so far: {}", lib.executor().exec_calls());

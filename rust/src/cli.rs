@@ -88,7 +88,7 @@ fn dp(args: &Args) -> Result<()> {
     };
     let steps = cfg.steps;
     let lib = Library::open_default()?;
-    let r = run_data_parallel(lib, DpSpec { cfg, sync, steps, data_seed: 7 })?;
+    let r = run_data_parallel(lib, DpSpec::new(cfg, sync, steps, 7))?;
     println!(
         "losses: {:.4} -> {:.4} over {} steps",
         r.losses[0],
@@ -109,7 +109,7 @@ fn zero1(args: &Args) -> Result<()> {
     let cfg = TrainConfig::from_args(args)?;
     let steps = cfg.steps;
     let lib = Library::open_default()?;
-    let r = run_zero1(lib, Zero1Spec { cfg, steps, data_seed: 7 })?;
+    let r = run_zero1(lib, Zero1Spec::new(cfg, steps, 7))?;
     println!(
         "losses: {:.4} -> {:.4}; comm/step {}; grad peak {}; optstate {}",
         r.losses[0],

@@ -1,7 +1,7 @@
 //! Data-parallel training runner (paper §3.3).
 //!
-//! Spawns `M` worker threads, each owning a full [`Trainer`] replica and a
-//! disjoint data shard, connected by a ring [`CommGroup`]. Three sync
+//! `M` workers, each owning a full [`Trainer`] replica and a disjoint
+//! data shard, synchronise through a [`Collective`] group. Three sync
 //! strategies reproduce the paper's design space:
 //!
 //! * [`SyncStrategy::OptimizerStates`] — **the paper's scheme**: decay `v`
@@ -13,15 +13,25 @@
 //! * [`SyncStrategy::GradPerMicrobatch`] — the naive AdamA distribution
 //!   the paper rejects: all-reduce every layer gradient every micro-batch
 //!   (O(N) collectives), integrating the *global* mean gradient.
+//!
+//! The [`CollectiveEngine`] picks how ranks execute: the concurrent
+//! fabric (default), the legacy channel ring, or the single-threaded
+//! serial simulator — all bit-for-bit identical
+//! (`rust/tests/fabric_parity.rs`). Concurrent ranks run on real OS
+//! threads; `threads_per_rank` re-pins each rank's host pool
+//! (`Library::fork_with_threads`), composing with `runtime::pool` /
+//! `runtime::simd` without changing a single bit.
 
 use std::sync::Arc;
+use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
-use super::comm::{CommGroup, CommHandle};
+use super::fabric::{serial, Fabric, Topology};
+use super::{rank_threads, Collective, CollectiveEngine, CommGroup, CommStats};
 use crate::config::{OptimizerKind, TrainConfig};
-use crate::coordinator::Trainer;
-use crate::data::MarkovCorpus;
+use crate::coordinator::{MemorySnapshot, Trainer, WorldMemory};
+use crate::data::{MarkovCorpus, MicroBatch};
 use crate::memory::MemoryReport;
 use crate::runtime::Library;
 
@@ -51,6 +61,44 @@ pub struct DpSpec {
     pub steps: u64,
     /// Markov corpus structure seed (shared); stream seeds fork per worker.
     pub data_seed: u64,
+    /// Execution engine (default: the concurrent fabric).
+    pub engine: CollectiveEngine,
+    /// Host pool threads per rank (`Library::fork_with_threads`); 0
+    /// (default) = split the default pool (`ADAMA_THREADS`) evenly
+    /// across ranks, so M ranks never fan out into M·T pool threads.
+    /// Pure performance knob — the pool is bit-exact at any count.
+    pub threads_per_rank: usize,
+    /// Reduction topology; `None` = `ADAMA_FABRIC` (default ring).
+    pub topology: Option<Topology>,
+}
+
+impl DpSpec {
+    pub fn new(cfg: TrainConfig, sync: SyncStrategy, steps: u64, data_seed: u64) -> Self {
+        Self {
+            cfg,
+            sync,
+            steps,
+            data_seed,
+            engine: CollectiveEngine::Fabric,
+            threads_per_rank: 0,
+            topology: None,
+        }
+    }
+
+    pub fn with_engine(mut self, engine: CollectiveEngine) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    pub fn with_topology(mut self, topo: Topology) -> Self {
+        self.topology = Some(topo);
+        self
+    }
+
+    pub fn with_rank_threads(mut self, threads: usize) -> Self {
+        self.threads_per_rank = threads;
+        self
+    }
 }
 
 /// Result of a distributed run.
@@ -62,33 +110,66 @@ pub struct DpReport {
     pub comm_bytes: u64,
     pub comm_ops: u64,
     pub elapsed_s: f64,
+    /// Rank-0 coordinator tracker peaks (back-compat convenience).
     pub memory: MemoryReport,
+    /// Coordinator + executor peaks for every rank, in rank order.
+    pub per_rank_memory: Vec<MemorySnapshot>,
+    pub engine: CollectiveEngine,
 }
 
-/// Run `spec.steps` mini-batches across `spec.cfg.workers` worker threads.
+impl DpReport {
+    /// Per-rank snapshots with world-level aggregation.
+    pub fn world_memory(&self) -> WorldMemory {
+        WorldMemory::new(self.per_rank_memory.clone())
+    }
+}
+
+/// Run `spec.steps` mini-batches across `spec.cfg.workers` workers.
 pub fn run_data_parallel(lib: Arc<Library>, spec: DpSpec) -> Result<DpReport> {
     let m = spec.cfg.workers;
     spec.cfg.validate()?;
-    if spec.sync != SyncStrategy::Gradients
-        && spec.cfg.optimizer != OptimizerKind::AdamA
-    {
+    if spec.sync != SyncStrategy::Gradients && spec.cfg.optimizer != OptimizerKind::AdamA {
         bail!("{:?} sync requires AdamA", spec.sync);
     }
-    let handles = CommGroup::new(m);
+    let topo = match spec.topology {
+        Some(t) => t,
+        None => Topology::from_env()?,
+    };
+    let tpr = rank_threads(spec.threads_per_rank, m)?;
+    match spec.engine {
+        CollectiveEngine::Serial => run_dp_serial(lib, spec, topo, tpr),
+        CollectiveEngine::Channel => {
+            // the channel ring's fold order *is* the ring topology; a
+            // tree request must not be silently downgraded
+            super::ensure_ring_only(topo)?;
+            run_dp_threaded(lib, spec, CommGroup::new(m), tpr)
+        }
+        CollectiveEngine::Fabric => {
+            run_dp_threaded(lib, spec, Fabric::with_topology(m, topo), tpr)
+        }
+    }
+}
+
+fn run_dp_threaded<C: Collective + 'static>(
+    lib: Arc<Library>,
+    spec: DpSpec,
+    handles: Vec<C>,
+    tpr: usize,
+) -> Result<DpReport> {
     let stats = handles[0].stats().clone();
-    let t0 = std::time::Instant::now();
+    let t0 = Instant::now();
 
     let mut joins = Vec::new();
     for comm in handles {
-        // Per-rank fork. Each rank is already its own OS thread: pin the
-        // host executor's intra-op pool to one worker per rank so M ranks
+        // Per-rank fork. Each rank is its own OS thread: re-pin the host
+        // executor's intra-op pool to `tpr` workers per rank so M ranks
         // don't fan out into M·T pool threads (oversubscription), and —
         // when an activation stash budget is set — give every rank a
         // private arena so concurrent ranks never evict or meter each
         // other's entries. Numerics are unaffected — the pool is
         // bit-for-bit identical at any thread count, and stash/remat are
         // bit-identical.
-        let lib = lib.fork_with_threads(1);
+        let lib = lib.fork_with_threads(tpr);
         let spec = spec.clone();
         joins.push(std::thread::spawn(move || worker(lib, spec, comm)));
     }
@@ -102,10 +183,7 @@ pub fn run_data_parallel(lib: Arc<Library>, spec: DpSpec) -> Result<DpReport> {
     let r0 = &results[0];
     for (r, out) in results.iter().enumerate().skip(1) {
         for (l, (a, b)) in r0.params.iter().zip(&out.params).enumerate() {
-            anyhow::ensure!(
-                a == b,
-                "rank {r} layer {l} parameters diverged from rank 0"
-            );
+            ensure!(a == b, "rank {r} layer {l} parameters diverged from rank 0");
         }
     }
 
@@ -115,17 +193,19 @@ pub fn run_data_parallel(lib: Arc<Library>, spec: DpSpec) -> Result<DpReport> {
         comm_bytes: stats.bytes(),
         comm_ops: stats.op_count(),
         elapsed_s,
-        memory: r0.memory,
+        memory: r0.mem.tracker,
+        per_rank_memory: results.iter().map(|r| r.mem).collect(),
+        engine: spec.engine,
     })
 }
 
 struct WorkerOut {
     losses: Vec<f32>,
     params: Vec<Vec<f32>>,
-    memory: MemoryReport,
+    mem: MemorySnapshot,
 }
 
-fn worker(lib: Arc<Library>, spec: DpSpec, comm: CommHandle) -> Result<WorkerOut> {
+fn worker<C: Collective>(lib: Arc<Library>, spec: DpSpec, comm: C) -> Result<WorkerOut> {
     let m = comm.world();
     let n = spec.cfg.accum_steps;
     let mut trainer = Trainer::new(lib, spec.cfg.clone())?;
@@ -203,6 +283,200 @@ fn worker(lib: Arc<Library>, spec: DpSpec, comm: CommHandle) -> Result<WorkerOut
     Ok(WorkerOut {
         losses,
         params: trainer.params().iter().map(|p| p.flat.clone()).collect(),
-        memory: trainer.tracker().report(),
+        mem: MemorySnapshot {
+            tracker: trainer.tracker().report(),
+            host: trainer.library().executor().memory(),
+        },
+    })
+}
+
+/// The serial simulator: all ranks advance in one thread, phase by phase,
+/// with reductions folded by [`serial`] in the same fixed order the
+/// concurrent engines use — the bit-for-bit oracle for the fabric.
+fn run_dp_serial(
+    lib: Arc<Library>,
+    spec: DpSpec,
+    topo: Topology,
+    tpr: usize,
+) -> Result<DpReport> {
+    let m = spec.cfg.workers;
+    let n = spec.cfg.accum_steps;
+    let stats = Arc::new(CommStats::default());
+    let t0 = Instant::now();
+
+    let mut trainers = Vec::with_capacity(m);
+    let mut corpora = Vec::with_capacity(m);
+    for r in 0..m {
+        let rlib = lib.fork_with_threads(tpr);
+        let trainer = Trainer::new(rlib, spec.cfg.clone())?;
+        let h = trainer.spec().hyper.clone();
+        corpora.push(MarkovCorpus::new(h.vocab, spec.data_seed, 1_000_003 * (r as u64 + 1)));
+        trainers.push(trainer);
+    }
+    let h = trainers[0].spec().hyper.clone();
+    let n_layers = trainers[0].spec().layers.len();
+
+    let mut losses = Vec::with_capacity(spec.steps as usize);
+    for _ in 0..spec.steps {
+        let mbs: Vec<Vec<MicroBatch>> =
+            corpora.iter_mut().map(|c| c.minibatch(n, h.microbatch, h.seq)).collect();
+        let mut rank_loss = vec![0.0f32; m];
+        match spec.sync {
+            SyncStrategy::OptimizerStates => {
+                for (r, t) in trainers.iter_mut().enumerate() {
+                    t.optimizer_mut().set_v_decay_factor(m as f32);
+                    rank_loss[r] = t.accumulate_minibatch(&mbs[r], 1.0 / n as f32)?;
+                }
+                let inv_m2 = 1.0 / (m * m) as f32;
+                for l in 0..n_layers {
+                    // Eq. 7: m := ring-mean across ranks
+                    let mut bufs = Vec::with_capacity(m);
+                    for t in trainers.iter_mut() {
+                        bufs.push(
+                            t.optimizer_mut().adam_states_mut().context("AdamA states")?.m[l]
+                                .clone(),
+                        );
+                    }
+                    serial::all_reduce_mean(topo, &mut bufs, &stats)?;
+                    for (t, b) in trainers.iter_mut().zip(&bufs) {
+                        t.optimizer_mut().adam_states_mut().context("AdamA states")?.m[l]
+                            .copy_from_slice(b);
+                    }
+                    // Eq. 8: v := ring-sum / M²
+                    let mut bufs = Vec::with_capacity(m);
+                    for t in trainers.iter_mut() {
+                        bufs.push(
+                            t.optimizer_mut().adam_states_mut().context("AdamA states")?.v[l]
+                                .clone(),
+                        );
+                    }
+                    serial::all_reduce_sum(topo, &mut bufs, &stats)?;
+                    for (t, b) in trainers.iter_mut().zip(&bufs) {
+                        let states =
+                            t.optimizer_mut().adam_states_mut().context("AdamA states")?;
+                        states.v[l].copy_from_slice(b);
+                        for x in states.v[l].iter_mut() {
+                            *x *= inv_m2;
+                        }
+                    }
+                }
+                for t in trainers.iter_mut() {
+                    t.apply_update()?;
+                }
+            }
+            SyncStrategy::Gradients => {
+                for (r, t) in trainers.iter_mut().enumerate() {
+                    rank_loss[r] = t.accumulate_minibatch(&mbs[r], 1.0 / n as f32)?;
+                }
+                for l in 0..n_layers {
+                    let mut bufs = Vec::with_capacity(m);
+                    for t in trainers.iter_mut() {
+                        bufs.push(
+                            t.optimizer_mut()
+                                .as_adamga_mut()
+                                .context("Gradients sync requires AdamGA")?
+                                .grad_acc_mut()[l]
+                                .clone(),
+                        );
+                    }
+                    serial::all_reduce_mean(topo, &mut bufs, &stats)?;
+                    for (t, b) in trainers.iter_mut().zip(&bufs) {
+                        t.optimizer_mut()
+                            .as_adamga_mut()
+                            .context("Gradients sync requires AdamGA")?
+                            .grad_acc_mut()[l]
+                            .copy_from_slice(b);
+                    }
+                }
+                for t in trainers.iter_mut() {
+                    t.apply_update()?;
+                }
+            }
+            SyncStrategy::GradPerMicrobatch => {
+                let gscale = 1.0 / n as f32;
+                let t_next = trainers[0].step() + 1;
+                for t in trainers.iter_mut() {
+                    t.optimizer_mut().set_v_decay_factor(1.0);
+                    let (_core, opt) = t.parts_mut();
+                    opt.begin_minibatch(t_next)?;
+                }
+                let mut sums = vec![0.0f64; m];
+                for i in 0..n {
+                    // run every rank's i-th micro-batch, buffering layer
+                    // gradients in production order
+                    let mut grads: Vec<Vec<(usize, Vec<f32>)>> = Vec::with_capacity(m);
+                    for (r, t) in trainers.iter_mut().enumerate() {
+                        let mut buf: Vec<(usize, Vec<f32>)> = Vec::new();
+                        let loss = t.accumulate_minibatch_sink(
+                            std::slice::from_ref(&mbs[r][i]),
+                            &mut |layer, grad| {
+                                buf.push((layer, grad.to_vec()));
+                                Ok(())
+                            },
+                        )?;
+                        sums[r] += loss as f64;
+                        grads.push(buf);
+                    }
+                    // globally average each gradient in the fixed chain
+                    // order, then integrate on every rank — bit-identical
+                    // to the concurrent sink (per-layer state integration
+                    // commutes with the rest of the backward)
+                    let k_count = grads[0].len();
+                    for g in &grads {
+                        ensure!(
+                            g.len() == k_count,
+                            "ranks produced different gradient counts"
+                        );
+                    }
+                    for k in 0..k_count {
+                        let layer = grads[0][k].0;
+                        let mut bufs: Vec<Vec<f32>> =
+                            grads.iter().map(|g| g[k].1.clone()).collect();
+                        serial::all_reduce_mean(topo, &mut bufs, &stats)?;
+                        for (t, b) in trainers.iter_mut().zip(&bufs) {
+                            let (_core, opt) = t.parts_mut();
+                            opt.accumulate(layer, b, gscale)?;
+                        }
+                    }
+                }
+                for (r, t) in trainers.iter_mut().enumerate() {
+                    t.apply_update()?;
+                    rank_loss[r] = (sums[r] / n as f64) as f32;
+                }
+            }
+        }
+        // mini-batch loss averaged across ranks (reporting only) — the
+        // same single-element ring mean the worker path applies
+        let mut lbufs: Vec<Vec<f32>> = rank_loss.iter().map(|&l| vec![l]).collect();
+        serial::all_reduce_mean(topo, &mut lbufs, &stats)?;
+        losses.push(lbufs[0][0]);
+    }
+
+    let final_params: Vec<Vec<f32>> =
+        trainers[0].params().iter().map(|p| p.flat.clone()).collect();
+    for (r, t) in trainers.iter().enumerate().skip(1) {
+        for (l, (a, b)) in
+            final_params.iter().zip(t.params().iter().map(|p| &p.flat)).enumerate()
+        {
+            ensure!(a == b, "rank {r} layer {l} parameters diverged from rank 0");
+        }
+    }
+    let per_rank_memory: Vec<MemorySnapshot> = trainers
+        .iter()
+        .map(|t| MemorySnapshot {
+            tracker: t.tracker().report(),
+            host: t.library().executor().memory(),
+        })
+        .collect();
+
+    Ok(DpReport {
+        losses,
+        final_params,
+        comm_bytes: stats.bytes(),
+        comm_ops: stats.op_count(),
+        elapsed_s: t0.elapsed().as_secs_f64(),
+        memory: per_rank_memory[0].tracker,
+        per_rank_memory,
+        engine: CollectiveEngine::Serial,
     })
 }

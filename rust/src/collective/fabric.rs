@@ -1,0 +1,794 @@
+//! `collective::fabric` — a concurrent multi-rank collective fabric with
+//! **deterministic** reductions.
+//!
+//! N ranks run simultaneously on real OS threads (each owning its forked
+//! `Library`/executor, composing with `runtime::pool` and `runtime::simd`)
+//! and meet at a shared-memory board instead of a point-to-point channel
+//! ring. Every collective has a **fixed reduction order that is
+//! independent of arrival timing**: ranks post their contributions, a
+//! barrier separates the post phase from the compute phase, and each
+//! reduced shard is folded in a statically-determined rank order. Under
+//! IEEE-754 f32 this makes an N-rank concurrent run bit-for-bit identical
+//! to the single-threaded reference in [`serial`] — and, for
+//! [`Topology::Ring`], to the legacy lock-step channel ring
+//! ([`CommHandle`]) — at any `ADAMA_THREADS` / `ADAMA_SIMD` setting.
+//!
+//! ## The determinism contract
+//!
+//! For a buffer split into per-rank shards by
+//! [`CommHandle::shard_ranges`], shard `j` is reduced as the left-to-right
+//! chain
+//!
+//! ```text
+//! ((x_j + x_{j+1}) + x_{j+2}) + … + x_{j+M-1}        (indices mod M)
+//! ```
+//!
+//! for [`Topology::Ring`] — exactly the order in which the channel ring's
+//! reduce-scatter folds contributions (f32 addition is commutative
+//! bit-for-bit, so chain-from-`j` equals the ring's arrival order) — and
+//! as a fixed balanced pairwise bracketing over rank order `0..M` for
+//! [`Topology::Tree`]. Neither depends on *when* a rank arrives, only on
+//! rank indices, so injected delays cannot change a single bit
+//! (`rust/tests/proptests.rs` asserts this under random per-rank sleeps).
+//!
+//! ## Volume ledger
+//!
+//! The fabric never moves bytes over a wire, but it keeps the same
+//! [`CommStats`] ledger the channel ring keeps — per rank, the payload a
+//! real ring interconnect would carry (`2·(M-1)/M · bytes` for
+//! all-reduce, half that for reduce-scatter / all-gather) — so Figure-7
+//! style volume measurements are engine-independent.
+//!
+//! ## Failure semantics
+//!
+//! Collectives must be entered by every rank, in the same order (like
+//! NCCL). If a rank errors out and drops its handle while peers are
+//! blocked inside a collective, the internal gate converts the would-be
+//! deadlock into a `"rank handle dropped"` error on the surviving ranks.
+
+use std::ops::Range;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError, RwLock};
+
+use anyhow::{bail, ensure, Result};
+
+use super::comm::{CommHandle, CommStats};
+
+/// Reduction topology of the fabric (`ADAMA_FABRIC`).
+///
+/// Both orders are fully deterministic; they differ only in how the f32
+/// additions are bracketed, so runs under different topologies are each
+/// internally reproducible but not bit-comparable to each other.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    /// Left-to-right chain per shard, starting at the shard's index —
+    /// bit-identical to the legacy channel ring (the default).
+    Ring,
+    /// Fixed balanced pairwise bracketing over rank order `0..M` —
+    /// `(x0+x1) + (x2+x3) …` — the order a tree all-reduce applies.
+    Tree,
+}
+
+impl Topology {
+    pub const ALL: [Topology; 2] = [Topology::Ring, Topology::Tree];
+
+    /// Stable lower-case name (the `ADAMA_FABRIC` spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            Topology::Ring => "ring",
+            Topology::Tree => "tree",
+        }
+    }
+
+    /// Strictly resolve an `ADAMA_FABRIC` value: unset/empty defaults to
+    /// [`Topology::Ring`]; anything other than `ring`/`tree` is an error
+    /// naming the accepted values (no silent fallback).
+    pub fn parse(spec: Option<&str>) -> Result<Topology> {
+        let s = match spec.map(str::trim) {
+            Some(s) if !s.is_empty() => s.to_ascii_lowercase(),
+            _ => return Ok(Topology::Ring),
+        };
+        match s.as_str() {
+            "ring" => Ok(Topology::Ring),
+            "tree" => Ok(Topology::Tree),
+            other => {
+                bail!("invalid ADAMA_FABRIC '{other}': expected ring|tree (unset = ring)")
+            }
+        }
+    }
+
+    /// Topology from the `ADAMA_FABRIC` environment variable.
+    pub fn from_env() -> Result<Topology> {
+        Self::parse(std::env::var("ADAMA_FABRIC").ok().as_deref())
+    }
+}
+
+/// Element-wise `dst[i] = dst[i] + src[i]` — the single f32 operation all
+/// reduction chains are built from. The per-element addition order *is*
+/// the determinism contract; nothing here may reassociate it.
+fn add_assign(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += *s;
+    }
+}
+
+/// Reduce `contribs` (one slice per rank, equal lengths) in the fixed
+/// order the topology prescribes. `start` seeds the ring chain (the
+/// shard index); the tree bracketing ignores it.
+fn reduce_contribs(topo: Topology, start: usize, contribs: &[&[f32]]) -> Vec<f32> {
+    let m = contribs.len();
+    debug_assert!(m >= 1);
+    match topo {
+        Topology::Ring => {
+            let mut acc = contribs[start % m].to_vec();
+            for k in 1..m {
+                add_assign(&mut acc, contribs[(start + k) % m]);
+            }
+            acc
+        }
+        Topology::Tree => {
+            let mut level: Vec<Vec<f32>> = contribs.iter().map(|c| c.to_vec()).collect();
+            while level.len() > 1 {
+                let mut next = Vec::with_capacity((level.len() + 1) / 2);
+                let mut it = level.into_iter();
+                while let Some(mut a) = it.next() {
+                    if let Some(b) = it.next() {
+                        add_assign(&mut a, &b);
+                    }
+                    next.push(a);
+                }
+                level = next;
+            }
+            level.pop().unwrap()
+        }
+    }
+}
+
+/// Payload bytes rank `rank` would send over a real ring during one
+/// reduce-scatter phase of `len` f32s: every shard except the one it ends
+/// up owning — exactly the channel ring's per-rank ledger.
+fn reduce_scatter_wire_bytes(rank: usize, len: usize, world: usize) -> u64 {
+    if world <= 1 {
+        return 0;
+    }
+    let shards = CommHandle::shard_ranges(len, world);
+    ((len - shards[(rank + 1) % world].len()) * 4) as u64
+}
+
+/// Per-rank ring wire bytes for one all-gather phase: every shard except
+/// `(rank + 2) mod M` (the last one it receives).
+fn all_gather_wire_bytes(rank: usize, len: usize, world: usize) -> u64 {
+    if world <= 1 {
+        return 0;
+    }
+    let shards = CommHandle::shard_ranges(len, world);
+    ((len - shards[(rank + 2) % world].len()) * 4) as u64
+}
+
+/// Reusable world-wide rendezvous. Unlike `std::sync::Barrier`, a rank
+/// handle dropped mid-collective (error/panic on a peer, or mismatched
+/// collective entry counts) wakes every waiter with an error instead of
+/// deadlocking.
+struct Gate {
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+struct GateState {
+    arrived: usize,
+    generation: u64,
+    /// Handles dropped so far — nonzero while anyone still waits means a
+    /// peer can never arrive.
+    gone: usize,
+}
+
+impl Gate {
+    fn new() -> Self {
+        Self {
+            state: Mutex::new(GateState { arrived: 0, generation: 0, gone: 0 }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, GateState> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    fn wait(&self, world: usize) -> Result<()> {
+        let mut s = self.lock();
+        ensure!(
+            s.gone == 0,
+            "fabric: {} rank handle(s) dropped mid-run — every rank must enter every \
+             collective, in the same order",
+            s.gone
+        );
+        s.arrived += 1;
+        if s.arrived == world {
+            s.arrived = 0;
+            s.generation = s.generation.wrapping_add(1);
+            drop(s);
+            self.cv.notify_all();
+            return Ok(());
+        }
+        let gen = s.generation;
+        while s.generation == gen {
+            ensure!(
+                s.gone == 0,
+                "fabric: a peer rank exited while this rank was blocked in a collective"
+            );
+            s = self.cv.wait(s).unwrap_or_else(PoisonError::into_inner);
+        }
+        Ok(())
+    }
+
+    fn abandon(&self) {
+        let mut s = self.lock();
+        s.gone += 1;
+        drop(s);
+        self.cv.notify_all();
+    }
+}
+
+/// Shared state of one fabric group.
+struct Board {
+    world: usize,
+    topo: Topology,
+    /// Per-rank posted contribution (written only by the owning rank,
+    /// read by everyone after the gate).
+    input: Vec<RwLock<Vec<f32>>>,
+    /// Per-rank reduced shard (reduce-scatter layout: rank `r` publishes
+    /// shard `(r+1) mod M` here).
+    reduced: Vec<RwLock<Vec<f32>>>,
+    gate: Gate,
+    stats: Arc<CommStats>,
+}
+
+fn read_slot(slot: &RwLock<Vec<f32>>) -> std::sync::RwLockReadGuard<'_, Vec<f32>> {
+    slot.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn write_slot(slot: &RwLock<Vec<f32>>) -> std::sync::RwLockWriteGuard<'_, Vec<f32>> {
+    slot.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Factory for fabric-connected rank handles.
+pub struct Fabric;
+
+impl Fabric {
+    /// Create `world` handles on the default [`Topology::Ring`].
+    pub fn new(world: usize) -> Vec<FabricHandle> {
+        Self::with_topology(world, Topology::Ring)
+    }
+
+    /// Create `world` handles with an explicit reduction topology.
+    pub fn with_topology(world: usize, topo: Topology) -> Vec<FabricHandle> {
+        assert!(world >= 1, "fabric needs at least one rank");
+        let board = Arc::new(Board {
+            world,
+            topo,
+            input: (0..world).map(|_| RwLock::new(Vec::new())).collect(),
+            reduced: (0..world).map(|_| RwLock::new(Vec::new())).collect(),
+            gate: Gate::new(),
+            stats: Arc::new(CommStats::default()),
+        });
+        (0..world).map(|rank| FabricHandle { rank, board: board.clone() }).collect()
+    }
+}
+
+/// One rank's endpoint in the fabric. Moves into the rank's worker
+/// thread; all collectives are synchronous and must be entered by every
+/// rank in the same order.
+pub struct FabricHandle {
+    rank: usize,
+    board: Arc<Board>,
+}
+
+impl Drop for FabricHandle {
+    fn drop(&mut self) {
+        // After a normal run every rank has left its last collective, so
+        // nobody is waiting and this is a no-op; after an error it wakes
+        // blocked peers with a clear failure instead of a deadlock.
+        self.board.gate.abandon();
+    }
+}
+
+impl FabricHandle {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn world(&self) -> usize {
+        self.board.world
+    }
+
+    pub fn topology(&self) -> Topology {
+        self.board.topo
+    }
+
+    pub fn stats(&self) -> &Arc<CommStats> {
+        &self.board.stats
+    }
+
+    /// Publish this rank's contribution to the board.
+    fn post(&self, data: &[f32]) {
+        let mut slot = write_slot(&self.board.input[self.rank]);
+        slot.clear();
+        slot.extend_from_slice(data);
+    }
+
+    /// Snapshot every rank's posted contribution for shard `j` and fold
+    /// it in the topology's fixed order. Caller must hold the post gate.
+    fn reduce_shard(&self, shards: &[Range<usize>], j: usize, len: usize) -> Result<Vec<f32>> {
+        let m = self.board.world;
+        let guards: Vec<_> = (0..m).map(|r| read_slot(&self.board.input[r])).collect();
+        for g in &guards {
+            ensure!(
+                g.len() == len,
+                "fabric: ranks posted different buffer lengths ({} vs {len})",
+                g.len()
+            );
+        }
+        let contribs: Vec<&[f32]> = guards.iter().map(|g| &g[shards[j].clone()]).collect();
+        Ok(reduce_contribs(self.board.topo, j, &contribs))
+    }
+
+    /// All-reduce (sum) in place: every rank ends with the element-wise
+    /// sum, reduced in the fixed per-shard order (see module docs).
+    pub fn all_reduce_sum(&self, data: &mut [f32]) -> Result<()> {
+        let m = self.board.world;
+        self.board.stats.ops.fetch_add(1, Ordering::Relaxed);
+        self.board.stats.bytes_sent.fetch_add(
+            reduce_scatter_wire_bytes(self.rank, data.len(), m)
+                + all_gather_wire_bytes(self.rank, data.len(), m),
+            Ordering::Relaxed,
+        );
+        if m == 1 {
+            return Ok(());
+        }
+        let shards = CommHandle::shard_ranges(data.len(), m);
+        self.post(data);
+        self.board.gate.wait(m)?;
+        // Each rank folds the shard it owns — shard (rank+1) mod M, the
+        // reduce-scatter layout — and publishes it; the fold order is a
+        // pure function of (shard index, world), never arrival time.
+        let own = (self.rank + 1) % m;
+        let red = self.reduce_shard(&shards, own, data.len())?;
+        *write_slot(&self.board.reduced[self.rank]) = red;
+        self.board.gate.wait(m)?;
+        for (j, shard) in shards.iter().enumerate() {
+            let owner = (j + m - 1) % m;
+            let g = read_slot(&self.board.reduced[owner]);
+            data[shard.clone()].copy_from_slice(&g);
+        }
+        Ok(())
+    }
+
+    /// All-reduce then scale by `1/world` (mean) — Eq. 7's m-averaging.
+    pub fn all_reduce_mean(&self, data: &mut [f32]) -> Result<()> {
+        self.all_reduce_sum(data)?;
+        let inv = 1.0 / self.board.world as f32;
+        for x in data.iter_mut() {
+            *x *= inv;
+        }
+        Ok(())
+    }
+
+    /// Reduce-scatter (sum): on return `data`'s own shard (the returned
+    /// range, `(rank+1) mod M` of [`CommHandle::shard_ranges`]) holds the
+    /// cross-rank sum; other regions are left untouched (callers must not
+    /// read them, matching the channel ring's contract).
+    pub fn reduce_scatter_sum(&self, data: &mut [f32]) -> Result<Range<usize>> {
+        let m = self.board.world;
+        self.board.stats.ops.fetch_add(1, Ordering::Relaxed);
+        self.board
+            .stats
+            .bytes_sent
+            .fetch_add(reduce_scatter_wire_bytes(self.rank, data.len(), m), Ordering::Relaxed);
+        let shards = CommHandle::shard_ranges(data.len(), m);
+        let own = (self.rank + 1) % m;
+        if m == 1 {
+            return Ok(shards[own].clone());
+        }
+        self.post(data);
+        self.board.gate.wait(m)?;
+        let red = self.reduce_shard(&shards, own, data.len())?;
+        data[shards[own].clone()].copy_from_slice(&red);
+        // Trailing gate: nobody may repost for the next collective while
+        // a peer still reads this one's board.
+        self.board.gate.wait(m)?;
+        Ok(shards[own].clone())
+    }
+
+    /// All-gather: each rank contributes the shard it owns (reduce-scatter
+    /// layout); on return the whole buffer is consistent on every rank.
+    pub fn all_gather_owned(&self, data: &mut [f32]) -> Result<()> {
+        let m = self.board.world;
+        self.board.stats.ops.fetch_add(1, Ordering::Relaxed);
+        self.board
+            .stats
+            .bytes_sent
+            .fetch_add(all_gather_wire_bytes(self.rank, data.len(), m), Ordering::Relaxed);
+        if m == 1 {
+            return Ok(());
+        }
+        let shards = CommHandle::shard_ranges(data.len(), m);
+        self.post(data);
+        self.board.gate.wait(m)?;
+        for (j, shard) in shards.iter().enumerate() {
+            let owner = (j + m - 1) % m;
+            if owner == self.rank {
+                continue;
+            }
+            let g = read_slot(&self.board.input[owner]);
+            ensure!(
+                g.len() == data.len(),
+                "fabric: ranks posted different buffer lengths ({} vs {})",
+                g.len(),
+                data.len()
+            );
+            data[shard.clone()].copy_from_slice(&g[shard.clone()]);
+        }
+        self.board.gate.wait(m)?;
+        Ok(())
+    }
+
+    /// Barrier: returns once every rank has entered.
+    pub fn barrier(&self) -> Result<()> {
+        if self.board.world == 1 {
+            return Ok(());
+        }
+        self.board.gate.wait(self.board.world)
+    }
+}
+
+/// Single-threaded reference twins of the fabric collectives — the
+/// **serial simulator**. Each helper takes one buffer per rank and applies
+/// the exact reduction order the concurrent fabric applies, so a serial
+/// run is the bit-for-bit oracle for any concurrent run (and, on
+/// [`Topology::Ring`], for the legacy channel ring). The [`CommStats`]
+/// ledger records the same wire volume the concurrent engines record.
+pub mod serial {
+    use super::*;
+
+    fn check_world(bufs: &[Vec<f32>]) -> Result<usize> {
+        ensure!(!bufs.is_empty(), "serial collective needs at least one rank buffer");
+        let len = bufs[0].len();
+        for b in bufs {
+            ensure!(b.len() == len, "serial collective: rank buffer lengths differ");
+        }
+        Ok(len)
+    }
+
+    /// All-reduce (sum) across `bufs[rank]`, in place on every rank.
+    pub fn all_reduce_sum(topo: Topology, bufs: &mut [Vec<f32>], stats: &CommStats) -> Result<()> {
+        let len = check_world(bufs)?;
+        let m = bufs.len();
+        stats.ops.fetch_add(m as u64, Ordering::Relaxed);
+        let wire: u64 = (0..m)
+            .map(|r| {
+                reduce_scatter_wire_bytes(r, len, m) + all_gather_wire_bytes(r, len, m)
+            })
+            .sum();
+        stats.bytes_sent.fetch_add(wire, Ordering::Relaxed);
+        if m == 1 {
+            return Ok(());
+        }
+        let shards = CommHandle::shard_ranges(len, m);
+        let mut reduced: Vec<Vec<f32>> = Vec::with_capacity(m);
+        for (j, shard) in shards.iter().enumerate() {
+            let contribs: Vec<&[f32]> = bufs.iter().map(|b| &b[shard.clone()]).collect();
+            reduced.push(reduce_contribs(topo, j, &contribs));
+        }
+        for b in bufs.iter_mut() {
+            for (j, shard) in shards.iter().enumerate() {
+                b[shard.clone()].copy_from_slice(&reduced[j]);
+            }
+        }
+        Ok(())
+    }
+
+    /// All-reduce then scale by `1/world` on every rank.
+    pub fn all_reduce_mean(topo: Topology, bufs: &mut [Vec<f32>], stats: &CommStats) -> Result<()> {
+        all_reduce_sum(topo, bufs, stats)?;
+        let inv = 1.0 / bufs.len() as f32;
+        for b in bufs.iter_mut() {
+            for x in b.iter_mut() {
+                *x *= inv;
+            }
+        }
+        Ok(())
+    }
+
+    /// Reduce-scatter (sum): rank `r`'s owned range (returned, index `r`)
+    /// holds the cross-rank sum afterwards; other regions are untouched.
+    pub fn reduce_scatter_sum(
+        topo: Topology,
+        bufs: &mut [Vec<f32>],
+        stats: &CommStats,
+    ) -> Result<Vec<Range<usize>>> {
+        let len = check_world(bufs)?;
+        let m = bufs.len();
+        stats.ops.fetch_add(m as u64, Ordering::Relaxed);
+        let wire: u64 = (0..m).map(|r| reduce_scatter_wire_bytes(r, len, m)).sum();
+        stats.bytes_sent.fetch_add(wire, Ordering::Relaxed);
+        let shards = CommHandle::shard_ranges(len, m);
+        let owned: Vec<Range<usize>> = (0..m).map(|r| shards[(r + 1) % m].clone()).collect();
+        if m == 1 {
+            return Ok(owned);
+        }
+        for r in 0..m {
+            let j = (r + 1) % m;
+            let red = {
+                let contribs: Vec<&[f32]> = bufs.iter().map(|b| &b[shards[j].clone()]).collect();
+                reduce_contribs(topo, j, &contribs)
+            };
+            // Writing rank r's owned shard never feeds a later chain: each
+            // rank owns a distinct shard index, and shard j's chain reads
+            // only region j of every buffer.
+            bufs[r][shards[j].clone()].copy_from_slice(&red);
+        }
+        Ok(owned)
+    }
+
+    /// All-gather: copy each owned shard (reduce-scatter layout) from its
+    /// owner into every rank's buffer.
+    pub fn all_gather_owned(bufs: &mut [Vec<f32>], stats: &CommStats) -> Result<()> {
+        let len = check_world(bufs)?;
+        let m = bufs.len();
+        stats.ops.fetch_add(m as u64, Ordering::Relaxed);
+        let wire: u64 = (0..m).map(|r| all_gather_wire_bytes(r, len, m)).sum();
+        stats.bytes_sent.fetch_add(wire, Ordering::Relaxed);
+        if m == 1 {
+            return Ok(());
+        }
+        let shards = CommHandle::shard_ranges(len, m);
+        for (j, shard) in shards.iter().enumerate() {
+            let owner = (j + m - 1) % m;
+            let src = bufs[owner][shard.clone()].to_vec();
+            for (r, b) in bufs.iter_mut().enumerate() {
+                if r != owner {
+                    b[shard.clone()].copy_from_slice(&src);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::CommGroup;
+    use crate::tensor::Rng;
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    fn randvec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    /// Run one closure per rank on its own OS thread.
+    fn run_fabric<F>(world: usize, topo: Topology, f: F) -> Vec<Vec<f32>>
+    where
+        F: Fn(FabricHandle) -> Vec<f32> + Send + Sync + Clone + 'static,
+    {
+        let handles = Fabric::with_topology(world, topo);
+        let mut joins = Vec::new();
+        for h in handles {
+            let f = f.clone();
+            joins.push(std::thread::spawn(move || f(h)));
+        }
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn all_reduce_matches_serial_and_channel_for_awkward_worlds() {
+        // non-power-of-two worlds, zero-length shards (len < world), the
+        // single-rank degenerate ring, and len = 0
+        for &m in &[1usize, 2, 3, 4, 5, 7, 8] {
+            for &len in &[0usize, 1, 3, m.saturating_sub(1), 64, 130] {
+                let mut rng = Rng::new((m * 1000 + len) as u64);
+                let inputs: Vec<Vec<f32>> = (0..m).map(|_| randvec(&mut rng, len)).collect();
+
+                let mut serial_bufs = inputs.clone();
+                let stats = CommStats::default();
+                serial::all_reduce_sum(Topology::Ring, &mut serial_bufs, &stats).unwrap();
+
+                let fin = Arc::new(inputs.clone());
+                let fab = run_fabric(m, Topology::Ring, move |h| {
+                    let mut d = fin[h.rank()].clone();
+                    h.all_reduce_sum(&mut d).unwrap();
+                    d
+                });
+
+                let cin = Arc::new(inputs.clone());
+                let chan = {
+                    let handles = CommGroup::new(m);
+                    let mut joins = Vec::new();
+                    for h in handles {
+                        let cin = cin.clone();
+                        joins.push(std::thread::spawn(move || {
+                            let mut d = cin[h.rank()].clone();
+                            h.all_reduce_sum(&mut d).unwrap();
+                            d
+                        }));
+                    }
+                    joins.into_iter().map(|j| j.join().unwrap()).collect::<Vec<_>>()
+                };
+
+                for r in 0..m {
+                    assert_eq!(
+                        bits(&fab[r]),
+                        bits(&serial_bufs[r]),
+                        "fabric vs serial, world {m} len {len} rank {r}"
+                    );
+                    assert_eq!(
+                        bits(&chan[r]),
+                        bits(&serial_bufs[r]),
+                        "channel vs serial, world {m} len {len} rank {r}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tree_topology_concurrent_matches_serial() {
+        for &m in &[2usize, 3, 4, 6] {
+            let len = 37;
+            let mut rng = Rng::new(m as u64);
+            let inputs: Vec<Vec<f32>> = (0..m).map(|_| randvec(&mut rng, len)).collect();
+            let mut serial_bufs = inputs.clone();
+            serial::all_reduce_sum(Topology::Tree, &mut serial_bufs, &CommStats::default())
+                .unwrap();
+            let fin = Arc::new(inputs);
+            let fab = run_fabric(m, Topology::Tree, move |h| {
+                let mut d = fin[h.rank()].clone();
+                h.all_reduce_sum(&mut d).unwrap();
+                d
+            });
+            for r in 0..m {
+                assert_eq!(bits(&fab[r]), bits(&serial_bufs[r]), "world {m} rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_then_gather_equals_all_reduce() {
+        for &m in &[2usize, 3, 5] {
+            let len = 4 * m + 1;
+            let mut rng = Rng::new(7);
+            let inputs: Vec<Vec<f32>> = (0..m).map(|_| randvec(&mut rng, len)).collect();
+            let mut want = inputs.clone();
+            serial::all_reduce_sum(Topology::Ring, &mut want, &CommStats::default()).unwrap();
+            let fin = Arc::new(inputs);
+            let out = run_fabric(m, Topology::Ring, move |h| {
+                let mut d = fin[h.rank()].clone();
+                let own = h.reduce_scatter_sum(&mut d).unwrap();
+                // poison everything outside the owned shard, then gather
+                for (i, x) in d.iter_mut().enumerate() {
+                    if !own.contains(&i) {
+                        *x = f32::NAN;
+                    }
+                }
+                h.all_gather_owned(&mut d).unwrap();
+                d
+            });
+            for r in 0..m {
+                assert_eq!(bits(&out[r]), bits(&want[r]), "world {m} rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduction_order_is_invariant_under_injected_delays() {
+        // stagger rank arrival with rank- and round-dependent sleeps; the
+        // fixed fold order must make every run bit-identical to serial
+        let m = 4;
+        let len = 50;
+        let mut rng = Rng::new(99);
+        let inputs: Vec<Vec<f32>> = (0..m).map(|_| randvec(&mut rng, len)).collect();
+        let mut want = inputs.clone();
+        serial::all_reduce_sum(Topology::Ring, &mut want, &CommStats::default()).unwrap();
+        for round in 0..3u64 {
+            let fin = Arc::new(inputs.clone());
+            let out = run_fabric(m, Topology::Ring, move |h| {
+                let jitter = (h.rank() as u64 * 7 + round * 3) % 11;
+                std::thread::sleep(std::time::Duration::from_millis(jitter));
+                let mut d = fin[h.rank()].clone();
+                h.all_reduce_sum(&mut d).unwrap();
+                d
+            });
+            for r in 0..m {
+                assert_eq!(bits(&out[r]), bits(&want[r]), "round {round} rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn wire_ledger_matches_channel_ring() {
+        let m = 4;
+        let n = 1024;
+        let fab = Fabric::new(m);
+        let stats = fab[0].stats().clone();
+        let mut joins = Vec::new();
+        for h in fab {
+            joins.push(std::thread::spawn(move || {
+                let mut d = vec![1.0f32; n];
+                h.all_reduce_sum(&mut d).unwrap();
+                let own = h.reduce_scatter_sum(&mut d).unwrap();
+                let _ = own;
+                h.all_gather_owned(&mut d).unwrap();
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        // all-reduce 2(M-1)·len·4 + reduce-scatter (M-1)·len·4 + gather same
+        let want = (4 * (m - 1) * n * 4) as u64;
+        assert_eq!(stats.bytes(), want);
+        assert_eq!(stats.op_count(), 3 * m as u64);
+
+        // the serial twin records the identical ledger
+        let serial_stats = CommStats::default();
+        let mut bufs: Vec<Vec<f32>> = (0..m).map(|_| vec![1.0f32; n]).collect();
+        serial::all_reduce_sum(Topology::Ring, &mut bufs, &serial_stats).unwrap();
+        serial::reduce_scatter_sum(Topology::Ring, &mut bufs, &serial_stats).unwrap();
+        serial::all_gather_owned(&mut bufs, &serial_stats).unwrap();
+        assert_eq!(serial_stats.bytes(), want);
+        assert_eq!(serial_stats.op_count(), 3 * m as u64);
+    }
+
+    #[test]
+    fn dropped_peer_surfaces_as_error_not_deadlock() {
+        let mut handles = Fabric::new(2);
+        let h1 = handles.pop().unwrap();
+        let h0 = handles.pop().unwrap();
+        let t = std::thread::spawn(move || {
+            let mut d = vec![1.0f32; 8];
+            h0.all_reduce_sum(&mut d)
+        });
+        // rank 1 exits without ever entering the collective
+        drop(h1);
+        let res = t.join().unwrap();
+        assert!(res.is_err(), "waiting rank must error out, not hang");
+        let msg = format!("{:?}", res.unwrap_err());
+        assert!(msg.contains("fabric"), "{msg}");
+    }
+
+    #[test]
+    fn barrier_does_not_deadlock() {
+        run_fabric(3, Topology::Ring, |h| {
+            for _ in 0..5 {
+                h.barrier().unwrap();
+            }
+            vec![]
+        });
+    }
+
+    #[test]
+    fn topology_parse_is_strict() {
+        assert_eq!(Topology::parse(None).unwrap(), Topology::Ring);
+        assert_eq!(Topology::parse(Some("")).unwrap(), Topology::Ring);
+        assert_eq!(Topology::parse(Some("ring")).unwrap(), Topology::Ring);
+        assert_eq!(Topology::parse(Some(" Tree ")).unwrap(), Topology::Tree);
+        let err = Topology::parse(Some("mesh")).unwrap_err();
+        assert!(format!("{err}").contains("ring|tree"), "{err}");
+    }
+
+    #[test]
+    fn tree_bracketing_is_fixed() {
+        // ((a+b)+(c+d)) for 4 ranks, (a+b)+c for 3
+        let a = [1.0e8f32];
+        let b = [1.0f32];
+        let c = [-1.0e8f32];
+        let d = [1.0f32];
+        let got = reduce_contribs(Topology::Tree, 0, &[&a[..], &b[..], &c[..], &d[..]]);
+        assert_eq!(got[0], (1.0e8f32 + 1.0) + (-1.0e8 + 1.0));
+        let got3 = reduce_contribs(Topology::Tree, 2, &[&a[..], &b[..], &c[..]]);
+        assert_eq!(got3[0], (1.0e8f32 + 1.0) + -1.0e8);
+    }
+}

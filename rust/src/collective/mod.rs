@@ -1,19 +1,177 @@
-//! In-process data-parallel substrate: ring collectives over channels,
-//! a communication-volume ledger, an α-β cost model at DGX scale, the
-//! distributed training runner (paper §3.3, Eq. 5–8) and ZeRO-S1.
+//! In-process data-parallel substrate: concurrent collectives with
+//! deterministic reductions, a communication-volume ledger, an α-β cost
+//! model at DGX scale, the distributed training runner (paper §3.3,
+//! Eq. 5–8) and ZeRO-S1.
 //!
-//! NCCL is simulated by rank threads exchanging `Vec<f32>` slices through
-//! `std::sync::mpsc` channels using the standard ring algorithm
-//! (reduce-scatter + all-gather, 2(M-1) phases). The reduction *math* and
-//! the *byte volume* are identical to the real thing — which is exactly
-//! what the paper's Figure 7 measures.
+//! Three interchangeable execution engines drive the same rank algorithms
+//! ([`CollectiveEngine`]):
+//!
+//! * **fabric** (default) — N ranks on real OS threads meeting at a
+//!   shared-memory board ([`fabric`]) with a fixed reduction order that is
+//!   independent of arrival timing;
+//! * **channel** — the legacy lock-step mpsc ring ([`CommHandle`]): rank
+//!   threads exchange `Vec<f32>` slices pairwise in `2(M-1)` phases, like
+//!   a software NCCL;
+//! * **serial** — a single-threaded simulator that advances all ranks
+//!   phase by phase and folds reductions with [`fabric::serial`].
+//!
+//! All three are **bit-for-bit identical** for any world size, sync
+//! strategy, `ADAMA_THREADS` and `ADAMA_SIMD` setting
+//! (`rust/tests/fabric_parity.rs`); the reduction *math* and the *byte
+//! volume* match what a real ring interconnect would do — which is
+//! exactly what the paper's Figure 7 measures.
 
 mod comm;
 mod cost;
 mod dp;
+pub mod fabric;
 mod zero;
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use anyhow::Result;
 
 pub use comm::{CommGroup, CommHandle, CommStats};
 pub use cost::{ClusterSpec, CommCostModel};
 pub use dp::{run_data_parallel, DpReport, DpSpec, SyncStrategy};
+pub use fabric::{Fabric, FabricHandle, Topology};
 pub use zero::{run_zero1, Zero1Report, Zero1Spec};
+
+/// Which engine drives a distributed run. All engines produce identical
+/// bits; they differ in how rank execution is scheduled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollectiveEngine {
+    /// Single-threaded reference simulator: ranks advance phase by phase
+    /// in one thread, reductions folded by [`fabric::serial`]. The oracle
+    /// the concurrent engines are verified against.
+    Serial,
+    /// Legacy lock-step mpsc channel ring — one OS thread per rank,
+    /// point-to-point sends ([`CommHandle`]). Ring topology only: a
+    /// tree request is rejected rather than silently downgraded.
+    Channel,
+    /// Shared-memory concurrent fabric — one OS thread per rank, board
+    /// rendezvous with timing-independent reduction order
+    /// ([`FabricHandle`]). The default.
+    Fabric,
+}
+
+impl CollectiveEngine {
+    pub const ALL: [CollectiveEngine; 3] =
+        [CollectiveEngine::Serial, CollectiveEngine::Channel, CollectiveEngine::Fabric];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CollectiveEngine::Serial => "serial",
+            CollectiveEngine::Channel => "channel",
+            CollectiveEngine::Fabric => "fabric",
+        }
+    }
+}
+
+/// Resolve the per-rank host pool size shared by the DP/ZeRO runners:
+/// an explicit count, or (0) an even split of the default pool across
+/// ranks, floored at 1.
+pub(crate) fn rank_threads(spec: usize, world: usize) -> Result<usize> {
+    Ok(match spec {
+        0 => (crate::runtime::pool::default_threads()? / world.max(1)).max(1),
+        t => t,
+    })
+}
+
+/// The channel engine implements exactly the ring fold order; reject any
+/// other topology instead of silently downgrading it.
+pub(crate) fn ensure_ring_only(topo: Topology) -> Result<()> {
+    anyhow::ensure!(
+        topo == Topology::Ring,
+        "the channel engine supports only the ring topology (got '{}'); use the fabric \
+         or serial engine for ADAMA_FABRIC={}",
+        topo.name(),
+        topo.name()
+    );
+    Ok(())
+}
+
+/// Rank-side collective interface — the DP/ZeRO workers are generic over
+/// it, so the channel ring and the fabric run the identical algorithm.
+///
+/// All collectives are synchronous and must be entered by every rank in
+/// the same order (like NCCL). Buffer lengths must match across ranks.
+pub trait Collective: Send {
+    fn rank(&self) -> usize;
+    fn world(&self) -> usize;
+    fn stats(&self) -> &Arc<CommStats>;
+    fn all_reduce_sum(&self, data: &mut [f32]) -> Result<()>;
+    fn all_reduce_mean(&self, data: &mut [f32]) -> Result<()>;
+    fn reduce_scatter_sum(&self, data: &mut [f32]) -> Result<Range<usize>>;
+    fn all_gather_owned(&self, data: &mut [f32]) -> Result<()>;
+    fn barrier(&self) -> Result<()>;
+}
+
+impl Collective for CommHandle {
+    fn rank(&self) -> usize {
+        CommHandle::rank(self)
+    }
+
+    fn world(&self) -> usize {
+        CommHandle::world(self)
+    }
+
+    fn stats(&self) -> &Arc<CommStats> {
+        CommHandle::stats(self)
+    }
+
+    fn all_reduce_sum(&self, data: &mut [f32]) -> Result<()> {
+        CommHandle::all_reduce_sum(self, data)
+    }
+
+    fn all_reduce_mean(&self, data: &mut [f32]) -> Result<()> {
+        CommHandle::all_reduce_mean(self, data)
+    }
+
+    fn reduce_scatter_sum(&self, data: &mut [f32]) -> Result<Range<usize>> {
+        CommHandle::reduce_scatter_sum(self, data)
+    }
+
+    fn all_gather_owned(&self, data: &mut [f32]) -> Result<()> {
+        CommHandle::all_gather_owned(self, data)
+    }
+
+    fn barrier(&self) -> Result<()> {
+        CommHandle::barrier(self)
+    }
+}
+
+impl Collective for FabricHandle {
+    fn rank(&self) -> usize {
+        FabricHandle::rank(self)
+    }
+
+    fn world(&self) -> usize {
+        FabricHandle::world(self)
+    }
+
+    fn stats(&self) -> &Arc<CommStats> {
+        FabricHandle::stats(self)
+    }
+
+    fn all_reduce_sum(&self, data: &mut [f32]) -> Result<()> {
+        FabricHandle::all_reduce_sum(self, data)
+    }
+
+    fn all_reduce_mean(&self, data: &mut [f32]) -> Result<()> {
+        FabricHandle::all_reduce_mean(self, data)
+    }
+
+    fn reduce_scatter_sum(&self, data: &mut [f32]) -> Result<Range<usize>> {
+        FabricHandle::reduce_scatter_sum(self, data)
+    }
+
+    fn all_gather_owned(&self, data: &mut [f32]) -> Result<()> {
+        FabricHandle::all_gather_owned(self, data)
+    }
+
+    fn barrier(&self) -> Result<()> {
+        FabricHandle::barrier(self)
+    }
+}

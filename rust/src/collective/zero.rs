@@ -6,25 +6,34 @@
 //! Two flows:
 //!
 //! * **ZeRO-S1 + AdamA** — every layer gradient of every micro-batch is
-//!   reduce-scattered the moment it exists; the owner integrates its shard
-//!   into its (m, v) shard and the gradient is released (grad peak = one
-//!   layer, activation peak = one micro-batch, states = 2P/M). The
-//!   micro-batch granularity becomes *global* (M-way averaged), i.e.
-//!   AdamA with N effective micro-batches of M× size — still Alg. 2
-//!   semantics. Comm: 2·N half-collectives per layer per step (the ~5%
-//!   throughput cost the paper reports for this combo).
+//!   reduce-scattered the moment it exists (the paper's
+//!   release-immediately overlap: the collective is issued inside the
+//!   backward's gradient sink, while later layers are still to come); the
+//!   owner integrates its shard into its (m, v) shard and the gradient is
+//!   released (grad peak = one layer, activation peak = one micro-batch,
+//!   states = 2P/M). The micro-batch granularity becomes *global* (M-way
+//!   averaged), i.e. AdamA with N effective micro-batches of M× size —
+//!   still Alg. 2 semantics. Comm: 2·N half-collectives per layer per
+//!   step (the ~5% throughput cost the paper reports for this combo).
 //! * **ZeRO-S1 + GA** — the DeepSpeed baseline: full local gradient
 //!   accumulator (P floats), one reduce-scatter at mini-batch end, shard
 //!   update, param all-gather.
+//!
+//! Both flows run on any [`CollectiveEngine`] — concurrent fabric
+//! (default), channel ring, or the serial simulator — with bit-identical
+//! results (`rust/tests/fabric_parity.rs`).
 
 use std::sync::Arc;
+use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
-use super::comm::{CommGroup, CommHandle};
+use super::comm::CommHandle;
+use super::fabric::{serial, Fabric, Topology};
+use super::{rank_threads, Collective, CollectiveEngine, CommGroup, CommStats};
 use crate::config::{OptimBackend, OptimizerKind, TrainConfig};
-use crate::coordinator::Trainer;
-use crate::data::MarkovCorpus;
+use crate::coordinator::{MemorySnapshot, Trainer, WorldMemory};
+use crate::data::{MarkovCorpus, MicroBatch};
 use crate::memory::{Category, MemoryReport, MemoryTracker};
 use crate::model::ModelSpec;
 use crate::optim::{host_math, Hyper, NullOpt, UpdateBackend};
@@ -35,6 +44,41 @@ pub struct Zero1Spec {
     pub cfg: TrainConfig,
     pub steps: u64,
     pub data_seed: u64,
+    /// Execution engine (default: the concurrent fabric).
+    pub engine: CollectiveEngine,
+    /// Host pool threads per rank; 0 (default) = split the default pool
+    /// (`ADAMA_THREADS`) evenly across ranks.
+    pub threads_per_rank: usize,
+    /// Reduction topology; `None` = `ADAMA_FABRIC` (default ring).
+    pub topology: Option<Topology>,
+}
+
+impl Zero1Spec {
+    pub fn new(cfg: TrainConfig, steps: u64, data_seed: u64) -> Self {
+        Self {
+            cfg,
+            steps,
+            data_seed,
+            engine: CollectiveEngine::Fabric,
+            threads_per_rank: 0,
+            topology: None,
+        }
+    }
+
+    pub fn with_engine(mut self, engine: CollectiveEngine) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    pub fn with_topology(mut self, topo: Topology) -> Self {
+        self.topology = Some(topo);
+        self
+    }
+
+    pub fn with_rank_threads(mut self, threads: usize) -> Self {
+        self.threads_per_rank = threads;
+        self
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -44,7 +88,18 @@ pub struct Zero1Report {
     pub comm_bytes: u64,
     pub comm_ops: u64,
     pub elapsed_s: f64,
+    /// Rank-0 coordinator tracker peaks (back-compat convenience).
     pub memory: MemoryReport,
+    /// Coordinator + executor peaks for every rank, in rank order.
+    pub per_rank_memory: Vec<MemorySnapshot>,
+    pub engine: CollectiveEngine,
+}
+
+impl Zero1Report {
+    /// Per-rank snapshots with world-level aggregation.
+    pub fn world_memory(&self) -> WorldMemory {
+        WorldMemory::new(self.per_rank_memory.clone())
+    }
 }
 
 /// Per-worker partitioned Adam state.
@@ -60,16 +115,17 @@ struct ShardState {
 impl ShardState {
     fn new(
         spec: &ModelSpec,
-        comm: &CommHandle,
+        rank: usize,
+        world: usize,
         hyper: Hyper,
         backend: UpdateBackend,
         tracker: &MemoryTracker,
     ) -> Self {
-        let owner = (comm.rank() + 1) % comm.world();
+        let owner = (rank + 1) % world;
         let ranges: Vec<_> = spec
             .layers
             .iter()
-            .map(|l| CommHandle::shard_ranges(l.flat_len, comm.world())[owner].clone())
+            .map(|l| CommHandle::shard_ranges(l.flat_len, world)[owner].clone())
             .collect();
         let m: Vec<Vec<f32>> = ranges.iter().map(|r| vec![0.0; r.len()]).collect();
         let v = m.clone();
@@ -116,16 +172,44 @@ pub fn run_zero1(lib: Arc<Library>, spec: Zero1Spec) -> Result<Zero1Report> {
     if m < 2 {
         bail!("ZeRO-S1 needs >= 2 workers");
     }
-    let handles = CommGroup::new(m);
+    match spec.cfg.optimizer {
+        OptimizerKind::AdamA | OptimizerKind::AdamGA => {}
+        k => bail!("ZeRO-S1 supports adama|adamga, got {:?}", k),
+    }
+    let topo = match spec.topology {
+        Some(t) => t,
+        None => Topology::from_env()?,
+    };
+    let tpr = rank_threads(spec.threads_per_rank, m)?;
+    match spec.engine {
+        CollectiveEngine::Serial => run_zero_serial(lib, spec, topo, tpr),
+        CollectiveEngine::Channel => {
+            // the channel ring's fold order *is* the ring topology; a
+            // tree request must not be silently downgraded
+            super::ensure_ring_only(topo)?;
+            run_zero_threaded(lib, spec, CommGroup::new(m), tpr)
+        }
+        CollectiveEngine::Fabric => {
+            run_zero_threaded(lib, spec, Fabric::with_topology(m, topo), tpr)
+        }
+    }
+}
+
+fn run_zero_threaded<C: Collective + 'static>(
+    lib: Arc<Library>,
+    spec: Zero1Spec,
+    handles: Vec<C>,
+    tpr: usize,
+) -> Result<Zero1Report> {
     let stats = handles[0].stats().clone();
-    let t0 = std::time::Instant::now();
+    let t0 = Instant::now();
 
     let mut joins = Vec::new();
     for comm in handles {
-        // Per-rank fork: pins the host pool to 1 worker per rank (see
+        // Per-rank fork: pins the host pool to `tpr` workers per rank (see
         // `run_data_parallel`) and gives each rank a private activation
         // arena when stashing is enabled — same bits either way.
-        let lib = lib.fork_with_threads(1);
+        let lib = lib.fork_with_threads(tpr);
         let spec = spec.clone();
         joins.push(std::thread::spawn(move || match spec.cfg.optimizer {
             OptimizerKind::AdamA => worker_adama(lib, spec, comm),
@@ -142,7 +226,7 @@ pub fn run_zero1(lib: Arc<Library>, spec: Zero1Spec) -> Result<Zero1Report> {
     let r0 = &results[0];
     for (r, out) in results.iter().enumerate().skip(1) {
         for (l, (a, b)) in r0.params.iter().zip(&out.params).enumerate() {
-            anyhow::ensure!(a == b, "rank {r} layer {l} diverged after all-gather");
+            ensure!(a == b, "rank {r} layer {l} diverged after all-gather");
         }
     }
     Ok(Zero1Report {
@@ -151,14 +235,16 @@ pub fn run_zero1(lib: Arc<Library>, spec: Zero1Spec) -> Result<Zero1Report> {
         comm_bytes: stats.bytes(),
         comm_ops: stats.op_count(),
         elapsed_s,
-        memory: r0.memory,
+        memory: r0.mem.tracker,
+        per_rank_memory: results.iter().map(|r| r.mem).collect(),
+        engine: spec.engine,
     })
 }
 
 struct WorkerOut {
     losses: Vec<f32>,
     params: Vec<Vec<f32>>,
-    memory: MemoryReport,
+    mem: MemorySnapshot,
 }
 
 fn make_backend(cfg: &TrainConfig, lib: &Arc<Library>) -> Result<UpdateBackend> {
@@ -169,9 +255,20 @@ fn make_backend(cfg: &TrainConfig, lib: &Arc<Library>) -> Result<UpdateBackend> 
     })
 }
 
+fn snapshot(trainer: &Trainer, tracker: &MemoryTracker) -> MemorySnapshot {
+    MemorySnapshot {
+        tracker: tracker.report(),
+        host: trainer.library().executor().memory(),
+    }
+}
+
 /// ZeRO-S1 + AdamA: per-micro-batch per-layer reduce-scatter + shard
 /// integrate + release.
-fn worker_adama(lib: Arc<Library>, spec: Zero1Spec, comm: CommHandle) -> Result<WorkerOut> {
+fn worker_adama<C: Collective>(
+    lib: Arc<Library>,
+    spec: Zero1Spec,
+    comm: C,
+) -> Result<WorkerOut> {
     let n = spec.cfg.accum_steps;
     let m = comm.world();
     let tracker = MemoryTracker::new();
@@ -180,7 +277,8 @@ fn worker_adama(lib: Arc<Library>, spec: Zero1Spec, comm: CommHandle) -> Result<
     let hyper = Hyper::from_manifest(lib.manifest());
     let mut shard = ShardState::new(
         trainer.spec(),
-        &comm,
+        comm.rank(),
+        comm.world(),
         hyper,
         make_backend(&spec.cfg, &lib)?,
         &tracker,
@@ -241,15 +339,16 @@ fn worker_adama(lib: Arc<Library>, spec: Zero1Spec, comm: CommHandle) -> Result<
         losses.push(l[0]);
     }
 
+    let mem = snapshot(&trainer, &tracker);
     Ok(WorkerOut {
         losses,
         params: trainer.params().iter().map(|p| p.flat.clone()).collect(),
-        memory: tracker.report(),
+        mem,
     })
 }
 
 /// ZeRO-S1 + GA: full local accumulator, one reduce-scatter per step.
-fn worker_ga(lib: Arc<Library>, spec: Zero1Spec, comm: CommHandle) -> Result<WorkerOut> {
+fn worker_ga<C: Collective>(lib: Arc<Library>, spec: Zero1Spec, comm: C) -> Result<WorkerOut> {
     let n = spec.cfg.accum_steps;
     let m = comm.world();
     let tracker = MemoryTracker::new();
@@ -258,7 +357,8 @@ fn worker_ga(lib: Arc<Library>, spec: Zero1Spec, comm: CommHandle) -> Result<Wor
     let hyper = Hyper::from_manifest(lib.manifest());
     let mut shard = ShardState::new(
         trainer.spec(),
-        &comm,
+        comm.rank(),
+        comm.world(),
         hyper,
         make_backend(&spec.cfg, &lib)?,
         &tracker,
@@ -311,9 +411,225 @@ fn worker_ga(lib: Arc<Library>, spec: Zero1Spec, comm: CommHandle) -> Result<Wor
         losses.push(l[0]);
     }
 
+    let mem = snapshot(&trainer, &tracker);
     Ok(WorkerOut {
         losses,
         params: trainer.params().iter().map(|p| p.flat.clone()).collect(),
-        memory: tracker.report(),
+        mem,
+    })
+}
+
+/// Per-rank context of the serial ZeRO simulator.
+struct SerialRank {
+    trainer: Trainer,
+    shard: ShardState,
+    corpus: MarkovCorpus,
+    tracker: MemoryTracker,
+}
+
+fn serial_ranks(
+    lib: &Arc<Library>,
+    spec: &Zero1Spec,
+    tpr: usize,
+) -> Result<(Vec<SerialRank>, Hyper)> {
+    let m = spec.cfg.workers;
+    let mut ranks = Vec::with_capacity(m);
+    let mut hyper = None;
+    for r in 0..m {
+        let rlib = lib.fork_with_threads(tpr);
+        let tracker = MemoryTracker::new();
+        let trainer = Trainer::with_optimizer(
+            rlib.clone(),
+            spec.cfg.clone(),
+            tracker.clone(),
+            Box::new(NullOpt),
+        )?;
+        let hy = Hyper::from_manifest(rlib.manifest());
+        let shard = ShardState::new(
+            trainer.spec(),
+            r,
+            m,
+            hy,
+            make_backend(&spec.cfg, &rlib)?,
+            &tracker,
+        );
+        let h = trainer.spec().hyper.clone();
+        let corpus = MarkovCorpus::new(h.vocab, spec.data_seed, 1_000_003 * (r as u64 + 1));
+        hyper = Some(hy);
+        ranks.push(SerialRank { trainer, shard, corpus, tracker });
+    }
+    Ok((ranks, hyper.expect("world >= 2")))
+}
+
+/// The serial ZeRO simulator: ranks advance micro-batch by micro-batch in
+/// one thread; every per-layer gradient is buffered, reduce-scattered in
+/// the fixed chain order, integrated, then released — the bit-for-bit
+/// oracle for the concurrent workers.
+fn run_zero_serial(
+    lib: Arc<Library>,
+    spec: Zero1Spec,
+    topo: Topology,
+    tpr: usize,
+) -> Result<Zero1Report> {
+    let m = spec.cfg.workers;
+    let n = spec.cfg.accum_steps;
+    let stats = Arc::new(CommStats::default());
+    let t0 = Instant::now();
+    let (mut ranks, hyper) = serial_ranks(&lib, &spec, tpr)?;
+    let h = ranks[0].trainer.spec().hyper.clone();
+    let n_layers = ranks[0].trainer.spec().layers.len();
+    let adama = spec.cfg.optimizer == OptimizerKind::AdamA;
+    let gscale = 1.0 / n as f32;
+    let inv_m = 1.0 / m as f32;
+
+    // ZeRO-S1+GA keeps a full-model accumulator per rank
+    let mut acc: Vec<Vec<Vec<f32>>> = if adama {
+        Vec::new()
+    } else {
+        let template: Vec<Vec<f32>> =
+            ranks[0].trainer.spec().layers.iter().map(|l| vec![0.0; l.flat_len]).collect();
+        for rc in &ranks {
+            rc.tracker
+                .alloc_raw(Category::Gradients, rc.trainer.spec().total_params() * 4);
+        }
+        (0..m).map(|_| template.clone()).collect()
+    };
+
+    let mut losses = Vec::new();
+    for _ in 0..spec.steps {
+        let t = ranks[0].trainer.step() + 1;
+        let mbs: Vec<Vec<MicroBatch>> = ranks
+            .iter_mut()
+            .map(|rc| rc.corpus.minibatch(n, h.microbatch, h.seq))
+            .collect();
+        let mut rank_loss = vec![0.0f32; m];
+
+        if adama {
+            for rc in ranks.iter_mut() {
+                rc.shard.decay(1.0)?;
+            }
+            let mut sums = vec![0.0f64; m];
+            for i in 0..n {
+                // every rank's i-th micro-batch, gradients buffered in
+                // production order (the concurrent sink issues the
+                // reduce-scatter at exactly these points)
+                let mut grads: Vec<Vec<(usize, Vec<f32>)>> = Vec::with_capacity(m);
+                for (r, rc) in ranks.iter_mut().enumerate() {
+                    let mut buf: Vec<(usize, Vec<f32>)> = Vec::new();
+                    let loss = rc.trainer.accumulate_minibatch_sink(
+                        std::slice::from_ref(&mbs[r][i]),
+                        &mut |layer, grad| {
+                            buf.push((layer, grad.to_vec()));
+                            Ok(())
+                        },
+                    )?;
+                    sums[r] += loss as f64;
+                    grads.push(buf);
+                }
+                let k_count = grads[0].len();
+                for g in &grads {
+                    ensure!(g.len() == k_count, "ranks produced different gradient counts");
+                }
+                for k in 0..k_count {
+                    let layer = grads[0][k].0;
+                    let mut bufs: Vec<Vec<f32>> =
+                        grads.iter().map(|g| g[k].1.clone()).collect();
+                    let owned = serial::reduce_scatter_sum(topo, &mut bufs, &stats)?;
+                    for (rc, (b, own)) in
+                        ranks.iter_mut().zip(bufs.iter().zip(owned.iter()))
+                    {
+                        let _w = rc.tracker.alloc(Category::Workspace, b.len() * 4);
+                        debug_assert_eq!(own.clone(), rc.shard.ranges[layer]);
+                        let mut g: Vec<f32> = b[own.clone()].to_vec();
+                        host_math::scale(&mut g, inv_m);
+                        rc.shard.integrate(layer, &g, gscale)?;
+                    }
+                }
+            }
+            for (r, loss) in rank_loss.iter_mut().enumerate() {
+                *loss = (sums[r] / n as f64) as f32;
+            }
+        } else {
+            for a in acc.iter_mut().flatten() {
+                a.fill(0.0);
+            }
+            for (r, rc) in ranks.iter_mut().enumerate() {
+                let racc = &mut acc[r];
+                let mut sink = |layer: usize, grad: &[f32]| -> Result<()> {
+                    host_math::grad_acc(&mut racc[layer], grad, gscale);
+                    Ok(())
+                };
+                rank_loss[r] =
+                    rc.trainer.accumulate_minibatch_sink(&mbs[r], &mut sink)?;
+            }
+        }
+
+        // shard param update + all-gather (identical math for both flows:
+        // AdamA updates from integrated (m, v); GA applies the fused
+        // update with the freshly reduced mean gradient)
+        let (bc1, bc2) = hyper.bias_corrections(t);
+        let lr = spec.cfg.lr.at(t);
+        for l in 0..n_layers {
+            if !adama {
+                let mut bufs: Vec<Vec<f32>> = (0..m).map(|r| acc[r][l].clone()).collect();
+                let owned = serial::reduce_scatter_sum(topo, &mut bufs, &stats)?;
+                for (r, rc) in ranks.iter_mut().enumerate() {
+                    let own = owned[r].clone();
+                    debug_assert_eq!(own, rc.shard.ranges[l]);
+                    let mut g: Vec<f32> = bufs[r][own.clone()].to_vec();
+                    host_math::scale(&mut g, inv_m);
+                    let flat = &mut rc.trainer.params_mut()[l].flat;
+                    let mut shard_p: Vec<f32> = flat[own.clone()].to_vec();
+                    rc.shard.adam_full_shard(l, &mut shard_p, &g, lr, bc1, bc2)?;
+                    flat[own].copy_from_slice(&shard_p);
+                }
+            } else {
+                for rc in ranks.iter_mut() {
+                    let range = rc.shard.ranges[l].clone();
+                    let flat = &mut rc.trainer.params_mut()[l].flat;
+                    let mut shard_p: Vec<f32> = flat[range.clone()].to_vec();
+                    rc.shard.update_shard(l, &mut shard_p, lr, bc1, bc2)?;
+                    flat[range].copy_from_slice(&shard_p);
+                }
+            }
+            let mut flats: Vec<Vec<f32>> =
+                ranks.iter().map(|rc| rc.trainer.params()[l].flat.clone()).collect();
+            serial::all_gather_owned(&mut flats, &stats)?;
+            for (rc, f) in ranks.iter_mut().zip(&flats) {
+                rc.trainer.params_mut()[l].flat.copy_from_slice(f);
+            }
+        }
+        for rc in ranks.iter_mut() {
+            rc.trainer.advance_step();
+        }
+
+        let mut lbufs: Vec<Vec<f32>> = rank_loss.iter().map(|&l| vec![l]).collect();
+        serial::all_reduce_mean(topo, &mut lbufs, &stats)?;
+        losses.push(lbufs[0][0]);
+    }
+
+    let final_params: Vec<Vec<f32>> =
+        ranks[0].trainer.params().iter().map(|p| p.flat.clone()).collect();
+    for (r, rc) in ranks.iter().enumerate().skip(1) {
+        for (l, (a, b)) in final_params
+            .iter()
+            .zip(rc.trainer.params().iter().map(|p| &p.flat))
+            .enumerate()
+        {
+            ensure!(a == b, "rank {r} layer {l} diverged after all-gather");
+        }
+    }
+    let per_rank_memory: Vec<MemorySnapshot> =
+        ranks.iter().map(|rc| snapshot(&rc.trainer, &rc.tracker)).collect();
+
+    Ok(Zero1Report {
+        losses,
+        final_params,
+        comm_bytes: stats.bytes(),
+        comm_ops: stats.op_count(),
+        elapsed_s: t0.elapsed().as_secs_f64(),
+        memory: per_rank_memory[0].tracker,
+        per_rank_memory,
+        engine: CollectiveEngine::Serial,
     })
 }

@@ -50,6 +50,81 @@ impl MemorySnapshot {
     }
 }
 
+/// Per-rank [`MemorySnapshot`]s from a distributed run, with the
+/// world-level aggregations the coordinator reports: the field-wise
+/// per-rank maximum (what a uniform cluster must provision per device —
+/// the paper's Table-2/3 axis) and the summed tracker peak (the whole
+/// cluster's footprint).
+#[derive(Debug, Clone, Default)]
+pub struct WorldMemory {
+    /// One snapshot per rank, in rank order.
+    pub ranks: Vec<MemorySnapshot>,
+}
+
+impl WorldMemory {
+    pub fn new(ranks: Vec<MemorySnapshot>) -> Self {
+        Self { ranks }
+    }
+
+    pub fn world(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// Field-wise maximum across ranks. The host `stash_budget_bytes`
+    /// (a configuration, not a peak) is carried from the first rank.
+    pub fn max_per_rank(&self) -> Option<MemorySnapshot> {
+        let mut it = self.ranks.iter().copied();
+        let first = it.next()?;
+        Some(it.fold(first, |a, b| MemorySnapshot {
+            tracker: MemoryReport {
+                peak_weights: a.tracker.peak_weights.max(b.tracker.peak_weights),
+                peak_gradients: a.tracker.peak_gradients.max(b.tracker.peak_gradients),
+                peak_optimizer: a.tracker.peak_optimizer.max(b.tracker.peak_optimizer),
+                peak_activations: a.tracker.peak_activations.max(b.tracker.peak_activations),
+                peak_workspace: a.tracker.peak_workspace.max(b.tracker.peak_workspace),
+                peak_total: a.tracker.peak_total.max(b.tracker.peak_total),
+            },
+            host: match (a.host, b.host) {
+                (Some(x), Some(y)) => Some(MemStats {
+                    stash_budget_bytes: x.stash_budget_bytes,
+                    stash_live_bytes: x.stash_live_bytes.max(y.stash_live_bytes),
+                    stash_peak_bytes: x.stash_peak_bytes.max(y.stash_peak_bytes),
+                    workspace_live_bytes: x.workspace_live_bytes.max(y.workspace_live_bytes),
+                    workspace_peak_bytes: x.workspace_peak_bytes.max(y.workspace_peak_bytes),
+                    stashed: x.stashed.max(y.stashed),
+                    stash_hits: x.stash_hits.max(y.stash_hits),
+                    stash_evictions: x.stash_evictions.max(y.stash_evictions),
+                    remats: x.remats.max(y.remats),
+                }),
+                (x, y) => x.or(y),
+            },
+        }))
+    }
+
+    /// Summed tracker `peak_total` across ranks — the whole-cluster
+    /// coordinator footprint.
+    pub fn total_peak_bytes(&self) -> u64 {
+        self.ranks.iter().map(|r| r.tracker.peak_total as u64).sum()
+    }
+
+    /// Largest per-rank activation peak (tracker + host stash arena).
+    pub fn activation_peak_bytes(&self) -> u64 {
+        self.ranks.iter().map(|r| r.activation_peak_bytes()).max().unwrap_or(0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = vec![
+            ("world", self.world().into()),
+            ("total_peak_bytes", (self.total_peak_bytes() as usize).into()),
+        ];
+        if let Some(mx) = self.max_per_rank() {
+            fields.push(("max_per_rank", mx.to_json()));
+        }
+        fields.push(("ranks", Json::Arr(self.ranks.iter().map(|r| r.to_json()).collect())));
+        obj(fields)
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct StepStats {
     pub step: u64,
@@ -196,6 +271,41 @@ mod tests {
         let j = m.to_json();
         let parsed = crate::util::json::Json::parse(&j.to_string_compact()).unwrap();
         assert_eq!(parsed.as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn world_memory_aggregates_per_rank_peaks() {
+        let snap = |total: usize, grads: usize, stash: u64| MemorySnapshot {
+            tracker: MemoryReport {
+                peak_weights: 1,
+                peak_gradients: grads,
+                peak_optimizer: 2,
+                peak_activations: 3,
+                peak_workspace: 4,
+                peak_total: total,
+            },
+            host: Some(MemStats { stash_peak_bytes: stash, ..MemStats::default() }),
+        };
+        let w = WorldMemory::new(vec![snap(100, 7, 10), snap(80, 9, 30)]);
+        assert_eq!(w.world(), 2);
+        assert_eq!(w.total_peak_bytes(), 180);
+        let mx = w.max_per_rank().unwrap();
+        assert_eq!(mx.tracker.peak_total, 100);
+        assert_eq!(mx.tracker.peak_gradients, 9);
+        assert_eq!(mx.host.unwrap().stash_peak_bytes, 30);
+        // activation peak: tracker (3) + host stash arena (30) on rank 1
+        assert_eq!(w.activation_peak_bytes(), 33);
+
+        let j = w.to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(parsed.get("world").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(parsed.get("total_peak_bytes").unwrap().as_usize().unwrap(), 180);
+        let mx = parsed.get("max_per_rank").unwrap();
+        assert_eq!(mx.get("peak_gradients").unwrap().as_usize().unwrap(), 9);
+        assert_eq!(parsed.get("ranks").unwrap().as_arr().unwrap().len(), 2);
+
+        assert!(WorldMemory::new(vec![]).max_per_rank().is_none());
+        assert_eq!(WorldMemory::new(vec![]).activation_peak_bytes(), 0);
     }
 
     #[test]

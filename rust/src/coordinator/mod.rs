@@ -22,7 +22,7 @@
 mod metrics;
 pub mod mlp;
 
-pub use metrics::{MemorySnapshot, Metrics, StepStats};
+pub use metrics::{MemorySnapshot, Metrics, StepStats, WorldMemory};
 pub use mlp::MlpTrainer;
 
 use std::sync::Arc;

@@ -15,8 +15,11 @@
 //! * **optim** — the optimizer zoo (AdamA, Adam+GA, Adafactor, SM3,
 //!   SGDM-A). Update arithmetic dispatches through `runtime::Program`
 //!   (chunked kernel path) or direct host loops (`optim::host_math`).
-//! * **collective** — in-process data-parallel workers with
-//!   optimizer-state all-reduce (Eq. 5–8) and ZeRO-S1 partitioning.
+//! * **collective** — the concurrent collective fabric: N ranks on real
+//!   OS threads with deterministic ring/tree reductions (plus a
+//!   lock-step channel ring and a serial simulator, all bit-identical),
+//!   optimizer-state all-reduce workers (Eq. 5–8) and ZeRO-S1
+//!   partitioning.
 //! * **runtime** — `Library` resolves manifest program names through one
 //!   of two `Executor` backends:
 //!     * `hostexec` (default): pure-rust reference implementations of the
@@ -38,6 +41,10 @@
 //! | `ADAMA_BACKEND=pjrt` | require PJRT; fail loudly instead of falling back |
 //! | `ADAMA_THREADS=N` | host thread-pool size (bit-identical at any N) |
 //! | `ADAMA_ACT_BUDGET=0\|<n>[k\|m\|g]\|unlimited` | activation stash budget: remat (default) ↔ stash per-block intermediates |
+//! | `ADAMA_FABRIC=ring\|tree` | collective fabric reduction topology (deterministic either way) |
+//!
+//! Every `ADAMA_*` knob is strictly parsed: invalid values are clear
+//! errors naming the accepted spellings, never silent fallbacks.
 //!
 //! Python never runs on the training path; with default features nothing
 //! outside this workspace runs at all.

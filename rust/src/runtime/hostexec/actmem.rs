@@ -64,6 +64,8 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use anyhow::{bail, Result};
+
 use crate::runtime::exec::MemStats;
 
 /// Backstop on arena entry count so forward-only callers (eval) cannot
@@ -113,17 +115,17 @@ impl MemoryPlan {
         }
     }
 
-    /// Parse an `ADAMA_ACT_BUDGET` value: unset/empty/`0` → remat,
-    /// `unlimited|inf|max` → unlimited, a number with an optional
-    /// `k`/`m`/`g` (×1024) suffix → byte cap. Unparseable values fall
-    /// back to remat (never a panic on a bad env var).
-    pub fn parse(spec: Option<&str>) -> Self {
+    /// Strictly parse an `ADAMA_ACT_BUDGET` value: unset/empty/`0` →
+    /// remat, `unlimited|inf|max` → unlimited, a number with an optional
+    /// `k`/`m`/`g` (×1024) suffix → byte cap. Anything else is an error
+    /// naming the accepted values (no silent fallback).
+    pub fn parse(spec: Option<&str>) -> Result<Self> {
         let s = match spec.map(str::trim) {
             Some(s) if !s.is_empty() => s.to_ascii_lowercase(),
-            _ => return Self::remat(),
+            _ => return Ok(Self::remat()),
         };
         if matches!(s.as_str(), "unlimited" | "inf" | "max") {
-            return Self::unlimited();
+            return Ok(Self::unlimited());
         }
         let (digits, mult): (&str, u64) = match s.as_bytes().last() {
             Some(b'k') => (&s[..s.len() - 1], 1 << 10),
@@ -132,13 +134,16 @@ impl MemoryPlan {
             _ => (s.as_str(), 1),
         };
         match digits.trim().parse::<u64>() {
-            Ok(n) => Self::bytes(n.saturating_mul(mult)),
-            Err(_) => Self::remat(),
+            Ok(n) => Ok(Self::bytes(n.saturating_mul(mult))),
+            Err(_) => bail!(
+                "invalid ADAMA_ACT_BUDGET '{s}': expected 0/unset (remat), <n>[k|m|g], \
+                 or unlimited|inf|max"
+            ),
         }
     }
 
     /// Plan from the `ADAMA_ACT_BUDGET` environment variable.
-    pub fn from_env() -> Self {
+    pub fn from_env() -> Result<Self> {
         Self::parse(std::env::var("ADAMA_ACT_BUDGET").ok().as_deref())
     }
 
@@ -429,16 +434,21 @@ mod tests {
 
     #[test]
     fn plan_parsing() {
-        assert_eq!(MemoryPlan::parse(None), MemoryPlan::remat());
-        assert_eq!(MemoryPlan::parse(Some("")), MemoryPlan::remat());
-        assert_eq!(MemoryPlan::parse(Some("0")), MemoryPlan::remat());
-        assert_eq!(MemoryPlan::parse(Some("garbage")), MemoryPlan::remat());
-        assert_eq!(MemoryPlan::parse(Some("unlimited")), MemoryPlan::unlimited());
-        assert_eq!(MemoryPlan::parse(Some("INF")), MemoryPlan::unlimited());
-        assert_eq!(MemoryPlan::parse(Some("4096")), MemoryPlan::bytes(4096));
-        assert_eq!(MemoryPlan::parse(Some("64k")), MemoryPlan::bytes(64 << 10));
-        assert_eq!(MemoryPlan::parse(Some("2M")), MemoryPlan::bytes(2 << 20));
-        assert_eq!(MemoryPlan::parse(Some("1g")), MemoryPlan::bytes(1 << 30));
+        assert_eq!(MemoryPlan::parse(None).unwrap(), MemoryPlan::remat());
+        assert_eq!(MemoryPlan::parse(Some("")).unwrap(), MemoryPlan::remat());
+        assert_eq!(MemoryPlan::parse(Some("0")).unwrap(), MemoryPlan::remat());
+        assert_eq!(MemoryPlan::parse(Some("unlimited")).unwrap(), MemoryPlan::unlimited());
+        assert_eq!(MemoryPlan::parse(Some("INF")).unwrap(), MemoryPlan::unlimited());
+        assert_eq!(MemoryPlan::parse(Some("4096")).unwrap(), MemoryPlan::bytes(4096));
+        assert_eq!(MemoryPlan::parse(Some("64k")).unwrap(), MemoryPlan::bytes(64 << 10));
+        assert_eq!(MemoryPlan::parse(Some("2M")).unwrap(), MemoryPlan::bytes(2 << 20));
+        assert_eq!(MemoryPlan::parse(Some("1g")).unwrap(), MemoryPlan::bytes(1 << 30));
+        // invalid specs are clear errors naming the accepted values
+        for bad in ["garbage", "-3", "12q", "k"] {
+            let err = MemoryPlan::parse(Some(bad)).unwrap_err();
+            let msg = format!("{err}");
+            assert!(msg.contains("ADAMA_ACT_BUDGET") && msg.contains("unlimited"), "{bad}: {msg}");
+        }
     }
 
     #[test]

@@ -161,7 +161,7 @@ mod tests {
     }
 
     fn lv() -> simd::Level {
-        simd::Level::from_env()
+        simd::Level::from_env().expect("valid ADAMA_SIMD")
     }
 
     struct Setup {

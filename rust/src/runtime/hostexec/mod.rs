@@ -87,21 +87,41 @@ impl Default for HostExecutor {
 impl HostExecutor {
     /// Pool size from `ADAMA_THREADS` / available parallelism; activation
     /// plan from `ADAMA_ACT_BUDGET` (default: pure remat); SIMD level
-    /// from `ADAMA_SIMD` (default: best the CPU supports).
+    /// from `ADAMA_SIMD` (default: best the CPU supports). Invalid env
+    /// values are clear errors naming the accepted spellings — the
+    /// `Library::open_default` path surfaces them instead of silently
+    /// falling back.
+    pub fn try_new() -> Result<Self> {
+        Self::try_with_threads(pool::default_threads()?)
+    }
+
+    /// [`Self::try_new`], panicking (with the underlying message) on an
+    /// invalid `ADAMA_*` environment.
     pub fn new() -> Self {
-        Self::with_plan(pool::default_threads(), MemoryPlan::from_env())
+        Self::try_new().expect("invalid ADAMA_* environment")
     }
 
     /// Pin the intra-program pool to `threads` workers (1 = fully serial);
-    /// activation plan still comes from `ADAMA_ACT_BUDGET`.
+    /// activation plan still comes from `ADAMA_ACT_BUDGET`, SIMD level
+    /// from `ADAMA_SIMD`.
+    pub fn try_with_threads(threads: usize) -> Result<Self> {
+        Ok(Self::with_simd(threads, MemoryPlan::from_env()?, simd::Level::from_env()?))
+    }
+
+    /// [`Self::try_with_threads`], panicking on an invalid environment.
     pub fn with_threads(threads: usize) -> Self {
-        Self::with_plan(threads, MemoryPlan::from_env())
+        Self::try_with_threads(threads).expect("invalid ADAMA_* environment")
     }
 
     /// Explicit pool size + activation stash plan; SIMD level still comes
-    /// from `ADAMA_SIMD`.
+    /// from `ADAMA_SIMD` (panics on an invalid value — construct through
+    /// [`Self::with_simd`] for a fully explicit executor).
     pub fn with_plan(threads: usize, plan: MemoryPlan) -> Self {
-        Self::with_simd(threads, plan, simd::Level::from_env())
+        Self::with_simd(
+            threads,
+            plan,
+            simd::Level::from_env().expect("invalid ADAMA_SIMD environment"),
+        )
     }
 
     /// Fully explicit construction: pool size, activation stash plan and

@@ -741,7 +741,7 @@ mod tests {
     /// SIMD level for the tests: from `ADAMA_SIMD`, so the CI matrix
     /// exercises both the scalar and vector paths through these suites.
     fn lv() -> simd::Level {
-        simd::Level::from_env()
+        simd::Level::from_env().expect("valid ADAMA_SIMD")
     }
 
     /// Forward with a throwaway workspace meter (signature helper).

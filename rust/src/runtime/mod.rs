@@ -69,9 +69,17 @@ pub type ArtifactLibrary = Library;
 impl Library {
     /// Pure-rust host library with the built-in default manifest — runs on
     /// a clean machine with zero native dependencies. Pool size comes from
-    /// `ADAMA_THREADS` (default: available parallelism).
+    /// `ADAMA_THREADS` (default: available parallelism). Invalid
+    /// `ADAMA_THREADS`/`ADAMA_SIMD`/`ADAMA_ACT_BUDGET` values are clear
+    /// errors naming the accepted spellings.
+    pub fn try_host() -> Result<Arc<Self>> {
+        Ok(Self::with_executor(Arc::new(HostExecutor::try_new()?), Manifest::builtin()))
+    }
+
+    /// [`Library::try_host`], panicking (with the underlying message) on
+    /// an invalid `ADAMA_*` environment.
     pub fn host() -> Arc<Self> {
-        Self::with_executor(Arc::new(HostExecutor::new()), Manifest::builtin())
+        Self::try_host().expect("invalid ADAMA_* environment")
     }
 
     /// [`Library::host`] with the executor's thread pool pinned to
@@ -115,10 +123,15 @@ impl Library {
             return self.clone();
         }
         // carry the activation plan over so forked ranks keep the same
-        // stash-vs-remat behaviour (encode/decode both live in actmem)
+        // stash-vs-remat behaviour (encode/decode both live in actmem).
+        // The None arm is unreachable today — non-host executors returned
+        // above and the host executor always reports MemStats — so the
+        // env fallback is a safe default for hypothetical uninstrumented
+        // host-like backends, not a parse path (invalid env degrades to
+        // remat here rather than failing an infallible fork)
         let plan = match self.executor.memory() {
             Some(m) => MemoryPlan::from_budget_bytes(m.stash_budget_bytes),
-            None => MemoryPlan::from_env(),
+            None => MemoryPlan::from_env().unwrap_or_else(|_| MemoryPlan::remat()),
         };
         // with stashing enabled, concurrently-running ranks must NOT
         // share one arena/meter (interleaving-dependent accounting,
@@ -129,7 +142,10 @@ impl Library {
         }
         // forked ranks keep the parent's SIMD dispatch level, so a rank
         // fork is bit-identical to (and as fast as) the parent executor
-        let level = self.executor.simd_level().unwrap_or_else(simd::Level::from_env);
+        let level = self
+            .executor
+            .simd_level()
+            .unwrap_or_else(|| simd::Level::from_env().unwrap_or_else(|_| simd::detect()));
         Self::with_executor(
             Arc::new(HostExecutor::with_simd(threads, plan, level)),
             self.manifest.clone(),
@@ -167,18 +183,27 @@ impl Library {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
 
+    /// Strictly parse an `ADAMA_BACKEND` value: `host`/`pjrt` force a
+    /// backend, unset/empty auto-selects; anything else is an error
+    /// naming the accepted values.
+    pub fn parse_backend(spec: Option<&str>) -> Result<&'static str> {
+        match spec.map(str::trim).unwrap_or("") {
+            "" => Ok(""),
+            "host" => Ok("host"),
+            "pjrt" => Ok("pjrt"),
+            other => bail!("unknown ADAMA_BACKEND '{other}' (expected host|pjrt, unset = auto)"),
+        }
+    }
+
     /// Open the default library.
     ///
     /// With the `pjrt` feature and an artifact directory present this is
     /// the PJRT backend; otherwise the pure-rust host executor with the
     /// built-in manifest. `ADAMA_BACKEND=host` forces the host executor;
-    /// `ADAMA_BACKEND=pjrt` fails loudly instead of falling back.
+    /// `ADAMA_BACKEND=pjrt` fails loudly instead of falling back — as do
+    /// invalid `ADAMA_THREADS`/`ADAMA_SIMD`/`ADAMA_ACT_BUDGET` values.
     pub fn open_default() -> Result<Arc<Self>> {
-        let forced = std::env::var("ADAMA_BACKEND").unwrap_or_default();
-        match forced.as_str() {
-            "" | "host" | "pjrt" => {}
-            other => bail!("unknown ADAMA_BACKEND '{other}' (expected host|pjrt)"),
-        }
+        let forced = Self::parse_backend(std::env::var("ADAMA_BACKEND").ok().as_deref())?;
         if forced == "pjrt" && !cfg!(feature = "pjrt") {
             bail!("ADAMA_BACKEND=pjrt but this build lacks the `pjrt` cargo feature");
         }
@@ -193,7 +218,7 @@ impl Library {
                 );
             }
         }
-        Ok(Self::host())
+        Self::try_host()
     }
 
     /// PJRT arm of [`Library::open_default`]: `Some` when the feature is
@@ -295,6 +320,16 @@ mod tests {
         assert!(Arc::ptr_eq(&lib, &same));
         // forked library still resolves the same manifest
         assert!(serial.get("common/adama_acc_16384").is_ok());
+    }
+
+    #[test]
+    fn backend_spec_parse_is_strict() {
+        assert_eq!(Library::parse_backend(None).unwrap(), "");
+        assert_eq!(Library::parse_backend(Some("")).unwrap(), "");
+        assert_eq!(Library::parse_backend(Some(" host ")).unwrap(), "host");
+        assert_eq!(Library::parse_backend(Some("pjrt")).unwrap(), "pjrt");
+        let err = Library::parse_backend(Some("tpu")).unwrap_err();
+        assert!(format!("{err}").contains("host|pjrt"), "{err}");
     }
 
     #[test]

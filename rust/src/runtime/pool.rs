@@ -19,10 +19,11 @@
 //!
 //! ## Configuration
 //!
-//! `ADAMA_THREADS=N` pins the pool size ([`resolve_threads`]); unset (or
-//! unparseable) defaults to the machine's available parallelism. The
-//! DP/ZeRO thread simulators re-pin their ranks to 1 pool thread each via
-//! `Library::fork_with_threads` to avoid oversubscription.
+//! `ADAMA_THREADS=N` pins the pool size ([`resolve_threads`]); unset,
+//! empty or `auto` defaults to the machine's available parallelism, and
+//! any other value is a **clear error** naming the accepted range (no
+//! silent fallback). The DP/ZeRO runners re-pin their ranks to a per-rank
+//! pool via `Library::fork_with_threads` to avoid oversubscription.
 //!
 //! ## Nesting and concurrent callers
 //!
@@ -34,6 +35,8 @@
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 
+use anyhow::{bail, Result};
+
 /// Hard upper bound on pool size (sanity cap for bogus `ADAMA_THREADS`).
 pub const MAX_THREADS: usize = 256;
 
@@ -41,22 +44,30 @@ pub const MAX_THREADS: usize = 256;
 /// broadcast latency would dominate. Safe: the split never affects bits.
 const SERIAL_CUTOFF: usize = 1024;
 
-/// Resolve a thread-count spec (the `ADAMA_THREADS` value): a positive
-/// integer pins the count (capped at [`MAX_THREADS`]); anything else —
-/// unset, empty, `0`, garbage — falls back to available parallelism.
-pub fn resolve_threads(spec: Option<&str>) -> usize {
+/// Strictly resolve a thread-count spec (the `ADAMA_THREADS` value): an
+/// integer in `1..=`[`MAX_THREADS`] pins the count; unset, empty or
+/// `auto` means the machine's available parallelism; anything else is an
+/// error naming the accepted values (no silent fallback).
+pub fn resolve_threads(spec: Option<&str>) -> Result<usize> {
     let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    match spec.map(str::trim) {
-        Some(s) if !s.is_empty() => match s.parse::<usize>() {
-            Ok(n) if n >= 1 => n.min(MAX_THREADS),
-            _ => hw,
-        },
-        _ => hw,
+    let s = match spec.map(str::trim) {
+        Some(s) if !s.is_empty() => s,
+        _ => return Ok(hw),
+    };
+    if s.eq_ignore_ascii_case("auto") {
+        return Ok(hw);
+    }
+    match s.parse::<usize>() {
+        Ok(n) if (1..=MAX_THREADS).contains(&n) => Ok(n),
+        _ => bail!(
+            "invalid ADAMA_THREADS '{s}': expected an integer 1..={MAX_THREADS}, or \
+             `auto`/unset for available parallelism"
+        ),
     }
 }
 
 /// Thread count from the `ADAMA_THREADS` environment variable.
-pub fn default_threads() -> usize {
+pub fn default_threads() -> Result<usize> {
     resolve_threads(std::env::var("ADAMA_THREADS").ok().as_deref())
 }
 
@@ -510,13 +521,19 @@ mod tests {
 
     #[test]
     fn resolve_threads_spec() {
-        assert_eq!(resolve_threads(Some("3")), 3);
-        assert_eq!(resolve_threads(Some(" 12 ")), 12);
-        assert_eq!(resolve_threads(Some("999999")), MAX_THREADS);
-        let hw = resolve_threads(None);
+        assert_eq!(resolve_threads(Some("3")).unwrap(), 3);
+        assert_eq!(resolve_threads(Some(" 12 ")).unwrap(), 12);
+        let hw = resolve_threads(None).unwrap();
         assert!(hw >= 1);
-        assert_eq!(resolve_threads(Some("0")), hw);
-        assert_eq!(resolve_threads(Some("banana")), hw);
-        assert_eq!(resolve_threads(Some("")), hw);
+        assert_eq!(resolve_threads(Some("")).unwrap(), hw);
+        assert_eq!(resolve_threads(Some("auto")).unwrap(), hw);
+        assert_eq!(resolve_threads(Some("AUTO")).unwrap(), hw);
+        // invalid specs are clear errors naming the accepted values, not
+        // silent fallbacks
+        for bad in ["0", "banana", "999999", "-4", "1.5"] {
+            let err = resolve_threads(Some(bad)).unwrap_err();
+            let msg = format!("{err}");
+            assert!(msg.contains("ADAMA_THREADS") && msg.contains("auto"), "{bad}: {msg}");
+        }
     }
 }

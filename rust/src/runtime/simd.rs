@@ -42,11 +42,11 @@
 //!
 //! [`Level`] is resolved once per executor from `ADAMA_SIMD`
 //! (`auto|avx2|sse2|scalar`, default `auto` = the best level the CPU
-//! reports). Requests the CPU cannot honour, and unparseable values,
-//! fall back to detection — never a panic on a bad env var. Non-x86_64
-//! targets always dispatch scalar. [`crate::runtime::Library`] threads
-//! the level through [`crate::runtime::hostexec::HostExecutor`] into
-//! every program.
+//! reports). Unparseable values and levels the CPU cannot honour are
+//! **clear errors** naming the accepted spellings — no silent fallback.
+//! Non-x86_64 targets always dispatch scalar. [`crate::runtime::Library`]
+//! threads the level through
+//! [`crate::runtime::hostexec::HostExecutor`] into every program.
 //!
 //! ## Adding a new ISA
 //!
@@ -60,6 +60,8 @@
 //! 4. run `rust/tests/simd_parity.rs` — the 0-ULP sweep is the gate, and
 //!    `cargo bench --bench perf_microbench` must show the new level at
 //!    least matching scalar.
+
+use anyhow::{bail, ensure, Result};
 
 /// SIMD dispatch level for the host executor's vector kernels.
 ///
@@ -110,29 +112,32 @@ impl Level {
         }
     }
 
-    /// Resolve an `ADAMA_SIMD` value: `scalar`/`sse2`/`avx2` pin the
-    /// level (clamped to what the CPU supports), `auto`, unset, empty or
-    /// unparseable values detect the best level. Never panics.
-    pub fn parse(spec: Option<&str>) -> Level {
+    /// Strictly resolve an `ADAMA_SIMD` value: `scalar`/`sse2`/`avx2`
+    /// pin the level, `auto`/unset/empty detect the best one; any other
+    /// spelling, or a level the running CPU cannot execute, is an error
+    /// naming the accepted values (no silent fallback).
+    pub fn parse(spec: Option<&str>) -> Result<Level> {
         let req = match spec.map(str::trim) {
             Some(s) if !s.is_empty() => s.to_ascii_lowercase(),
-            _ => return detect(),
+            _ => return Ok(detect()),
         };
         let want = match req.as_str() {
+            "auto" => return Ok(detect()),
             "scalar" => Level::Scalar,
             "sse2" => Level::Sse2,
             "avx2" => Level::Avx2,
-            _ => return detect(), // incl. "auto"
+            other => bail!("invalid ADAMA_SIMD '{other}': expected auto|avx2|sse2|scalar"),
         };
-        if want.supported() {
-            want
-        } else {
-            detect()
-        }
+        ensure!(
+            want.supported(),
+            "ADAMA_SIMD '{req}' is not supported on this CPU/target (best available: {})",
+            detect().name()
+        );
+        Ok(want)
     }
 
     /// Level from the `ADAMA_SIMD` environment variable.
-    pub fn from_env() -> Level {
+    pub fn from_env() -> Result<Level> {
         Self::parse(std::env::var("ADAMA_SIMD").ok().as_deref())
     }
 
@@ -987,11 +992,15 @@ mod tests {
 
     #[test]
     fn parse_and_detect() {
-        assert_eq!(Level::parse(Some("scalar")), Level::Scalar);
-        assert_eq!(Level::parse(None), detect());
-        assert_eq!(Level::parse(Some("")), detect());
-        assert_eq!(Level::parse(Some("auto")), detect());
-        assert_eq!(Level::parse(Some("garbage")), detect());
+        assert_eq!(Level::parse(Some("scalar")).unwrap(), Level::Scalar);
+        assert_eq!(Level::parse(None).unwrap(), detect());
+        assert_eq!(Level::parse(Some("")).unwrap(), detect());
+        assert_eq!(Level::parse(Some("auto")).unwrap(), detect());
+        // invalid spellings are clear errors naming the accepted values
+        let err = Level::parse(Some("garbage")).unwrap_err();
+        assert!(format!("{err}").contains("auto|avx2|sse2|scalar"), "{err}");
+        #[cfg(not(target_arch = "x86_64"))]
+        assert!(Level::parse(Some("avx2")).is_err(), "unsupported level must error");
         assert!(detect().supported());
         let all = Level::all_supported();
         assert_eq!(all[0], Level::Scalar);

@@ -200,20 +200,21 @@ fn transformer_training_is_bitwise_identical_serial_vs_parallel() {
     }
 }
 
-/// `ADAMA_THREADS` resolution: positive integers pin the pool, everything
-/// else falls back to available parallelism; the executor reads it at
-/// construction time.
+/// `ADAMA_THREADS` resolution: positive integers pin the pool,
+/// unset/`auto` means available parallelism, anything else is a clear
+/// error; the executor reads it at construction time.
 #[test]
 fn adama_threads_env_knob() {
     use adama::runtime::pool::resolve_threads;
     use adama::runtime::Executor;
 
-    assert_eq!(resolve_threads(Some("3")), 3);
-    assert_eq!(resolve_threads(Some(" 8 ")), 8);
-    let hw = resolve_threads(None);
+    assert_eq!(resolve_threads(Some("3")).unwrap(), 3);
+    assert_eq!(resolve_threads(Some(" 8 ")).unwrap(), 8);
+    let hw = resolve_threads(None).unwrap();
     assert!(hw >= 1);
-    assert_eq!(resolve_threads(Some("0")), hw);
-    assert_eq!(resolve_threads(Some("not-a-number")), hw);
+    assert_eq!(resolve_threads(Some("auto")).unwrap(), hw);
+    assert!(resolve_threads(Some("0")).is_err());
+    assert!(resolve_threads(Some("not-a-number")).is_err());
 
     // executor construction honours the env var (no other test in this
     // binary reads it — they pin thread counts explicitly); restore the

@@ -1,6 +1,6 @@
 //! Distributed data-parallel tests: the paper's Eq. 5–8 equivalence, comm
 //! volume shapes, and ZeRO-S1 invariants. All run multi-threaded workers
-//! over the shared PJRT engine.
+//! (the concurrent fabric, the default engine) over the shared library.
 
 use std::sync::Arc;
 
@@ -69,12 +69,12 @@ fn dp_state_allreduce_equals_single_device_nm() {
     for (steps, tol) in [(1u64, 2e-5f32), (3u64, 1e-3f32)] {
         let report = run_data_parallel(
             lib.clone(),
-            DpSpec {
-                cfg: cfg(OptimizerKind::AdamA, m, n),
-                sync: SyncStrategy::OptimizerStates,
+            DpSpec::new(
+                cfg(OptimizerKind::AdamA, m, n),
+                SyncStrategy::OptimizerStates,
                 steps,
-                data_seed: DATA_SEED,
-            },
+                DATA_SEED,
+            ),
         )
         .unwrap();
 
@@ -98,12 +98,12 @@ fn dp_grad_allreduce_equals_single_device_ga() {
     for (steps, tol) in [(1u64, 2e-5f32), (3u64, 1e-3f32)] {
         let report = run_data_parallel(
             lib.clone(),
-            DpSpec {
-                cfg: cfg(OptimizerKind::AdamGA, m, n),
-                sync: SyncStrategy::Gradients,
+            DpSpec::new(
+                cfg(OptimizerKind::AdamGA, m, n),
+                SyncStrategy::Gradients,
                 steps,
-                data_seed: DATA_SEED,
-            },
+                DATA_SEED,
+            ),
         )
         .unwrap();
 
@@ -124,17 +124,20 @@ fn dp_four_workers_converges_and_ranks_agree() {
     let lib = library();
     let report = run_data_parallel(
         lib,
-        DpSpec {
-            cfg: cfg(OptimizerKind::AdamA, 4, 2),
-            sync: SyncStrategy::OptimizerStates,
-            steps: 6,
-            data_seed: DATA_SEED,
-        },
+        DpSpec::new(
+            cfg(OptimizerKind::AdamA, 4, 2),
+            SyncStrategy::OptimizerStates,
+            6,
+            DATA_SEED,
+        ),
     )
     .unwrap(); // rank-identity asserted inside the runner
     let first = report.losses[0];
     let last = *report.losses.last().unwrap();
     assert!(last < first, "loss {first} -> {last}");
+    // per-rank memory surfaces for every rank
+    assert_eq!(report.per_rank_memory.len(), 4);
+    assert!(report.world_memory().total_peak_bytes() > 0);
 }
 
 #[test]
@@ -144,12 +147,7 @@ fn comm_volume_state_sync_constant_in_n_grad_sync_linear() {
     let vol = |sync, n| {
         let r = run_data_parallel(
             lib.clone(),
-            DpSpec {
-                cfg: cfg(OptimizerKind::AdamA, 2, n),
-                sync,
-                steps: 2,
-                data_seed: DATA_SEED,
-            },
+            DpSpec::new(cfg(OptimizerKind::AdamA, 2, n), sync, 2, DATA_SEED),
         )
         .unwrap();
         r.comm_bytes as f64
@@ -168,12 +166,9 @@ fn comm_volume_state_sync_constant_in_n_grad_sync_linear() {
 fn comm_volume_state_vs_grad_ratio_is_two() {
     let lib = library();
     let run = |sync, opt| {
-        run_data_parallel(
-            lib.clone(),
-            DpSpec { cfg: cfg(opt, 2, 4), sync, steps: 2, data_seed: DATA_SEED },
-        )
-        .unwrap()
-        .comm_bytes as f64
+        run_data_parallel(lib.clone(), DpSpec::new(cfg(opt, 2, 4), sync, 2, DATA_SEED))
+            .unwrap()
+            .comm_bytes as f64
     };
     let state = run(SyncStrategy::OptimizerStates, OptimizerKind::AdamA);
     let grad = run(SyncStrategy::Gradients, OptimizerKind::AdamGA);
@@ -191,17 +186,17 @@ fn zero1_ga_matches_ddp_ga() {
     let (m, n, steps) = (2usize, 2usize, 3u64);
     let zero = run_zero1(
         lib.clone(),
-        Zero1Spec { cfg: cfg(OptimizerKind::AdamGA, m, n), steps, data_seed: DATA_SEED },
+        Zero1Spec::new(cfg(OptimizerKind::AdamGA, m, n), steps, DATA_SEED),
     )
     .unwrap();
     let ddp = run_data_parallel(
         lib.clone(),
-        DpSpec {
-            cfg: cfg(OptimizerKind::AdamGA, m, n),
-            sync: SyncStrategy::Gradients,
+        DpSpec::new(
+            cfg(OptimizerKind::AdamGA, m, n),
+            SyncStrategy::Gradients,
             steps,
-            data_seed: DATA_SEED,
-        },
+            DATA_SEED,
+        ),
     )
     .unwrap();
     let diff = max_param_diff(&zero.final_params, &ddp.final_params);
@@ -214,7 +209,7 @@ fn zero1_adama_converges_and_shards_states() {
     let (m, n, steps) = (2usize, 2usize, 4u64);
     let report = run_zero1(
         lib.clone(),
-        Zero1Spec { cfg: cfg(OptimizerKind::AdamA, m, n), steps, data_seed: DATA_SEED },
+        Zero1Spec::new(cfg(OptimizerKind::AdamA, m, n), steps, DATA_SEED),
     )
     .unwrap();
     assert!(*report.losses.last().unwrap() < report.losses[0]);
@@ -232,6 +227,11 @@ fn zero1_adama_converges_and_shards_states() {
     );
     let max_layer = spec.max_layer_params() * 4;
     assert_eq!(report.memory.peak_gradients, max_layer);
+    // every rank's snapshot shards states the same way
+    assert_eq!(report.per_rank_memory.len(), m);
+    for snap in &report.per_rank_memory {
+        assert!(snap.tracker.peak_optimizer <= 2 * p_bytes / m + 2 * spec.layers.len() * 4 * m);
+    }
 }
 
 #[test]
@@ -239,12 +239,9 @@ fn zero1_adama_memory_beats_zero1_ga() {
     // Fig 6b shape: ZeRO-S1+AdamA < ZeRO-S1(+GA) on gradients.
     let lib = library();
     let run = |opt| {
-        run_zero1(
-            lib.clone(),
-            Zero1Spec { cfg: cfg(opt, 2, 2), steps: 2, data_seed: DATA_SEED },
-        )
-        .unwrap()
-        .memory
+        run_zero1(lib.clone(), Zero1Spec::new(cfg(opt, 2, 2), 2, DATA_SEED))
+            .unwrap()
+            .memory
     };
     let adama_mem = run(OptimizerKind::AdamA);
     let ga_mem = run(OptimizerKind::AdamGA);
@@ -260,19 +257,11 @@ fn dp_rejects_invalid_combos() {
     // state sync without AdamA is an error
     let err = run_data_parallel(
         lib.clone(),
-        DpSpec {
-            cfg: cfg(OptimizerKind::AdamGA, 2, 2),
-            sync: SyncStrategy::OptimizerStates,
-            steps: 1,
-            data_seed: 1,
-        },
+        DpSpec::new(cfg(OptimizerKind::AdamGA, 2, 2), SyncStrategy::OptimizerStates, 1, 1),
     );
     assert!(err.is_err());
     // zero1 with one worker is an error
-    let err = run_zero1(
-        lib,
-        Zero1Spec { cfg: cfg(OptimizerKind::AdamA, 1, 2), steps: 1, data_seed: 1 },
-    );
+    let err = run_zero1(lib, Zero1Spec::new(cfg(OptimizerKind::AdamA, 1, 2), 1, 1));
     assert!(err.is_err());
 }
 
@@ -281,12 +270,7 @@ fn single_worker_dp_matches_plain_trainer() {
     let lib = library();
     let report = run_data_parallel(
         lib.clone(),
-        DpSpec {
-            cfg: cfg(OptimizerKind::AdamA, 1, 2),
-            sync: SyncStrategy::OptimizerStates,
-            steps: 2,
-            data_seed: DATA_SEED,
-        },
+        DpSpec::new(cfg(OptimizerKind::AdamA, 1, 2), SyncStrategy::OptimizerStates, 2, DATA_SEED),
     )
     .unwrap();
     let h = lib.manifest().model_config("tiny").unwrap().model.clone();

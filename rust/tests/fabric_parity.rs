@@ -1,0 +1,244 @@
+//! Fabric parity suite: the serial simulator, the legacy channel ring and
+//! the concurrent fabric must produce **bit-for-bit identical** training
+//! runs — losses, final parameters and the comm-volume ledger — for every
+//! sync strategy, ZeRO flow, rank count and `ADAMA_THREADS`/`ADAMA_SIMD`
+//! setting (the CI `distributed` job sweeps `ADAMA_RANKS={1,2,4} ×
+//! ADAMA_THREADS={1,4}`).
+
+use std::sync::Arc;
+
+use adama::collective::{
+    run_data_parallel, run_zero1, CollectiveEngine, DpReport, DpSpec, SyncStrategy, Topology,
+    Zero1Spec,
+};
+use adama::config::{OptimBackend, OptimizerKind, TrainConfig};
+use adama::runtime::Library;
+
+mod common;
+use common::library;
+
+const DATA_SEED: u64 = 41;
+
+fn cfg(opt: OptimizerKind, workers: usize, n: usize) -> TrainConfig {
+    TrainConfig {
+        model: "tiny".into(),
+        optimizer: opt,
+        backend: OptimBackend::Host,
+        accum_steps: n,
+        chunk: 16384,
+        workers,
+        ..TrainConfig::default()
+    }
+}
+
+/// Rank counts to sweep: `ADAMA_RANKS` (an integer, or a comma list — the
+/// CI distributed matrix sets one value per leg); default `1,2,4`.
+fn worlds() -> Vec<usize> {
+    match std::env::var("ADAMA_RANKS") {
+        Ok(s) if !s.trim().is_empty() => s
+            .split(',')
+            .map(|t| {
+                t.trim()
+                    .parse::<usize>()
+                    .expect("ADAMA_RANKS: expected comma-separated positive integers")
+            })
+            .collect(),
+        _ => vec![1, 2, 4],
+    }
+}
+
+fn param_bits(params: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    params.iter().map(|l| l.iter().map(|x| x.to_bits()).collect()).collect()
+}
+
+fn loss_bits(losses: &[f32]) -> Vec<u32> {
+    losses.iter().map(|x| x.to_bits()).collect()
+}
+
+fn dp(
+    lib: &Arc<Library>,
+    m: usize,
+    sync: SyncStrategy,
+    opt: OptimizerKind,
+    engine: CollectiveEngine,
+) -> DpReport {
+    // pin ring so the 3-engine comparison stays valid even under an
+    // ambient ADAMA_FABRIC=tree (the channel engine is ring-only; tree
+    // has its own serial-vs-fabric oracle test below)
+    run_data_parallel(
+        lib.clone(),
+        DpSpec::new(cfg(opt, m, 2), sync, 2, DATA_SEED)
+            .with_engine(engine)
+            .with_topology(Topology::Ring),
+    )
+    .unwrap_or_else(|e| panic!("{} M={m} {:?}: {e:?}", engine.name(), sync))
+}
+
+#[test]
+fn dp_concurrent_engines_match_serial_simulator_bit_for_bit() {
+    let lib = library();
+    for m in worlds() {
+        for (sync, opt) in [
+            (SyncStrategy::OptimizerStates, OptimizerKind::AdamA),
+            (SyncStrategy::Gradients, OptimizerKind::AdamGA),
+            (SyncStrategy::GradPerMicrobatch, OptimizerKind::AdamA),
+        ] {
+            let oracle = dp(&lib, m, sync, opt, CollectiveEngine::Serial);
+            for engine in [CollectiveEngine::Channel, CollectiveEngine::Fabric] {
+                let got = dp(&lib, m, sync, opt, engine);
+                let tag = format!("{} M={m} {:?}", engine.name(), sync);
+                assert_eq!(
+                    loss_bits(&got.losses),
+                    loss_bits(&oracle.losses),
+                    "{tag}: losses diverged from serial"
+                );
+                assert_eq!(
+                    param_bits(&got.final_params),
+                    param_bits(&oracle.final_params),
+                    "{tag}: parameters diverged from serial"
+                );
+                assert_eq!(got.comm_bytes, oracle.comm_bytes, "{tag}: wire ledger");
+                assert_eq!(got.comm_ops, oracle.comm_ops, "{tag}: op ledger");
+            }
+        }
+    }
+}
+
+#[test]
+fn zero1_concurrent_engines_match_serial_simulator_bit_for_bit() {
+    let lib = library();
+    for m in worlds().into_iter().filter(|&m| m >= 2) {
+        for opt in [OptimizerKind::AdamA, OptimizerKind::AdamGA] {
+            let oracle = run_zero1(
+                lib.clone(),
+                Zero1Spec::new(cfg(opt, m, 2), 2, DATA_SEED)
+                    .with_engine(CollectiveEngine::Serial)
+                    .with_topology(Topology::Ring),
+            )
+            .unwrap();
+            for engine in [CollectiveEngine::Channel, CollectiveEngine::Fabric] {
+                let got = run_zero1(
+                    lib.clone(),
+                    Zero1Spec::new(cfg(opt, m, 2), 2, DATA_SEED)
+                        .with_engine(engine)
+                        .with_topology(Topology::Ring),
+                )
+                .unwrap_or_else(|e| panic!("zero1 {} M={m}: {e:?}", engine.name()));
+                let tag = format!("zero1 {} M={m} {:?}", engine.name(), opt);
+                assert_eq!(loss_bits(&got.losses), loss_bits(&oracle.losses), "{tag}");
+                assert_eq!(
+                    param_bits(&got.final_params),
+                    param_bits(&oracle.final_params),
+                    "{tag}"
+                );
+                assert_eq!(got.comm_bytes, oracle.comm_bytes, "{tag}: wire ledger");
+                assert_eq!(got.comm_ops, oracle.comm_ops, "{tag}: op ledger");
+            }
+        }
+    }
+}
+
+#[test]
+fn multithreaded_ranks_change_no_bits() {
+    // each fabric rank gets an explicit 2-worker intra-op pool (composing
+    // with runtime::pool); the serial oracle uses the default even split
+    // of ADAMA_THREADS — same bits either way
+    let lib = library();
+    let oracle = run_data_parallel(
+        lib.clone(),
+        DpSpec::new(
+            cfg(OptimizerKind::AdamA, 2, 2),
+            SyncStrategy::OptimizerStates,
+            2,
+            DATA_SEED,
+        )
+        .with_engine(CollectiveEngine::Serial),
+    )
+    .unwrap();
+    let wide = run_data_parallel(
+        lib,
+        DpSpec::new(
+            cfg(OptimizerKind::AdamA, 2, 2),
+            SyncStrategy::OptimizerStates,
+            2,
+            DATA_SEED,
+        )
+        .with_engine(CollectiveEngine::Fabric)
+        .with_rank_threads(2),
+    )
+    .unwrap();
+    assert_eq!(param_bits(&wide.final_params), param_bits(&oracle.final_params));
+    assert_eq!(loss_bits(&wide.losses), loss_bits(&oracle.losses));
+}
+
+#[test]
+fn tree_topology_matches_its_own_serial_oracle() {
+    // tree and ring bracketings differ; each topology must still be
+    // bit-identical between the serial simulator and the fabric
+    let lib = library();
+    for m in worlds().into_iter().filter(|&m| m >= 2) {
+        let mk = |engine| {
+            run_data_parallel(
+                lib.clone(),
+                DpSpec::new(
+                    cfg(OptimizerKind::AdamA, m, 2),
+                    SyncStrategy::OptimizerStates,
+                    2,
+                    DATA_SEED,
+                )
+                .with_engine(engine)
+                .with_topology(Topology::Tree),
+            )
+            .unwrap()
+        };
+        let oracle = mk(CollectiveEngine::Serial);
+        let fab = mk(CollectiveEngine::Fabric);
+        assert_eq!(param_bits(&fab.final_params), param_bits(&oracle.final_params), "M={m}");
+        assert_eq!(loss_bits(&fab.losses), loss_bits(&oracle.losses), "M={m}");
+    }
+}
+
+#[test]
+fn channel_engine_rejects_tree_topology() {
+    // the channel ring implements exactly the ring fold order; a tree
+    // request must error, not silently downgrade (which would break the
+    // engines-bit-identical invariant)
+    let lib = library();
+    let err = run_data_parallel(
+        lib,
+        DpSpec::new(
+            cfg(OptimizerKind::AdamA, 2, 2),
+            SyncStrategy::OptimizerStates,
+            1,
+            DATA_SEED,
+        )
+        .with_engine(CollectiveEngine::Channel)
+        .with_topology(Topology::Tree),
+    );
+    let msg = format!("{:?}", err.unwrap_err());
+    assert!(msg.contains("ring"), "{msg}");
+}
+
+#[test]
+fn per_rank_memory_is_reported_and_aggregates() {
+    let lib = library();
+    for m in worlds() {
+        let r = dp(
+            &lib,
+            m,
+            SyncStrategy::OptimizerStates,
+            OptimizerKind::AdamA,
+            CollectiveEngine::Fabric,
+        );
+        assert_eq!(r.per_rank_memory.len(), m, "one snapshot per rank");
+        let world = r.world_memory();
+        assert_eq!(world.world(), m);
+        let mx = world.max_per_rank().expect("non-empty world");
+        assert!(mx.tracker.peak_total > 0);
+        assert!(world.total_peak_bytes() >= mx.tracker.peak_total as u64);
+        // every rank holds a full replica: identical weight peaks
+        for snap in &r.per_rank_memory {
+            assert_eq!(snap.tracker.peak_weights, mx.tracker.peak_weights);
+        }
+    }
+}

@@ -151,7 +151,7 @@ fn prop_parallel_matmul_equals_serial_within_0_ulp() {
     // so parallel == serial == hand-rolled reference *bitwise* (0 ULP) —
     // and the SIMD axpy rows (level from ADAMA_SIMD, so the CI matrix
     // sweeps scalar and vector) must not change that.
-    let lvl = simd::Level::from_env();
+    let lvl = simd::Level::from_env().expect("valid ADAMA_SIMD");
     let serial = ThreadPool::new(1);
     for seed in 0..25u64 {
         let mut rng = Rng::new(8000 + seed);
@@ -260,6 +260,54 @@ fn prop_ring_allreduce_equals_sum() {
                 assert!((got[i] - want[i]).abs() < 1e-4 * want[i].abs().max(1.0),
                     "seed {seed} idx {i}: {} vs {}", got[i], want[i]);
             }
+        }
+    }
+}
+
+#[test]
+fn prop_fabric_reduce_order_invariant_under_injected_delays() {
+    // The fabric's reduction order is a pure function of rank indices:
+    // random per-rank sleeps (arrival-order scrambling) must never change
+    // a single bit relative to the single-threaded serial oracle, for
+    // random worlds/lengths (incl. zero-length shards when len < world)
+    // and both topologies.
+    use adama::collective::fabric::{serial, Fabric, Topology};
+    use adama::collective::CommStats;
+    use std::sync::Arc;
+
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(6000 + seed);
+        let world = 1 + rng.below(6);
+        let n = rng.below(40); // may be < world: some shards empty
+        let topo = if rng.below(2) == 0 { Topology::Ring } else { Topology::Tree };
+        let inputs: Vec<Vec<f32>> = (0..world)
+            .map(|w| {
+                let mut r = Rng::new(seed * 131 + w as u64);
+                randvec(&mut r, n, 1.0)
+            })
+            .collect();
+        let mut oracle = inputs.clone();
+        serial::all_reduce_sum(topo, &mut oracle, &CommStats::default()).unwrap();
+
+        let delays: Vec<u64> = (0..world).map(|_| rng.below(6) as u64).collect();
+        let inputs = Arc::new(inputs);
+        let handles = Fabric::with_topology(world, topo);
+        let mut joins = Vec::new();
+        for h in handles {
+            let inputs = inputs.clone();
+            let delay = delays[h.rank()];
+            joins.push(std::thread::spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(delay));
+                let mut data = inputs[h.rank()].clone();
+                h.all_reduce_sum(&mut data).unwrap();
+                data
+            }));
+        }
+        for (r, j) in joins.into_iter().enumerate() {
+            let got = j.join().unwrap();
+            let got: Vec<u32> = got.iter().map(|x| x.to_bits()).collect();
+            let want: Vec<u32> = oracle[r].iter().map(|x| x.to_bits()).collect();
+            assert_eq!(got, want, "seed {seed} world {world} n {n} {topo:?} rank {r}");
         }
     }
 }

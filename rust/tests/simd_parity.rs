@@ -278,10 +278,9 @@ fn executor_reports_and_forks_its_simd_level() {
         let rank = lib.fork_with_threads(1);
         assert_eq!(rank.executor().simd_level(), Some(level), "fork must keep the level");
     }
-    // ADAMA_SIMD spellings resolve without panicking
-    for spec in ["auto", "avx2", "sse2", "scalar", "garbage", ""] {
-        let _ = Level::parse(Some(spec));
-    }
-    assert_eq!(Level::parse(Some("scalar")), Level::Scalar);
-    assert_eq!(Level::parse(Some("auto")), simd::detect());
+    // valid ADAMA_SIMD spellings resolve; invalid ones are clear errors
+    assert_eq!(Level::parse(Some("scalar")).unwrap(), Level::Scalar);
+    assert_eq!(Level::parse(Some("auto")).unwrap(), simd::detect());
+    assert_eq!(Level::parse(Some("")).unwrap(), simd::detect());
+    assert!(Level::parse(Some("garbage")).is_err());
 }

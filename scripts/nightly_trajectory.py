@@ -3,18 +3,23 @@
 
 Usage: nightly_trajectory.py <fig7_output.txt> <BENCH_perf.json>
 
-Pulls three headline numbers out of the nightly bench run:
+Pulls four headline numbers out of the nightly bench run:
   * E2.1 — the AdamA/Adam samples/s ratio at the largest swept N
     (last data row of the "Fig 7a" section of fig7_throughput's stdout);
   * E3 — the stash-vs-remat fwd+bwd pair speedup at budget=unlimited,
     4 threads (from BENCH_perf.json);
   * SIMD — the mean speedup_vs_scalar over the `simd_*` kernel rows and
-    the dispatched level (from BENCH_perf.json).
+    the dispatched level (from BENCH_perf.json);
+  * E6 — the concurrent-fabric-vs-serial DP step-time speedup at the
+    largest rank count (from the `dp_fabric_vs_serial` rows).
 
-Every field degrades to "n/a" rather than failing the job: a missing
-number in the table is a visible signal, a red nightly for a parse
-hiccup is just noise. The table itself lives at the bottom of
-EXPERIMENTS.md ("## Nightly trajectory").
+A bench that emitted **no rows** fails the run loudly (non-zero exit)
+instead of appending an empty trajectory entry: a missing/empty
+BENCH_perf.json or a Fig-7a section with no data rows means the nightly
+is broken, and an "n/a | n/a | n/a" row would only hide that. Individual
+secondary fields still degrade to "n/a" (a parse hiccup in one column is
+a visible signal, not a red build). The table itself lives at the bottom
+of EXPERIMENTS.md ("## Nightly trajectory").
 """
 
 import datetime
@@ -28,11 +33,11 @@ def fig7_ratio(path):
     """Last data row of the Fig 7a section: (N, AdamA/Adam ratio)."""
     try:
         text = open(path, encoding="utf-8", errors="replace").read()
-    except OSError:
-        return None
+    except OSError as e:
+        sys.exit(f"nightly_trajectory: cannot read fig7 output {path!r}: {e}")
     section = text.split("Fig 7a", 1)
     if len(section) < 2:
-        return None
+        sys.exit(f"nightly_trajectory: no 'Fig 7a' section in {path!r} — fig7 bench emitted no rows")
     best = None
     for line in section[1].splitlines():
         m = re.match(r"\s*(\d+)\s+[\d.]+\s+[\d.]+\s+([\d.]+)\s*$", line)
@@ -40,15 +45,20 @@ def fig7_ratio(path):
             best = (int(m.group(1)), float(m.group(2)))
         elif line.startswith("==="):
             break  # next banner: stop at the end of the 7a section
+    if best is None:
+        sys.exit(f"nightly_trajectory: 'Fig 7a' section of {path!r} has no data rows — fig7 bench emitted no rows")
     return best
 
 
 def bench_rows(path):
     try:
         with open(path, encoding="utf-8") as f:
-            return json.load(f).get("results", [])
-    except (OSError, ValueError):
-        return []
+            rows = json.load(f).get("results", [])
+    except (OSError, ValueError) as e:
+        sys.exit(f"nightly_trajectory: cannot read bench rows from {path!r}: {e}")
+    if not rows:
+        sys.exit(f"nightly_trajectory: {path!r} has an empty 'results' array — perf bench emitted no rows")
+    return rows
 
 
 def stash_speedup(rows):
@@ -75,6 +85,17 @@ def simd_speedup(rows):
     return (sum(speedups) / len(speedups), level)
 
 
+def fabric_speedup(rows):
+    """Fabric-vs-serial DP speedup at the largest recorded rank count."""
+    best = None
+    for r in rows:
+        if r.get("op") == "dp_fabric_vs_serial" and "speedup_fabric_vs_serial" in r:
+            ranks = int(r.get("ranks", 0))
+            if best is None or ranks >= best[0]:
+                best = (ranks, float(r["speedup_fabric_vs_serial"]))
+    return best
+
+
 def main():
     if len(sys.argv) != 3:
         sys.exit(__doc__)
@@ -82,11 +103,15 @@ def main():
     rows = bench_rows(bench_path)
 
     ratio = fig7_ratio(fig7_path)
-    e2 = f"{ratio[1]:.3f} (N={ratio[0]})" if ratio else "n/a"
+    e2 = f"{ratio[1]:.3f} (N={ratio[0]})"
     stash = stash_speedup(rows)
     e3 = f"{stash:.2f}x" if stash else "n/a"
     simd = simd_speedup(rows)
-    note = f"simd {simd[0]:.2f}x ({simd[1]})" if simd else "simd n/a"
+    fabric = fabric_speedup(rows)
+    notes = [f"simd {simd[0]:.2f}x ({simd[1]})" if simd else "simd n/a"]
+    if fabric:
+        notes.append(f"fabric {fabric[1]:.2f}x (M={fabric[0]})")
+    note = ", ".join(notes)
 
     threads = next((str(r["threads"]) for r in rows if "threads" in r), "?")
     date = datetime.date.today().isoformat()
