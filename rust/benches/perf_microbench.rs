@@ -8,6 +8,11 @@
 //!   * thread-pool scaling: matmul and the `small` transformer block
 //!     forward at 1/2/4 pool threads (per-thread-count rows, so the
 //!     speedup is machine-recorded in the trajectory);
+//!   * GEMM engines: the packed, cache-blocked engine (`ADAMA_GEMM=packed`)
+//!     vs the naive loops across a shape sweep — square, transformer-shaped
+//!     skinny/fat, and remainder-heavy odd sizes — with GFLOP/s per row;
+//!     a full run **fails** if the packed engine regresses below naive
+//!     beyond a 10% noise allowance on any swept shape;
 //!   * SIMD dispatch: every optimizer kernel plus the `small` block
 //!     forward/backward at `ADAMA_SIMD=scalar` vs the detected level —
 //!     and a full (non-`--quick`) run **fails** (non-zero exit) if any
@@ -34,7 +39,7 @@ use adama::config::{OptimBackend, OptimizerKind};
 use adama::data::MarkovCorpus;
 use adama::optim::{host_math, ChunkRunner, Hyper};
 use adama::runtime::hostexec::math;
-use adama::runtime::{simd, Library, MemoryPlan, ThreadPool, Value};
+use adama::runtime::{simd, GemmMode, Library, MemoryPlan, ThreadPool, Value};
 use adama::tensor::Rng;
 use adama::util::json::{obj, Json};
 use adama::util::stats::bench;
@@ -170,15 +175,17 @@ fn main() {
     println!("{:<18} {:>8} {:>12} {:>10}", "op", "threads", "ms/call", "speedup");
     let dim = if quick() { 96 } else { 256 };
     let env_lvl = simd::Level::from_env().expect("valid ADAMA_SIMD");
+    let env_gm = GemmMode::from_env().expect("valid ADAMA_GEMM");
     let mut mrng = Rng::new(7);
     let ma: Vec<f32> = (0..dim * dim).map(|_| mrng.normal()).collect();
     let mb: Vec<f32> = (0..dim * dim).map(|_| mrng.normal()).collect();
     let mut mo = vec![0.0f32; dim * dim];
+    let mut mpanel = Vec::new();
     let mut matmul_1t = 0.0f64;
     for threads in [1usize, 2, 4] {
         let pool = ThreadPool::new(threads);
         let s = bench(1, iters, || {
-            math::matmul(&pool, env_lvl, &ma, &mb, dim, dim, dim, &mut mo);
+            math::matmul(&pool, env_lvl, env_gm, &mut mpanel, &ma, &mb, dim, dim, dim, &mut mo);
         });
         if threads == 1 {
             matmul_1t = s.mean();
@@ -194,6 +201,7 @@ fn main() {
         results.push(obj(vec![
             ("op", Json::Str(format!("matmul_{dim}"))),
             ("backend", "host".into()),
+            ("gemm", env_gm.name().into()),
             ("threads", threads.into()),
             ("ms_per_call", (s.mean() * 1e3).into()),
             ("speedup_vs_1thread", speedup.into()),
@@ -234,6 +242,78 @@ fn main() {
             ("speedup_vs_1thread", speedup.into()),
         ]));
     }
+
+    banner("GEMM engines: packed (cache-blocked) vs naive, GFLOP/s per shape");
+    println!(
+        "{:<16} {:>14} {:>8} {:>11} {:>11} {:>9} {:>9}",
+        "shape", "m x k x n", "threads", "naive ms", "packed ms", "GFLOP/s", "speedup"
+    );
+    let mut gemm_regressions: Vec<String> = Vec::new();
+    {
+        // square (cache-blocking headroom), transformer-shaped skinny/fat
+        // ([b·s,h]·[h,3h] and [b·s,h]·[h,f]), and a remainder-heavy odd
+        // shape that exercises every partial tile/block edge
+        let sq = if quick() { 256 } else { 512 };
+        let gemm_shapes: [(&str, usize, usize, usize); 4] = [
+            ("square", sq, sq, sq),
+            ("qkv_skinny", 1024, 192, 576),
+            ("ffn_fat", 512, 256, 1024),
+            ("odd_remainder", 129, 67, 193),
+        ];
+        let gpool = ThreadPool::new(pool_threads);
+        let mut grng = Rng::new(29);
+        for (shape, m, k, n) in gemm_shapes {
+            let ga: Vec<f32> = (0..m * k).map(|_| grng.normal()).collect();
+            let gb: Vec<f32> = (0..k * n).map(|_| grng.normal()).collect();
+            let mut gout = vec![0.0f32; m * n];
+            let mut panel = Vec::new();
+            let flops = 2.0 * (m * k * n) as f64;
+            let tn = bench(1, iters.min(8), || {
+                let p = &mut panel;
+                math::matmul(&gpool, env_lvl, GemmMode::Naive, p, &ga, &gb, m, k, n, &mut gout);
+            });
+            let tp = bench(1, iters.min(8), || {
+                let p = &mut panel;
+                math::matmul(&gpool, env_lvl, GemmMode::Packed, p, &ga, &gb, m, k, n, &mut gout);
+            });
+            let speedup = tn.mean() / tp.mean();
+            println!(
+                "{:<16} {:>14} {:>8} {:>11.3} {:>11.3} {:>9.2} {:>8.2}x",
+                shape,
+                format!("{m}x{k}x{n}"),
+                pool_threads,
+                1e3 * tn.mean(),
+                1e3 * tp.mean(),
+                flops / tp.mean() / 1e9,
+                speedup
+            );
+            for (gm, t) in [(GemmMode::Naive, &tn), (GemmMode::Packed, &tp)] {
+                let mut row = vec![
+                    ("op", Json::Str(format!("gemm_{shape}"))),
+                    ("backend", "host".into()),
+                    ("gemm", gm.name().into()),
+                    ("threads", pool_threads.into()),
+                    ("m", m.into()),
+                    ("k", k.into()),
+                    ("n", n.into()),
+                    ("ms_per_call", (t.mean() * 1e3).into()),
+                    ("gflops", (flops / t.mean() / 1e9).into()),
+                ];
+                if gm == GemmMode::Packed {
+                    row.push(("speedup_packed_vs_naive", speedup.into()));
+                }
+                results.push(obj(row));
+            }
+            if speedup < 0.9 {
+                gemm_regressions.push(format!(
+                    "gemm_{shape} ({m}x{k}x{n}): packed {:.3} ms vs naive {:.3} ms",
+                    1e3 * tp.mean(),
+                    1e3 * tn.mean()
+                ));
+            }
+        }
+    }
+    println!("(engines verified bit-identical in rust/tests/proptests.rs and simd_parity.rs)");
 
     banner("SIMD dispatch: optimizer kernels + `small` block fwd/bwd, scalar vs vector");
     let detected = simd::detect();
@@ -498,15 +578,27 @@ fn main() {
         Err(e) => eprintln!("\ncould not write {path}: {e}"),
     }
 
-    // hard gate: the SIMD path must never run slower than scalar (with a
-    // noise allowance) — a regression fails the bench run. Only armed at
-    // the full iteration count: 3-iteration --quick samples on shared CI
-    // are too jittery to turn into a red build.
+    // hard gates: the SIMD path must never run slower than scalar, and
+    // the packed GEMM engine must never run slower than the naive loops
+    // (each with a noise allowance) — a regression fails the bench run.
+    // Only armed at the full iteration count: 3-iteration --quick samples
+    // on shared CI are too jittery to turn into a red build.
+    let mut gated = false;
     if !simd_regressions.is_empty() {
         eprintln!("\nSIMD regression vs scalar:");
         for r in &simd_regressions {
             eprintln!("  {r}");
         }
+        gated = true;
+    }
+    if !gemm_regressions.is_empty() {
+        eprintln!("\npacked GEMM regression vs naive:");
+        for r in &gemm_regressions {
+            eprintln!("  {r}");
+        }
+        gated = true;
+    }
+    if gated {
         if quick() {
             eprintln!("(--quick run: regression gate not armed, rows recorded only)");
         } else {

@@ -20,6 +20,7 @@
 //! measured [`crate::runtime::MemStats`] in `rust/tests/actstash.rs`.
 
 use crate::config::OptimizerKind;
+use crate::runtime::hostexec::gemm::{GemmMode, KC, NC};
 use crate::runtime::{MemoryPlan, ModelHyper};
 
 /// A paper-scale transformer description.
@@ -295,6 +296,42 @@ impl HostBlockDims {
         self.batch * self.seq
     }
 
+    /// Elements of one [`gemm`](crate::runtime::hostexec::gemm) B-panel
+    /// for a `[?,k]·[k,n]` matmul: `min(k, KC)·min(n, NC)` — the u64
+    /// twin of [`crate::runtime::hostexec::gemm::panel_elems`].
+    fn pe(k: u64, n: u64) -> u64 {
+        k.min(KC as u64) * n.min(NC as u64)
+    }
+
+    /// B-panel elements of the fattest matmul a `block_fwd` call issues —
+    /// zero under the naive engine, which packs nothing. Mirrors
+    /// `runtime::hostexec::transformer::fwd_panel_elems` exactly.
+    fn fwd_panel_elems(&self, mode: GemmMode) -> u64 {
+        if mode == GemmMode::Naive {
+            return 0;
+        }
+        let (h, f) = (self.hidden, self.ffn);
+        Self::pe(h, 3 * h).max(Self::pe(h, h)).max(Self::pe(h, f)).max(Self::pe(f, h))
+    }
+
+    /// B-panel elements of the fattest matmul a `block_bwd` call issues
+    /// (either path — the union panel covers the rematerialised forward
+    /// too). Mirrors `runtime::hostexec::transformer::bwd_panel_elems`.
+    fn bwd_panel_elems(&self, mode: GemmMode) -> u64 {
+        if mode == GemmMode::Naive {
+            return 0;
+        }
+        let (h, f, bs) = (self.hidden, self.ffn, self.bs());
+        self.fwd_panel_elems(mode)
+            .max(Self::pe(h, f))
+            .max(Self::pe(bs, h))
+            .max(Self::pe(f, h))
+            .max(Self::pe(bs, f))
+            .max(Self::pe(h, h))
+            .max(Self::pe(3 * h, h))
+            .max(Self::pe(bs, 3 * h))
+    }
+
     /// Elements of the causal attention probability tensor
     /// `[b, heads, s, s]`.
     fn probs_elems(&self) -> u64 {
@@ -313,11 +350,14 @@ impl HostBlockDims {
     }
 
     /// Transient workspace bytes one `block_fwd` call registers:
-    /// `hn1 + qkv(3h) + probs + aoh + ao + attn + x1 + hn2 + m1(f) +
-    /// gm(f) + m2 + y` — `bs·(11h + 2f) + b·heads·s²` floats.
-    pub fn fwd_workspace_bytes(&self) -> u64 {
+    /// `hn1 + qkv(3h) + kt(h) + probs + aoh + ao + attn + x1 + hn2 +
+    /// m1(f) + gm(f) + m2 + y` — `bs·(12h + 2f) + b·heads·s²` floats —
+    /// plus the single B-panel packing buffer of the `mode` GEMM engine
+    /// (`kt` is the transposed-K scratch the output-tiled attention
+    /// score kernel reads; zero-cost layout change, one extra `bs·h`).
+    pub fn fwd_workspace_bytes(&self, mode: GemmMode) -> u64 {
         let (h, f) = (self.hidden, self.ffn);
-        4 * (self.bs() * (11 * h + 2 * f) + self.probs_elems())
+        4 * (self.bs() * (12 * h + 2 * f) + self.probs_elems() + self.fwd_panel_elems(mode))
     }
 
     /// Bytes of stashed forward state that survive a `take()`: the entry
@@ -330,41 +370,59 @@ impl HostBlockDims {
 
     /// Transient workspace bytes of the gradient sweep alone (shared by
     /// both backward paths): the activation-shaped gradients
-    /// `bs·(11h + 2f)`, the parameter gradients `2hf + 4h²`, and the
-    /// bias-shaped gradients `9h + f` (db2 + dln2g/b + dbo + dbqkv(3h) +
-    /// dln1g/b).
-    fn grad_sweep_bytes(&self) -> u64 {
+    /// `bs·(11h + 2f)` plus the transposed-V scratch `vt` (`bs·h`), the
+    /// parameter gradients `2hf + 4h²`, the bias-shaped gradients
+    /// `9h + f` (db2 + dln2g/b + dbo + dbqkv(3h) + dln1g/b), and the
+    /// backward B-panel of the `mode` GEMM engine (sized to the union of
+    /// forward and backward matmul shapes — `block_bwd` allocates it
+    /// once up front on both paths).
+    fn grad_sweep_bytes(&self, mode: GemmMode) -> u64 {
         let (h, f) = (self.hidden, self.ffn);
-        4 * (self.bs() * (11 * h + 2 * f) + 2 * h * f + 4 * h * h + 9 * h + f)
+        4 * (self.bs() * (12 * h + 2 * f)
+            + 2 * h * f
+            + 4 * h * h
+            + 9 * h
+            + f
+            + self.bwd_panel_elems(mode))
     }
 
     /// Workspace of a stash-hit `block_bwd` call: the gradient sweep plus
     /// the consumed forward state, which stays physically live (and is
     /// metered as workspace) until the call returns.
-    pub fn bwd_workspace_bytes(&self) -> u64 {
-        self.grad_sweep_bytes() + self.stash_state_bytes()
+    pub fn bwd_workspace_bytes(&self, mode: GemmMode) -> u64 {
+        self.grad_sweep_bytes(mode) + self.stash_state_bytes()
     }
 
     /// Workspace of a rematerialising `block_bwd` call: the recomputed
-    /// forward's buffers plus the gradient sweep.
-    pub fn remat_bwd_workspace_bytes(&self) -> u64 {
-        self.fwd_workspace_bytes() + self.grad_sweep_bytes()
+    /// forward's buffers plus the gradient sweep. The recomputed forward
+    /// reuses the backward's union B-panel instead of packing its own,
+    /// so the forward term carries no panel (hence `Naive`) — the panel
+    /// is counted once, inside the gradient-sweep term.
+    pub fn remat_bwd_workspace_bytes(&self, mode: GemmMode) -> u64 {
+        self.fwd_workspace_bytes(GemmMode::Naive) + self.grad_sweep_bytes(mode)
     }
 
     /// Transient workspace of one fused `head_loss` call: logits +
     /// dlogits (`2·bs·v` — the largest single buffer of a training step
-    /// at realistic vocab sizes) plus `dx` (`bs·h`) and `dW` (`h·v`).
-    /// Mirrors the allocation sites in
+    /// at realistic vocab sizes) plus `dx` (`bs·h`), `dW` (`h·v`) and
+    /// the head's B-panel. Mirrors the allocation sites in
     /// `runtime::hostexec::transformer::{head_common, HeadLoss}`.
-    pub fn head_loss_workspace_bytes(&self, vocab: u64) -> u64 {
+    pub fn head_loss_workspace_bytes(&self, vocab: u64, mode: GemmMode) -> u64 {
         let h = self.hidden;
-        4 * (2 * self.bs() * vocab + self.bs() * h + h * vocab)
+        let panel = if mode == GemmMode::Naive {
+            0
+        } else {
+            Self::pe(h, vocab).max(Self::pe(vocab, h)).max(Self::pe(self.bs(), vocab))
+        };
+        4 * (2 * self.bs() * vocab + self.bs() * h + h * vocab + panel)
     }
 
     /// Transient workspace of one `head_eval` call: logits + dlogits
-    /// only (`head_common` allocates both on the eval path too).
-    pub fn head_eval_workspace_bytes(&self, vocab: u64) -> u64 {
-        4 * 2 * self.bs() * vocab
+    /// (`head_common` allocates both on the eval path too) plus the
+    /// logits-matmul B-panel.
+    pub fn head_eval_workspace_bytes(&self, vocab: u64, mode: GemmMode) -> u64 {
+        let panel = if mode == GemmMode::Naive { 0 } else { Self::pe(self.hidden, vocab) };
+        4 * (2 * self.bs() * vocab + panel)
     }
 
     /// Predicted executor workspace peak over a full **training step**:
@@ -376,9 +434,10 @@ impl HostBlockDims {
         plan: MemoryPlan,
         blocks: u64,
         vocab: u64,
+        mode: GemmMode,
     ) -> u64 {
-        self.predicted_workspace_peak_bytes(plan, blocks)
-            .max(self.head_loss_workspace_bytes(vocab))
+        self.predicted_workspace_peak_bytes(plan, blocks, mode)
+            .max(self.head_loss_workspace_bytes(vocab, mode))
     }
 
     /// Predicted arena peak for a model with `blocks` layers trained
@@ -392,11 +451,16 @@ impl HostBlockDims {
     /// Predicted workspace peak over a training step: remat backward is
     /// the fattest call when any block rematerialises; otherwise the
     /// larger of forward and pure backward.
-    pub fn predicted_workspace_peak_bytes(&self, plan: MemoryPlan, blocks: u64) -> u64 {
+    pub fn predicted_workspace_peak_bytes(
+        &self,
+        plan: MemoryPlan,
+        blocks: u64,
+        mode: GemmMode,
+    ) -> u64 {
         if plan.stashable_blocks(self.stash_entry_bytes(), blocks) < blocks {
-            self.remat_bwd_workspace_bytes()
+            self.remat_bwd_workspace_bytes(mode)
         } else {
-            self.fwd_workspace_bytes().max(self.bwd_workspace_bytes())
+            self.fwd_workspace_bytes(mode).max(self.bwd_workspace_bytes(mode))
         }
     }
 
@@ -529,42 +593,68 @@ mod tests {
     fn host_block_dims_formulas_are_consistent() {
         // tiny config dims: b=4, s=32, h=64, heads=2, f=256
         let d = HostBlockDims { batch: 4, seq: 32, hidden: 64, heads: 2, ffn: 256 };
+        let (naive, packed) = (GemmMode::Naive, GemmMode::Packed);
         let bs = 4 * 32u64;
         let probs = 4 * 2 * 32 * 32u64;
         assert_eq!(d.stash_entry_bytes(), 4 * (bs * (8 * 64 + 2 * 256) + probs));
-        assert_eq!(d.fwd_workspace_bytes(), 4 * (bs * (11 * 64 + 2 * 256) + probs));
+        assert_eq!(d.fwd_workspace_bytes(naive), 4 * (bs * (12 * 64 + 2 * 256) + probs));
         assert_eq!(d.stash_state_bytes(), 4 * (bs * (7 * 64 + 2 * 256) + probs));
         assert_eq!(
-            d.grad_sweep_bytes(),
-            4 * (bs * (11 * 64 + 2 * 256) + 2 * 64 * 256 + 4 * 64 * 64 + 9 * 64 + 256)
+            d.grad_sweep_bytes(naive),
+            4 * (bs * (12 * 64 + 2 * 256) + 2 * 64 * 256 + 4 * 64 * 64 + 9 * 64 + 256)
         );
-        assert_eq!(d.bwd_workspace_bytes(), d.grad_sweep_bytes() + d.stash_state_bytes());
+        // panel terms: naive packs nothing; packed adds exactly the
+        // fattest min(k,KC)·min(n,NC) panel of each program's matmuls
+        // (h=64, f=256, bs=128 => fwd h·f, bwd bs·f, capped by KC/NC=256)
+        assert_eq!(d.fwd_panel_elems(naive), 0);
+        assert_eq!(d.fwd_panel_elems(packed), 64 * 256);
+        assert_eq!(d.bwd_panel_elems(packed), 128 * 256);
         assert_eq!(
-            d.remat_bwd_workspace_bytes(),
-            d.fwd_workspace_bytes() + d.grad_sweep_bytes()
+            d.fwd_workspace_bytes(packed),
+            d.fwd_workspace_bytes(naive) + 4 * d.fwd_panel_elems(packed)
         );
+        assert_eq!(
+            d.grad_sweep_bytes(packed),
+            d.grad_sweep_bytes(naive) + 4 * d.bwd_panel_elems(packed)
+        );
+        for gm in GemmMode::all() {
+            assert_eq!(d.bwd_workspace_bytes(gm), d.grad_sweep_bytes(gm) + d.stash_state_bytes());
+            // the rematerialised forward reuses the backward union panel,
+            // so remat = panel-free forward + panel-carrying sweep
+            assert_eq!(
+                d.remat_bwd_workspace_bytes(gm),
+                d.fwd_workspace_bytes(naive) + d.grad_sweep_bytes(gm)
+            );
+        }
         // head programs (tiny vocab = 256): logits dominate the head side
         let v = 256u64;
-        assert_eq!(d.head_loss_workspace_bytes(v), 4 * (2 * bs * v + bs * 64 + 64 * v));
-        assert_eq!(d.head_eval_workspace_bytes(v), 4 * 2 * bs * v);
-        assert!(d.head_loss_workspace_bytes(v) > d.head_eval_workspace_bytes(v));
-        // at tiny scale the remat block backward still dominates the step
-        // peak; at BERT-vocab scale the head takes over — the step-level
-        // prediction covers both regimes
+        assert_eq!(d.head_loss_workspace_bytes(v, naive), 4 * (2 * bs * v + bs * 64 + 64 * v));
         assert_eq!(
-            d.predicted_step_workspace_peak_bytes(MemoryPlan::remat(), 2, v),
-            d.remat_bwd_workspace_bytes()
+            d.head_loss_workspace_bytes(v, packed),
+            4 * (2 * bs * v + bs * 64 + 64 * v + 128 * 256)
         );
-        let big_vocab = 30522u64;
-        assert_eq!(
-            d.predicted_step_workspace_peak_bytes(MemoryPlan::remat(), 2, big_vocab),
-            d.head_loss_workspace_bytes(big_vocab)
-        );
-        // a stash entry is strictly smaller than the forward recompute
-        // it saves, and a stash-hit backward is strictly lighter than a
-        // rematerialising one (that's the whole trade)
-        assert!(d.stash_entry_bytes() < d.fwd_workspace_bytes());
-        assert!(d.bwd_workspace_bytes() < d.remat_bwd_workspace_bytes());
+        assert_eq!(d.head_eval_workspace_bytes(v, naive), 4 * 2 * bs * v);
+        assert_eq!(d.head_eval_workspace_bytes(v, packed), 4 * (2 * bs * v + 64 * 256));
+        for gm in GemmMode::all() {
+            assert!(d.head_loss_workspace_bytes(v, gm) > d.head_eval_workspace_bytes(v, gm));
+            // at tiny scale the remat block backward still dominates the
+            // step peak; at BERT-vocab scale the head takes over — the
+            // step-level prediction covers both regimes
+            assert_eq!(
+                d.predicted_step_workspace_peak_bytes(MemoryPlan::remat(), 2, v, gm),
+                d.remat_bwd_workspace_bytes(gm)
+            );
+            let big_vocab = 30522u64;
+            assert_eq!(
+                d.predicted_step_workspace_peak_bytes(MemoryPlan::remat(), 2, big_vocab, gm),
+                d.head_loss_workspace_bytes(big_vocab, gm)
+            );
+            // a stash entry is strictly smaller than the forward recompute
+            // it saves, and a stash-hit backward is strictly lighter than
+            // a rematerialising one (that's the whole trade)
+            assert!(d.stash_entry_bytes() < d.fwd_workspace_bytes(gm));
+            assert!(d.bwd_workspace_bytes(gm) < d.remat_bwd_workspace_bytes(gm));
+        }
     }
 
     #[test]
@@ -580,10 +670,12 @@ mod tests {
         // half budget fits exactly one of the two blocks
         assert_eq!(d.predicted_stash_peak_bytes(MemoryPlan::bytes(e * blocks / 2), blocks), e);
         // remat workspace dominates whenever any block recomputes
-        assert!(
-            d.predicted_workspace_peak_bytes(MemoryPlan::remat(), blocks)
-                > d.predicted_workspace_peak_bytes(MemoryPlan::unlimited(), blocks)
-        );
+        for gm in GemmMode::all() {
+            assert!(
+                d.predicted_workspace_peak_bytes(MemoryPlan::remat(), blocks, gm)
+                    > d.predicted_workspace_peak_bytes(MemoryPlan::unlimited(), blocks, gm)
+            );
+        }
     }
 
     #[test]

@@ -260,6 +260,14 @@ pub trait Executor: Send + Sync {
         None
     }
 
+    /// GEMM engine of the backend's matmul kernels, when it has one. The
+    /// host executor reports its `ADAMA_GEMM`-resolved
+    /// [`crate::runtime::hostexec::gemm::GemmMode`]; backends without an
+    /// in-process GEMM layer return `None`.
+    fn gemm_mode(&self) -> Option<crate::runtime::hostexec::gemm::GemmMode> {
+        None
+    }
+
     /// Memory instrumentation snapshot, when the backend provides one.
     /// The host executor reports its activation stash arena and per-call
     /// workspace meters; backends without instrumentation return `None`.

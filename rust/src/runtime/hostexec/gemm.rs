@@ -1,0 +1,360 @@
+//! Packed, cache-blocked, output-tiled GEMM engine for the host
+//! executor's three matmul variants — bit-identical to the naive loops.
+//!
+//! ## Blocking scheme
+//!
+//! The driver walks the output in `NC`-column stripes and the reduction
+//! axis in `KC`-step blocks. For each `(N block, K block)` pair it packs
+//! the corresponding `kc × nc` block of B into a contiguous panel
+//! (row-major over the K axis, at most `KC·NC` f32 = 256 KiB, so the
+//! panel stays L2-resident and every inner-loop B access is a unit-
+//! stride lane load regardless of the source layout). Output rows are
+//! then split across the deterministic thread pool in contiguous
+//! balanced ranges and each range is swept by the register tile
+//! [`crate::runtime::simd::gemm_tile`]: `MR = 4` output rows × one
+//! `Lanes`-width column tile held in registers across the whole K block,
+//! with the panel's `kc × WIDTH` column tile (≤ 8 KiB) L1-resident
+//! across row blocks.
+//!
+//! ## Why blocking preserves the bit-exactness contract
+//!
+//! Every output element's K fold stays the naive serial expression tree:
+//! K blocks are visited in ascending order, the accumulator starts at
+//! `0.0` on the first block and is otherwise reloaded from `out` (an f32
+//! store/load round-trip is lossless), each step is multiply-then-add
+//! with no FMA, and lanes span adjacent output *columns*, never the
+//! reduction axis. Packing only relocates B values. So the packed engine
+//! is 0-ULP identical to the naive loops at every block size, thread
+//! count, and SIMD level — `rust/tests/proptests.rs` asserts packed ==
+//! naive bit-for-bit, and the determinism/parity suites pass unmodified.
+//!
+//! ## The A-side stride trick
+//!
+//! A is never packed: the tile reads `a(r, p) = a[a_off + r·ars +
+//! p·ads]`, so one driver serves all three variants —
+//!
+//! * `matmul`    (NN): `ars = k, ads = 1`, B packed from rows;
+//! * `matmul_tn` (TN): `ars = 1, ads = m`, B packed from rows;
+//! * `matmul_nt` (NT): `ars = k, ads = 1`, B transpose-packed — which is
+//!   exactly the lane-parallel *output* tiling of the old scalar dot
+//!   products.
+//!
+//! ## Workspace
+//!
+//! The packing panel is the engine's only allocation, and it is owned by
+//! the **caller**: each host program allocates one panel sized by
+//! [`panel_elems`] to the maximum over its matmul shapes, registers it
+//! with the actmem workspace meter, and reuses it across every call.
+//! `crate::memmodel::HostBlockDims` predicts the same panel bytes
+//! analytically from the shared [`KC`]/[`NC`] constants.
+//!
+//! ## Mode selection
+//!
+//! [`GemmMode`] (`ADAMA_GEMM`, strict-parsed like every other knob)
+//! A/Bs the engine against the naive loops; `packed` is the default.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::pool::{partition, ThreadPool};
+use crate::runtime::simd;
+
+/// K-block depth of one packed panel (f32 elements).
+pub const KC: usize = 256;
+
+/// N-block width of one packed panel (f32 elements).
+pub const NC: usize = 256;
+
+/// Below this many output elements (`m·n`) the driver skips the pool
+/// broadcast and runs the tile serially — same cutoff rationale as the
+/// pool helpers, and bit-free by the determinism contract.
+const SERIAL_CUTOFF: usize = 1024;
+
+/// Panel capacity (f32 elements) one `(k, n)` matmul needs:
+/// `min(k, KC) · min(n, NC)`. Callers size their shared panel to the max
+/// over every matmul shape they issue; `crate::memmodel` states the same
+/// formula on `u64` dims.
+pub fn panel_elems(k: usize, n: usize) -> usize {
+    k.min(KC) * n.min(NC)
+}
+
+/// GEMM engine selector — the API twin of `ADAMA_GEMM`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GemmMode {
+    /// The packed, cache-blocked, output-tiled engine (default).
+    Packed,
+    /// The original parallelised axpy-row / scalar-dot loops — the A/B
+    /// baseline `perf_microbench` gates the packed speedup against.
+    Naive,
+}
+
+impl GemmMode {
+    /// Strictly resolve an `ADAMA_GEMM` value: `packed`/`naive` pin the
+    /// engine, `auto`/unset/empty mean packed; any other spelling is an
+    /// error naming the accepted values (no silent fallback).
+    pub fn parse(spec: Option<&str>) -> Result<GemmMode> {
+        let s = match spec.map(str::trim) {
+            Some(s) if !s.is_empty() => s.to_ascii_lowercase(),
+            _ => return Ok(GemmMode::Packed),
+        };
+        match s.as_str() {
+            "auto" | "packed" => Ok(GemmMode::Packed),
+            "naive" => Ok(GemmMode::Naive),
+            other => bail!("invalid ADAMA_GEMM '{other}': expected auto|packed|naive"),
+        }
+    }
+
+    /// Mode from the `ADAMA_GEMM` environment variable.
+    pub fn from_env() -> Result<GemmMode> {
+        Self::parse(std::env::var("ADAMA_GEMM").ok().as_deref())
+    }
+
+    /// Stable lower-case name (the `ADAMA_GEMM` spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            GemmMode::Packed => "packed",
+            GemmMode::Naive => "naive",
+        }
+    }
+
+    /// Both modes, packed first — the sweep set for parity tests and the
+    /// bench's A/B rows.
+    pub fn all() -> [GemmMode; 2] {
+        [GemmMode::Packed, GemmMode::Naive]
+    }
+}
+
+/// How the driver reads B when packing a panel.
+#[derive(Clone, Copy)]
+pub enum BLayout {
+    /// `b:[k, n]` row-major — panel rows are contiguous row slices.
+    Rows,
+    /// `b:[n, k]` row-major (the NT variant) — the pack gathers
+    /// `panel[p][jj] = b[jj][p]`, i.e. packing *is* the transpose.
+    Trans,
+}
+
+/// Raw output base pointer crossing into pool workers; each worker only
+/// writes the disjoint row range [`partition`] assigned to it.
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Packed-GEMM driver: `out[m, n] = A @ B` with `a(r, p) = a[r·ars +
+/// p·ads]` and B described by `blay` (see the module docs). `panel` is
+/// the caller-owned packing buffer — grown on demand, but callers are
+/// expected to pre-size it via [`panel_elems`] so the metered workspace
+/// is exact.
+#[allow(clippy::too_many_arguments)]
+pub fn packed_gemm(
+    pool: &ThreadPool,
+    lvl: simd::Level,
+    a: &[f32],
+    ars: usize,
+    ads: usize,
+    b: &[f32],
+    blay: BLayout,
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    panel: &mut Vec<f32>,
+) {
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        // the naive loops zero-fill (empty fold); match them exactly
+        out.fill(0.0);
+        return;
+    }
+    let need = panel_elems(k, n);
+    if panel.len() < need {
+        panel.resize(need, 0.0);
+    }
+    let threads = pool.threads();
+    let ranges = if threads == 1 || m * n < SERIAL_CUTOFF || m < 2 {
+        vec![(0usize, m)]
+    } else {
+        partition(m, threads)
+    };
+    let mut jb = 0usize;
+    while jb < n {
+        let nc = NC.min(n - jb);
+        let mut pb = 0usize;
+        while pb < k {
+            let kc = KC.min(k - pb);
+            match blay {
+                BLayout::Rows => {
+                    for p in 0..kc {
+                        let src = &b[(pb + p) * n + jb..(pb + p) * n + jb + nc];
+                        panel[p * nc..(p + 1) * nc].copy_from_slice(src);
+                    }
+                }
+                BLayout::Trans => {
+                    for p in 0..kc {
+                        let row = &mut panel[p * nc..(p + 1) * nc];
+                        for (jj, o) in row.iter_mut().enumerate() {
+                            *o = b[(jb + jj) * k + pb + p];
+                        }
+                    }
+                }
+            }
+            let first = pb == 0;
+            let packed: &[f32] = &panel[..kc * nc];
+            if ranges.len() == 1 {
+                simd::gemm_tile(lvl, out, n, jb, nc, a, pb * ads, ars, ads, packed, kc, m, first);
+            } else {
+                let base = SendPtr(out.as_mut_ptr());
+                pool.run(|w| {
+                    if let Some(&(r0, cnt)) = ranges.get(w) {
+                        // SAFETY: row ranges are disjoint across workers
+                        // and `out` outlives `run`, which joins every
+                        // worker before returning.
+                        let span =
+                            unsafe { std::slice::from_raw_parts_mut(base.0.add(r0 * n), cnt * n) };
+                        let a_off = r0 * ars + pb * ads;
+                        simd::gemm_tile(
+                            lvl, span, n, jb, nc, a, a_off, ars, ads, packed, kc, cnt, first,
+                        );
+                    }
+                });
+            }
+            pb += kc;
+        }
+        jb += nc;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vector(seed: u64, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| {
+                let k = (i as u64).wrapping_mul(6364136223846793005).wrapping_add(seed);
+                ((k >> 33) as f32) / (1u64 << 31) as f32 - 0.5
+            })
+            .collect()
+    }
+
+    fn bits(xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// Reference NN matmul: the literal serial fold.
+    fn naive_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for p in 0..k {
+                    acc += a[i * k + p] * b[p * n + j];
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn parse_is_strict() {
+        assert_eq!(GemmMode::parse(None).unwrap(), GemmMode::Packed);
+        assert_eq!(GemmMode::parse(Some("")).unwrap(), GemmMode::Packed);
+        assert_eq!(GemmMode::parse(Some("auto")).unwrap(), GemmMode::Packed);
+        assert_eq!(GemmMode::parse(Some("packed")).unwrap(), GemmMode::Packed);
+        assert_eq!(GemmMode::parse(Some(" Naive ")).unwrap(), GemmMode::Naive);
+        let err = GemmMode::parse(Some("fast")).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("ADAMA_GEMM") && msg.contains("auto|packed|naive"), "{msg}");
+        assert_eq!(GemmMode::all()[0].name(), "packed");
+        assert_eq!(GemmMode::all()[1].name(), "naive");
+    }
+
+    #[test]
+    fn panel_elems_caps_at_block_size() {
+        assert_eq!(panel_elems(3, 5), 15);
+        assert_eq!(panel_elems(1000, 5), KC * 5);
+        assert_eq!(panel_elems(3, 1000), 3 * NC);
+        assert_eq!(panel_elems(1000, 1000), KC * NC);
+        assert_eq!(panel_elems(0, 7), 0);
+    }
+
+    #[test]
+    fn packed_nn_matches_naive_across_block_boundaries() {
+        let lvl = crate::runtime::simd::detect();
+        let pool = ThreadPool::new(1);
+        // sizes straddle KC/NC: below, at, and above one block
+        for &(m, k, n) in
+            &[(1usize, 1usize, 1usize), (3, 7, 5), (4, 300, 2), (2, 5, 300), (5, 260, 270)]
+        {
+            let a = vector(1, m * k);
+            let b = vector(2, k * n);
+            let want = naive_nn(&a, &b, m, k, n);
+            let mut got = vec![0.0f32; m * n];
+            let mut panel = Vec::new();
+            packed_gemm(&pool, lvl, &a, k, 1, &b, BLayout::Rows, m, k, n, &mut got, &mut panel);
+            assert_eq!(bits(&got), bits(&want), "({m},{k},{n})");
+            assert!(panel.len() <= panel_elems(k, n));
+        }
+    }
+
+    #[test]
+    fn transpose_pack_matches_nt_reference() {
+        let lvl = crate::runtime::simd::detect();
+        let pool = ThreadPool::new(1);
+        let (m, k, n) = (6usize, 270usize, 9usize);
+        let a = vector(3, m * k);
+        let bt = vector(4, n * k); // b:[n, k]
+        let mut want = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f32;
+                for p in 0..k {
+                    acc += a[i * k + p] * bt[j * k + p];
+                }
+                want[i * n + j] = acc;
+            }
+        }
+        let mut got = vec![0.0f32; m * n];
+        let mut panel = Vec::new();
+        packed_gemm(&pool, lvl, &a, k, 1, &bt, BLayout::Trans, m, k, n, &mut got, &mut panel);
+        assert_eq!(bits(&got), bits(&want));
+    }
+
+    #[test]
+    fn parallel_is_bitwise_identical_to_serial() {
+        let lvl = crate::runtime::simd::detect();
+        let (m, k, n) = (37usize, 65usize, 61usize); // > SERIAL_CUTOFF outputs
+        let a = vector(5, m * k);
+        let b = vector(6, k * n);
+        let serial = ThreadPool::new(1);
+        let mut want = vec![0.0f32; m * n];
+        packed_gemm(&serial, lvl, &a, k, 1, &b, BLayout::Rows, m, k, n, &mut want, &mut Vec::new());
+        for threads in [2usize, 3, 7] {
+            let poolt = ThreadPool::new(threads);
+            let mut got = vec![0.0f32; m * n];
+            packed_gemm(
+                &poolt, lvl, &a, k, 1, &b, BLayout::Rows, m, k, n, &mut got, &mut Vec::new(),
+            );
+            assert_eq!(bits(&got), bits(&want), "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn degenerate_dims_zero_fill_like_naive() {
+        let lvl = crate::runtime::simd::detect();
+        let pool = ThreadPool::new(1);
+        // k = 0: empty fold, the naive loops leave exact zeros
+        let mut out = vec![1.0f32; 6];
+        packed_gemm(&pool, lvl, &[], 0, 1, &[], BLayout::Rows, 2, 0, 3, &mut out, &mut Vec::new());
+        assert!(out.iter().all(|&v| v == 0.0));
+        // m = 0 / n = 0: nothing to write, nothing read
+        let mut empty: Vec<f32> = Vec::new();
+        packed_gemm(
+            &pool, lvl, &[], 3, 1, &[1.0, 2.0, 3.0], BLayout::Rows, 0, 1, 3, &mut empty,
+            &mut Vec::new(),
+        );
+    }
+}

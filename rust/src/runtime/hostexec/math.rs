@@ -3,33 +3,53 @@
 //! and vectorised through the runtime-dispatched SIMD layer
 //! ([`crate::runtime::simd`]).
 //!
-//! Loops stay deliberately simple (ikj matmul ordering for cache
-//! behaviour) — the row-independent kernels (`matmul*`, `layer_norm`,
-//! `softmax_xent`) split their *output rows* across pool workers, and
-//! the lane-parallel inner steps (the matmul axpy rows, bias adds, the
-//! layer-norm normalise/backward-dx rows, softmax probability scaling)
-//! dispatch through `simd`. Each output cell keeps the exact per-element
-//! accumulation order of the serial scalar loop — the SIMD layer
-//! vectorises only across independent outputs — so results are
-//! bit-for-bit identical at any thread count *and* any `ADAMA_SIMD`
-//! level (locked down by `rust/tests/determinism.rs` and
-//! `rust/tests/simd_parity.rs`).
+//! ## Matmuls: packed engine with a naive A/B baseline
+//!
+//! The three matmul variants dispatch on [`gemm::GemmMode`]
+//! (`ADAMA_GEMM`):
+//!
+//! * **Packed** (default) routes through [`gemm::packed_gemm`] — B
+//!   packed into L2-resident `KC × NC` panels, `MR × Lanes`-width
+//!   register tiles over the output, cache-blocking over M/N/K, rows
+//!   pool-parallel. The NT variant's former scalar dot products become
+//!   lane-parallel *output* tiles via transpose-packing. See the
+//!   `gemm` module docs for the blocking scheme and the proof that
+//!   every output element keeps the naive serial fold.
+//! * **Naive** keeps the original loops below — row-parallel axpy for
+//!   NN/TN, serial scalar dots for NT — as the A/B baseline the
+//!   nightly bench gates the packed speedup against.
+//!
+//! Both engines produce the exact per-element accumulation order of the
+//! serial scalar loop (p ascending, multiply-then-add, no FMA; the SIMD
+//! layer vectorises only across independent outputs), so results are
+//! bit-for-bit identical at any thread count, any `ADAMA_SIMD` level
+//! *and* either `ADAMA_GEMM` engine (locked down by
+//! `rust/tests/determinism.rs`, `rust/tests/simd_parity.rs` and the
+//! packed==naive proptests).
+//!
+//! The packing panel is caller-owned (`panel: &mut Vec<f32>`): each host
+//! program pre-sizes one panel via [`gemm::panel_elems`] to the max over
+//! its matmul shapes, meters it through the actmem `WsMeter`, and reuses
+//! it across calls. Naive mode never touches it.
 //!
 //! Cross-row reductions (`col_sums`, `layer_norm_bwd`'s dg/db, the NLL
-//! sum) and in-row dot products (`matmul_nt`, attention scores) are
-//! order-sensitive, so they stay serial scalar or reduce fixed-size
-//! per-row partials in ascending row order.
+//! sum) and the remaining in-row reductions (per-row mean/var, max/exp
+//! sweeps) are order-sensitive, so they stay serial scalar or reduce
+//! fixed-size per-row partials in ascending row order.
 
+use super::gemm::{self, BLayout, GemmMode};
 use crate::runtime::pool::ThreadPool;
 use crate::runtime::simd;
 
-/// `out[m,n] = a[m,k] @ b[k,n]`. Output rows are pool-parallel and the
-/// per-`p` axpy rows are lane-parallel; each row's accumulation order
-/// (p ascending) matches the serial loop.
+/// `out[m,n] = a[m,k] @ b[k,n]`. Packed: blocked engine with `ars = k,
+/// ads = 1`. Naive: output rows pool-parallel, per-`p` axpy rows
+/// lane-parallel. Both keep each cell's p-ascending serial fold.
 #[allow(clippy::too_many_arguments)]
 pub fn matmul(
     pool: &ThreadPool,
     lvl: simd::Level,
+    gm: GemmMode,
+    panel: &mut Vec<f32>,
     a: &[f32],
     b: &[f32],
     m: usize,
@@ -40,6 +60,10 @@ pub fn matmul(
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(out.len(), m * n);
+    if gm == GemmMode::Packed {
+        gemm::packed_gemm(pool, lvl, a, k, 1, b, BLayout::Rows, m, k, n, out, panel);
+        return;
+    }
     pool.for_rows(out, n, |i, row| {
         row.fill(0.0);
         for p in 0..k {
@@ -50,12 +74,15 @@ pub fn matmul(
 }
 
 /// `out[m,n] = aᵀ @ b` with `a:[p,m]`, `b:[p,n]` (weight-gradient shape).
-/// Restructured from the r-outer serial form to row-parallel with the
-/// same per-cell accumulation order (r ascending).
+/// Packed: the blocked engine reads A transposed in place (`ars = 1,
+/// ads = m`) — no A copy. Naive: row-parallel axpy. Both keep the
+/// r-ascending per-cell fold of the original serial form.
 #[allow(clippy::too_many_arguments)]
 pub fn matmul_tn(
     pool: &ThreadPool,
     lvl: simd::Level,
+    gm: GemmMode,
+    panel: &mut Vec<f32>,
     a: &[f32],
     b: &[f32],
     p: usize,
@@ -66,6 +93,10 @@ pub fn matmul_tn(
     debug_assert_eq!(a.len(), p * m);
     debug_assert_eq!(b.len(), p * n);
     debug_assert_eq!(out.len(), m * n);
+    if gm == GemmMode::Packed {
+        gemm::packed_gemm(pool, lvl, a, 1, m, b, BLayout::Rows, m, p, n, out, panel);
+        return;
+    }
     pool.for_rows(out, n, |i, row| {
         row.fill(0.0);
         for r in 0..p {
@@ -77,12 +108,17 @@ pub fn matmul_tn(
 
 /// `out[m,n] = a @ bᵀ` with `a:[m,k]`, `b:[n,k]` (input-gradient shape).
 /// The inner dot product is an in-order reduction over `k`, which the
-/// bit-exactness contract forbids folding into lanes — it stays a serial
-/// scalar loop per output cell (rows are still pool-parallel).
+/// bit-exactness contract forbids folding into lanes. Packed mode
+/// vectorises it anyway — across *outputs*: transpose-packing B turns
+/// adjacent output columns into independent lane-parallel folds, each
+/// still the serial k-ascending dot. Naive mode keeps the scalar dot
+/// per cell (rows pool-parallel).
 #[allow(clippy::too_many_arguments)]
 pub fn matmul_nt(
     pool: &ThreadPool,
     lvl: simd::Level,
+    gm: GemmMode,
+    panel: &mut Vec<f32>,
     a: &[f32],
     b: &[f32],
     m: usize,
@@ -93,7 +129,11 @@ pub fn matmul_nt(
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     debug_assert_eq!(out.len(), m * n);
-    let _ = lvl; // reduction kernel: no lane-parallel inner step
+    if gm == GemmMode::Packed {
+        gemm::packed_gemm(pool, lvl, a, k, 1, b, BLayout::Trans, m, k, n, out, panel);
+        return;
+    }
+    let _ = lvl; // naive reduction kernel: no lane-parallel inner step
     pool.for_rows(out, n, |i, row| {
         let arow = &a[i * k..(i + 1) * k];
         for (j, o) in row.iter_mut().enumerate() {
@@ -292,19 +332,26 @@ mod tests {
         simd::detect()
     }
 
+    /// GEMM engine under test — the env-selected mode, so the
+    /// `ADAMA_GEMM` CI legs sweep both engines through every unit test.
+    fn gm() -> GemmMode {
+        GemmMode::from_env().expect("invalid ADAMA_GEMM environment")
+    }
+
     #[test]
     fn matmul_agrees_with_transposed_forms() {
         let pool = serial();
+        let mut panel = Vec::new();
         // a:[2,3], b:[3,2]
         let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
         let b = [7.0, 8.0, 9.0, 10.0, 11.0, 12.0];
         let mut ab = [0.0f32; 4];
-        matmul(&pool, lv(), &a, &b, 2, 3, 2, &mut ab);
+        matmul(&pool, lv(), gm(), &mut panel, &a, &b, 2, 3, 2, &mut ab);
         assert_eq!(ab, [58.0, 64.0, 139.0, 154.0]);
 
         // aᵀ@b with a stored as [p=2, m=3] must equal matmul of transposed a
         let mut tn = [0.0f32; 9];
-        matmul_tn(&pool, lv(), &a, &a, 2, 3, 3, &mut tn);
+        matmul_tn(&pool, lv(), gm(), &mut panel, &a, &a, 2, 3, 3, &mut tn);
         // (aᵀa)[i][j] = sum_r a[r,i] a[r,j]
         assert_eq!(tn[0], 1.0 * 1.0 + 4.0 * 4.0);
         assert_eq!(tn[4], 2.0 * 2.0 + 5.0 * 5.0);
@@ -312,8 +359,35 @@ mod tests {
         // a@bᵀ with b stored as [n=3, k=3]
         let c = [1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0];
         let mut nt = [0.0f32; 6];
-        matmul_nt(&pool, lv(), &a, &c, 2, 3, 3, &mut nt);
+        matmul_nt(&pool, lv(), gm(), &mut panel, &a, &c, 2, 3, 3, &mut nt);
         assert_eq!(nt, a);
+    }
+
+    #[test]
+    fn packed_and_naive_engines_are_bitwise_identical() {
+        let pool = serial();
+        let (m, k, n) = (9usize, 31usize, 14usize);
+        let a: Vec<f32> = (0..m * k).map(|i| ((i * 29 + 3) as f32 * 0.013).sin()).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| ((i * 17 + 7) as f32 * 0.021).cos()).collect();
+        let bt: Vec<f32> = (0..n * k).map(|i| ((i * 23 + 1) as f32 * 0.017).sin()).collect();
+        let at: Vec<f32> = (0..k * m).map(|i| ((i * 41 + 9) as f32 * 0.011).cos()).collect();
+        let same = |x: &[f32], y: &[f32]| x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits());
+
+        let mut panel = Vec::new();
+        let (mut p1, mut n1) = (vec![0.0f32; m * n], vec![0.0f32; m * n]);
+        matmul(&pool, lv(), GemmMode::Packed, &mut panel, &a, &b, m, k, n, &mut p1);
+        matmul(&pool, lv(), GemmMode::Naive, &mut panel, &a, &b, m, k, n, &mut n1);
+        assert!(same(&p1, &n1), "matmul NN");
+
+        let (mut p2, mut n2) = (vec![0.0f32; m * n], vec![0.0f32; m * n]);
+        matmul_tn(&pool, lv(), GemmMode::Packed, &mut panel, &at, &b, k, m, n, &mut p2);
+        matmul_tn(&pool, lv(), GemmMode::Naive, &mut panel, &at, &b, k, m, n, &mut n2);
+        assert!(same(&p2, &n2), "matmul TN");
+
+        let (mut p3, mut n3) = (vec![0.0f32; m * n], vec![0.0f32; m * n]);
+        matmul_nt(&pool, lv(), GemmMode::Packed, &mut panel, &a, &bt, m, k, n, &mut p3);
+        matmul_nt(&pool, lv(), GemmMode::Naive, &mut panel, &a, &bt, m, k, n, &mut n3);
+        assert!(same(&p3, &n3), "matmul NT");
     }
 
     #[test]
@@ -327,8 +401,8 @@ mod tests {
             let poolt = ThreadPool::new(threads);
             let mut o1 = vec![0.0f32; m * n];
             let mut o2 = vec![0.0f32; m * n];
-            matmul(&pool1, lv(), &a, &b, m, k, n, &mut o1);
-            matmul(&poolt, lv(), &a, &b, m, k, n, &mut o2);
+            matmul(&pool1, lv(), gm(), &mut Vec::new(), &a, &b, m, k, n, &mut o1);
+            matmul(&poolt, lv(), gm(), &mut Vec::new(), &a, &b, m, k, n, &mut o2);
             assert!(o1.iter().zip(&o2).all(|(x, y)| x.to_bits() == y.to_bits()));
 
             let g: Vec<f32> = (0..n).map(|j| 1.0 + 0.01 * j as f32).collect();

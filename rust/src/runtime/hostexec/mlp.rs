@@ -7,20 +7,26 @@
 //!
 //! The matmuls and the softmax run on the executor's deterministic thread
 //! pool and dispatch through the bit-exact SIMD layer
-//! ([`crate::runtime::simd`]); the element-wise relu maps stay serial
-//! scalar (trivial next to the matmuls, and `f32::max` NaN/−0.0
+//! ([`crate::runtime::simd`]) and the packed GEMM engine
+//! ([`super::gemm`], `ADAMA_GEMM`); the element-wise relu maps stay
+//! serial scalar (trivial next to the matmuls, and `f32::max` NaN/−0.0
 //! semantics are not worth re-stating in lanes).
 //!
 //! The MLP is a single fused fwd+bwd program, so there is nothing to
 //! stash — but its transient workspace is metered through the executor's
 //! [`super::actmem::WsMeter`] like the transformer's, so the host
 //! executor's measured activation accounting covers every model program.
+//! That includes the single B-panel packing buffer the packed GEMM
+//! engine uses: each `run` allocates one panel sized to the largest
+//! matmul it will issue (zero elements under the naive engine) and
+//! meters it up front.
 
 use std::sync::Arc;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use super::actmem::ActivationArena;
+use super::gemm::{self, GemmMode};
 use super::math;
 use crate::runtime::exec::{Arg, Program, Value};
 use crate::runtime::manifest::MlpHyper;
@@ -33,13 +39,30 @@ pub(super) fn build(
     pool: Arc<ThreadPool>,
     arena: Arc<ActivationArena>,
     level: simd::Level,
+    gm: GemmMode,
 ) -> Result<Box<dyn Program>> {
-    let (hyper, simd) = (hyper.clone(), level);
+    let (hyper, simd, gemm) = (hyper.clone(), level, gm);
     match short {
-        "mlp_train" => Ok(Box::new(MlpProgram { hyper, train: true, pool, arena, simd })),
-        "mlp_eval" => Ok(Box::new(MlpProgram { hyper, train: false, pool, arena, simd })),
+        "mlp_train" => Ok(Box::new(MlpProgram { hyper, train: true, pool, arena, simd, gemm })),
+        "mlp_eval" => Ok(Box::new(MlpProgram { hyper, train: false, pool, arena, simd, gemm })),
         other => bail!("host executor: unknown mlp program '{other}'"),
     }
+}
+
+/// Largest B-panel (in f32 elements) any matmul in one `run` call packs:
+/// forward needs `x@W1` ([b,d]·[d,hd]) and `relu@W2` ([b,hd]·[hd,c]);
+/// training adds the three gradient matmuls. Zero under the naive engine
+/// (no packing buffer at all).
+fn panel_elems_for(gm: GemmMode, train: bool, b: usize, d: usize, hd: usize, c: usize) -> usize {
+    if gm == GemmMode::Naive {
+        return 0;
+    }
+    let pe = gemm::panel_elems;
+    let fwd = pe(d, hd).max(pe(hd, c));
+    if !train {
+        return fwd;
+    }
+    fwd.max(pe(b, c)).max(pe(c, hd)).max(pe(b, hd))
 }
 
 struct MlpProgram {
@@ -48,6 +71,7 @@ struct MlpProgram {
     pool: Arc<ThreadPool>,
     arena: Arc<ActivationArena>,
     simd: simd::Level,
+    gemm: GemmMode,
 }
 
 struct MlpArgs<'a> {
@@ -90,18 +114,23 @@ impl Program for MlpProgram {
         let b = a.batch;
         let pool = &self.pool;
         let lvl = self.simd;
+        let gm = self.gemm;
         let mut ws = self.arena.ws().scope();
+
+        // one B-panel packing buffer serves every matmul in this call
+        let mut panel = vec![0.0f32; panel_elems_for(gm, self.train, b, d, hd, c)];
+        ws.add(panel.len());
 
         // forward
         let mut h1 = vec![0.0f32; b * hd];
         ws.add(h1.len());
-        math::matmul(pool, lvl, a.x, a.w1, b, d, hd, &mut h1);
+        math::matmul(pool, lvl, gm, &mut panel, a.x, a.w1, b, d, hd, &mut h1);
         math::add_bias(lvl, &mut h1, a.b1);
         let hr: Vec<f32> = h1.iter().map(|&v| v.max(0.0)).collect();
         ws.add(hr.len());
         let mut logits = vec![0.0f32; b * c];
         ws.add(logits.len());
-        math::matmul(pool, lvl, &hr, a.w2, b, hd, c, &mut logits);
+        math::matmul(pool, lvl, gm, &mut panel, &hr, a.w2, b, hd, c, &mut logits);
         math::add_bias(lvl, &mut logits, a.b2);
 
         let mut dlogits = vec![0.0f32; b * c];
@@ -117,18 +146,18 @@ impl Program for MlpProgram {
         let inv_b = 1.0 / b as f32;
         simd::scale(lvl, &mut dlogits, inv_b);
         let mut dw2 = vec![0.0f32; hd * c];
-        math::matmul_tn(pool, lvl, &hr, &dlogits, b, hd, c, &mut dw2);
+        math::matmul_tn(pool, lvl, gm, &mut panel, &hr, &dlogits, b, hd, c, &mut dw2);
         let mut db2 = vec![0.0f32; c];
         math::col_sums(&dlogits, b, c, &mut db2);
         let mut dhr = vec![0.0f32; b * hd];
-        math::matmul_nt(pool, lvl, &dlogits, a.w2, b, c, hd, &mut dhr);
+        math::matmul_nt(pool, lvl, gm, &mut panel, &dlogits, a.w2, b, c, hd, &mut dhr);
         ws.add(dw2.len() + db2.len() + dhr.len());
         // relu'
         let dh1: Vec<f32> =
             dhr.iter().zip(&h1).map(|(&g, &u)| if u > 0.0 { g } else { 0.0 }).collect();
         ws.add(dh1.len());
         let mut dw1 = vec![0.0f32; d * hd];
-        math::matmul_tn(pool, lvl, a.x, &dh1, b, d, hd, &mut dw1);
+        math::matmul_tn(pool, lvl, gm, &mut panel, a.x, &dh1, b, d, hd, &mut dw1);
         let mut db1 = vec![0.0f32; hd];
         math::col_sums(&dh1, b, hd, &mut db1);
         ws.add(dw1.len() + db1.len());
@@ -164,6 +193,14 @@ mod tests {
         simd::Level::from_env().expect("valid ADAMA_SIMD")
     }
 
+    fn gm() -> GemmMode {
+        GemmMode::from_env().expect("valid ADAMA_GEMM")
+    }
+
+    fn prog(train: bool) -> MlpProgram {
+        MlpProgram { hyper: hyper(), train, pool: tp(), arena: ar(), simd: lv(), gemm: gm() }
+    }
+
     struct Setup {
         x: Vec<f32>,
         labels: Vec<i32>,
@@ -188,7 +225,7 @@ mod tests {
     }
 
     fn loss_of(s: &Setup) -> f32 {
-        let prog = MlpProgram { hyper: hyper(), train: false, pool: tp(), arena: ar(), simd: lv() };
+        let prog = prog(false);
         let out = prog
             .run(&[
                 Arg::F32(&s.x, &[4, 5]),
@@ -205,7 +242,7 @@ mod tests {
     #[test]
     fn train_grads_match_finite_differences() {
         let s = setup();
-        let prog = MlpProgram { hyper: hyper(), train: true, pool: tp(), arena: ar(), simd: lv() };
+        let prog = prog(true);
         let out = prog
             .run(&[
                 Arg::F32(&s.x, &[4, 5]),
@@ -266,7 +303,7 @@ mod tests {
     #[test]
     fn eval_counts_correct_predictions() {
         let s = setup();
-        let prog = MlpProgram { hyper: hyper(), train: false, pool: tp(), arena: ar(), simd: lv() };
+        let prog = prog(false);
         let out = prog
             .run(&[
                 Arg::F32(&s.x, &[4, 5]),
@@ -286,7 +323,7 @@ mod tests {
     #[test]
     fn rejects_malformed_arguments() {
         let s = setup();
-        let prog = MlpProgram { hyper: hyper(), train: true, pool: tp(), arena: ar(), simd: lv() };
+        let prog = prog(true);
         // wrong arg count
         assert!(prog.run(&[Arg::F32(&s.x, &[4, 5])]).is_err());
         // out-of-range label

@@ -30,12 +30,19 @@
 //! [`HostExecutor::with_threads`] pins it programmatically — the DP/ZeRO
 //! simulators pin 1 thread per rank via `Library::fork_with_threads`.
 //!
-//! The lane-parallel inner loops (optimizer kernels, matmul rows,
+//! The lane-parallel inner loops (optimizer kernels, matmul tiles,
 //! layer-norm, the element-wise softmax/attention stages) additionally
 //! dispatch through [`crate::runtime::simd`] — `ADAMA_SIMD` /
-//! [`HostExecutor::with_simd`] pick scalar, SSE2 or AVX2 code paths that
-//! are **bit-for-bit identical** by construction, so the determinism
-//! contract is unchanged (`rust/tests/simd_parity.rs`).
+//! [`HostExecutor::with_simd`] pick scalar, SSE2, AVX2 or NEON code
+//! paths that are **bit-for-bit identical** by construction, so the
+//! determinism contract is unchanged (`rust/tests/simd_parity.rs`).
+//!
+//! The matmul variants further dispatch on the [`gemm`] engine —
+//! `ADAMA_GEMM` / [`HostExecutor::with_gemm`] pick the packed,
+//! cache-blocked engine (default) or the naive A/B baseline. Both are
+//! bit-identical (the per-element fold order survives blocking — see
+//! the `gemm` module docs), so the engine, like the thread count and
+//! SIMD level, is a pure performance knob.
 //!
 //! ## Activation memory: stash vs recompute
 //!
@@ -53,6 +60,7 @@
 //! [`Executor::memory`] exposes the measured counters.
 
 pub mod actmem;
+pub mod gemm;
 pub mod math;
 
 pub mod kernels;
@@ -65,6 +73,7 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use self::actmem::{ActivationArena, MemoryPlan};
+use self::gemm::GemmMode;
 use super::exec::{Arg, Executor, MemStats, Program, Value};
 use super::manifest::{ArtifactEntry, Manifest};
 use super::pool::{self, ThreadPool};
@@ -76,6 +85,7 @@ pub struct HostExecutor {
     pool: Arc<ThreadPool>,
     arena: Arc<ActivationArena>,
     simd: simd::Level,
+    gemm: GemmMode,
 }
 
 impl Default for HostExecutor {
@@ -103,9 +113,14 @@ impl HostExecutor {
 
     /// Pin the intra-program pool to `threads` workers (1 = fully serial);
     /// activation plan still comes from `ADAMA_ACT_BUDGET`, SIMD level
-    /// from `ADAMA_SIMD`.
+    /// from `ADAMA_SIMD`, GEMM engine from `ADAMA_GEMM`.
     pub fn try_with_threads(threads: usize) -> Result<Self> {
-        Ok(Self::with_simd(threads, MemoryPlan::from_env()?, simd::Level::from_env()?))
+        Ok(Self::with_gemm(
+            threads,
+            MemoryPlan::from_env()?,
+            simd::Level::from_env()?,
+            GemmMode::from_env()?,
+        ))
     }
 
     /// [`Self::try_with_threads`], panicking on an invalid environment.
@@ -124,16 +139,32 @@ impl HostExecutor {
         )
     }
 
-    /// Fully explicit construction: pool size, activation stash plan and
-    /// SIMD dispatch level. Every level is bit-identical (the SIMD layer's
-    /// contract, see [`crate::runtime::simd`]), so the level — like the
-    /// thread count — is a pure performance knob.
+    /// Explicit pool size, activation plan and SIMD level; the GEMM
+    /// engine still comes from `ADAMA_GEMM` (panics on an invalid value —
+    /// construct through [`Self::with_gemm`] for a fully explicit
+    /// executor).
     pub fn with_simd(threads: usize, plan: MemoryPlan, level: simd::Level) -> Self {
+        Self::with_gemm(
+            threads,
+            plan,
+            level,
+            GemmMode::from_env().expect("invalid ADAMA_GEMM environment"),
+        )
+    }
+
+    /// Fully explicit construction: pool size, activation stash plan,
+    /// SIMD dispatch level and GEMM engine. Every level and both engines
+    /// are bit-identical (the SIMD layer's contract plus the packed
+    /// engine's fold-order proof, see [`crate::runtime::simd`] and
+    /// [`gemm`]), so these — like the thread count — are pure
+    /// performance knobs.
+    pub fn with_gemm(threads: usize, plan: MemoryPlan, level: simd::Level, gemm: GemmMode) -> Self {
         Self {
             calls: Arc::new(AtomicU64::new(0)),
             pool: Arc::new(ThreadPool::new(threads)),
             arena: Arc::new(ActivationArena::new(plan)),
             simd: level,
+            gemm,
         }
     }
 
@@ -146,6 +177,11 @@ impl HostExecutor {
     /// The executor's SIMD dispatch level.
     pub fn simd(&self) -> simd::Level {
         self.simd
+    }
+
+    /// The executor's GEMM engine.
+    pub fn gemm(&self) -> GemmMode {
+        self.gemm
     }
 }
 
@@ -181,10 +217,24 @@ impl Executor for HostExecutor {
             kernels::build(short, &manifest.hyper, self.pool.clone(), self.simd)?
         } else if let Some(mlp_name) = group.strip_prefix("mlp_") {
             let cfg = manifest.mlp_config(mlp_name)?;
-            mlp::build(short, &cfg.model, self.pool.clone(), self.arena.clone(), self.simd)?
+            mlp::build(
+                short,
+                &cfg.model,
+                self.pool.clone(),
+                self.arena.clone(),
+                self.simd,
+                self.gemm,
+            )?
         } else {
             let cfg = manifest.model_config(group)?;
-            transformer::build(short, &cfg.model, self.pool.clone(), self.arena.clone(), self.simd)?
+            transformer::build(
+                short,
+                &cfg.model,
+                self.pool.clone(),
+                self.arena.clone(),
+                self.simd,
+                self.gemm,
+            )?
         };
         Ok(Arc::new(Counted { inner, calls: self.calls.clone() }))
     }
@@ -199,6 +249,10 @@ impl Executor for HostExecutor {
 
     fn simd_level(&self) -> Option<simd::Level> {
         Some(self.simd)
+    }
+
+    fn gemm_mode(&self) -> Option<GemmMode> {
+        Some(self.gemm)
     }
 
     fn memory(&self) -> Option<MemStats> {

@@ -19,17 +19,26 @@
 //! the block input.
 //!
 //! Hot paths run on the deterministic thread pool: matmuls/layer-norm
-//! via [`math`], and the attention core parallelised over
-//! `(batch, head[, query-row])` tasks into disjoint per-task scratch that
-//! is merged serially afterwards. Each scratch element receives its
-//! contributions from exactly one task with the serial loop's
-//! accumulation order, so outputs are bit-identical at any thread count.
-//! The lane-parallel element-wise stages (probability normalisation, the
-//! weighted value sums and attention VJP axpys, residual adds, embedding
+//! via [`math`] (dispatching on the [`super::gemm::GemmMode`] engine),
+//! and the attention core parallelised over `(batch, head[, query-row])`
+//! tasks into disjoint per-task scratch that is merged serially
+//! afterwards. Each scratch element receives its contributions from
+//! exactly one task with the serial loop's accumulation order, so
+//! outputs are bit-identical at any thread count. The lane-parallel
+//! element-wise stages (probability normalisation, the weighted value
+//! sums and attention VJP axpys, residual adds, embedding
 //! gathers/scatters) additionally dispatch through
-//! [`crate::runtime::simd`], which is bit-exact by contract — only the
-//! order-sensitive reductions (score dots, softmax max/exp sums) and the
-//! transcendental GELU maps stay scalar.
+//! [`crate::runtime::simd`], which is bit-exact by contract. The
+//! attention score dots and VJP `dprobs` dots are lane-parallel too —
+//! across *output* key positions, against per-(batch, head) transposed
+//! K/V scratch (`simd::attn_scores` / `simd::attn_dots`), each output's
+//! own d-fold unchanged — so only the order-sensitive softmax max/exp
+//! sums and the transcendental GELU maps stay scalar.
+//!
+//! Every matmul reuses one caller-owned packed-GEMM panel per program
+//! call, sized by [`super::gemm::panel_elems`] to the max over that
+//! program's shapes (zero in naive mode) and registered with the
+//! workspace meter up front.
 //!
 //! Every buffer the block **and head** programs allocate is registered
 //! with the arena's workspace meter ([`super::actmem::WsMeter`]), so
@@ -42,6 +51,7 @@ use std::sync::Arc;
 use anyhow::{bail, ensure, Context, Result};
 
 use super::actmem::{ActivationArena, Fnv, WsScope};
+use super::gemm::{self, GemmMode};
 use super::math;
 use crate::runtime::exec::{Arg, Program, Value};
 use crate::runtime::manifest::ModelHyper;
@@ -54,6 +64,7 @@ pub(super) fn build(
     pool: Arc<ThreadPool>,
     arena: Arc<ActivationArena>,
     level: simd::Level,
+    gm: GemmMode,
 ) -> Result<Box<dyn Program>> {
     ensure!(h.heads > 0 && h.hidden % h.heads == 0, "hidden {} not divisible by heads {}", h.hidden, h.heads);
     Ok(match short {
@@ -62,12 +73,41 @@ pub(super) fn build(
             Box::new(EmbedFwd { vocab, hidden, pool, simd: level }) as Box<dyn Program>
         }
         "embed_bwd" => Box::new(EmbedBwd { vocab: h.vocab, hidden: h.hidden, simd: level }),
-        "block_fwd" => Box::new(BlockFwd { heads: h.heads, pool, arena, simd: level }),
-        "block_bwd" => Box::new(BlockBwd { heads: h.heads, pool, arena, simd: level }),
-        "head_loss" => Box::new(HeadLoss { pool, arena, simd: level }),
-        "head_eval" => Box::new(HeadEval { pool, arena, simd: level }),
+        "block_fwd" => Box::new(BlockFwd { heads: h.heads, pool, arena, simd: level, gemm: gm }),
+        "block_bwd" => Box::new(BlockBwd { heads: h.heads, pool, arena, simd: level, gemm: gm }),
+        "head_loss" => Box::new(HeadLoss { pool, arena, simd: level, gemm: gm }),
+        "head_eval" => Box::new(HeadEval { pool, arena, simd: level, gemm: gm }),
         other => bail!("host executor: unknown model program '{other}'"),
     })
+}
+
+/// Packed-GEMM panel elements the block forward's four matmuls need
+/// (zero in naive mode) — `memmodel::HostBlockDims::fwd_panel_elems`
+/// states the same maximum.
+fn fwd_panel_elems(gm: GemmMode, h: usize, f: usize) -> usize {
+    if gm == GemmMode::Naive {
+        return 0;
+    }
+    let pe = gemm::panel_elems;
+    pe(h, 3 * h).max(pe(h, h)).max(pe(h, f)).max(pe(f, h))
+}
+
+/// Panel elements for the block backward — the forward set (remat runs
+/// inside the backward's scope with the same panel) plus every VJP
+/// matmul shape. Mirrored by `memmodel::HostBlockDims::bwd_panel_elems`.
+fn bwd_panel_elems(gm: GemmMode, bs: usize, h: usize, f: usize) -> usize {
+    if gm == GemmMode::Naive {
+        return 0;
+    }
+    let pe = gemm::panel_elems;
+    fwd_panel_elems(gm, h, f)
+        .max(pe(h, f))
+        .max(pe(bs, h))
+        .max(pe(f, h))
+        .max(pe(bs, f))
+        .max(pe(h, h))
+        .max(pe(3 * h, h))
+        .max(pe(bs, 3 * h))
 }
 
 /// Extract `[b, s, h]` dims from a rank-3 f32 activation argument.
@@ -257,6 +297,8 @@ fn stash_key(x: &[f32], p: &BlockParams<'_>, b: usize, s: usize, h: usize) -> u6
 fn block_forward(
     pool: &ThreadPool,
     lvl: simd::Level,
+    gm: GemmMode,
+    panel: &mut Vec<f32>,
     ws: &mut WsScope<'_>,
     x: &[f32],
     p: &BlockParams<'_>,
@@ -276,8 +318,25 @@ fn block_forward(
     math::layer_norm(pool, lvl, x, p.ln1g, p.ln1b, bs, h, &mut hn1);
     let mut qkv = vec![0.0f32; bs * w3];
     ws.add(qkv.len());
-    math::matmul(pool, lvl, &hn1, p.wqkv, bs, h, w3, &mut qkv);
+    math::matmul(pool, lvl, gm, panel, &hn1, p.wqkv, bs, h, w3, &mut qkv);
     math::add_bias(lvl, &mut qkv, p.bqkv);
+
+    // per-(batch, head) transposed K — kt[d, j] = k[j, d] — so the score
+    // dots vectorise across *output* key positions j with each output's
+    // own d-fold unchanged. Serial gather, one producer per element.
+    let mut kt = vec![0.0f32; bs * h];
+    ws.add(kt.len());
+    for bi in 0..b {
+        for hd in 0..heads {
+            let base = (bi * heads + hd) * dh * s;
+            for j in 0..s {
+                let krow = &qkv[(bi * s + j) * w3 + h + hd * dh..][..dh];
+                for (d, &kv) in krow.iter().enumerate() {
+                    kt[base + d * s + j] = kv;
+                }
+            }
+        }
+    }
 
     // attention core, parallel over (batch, head, query-row) tasks: task t
     // writes its probs row and its dh-wide head-output row `aoh[t]`; the
@@ -291,21 +350,19 @@ fn block_forward(
         let hd = (t / s) % heads;
         let bi = t / (s * heads);
         let qc = hd * dh;
-        let kc = h + hd * dh;
         let vc = 2 * h + hd * dh;
         let qrow = &qkv[(bi * s + i) * w3..(bi * s + i + 1) * w3];
-        // causal scores over j <= i, softmaxed in place
+        // causal scores over j <= i: lane-parallel over j against the
+        // transposed K, each score's d-fold then ·scale exactly as the
+        // scalar loop; the max sweep compares the same values in the
+        // same j order
+        let kt_h = &kt[(bi * heads + hd) * dh * s..][..dh * s];
         let mut scores = vec![0.0f32; i + 1];
+        simd::attn_scores(lvl, &mut scores, &qrow[qc..qc + dh], kt_h, s, scale);
         let mut mx = f32::NEG_INFINITY;
-        for (j, sc) in scores.iter_mut().enumerate() {
-            let krow = &qkv[(bi * s + j) * w3..(bi * s + j + 1) * w3];
-            let mut dot = 0.0f32;
-            for d in 0..dh {
-                dot += qrow[qc + d] * krow[kc + d];
-            }
-            *sc = dot * scale;
-            if *sc > mx {
-                mx = *sc;
+        for &sc in scores.iter() {
+            if sc > mx {
+                mx = sc;
             }
         }
         let mut sum = 0.0f32;
@@ -324,6 +381,7 @@ fn block_forward(
             simd::axpy(lvl, orow, &vrow[vc..vc + dh], pij);
         }
     });
+    drop(kt);
     let mut ao = vec![0.0f32; bs * h];
     ws.add(ao.len());
     for bi in 0..b {
@@ -338,7 +396,7 @@ fn block_forward(
 
     let mut attn = vec![0.0f32; bs * h];
     ws.add(attn.len());
-    math::matmul(pool, lvl, &ao, p.wo, bs, h, h, &mut attn);
+    math::matmul(pool, lvl, gm, panel, &ao, p.wo, bs, h, h, &mut attn);
     math::add_bias(lvl, &mut attn, p.bo);
     let mut x1 = vec![0.0f32; bs * h];
     ws.add(x1.len());
@@ -349,12 +407,12 @@ fn block_forward(
     math::layer_norm(pool, lvl, &x1, p.ln2g, p.ln2b, bs, h, &mut hn2);
     let mut m1 = vec![0.0f32; bs * f];
     ws.add(m1.len());
-    math::matmul(pool, lvl, &hn2, p.w1, bs, h, f, &mut m1);
+    math::matmul(pool, lvl, gm, panel, &hn2, p.w1, bs, h, f, &mut m1);
     math::add_bias(lvl, &mut m1, p.b1);
-    let mut gm = vec![0.0f32; bs * f];
-    ws.add(gm.len());
+    let mut gel = vec![0.0f32; bs * f];
+    ws.add(gel.len());
     // scalar map on purpose: tanh-GELU is a libm call, not lane-exact
-    pool.for_rows(&mut gm, f, |r, row| {
+    pool.for_rows(&mut gel, f, |r, row| {
         let mi = &m1[r * f..(r + 1) * f];
         for (o, &u) in row.iter_mut().zip(mi) {
             *o = math::gelu(u);
@@ -362,21 +420,24 @@ fn block_forward(
     });
     let mut m2 = vec![0.0f32; bs * h];
     ws.add(m2.len());
-    math::matmul(pool, lvl, &gm, p.w2, bs, f, h, &mut m2);
+    math::matmul(pool, lvl, gm, panel, &gel, p.w2, bs, f, h, &mut m2);
     math::add_bias(lvl, &mut m2, p.b2);
     let mut y = vec![0.0f32; bs * h];
     ws.add(y.len());
     simd::add(lvl, &mut y, &x1, &m2);
 
-    FwdState { hn1, qkv, probs, ao, x1, hn2, m1, gm, y }
+    FwdState { hn1, qkv, probs, ao, x1, hn2, m1, gm: gel, y }
 }
 
 /// Rematerialise the forward, then pull back `dy` — the stash-miss path
-/// (and the test harness's entry point).
+/// (and the test harness's entry point). Forward and backward share the
+/// caller's panel (sized for the union of both shape sets).
 #[allow(clippy::too_many_arguments)]
 fn block_backward_remat(
     pool: &ThreadPool,
     lvl: simd::Level,
+    gm: GemmMode,
+    panel: &mut Vec<f32>,
     ws: &mut WsScope<'_>,
     x: &[f32],
     dy: &[f32],
@@ -386,8 +447,8 @@ fn block_backward_remat(
     h: usize,
     heads: usize,
 ) -> (Vec<f32>, Vec<Vec<f32>>) {
-    let st = block_forward(pool, lvl, ws, x, p, b, s, h, heads);
-    block_backward(pool, lvl, ws, x, dy, p, &st, b, s, h, heads)
+    let st = block_forward(pool, lvl, gm, panel, ws, x, p, b, s, h, heads);
+    block_backward(pool, lvl, gm, panel, ws, x, dy, p, &st, b, s, h, heads)
 }
 
 /// Pull back `dy` through a block given its forward state (stashed or
@@ -396,6 +457,8 @@ fn block_backward_remat(
 fn block_backward(
     pool: &ThreadPool,
     lvl: simd::Level,
+    gm: GemmMode,
+    panel: &mut Vec<f32>,
     ws: &mut WsScope<'_>,
     x: &[f32],
     dy: &[f32],
@@ -419,9 +482,9 @@ fn block_backward(
 
     // m2 = gm @ w2 + b2
     let mut dgm = vec![0.0f32; bs * f];
-    math::matmul_nt(pool, lvl, dm2, p.w2, bs, h, f, &mut dgm);
+    math::matmul_nt(pool, lvl, gm, panel, dm2, p.w2, bs, h, f, &mut dgm);
     let mut dw2 = vec![0.0f32; f * h];
-    math::matmul_tn(pool, lvl, &st.gm, dm2, bs, f, h, &mut dw2);
+    math::matmul_tn(pool, lvl, gm, panel, &st.gm, dm2, bs, f, h, &mut dw2);
     let mut db2 = vec![0.0f32; h];
     math::col_sums(dm2, bs, h, &mut db2);
     ws.add(dgm.len() + dw2.len() + db2.len());
@@ -438,9 +501,9 @@ fn block_backward(
 
     // m1 = hn2 @ w1 + b1
     let mut dhn2 = vec![0.0f32; bs * h];
-    math::matmul_nt(pool, lvl, &dm1, p.w1, bs, f, h, &mut dhn2);
+    math::matmul_nt(pool, lvl, gm, panel, &dm1, p.w1, bs, f, h, &mut dhn2);
     let mut dw1 = vec![0.0f32; h * f];
-    math::matmul_tn(pool, lvl, &st.hn2, &dm1, bs, h, f, &mut dw1);
+    math::matmul_tn(pool, lvl, gm, panel, &st.hn2, &dm1, bs, h, f, &mut dw1);
     let mut db1 = vec![0.0f32; f];
     math::col_sums(&dm1, bs, f, &mut db1);
     ws.add(dhn2.len() + dw1.len() + db1.len());
@@ -458,12 +521,29 @@ fn block_backward(
 
     // attn = ao @ wo + bo
     let mut dao = vec![0.0f32; bs * h];
-    math::matmul_nt(pool, lvl, &dattn, p.wo, bs, h, h, &mut dao);
+    math::matmul_nt(pool, lvl, gm, panel, &dattn, p.wo, bs, h, h, &mut dao);
     let mut dwo = vec![0.0f32; h * h];
-    math::matmul_tn(pool, lvl, &st.ao, &dattn, bs, h, h, &mut dwo);
+    math::matmul_tn(pool, lvl, gm, panel, &st.ao, &dattn, bs, h, h, &mut dwo);
     let mut dbo = vec![0.0f32; h];
     math::col_sums(&dattn, bs, h, &mut dbo);
     ws.add(dao.len() + dwo.len() + dbo.len());
+
+    // per-(batch, head) transposed V — vt[d, j] = v[j, d] — so the VJP
+    // dprobs dots vectorise across output key positions like the forward
+    // scores. Serial gather, one producer per element.
+    let mut vt = vec![0.0f32; bs * h];
+    ws.add(vt.len());
+    for bi in 0..b {
+        for hd in 0..heads {
+            let base = (bi * heads + hd) * dh * s;
+            for j in 0..s {
+                let vrow = &st.qkv[(bi * s + j) * w3 + 2 * h + hd * dh..][..dh];
+                for (d, &vv) in vrow.iter().enumerate() {
+                    vt[base + d * s + j] = vv;
+                }
+            }
+        }
+    }
 
     // attention core VJP: softmax(qkᵀ·scale, causal) @ v, parallel over
     // (batch, head) tasks. Each task accumulates its dq/dk/dv into a
@@ -476,21 +556,19 @@ fn block_backward(
         let hd = t % heads;
         let bi = t / heads;
         let qc = hd * dh;
-        let vc = 2 * h + hd * dh;
         for i in 0..s {
             let drow = &dao[(bi * s + i) * h..(bi * s + i + 1) * h];
             let prow = &st.probs[((bi * heads + hd) * s + i) * s..][..s];
-            // dprobs[j] = datt[i]·v[j]; softmax row VJP needs Σ dp·p
+            // dprobs[j] = datt[i]·v[j]: lane-parallel over j against the
+            // transposed V, each dot's d-fold unchanged; the softmax row
+            // VJP's Σ dp·p then reduces in the same ascending-j order as
+            // the old interleaved loop, on identical dp values
+            let vt_h = &vt[(bi * heads + hd) * dh * s..][..dh * s];
             let mut dp = vec![0.0f32; i + 1];
+            simd::attn_dots(lvl, &mut dp, &drow[qc..qc + dh], vt_h, s);
             let mut dot = 0.0f32;
-            for (j, dpj) in dp.iter_mut().enumerate() {
-                let vrow = &st.qkv[(bi * s + j) * w3..(bi * s + j + 1) * w3];
-                let mut acc = 0.0f32;
-                for d in 0..dh {
-                    acc += drow[qc + d] * vrow[vc + d];
-                }
-                *dpj = acc;
-                dot += acc * prow[j];
+            for (j, &dpj) in dp.iter().enumerate() {
+                dot += dpj * prow[j];
             }
             for j in 0..=i {
                 let ds = prow[j] * (dp[j] - dot); // masked scores: prob 0 ⇒ ds 0
@@ -530,9 +608,9 @@ fn block_backward(
 
     // qkv = hn1 @ wqkv + bqkv
     let mut dhn1 = vec![0.0f32; bs * h];
-    math::matmul_nt(pool, lvl, &dqkv, p.wqkv, bs, w3, h, &mut dhn1);
+    math::matmul_nt(pool, lvl, gm, panel, &dqkv, p.wqkv, bs, w3, h, &mut dhn1);
     let mut dwqkv = vec![0.0f32; h * w3];
-    math::matmul_tn(pool, lvl, &st.hn1, &dqkv, bs, h, w3, &mut dwqkv);
+    math::matmul_tn(pool, lvl, gm, panel, &st.hn1, &dqkv, bs, h, w3, &mut dwqkv);
     let mut dbqkv = vec![0.0f32; w3];
     math::col_sums(&dqkv, bs, w3, &mut dbqkv);
     ws.add(dhn1.len() + dwqkv.len() + dbqkv.len());
@@ -556,6 +634,7 @@ struct BlockFwd {
     pool: Arc<ThreadPool>,
     arena: Arc<ActivationArena>,
     simd: simd::Level,
+    gemm: GemmMode,
 }
 
 impl Program for BlockFwd {
@@ -565,7 +644,13 @@ impl Program for BlockFwd {
         let x = args[0].f32()?;
         let p = unpack_block(args, 1, h)?;
         let mut ws = self.arena.ws().scope();
-        let mut st = block_forward(&self.pool, self.simd, &mut ws, x, &p, b, s, h, self.heads);
+        // one packed-GEMM panel for all four forward matmuls, metered
+        // up front (zero elements in naive mode)
+        let mut panel = vec![0.0f32; fwd_panel_elems(self.gemm, h, p.f)];
+        ws.add(panel.len());
+        let mut st = block_forward(
+            &self.pool, self.simd, self.gemm, &mut panel, &mut ws, x, &p, b, s, h, self.heads,
+        );
         let y = std::mem::take(&mut st.y);
         if self.arena.enabled() {
             let key = stash_key(x, &p, b, s, h);
@@ -580,6 +665,7 @@ struct BlockBwd {
     pool: Arc<ThreadPool>,
     arena: Arc<ActivationArena>,
     simd: simd::Level,
+    gemm: GemmMode,
 }
 
 impl Program for BlockBwd {
@@ -593,6 +679,11 @@ impl Program for BlockBwd {
         let p = unpack_block(args, 2, h)?;
         let f = p.f;
         let mut ws = self.arena.ws().scope();
+        // one panel covering the VJP matmuls AND the remat forward's
+        // (both paths allocate the same max so the workspace formula
+        // has no stash-hit/remat branch); metered up front
+        let mut panel = vec![0.0f32; bwd_panel_elems(self.gemm, b * s, h, f)];
+        ws.add(panel.len());
         let stashed = if self.arena.enabled() {
             self.arena.take(stash_key(x, &p, b, s, h), x)
         } else {
@@ -611,14 +702,18 @@ impl Program for BlockBwd {
                 // physically live until this call returns — count it as
                 // workspace so measured bytes track real memory
                 ws.add_bytes(st.bytes());
-                let (pool, lvl) = (&self.pool, self.simd);
-                block_backward(pool, lvl, &mut ws, x, dy, &p, &st, b, s, h, self.heads)
+                let (pool, lvl, gm) = (&self.pool, self.simd, self.gemm);
+                block_backward(
+                    pool, lvl, gm, &mut panel, &mut ws, x, dy, &p, &st, b, s, h, self.heads,
+                )
             }
             // miss (remat default, evicted, or forward-only leftover):
             // recompute the forward in place
             None => {
-                let (pool, lvl) = (&self.pool, self.simd);
-                block_backward_remat(pool, lvl, &mut ws, x, dy, &p, b, s, h, self.heads)
+                let (pool, lvl, gm) = (&self.pool, self.simd, self.gemm);
+                block_backward_remat(
+                    pool, lvl, gm, &mut panel, &mut ws, x, dy, &p, b, s, h, self.heads,
+                )
             }
         };
 
@@ -653,6 +748,7 @@ struct HeadLoss {
     pool: Arc<ThreadPool>,
     arena: Arc<ActivationArena>,
     simd: simd::Level,
+    gemm: GemmMode,
 }
 
 /// Shared head plumbing: logits + mean-token cross-entropy.
@@ -660,10 +756,13 @@ struct HeadLoss {
 /// largest single buffer of a training step at realistic vocab sizes, so
 /// both head buffers are registered with the arena's workspace meter —
 /// `memmodel::HostBlockDims::head_*_workspace_bytes` predicts exactly
-/// these registrations.
+/// these registrations (plus the caller-metered GEMM panel).
+#[allow(clippy::too_many_arguments)]
 fn head_common(
     pool: &ThreadPool,
     lvl: simd::Level,
+    gm: GemmMode,
+    panel: &mut Vec<f32>,
     ws: &mut WsScope<'_>,
     args: &[Arg<'_>],
 ) -> Result<(f32, Vec<f32>, i32, (usize, usize, usize, usize))> {
@@ -681,7 +780,7 @@ fn head_common(
     let bs = b * s;
     let mut logits = vec![0.0f32; bs * v];
     ws.add(logits.len());
-    math::matmul(pool, lvl, x, w, bs, h, v, &mut logits);
+    math::matmul(pool, lvl, gm, panel, x, w, bs, h, v, &mut logits);
     let mut dlogits = vec![0.0f32; bs * v];
     ws.add(dlogits.len());
     let (nll, ncorrect) = math::softmax_xent(pool, lvl, &logits, labels, bs, v, &mut dlogits);
@@ -689,11 +788,30 @@ fn head_common(
     Ok((loss, dlogits, ncorrect, (b, s, h, v)))
 }
 
+/// Panel elements for `head_loss` (logits + dx + dW matmuls) — mirrored
+/// by `memmodel::HostBlockDims::head_loss_panel_elems`.
+fn head_loss_panel_elems(gm: GemmMode, bs: usize, h: usize, v: usize) -> usize {
+    if gm == GemmMode::Naive {
+        return 0;
+    }
+    let pe = gemm::panel_elems;
+    pe(h, v).max(pe(v, h)).max(pe(bs, v))
+}
+
 impl Program for HeadLoss {
     fn run(&self, args: &[Arg<'_>]) -> Result<Vec<Value>> {
         let lvl = self.simd;
+        let gm = self.gemm;
+        ensure!(args.len() == 3, "head program takes (x, W, labels)");
         let mut ws = self.arena.ws().scope();
-        let (loss, mut dlogits, _nc, (b, s, h, v)) = head_common(&self.pool, lvl, &mut ws, args)?;
+        // W is [h, v]: size the panel before head_common so one metered
+        // allocation serves all three matmuls
+        let (b0, s0, h0) = act_dims(&args[0])?;
+        let v0 = if h0 == 0 { 0 } else { args[1].len() / h0 };
+        let mut panel = vec![0.0f32; head_loss_panel_elems(gm, b0 * s0, h0, v0)];
+        ws.add(panel.len());
+        let (loss, mut dlogits, _nc, (b, s, h, v)) =
+            head_common(&self.pool, lvl, gm, &mut panel, &mut ws, args)?;
         let x = args[0].f32()?;
         let w = args[1].f32()?;
         let bs = b * s;
@@ -702,9 +820,9 @@ impl Program for HeadLoss {
             simd::scale(lvl, span, inv);
         });
         let mut dx = vec![0.0f32; bs * h];
-        math::matmul_nt(&self.pool, lvl, &dlogits, w, bs, v, h, &mut dx);
+        math::matmul_nt(&self.pool, lvl, gm, &mut panel, &dlogits, w, bs, v, h, &mut dx);
         let mut dw = vec![0.0f32; h * v];
-        math::matmul_tn(&self.pool, lvl, x, &dlogits, bs, h, v, &mut dw);
+        math::matmul_tn(&self.pool, lvl, gm, &mut panel, x, &dlogits, bs, h, v, &mut dw);
         ws.add(dx.len() + dw.len());
         Ok(vec![
             Value::scalar_f32(loss),
@@ -718,12 +836,23 @@ struct HeadEval {
     pool: Arc<ThreadPool>,
     arena: Arc<ActivationArena>,
     simd: simd::Level,
+    gemm: GemmMode,
 }
 
 impl Program for HeadEval {
     fn run(&self, args: &[Arg<'_>]) -> Result<Vec<Value>> {
+        ensure!(args.len() == 3, "head program takes (x, W, labels)");
         let mut ws = self.arena.ws().scope();
-        let (loss, _dl, ncorrect, _dims) = head_common(&self.pool, self.simd, &mut ws, args)?;
+        let h = act_dims(&args[0])?.2;
+        let v = if h == 0 { 0 } else { args[1].len() / h };
+        let mut panel = if self.gemm == GemmMode::Naive {
+            Vec::new()
+        } else {
+            vec![0.0f32; gemm::panel_elems(h, v)]
+        };
+        ws.add(panel.len());
+        let (loss, _dl, ncorrect, _dims) =
+            head_common(&self.pool, self.simd, self.gemm, &mut panel, &mut ws, args)?;
         Ok(vec![Value::scalar_f32(loss), Value::scalar_i32(ncorrect)])
     }
 }
@@ -744,6 +873,12 @@ mod tests {
         simd::Level::from_env().expect("valid ADAMA_SIMD")
     }
 
+    /// GEMM engine for the tests: from `ADAMA_GEMM`, so the CI matrix
+    /// exercises the packed and naive engines through these suites.
+    fn gm() -> GemmMode {
+        GemmMode::from_env().expect("valid ADAMA_GEMM")
+    }
+
     /// Forward with a throwaway workspace meter (signature helper).
     fn fwd(
         pool: &ThreadPool,
@@ -755,7 +890,7 @@ mod tests {
         heads: usize,
     ) -> FwdState {
         let m = WsMeter::default();
-        block_forward(pool, lv(), &mut m.scope(), x, p, b, s, h, heads)
+        block_forward(pool, lv(), gm(), &mut Vec::new(), &mut m.scope(), x, p, b, s, h, heads)
     }
 
     /// Remat backward with a throwaway workspace meter.
@@ -771,7 +906,9 @@ mod tests {
         heads: usize,
     ) -> (Vec<f32>, Vec<Vec<f32>>) {
         let m = WsMeter::default();
-        block_backward_remat(pool, lv(), &mut m.scope(), x, dy, p, b, s, h, heads)
+        block_backward_remat(
+            pool, lv(), gm(), &mut Vec::new(), &mut m.scope(), x, dy, p, b, s, h, heads,
+        )
     }
 
     const B: usize = 2;
@@ -782,6 +919,24 @@ mod tests {
 
     fn tp() -> Arc<ThreadPool> {
         Arc::new(ThreadPool::new(1))
+    }
+
+    /// Program constructors with the env-selected SIMD level and GEMM
+    /// engine — keeps the call sites short and fmt-stable.
+    fn bfwd(arena: Arc<ActivationArena>) -> BlockFwd {
+        BlockFwd { heads: HEADS, pool: tp(), arena, simd: lv(), gemm: gm() }
+    }
+
+    fn bbwd(arena: Arc<ActivationArena>) -> BlockBwd {
+        BlockBwd { heads: HEADS, pool: tp(), arena, simd: lv(), gemm: gm() }
+    }
+
+    fn hloss(arena: Arc<ActivationArena>) -> HeadLoss {
+        HeadLoss { pool: tp(), arena, simd: lv(), gemm: gm() }
+    }
+
+    fn heval(arena: Arc<ActivationArena>) -> HeadEval {
+        HeadEval { pool: tp(), arena, simd: lv(), gemm: gm() }
     }
 
     /// Owned block parameters in manifest order.
@@ -964,7 +1119,7 @@ mod tests {
         let labels: Vec<i32> = vec![1, 4];
 
         let arena = Arc::new(ActivationArena::new(MemoryPlan::remat()));
-        let head = HeadLoss { pool: tp(), arena, simd: lv() };
+        let head = hloss(arena);
         let run = |x: &[f32], w: &[f32]| -> (f32, Vec<Value>) {
             let out = head
                 .run(&[
@@ -1065,9 +1220,7 @@ mod tests {
             args.push(Arg::F32(t, sh));
         }
         let arena = Arc::new(ActivationArena::new(MemoryPlan::remat()));
-        let out = BlockBwd { heads: HEADS, pool: tp(), arena: arena.clone(), simd: lv() }
-            .run(&args)
-            .unwrap();
+        let out = bbwd(arena.clone()).run(&args).unwrap();
         assert_eq!(out.len(), 13);
         assert_eq!(out[0].shape(), &[B, S, H]);
         for (o, sh) in out[1..].iter().zip(shapes.iter()) {
@@ -1076,7 +1229,7 @@ mod tests {
 
         let fwd_args: Vec<Arg<'_>> =
             args.iter().enumerate().filter(|(i, _)| *i != 1).map(|(_, a)| *a).collect();
-        let out = BlockFwd { heads: HEADS, pool: tp(), arena, simd: lv() }.run(&fwd_args).unwrap();
+        let out = bfwd(arena).run(&fwd_args).unwrap();
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].shape(), &[B, S, H]);
     }
@@ -1123,18 +1276,13 @@ mod tests {
 
         // remat reference
         let remat = Arc::new(ActivationArena::new(MemoryPlan::remat()));
-        let ref_out =
-            BlockBwd { heads: HEADS, pool: tp(), arena: remat, simd: lv() }.run(&bwd_args).unwrap();
+        let ref_out = bbwd(remat).run(&bwd_args).unwrap();
 
         // stash path: forward populates the arena, backward consumes it
         let arena = Arc::new(ActivationArena::new(MemoryPlan::unlimited()));
-        let y = BlockFwd { heads: HEADS, pool: tp(), arena: arena.clone(), simd: lv() }
-            .run(&fwd_args)
-            .unwrap();
+        let y = bfwd(arena.clone()).run(&fwd_args).unwrap();
         assert_eq!(arena.stats().stashed, 1, "forward must stash");
-        let stash_out = BlockBwd { heads: HEADS, pool: tp(), arena: arena.clone(), simd: lv() }
-            .run(&bwd_args)
-            .unwrap();
+        let stash_out = bbwd(arena.clone()).run(&bwd_args).unwrap();
         let s = arena.stats();
         assert_eq!(s.stash_hits, 1, "backward must consume the stash");
         assert_eq!(s.stash_live_bytes, 0, "consumed entry must be freed");
@@ -1167,29 +1315,23 @@ mod tests {
         let (fwd_args, bwd_args) = block_args(&x, &dy, &p);
 
         let arena = Arc::new(ActivationArena::new(MemoryPlan::unlimited()));
-        BlockFwd { heads: HEADS, pool: tp(), arena: arena.clone(), simd: lv() }
-            .run(&fwd_args)
-            .unwrap();
+        bfwd(arena.clone()).run(&fwd_args).unwrap();
         let s1 = arena.stats();
-        assert_eq!(s1.workspace_peak_bytes, dims.fwd_workspace_bytes());
+        assert_eq!(s1.workspace_peak_bytes, dims.fwd_workspace_bytes(gm()));
         assert_eq!(s1.stash_live_bytes, dims.stash_entry_bytes());
 
-        BlockBwd { heads: HEADS, pool: tp(), arena: arena.clone(), simd: lv() }
-            .run(&bwd_args)
-            .unwrap();
+        bbwd(arena.clone()).run(&bwd_args).unwrap();
         let s2 = arena.stats();
         assert_eq!(
             s2.workspace_peak_bytes,
-            dims.fwd_workspace_bytes().max(dims.bwd_workspace_bytes()),
+            dims.fwd_workspace_bytes(gm()).max(dims.bwd_workspace_bytes(gm())),
             "stash-hit backward must not pay the recompute workspace"
         );
         assert_eq!(s2.workspace_live_bytes, 0);
 
         let remat = Arc::new(ActivationArena::new(MemoryPlan::remat()));
-        BlockBwd { heads: HEADS, pool: tp(), arena: remat.clone(), simd: lv() }
-            .run(&bwd_args)
-            .unwrap();
-        assert_eq!(remat.stats().workspace_peak_bytes, dims.remat_bwd_workspace_bytes());
+        bbwd(remat.clone()).run(&bwd_args).unwrap();
+        assert_eq!(remat.stats().workspace_peak_bytes, dims.remat_bwd_workspace_bytes(gm()));
     }
 
     #[test]
@@ -1212,14 +1354,17 @@ mod tests {
         let args = [Arg::F32(&x, &[B, S, H]), Arg::F32(&w, &[H, v]), Arg::I32(&labels, &[B, S])];
 
         let arena = Arc::new(ActivationArena::new(MemoryPlan::remat()));
-        HeadLoss { pool: tp(), arena: arena.clone(), simd: lv() }.run(&args).unwrap();
+        hloss(arena.clone()).run(&args).unwrap();
         let stats = arena.stats();
-        assert_eq!(stats.workspace_peak_bytes, dims.head_loss_workspace_bytes(v as u64));
+        assert_eq!(stats.workspace_peak_bytes, dims.head_loss_workspace_bytes(v as u64, gm()));
         assert_eq!(stats.workspace_live_bytes, 0, "head workspace must drain");
 
         let arena = Arc::new(ActivationArena::new(MemoryPlan::remat()));
-        HeadEval { pool: tp(), arena: arena.clone(), simd: lv() }.run(&args).unwrap();
-        assert_eq!(arena.stats().workspace_peak_bytes, dims.head_eval_workspace_bytes(v as u64));
+        heval(arena.clone()).run(&args).unwrap();
+        assert_eq!(
+            arena.stats().workspace_peak_bytes,
+            dims.head_eval_workspace_bytes(v as u64, gm())
+        );
     }
 
     #[test]
@@ -1229,20 +1374,14 @@ mod tests {
         let p = Params::random(33);
         let arena = Arc::new(ActivationArena::new(MemoryPlan::unlimited()));
         let (fwd_args, _) = block_args(&x, &dy, &p);
-        BlockFwd { heads: HEADS, pool: tp(), arena: arena.clone(), simd: lv() }
-            .run(&fwd_args)
-            .unwrap();
+        bfwd(arena.clone()).run(&fwd_args).unwrap();
 
         // different x: the stashed entry must NOT be consumed
         let x2 = randvec(34, B * S * H, 0.8);
         let (_, bwd_args2) = block_args(&x2, &dy, &p);
         let remat = Arc::new(ActivationArena::new(MemoryPlan::remat()));
-        let want = BlockBwd { heads: HEADS, pool: tp(), arena: remat, simd: lv() }
-            .run(&bwd_args2)
-            .unwrap();
-        let got = BlockBwd { heads: HEADS, pool: tp(), arena: arena.clone(), simd: lv() }
-            .run(&bwd_args2)
-            .unwrap();
+        let want = bbwd(remat).run(&bwd_args2).unwrap();
+        let got = bbwd(arena.clone()).run(&bwd_args2).unwrap();
         let s = arena.stats();
         assert_eq!(s.stash_hits, 0);
         assert_eq!(s.remats, 1);

@@ -12,10 +12,13 @@
 //!   run on the in-tree deterministic thread pool ([`pool`]); thread
 //!   count comes from `ADAMA_THREADS` (default: available parallelism)
 //!   and results are bit-for-bit identical at any setting.
-//!   `ADAMA_SIMD=auto|avx2|sse2|scalar` picks the [`simd`] dispatch
+//!   `ADAMA_SIMD=auto|avx2|sse2|neon|scalar` picks the [`simd`] dispatch
 //!   level for the vectorised hot loops (default `auto` = best the CPU
 //!   supports); every level is bit-for-bit identical to scalar, so this
 //!   too is a pure performance knob.
+//!   `ADAMA_GEMM=auto|packed|naive` picks the matmul engine
+//!   ([`hostexec::gemm`]): the packed, cache-blocked GEMM (default) or
+//!   the naive A/B baseline — bit-identical by the same contract.
 //!   `ADAMA_ACT_BUDGET` (or [`Library::host_with_plan`]) sets the
 //!   activation stash budget: `0`/unset = per-layer remat (default),
 //!   `<n>[k|m|g]` = stash under a byte cap, `unlimited` = always stash —
@@ -39,6 +42,7 @@ pub use exec::{
     to_vec_f32, to_vec_i32, Arg, Executor, MemStats, Program, Value,
 };
 pub use hostexec::actmem::{ActBudget, MemoryPlan};
+pub use hostexec::gemm::GemmMode;
 pub use hostexec::HostExecutor;
 pub use pool::ThreadPool;
 pub use simd::Level as SimdLevel;
@@ -70,8 +74,8 @@ impl Library {
     /// Pure-rust host library with the built-in default manifest — runs on
     /// a clean machine with zero native dependencies. Pool size comes from
     /// `ADAMA_THREADS` (default: available parallelism). Invalid
-    /// `ADAMA_THREADS`/`ADAMA_SIMD`/`ADAMA_ACT_BUDGET` values are clear
-    /// errors naming the accepted spellings.
+    /// `ADAMA_THREADS`/`ADAMA_SIMD`/`ADAMA_GEMM`/`ADAMA_ACT_BUDGET`
+    /// values are clear errors naming the accepted spellings.
     pub fn try_host() -> Result<Arc<Self>> {
         Ok(Self::with_executor(Arc::new(HostExecutor::try_new()?), Manifest::builtin()))
     }
@@ -100,13 +104,31 @@ impl Library {
         )
     }
 
-    /// Fully explicit host library: pool size, activation stash plan and
-    /// SIMD dispatch level (the API twin of `ADAMA_SIMD`) — the SIMD
-    /// parity tests and the `perf_microbench` SIMD-vs-scalar rows
-    /// construct scalar/vector libraries side by side with this.
+    /// Explicit pool size, activation stash plan and SIMD dispatch level
+    /// (the API twin of `ADAMA_SIMD`) — the SIMD parity tests and the
+    /// `perf_microbench` SIMD-vs-scalar rows construct scalar/vector
+    /// libraries side by side with this. GEMM engine still comes from
+    /// `ADAMA_GEMM`.
     pub fn host_with_simd(threads: usize, plan: MemoryPlan, level: simd::Level) -> Arc<Self> {
         Self::with_executor(
             Arc::new(HostExecutor::with_simd(threads, plan, level)),
+            Manifest::builtin(),
+        )
+    }
+
+    /// Fully explicit host library: pool size, activation stash plan,
+    /// SIMD dispatch level and GEMM engine (the API twin of
+    /// `ADAMA_GEMM`) — the GEMM parity sweeps and the `perf_microbench`
+    /// packed-vs-naive rows construct both engines side by side with
+    /// this.
+    pub fn host_with_gemm(
+        threads: usize,
+        plan: MemoryPlan,
+        level: simd::Level,
+        gemm: GemmMode,
+    ) -> Arc<Self> {
+        Self::with_executor(
+            Arc::new(HostExecutor::with_gemm(threads, plan, level, gemm)),
             Manifest::builtin(),
         )
     }
@@ -140,14 +162,19 @@ impl Library {
         if self.executor.threads() == threads && plan == MemoryPlan::remat() {
             return self.clone();
         }
-        // forked ranks keep the parent's SIMD dispatch level, so a rank
-        // fork is bit-identical to (and as fast as) the parent executor
+        // forked ranks keep the parent's SIMD dispatch level and GEMM
+        // engine, so a rank fork is bit-identical to (and as fast as)
+        // the parent executor
         let level = self
             .executor
             .simd_level()
             .unwrap_or_else(|| simd::Level::from_env().unwrap_or_else(|_| simd::detect()));
+        let gemm = self
+            .executor
+            .gemm_mode()
+            .unwrap_or_else(|| GemmMode::from_env().unwrap_or(GemmMode::Packed));
         Self::with_executor(
-            Arc::new(HostExecutor::with_simd(threads, plan, level)),
+            Arc::new(HostExecutor::with_gemm(threads, plan, level, gemm)),
             self.manifest.clone(),
         )
     }

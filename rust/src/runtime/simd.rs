@@ -38,13 +38,31 @@
 //! caveat: NaN *payload* propagation follows whatever the hardware does
 //! for the chosen operand order, as it already did for the scalar code.)
 //!
+//! ## Output tiling and the packed GEMM micro-kernel
+//!
+//! [`gemm_tile`] (the register tile of the packed GEMM engine in
+//! [`crate::runtime::hostexec::gemm`]) and the attention-score kernels
+//! ([`attn_scores`], [`attn_dots`]) vectorise *in-row dot products* —
+//! which looks like it should violate the no-lane-reductions rule, but
+//! does not: the lanes span `WIDTH` **adjacent output columns**, never
+//! the reduction axis. Each lane accumulates one output element's own
+//! K-loop fold (`acc = acc + a·b`, p ascending, multiply-then-add, no
+//! FMA), so every output element still computes the exact scalar
+//! expression tree. Cache blocking over K is equally invisible: the
+//! partial accumulator is stored to and reloaded from `out` between
+//! K-blocks, and an f32 store/load round-trip is lossless, so the fold
+//! remains one contiguous left-associated sum from `0.0` at every block
+//! size. That is why the packed engine is bit-identical to the naive
+//! loops at any block size, thread count, and SIMD level.
+//!
 //! ## Dispatch
 //!
 //! [`Level`] is resolved once per executor from `ADAMA_SIMD`
-//! (`auto|avx2|sse2|scalar`, default `auto` = the best level the CPU
-//! reports). Unparseable values and levels the CPU cannot honour are
+//! (`auto|avx2|sse2|neon|scalar`, default `auto` = the best level the
+//! CPU reports). Unparseable values and levels the CPU cannot honour are
 //! **clear errors** naming the accepted spellings — no silent fallback.
-//! Non-x86_64 targets always dispatch scalar. [`crate::runtime::Library`]
+//! x86_64 dispatches SSE2/AVX2, aarch64 dispatches NEON, and every other
+//! target always dispatches scalar. [`crate::runtime::Library`]
 //! threads the level through
 //! [`crate::runtime::hostexec::HostExecutor`] into every program.
 //!
@@ -79,9 +97,11 @@ pub enum Level {
     Sse2,
     /// 256-bit `core::arch` lanes (8 × f32), runtime-detected.
     Avx2,
+    /// 128-bit aarch64 NEON lanes (4 × f32), runtime-detected.
+    Neon,
 }
 
-/// Best level the running CPU supports (`Scalar` off x86_64).
+/// Best level the running CPU supports (`Scalar` off x86_64/aarch64).
 pub fn detect() -> Level {
     #[cfg(target_arch = "x86_64")]
     {
@@ -92,7 +112,15 @@ pub fn detect() -> Level {
             Level::Sse2
         }
     }
-    #[cfg(not(target_arch = "x86_64"))]
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            Level::Neon
+        } else {
+            Level::Scalar
+        }
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
     {
         Level::Scalar
     }
@@ -107,15 +135,16 @@ impl Level {
             Level::Sse2 => true,
             #[cfg(target_arch = "x86_64")]
             Level::Avx2 => is_x86_feature_detected!("avx2"),
-            #[cfg(not(target_arch = "x86_64"))]
+            #[cfg(target_arch = "aarch64")]
+            Level::Neon => std::arch::is_aarch64_feature_detected!("neon"),
             _ => false,
         }
     }
 
-    /// Strictly resolve an `ADAMA_SIMD` value: `scalar`/`sse2`/`avx2`
-    /// pin the level, `auto`/unset/empty detect the best one; any other
-    /// spelling, or a level the running CPU cannot execute, is an error
-    /// naming the accepted values (no silent fallback).
+    /// Strictly resolve an `ADAMA_SIMD` value: `scalar`/`sse2`/`avx2`/
+    /// `neon` pin the level, `auto`/unset/empty detect the best one; any
+    /// other spelling, or a level the running CPU cannot execute, is an
+    /// error naming the accepted values (no silent fallback).
     pub fn parse(spec: Option<&str>) -> Result<Level> {
         let req = match spec.map(str::trim) {
             Some(s) if !s.is_empty() => s.to_ascii_lowercase(),
@@ -126,7 +155,8 @@ impl Level {
             "scalar" => Level::Scalar,
             "sse2" => Level::Sse2,
             "avx2" => Level::Avx2,
-            other => bail!("invalid ADAMA_SIMD '{other}': expected auto|avx2|sse2|scalar"),
+            "neon" => Level::Neon,
+            other => bail!("invalid ADAMA_SIMD '{other}': expected auto|avx2|sse2|neon|scalar"),
         };
         ensure!(
             want.supported(),
@@ -147,13 +177,17 @@ impl Level {
             Level::Scalar => "scalar",
             Level::Sse2 => "sse2",
             Level::Avx2 => "avx2",
+            Level::Neon => "neon",
         }
     }
 
     /// Every level the running CPU supports, scalar first — the sweep
     /// set for parity tests and benches.
     pub fn all_supported() -> Vec<Level> {
-        [Level::Scalar, Level::Sse2, Level::Avx2].into_iter().filter(|l| l.supported()).collect()
+        [Level::Scalar, Level::Sse2, Level::Avx2, Level::Neon]
+            .into_iter()
+            .filter(|l| l.supported())
+            .collect()
     }
 }
 
@@ -345,6 +379,68 @@ mod x86 {
     }
 }
 
+// Same `unused_unsafe` story as the x86 module: on aarch64 toolchains
+// where NEON is statically enabled the arithmetic intrinsics are
+// safe-to-call and the inner `unsafe` blocks would warn.
+#[cfg(target_arch = "aarch64")]
+#[allow(unused_unsafe)]
+mod arm {
+    use std::arch::aarch64::*;
+
+    use super::Lanes;
+
+    /// 4 × f32 NEON lanes (`float32x4_t`). `vaddq`/`vsubq`/`vmulq`/
+    /// `vdivq`/`vsqrtq` are the A64 IEEE-754 correctly-rounded single
+    /// operations (scalar semantics per lane, no FMA contraction), so
+    /// the bit-exactness contract holds exactly as for SSE2/AVX2.
+    #[derive(Clone, Copy)]
+    pub(super) struct Neon(float32x4_t);
+
+    impl Lanes for Neon {
+        const WIDTH: usize = 4;
+
+        #[inline(always)]
+        unsafe fn load(src: *const f32) -> Self {
+            Neon(unsafe { vld1q_f32(src) })
+        }
+
+        #[inline(always)]
+        unsafe fn store(self, dst: *mut f32) {
+            unsafe { vst1q_f32(dst, self.0) }
+        }
+
+        #[inline(always)]
+        fn splat(x: f32) -> Self {
+            Neon(unsafe { vdupq_n_f32(x) })
+        }
+
+        #[inline(always)]
+        fn add(self, o: Self) -> Self {
+            Neon(unsafe { vaddq_f32(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn sub(self, o: Self) -> Self {
+            Neon(unsafe { vsubq_f32(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn mul(self, o: Self) -> Self {
+            Neon(unsafe { vmulq_f32(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn div(self, o: Self) -> Self {
+            Neon(unsafe { vdivq_f32(self.0, o.0) })
+        }
+
+        #[inline(always)]
+        fn sqrt(self) -> Self {
+            Neon(unsafe { vsqrtq_f32(self.0) })
+        }
+    }
+}
+
 /// Generate the public runtime-dispatched entry point for one generic
 /// kernel body: `$name(level, args...)` monomorphises `$body` at the
 /// requested [`Level`], re-checking CPU support so an unsupported level
@@ -376,7 +472,24 @@ macro_rules! dispatch {
                         return unsafe { avx2($($arg),*) };
                     }
                     Level::Sse2 | Level::Avx2 => return unsafe { sse2($($arg),*) },
-                    Level::Scalar => {}
+                    // Scalar, plus foreign-ISA levels (hand-constructed
+                    // Neon on x86): degrade to the scalar reference.
+                    _ => {}
+                }
+            }
+            #[cfg(target_arch = "aarch64")]
+            {
+                #[allow(clippy::too_many_arguments)]
+                #[target_feature(enable = "neon")]
+                unsafe fn neon($($arg: $ty),*) {
+                    $body::<arm::Neon>($($arg),*)
+                }
+                // SAFETY: gated on runtime NEON detection exactly like
+                // the avx2 arm above.
+                if matches!(level, Level::Neon)
+                    && std::arch::is_aarch64_feature_detected!("neon")
+                {
+                    return unsafe { neon($($arg),*) };
                 }
             }
             let _ = level;
@@ -814,6 +927,145 @@ fn ln_bwd_dx_g<L: Lanes>(
     }
 }
 
+/// Packed-GEMM register tile: one `(row block, K block)` update of an
+/// `nc`-column output stripe starting at column `jb` of `out:[rows, n]`.
+///
+/// `panel:[kc, nc]` holds the B block contiguously; `a(r, p)` is read at
+/// `a[a_off + r*ars + p*ads]` (the stride pair encodes NN/TN/NT without
+/// copying A). Lanes span `WIDTH` adjacent output **columns** — the
+/// K-loop stays a per-element left-associated `acc + a·b` fold from
+/// `0.0` (`first`) or from the previous K-block's partial reloaded out
+/// of `out` (lossless f32 round-trip), so every output element computes
+/// exactly the naive scalar expression tree. `MR` output rows share each
+/// loaded B lane to keep the panel column tile register/L1-resident.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn gemm_tile_g<L: Lanes>(
+    out: &mut [f32],
+    n: usize,
+    jb: usize,
+    nc: usize,
+    a: &[f32],
+    a_off: usize,
+    ars: usize,
+    ads: usize,
+    panel: &[f32],
+    kc: usize,
+    rows: usize,
+    first: bool,
+) {
+    const MR: usize = 4;
+    debug_assert!(jb + nc <= n);
+    debug_assert!(out.len() >= rows * n);
+    debug_assert!(panel.len() >= kc * nc);
+    let mut j = 0usize;
+    while j + L::WIDTH <= nc {
+        let col = jb + j;
+        let mut r = 0usize;
+        while r < rows {
+            let mr = MR.min(rows - r);
+            let mut acc = [L::splat(0.0); MR];
+            if !first {
+                for (q, av) in acc.iter_mut().enumerate().take(mr) {
+                    // SAFETY: (r+q) < rows and col + WIDTH <= jb + nc <= n
+                    // bound the lane access inside `out:[rows, n]`.
+                    *av = unsafe { L::load(out.as_ptr().add((r + q) * n + col)) };
+                }
+            }
+            for p in 0..kc {
+                // SAFETY: p < kc and j + WIDTH <= nc bound the panel lane.
+                let bv = unsafe { L::load(panel.as_ptr().add(p * nc + j)) };
+                for (q, av) in acc.iter_mut().enumerate().take(mr) {
+                    let aval = L::splat(a[a_off + (r + q) * ars + p * ads]);
+                    *av = av.add(aval.mul(bv));
+                }
+            }
+            for (q, av) in acc.iter().enumerate().take(mr) {
+                // SAFETY: same bounds as the load above.
+                unsafe { av.store(out.as_mut_ptr().add((r + q) * n + col)) };
+            }
+            r += mr;
+        }
+        j += L::WIDTH;
+    }
+    // remainder columns: the literal scalar fold
+    while j < nc {
+        let col = jb + j;
+        for r in 0..rows {
+            let mut acc = if first { 0.0f32 } else { out[r * n + col] };
+            for p in 0..kc {
+                acc += a[a_off + r * ars + p * ads] * panel[p * nc + j];
+            }
+            out[r * n + col] = acc;
+        }
+        j += 1;
+    }
+}
+
+/// Attention score row: `out[j] = (Σ_d q[d]·kt[d*ldk + j])·scale` for
+/// every key position `j`. `kt` is the transposed key block (`[dh, ldk]`
+/// layout) so lanes span adjacent **output** positions `j` while each
+/// element's dot stays the serial `d`-ascending fold from `0.0` — the
+/// exact expression tree of the old per-`j` scalar dot, now computed for
+/// `WIDTH` scores at once.
+#[inline(always)]
+fn attn_scores_g<L: Lanes>(out: &mut [f32], q: &[f32], kt: &[f32], ldk: usize, scale: f32) {
+    let n = out.len();
+    let dh = q.len();
+    debug_assert!(kt.len() >= dh.saturating_sub(1) * ldk + n);
+    let sv = L::splat(scale);
+    let mut j = 0usize;
+    while j + L::WIDTH <= n {
+        let mut acc = L::splat(0.0);
+        for (d, &qd) in q.iter().enumerate() {
+            // SAFETY: j + WIDTH <= n <= ldk bounds the lane access.
+            let kv = unsafe { L::load(kt.as_ptr().add(d * ldk + j)) };
+            acc = acc.add(L::splat(qd).mul(kv));
+        }
+        // SAFETY: j + WIDTH <= n bounds the store.
+        unsafe { acc.mul(sv).store(out.as_mut_ptr().add(j)) };
+        j += L::WIDTH;
+    }
+    while j < n {
+        let mut acc = 0.0f32;
+        for (d, &qd) in q.iter().enumerate() {
+            acc += qd * kt[d * ldk + j];
+        }
+        out[j] = acc * scale;
+        j += 1;
+    }
+}
+
+/// [`attn_scores`] without the scale multiply: `out[j] = Σ_d q[d]·
+/// kt[d*ldk + j]` — the attention-VJP `dprobs` dot against the
+/// transposed value block.
+#[inline(always)]
+fn attn_dots_g<L: Lanes>(out: &mut [f32], q: &[f32], kt: &[f32], ldk: usize) {
+    let n = out.len();
+    let dh = q.len();
+    debug_assert!(kt.len() >= dh.saturating_sub(1) * ldk + n);
+    let mut j = 0usize;
+    while j + L::WIDTH <= n {
+        let mut acc = L::splat(0.0);
+        for (d, &qd) in q.iter().enumerate() {
+            // SAFETY: j + WIDTH <= n <= ldk bounds the lane access.
+            let kv = unsafe { L::load(kt.as_ptr().add(d * ldk + j)) };
+            acc = acc.add(L::splat(qd).mul(kv));
+        }
+        // SAFETY: j + WIDTH <= n bounds the store.
+        unsafe { acc.store(out.as_mut_ptr().add(j)) };
+        j += L::WIDTH;
+    }
+    while j < n {
+        let mut acc = 0.0f32;
+        for (d, &qd) in q.iter().enumerate() {
+            acc += qd * kt[d * ldk + j];
+        }
+        out[j] = acc;
+        j += 1;
+    }
+}
+
 // ---------------------------------------------------------------------------
 // dispatched entry points
 // ---------------------------------------------------------------------------
@@ -964,6 +1216,39 @@ dispatch! {
     )
 }
 
+dispatch! {
+    /// Packed-GEMM register tile: one `(row block, K block)` stripe
+    /// update with lane-parallel output columns (see the module docs'
+    /// output-tiling section for the fold-order argument).
+    #[allow(clippy::too_many_arguments)]
+    gemm_tile => gemm_tile_g(
+        out: &mut [f32],
+        n: usize,
+        jb: usize,
+        nc: usize,
+        a: &[f32],
+        a_off: usize,
+        ars: usize,
+        ads: usize,
+        panel: &[f32],
+        kc: usize,
+        rows: usize,
+        first: bool,
+    )
+}
+
+dispatch! {
+    /// Attention score row against a transposed key block:
+    /// `out[j] = (Σ_d q[d]·kt[d·ldk + j])·scale`, lanes across `j`.
+    attn_scores => attn_scores_g(out: &mut [f32], q: &[f32], kt: &[f32], ldk: usize, scale: f32)
+}
+
+dispatch! {
+    /// Attention-VJP dot row against a transposed value block:
+    /// `out[j] = Σ_d q[d]·kt[d·ldk + j]`, lanes across `j`.
+    attn_dots => attn_dots_g(out: &mut [f32], q: &[f32], kt: &[f32], ldk: usize)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -998,15 +1283,19 @@ mod tests {
         assert_eq!(Level::parse(Some("auto")).unwrap(), detect());
         // invalid spellings are clear errors naming the accepted values
         let err = Level::parse(Some("garbage")).unwrap_err();
-        assert!(format!("{err}").contains("auto|avx2|sse2|scalar"), "{err}");
+        assert!(format!("{err}").contains("auto|avx2|sse2|neon|scalar"), "{err}");
         #[cfg(not(target_arch = "x86_64"))]
         assert!(Level::parse(Some("avx2")).is_err(), "unsupported level must error");
+        #[cfg(not(target_arch = "aarch64"))]
+        assert!(Level::parse(Some("neon")).is_err(), "unsupported level must error");
         assert!(detect().supported());
         let all = Level::all_supported();
         assert_eq!(all[0], Level::Scalar);
         assert!(all.contains(&detect()));
         #[cfg(target_arch = "x86_64")]
         assert!(all.contains(&Level::Sse2));
+        #[cfg(target_arch = "aarch64")]
+        assert!(all.contains(&Level::Neon) || !Level::Neon.supported());
     }
 
     #[test]
@@ -1108,12 +1397,83 @@ mod tests {
 
     #[test]
     fn unsupported_level_degrades_instead_of_crashing() {
-        // Even a hand-constructed Avx2 level must run (dispatch re-checks
-        // CPU support); on machines with AVX2 this is just the fast path.
+        // Even a hand-constructed Avx2/Neon level must run (dispatch
+        // re-checks CPU support); where supported it is just the fast
+        // path, elsewhere it degrades to scalar.
         let mut x = vector(9, 37);
         let mut y = x.clone();
         scale(Level::Avx2, &mut x, 0.5);
         scale(Level::Scalar, &mut y, 0.5);
         assert_eq!(bits(&x), bits(&y));
+        let mut z = vector(9, 37);
+        scale(Level::Neon, &mut z, 0.5);
+        assert_eq!(bits(&z), bits(&y));
+    }
+
+    #[test]
+    fn every_level_matches_scalar_attention_kernels() {
+        // out-length sweep covers lane remainders; ldk > n exercises the
+        // transposed-block stride.
+        let (dh, ldk) = (12usize, 40usize);
+        let q = vector(21, dh);
+        let kt = vector(22, dh * ldk);
+        for &n in &[0usize, 1, 3, 4, 5, 8, 9, 33, 40] {
+            for level in Level::all_supported() {
+                let mut got = vec![0.0f32; n];
+                let mut want = vec![0.0f32; n];
+                attn_scores(level, &mut got, &q, &kt, ldk, 0.37);
+                attn_scores(Level::Scalar, &mut want, &q, &kt, ldk, 0.37);
+                assert_eq!(bits(&got), bits(&want), "attn_scores {} n={n}", level.name());
+
+                let mut got = vec![0.0f32; n];
+                let mut want = vec![0.0f32; n];
+                attn_dots(level, &mut got, &q, &kt, ldk);
+                attn_dots(Level::Scalar, &mut want, &q, &kt, ldk);
+                assert_eq!(bits(&got), bits(&want), "attn_dots {} n={n}", level.name());
+            }
+        }
+    }
+
+    #[test]
+    fn every_level_matches_scalar_gemm_tile() {
+        // a:[rows, K] row-major (ars=K, ads=1), panel:[kc, nc]; two
+        // K-blocks exercise the first/reload path, odd nc the scalar
+        // column remainder, rows % MR != 0 the short row block.
+        let (rows, n, jb, nc) = (7usize, 30usize, 3usize, 19usize);
+        let kcs = [5usize, 8];
+        let k: usize = kcs.iter().sum();
+        let a = vector(31, rows * k);
+        let panels: Vec<Vec<f32>> = kcs.iter().map(|&kc| vector(32 + kc as u64, kc * nc)).collect();
+        let run = |level: Level| {
+            let mut out = vector(33, rows * n); // pre-filled: `first` must overwrite
+            let mut pb = 0usize;
+            for (bi, &kc) in kcs.iter().enumerate() {
+                gemm_tile(
+                    level, &mut out, n, jb, nc, &a, pb, k, 1, &panels[bi], kc, rows, pb == 0,
+                );
+                pb += kc;
+            }
+            out
+        };
+        let want = run(Level::Scalar);
+        // the scalar dispatch must equal the hand-written naive loop
+        let mut naive = vector(33, rows * n);
+        for r in 0..rows {
+            for j in 0..nc {
+                let mut acc = 0.0f32;
+                let mut pb = 0usize;
+                for (bi, &kc) in kcs.iter().enumerate() {
+                    for p in 0..kc {
+                        acc += a[r * k + pb + p] * panels[bi][p * nc + j];
+                    }
+                    pb += kc;
+                }
+                naive[r * n + jb + j] = acc;
+            }
+        }
+        assert_eq!(bits(&want), bits(&naive), "scalar tile vs naive loop");
+        for level in Level::all_supported() {
+            assert_eq!(bits(&run(level)), bits(&want), "gemm_tile {}", level.name());
+        }
     }
 }

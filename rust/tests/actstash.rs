@@ -126,9 +126,11 @@ fn measured_peaks_match_memmodel_for_budget_0_half_unlimited() {
         );
 
         // workspace: every transient of the step (block programs AND the
-        // metered head logits) is modelled exactly; measured peak must
-        // equal the step-level prediction
-        let ws_pred = dims.predicted_step_workspace_peak_bytes(plan, blocks, vocab);
+        // metered head logits, including the GEMM engine's packing
+        // panels) is modelled exactly; measured peak must equal the
+        // step-level prediction under the executor's actual engine
+        let gm = lib.executor().gemm_mode().expect("host executor reports its gemm engine");
+        let ws_pred = dims.predicted_step_workspace_peak_bytes(plan, blocks, vocab, gm);
         assert_eq!(
             mem.workspace_peak_bytes, ws_pred,
             "workspace peak mismatch under budget {name}"

@@ -10,6 +10,8 @@
 //!     arbitrary n/threads (incl. n < threads and n = 0), balanced ±1;
 //!   * pool numerics: parallel matmul ≡ serial reference within 0 ULP
 //!     (the per-cell dot-product order is unchanged by the row split);
+//!   * GEMM engines: the packed, cache-blocked engine ≡ the naive loops
+//!     bit-for-bit at random shapes, incl. sub-tile and block-crossing;
 //!   * ring collectives: all-reduce ≡ sequential sum for random worlds;
 //!   * shard layout: reduce-scatter ownership partitions the buffer;
 //!   * batching/state: optimizer state bytes are conserved across steps;
@@ -21,6 +23,7 @@ use adama::optim::host_math;
 use adama::runtime::hostexec::math;
 use adama::runtime::pool::{partition, ThreadPool};
 use adama::runtime::simd;
+use adama::runtime::GemmMode;
 use adama::tensor::{chunk_ranges, Rng};
 
 const B1: f32 = 0.9;
@@ -152,6 +155,8 @@ fn prop_parallel_matmul_equals_serial_within_0_ulp() {
     // and the SIMD axpy rows (level from ADAMA_SIMD, so the CI matrix
     // sweeps scalar and vector) must not change that.
     let lvl = simd::Level::from_env().expect("valid ADAMA_SIMD");
+    let gm = GemmMode::from_env().expect("valid ADAMA_GEMM");
+    let mut panel = Vec::new();
     let serial = ThreadPool::new(1);
     for seed in 0..25u64 {
         let mut rng = Rng::new(8000 + seed);
@@ -177,8 +182,8 @@ fn prop_parallel_matmul_equals_serial_within_0_ulp() {
         }
         let mut got_s = vec![0.0f32; m * n];
         let mut got_p = vec![0.0f32; m * n];
-        math::matmul(&serial, lvl, &a, &b, m, k, n, &mut got_s);
-        math::matmul(&par, lvl, &a, &b, m, k, n, &mut got_p);
+        math::matmul(&serial, lvl, gm, &mut panel, &a, &b, m, k, n, &mut got_s);
+        math::matmul(&par, lvl, gm, &mut panel, &a, &b, m, k, n, &mut got_p);
         for i in 0..m * n {
             assert_eq!(reference[i].to_bits(), got_s[i].to_bits(), "seed {seed}: serial matmul");
             assert_eq!(
@@ -204,7 +209,7 @@ fn prop_parallel_matmul_equals_serial_within_0_ulp() {
             }
         }
         let mut got_tn = vec![0.0f32; m * n];
-        math::matmul_tn(&par, lvl, &at, &bt, p_rows, m, n, &mut got_tn);
+        math::matmul_tn(&par, lvl, gm, &mut panel, &at, &bt, p_rows, m, n, &mut got_tn);
         for i in 0..m * n {
             assert_eq!(ref_tn[i].to_bits(), got_tn[i].to_bits(), "seed {seed}: matmul_tn");
         }
@@ -222,10 +227,64 @@ fn prop_parallel_matmul_equals_serial_within_0_ulp() {
             }
         }
         let mut got_nt = vec![0.0f32; m * n];
-        math::matmul_nt(&par, lvl, &a, &bn, m, k, n, &mut got_nt);
+        math::matmul_nt(&par, lvl, gm, &mut panel, &a, &bn, m, k, n, &mut got_nt);
         for i in 0..m * n {
             assert_eq!(ref_nt[i].to_bits(), got_nt[i].to_bits(), "seed {seed}: matmul_nt");
         }
+    }
+}
+
+#[test]
+fn prop_packed_gemm_bitwise_equals_naive() {
+    // Cache blocking must not move a single fold: the packed engine and
+    // the naive loops are bit-identical for every variant at shapes
+    // spanning sub-tile (below one lane/row tile in every dimension),
+    // sub-block, and block-crossing (k > KC, n > NC) sizes, at 1 and
+    // several threads. The SIMD level comes from ADAMA_SIMD so the CI
+    // matrix sweeps scalar and vector lanes through the same shapes.
+    let lvl = simd::Level::from_env().expect("valid ADAMA_SIMD");
+    // pinned edges: every dimension degenerate or crossing a block edge
+    let mut shapes = vec![
+        (1usize, 1usize, 1usize),
+        (1, 300, 1),
+        (3, 1, 5),
+        (2, 257, 259),
+        (3, 270, 261),
+        (5, 513, 7),
+        (7, 9, 300),
+    ];
+    let mut shape_rng = Rng::new(9100);
+    for _ in 0..12 {
+        shapes.push((
+            1 + shape_rng.below(40),
+            1 + shape_rng.below(70),
+            1 + shape_rng.below(40),
+        ));
+    }
+    for (si, &(m, k, n)) in shapes.iter().enumerate() {
+        let mut rng = Rng::new(9200 + si as u64);
+        let threads = 1 + rng.below(4);
+        let pool = ThreadPool::new(threads);
+        let a = randvec(&mut rng, m * k, 1.2);
+        let b = randvec(&mut rng, k * n, 1.2);
+        let at = randvec(&mut rng, k * m, 1.2); // [p=k, m] for the TN form
+        let bn = randvec(&mut rng, n * k, 1.2); // [n, k] for the NT form
+        let mut panel = Vec::new();
+        let run = |gm: GemmMode, panel: &mut Vec<f32>| {
+            let mut nn = vec![0.0f32; m * n];
+            math::matmul(&pool, lvl, gm, panel, &a, &b, m, k, n, &mut nn);
+            let mut tn = vec![0.0f32; m * n];
+            math::matmul_tn(&pool, lvl, gm, panel, &at, &b, k, m, n, &mut tn);
+            let mut nt = vec![0.0f32; m * n];
+            math::matmul_nt(&pool, lvl, gm, panel, &a, &bn, m, k, n, &mut nt);
+            (nn, tn, nt)
+        };
+        let naive = run(GemmMode::Naive, &mut panel);
+        let packed = run(GemmMode::Packed, &mut panel);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&naive.0), bits(&packed.0), "NN m={m} k={k} n={n} t={threads}");
+        assert_eq!(bits(&naive.1), bits(&packed.1), "TN m={m} k={k} n={n} t={threads}");
+        assert_eq!(bits(&naive.2), bits(&packed.2), "NT m={m} k={k} n={n} t={threads}");
     }
 }
 

@@ -2,8 +2,9 @@
 //! host CPU supports, must be **0-ULP identical** to the scalar
 //! reference — at the slice level (against the `host_math` oracles,
 //! including remainder lengths that don't divide the lane width) and at
-//! the program level (every host program, scalar/SSE2/AVX2 × 1/4 pool
-//! threads, bit-compared against the scalar serial baseline).
+//! the program level (every host program, scalar/SSE2/AVX2/NEON ×
+//! packed/naive GEMM engine × 1/4 pool threads, bit-compared against
+//! the scalar serial baseline).
 //!
 //! This is the gate of the `runtime::simd` bit-exactness contract: if a
 //! lane kernel reassociates, contracts into FMA, or mishandles a tail,
@@ -11,7 +12,7 @@
 
 use adama::optim::host_math;
 use adama::runtime::simd::{self, Level};
-use adama::runtime::{ArtifactEntry, Library, Manifest, MemoryPlan, Value};
+use adama::runtime::{ArtifactEntry, GemmMode, Library, Manifest, MemoryPlan, Value};
 use adama::tensor::Rng;
 
 const B1: f32 = 0.9;
@@ -225,11 +226,12 @@ fn optimizer_kernel_programs_bit_identical_across_levels_and_threads() {
 }
 
 /// Program-level sweep of the model programs (transformer blocks, heads,
-/// embeddings, MLP): every dispatch level × 1/4 pool threads must be
-/// bit-identical — this covers the SIMD paths inside matmul, layer norm,
-/// attention and softmax end to end.
+/// embeddings, MLP): every dispatch level × both GEMM engines × 1/4 pool
+/// threads must be bit-identical — this covers the SIMD paths inside
+/// matmul, layer norm, attention and softmax end to end, and pins the
+/// packed engine's fold-order contract at program granularity.
 #[test]
-fn model_programs_bit_identical_across_levels_and_threads() {
+fn model_programs_bit_identical_across_levels_engines_and_threads() {
     let manifest = Manifest::builtin();
     let levels = Level::all_supported();
 
@@ -251,15 +253,19 @@ fn model_programs_bit_identical_across_levels_and_threads() {
         let inputs = gen_inputs(entry, cap, name_seed(&name), None);
         let mut baseline: Option<Vec<Value>> = None;
         for &level in &levels {
-            for threads in [1usize, 4] {
-                let lib = Library::host_with_simd(threads, MemoryPlan::remat(), level);
-                let prog = lib.get(&name).unwrap();
-                let out = prog.run_v(&inputs).unwrap();
-                match &baseline {
-                    None => baseline = Some(out),
-                    Some(base) => {
-                        let tag = format!("{} x{threads} threads", level.name());
-                        assert_outputs_bit_equal(&name, &tag, base, &out);
+            for gm in GemmMode::all() {
+                for threads in [1usize, 4] {
+                    let lib =
+                        Library::host_with_gemm(threads, MemoryPlan::remat(), level, gm);
+                    let prog = lib.get(&name).unwrap();
+                    let out = prog.run_v(&inputs).unwrap();
+                    match &baseline {
+                        None => baseline = Some(out),
+                        Some(base) => {
+                            let tag =
+                                format!("{} {} x{threads} threads", level.name(), gm.name());
+                            assert_outputs_bit_equal(&name, &tag, base, &out);
+                        }
                     }
                 }
             }
@@ -267,20 +273,29 @@ fn model_programs_bit_identical_across_levels_and_threads() {
     }
 }
 
-/// The executor reports its dispatch level, and the level survives a
-/// DP-style per-rank fork.
+/// The executor reports its dispatch level and GEMM engine, and both
+/// survive a DP-style per-rank fork.
 #[test]
 fn executor_reports_and_forks_its_simd_level() {
     for &level in &Level::all_supported() {
-        let lib = Library::host_with_simd(2, MemoryPlan::remat(), level);
-        let exec = lib.executor();
-        assert_eq!(exec.simd_level(), Some(level));
-        let rank = lib.fork_with_threads(1);
-        assert_eq!(rank.executor().simd_level(), Some(level), "fork must keep the level");
+        for gm in GemmMode::all() {
+            let lib = Library::host_with_gemm(2, MemoryPlan::remat(), level, gm);
+            let exec = lib.executor();
+            assert_eq!(exec.simd_level(), Some(level));
+            assert_eq!(exec.gemm_mode(), Some(gm));
+            let rank = lib.fork_with_threads(1);
+            assert_eq!(rank.executor().simd_level(), Some(level), "fork must keep the level");
+            assert_eq!(rank.executor().gemm_mode(), Some(gm), "fork must keep the engine");
+        }
     }
     // valid ADAMA_SIMD spellings resolve; invalid ones are clear errors
     assert_eq!(Level::parse(Some("scalar")).unwrap(), Level::Scalar);
     assert_eq!(Level::parse(Some("auto")).unwrap(), simd::detect());
     assert_eq!(Level::parse(Some("")).unwrap(), simd::detect());
     assert!(Level::parse(Some("garbage")).is_err());
+    // same for ADAMA_GEMM: strict parse, defaults to packed
+    assert_eq!(GemmMode::parse(Some("naive")).unwrap(), GemmMode::Naive);
+    assert_eq!(GemmMode::parse(Some("packed")).unwrap(), GemmMode::Packed);
+    assert_eq!(GemmMode::parse(None).unwrap(), GemmMode::Packed);
+    assert!(GemmMode::parse(Some("garbage")).is_err());
 }

@@ -10,6 +10,8 @@ Pulls four headline numbers out of the nightly bench run:
     4 threads (from BENCH_perf.json);
   * SIMD — the mean speedup_vs_scalar over the `simd_*` kernel rows and
     the dispatched level (from BENCH_perf.json);
+  * GEMM — the packed-vs-naive engine speedup on the largest swept
+    `gemm_*` shape (from the `speedup_packed_vs_naive` field);
   * E6 — the concurrent-fabric-vs-serial DP step-time speedup at the
     largest rank count (from the `dp_fabric_vs_serial` rows).
 
@@ -85,6 +87,18 @@ def simd_speedup(rows):
     return (sum(speedups) / len(speedups), level)
 
 
+def gemm_speedup(rows):
+    """Packed-vs-naive speedup on the largest (by m·k·n) swept shape."""
+    best = None
+    for r in rows:
+        op = r.get("op", "")
+        if op.startswith("gemm_") and "speedup_packed_vs_naive" in r:
+            size = int(r.get("m", 0)) * int(r.get("k", 0)) * int(r.get("n", 0))
+            if best is None or size >= best[0]:
+                best = (size, op[len("gemm_"):], float(r["speedup_packed_vs_naive"]))
+    return best
+
+
 def fabric_speedup(rows):
     """Fabric-vs-serial DP speedup at the largest recorded rank count."""
     best = None
@@ -107,8 +121,11 @@ def main():
     stash = stash_speedup(rows)
     e3 = f"{stash:.2f}x" if stash else "n/a"
     simd = simd_speedup(rows)
+    gemm = gemm_speedup(rows)
     fabric = fabric_speedup(rows)
     notes = [f"simd {simd[0]:.2f}x ({simd[1]})" if simd else "simd n/a"]
+    if gemm:
+        notes.append(f"gemm {gemm[2]:.2f}x ({gemm[1]})")
     if fabric:
         notes.append(f"fabric {fabric[1]:.2f}x (M={fabric[0]})")
     note = ", ".join(notes)
