@@ -25,7 +25,11 @@
 //!     simulator vs the concurrent fabric at 1/2/4 ranks, plus the
 //!     ZeRO-S1+AdamA per-layer overlap flow at 2 ranks (bit-identical
 //!     engines — `rust/tests/fabric_parity.rs` — so the rows measure
-//!     pure scheduling).
+//!     pure scheduling);
+//!   * async issue: ZeRO-S1+AdamA with per-layer reductions handed to the
+//!     fabric comm thread (`ADAMA_ASYNC=1` semantics) vs blocking issue,
+//!     at 2 and 4 ranks — `zero1_async_vs_sync` rows; a full run **fails**
+//!     if async falls below sync beyond a 10% noise allowance.
 //!
 //! Besides the human-readable table, writes `BENCH_perf.json` —
 //! machine-readable ns/elem per kernel per backend (each row tagged with
@@ -561,6 +565,56 @@ fn main() {
             ("speedup_fabric_vs_serial", (serial_ms / fabric_ms).into()),
         ]));
     }
+    let mut async_regressions: Vec<String> = Vec::new();
+    {
+        // async issue: the same ZeRO-S1+AdamA flow with per-layer
+        // reductions handed to the comm thread (ADAMA_ASYNC=1 semantics),
+        // so layer k's reduce-scatter overlaps layer k-1's backward —
+        // vs the blocking issue above. Bit-identical by construction
+        // (rust/tests/fabric_parity.rs); the row measures pure overlap.
+        println!();
+        println!(
+            "{:<24} {:>6} {:>12} {:>12} {:>8}",
+            "flow", "ranks", "sync ms", "async ms", "speedup"
+        );
+        for m in [2usize, 4] {
+            let mut acfg = cfg("tiny", OptimizerKind::AdamA, 2, 42);
+            acfg.workers = m;
+            let time_zero = |async_issue: bool| {
+                let t0 = std::time::Instant::now();
+                run_zero1(
+                    lib.clone(),
+                    Zero1Spec::new(acfg.clone(), dsteps, 7)
+                        .with_engine(CollectiveEngine::Fabric)
+                        .with_async(async_issue)
+                        .with_bucket_bytes(0),
+                )
+                .expect("zero1 async run");
+                1e3 * t0.elapsed().as_secs_f64() / dsteps as f64
+            };
+            let sync_ms = time_zero(false);
+            let async_ms = time_zero(true);
+            let speedup = sync_ms / async_ms;
+            println!(
+                "{:<24} {:>6} {:>12.2} {:>12.2} {:>7.2}x",
+                "zero1_async_issue", m, sync_ms, async_ms, speedup
+            );
+            results.push(obj(vec![
+                ("op", "zero1_async_vs_sync".into()),
+                ("backend", "host".into()),
+                ("ranks", m.into()),
+                ("threads", pool_threads.into()),
+                ("sync_ms_per_step", sync_ms.into()),
+                ("async_ms_per_step", async_ms.into()),
+                ("speedup_async_vs_sync", speedup.into()),
+            ]));
+            if speedup < 0.9 {
+                async_regressions.push(format!(
+                    "zero1_async_vs_sync (M={m}): async {async_ms:.2} ms vs sync {sync_ms:.2} ms"
+                ));
+            }
+        }
+    }
     println!("(engines verified bit-identical in rust/tests/fabric_parity.rs)");
 
     banner("executor call count (instrumentation)");
@@ -578,9 +632,10 @@ fn main() {
         Err(e) => eprintln!("\ncould not write {path}: {e}"),
     }
 
-    // hard gates: the SIMD path must never run slower than scalar, and
-    // the packed GEMM engine must never run slower than the naive loops
-    // (each with a noise allowance) — a regression fails the bench run.
+    // hard gates: the SIMD path must never run slower than scalar, the
+    // packed GEMM engine must never run slower than the naive loops, and
+    // async issue must never run slower than blocking issue (each with a
+    // noise allowance) — a regression fails the bench run.
     // Only armed at the full iteration count: 3-iteration --quick samples
     // on shared CI are too jittery to turn into a red build.
     let mut gated = false;
@@ -594,6 +649,13 @@ fn main() {
     if !gemm_regressions.is_empty() {
         eprintln!("\npacked GEMM regression vs naive:");
         for r in &gemm_regressions {
+            eprintln!("  {r}");
+        }
+        gated = true;
+    }
+    if !async_regressions.is_empty() {
+        eprintln!("\nasync-issue regression vs blocking issue:");
+        for r in &async_regressions {
             eprintln!("  {r}");
         }
         gated = true;

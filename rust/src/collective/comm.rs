@@ -13,11 +13,18 @@ use std::sync::Arc;
 use anyhow::{ensure, Context, Result};
 
 /// Aggregate communication statistics for a group (shared by all ranks).
+///
+/// Counters are attributed at **completion**: an op lands in the ledger
+/// only when the collective returns to (or, for a fabric ticket, is
+/// waited by) the issuing rank — never at issue time. Under async issue a
+/// step-end snapshot taken after every ticket has been waited therefore
+/// can never observe a half-counted in-flight op, and the
+/// serial==channel==fabric ledger equality holds with overlap enabled.
 #[derive(Debug, Default)]
 pub struct CommStats {
     /// Total payload bytes sent over the ring (all ranks).
     pub bytes_sent: AtomicU64,
-    /// Number of collective operations entered.
+    /// Number of collective operations completed.
     pub ops: AtomicU64,
 }
 
@@ -113,33 +120,32 @@ impl CommHandle {
     /// Ring all-reduce (sum) in place. All ranks must call with equal-length
     /// buffers; on return every rank holds the element-wise sum.
     pub fn all_reduce_sum(&self, data: &mut [f32]) -> Result<()> {
-        self.stats.ops.fetch_add(1, Ordering::Relaxed);
-        if self.world == 1 {
-            return Ok(());
-        }
-        let m = self.world;
-        let shards = Self::shard_ranges(data.len(), m);
+        if self.world > 1 {
+            let m = self.world;
+            let shards = Self::shard_ranges(data.len(), m);
 
-        // phase 1: reduce-scatter. After M-1 steps rank r owns the full sum
-        // of shard (r+1) mod M.
-        for step in 0..m - 1 {
-            let send_idx = (self.rank + m - step) % m;
-            let recv_idx = (self.rank + m - step - 1) % m;
-            self.send(data[shards[send_idx].clone()].to_vec())?;
-            let incoming = self.recv()?;
-            ensure!(incoming.len() == shards[recv_idx].len(), "ring shard size mismatch");
-            for (dst, src) in data[shards[recv_idx].clone()].iter_mut().zip(&incoming) {
-                *dst += src;
+            // phase 1: reduce-scatter. After M-1 steps rank r owns the full
+            // sum of shard (r+1) mod M.
+            for step in 0..m - 1 {
+                let send_idx = (self.rank + m - step) % m;
+                let recv_idx = (self.rank + m - step - 1) % m;
+                self.send(data[shards[send_idx].clone()].to_vec())?;
+                let incoming = self.recv()?;
+                ensure!(incoming.len() == shards[recv_idx].len(), "ring shard size mismatch");
+                for (dst, src) in data[shards[recv_idx].clone()].iter_mut().zip(&incoming) {
+                    *dst += src;
+                }
+            }
+            // phase 2: all-gather the reduced shards.
+            for step in 0..m - 1 {
+                let send_idx = (self.rank + 1 + m - step) % m;
+                let recv_idx = (self.rank + m - step) % m;
+                self.send(data[shards[send_idx].clone()].to_vec())?;
+                let incoming = self.recv()?;
+                data[shards[recv_idx].clone()].copy_from_slice(&incoming);
             }
         }
-        // phase 2: all-gather the reduced shards.
-        for step in 0..m - 1 {
-            let send_idx = (self.rank + 1 + m - step) % m;
-            let recv_idx = (self.rank + m - step) % m;
-            self.send(data[shards[send_idx].clone()].to_vec())?;
-            let incoming = self.recv()?;
-            data[shards[recv_idx].clone()].copy_from_slice(&incoming);
-        }
+        self.stats.ops.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
 
@@ -157,21 +163,20 @@ impl CommHandle {
     /// across ranks; the returned range identifies it. Other regions are
     /// left partially reduced (callers must not read them).
     pub fn reduce_scatter_sum(&self, data: &mut [f32]) -> Result<std::ops::Range<usize>> {
-        self.stats.ops.fetch_add(1, Ordering::Relaxed);
         let m = self.world;
         let shards = Self::shard_ranges(data.len(), m);
-        if m == 1 {
-            return Ok(shards[0].clone());
-        }
-        for step in 0..m - 1 {
-            let send_idx = (self.rank + m - step) % m;
-            let recv_idx = (self.rank + m - step - 1) % m;
-            self.send(data[shards[send_idx].clone()].to_vec())?;
-            let incoming = self.recv()?;
-            for (dst, src) in data[shards[recv_idx].clone()].iter_mut().zip(&incoming) {
-                *dst += src;
+        if m > 1 {
+            for step in 0..m - 1 {
+                let send_idx = (self.rank + m - step) % m;
+                let recv_idx = (self.rank + m - step - 1) % m;
+                self.send(data[shards[send_idx].clone()].to_vec())?;
+                let incoming = self.recv()?;
+                for (dst, src) in data[shards[recv_idx].clone()].iter_mut().zip(&incoming) {
+                    *dst += src;
+                }
             }
         }
+        self.stats.ops.fetch_add(1, Ordering::Relaxed);
         // after M-1 steps, rank r owns shard (r+1) mod M
         Ok(shards[(self.rank + 1) % m].clone())
     }
@@ -181,20 +186,19 @@ impl CommHandle {
     /// is consistent on every rank. `owner_of` maps shard index -> the
     /// rank that owns it, matching [`Self::reduce_scatter_sum`] layout.
     pub fn all_gather_owned(&self, data: &mut [f32]) -> Result<()> {
-        self.stats.ops.fetch_add(1, Ordering::Relaxed);
         let m = self.world;
-        if m == 1 {
-            return Ok(());
+        if m > 1 {
+            let shards = Self::shard_ranges(data.len(), m);
+            // rank r owns shard (r+1) mod M (reduce_scatter layout)
+            for step in 0..m - 1 {
+                let send_idx = (self.rank + 1 + m - step) % m;
+                let recv_idx = (self.rank + m - step) % m;
+                self.send(data[shards[send_idx].clone()].to_vec())?;
+                let incoming = self.recv()?;
+                data[shards[recv_idx].clone()].copy_from_slice(&incoming);
+            }
         }
-        let shards = Self::shard_ranges(data.len(), m);
-        // rank r owns shard (r+1) mod M (reduce_scatter layout)
-        for step in 0..m - 1 {
-            let send_idx = (self.rank + 1 + m - step) % m;
-            let recv_idx = (self.rank + m - step) % m;
-            self.send(data[shards[send_idx].clone()].to_vec())?;
-            let incoming = self.recv()?;
-            data[shards[recv_idx].clone()].copy_from_slice(&incoming);
-        }
+        self.stats.ops.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
 

@@ -27,7 +27,7 @@ use std::time::Instant;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use super::fabric::{serial, Fabric, Topology};
+use super::fabric::{serial, Fabric, Ticket, Topology};
 use super::{rank_threads, Collective, CollectiveEngine, CommGroup, CommStats};
 use crate::config::{OptimizerKind, TrainConfig};
 use crate::coordinator::{MemorySnapshot, Trainer, WorldMemory};
@@ -70,6 +70,11 @@ pub struct DpSpec {
     pub threads_per_rank: usize,
     /// Reduction topology; `None` = `ADAMA_FABRIC` (default ring).
     pub topology: Option<Topology>,
+    /// Async issue of the per-layer state all-reduces
+    /// ([`SyncStrategy::OptimizerStates`]): `None` = `ADAMA_ASYNC`
+    /// (default off). Pure scheduling knob — sync and async runs are
+    /// bit-identical, ledgers included.
+    pub async_issue: Option<bool>,
 }
 
 impl DpSpec {
@@ -82,6 +87,7 @@ impl DpSpec {
             engine: CollectiveEngine::Fabric,
             threads_per_rank: 0,
             topology: None,
+            async_issue: None,
         }
     }
 
@@ -97,6 +103,11 @@ impl DpSpec {
 
     pub fn with_rank_threads(mut self, threads: usize) -> Self {
         self.threads_per_rank = threads;
+        self
+    }
+
+    pub fn with_async(mut self, async_issue: bool) -> Self {
+        self.async_issue = Some(async_issue);
         self
     }
 }
@@ -135,6 +146,11 @@ pub fn run_data_parallel(lib: Arc<Library>, spec: DpSpec) -> Result<DpReport> {
         Some(t) => t,
         None => Topology::from_env()?,
     };
+    // strictly-parsed once, before the workers fork
+    let mut spec = spec;
+    if spec.async_issue.is_none() {
+        spec.async_issue = Some(super::fabric::async_from_env()?);
+    }
     let tpr = rank_threads(spec.threads_per_rank, m)?;
     match spec.engine {
         CollectiveEngine::Serial => run_dp_serial(lib, spec, topo, tpr),
@@ -228,13 +244,41 @@ fn worker<C: Collective>(lib: Arc<Library>, spec: DpSpec, comm: C) -> Result<Wor
                     .adam_states_mut()
                     .context("AdamA states")?;
                 let inv_m2 = 1.0 / (m * m) as f32;
-                for layer_m in states.m.iter_mut() {
-                    comm.all_reduce_mean(layer_m)?;
-                }
-                for layer_v in states.v.iter_mut() {
-                    comm.all_reduce_sum(layer_v)?;
-                    for x in layer_v.iter_mut() {
-                        *x *= inv_m2;
+                if spec.async_issue.unwrap_or(false) {
+                    // issue every layer's state reduction before waiting
+                    // any — the comm thread folds layer k while layer k+1
+                    // is still being posted. Same per-rank entry order as
+                    // the sync arm (all m layers, then all v layers); the
+                    // mean is the sum ×1/M, so bits and ledger match the
+                    // sync arm exactly.
+                    let m_tickets: Vec<Ticket> =
+                        states.m.iter().map(|b| comm.all_reduce_sum_async(b.clone())).collect();
+                    let v_tickets: Vec<Ticket> =
+                        states.v.iter().map(|b| comm.all_reduce_sum_async(b.clone())).collect();
+                    let inv_m = 1.0 / m as f32;
+                    for (layer_m, t) in states.m.iter_mut().zip(m_tickets) {
+                        let rb = t.wait()?.pop().expect("one buffer per ticket");
+                        layer_m.copy_from_slice(&rb.data);
+                        for x in layer_m.iter_mut() {
+                            *x *= inv_m;
+                        }
+                    }
+                    for (layer_v, t) in states.v.iter_mut().zip(v_tickets) {
+                        let rb = t.wait()?.pop().expect("one buffer per ticket");
+                        layer_v.copy_from_slice(&rb.data);
+                        for x in layer_v.iter_mut() {
+                            *x *= inv_m2;
+                        }
+                    }
+                } else {
+                    for layer_m in states.m.iter_mut() {
+                        comm.all_reduce_mean(layer_m)?;
+                    }
+                    for layer_v in states.v.iter_mut() {
+                        comm.all_reduce_sum(layer_v)?;
+                        for x in layer_v.iter_mut() {
+                            *x *= inv_m2;
+                        }
                     }
                 }
                 trainer.apply_update()?;

@@ -39,16 +39,42 @@
 //! all-reduce, half that for reduce-scatter / all-gather) — so Figure-7
 //! style volume measurements are engine-independent.
 //!
+//! ## Async issue
+//!
+//! Every collective also exists in a ticketed async form
+//! ([`FabricHandle::all_reduce_sum_async`] /
+//! [`FabricHandle::reduce_scatter_sum_async`] /
+//! [`FabricHandle::reduce_scatter_many_async`]): the buffer moves to a
+//! lazily-spawned **per-rank comm thread** and a [`Ticket`] comes back
+//! immediately, so the issuing rank keeps computing (layer *k−1*'s
+//! backward) while the fabric folds layer *k*. The comm thread executes
+//! its queue FIFO, which preserves the one property the board needs —
+//! every rank enters every collective in the same order — and the fold
+//! order is the same pure function of rank indices as the sync path, so
+//! async issue changes *when* work happens, never *what* is folded: sync
+//! and async runs are bit-for-bit identical, ledgers included. Once a
+//! handle has a comm thread, its synchronous calls funnel through the
+//! same queue (one total order per rank; no interleaving hazard).
+//! [`FabricHandle::reduce_scatter_many_async`] batches several buffers
+//! through a single gate crossing — the `ADAMA_BUCKET_BYTES` bucketing
+//! primitive (see [`parse_bucket_bytes`]) — while still recording one
+//! ledger op per logical buffer.
+//!
 //! ## Failure semantics
 //!
 //! Collectives must be entered by every rank, in the same order (like
 //! NCCL). If a rank errors out and drops its handle while peers are
 //! blocked inside a collective, the internal gate converts the would-be
 //! deadlock into a `"rank handle dropped"` error on the surviving ranks.
+//! A handle dropped with async work still queued first **drains** its
+//! comm thread — peers blocked in those same collectives complete
+//! normally — and only then abandons the gate.
 
 use std::ops::Range;
 use std::sync::atomic::Ordering;
+use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError, RwLock};
+use std::thread::JoinHandle;
 
 use anyhow::{bail, ensure, Result};
 
@@ -101,6 +127,56 @@ impl Topology {
     pub fn from_env() -> Result<Topology> {
         Self::parse(std::env::var("ADAMA_FABRIC").ok().as_deref())
     }
+}
+
+/// Strictly resolve an `ADAMA_ASYNC` value: unset/empty/`0` = synchronous
+/// issue (the default); `1` = issue collectives on the rank's comm thread
+/// and overlap them with compute. Anything else is an error naming the
+/// accepted values (no silent fallback). Pure scheduling knob: sync and
+/// async runs are bit-identical, ledgers included.
+pub fn parse_async(spec: Option<&str>) -> Result<bool> {
+    match spec.map(str::trim) {
+        None | Some("") | Some("0") => Ok(false),
+        Some("1") => Ok(true),
+        Some(other) => bail!("invalid ADAMA_ASYNC '{other}': expected 0|1 (unset = 0)"),
+    }
+}
+
+/// Async-issue mode from the `ADAMA_ASYNC` environment variable.
+pub fn async_from_env() -> Result<bool> {
+    parse_async(std::env::var("ADAMA_ASYNC").ok().as_deref())
+}
+
+/// Strictly resolve an `ADAMA_BUCKET_BYTES` value: unset/empty/`0` = no
+/// bucketing (every gradient issues its own collective); a byte count
+/// (`<n>`, optionally suffixed `k`/`m`/`g`, ×1024 each) closes a bucket
+/// once the coalesced tensors reach it, so small tensors share one gate
+/// crossing. Anything else is an error naming the accepted values.
+/// Bucket boundaries depend only on tensor sizes — identical on every
+/// rank — and the ledger still records one op per logical tensor, so the
+/// threshold is a pure performance knob.
+pub fn parse_bucket_bytes(spec: Option<&str>) -> Result<usize> {
+    let s = match spec.map(str::trim) {
+        Some(s) if !s.is_empty() => s.to_ascii_lowercase(),
+        _ => return Ok(0),
+    };
+    let (digits, mult): (&str, usize) = match s.chars().last() {
+        Some('k') => (&s[..s.len() - 1], 1 << 10),
+        Some('m') => (&s[..s.len() - 1], 1 << 20),
+        Some('g') => (&s[..s.len() - 1], 1 << 30),
+        _ => (s.as_str(), 1),
+    };
+    match digits.parse::<usize>() {
+        Ok(n) => Ok(n.saturating_mul(mult)),
+        Err(_) => bail!(
+            "invalid ADAMA_BUCKET_BYTES '{s}': expected 0/unset (no bucketing) or <n>[k|m|g]"
+        ),
+    }
+}
+
+/// Bucket threshold from the `ADAMA_BUCKET_BYTES` environment variable.
+pub fn bucket_bytes_from_env() -> Result<usize> {
+    parse_bucket_bytes(std::env::var("ADAMA_BUCKET_BYTES").ok().as_deref())
 }
 
 /// Element-wise `dst[i] = dst[i] + src[i]` — the single f32 operation all
@@ -213,10 +289,16 @@ impl Gate {
         }
         let gen = s.generation;
         while s.generation == gen {
-            ensure!(
-                s.gone == 0,
-                "fabric: a peer rank exited while this rank was blocked in a collective"
-            );
+            if s.gone != 0 {
+                // Roll back this rank's arrival before surfacing the
+                // error: the count was consumed by nobody (the generation
+                // never advanced), and leaving it behind would miscount
+                // the rendezvous for whatever enters the gate next — a
+                // later entrant must see the dropped-peer error, not a
+                // short-counted (garbage-folding) barrier.
+                s.arrived -= 1;
+                bail!("fabric: a peer rank exited while this rank was blocked in a collective");
+            }
             s = self.cv.wait(s).unwrap_or_else(PoisonError::into_inner);
         }
         Ok(())
@@ -252,6 +334,92 @@ fn write_slot(slot: &RwLock<Vec<f32>>) -> std::sync::RwLockWriteGuard<'_, Vec<f3
     slot.write().unwrap_or_else(PoisonError::into_inner)
 }
 
+/// One fully-reduced buffer handed back by an async collective: the data
+/// plus the sub-range this rank owns afterwards (`0..len` for all-reduce
+/// and all-gather; the reduce-scatter shard `(rank+1) mod M` otherwise —
+/// regions outside `owned` are unspecified, matching the sync contract).
+#[derive(Debug)]
+pub struct ReducedBuf {
+    pub data: Vec<f32>,
+    pub owned: Range<usize>,
+}
+
+/// Completion cell shared between an issued job and its [`Ticket`].
+struct TicketCell {
+    state: Mutex<Option<Result<Vec<ReducedBuf>>>>,
+    cv: Condvar,
+}
+
+impl TicketCell {
+    fn new() -> Arc<Self> {
+        Arc::new(Self { state: Mutex::new(None), cv: Condvar::new() })
+    }
+
+    fn fill(&self, res: Result<Vec<ReducedBuf>>) {
+        let mut s = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        *s = Some(res);
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) -> Result<Vec<ReducedBuf>> {
+        let mut s = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        loop {
+            if let Some(res) = s.take() {
+                return res;
+            }
+            s = self.cv.wait(s).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+}
+
+/// Handle to an in-flight (or already-completed) collective. `wait()`
+/// blocks until the fabric has folded the buffers and returns them;
+/// [`CommStats`] for the op are recorded strictly *before* `wait`
+/// returns (completion attribution), so a ledger snapshot taken after
+/// every issued ticket has been waited can never race an in-flight op.
+///
+/// A `Ticket` stays valid after its issuing [`FabricHandle`] is dropped:
+/// the drop drains the comm thread, so queued work completes (or errors)
+/// and the cell is always filled.
+pub struct Ticket {
+    inner: TicketInner,
+}
+
+enum TicketInner {
+    Ready(Result<Vec<ReducedBuf>>),
+    Pending(Arc<TicketCell>),
+}
+
+impl Ticket {
+    /// An already-completed ticket — what the blocking shims on engines
+    /// without a native async path (channel ring, serial) return.
+    pub fn ready(res: Result<Vec<ReducedBuf>>) -> Self {
+        Self { inner: TicketInner::Ready(res) }
+    }
+
+    fn pending(cell: Arc<TicketCell>) -> Self {
+        Self { inner: TicketInner::Pending(cell) }
+    }
+
+    /// Block until the collective completes; returns one [`ReducedBuf`]
+    /// per issued buffer, in issue order.
+    pub fn wait(self) -> Result<Vec<ReducedBuf>> {
+        match self.inner {
+            TicketInner::Ready(res) => res,
+            TicketInner::Pending(cell) => cell.wait(),
+        }
+    }
+}
+
+/// Queued unit of work for a rank's comm thread.
+type Job = Box<dyn FnOnce(usize, &Board) + Send>;
+
+struct CommThread {
+    tx: Sender<Job>,
+    join: JoinHandle<()>,
+}
+
 /// Factory for fabric-connected rank handles.
 pub struct Fabric;
 
@@ -272,25 +440,225 @@ impl Fabric {
             gate: Gate::new(),
             stats: Arc::new(CommStats::default()),
         });
-        (0..world).map(|rank| FabricHandle { rank, board: board.clone() }).collect()
+        (0..world)
+            .map(|rank| FabricHandle { rank, board: board.clone(), comm: Mutex::new(None) })
+            .collect()
     }
 }
 
 /// One rank's endpoint in the fabric. Moves into the rank's worker
-/// thread; all collectives are synchronous and must be entered by every
-/// rank in the same order.
+/// thread; every rank must enter every collective in the same order.
+/// Synchronous collectives block inline; the `_async` variants hand the
+/// buffer to a lazily-spawned per-rank comm thread and return a
+/// [`Ticket`].
 pub struct FabricHandle {
     rank: usize,
     board: Arc<Board>,
+    /// Lazily-spawned comm thread (first async issue). Once it exists,
+    /// *every* collective on this handle — sync calls included — funnels
+    /// through its FIFO queue, so the rank crosses the board's gates in
+    /// exactly one total order and compute-thread/comm-thread entries can
+    /// never interleave mid-collective.
+    comm: Mutex<Option<CommThread>>,
 }
 
 impl Drop for FabricHandle {
     fn drop(&mut self) {
+        // Drain before abandon: a handle dropped with async work still
+        // queued lets its comm thread finish (or error out of) every
+        // outstanding collective first — peers are legitimately blocked
+        // inside those same collectives, and abandoning the gate early
+        // would poison them mid-fold. Closing the queue ends the thread's
+        // recv loop once it empties; the join guarantees none of this
+        // rank's jobs can touch the gate after the abandon below. A
+        // peer-side failure cannot deadlock the drain: the peer's own
+        // abandon (which its drop performs after a drain that never
+        // depends on us) errors our blocked jobs out of the gate.
+        if let Some(ct) = self.comm.lock().unwrap_or_else(PoisonError::into_inner).take() {
+            drop(ct.tx);
+            let _ = ct.join.join();
+        }
         // After a normal run every rank has left its last collective, so
         // nobody is waiting and this is a no-op; after an error it wakes
         // blocked peers with a clear failure instead of a deadlock.
         self.board.gate.abandon();
     }
+}
+
+/// Publish `rank`'s contribution to the board.
+fn post(rank: usize, board: &Board, data: &[f32]) {
+    let mut slot = write_slot(&board.input[rank]);
+    slot.clear();
+    slot.extend_from_slice(data);
+}
+
+/// Snapshot every rank's posted contribution for shard `j` and fold it in
+/// the topology's fixed order. Caller must hold the post gate.
+fn reduce_shard(board: &Board, shards: &[Range<usize>], j: usize, len: usize) -> Result<Vec<f32>> {
+    let m = board.world;
+    let guards: Vec<_> = (0..m).map(|r| read_slot(&board.input[r])).collect();
+    for g in &guards {
+        ensure!(
+            g.len() == len,
+            "fabric: ranks posted different buffer lengths ({} vs {len})",
+            g.len()
+        );
+    }
+    let contribs: Vec<&[f32]> = guards.iter().map(|g| &g[shards[j].clone()]).collect();
+    Ok(reduce_contribs(board.topo, j, &contribs))
+}
+
+// The ep_* endpoint functions below are the collectives themselves,
+// callable from either the rank's compute thread (sync path) or its comm
+// thread (async path). All of them attribute their [`CommStats`] at
+// **completion** — after the final gate, just before returning — never at
+// issue: under async issue a step-end ledger snapshot must not observe an
+// op whose result is still in flight (`fabric_parity` asserts exact
+// serial==channel==fabric ledger equality with overlap enabled).
+
+/// All-reduce (sum) in place: every rank ends with the element-wise sum,
+/// reduced in the fixed per-shard order (see module docs).
+fn ep_all_reduce_sum(rank: usize, board: &Board, data: &mut [f32]) -> Result<()> {
+    let m = board.world;
+    let wire = reduce_scatter_wire_bytes(rank, data.len(), m)
+        + all_gather_wire_bytes(rank, data.len(), m);
+    if m > 1 {
+        let shards = CommHandle::shard_ranges(data.len(), m);
+        post(rank, board, data);
+        board.gate.wait(m)?;
+        // Each rank folds the shard it owns — shard (rank+1) mod M, the
+        // reduce-scatter layout — and publishes it; the fold order is a
+        // pure function of (shard index, world), never arrival time.
+        let own = (rank + 1) % m;
+        let red = reduce_shard(board, &shards, own, data.len())?;
+        *write_slot(&board.reduced[rank]) = red;
+        board.gate.wait(m)?;
+        for (j, shard) in shards.iter().enumerate() {
+            let owner = (j + m - 1) % m;
+            let g = read_slot(&board.reduced[owner]);
+            data[shard.clone()].copy_from_slice(&g);
+        }
+    }
+    board.stats.ops.fetch_add(1, Ordering::Relaxed);
+    board.stats.bytes_sent.fetch_add(wire, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Reduce-scatter (sum): on return `data`'s own shard (the returned
+/// range, `(rank+1) mod M` of [`CommHandle::shard_ranges`]) holds the
+/// cross-rank sum; other regions are left untouched (callers must not
+/// read them, matching the channel ring's contract).
+fn ep_reduce_scatter_sum(rank: usize, board: &Board, data: &mut [f32]) -> Result<Range<usize>> {
+    let m = board.world;
+    let shards = CommHandle::shard_ranges(data.len(), m);
+    let own = (rank + 1) % m;
+    if m > 1 {
+        post(rank, board, data);
+        board.gate.wait(m)?;
+        let red = reduce_shard(board, &shards, own, data.len())?;
+        data[shards[own].clone()].copy_from_slice(&red);
+        // Trailing gate: nobody may repost for the next collective while
+        // a peer still reads this one's board.
+        board.gate.wait(m)?;
+    }
+    board.stats.ops.fetch_add(1, Ordering::Relaxed);
+    board
+        .stats
+        .bytes_sent
+        .fetch_add(reduce_scatter_wire_bytes(rank, data.len(), m), Ordering::Relaxed);
+    Ok(shards[own].clone())
+}
+
+/// Batched reduce-scatter (sum) — the bucketing primitive: every buffer
+/// in `bufs` is reduce-scattered exactly as [`ep_reduce_scatter_sum`]
+/// would (same per-shard fold order, same owned range, same per-buffer
+/// ledger entry), but the whole batch crosses the gate **once** as a
+/// concatenated post. Returns the owned range of each buffer.
+fn ep_reduce_scatter_many(
+    rank: usize,
+    board: &Board,
+    bufs: &mut [Vec<f32>],
+) -> Result<Vec<Range<usize>>> {
+    let m = board.world;
+    let own = (rank + 1) % m;
+    let owned: Vec<Range<usize>> =
+        bufs.iter().map(|b| CommHandle::shard_ranges(b.len(), m)[own].clone()).collect();
+    let wire: u64 = bufs.iter().map(|b| reduce_scatter_wire_bytes(rank, b.len(), m)).sum();
+    if m > 1 {
+        let total: usize = bufs.iter().map(|b| b.len()).sum();
+        {
+            let mut slot = write_slot(&board.input[rank]);
+            slot.clear();
+            slot.reserve(total);
+            for b in bufs.iter() {
+                slot.extend_from_slice(b);
+            }
+        }
+        board.gate.wait(m)?;
+        {
+            let guards: Vec<_> = (0..m).map(|r| read_slot(&board.input[r])).collect();
+            for g in &guards {
+                ensure!(
+                    g.len() == total,
+                    "fabric: ranks posted different batched buffer lengths ({} vs {total}) — \
+                     bucket boundaries must be identical on every rank",
+                    g.len()
+                );
+            }
+            let mut off = 0usize;
+            for (b, ownr) in bufs.iter_mut().zip(&owned) {
+                let contribs: Vec<&[f32]> =
+                    guards.iter().map(|g| &g[off + ownr.start..off + ownr.end]).collect();
+                let red = reduce_contribs(board.topo, own, &contribs);
+                b[ownr.clone()].copy_from_slice(&red);
+                off += b.len();
+            }
+        }
+        board.gate.wait(m)?;
+    }
+    // one logical op per buffer: transport batching must not change the
+    // ledger (serial==channel==fabric, bucketed==unbucketed)
+    board.stats.ops.fetch_add(bufs.len() as u64, Ordering::Relaxed);
+    board.stats.bytes_sent.fetch_add(wire, Ordering::Relaxed);
+    Ok(owned)
+}
+
+/// All-gather: each rank contributes the shard it owns (reduce-scatter
+/// layout); on return the whole buffer is consistent on every rank.
+fn ep_all_gather_owned(rank: usize, board: &Board, data: &mut [f32]) -> Result<()> {
+    let m = board.world;
+    let wire = all_gather_wire_bytes(rank, data.len(), m);
+    if m > 1 {
+        let shards = CommHandle::shard_ranges(data.len(), m);
+        post(rank, board, data);
+        board.gate.wait(m)?;
+        for (j, shard) in shards.iter().enumerate() {
+            let owner = (j + m - 1) % m;
+            if owner == rank {
+                continue;
+            }
+            let g = read_slot(&board.input[owner]);
+            ensure!(
+                g.len() == data.len(),
+                "fabric: ranks posted different buffer lengths ({} vs {})",
+                g.len(),
+                data.len()
+            );
+            data[shard.clone()].copy_from_slice(&g[shard.clone()]);
+        }
+        board.gate.wait(m)?;
+    }
+    board.stats.ops.fetch_add(1, Ordering::Relaxed);
+    board.stats.bytes_sent.fetch_add(wire, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Barrier: returns once every rank has entered.
+fn ep_barrier(board: &Board) -> Result<()> {
+    if board.world == 1 {
+        return Ok(());
+    }
+    board.gate.wait(board.world)
 }
 
 impl FabricHandle {
@@ -310,58 +678,83 @@ impl FabricHandle {
         &self.board.stats
     }
 
-    /// Publish this rank's contribution to the board.
-    fn post(&self, data: &[f32]) {
-        let mut slot = write_slot(&self.board.input[self.rank]);
-        slot.clear();
-        slot.extend_from_slice(data);
+    fn comm_active(&self) -> bool {
+        self.comm.lock().unwrap_or_else(PoisonError::into_inner).is_some()
     }
 
-    /// Snapshot every rank's posted contribution for shard `j` and fold
-    /// it in the topology's fixed order. Caller must hold the post gate.
-    fn reduce_shard(&self, shards: &[Range<usize>], j: usize, len: usize) -> Result<Vec<f32>> {
-        let m = self.board.world;
-        let guards: Vec<_> = (0..m).map(|r| read_slot(&self.board.input[r])).collect();
-        for g in &guards {
-            ensure!(
-                g.len() == len,
-                "fabric: ranks posted different buffer lengths ({} vs {len})",
-                g.len()
-            );
-        }
-        let contribs: Vec<&[f32]> = guards.iter().map(|g| &g[shards[j].clone()]).collect();
-        Ok(reduce_contribs(self.board.topo, j, &contribs))
+    /// Enqueue a job on the comm thread, spawning it on first use.
+    fn enqueue(&self, job: Job) {
+        let mut guard = self.comm.lock().unwrap_or_else(PoisonError::into_inner);
+        let ct = guard.get_or_insert_with(|| {
+            let (tx, rx) = std::sync::mpsc::channel::<Job>();
+            let rank = self.rank;
+            let board = self.board.clone();
+            let join = std::thread::spawn(move || {
+                // FIFO: jobs run in issue order — the order this rank's
+                // program entered the collectives — so the gate
+                // rendezvous stays in lock-step with every peer.
+                while let Ok(job) = rx.recv() {
+                    job(rank, &board);
+                }
+            });
+            CommThread { tx, join }
+        });
+        // the channel only disconnects when the comm thread is gone, and
+        // the thread never exits while `tx` is alive
+        ct.tx.send(job).expect("fabric comm thread exited prematurely");
+    }
+
+    /// Issue `run` on the comm thread and hand back its ticket.
+    fn issue<F>(&self, run: F) -> Ticket
+    where
+        F: FnOnce(usize, &Board) -> Result<Vec<ReducedBuf>> + Send + 'static,
+    {
+        let cell = TicketCell::new();
+        let out = cell.clone();
+        self.enqueue(Box::new(move |rank, board| out.fill(run(rank, board))));
+        Ticket::pending(cell)
+    }
+
+    /// Async all-reduce (sum): the buffer moves to the comm thread; the
+    /// ticket's single [`ReducedBuf`] owns the whole range.
+    pub fn all_reduce_sum_async(&self, mut data: Vec<f32>) -> Ticket {
+        self.issue(move |rank, board| {
+            ep_all_reduce_sum(rank, board, &mut data)?;
+            let n = data.len();
+            Ok(vec![ReducedBuf { data, owned: 0..n }])
+        })
+    }
+
+    /// Async reduce-scatter (sum) of one buffer.
+    pub fn reduce_scatter_sum_async(&self, data: Vec<f32>) -> Ticket {
+        self.reduce_scatter_many_async(vec![data])
+    }
+
+    /// Async batched reduce-scatter — the `ADAMA_BUCKET_BYTES` bucketing
+    /// primitive: the whole batch crosses the gate once, each buffer is
+    /// folded exactly as an individual reduce-scatter would fold it, and
+    /// the ledger records one op per buffer. Every rank must pass
+    /// identically-sized buffer batches in the same order.
+    pub fn reduce_scatter_many_async(&self, mut bufs: Vec<Vec<f32>>) -> Ticket {
+        self.issue(move |rank, board| {
+            let owned = ep_reduce_scatter_many(rank, board, &mut bufs)?;
+            Ok(bufs
+                .into_iter()
+                .zip(owned)
+                .map(|(data, owned)| ReducedBuf { data, owned })
+                .collect())
+        })
     }
 
     /// All-reduce (sum) in place: every rank ends with the element-wise
     /// sum, reduced in the fixed per-shard order (see module docs).
     pub fn all_reduce_sum(&self, data: &mut [f32]) -> Result<()> {
-        let m = self.board.world;
-        self.board.stats.ops.fetch_add(1, Ordering::Relaxed);
-        self.board.stats.bytes_sent.fetch_add(
-            reduce_scatter_wire_bytes(self.rank, data.len(), m)
-                + all_gather_wire_bytes(self.rank, data.len(), m),
-            Ordering::Relaxed,
-        );
-        if m == 1 {
+        if self.comm_active() {
+            let out = self.all_reduce_sum_async(data.to_vec()).wait()?;
+            data.copy_from_slice(&out[0].data);
             return Ok(());
         }
-        let shards = CommHandle::shard_ranges(data.len(), m);
-        self.post(data);
-        self.board.gate.wait(m)?;
-        // Each rank folds the shard it owns — shard (rank+1) mod M, the
-        // reduce-scatter layout — and publishes it; the fold order is a
-        // pure function of (shard index, world), never arrival time.
-        let own = (self.rank + 1) % m;
-        let red = self.reduce_shard(&shards, own, data.len())?;
-        *write_slot(&self.board.reduced[self.rank]) = red;
-        self.board.gate.wait(m)?;
-        for (j, shard) in shards.iter().enumerate() {
-            let owner = (j + m - 1) % m;
-            let g = read_slot(&self.board.reduced[owner]);
-            data[shard.clone()].copy_from_slice(&g);
-        }
-        Ok(())
+        ep_all_reduce_sum(self.rank, &self.board, data)
     }
 
     /// All-reduce then scale by `1/world` (mean) — Eq. 7's m-averaging.
@@ -379,66 +772,45 @@ impl FabricHandle {
     /// cross-rank sum; other regions are left untouched (callers must not
     /// read them, matching the channel ring's contract).
     pub fn reduce_scatter_sum(&self, data: &mut [f32]) -> Result<Range<usize>> {
-        let m = self.board.world;
-        self.board.stats.ops.fetch_add(1, Ordering::Relaxed);
-        self.board
-            .stats
-            .bytes_sent
-            .fetch_add(reduce_scatter_wire_bytes(self.rank, data.len(), m), Ordering::Relaxed);
-        let shards = CommHandle::shard_ranges(data.len(), m);
-        let own = (self.rank + 1) % m;
-        if m == 1 {
-            return Ok(shards[own].clone());
+        if self.comm_active() {
+            let mut out = self.reduce_scatter_sum_async(data.to_vec()).wait()?;
+            let rb = out.pop().expect("one buffer in, one buffer out");
+            data[rb.owned.clone()].copy_from_slice(&rb.data[rb.owned.clone()]);
+            return Ok(rb.owned);
         }
-        self.post(data);
-        self.board.gate.wait(m)?;
-        let red = self.reduce_shard(&shards, own, data.len())?;
-        data[shards[own].clone()].copy_from_slice(&red);
-        // Trailing gate: nobody may repost for the next collective while
-        // a peer still reads this one's board.
-        self.board.gate.wait(m)?;
-        Ok(shards[own].clone())
+        ep_reduce_scatter_sum(self.rank, &self.board, data)
     }
 
     /// All-gather: each rank contributes the shard it owns (reduce-scatter
     /// layout); on return the whole buffer is consistent on every rank.
     pub fn all_gather_owned(&self, data: &mut [f32]) -> Result<()> {
-        let m = self.board.world;
-        self.board.stats.ops.fetch_add(1, Ordering::Relaxed);
-        self.board
-            .stats
-            .bytes_sent
-            .fetch_add(all_gather_wire_bytes(self.rank, data.len(), m), Ordering::Relaxed);
-        if m == 1 {
+        if self.comm_active() {
+            let mut buf = data.to_vec();
+            let out = self
+                .issue(move |rank, board| {
+                    ep_all_gather_owned(rank, board, &mut buf)?;
+                    let n = buf.len();
+                    Ok(vec![ReducedBuf { data: buf, owned: 0..n }])
+                })
+                .wait()?;
+            data.copy_from_slice(&out[0].data);
             return Ok(());
         }
-        let shards = CommHandle::shard_ranges(data.len(), m);
-        self.post(data);
-        self.board.gate.wait(m)?;
-        for (j, shard) in shards.iter().enumerate() {
-            let owner = (j + m - 1) % m;
-            if owner == self.rank {
-                continue;
-            }
-            let g = read_slot(&self.board.input[owner]);
-            ensure!(
-                g.len() == data.len(),
-                "fabric: ranks posted different buffer lengths ({} vs {})",
-                g.len(),
-                data.len()
-            );
-            data[shard.clone()].copy_from_slice(&g[shard.clone()]);
-        }
-        self.board.gate.wait(m)?;
-        Ok(())
+        ep_all_gather_owned(self.rank, &self.board, data)
     }
 
     /// Barrier: returns once every rank has entered.
     pub fn barrier(&self) -> Result<()> {
-        if self.board.world == 1 {
-            return Ok(());
+        if self.comm_active() {
+            return self
+                .issue(|_rank, board| {
+                    ep_barrier(board)?;
+                    Ok(Vec::new())
+                })
+                .wait()
+                .map(|_| ());
         }
-        self.board.gate.wait(self.board.world)
+        ep_barrier(&self.board)
     }
 }
 
@@ -777,6 +1149,238 @@ mod tests {
         assert_eq!(Topology::parse(Some(" Tree ")).unwrap(), Topology::Tree);
         let err = Topology::parse(Some("mesh")).unwrap_err();
         assert!(format!("{err}").contains("ring|tree"), "{err}");
+    }
+
+    #[test]
+    fn async_and_bucket_parse_are_strict() {
+        assert!(!parse_async(None).unwrap());
+        assert!(!parse_async(Some("")).unwrap());
+        assert!(!parse_async(Some("0")).unwrap());
+        assert!(parse_async(Some(" 1 ")).unwrap());
+        let err = parse_async(Some("yes")).unwrap_err();
+        assert!(format!("{err}").contains("0|1"), "{err}");
+
+        assert_eq!(parse_bucket_bytes(None).unwrap(), 0);
+        assert_eq!(parse_bucket_bytes(Some("")).unwrap(), 0);
+        assert_eq!(parse_bucket_bytes(Some("0")).unwrap(), 0);
+        assert_eq!(parse_bucket_bytes(Some("4096")).unwrap(), 4096);
+        assert_eq!(parse_bucket_bytes(Some("64k")).unwrap(), 64 << 10);
+        assert_eq!(parse_bucket_bytes(Some(" 2M ")).unwrap(), 2 << 20);
+        assert_eq!(parse_bucket_bytes(Some("1g")).unwrap(), 1 << 30);
+        let err = parse_bucket_bytes(Some("lots")).unwrap_err();
+        assert!(format!("{err}").contains("k|m|g"), "{err}");
+    }
+
+    #[test]
+    fn gate_error_rolls_back_arrival_count() {
+        // regression: an errored waiter used to leave its `arrived`
+        // increment behind, miscounting the rendezvous for later entrants
+        let gate = Arc::new(Gate::new());
+        let g2 = gate.clone();
+        let t = std::thread::spawn(move || g2.wait(2));
+        while gate.lock().arrived != 1 {
+            std::thread::yield_now();
+        }
+        gate.abandon();
+        assert!(t.join().unwrap().is_err(), "abandon must error the waiter out");
+        let s = gate.lock();
+        assert_eq!(s.arrived, 0, "errored waiter must roll back its arrival");
+        assert_eq!(s.gone, 1);
+        drop(s);
+        // a later entrant on the same gate reports the dropped peer
+        // promptly instead of deadlocking or short-counting a barrier
+        assert!(gate.wait(2).is_err());
+    }
+
+    #[test]
+    fn post_error_board_reports_dropped_peer_on_reuse() {
+        // two survivors keep issuing collectives after a peer dropped:
+        // every attempt must surface the dropped-peer error, never
+        // deadlock or fold a short world
+        let mut handles = Fabric::new(3);
+        let h2 = handles.pop().unwrap();
+        let h1 = handles.pop().unwrap();
+        let h0 = handles.pop().unwrap();
+        let spawn = |h: FabricHandle| {
+            std::thread::spawn(move || {
+                let mut d = vec![1.0f32; 8];
+                let first = h.all_reduce_sum(&mut d);
+                let second = h.all_reduce_sum(&mut d);
+                (first.is_err(), second.is_err())
+            })
+        };
+        let t0 = spawn(h0);
+        let t1 = spawn(h1);
+        drop(h2);
+        let (a0, b0) = t0.join().unwrap();
+        let (a1, b1) = t1.join().unwrap();
+        assert!(a0 && a1, "first collective after the drop must error");
+        assert!(b0 && b1, "reusing the board must keep reporting the error");
+    }
+
+    #[test]
+    fn drop_with_outstanding_ticket_drains_instead_of_poisoning() {
+        // regression: dropping a handle with async work still queued used
+        // to abandon the gate immediately, poisoning a peer blocked in
+        // that same (legitimate) collective
+        let mut handles = Fabric::new(2);
+        let h1 = handles.pop().unwrap();
+        let h0 = handles.pop().unwrap();
+        let t0 = std::thread::spawn(move || {
+            let ticket = h0.reduce_scatter_sum_async(vec![1.0f32; 8]);
+            drop(h0); // must drain the comm thread before abandoning
+            ticket.wait()
+        });
+        let t1 = std::thread::spawn(move || {
+            // arrive well after rank 0's handle is gone
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            let mut d = vec![2.0f32; 8];
+            h1.reduce_scatter_sum(&mut d).map(|own| d[own].to_vec())
+        });
+        let r0 = t0.join().unwrap().expect("ticket outlives its handle");
+        let r1 = t1.join().unwrap().expect("late peer completes normally");
+        // rank 0 owns shard 1 (4..8), rank 1 owns shard 0 (0..4)
+        assert_eq!(r0[0].owned, 4..8);
+        assert_eq!(bits(&r0[0].data[r0[0].owned.clone()]), bits(&[3.0f32; 4]));
+        assert_eq!(bits(&r1), bits(&[3.0f32; 4]));
+    }
+
+    #[test]
+    fn ledger_attributed_at_completion_not_issue() {
+        // regression: stats used to be bumped at issue time, so a ledger
+        // snapshot could observe an op whose peers had not even arrived
+        let mut handles = Fabric::new(2);
+        let h1 = handles.pop().unwrap();
+        let h0 = handles.pop().unwrap();
+        let stats = h0.stats().clone();
+        let ticket = h0.all_reduce_sum_async(vec![1.0f32; 64]);
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        // rank 1 never arrived: the op is in flight and must be invisible
+        assert_eq!(stats.op_count(), 0, "in-flight op leaked into the ledger");
+        assert_eq!(stats.bytes(), 0);
+        let t1 = std::thread::spawn(move || {
+            let mut d = vec![1.0f32; 64];
+            h1.all_reduce_sum(&mut d).unwrap();
+        });
+        let out = ticket.wait().unwrap();
+        t1.join().unwrap();
+        assert_eq!(bits(&out[0].data), bits(&[2.0f32; 64]));
+        // all-reduce, m=2, len 64: per rank (64-32)·4 wire each phase
+        assert_eq!(stats.op_count(), 2);
+        assert_eq!(stats.bytes(), 2 * 2 * 128);
+    }
+
+    #[test]
+    fn async_and_bucketed_issue_match_sync_bits_and_ledger() {
+        for &topo in &Topology::ALL {
+            let m = 3;
+            let lens = [13usize, 7, 31, 2];
+            let mut rng = Rng::new(42);
+            let inputs: Vec<Vec<Vec<f32>>> =
+                (0..m).map(|_| lens.iter().map(|&n| randvec(&mut rng, n)).collect()).collect();
+
+            let run = |mode: usize, inputs: Arc<Vec<Vec<Vec<f32>>>>| {
+                let handles = Fabric::with_topology(m, topo);
+                let stats = handles[0].stats().clone();
+                let mut joins = Vec::new();
+                for h in handles {
+                    let inputs = inputs.clone();
+                    joins.push(std::thread::spawn(move || {
+                        let mine = &inputs[h.rank()];
+                        match mode {
+                            // sync, one collective per buffer
+                            0 => mine
+                                .iter()
+                                .map(|buf| {
+                                    let mut d = buf.clone();
+                                    let own = h.reduce_scatter_sum(&mut d).unwrap();
+                                    d[own].to_vec()
+                                })
+                                .collect::<Vec<_>>(),
+                            // async, one ticket per buffer, waited at the end
+                            1 => {
+                                let tickets: Vec<Ticket> = mine
+                                    .iter()
+                                    .map(|buf| h.reduce_scatter_sum_async(buf.clone()))
+                                    .collect();
+                                tickets
+                                    .into_iter()
+                                    .map(|t| {
+                                        let rb = t.wait().unwrap().pop().unwrap();
+                                        rb.data[rb.owned].to_vec()
+                                    })
+                                    .collect()
+                            }
+                            // async, all buffers bucketed into one batch
+                            _ => h
+                                .reduce_scatter_many_async(mine.clone())
+                                .wait()
+                                .unwrap()
+                                .into_iter()
+                                .map(|rb| rb.data[rb.owned].to_vec())
+                                .collect(),
+                        }
+                    }));
+                }
+                let out: Vec<_> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+                (out, stats.op_count(), stats.bytes())
+            };
+
+            let fin = Arc::new(inputs);
+            let (sync_out, sync_ops, sync_bytes) = run(0, fin.clone());
+            let (async_out, async_ops, async_bytes) = run(1, fin.clone());
+            let (bucket_out, bucket_ops, bucket_bytes) = run(2, fin);
+
+            for r in 0..m {
+                for (k, want) in sync_out[r].iter().enumerate() {
+                    assert_eq!(
+                        bits(&async_out[r][k]),
+                        bits(want),
+                        "{topo:?} async vs sync, rank {r} buf {k}"
+                    );
+                    assert_eq!(
+                        bits(&bucket_out[r][k]),
+                        bits(want),
+                        "{topo:?} bucketed vs sync, rank {r} buf {k}"
+                    );
+                }
+            }
+            // transport batching must not change the logical ledger
+            assert_eq!(async_ops, sync_ops, "{topo:?}");
+            assert_eq!(bucket_ops, sync_ops, "{topo:?}");
+            assert_eq!(async_bytes, sync_bytes, "{topo:?}");
+            assert_eq!(bucket_bytes, sync_bytes, "{topo:?}");
+        }
+    }
+
+    #[test]
+    fn sync_calls_funnel_through_active_comm_thread() {
+        // once a handle has issued async work, a following *sync* call on
+        // the compute thread must queue behind it — one total order per
+        // rank — instead of racing the comm thread into the gate
+        let mut handles = Fabric::new(2);
+        let h1 = handles.pop().unwrap();
+        let h0 = handles.pop().unwrap();
+        let t0 = std::thread::spawn(move || {
+            let ticket = h0.all_reduce_sum_async(vec![1.0f32; 16]);
+            let mut d = vec![10.0f32; 16];
+            h0.all_reduce_sum(&mut d).unwrap(); // funnels through the queue
+            let first = ticket.wait().unwrap();
+            (first, d)
+        });
+        let t1 = std::thread::spawn(move || {
+            let mut a = vec![2.0f32; 16];
+            h1.all_reduce_sum(&mut a).unwrap();
+            let mut b = vec![20.0f32; 16];
+            h1.all_reduce_sum(&mut b).unwrap();
+            (a, b)
+        });
+        let (first, second) = t0.join().unwrap();
+        let (a, b) = t1.join().unwrap();
+        assert_eq!(bits(&first[0].data), bits(&[3.0f32; 16]));
+        assert_eq!(bits(&second), bits(&[30.0f32; 16]));
+        assert_eq!(bits(&a), bits(&[3.0f32; 16]));
+        assert_eq!(bits(&b), bits(&[30.0f32; 16]));
     }
 
     #[test]

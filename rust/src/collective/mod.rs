@@ -35,7 +35,10 @@ use anyhow::Result;
 pub use comm::{CommGroup, CommHandle, CommStats};
 pub use cost::{ClusterSpec, CommCostModel};
 pub use dp::{run_data_parallel, DpReport, DpSpec, SyncStrategy};
-pub use fabric::{Fabric, FabricHandle, Topology};
+pub use fabric::{
+    async_from_env, bucket_bytes_from_env, parse_async, parse_bucket_bytes, Fabric, FabricHandle,
+    ReducedBuf, Ticket, Topology,
+};
 pub use zero::{run_zero1, Zero1Report, Zero1Spec};
 
 /// Which engine drives a distributed run. All engines produce identical
@@ -95,8 +98,13 @@ pub(crate) fn ensure_ring_only(topo: Topology) -> Result<()> {
 /// Rank-side collective interface — the DP/ZeRO workers are generic over
 /// it, so the channel ring and the fabric run the identical algorithm.
 ///
-/// All collectives are synchronous and must be entered by every rank in
-/// the same order (like NCCL). Buffer lengths must match across ranks.
+/// Collectives must be entered by every rank in the same order (like
+/// NCCL). Buffer lengths must match across ranks. The `_async` family
+/// returns a [`Ticket`] to `wait()` later; engines without a native async
+/// path (channel ring, serial) inherit blocking shims that complete the
+/// collective inline and hand back an already-filled ticket — bitwise and
+/// ledger-wise indistinguishable from real overlap, so the DP/ZeRO flows
+/// stay engine-generic under `ADAMA_ASYNC=1`.
 pub trait Collective: Send {
     fn rank(&self) -> usize;
     fn world(&self) -> usize;
@@ -106,6 +114,38 @@ pub trait Collective: Send {
     fn reduce_scatter_sum(&self, data: &mut [f32]) -> Result<Range<usize>>;
     fn all_gather_owned(&self, data: &mut [f32]) -> Result<()>;
     fn barrier(&self) -> Result<()>;
+
+    /// Async all-reduce (sum); the returned ticket's single [`ReducedBuf`]
+    /// owns the whole range. Default: blocking shim.
+    fn all_reduce_sum_async(&self, mut data: Vec<f32>) -> Ticket {
+        match self.all_reduce_sum(&mut data) {
+            Ok(()) => {
+                let n = data.len();
+                Ticket::ready(Ok(vec![ReducedBuf { data, owned: 0..n }]))
+            }
+            Err(e) => Ticket::ready(Err(e)),
+        }
+    }
+
+    /// Async reduce-scatter (sum) of one buffer. Default: blocking shim.
+    fn reduce_scatter_sum_async(&self, data: Vec<f32>) -> Ticket {
+        self.reduce_scatter_many_async(vec![data])
+    }
+
+    /// Async batched reduce-scatter — the gradient-bucketing primitive:
+    /// one ticket for the whole batch, one ledger op per logical buffer,
+    /// buffers returned in issue order. Default: blocking shim reducing
+    /// each buffer in order (identical bits and ledger, no batching).
+    fn reduce_scatter_many_async(&self, bufs: Vec<Vec<f32>>) -> Ticket {
+        let mut out = Vec::with_capacity(bufs.len());
+        for mut b in bufs {
+            match self.reduce_scatter_sum(&mut b) {
+                Ok(owned) => out.push(ReducedBuf { data: b, owned }),
+                Err(e) => return Ticket::ready(Err(e)),
+            }
+        }
+        Ticket::ready(Ok(out))
+    }
 }
 
 impl Collective for CommHandle {
@@ -173,5 +213,19 @@ impl Collective for FabricHandle {
 
     fn barrier(&self) -> Result<()> {
         FabricHandle::barrier(self)
+    }
+
+    // the fabric is the one engine with genuine overlap: override the
+    // blocking shims with the comm-thread ticketed forms
+    fn all_reduce_sum_async(&self, data: Vec<f32>) -> Ticket {
+        FabricHandle::all_reduce_sum_async(self, data)
+    }
+
+    fn reduce_scatter_sum_async(&self, data: Vec<f32>) -> Ticket {
+        FabricHandle::reduce_scatter_sum_async(self, data)
+    }
+
+    fn reduce_scatter_many_async(&self, bufs: Vec<Vec<f32>>) -> Ticket {
+        FabricHandle::reduce_scatter_many_async(self, bufs)
     }
 }

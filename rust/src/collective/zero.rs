@@ -29,12 +29,12 @@ use std::time::Instant;
 use anyhow::{bail, ensure, Result};
 
 use super::comm::CommHandle;
-use super::fabric::{serial, Fabric, Topology};
+use super::fabric::{serial, Fabric, Ticket, Topology};
 use super::{rank_threads, Collective, CollectiveEngine, CommGroup, CommStats};
 use crate::config::{OptimBackend, OptimizerKind, TrainConfig};
 use crate::coordinator::{MemorySnapshot, Trainer, WorldMemory};
 use crate::data::{MarkovCorpus, MicroBatch};
-use crate::memory::{Category, MemoryReport, MemoryTracker};
+use crate::memory::{Allocation, Category, MemoryReport, MemoryTracker};
 use crate::model::ModelSpec;
 use crate::optim::{host_math, Hyper, NullOpt, UpdateBackend};
 use crate::runtime::Library;
@@ -51,6 +51,15 @@ pub struct Zero1Spec {
     pub threads_per_rank: usize,
     /// Reduction topology; `None` = `ADAMA_FABRIC` (default ring).
     pub topology: Option<Topology>,
+    /// Async issue of the per-layer reduce-scatter (AdamA flow): `None` =
+    /// `ADAMA_ASYNC` (default off). Pure scheduling knob — sync and async
+    /// runs are bit-identical, ledgers included.
+    pub async_issue: Option<bool>,
+    /// Gradient-bucket threshold in bytes for the async flow: `None` =
+    /// `ADAMA_BUCKET_BYTES` (default 0 = every gradient issues its own
+    /// collective). Boundaries depend only on layer sizes, so every rank
+    /// cuts identical buckets.
+    pub bucket_bytes: Option<usize>,
 }
 
 impl Zero1Spec {
@@ -62,6 +71,8 @@ impl Zero1Spec {
             engine: CollectiveEngine::Fabric,
             threads_per_rank: 0,
             topology: None,
+            async_issue: None,
+            bucket_bytes: None,
         }
     }
 
@@ -77,6 +88,16 @@ impl Zero1Spec {
 
     pub fn with_rank_threads(mut self, threads: usize) -> Self {
         self.threads_per_rank = threads;
+        self
+    }
+
+    pub fn with_async(mut self, async_issue: bool) -> Self {
+        self.async_issue = Some(async_issue);
+        self
+    }
+
+    pub fn with_bucket_bytes(mut self, bytes: usize) -> Self {
+        self.bucket_bytes = Some(bytes);
         self
     }
 }
@@ -180,6 +201,15 @@ pub fn run_zero1(lib: Arc<Library>, spec: Zero1Spec) -> Result<Zero1Report> {
         Some(t) => t,
         None => Topology::from_env()?,
     };
+    // resolve the scheduling knobs once, before the workers fork, so every
+    // rank (and the serial oracle) sees one strictly-parsed decision
+    let mut spec = spec;
+    if spec.async_issue.is_none() {
+        spec.async_issue = Some(super::fabric::async_from_env()?);
+    }
+    if spec.bucket_bytes.is_none() {
+        spec.bucket_bytes = Some(super::fabric::bucket_bytes_from_env()?);
+    }
     let tpr = rank_threads(spec.threads_per_rank, m)?;
     match spec.engine {
         CollectiveEngine::Serial => run_zero_serial(lib, spec, topo, tpr),
@@ -262,6 +292,78 @@ fn snapshot(trainer: &Trainer, tracker: &MemoryTracker) -> MemorySnapshot {
     }
 }
 
+/// One AdamA micro-batch with **async issue**: the gradient sink coalesces
+/// layer gradients into size-thresholded buckets and hands each closed
+/// bucket to the comm thread (`reduce_scatter_many_async`) without
+/// blocking — layer *k*'s reduction folds while the pool computes layer
+/// *k−1*'s backward. Tickets are waited at micro-batch end and integrated
+/// **in issue order** — the production order, exactly where the sync sink
+/// integrates — and the backward never reads (m, v), so deferring the
+/// integrate past the backward is unobservable: sync and async are
+/// bit-identical.
+#[allow(clippy::too_many_arguments)]
+fn microbatch_async<C: Collective>(
+    trainer: &mut Trainer,
+    mb: &MicroBatch,
+    comm: &C,
+    shard: &mut ShardState,
+    tracker: &MemoryTracker,
+    bucket_bytes: usize,
+    inv_m: f32,
+    gscale: f32,
+) -> Result<f32> {
+    // (layers, in-flight workspace guard, ticket) per issued bucket
+    let mut pending: Vec<(Vec<usize>, Allocation, Ticket)> = Vec::new();
+    let mut bucket: Vec<(usize, Vec<f32>)> = Vec::new();
+    let mut filled = 0usize;
+    let loss = {
+        let pending = &mut pending;
+        let bucket = &mut bucket;
+        let filled = &mut filled;
+        let mut sink = |layer: usize, grad: &[f32]| -> Result<()> {
+            bucket.push((layer, grad.to_vec()));
+            *filled += grad.len() * 4;
+            // the bucket closes on reaching the threshold (0 = every
+            // gradient issues immediately); boundaries depend only on
+            // layer sizes, so every rank cuts identical buckets
+            if *filled >= bucket_bytes {
+                issue_bucket(comm, tracker, bucket, pending);
+                *filled = 0;
+            }
+            Ok(())
+        };
+        trainer.accumulate_minibatch_sink(std::slice::from_ref(mb), &mut sink)?
+    };
+    issue_bucket(comm, tracker, &mut bucket, &mut pending);
+    for (layers, _ws, ticket) in pending {
+        let reduced = ticket.wait()?;
+        ensure!(reduced.len() == layers.len(), "batched reduce returned wrong buffer count");
+        for (layer, rb) in layers.into_iter().zip(reduced) {
+            debug_assert_eq!(rb.owned, shard.ranges[layer]);
+            let mut g: Vec<f32> = rb.data[rb.owned.clone()].to_vec();
+            host_math::scale(&mut g, inv_m); // sum -> mean over ranks
+            shard.integrate(layer, &g, gscale)?;
+        }
+    }
+    Ok(loss)
+}
+
+/// Hand the open bucket to the comm thread as one batched reduce-scatter.
+fn issue_bucket<C: Collective>(
+    comm: &C,
+    tracker: &MemoryTracker,
+    bucket: &mut Vec<(usize, Vec<f32>)>,
+    pending: &mut Vec<(Vec<usize>, Allocation, Ticket)>,
+) {
+    if bucket.is_empty() {
+        return;
+    }
+    let (layers, bufs): (Vec<usize>, Vec<Vec<f32>>) = bucket.drain(..).unzip();
+    // the in-flight gradient copies are workspace until integrated
+    let ws = tracker.alloc(Category::Workspace, bufs.iter().map(|b| b.len() * 4).sum());
+    pending.push((layers, ws, comm.reduce_scatter_many_async(bufs)));
+}
+
 /// ZeRO-S1 + AdamA: per-micro-batch per-layer reduce-scatter + shard
 /// integrate + release.
 fn worker_adama<C: Collective>(
@@ -292,6 +394,8 @@ fn worker_adama<C: Collective>(
     // the reduce-scatter sum / M.
     let gscale = 1.0 / n as f32;
     let inv_m = 1.0 / m as f32;
+    let async_issue = spec.async_issue.unwrap_or(false);
+    let bucket_bytes = spec.bucket_bytes.unwrap_or(0);
 
     let mut losses = Vec::new();
     for _ in 0..spec.steps {
@@ -299,26 +403,35 @@ fn worker_adama<C: Collective>(
         shard.decay(1.0)?;
         let mbs = corpus.minibatch(n, h.microbatch, h.seq);
         let mut loss_sum = 0.0f64;
-        {
-            let shard = &mut shard;
-            let comm_ref = &comm;
-            let tracker_ref = &tracker;
-            let mut sink = |layer: usize, grad: &[f32]| -> Result<()> {
-                // workspace copy (reduce-scatter mutates in place)
-                let _w = tracker_ref.alloc(Category::Workspace, grad.len() * 4);
-                let mut buf = grad.to_vec();
-                let own = comm_ref.reduce_scatter_sum(&mut buf)?;
-                debug_assert_eq!(own, shard.ranges[layer]);
-                let mut g: Vec<f32> = buf[own].to_vec();
-                host_math::scale(&mut g, inv_m); // sum -> mean over ranks
-                shard.integrate(layer, &g, gscale)
+        for mb in &mbs {
+            let loss = if async_issue {
+                microbatch_async(
+                    &mut trainer,
+                    mb,
+                    &comm,
+                    &mut shard,
+                    &tracker,
+                    bucket_bytes,
+                    inv_m,
+                    gscale,
+                )?
+            } else {
+                let shard = &mut shard;
+                let comm_ref = &comm;
+                let tracker_ref = &tracker;
+                let mut sink = |layer: usize, grad: &[f32]| -> Result<()> {
+                    // workspace copy (reduce-scatter mutates in place)
+                    let _w = tracker_ref.alloc(Category::Workspace, grad.len() * 4);
+                    let mut buf = grad.to_vec();
+                    let own = comm_ref.reduce_scatter_sum(&mut buf)?;
+                    debug_assert_eq!(own, shard.ranges[layer]);
+                    let mut g: Vec<f32> = buf[own].to_vec();
+                    host_math::scale(&mut g, inv_m); // sum -> mean over ranks
+                    shard.integrate(layer, &g, gscale)
+                };
+                trainer.accumulate_minibatch_sink(std::slice::from_ref(mb), &mut sink)?
             };
-            for mb in &mbs {
-                loss_sum += trainer.accumulate_minibatch_sink(
-                    std::slice::from_ref(mb),
-                    &mut sink,
-                )? as f64;
-            }
+            loss_sum += loss as f64;
         }
         // shard param update + all-gather
         let (bc1, bc2) = hyper.bias_corrections(t);

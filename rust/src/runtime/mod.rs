@@ -24,6 +24,13 @@
 //!   `<n>[k|m|g]` = stash under a byte cap, `unlimited` = always stash —
 //!   see [`hostexec::actmem`]. Stashed and remat backward are
 //!   bit-identical, so the budget is a pure memory/throughput knob.
+//!   The distributed runners add two scheduling knobs of the same
+//!   strictly-parsed family: `ADAMA_ASYNC=0|1` overlaps the per-layer
+//!   collectives with backward compute on a per-rank comm thread, and
+//!   `ADAMA_BUCKET_BYTES=<n>[k|m|g]` coalesces small gradients into one
+//!   gate crossing — both resolved by `collective::fabric`
+//!   (`parse_async` / `parse_bucket_bytes`) and both pure performance
+//!   knobs: sync and async runs are bit-identical, ledgers included.
 //! * `pjrt::PjrtExecutor` (cargo feature `pjrt`) — compiles the AOT HLO
 //!   artifacts produced by `python/compile/aot.py` through the PJRT C API.
 //!   Selected automatically when the feature is enabled and artifacts are

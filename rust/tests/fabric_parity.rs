@@ -3,7 +3,8 @@
 //! runs — losses, final parameters and the comm-volume ledger — for every
 //! sync strategy, ZeRO flow, rank count and `ADAMA_THREADS`/`ADAMA_SIMD`
 //! setting (the CI `distributed` job sweeps `ADAMA_RANKS={1,2,4} ×
-//! ADAMA_THREADS={1,4}`).
+//! ADAMA_THREADS={1,4} × ADAMA_ASYNC={0,1}` — the async legs drive these
+//! same env-resolved runs through the fabric comm thread).
 
 use std::sync::Arc;
 
@@ -217,6 +218,79 @@ fn channel_engine_rejects_tree_topology() {
     );
     let msg = format!("{:?}", err.unwrap_err());
     assert!(msg.contains("ring"), "{msg}");
+}
+
+#[test]
+fn async_issue_matches_sync_bit_for_bit() {
+    // The tentpole invariant: handing per-layer reductions to the comm
+    // thread (any bucket threshold) changes scheduling only — losses,
+    // params AND the wire/op ledger stay bit-identical to blocking issue
+    // and to the serial oracle, for both topologies and with a
+    // multithreaded per-rank pool.
+    let lib = library();
+    for m in worlds().into_iter().filter(|&m| m >= 2) {
+        for topo in [Topology::Ring, Topology::Tree] {
+            let z = |engine, async_issue: bool, bucket: usize, threads: usize| {
+                run_zero1(
+                    lib.clone(),
+                    Zero1Spec::new(cfg(OptimizerKind::AdamA, m, 2), 2, DATA_SEED)
+                        .with_engine(engine)
+                        .with_topology(topo)
+                        .with_rank_threads(threads)
+                        .with_async(async_issue)
+                        .with_bucket_bytes(bucket),
+                )
+                .unwrap_or_else(|e| panic!("zero1 async M={m} {topo:?}: {e:?}"))
+            };
+            let sync = z(CollectiveEngine::Fabric, false, 0, 1);
+            // bucket sweep: per-layer issue, mid-size coalescing, one
+            // giant bucket (collapses to a single post-backward batch)
+            for bucket in [0usize, 4 << 10, 1 << 30] {
+                let got = z(CollectiveEngine::Fabric, true, bucket, 1);
+                let tag = format!("zero1 async M={m} {topo:?} bucket={bucket}");
+                assert_eq!(loss_bits(&got.losses), loss_bits(&sync.losses), "{tag}");
+                assert_eq!(
+                    param_bits(&got.final_params),
+                    param_bits(&sync.final_params),
+                    "{tag}"
+                );
+                assert_eq!(got.comm_bytes, sync.comm_bytes, "{tag}: wire ledger");
+                assert_eq!(got.comm_ops, sync.comm_ops, "{tag}: op ledger");
+            }
+            // multithreaded ranks under async issue change no bits either
+            let wide = z(CollectiveEngine::Fabric, true, 4 << 10, 2);
+            assert_eq!(param_bits(&wide.final_params), param_bits(&sync.final_params));
+            assert_eq!(loss_bits(&wide.losses), loss_bits(&sync.losses));
+            // the serial engine's blocking shims accept the same spec
+            let ser = z(CollectiveEngine::Serial, true, 4 << 10, 1);
+            assert_eq!(loss_bits(&ser.losses), loss_bits(&sync.losses));
+            assert_eq!(param_bits(&ser.final_params), param_bits(&sync.final_params));
+            assert_eq!(ser.comm_bytes, sync.comm_bytes);
+            assert_eq!(ser.comm_ops, sync.comm_ops);
+        }
+    }
+    // DP state-sync async twin: m/v all-reduces issued as tickets
+    let dp_run = |async_issue: bool| {
+        run_data_parallel(
+            lib.clone(),
+            DpSpec::new(
+                cfg(OptimizerKind::AdamA, 2, 2),
+                SyncStrategy::OptimizerStates,
+                2,
+                DATA_SEED,
+            )
+            .with_engine(CollectiveEngine::Fabric)
+            .with_topology(Topology::Ring)
+            .with_async(async_issue),
+        )
+        .unwrap()
+    };
+    let s = dp_run(false);
+    let a = dp_run(true);
+    assert_eq!(loss_bits(&a.losses), loss_bits(&s.losses), "dp async losses");
+    assert_eq!(param_bits(&a.final_params), param_bits(&s.final_params), "dp async params");
+    assert_eq!(a.comm_bytes, s.comm_bytes, "dp async wire ledger");
+    assert_eq!(a.comm_ops, s.comm_ops, "dp async op ledger");
 }
 
 #[test]

@@ -372,6 +372,146 @@ fn prop_fabric_reduce_order_invariant_under_injected_delays() {
 }
 
 #[test]
+fn prop_fabric_async_issue_invariant_under_delays_and_buckets() {
+    // Async issue + random bucket groupings + random per-rank delays
+    // (completion-order scrambling) must be bit-identical — results AND
+    // ledger — to the serial oracle reducing each buffer individually:
+    // overlap changes *when* work happens, never *what* is folded.
+    use adama::collective::fabric::{serial, Fabric, Topology};
+    use adama::collective::{CommStats, Ticket};
+    use std::sync::Arc;
+
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(8000 + seed);
+        let world = 2 + rng.below(4);
+        let k = 1 + rng.below(5); // buffers (layer gradients) per rank
+        let lens: Vec<usize> = (0..k).map(|_| rng.below(40)).collect();
+        let topo = if rng.below(2) == 0 { Topology::Ring } else { Topology::Tree };
+        // random bucket cuts — identical on every rank (the contract:
+        // boundaries are a pure function of the shared layer sizes)
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        for idx in 0..k {
+            if groups.is_empty() || rng.below(2) == 0 {
+                groups.push(vec![idx]);
+            } else {
+                groups.last_mut().unwrap().push(idx);
+            }
+        }
+        let inputs: Vec<Vec<Vec<f32>>> = (0..world)
+            .map(|w| {
+                let mut r = Rng::new(seed * 733 + w as u64);
+                lens.iter().map(|&n| randvec(&mut r, n, 1.0)).collect()
+            })
+            .collect();
+
+        // serial oracle: reduce-scatter each buffer on its own
+        let oracle_stats = CommStats::default();
+        let mut oracle: Vec<Vec<Vec<f32>>> = vec![Vec::new(); world];
+        for bi in 0..k {
+            let mut bufs: Vec<Vec<f32>> =
+                (0..world).map(|w| inputs[w][bi].clone()).collect();
+            let owned = serial::reduce_scatter_sum(topo, &mut bufs, &oracle_stats).unwrap();
+            for w in 0..world {
+                oracle[w].push(bufs[w][owned[w].clone()].to_vec());
+            }
+        }
+
+        let delays: Vec<u64> = (0..world).map(|_| rng.below(6) as u64).collect();
+        let handles = Fabric::with_topology(world, topo);
+        let async_stats = handles[0].stats().clone();
+        let inputs = Arc::new(inputs);
+        let groups = Arc::new(groups);
+        let mut joins = Vec::new();
+        for h in handles {
+            let inputs = inputs.clone();
+            let groups = groups.clone();
+            let delay = delays[h.rank()];
+            joins.push(std::thread::spawn(move || {
+                let mine = &inputs[h.rank()];
+                // issue every bucket before waiting any, jittering the
+                // issue points so ranks are mid-compute at different times
+                let tickets: Vec<Ticket> = groups
+                    .iter()
+                    .map(|g| {
+                        std::thread::sleep(std::time::Duration::from_millis(delay));
+                        h.reduce_scatter_many_async(
+                            g.iter().map(|&bi| mine[bi].clone()).collect(),
+                        )
+                    })
+                    .collect();
+                let mut out: Vec<Vec<f32>> = Vec::new();
+                for t in tickets {
+                    for rb in t.wait().unwrap() {
+                        out.push(rb.data[rb.owned].to_vec());
+                    }
+                }
+                out
+            }));
+        }
+        for (w, j) in joins.into_iter().enumerate() {
+            let got = j.join().unwrap();
+            assert_eq!(got.len(), k, "seed {seed} rank {w}");
+            for bi in 0..k {
+                let g: Vec<u32> = got[bi].iter().map(|x| x.to_bits()).collect();
+                let o: Vec<u32> = oracle[w][bi].iter().map(|x| x.to_bits()).collect();
+                assert_eq!(g, o, "seed {seed} {topo:?} world {world} rank {w} buf {bi}");
+            }
+        }
+        assert_eq!(async_stats.op_count(), oracle_stats.op_count(), "seed {seed} ops");
+        assert_eq!(async_stats.bytes(), oracle_stats.bytes(), "seed {seed} bytes");
+    }
+}
+
+#[test]
+fn prop_zero1_async_random_buckets_match_sync_run() {
+    // Run-level form of the invariant: ZeRO-S1+AdamA with async issue and
+    // a random bucket threshold — multithreaded ranks, both topologies —
+    // produces bit-identical losses, params and ledgers to the
+    // synchronous flow.
+    use adama::collective::{run_zero1, CollectiveEngine, Topology, Zero1Spec};
+    use adama::config::{OptimBackend, OptimizerKind, TrainConfig};
+    use adama::runtime::Library;
+
+    let lib = Library::open_default().expect("opening execution library");
+    for seed in 0..3u64 {
+        let mut rng = Rng::new(9000 + seed);
+        let topo = if rng.below(2) == 0 { Topology::Ring } else { Topology::Tree };
+        let bucket = [0usize, 1 << 10, 16 << 10, 1 << 30][rng.below(4)];
+        let cfg = TrainConfig {
+            model: "tiny".into(),
+            optimizer: OptimizerKind::AdamA,
+            backend: OptimBackend::Host,
+            accum_steps: 2,
+            chunk: 16384,
+            workers: 2,
+            ..TrainConfig::default()
+        };
+        let run = |async_issue: bool| {
+            run_zero1(
+                lib.clone(),
+                Zero1Spec::new(cfg.clone(), 1, 41)
+                    .with_engine(CollectiveEngine::Fabric)
+                    .with_topology(topo)
+                    .with_rank_threads(2)
+                    .with_async(async_issue)
+                    .with_bucket_bytes(bucket),
+            )
+            .unwrap()
+        };
+        let sync = run(false);
+        let asyn = run(true);
+        let tag = format!("seed {seed} {topo:?} bucket {bucket}");
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&asyn.losses), bits(&sync.losses), "{tag}: losses");
+        for (l, (a, s)) in asyn.final_params.iter().zip(&sync.final_params).enumerate() {
+            assert_eq!(bits(a), bits(s), "{tag}: layer {l} params");
+        }
+        assert_eq!(asyn.comm_bytes, sync.comm_bytes, "{tag}: wire ledger");
+        assert_eq!(asyn.comm_ops, sync.comm_ops, "{tag}: op ledger");
+    }
+}
+
+#[test]
 fn prop_shard_ranges_partition() {
     for seed in 0..100u64 {
         let mut rng = Rng::new(4000 + seed);

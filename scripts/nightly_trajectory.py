@@ -13,7 +13,8 @@ Pulls four headline numbers out of the nightly bench run:
   * GEMM — the packed-vs-naive engine speedup on the largest swept
     `gemm_*` shape (from the `speedup_packed_vs_naive` field);
   * E6 — the concurrent-fabric-vs-serial DP step-time speedup at the
-    largest rank count (from the `dp_fabric_vs_serial` rows).
+    largest rank count (from the `dp_fabric_vs_serial` rows) and the
+    async-vs-sync ZeRO-S1 issue speedup (`zero1_async_vs_sync` rows).
 
 A bench that emitted **no rows** fails the run loudly (non-zero exit)
 instead of appending an empty trajectory entry: a missing/empty
@@ -110,6 +111,17 @@ def fabric_speedup(rows):
     return best
 
 
+def zero1_async_speedup(rows):
+    """Async-vs-sync ZeRO-S1 issue speedup at the largest rank count."""
+    best = None
+    for r in rows:
+        if r.get("op") == "zero1_async_vs_sync" and "speedup_async_vs_sync" in r:
+            ranks = int(r.get("ranks", 0))
+            if best is None or ranks >= best[0]:
+                best = (ranks, float(r["speedup_async_vs_sync"]))
+    return best
+
+
 def main():
     if len(sys.argv) != 3:
         sys.exit(__doc__)
@@ -128,6 +140,9 @@ def main():
         notes.append(f"gemm {gemm[2]:.2f}x ({gemm[1]})")
     if fabric:
         notes.append(f"fabric {fabric[1]:.2f}x (M={fabric[0]})")
+    zasync = zero1_async_speedup(rows)
+    if zasync:
+        notes.append(f"async {zasync[1]:.2f}x (M={zasync[0]})")
     note = ", ".join(notes)
 
     threads = next((str(r["threads"]) for r in rows if "threads" in r), "?")
