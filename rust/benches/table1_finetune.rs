@@ -8,6 +8,7 @@
 
 use adama::config::OptimizerKind;
 use adama::data::{CycleCorpus, MarkovCorpus};
+use adama::runtime::OptAlgo;
 use adama::Trainer;
 
 #[path = "support/mod.rs"]
@@ -17,7 +18,7 @@ use support::{banner, cfg, lib_or_exit, quick};
 const TASKS: [(&str, usize); 4] = [("cycle3", 3), ("cycle7", 7), ("cycle11", 11), ("cycle29", 29)];
 
 fn main() {
-    let lib = lib_or_exit();
+    let lib = lib_or_exit().fork_with_opt(None);
     let (pre_steps, ft_steps) = if quick() { (8, 5) } else { (30, 15) };
 
     // ---- pretrain checkpoints ----
@@ -92,4 +93,44 @@ fn main() {
         }
     }
     println!("\nparity holds: AdamA checkpoints fine-tune like Adam's (paper Table 1)");
+
+    // ---- ADAMA_OPT zoo rows: pretrain with each rule, same protocol ----
+    banner("zoo checkpoints: pretrain per ADAMA_OPT rule, fine-tune with AdamA");
+    println!("{header}");
+    for algo in OptAlgo::ALL {
+        let zlib = lib.fork_with_opt(Some(algo));
+        let mut t = Trainer::new(zlib, cfg("tiny", OptimizerKind::AdamA, 4, 42)).unwrap();
+        let h = t.spec().hyper.clone();
+        let mut c = MarkovCorpus::new(h.vocab, 7, 11);
+        for _ in 0..pre_steps {
+            t.train_step(&c.minibatch(4, h.microbatch, h.seq)).unwrap();
+        }
+        let path = dir.join(format!("zoo_{}.ck", algo.name()));
+        t.save_checkpoint(&path).unwrap();
+
+        let mut row = format!("{:<12}", algo.name());
+        for (task, stride) in TASKS {
+            let mut ft =
+                Trainer::new(lib.clone(), cfg("tiny", OptimizerKind::AdamA, 2, 42)).unwrap();
+            ft.load_checkpoint(&path).unwrap();
+            let mut tc = CycleCorpus::new(h.vocab, stride, 17);
+            let mut heldout = CycleCorpus::new(h.vocab, stride, 9999);
+            let eval = heldout.minibatch(4, h.microbatch, h.seq);
+            let (loss0, _) = ft.eval(&eval).unwrap();
+            for _ in 0..ft_steps {
+                ft.train_step(&tc.minibatch(2, h.microbatch, h.seq)).unwrap();
+            }
+            let (loss, acc) = ft.eval(&eval).unwrap();
+            row += &format!(" {loss:>10.3} {acc:>10.3}");
+            // every zoo checkpoint must remain a usable starting point
+            assert!(
+                loss < loss0,
+                "{task}: fine-tuning from the {} checkpoint must reduce eval loss \
+                 ({loss} !< {loss0})",
+                algo.name()
+            );
+        }
+        println!("{row}");
+    }
+    println!("(every zoo rule's checkpoint fine-tunes; protocol as Table 1)");
 }

@@ -33,7 +33,7 @@ use crate::config::{OptimizerKind, TrainConfig};
 use crate::coordinator::{MemorySnapshot, Trainer, WorldMemory};
 use crate::data::{MarkovCorpus, MicroBatch};
 use crate::memory::MemoryReport;
-use crate::runtime::Library;
+use crate::runtime::{Library, OptAlgo};
 
 /// How workers synchronise per mini-batch.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -75,6 +75,11 @@ pub struct DpSpec {
     /// (default off). Pure scheduling knob — sync and async runs are
     /// bit-identical, ledgers included.
     pub async_issue: Option<bool>,
+    /// Exec-layer optimizer override for every rank
+    /// ([`Library::fork_with_opt`]); `None` inherits the launch library's
+    /// seam (`ADAMA_OPT` / `host_with_opt`). Zoo rules pair with
+    /// [`SyncStrategy::Gradients`].
+    pub opt: Option<OptAlgo>,
 }
 
 impl DpSpec {
@@ -88,6 +93,7 @@ impl DpSpec {
             threads_per_rank: 0,
             topology: None,
             async_issue: None,
+            opt: None,
         }
     }
 
@@ -108,6 +114,11 @@ impl DpSpec {
 
     pub fn with_async(mut self, async_issue: bool) -> Self {
         self.async_issue = Some(async_issue);
+        self
+    }
+
+    pub fn with_opt(mut self, opt: OptAlgo) -> Self {
+        self.opt = Some(opt);
         self
     }
 }
@@ -139,7 +150,16 @@ impl DpReport {
 pub fn run_data_parallel(lib: Arc<Library>, spec: DpSpec) -> Result<DpReport> {
     let m = spec.cfg.workers;
     spec.cfg.validate()?;
-    if spec.sync != SyncStrategy::Gradients && spec.cfg.optimizer != OptimizerKind::AdamA {
+    // normalize the exec-layer seam once, before the ranks fork: a spec
+    // override beats the ambient `ADAMA_OPT`; `None` inherits it.
+    let lib = match spec.opt {
+        Some(algo) => lib.fork_with_opt(Some(algo)),
+        None => lib,
+    };
+    let seam_opt = lib.executor().opt_algo();
+    if spec.sync != SyncStrategy::Gradients
+        && (spec.cfg.optimizer != OptimizerKind::AdamA || seam_opt.is_some())
+    {
         bail!("{:?} sync requires AdamA", spec.sync);
     }
     let topo = match spec.topology {
@@ -288,10 +308,10 @@ fn worker<C: Collective>(lib: Arc<Library>, spec: DpSpec, comm: C) -> Result<Wor
                 // classic DDP: local accumulation then one grad all-reduce
                 let loss = trainer.accumulate_minibatch(&mbs, 1.0 / n as f32)?;
                 let opt = trainer.optimizer_mut();
-                let ga = opt
-                    .as_adamga_mut()
-                    .context("Gradients sync requires AdamGA")?;
-                for acc in ga.grad_acc_mut() {
+                let accs = opt
+                    .grad_acc_mut()
+                    .context("Gradients sync requires a gradient-accumulating optimizer")?;
+                for acc in accs.iter_mut() {
                     comm.all_reduce_mean(acc)?;
                 }
                 trainer.apply_update()?;
@@ -417,18 +437,16 @@ fn run_dp_serial(
                     for t in trainers.iter_mut() {
                         bufs.push(
                             t.optimizer_mut()
-                                .as_adamga_mut()
-                                .context("Gradients sync requires AdamGA")?
-                                .grad_acc_mut()[l]
+                                .grad_acc_mut()
+                                .context("Gradients sync requires a gradient accumulator")?[l]
                                 .clone(),
                         );
                     }
                     serial::all_reduce_mean(topo, &mut bufs, &stats)?;
                     for (t, b) in trainers.iter_mut().zip(&bufs) {
                         t.optimizer_mut()
-                            .as_adamga_mut()
-                            .context("Gradients sync requires AdamGA")?
-                            .grad_acc_mut()[l]
+                            .grad_acc_mut()
+                            .context("Gradients sync requires a gradient accumulator")?[l]
                             .copy_from_slice(b);
                     }
                 }

@@ -18,8 +18,17 @@
 //! * **ZeRO-S1 + GA** — the DeepSpeed baseline: full local gradient
 //!   accumulator (P floats), one reduce-scatter at mini-batch end, shard
 //!   update, param all-gather.
+//! * **ZeRO-S1 + zoo rule** (exec-layer seam: `ADAMA_OPT` /
+//!   [`Zero1Spec::with_opt`]) — the optimizer-zoo rules composed with the
+//!   paper's trick: every layer gradient is reduce-scattered per
+//!   micro-batch and folded linearly into a *sharded* state-resident
+//!   accumulator, then released. At mini-batch end `adam` updates its
+//!   (m, v) shards and all-gathers parameters; the sublinear rules
+//!   (adafactor / sm3 / adam_mini) all-gather the accumulator shards back
+//!   into the full mean gradient and apply the replicated-statistics rule
+//!   identically on every rank — no parameter gather needed.
 //!
-//! Both flows run on any [`CollectiveEngine`] — concurrent fabric
+//! All flows run on any [`CollectiveEngine`] — concurrent fabric
 //! (default), channel ring, or the serial simulator — with bit-identical
 //! results (`rust/tests/fabric_parity.rs`).
 
@@ -36,8 +45,8 @@ use crate::coordinator::{MemorySnapshot, Trainer, WorldMemory};
 use crate::data::{MarkovCorpus, MicroBatch};
 use crate::memory::{Allocation, Category, MemoryReport, MemoryTracker};
 use crate::model::ModelSpec;
-use crate::optim::{host_math, Hyper, NullOpt, UpdateBackend};
-use crate::runtime::Library;
+use crate::optim::{host_math, Hyper, NullOpt, UpdateBackend, ZooStates};
+use crate::runtime::{Library, OptAlgo};
 
 #[derive(Debug, Clone)]
 pub struct Zero1Spec {
@@ -60,6 +69,11 @@ pub struct Zero1Spec {
     /// collective). Boundaries depend only on layer sizes, so every rank
     /// cuts identical buckets.
     pub bucket_bytes: Option<usize>,
+    /// Exec-layer optimizer override for every rank
+    /// ([`Library::fork_with_opt`]); `None` inherits the launch library's
+    /// seam (`ADAMA_OPT` / `host_with_opt`). With a zoo rule resolved the
+    /// run takes the sharded-accumulator zoo flow instead of AdamA/GA.
+    pub opt: Option<OptAlgo>,
 }
 
 impl Zero1Spec {
@@ -73,6 +87,7 @@ impl Zero1Spec {
             topology: None,
             async_issue: None,
             bucket_bytes: None,
+            opt: None,
         }
     }
 
@@ -98,6 +113,11 @@ impl Zero1Spec {
 
     pub fn with_bucket_bytes(mut self, bytes: usize) -> Self {
         self.bucket_bytes = Some(bytes);
+        self
+    }
+
+    pub fn with_opt(mut self, opt: OptAlgo) -> Self {
+        self.opt = Some(opt);
         self
     }
 }
@@ -193,9 +213,18 @@ pub fn run_zero1(lib: Arc<Library>, spec: Zero1Spec) -> Result<Zero1Report> {
     if m < 2 {
         bail!("ZeRO-S1 needs >= 2 workers");
     }
-    match spec.cfg.optimizer {
-        OptimizerKind::AdamA | OptimizerKind::AdamGA => {}
-        k => bail!("ZeRO-S1 supports adama|adamga, got {:?}", k),
+    // normalize the exec-layer seam once, before the ranks fork: a spec
+    // override beats the ambient `ADAMA_OPT`; `None` inherits it. A
+    // resolved zoo rule takes the sharded-accumulator zoo flow.
+    let lib = match spec.opt {
+        Some(algo) => lib.fork_with_opt(Some(algo)),
+        None => lib,
+    };
+    if lib.executor().opt_algo().is_none() {
+        match spec.cfg.optimizer {
+            OptimizerKind::AdamA | OptimizerKind::AdamGA => {}
+            k => bail!("ZeRO-S1 supports adama|adamga, got {:?}", k),
+        }
     }
     let topo = match spec.topology {
         Some(t) => t,
@@ -241,10 +270,15 @@ fn run_zero_threaded<C: Collective + 'static>(
         // arena when stashing is enabled — same bits either way.
         let lib = lib.fork_with_threads(tpr);
         let spec = spec.clone();
-        joins.push(std::thread::spawn(move || match spec.cfg.optimizer {
-            OptimizerKind::AdamA => worker_adama(lib, spec, comm),
-            OptimizerKind::AdamGA => worker_ga(lib, spec, comm),
-            k => bail!("ZeRO-S1 supports adama|adamga, got {:?}", k),
+        // the seam travels with the fork, so the per-rank library decides
+        // the flow exactly as `run_zero1`'s gate did
+        joins.push(std::thread::spawn(move || match lib.executor().opt_algo() {
+            Some(algo) => worker_zoo(lib, spec, algo, comm),
+            None => match spec.cfg.optimizer {
+                OptimizerKind::AdamA => worker_adama(lib, spec, comm),
+                OptimizerKind::AdamGA => worker_ga(lib, spec, comm),
+                k => bail!("ZeRO-S1 supports adama|adamga, got {:?}", k),
+            },
         }));
     }
     let mut results = Vec::new();
@@ -306,11 +340,11 @@ fn microbatch_async<C: Collective>(
     trainer: &mut Trainer,
     mb: &MicroBatch,
     comm: &C,
-    shard: &mut ShardState,
+    ranges: &[std::ops::Range<usize>],
+    integrate: &mut dyn FnMut(usize, &[f32]) -> Result<()>,
     tracker: &MemoryTracker,
     bucket_bytes: usize,
     inv_m: f32,
-    gscale: f32,
 ) -> Result<f32> {
     // (layers, in-flight workspace guard, ticket) per issued bucket
     let mut pending: Vec<(Vec<usize>, Allocation, Ticket)> = Vec::new();
@@ -339,10 +373,10 @@ fn microbatch_async<C: Collective>(
         let reduced = ticket.wait()?;
         ensure!(reduced.len() == layers.len(), "batched reduce returned wrong buffer count");
         for (layer, rb) in layers.into_iter().zip(reduced) {
-            debug_assert_eq!(rb.owned, shard.ranges[layer]);
+            debug_assert_eq!(rb.owned, ranges[layer]);
             let mut g: Vec<f32> = rb.data[rb.owned.clone()].to_vec();
             host_math::scale(&mut g, inv_m); // sum -> mean over ranks
-            shard.integrate(layer, &g, gscale)?;
+            integrate(layer, &g)?;
         }
     }
     Ok(loss)
@@ -405,15 +439,17 @@ fn worker_adama<C: Collective>(
         let mut loss_sum = 0.0f64;
         for mb in &mbs {
             let loss = if async_issue {
+                let ranges = shard.ranges.clone();
+                let shard = &mut shard;
                 microbatch_async(
                     &mut trainer,
                     mb,
                     &comm,
-                    &mut shard,
+                    &ranges,
+                    &mut |layer, g| shard.integrate(layer, g, gscale),
                     &tracker,
                     bucket_bytes,
                     inv_m,
-                    gscale,
                 )?
             } else {
                 let shard = &mut shard;
@@ -532,6 +568,194 @@ fn worker_ga<C: Collective>(lib: Arc<Library>, spec: Zero1Spec, comm: C) -> Resu
     })
 }
 
+/// Per-rank ZeRO-S1 state for an optimizer-zoo rule.
+///
+/// The mean-gradient accumulator is *sharded* (reduce-scatter layout,
+/// state-resident — the paper's trick composed with the rule). The moment
+/// statistics are sharded for `adam` (m, v — the ZeRO win is linear) and
+/// replicated for the sublinear rules, whose whole point is that their
+/// statistics are already tiny; those gather the accumulator shards back
+/// into the full mean gradient at apply time and update replicated
+/// parameters identically on every rank.
+struct ZooShard {
+    ranges: Vec<std::ops::Range<usize>>,
+    /// Shard-sized accumulators, one per layer.
+    acc: Vec<Vec<f32>>,
+    fold: UpdateBackend,
+    mode: ZooShardMode,
+}
+
+enum ZooShardMode {
+    Adam { m: Vec<Vec<f32>>, v: Vec<Vec<f32>>, hyper: Hyper, backend: UpdateBackend },
+    Replicated(ZooStates),
+}
+
+impl ZooShard {
+    fn new(
+        algo: OptAlgo,
+        spec: &ModelSpec,
+        rank: usize,
+        world: usize,
+        hyper: Hyper,
+        fold: UpdateBackend,
+        rule_backend: UpdateBackend,
+        tracker: &MemoryTracker,
+    ) -> Self {
+        let owner = (rank + 1) % world;
+        let ranges: Vec<_> = spec
+            .layers
+            .iter()
+            .map(|l| CommHandle::shard_ranges(l.flat_len, world)[owner].clone())
+            .collect();
+        let acc: Vec<Vec<f32>> = ranges.iter().map(|r| vec![0.0; r.len()]).collect();
+        let shard_len: usize = ranges.iter().map(|r| r.len()).sum();
+        // the accumulator is optimizer state here, not a gradient buffer
+        tracker.alloc_raw(Category::OptimizerStates, shard_len * 4);
+        let mode = match algo {
+            OptAlgo::Adam => {
+                let m: Vec<Vec<f32>> = ranges.iter().map(|r| vec![0.0; r.len()]).collect();
+                let v = m.clone();
+                tracker.alloc_raw(Category::OptimizerStates, shard_len * 8);
+                ZooShardMode::Adam { m, v, hyper, backend: rule_backend }
+            }
+            _ => ZooShardMode::Replicated(ZooStates::new(algo, spec, hyper, rule_backend, tracker)),
+        };
+        Self { ranges, acc, fold, mode }
+    }
+
+    fn begin_step(&mut self) {
+        for a in &mut self.acc {
+            a.fill(0.0);
+        }
+    }
+
+    /// Linear fold of one reduce-scattered (already rank-averaged) shard
+    /// gradient — same bits for any micro-batch split.
+    fn integrate(&mut self, layer: usize, shard_grad: &[f32], gscale: f32) -> Result<()> {
+        self.fold.grad_acc(&mut self.acc[layer], shard_grad, gscale)
+    }
+}
+
+/// ZeRO-S1 + zoo rule: per-micro-batch reduce-scatter into the sharded
+/// accumulator; rule apply at mini-batch end (see [`ZooShard`]).
+fn worker_zoo<C: Collective>(
+    lib: Arc<Library>,
+    spec: Zero1Spec,
+    algo: OptAlgo,
+    comm: C,
+) -> Result<WorkerOut> {
+    let n = spec.cfg.accum_steps;
+    let m = comm.world();
+    let tracker = MemoryTracker::new();
+    let mut trainer =
+        Trainer::with_optimizer(lib.clone(), spec.cfg.clone(), tracker.clone(), Box::new(NullOpt))?;
+    let hyper = Hyper::from_manifest(lib.manifest());
+    let mut shard = ZooShard::new(
+        algo,
+        trainer.spec(),
+        comm.rank(),
+        comm.world(),
+        hyper,
+        make_backend(&spec.cfg, &lib)?,
+        make_backend(&spec.cfg, &lib)?,
+        &tracker,
+    );
+    let h = trainer.spec().hyper.clone();
+    let mut corpus =
+        MarkovCorpus::new(h.vocab, spec.data_seed, 1_000_003 * (comm.rank() as u64 + 1));
+
+    let gscale = 1.0 / n as f32;
+    let inv_m = 1.0 / m as f32;
+    let async_issue = spec.async_issue.unwrap_or(false);
+    let bucket_bytes = spec.bucket_bytes.unwrap_or(0);
+
+    let mut losses = Vec::new();
+    for _ in 0..spec.steps {
+        let t = trainer.step() + 1;
+        shard.begin_step();
+        let mbs = corpus.minibatch(n, h.microbatch, h.seq);
+        let mut loss_sum = 0.0f64;
+        for mb in &mbs {
+            let loss = if async_issue {
+                let ranges = shard.ranges.clone();
+                let shard = &mut shard;
+                microbatch_async(
+                    &mut trainer,
+                    mb,
+                    &comm,
+                    &ranges,
+                    &mut |layer, g| shard.integrate(layer, g, gscale),
+                    &tracker,
+                    bucket_bytes,
+                    inv_m,
+                )?
+            } else {
+                let shard = &mut shard;
+                let comm_ref = &comm;
+                let tracker_ref = &tracker;
+                let mut sink = |layer: usize, grad: &[f32]| -> Result<()> {
+                    let _w = tracker_ref.alloc(Category::Workspace, grad.len() * 4);
+                    let mut buf = grad.to_vec();
+                    let own = comm_ref.reduce_scatter_sum(&mut buf)?;
+                    debug_assert_eq!(own, shard.ranges[layer]);
+                    let mut g: Vec<f32> = buf[own].to_vec();
+                    host_math::scale(&mut g, inv_m); // sum -> mean over ranks
+                    shard.integrate(layer, &g, gscale)
+                };
+                trainer.accumulate_minibatch_sink(std::slice::from_ref(mb), &mut sink)?
+            };
+            loss_sum += loss as f64;
+        }
+        let lr = spec.cfg.lr.at(t);
+        let n_layers = trainer.spec().layers.len();
+        for l in 0..n_layers {
+            let range = shard.ranges[l].clone();
+            match &mut shard.mode {
+                ZooShardMode::Adam { m, v, hyper, backend } => {
+                    let (bc1, bc2) = hyper.bias_corrections(t);
+                    let flat = &mut trainer.params_mut()[l].flat;
+                    let mut shard_p: Vec<f32> = flat[range.clone()].to_vec();
+                    backend.adam_full(
+                        &mut shard_p,
+                        &mut m[l],
+                        &mut v[l],
+                        &shard.acc[l],
+                        lr,
+                        bc1,
+                        bc2,
+                    )?;
+                    flat[range].copy_from_slice(&shard_p);
+                    comm.all_gather_owned(flat)?;
+                }
+                ZooShardMode::Replicated(states) => {
+                    // gather the accumulator shards back into the full
+                    // mean gradient; every rank then applies the same
+                    // full-tensor rule on replicated parameters
+                    let flat_len = trainer.spec().layers[l].flat_len;
+                    let _w = tracker.alloc(Category::Workspace, flat_len * 4);
+                    let mut full = vec![0.0f32; flat_len];
+                    full[range].copy_from_slice(&shard.acc[l]);
+                    comm.all_gather_owned(&mut full)?;
+                    let flat = &mut trainer.params_mut()[l].flat;
+                    states.apply_layer(l, flat, &full, t, lr)?;
+                }
+            }
+        }
+        trainer.advance_step();
+
+        let mut l = vec![(loss_sum / n as f64) as f32];
+        comm.all_reduce_mean(&mut l)?;
+        losses.push(l[0]);
+    }
+
+    let mem = snapshot(&trainer, &tracker);
+    Ok(WorkerOut {
+        losses,
+        params: trainer.params().iter().map(|p| p.flat.clone()).collect(),
+        mem,
+    })
+}
+
 /// Per-rank context of the serial ZeRO simulator.
 struct SerialRank {
     trainer: Trainer,
@@ -584,6 +808,9 @@ fn run_zero_serial(
     topo: Topology,
     tpr: usize,
 ) -> Result<Zero1Report> {
+    if let Some(algo) = lib.executor().opt_algo() {
+        return run_zero_serial_zoo(lib, spec, topo, tpr, algo);
+    }
     let m = spec.cfg.workers;
     let n = spec.cfg.accum_steps;
     let stats = Arc::new(CommStats::default());
@@ -730,6 +957,194 @@ fn run_zero_serial(
             .enumerate()
         {
             ensure!(a == b, "rank {r} layer {l} diverged after all-gather");
+        }
+    }
+    let per_rank_memory: Vec<MemorySnapshot> =
+        ranks.iter().map(|rc| snapshot(&rc.trainer, &rc.tracker)).collect();
+
+    Ok(Zero1Report {
+        losses,
+        final_params,
+        comm_bytes: stats.bytes(),
+        comm_ops: stats.op_count(),
+        elapsed_s: t0.elapsed().as_secs_f64(),
+        memory: per_rank_memory[0].tracker,
+        per_rank_memory,
+        engine: CollectiveEngine::Serial,
+    })
+}
+
+/// Per-rank context of the serial zoo simulator.
+struct SerialZooRank {
+    trainer: Trainer,
+    shard: ZooShard,
+    corpus: MarkovCorpus,
+    tracker: MemoryTracker,
+}
+
+/// The serial ZeRO zoo simulator — bit-for-bit oracle for [`worker_zoo`]:
+/// the same production-order reduce-scatter + shard fold per micro-batch,
+/// the same per-layer apply (shard Adam + param gather, or accumulator
+/// gather + replicated rule).
+fn run_zero_serial_zoo(
+    lib: Arc<Library>,
+    spec: Zero1Spec,
+    topo: Topology,
+    tpr: usize,
+    algo: OptAlgo,
+) -> Result<Zero1Report> {
+    let m = spec.cfg.workers;
+    let n = spec.cfg.accum_steps;
+    let stats = Arc::new(CommStats::default());
+    let t0 = Instant::now();
+
+    let mut ranks = Vec::with_capacity(m);
+    for r in 0..m {
+        let rlib = lib.fork_with_threads(tpr);
+        let tracker = MemoryTracker::new();
+        let trainer = Trainer::with_optimizer(
+            rlib.clone(),
+            spec.cfg.clone(),
+            tracker.clone(),
+            Box::new(NullOpt),
+        )?;
+        let hy = Hyper::from_manifest(rlib.manifest());
+        let shard = ZooShard::new(
+            algo,
+            trainer.spec(),
+            r,
+            m,
+            hy,
+            make_backend(&spec.cfg, &rlib)?,
+            make_backend(&spec.cfg, &rlib)?,
+            &tracker,
+        );
+        let h = trainer.spec().hyper.clone();
+        let corpus = MarkovCorpus::new(h.vocab, spec.data_seed, 1_000_003 * (r as u64 + 1));
+        ranks.push(SerialZooRank { trainer, shard, corpus, tracker });
+    }
+    let h = ranks[0].trainer.spec().hyper.clone();
+    let n_layers = ranks[0].trainer.spec().layers.len();
+    let gscale = 1.0 / n as f32;
+    let inv_m = 1.0 / m as f32;
+
+    let mut losses = Vec::new();
+    for _ in 0..spec.steps {
+        let t = ranks[0].trainer.step() + 1;
+        let mbs: Vec<Vec<MicroBatch>> = ranks
+            .iter_mut()
+            .map(|rc| rc.corpus.minibatch(n, h.microbatch, h.seq))
+            .collect();
+        for rc in ranks.iter_mut() {
+            rc.shard.begin_step();
+        }
+        let mut sums = vec![0.0f64; m];
+        for i in 0..n {
+            // every rank's i-th micro-batch, gradients buffered in
+            // production order (the concurrent sink issues the
+            // reduce-scatter at exactly these points)
+            let mut grads: Vec<Vec<(usize, Vec<f32>)>> = Vec::with_capacity(m);
+            for (r, rc) in ranks.iter_mut().enumerate() {
+                let mut buf: Vec<(usize, Vec<f32>)> = Vec::new();
+                let loss = rc.trainer.accumulate_minibatch_sink(
+                    std::slice::from_ref(&mbs[r][i]),
+                    &mut |layer, grad| {
+                        buf.push((layer, grad.to_vec()));
+                        Ok(())
+                    },
+                )?;
+                sums[r] += loss as f64;
+                grads.push(buf);
+            }
+            let k_count = grads[0].len();
+            for g in &grads {
+                ensure!(g.len() == k_count, "ranks produced different gradient counts");
+            }
+            for k in 0..k_count {
+                let layer = grads[0][k].0;
+                let mut bufs: Vec<Vec<f32>> = grads.iter().map(|g| g[k].1.clone()).collect();
+                let owned = serial::reduce_scatter_sum(topo, &mut bufs, &stats)?;
+                for (rc, (b, own)) in ranks.iter_mut().zip(bufs.iter().zip(owned.iter())) {
+                    let _w = rc.tracker.alloc(Category::Workspace, b.len() * 4);
+                    debug_assert_eq!(own.clone(), rc.shard.ranges[layer]);
+                    let mut g: Vec<f32> = b[own.clone()].to_vec();
+                    host_math::scale(&mut g, inv_m);
+                    rc.shard.integrate(layer, &g, gscale)?;
+                }
+            }
+        }
+        let mut rank_loss = vec![0.0f32; m];
+        for (r, loss) in rank_loss.iter_mut().enumerate() {
+            *loss = (sums[r] / n as f64) as f32;
+        }
+
+        let lr = spec.cfg.lr.at(t);
+        for l in 0..n_layers {
+            if matches!(ranks[0].shard.mode, ZooShardMode::Replicated(_)) {
+                // gather accumulator shards into the full mean gradient,
+                // then every rank applies the same replicated rule
+                let flat_len = ranks[0].trainer.spec().layers[l].flat_len;
+                let mut fulls: Vec<Vec<f32>> = ranks
+                    .iter()
+                    .map(|rc| {
+                        let mut full = vec![0.0f32; flat_len];
+                        full[rc.shard.ranges[l].clone()].copy_from_slice(&rc.shard.acc[l]);
+                        full
+                    })
+                    .collect();
+                serial::all_gather_owned(&mut fulls, &stats)?;
+                for (rc, full) in ranks.iter_mut().zip(&fulls) {
+                    let _w = rc.tracker.alloc(Category::Workspace, flat_len * 4);
+                    let flat = &mut rc.trainer.params_mut()[l].flat;
+                    if let ZooShardMode::Replicated(states) = &mut rc.shard.mode {
+                        states.apply_layer(l, flat, full, t, lr)?;
+                    }
+                }
+            } else {
+                for rc in ranks.iter_mut() {
+                    let range = rc.shard.ranges[l].clone();
+                    if let ZooShardMode::Adam { m, v, hyper, backend } = &mut rc.shard.mode {
+                        let (bc1, bc2) = hyper.bias_corrections(t);
+                        let flat = &mut rc.trainer.params_mut()[l].flat;
+                        let mut shard_p: Vec<f32> = flat[range.clone()].to_vec();
+                        backend.adam_full(
+                            &mut shard_p,
+                            &mut m[l],
+                            &mut v[l],
+                            &rc.shard.acc[l],
+                            lr,
+                            bc1,
+                            bc2,
+                        )?;
+                        flat[range].copy_from_slice(&shard_p);
+                    }
+                }
+                let mut flats: Vec<Vec<f32>> =
+                    ranks.iter().map(|rc| rc.trainer.params()[l].flat.clone()).collect();
+                serial::all_gather_owned(&mut flats, &stats)?;
+                for (rc, f) in ranks.iter_mut().zip(&flats) {
+                    rc.trainer.params_mut()[l].flat.copy_from_slice(f);
+                }
+            }
+        }
+        for rc in ranks.iter_mut() {
+            rc.trainer.advance_step();
+        }
+
+        let mut lbufs: Vec<Vec<f32>> = rank_loss.iter().map(|&l| vec![l]).collect();
+        serial::all_reduce_mean(topo, &mut lbufs, &stats)?;
+        losses.push(lbufs[0][0]);
+    }
+
+    let final_params: Vec<Vec<f32>> =
+        ranks[0].trainer.params().iter().map(|p| p.flat.clone()).collect();
+    for (r, rc) in ranks.iter().enumerate().skip(1) {
+        for (l, (a, b)) in final_params
+            .iter()
+            .zip(rc.trainer.params().iter().map(|p| &p.flat))
+            .enumerate()
+        {
+            ensure!(a == b, "rank {r} layer {l} diverged in the zoo flow");
         }
     }
     let per_rank_memory: Vec<MemorySnapshot> =

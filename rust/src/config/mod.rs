@@ -20,6 +20,8 @@ pub enum OptimizerKind {
     Adafactor,
     /// Memory-efficient comparator (Table 2): cover-based second moments.
     Sm3,
+    /// Memory-efficient comparator (Table 2): block-wise learning rates.
+    AdamMini,
     /// §5 extension: optimizer accumulation applied to momentum SGD.
     SgdmA,
 }
@@ -31,8 +33,9 @@ impl OptimizerKind {
             "adam" | "adamga" | "adam-ga" | "ga" => Self::AdamGA,
             "adafactor" => Self::Adafactor,
             "sm3" => Self::Sm3,
+            "adam_mini" | "adam-mini" | "adammini" => Self::AdamMini,
             "sgdma" | "sgdm" => Self::SgdmA,
-            _ => bail!("unknown optimizer '{s}' (adama|adamga|adafactor|sm3|sgdma)"),
+            _ => bail!("unknown optimizer '{s}' (adama|adamga|adafactor|sm3|adam_mini|sgdma)"),
         })
     }
 
@@ -42,7 +45,22 @@ impl OptimizerKind {
             Self::AdamGA => "adamga",
             Self::Adafactor => "adafactor",
             Self::Sm3 => "sm3",
+            Self::AdamMini => "adam_mini",
             Self::SgdmA => "sgdma",
+        }
+    }
+
+    /// The exec-layer [`crate::runtime::OptAlgo`] this config kind maps to,
+    /// for kinds served by the zoo (`None` for AdamA / SGDM-A, which keep
+    /// their dedicated state-resident implementations).
+    pub fn zoo_algo(self) -> Option<crate::runtime::OptAlgo> {
+        use crate::runtime::OptAlgo;
+        match self {
+            Self::AdamGA => Some(OptAlgo::Adam),
+            Self::Adafactor => Some(OptAlgo::Adafactor),
+            Self::Sm3 => Some(OptAlgo::Sm3),
+            Self::AdamMini => Some(OptAlgo::AdamMini),
+            Self::AdamA | Self::SgdmA => None,
         }
     }
 }
@@ -240,6 +258,8 @@ mod tests {
         assert_eq!(OptimizerKind::parse("adama").unwrap(), OptimizerKind::AdamA);
         assert_eq!(OptimizerKind::parse("GA").unwrap(), OptimizerKind::AdamGA);
         assert_eq!(OptimizerKind::parse("adafactor").unwrap(), OptimizerKind::Adafactor);
+        assert_eq!(OptimizerKind::parse("adam-mini").unwrap(), OptimizerKind::AdamMini);
+        assert_eq!(OptimizerKind::parse("adam_mini").unwrap().name(), "adam_mini");
         assert!(OptimizerKind::parse("sgd").is_err());
     }
 

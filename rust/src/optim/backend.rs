@@ -178,6 +178,60 @@ impl UpdateBackend {
             }
         }
     }
+
+    // ---- optimizer zoo (ADAMA_OPT) ----
+
+    /// Adafactor parameter step over one row (or a 1-D tensor with
+    /// `rfac = 1.0`): `p -= lr·g/(√(rfac·c)+eps)`.
+    pub fn fac_update(
+        &mut self,
+        p: &mut [f32],
+        g: &[f32],
+        c: &[f32],
+        lr: f32,
+        rfac: f32,
+    ) -> Result<()> {
+        match self {
+            Self::Kernel(r) => r.fac_update(p, g, c, lr, rfac),
+            Self::Host(h) => {
+                host_math::fac_update(p, g, c, lr, rfac, h.eps);
+                Ok(())
+            }
+        }
+    }
+
+    /// SM3 covered-moment step over one row (or a 1-D tensor with
+    /// `r = +inf`): `nu = min(r, c) + g²; p -= lr·g/(√nu+eps)`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn sm3_update(
+        &mut self,
+        p: &mut [f32],
+        nu: &mut [f32],
+        g: &[f32],
+        c: &[f32],
+        lr: f32,
+        r: f32,
+    ) -> Result<()> {
+        match self {
+            Self::Kernel(k) => k.sm3_update(p, nu, g, c, lr, r),
+            Self::Host(h) => {
+                host_math::sm3_update(p, nu, g, c, lr, r, h.eps);
+                Ok(())
+            }
+        }
+    }
+
+    /// Adam-mini parameter step over one block with a shared learning
+    /// rate: `p -= scale·(m/bc1)`.
+    pub fn mini_update(&mut self, p: &mut [f32], m: &[f32], scale: f32, bc1: f32) -> Result<()> {
+        match self {
+            Self::Kernel(r) => r.mini_update(p, m, scale, bc1),
+            Self::Host(_) => {
+                host_math::mini_update(p, m, scale, bc1);
+                Ok(())
+            }
+        }
+    }
 }
 
 /// Chunked execution of the `common/*` optimizer kernel programs (backend
@@ -194,6 +248,9 @@ pub struct ChunkRunner {
     sgdm_dacc: Arc<dyn Program>,
     sgdm_acc_prog: Arc<dyn Program>,
     sgdm_upd: Arc<dyn Program>,
+    fac_upd: Arc<dyn Program>,
+    sm3_upd: Arc<dyn Program>,
+    mini_upd: Arc<dyn Program>,
     // reusable zero-padded scratch (one per operand slot)
     scratch: Vec<Vec<f32>>,
 }
@@ -217,6 +274,9 @@ impl ChunkRunner {
             sgdm_dacc: lib.get(&format!("common/sgdm_decay_acc_{chunk}"))?,
             sgdm_acc_prog: lib.get(&format!("common/sgdm_acc_{chunk}"))?,
             sgdm_upd: lib.get(&format!("common/sgdm_update_{chunk}"))?,
+            fac_upd: lib.get(&format!("common/fac_update_{chunk}"))?,
+            sm3_upd: lib.get(&format!("common/sm3_update_{chunk}"))?,
+            mini_upd: lib.get(&format!("common/mini_update_{chunk}"))?,
             scratch: vec![vec![0.0; chunk]; 4],
             chunk,
         })
@@ -458,6 +518,68 @@ impl ChunkRunner {
         }
         Ok(())
     }
+
+    // ---- optimizer zoo (ADAMA_OPT) ----
+    // Rows chunk exactly like flat buffers: the per-row scalars (rfac, r,
+    // scale) are constant across the row, so any chunk split is safe, and
+    // zero-padded tails map to zero outputs in every zoo kernel.
+
+    pub fn fac_update(
+        &mut self,
+        p: &mut [f32],
+        g: &[f32],
+        c: &[f32],
+        lr: f32,
+        rfac: f32,
+    ) -> Result<()> {
+        for (off, len) in chunk_ranges(p.len(), self.chunk) {
+            let args = [
+                self.chunk_value(0, p, off, len)?,
+                self.chunk_value(1, g, off, len)?,
+                self.chunk_value(2, c, off, len)?,
+                lit_f32(&[lr, rfac], &[2])?,
+            ];
+            let out = self.fac_upd.run_v(&args)?;
+            crate::runtime::copy_chunk(&out[0], &mut p[off..off + len])?;
+        }
+        Ok(())
+    }
+
+    pub fn sm3_update(
+        &mut self,
+        p: &mut [f32],
+        nu: &mut [f32],
+        g: &[f32],
+        c: &[f32],
+        lr: f32,
+        r: f32,
+    ) -> Result<()> {
+        for (off, len) in chunk_ranges(p.len(), self.chunk) {
+            let args = [
+                self.chunk_value(0, p, off, len)?,
+                self.chunk_value(1, g, off, len)?,
+                self.chunk_value(2, c, off, len)?,
+                lit_f32(&[lr, r], &[2])?,
+            ];
+            let out = self.sm3_upd.run_v(&args)?;
+            crate::runtime::copy_chunk(&out[0], &mut p[off..off + len])?;
+            crate::runtime::copy_chunk(&out[1], &mut nu[off..off + len])?;
+        }
+        Ok(())
+    }
+
+    pub fn mini_update(&mut self, p: &mut [f32], m: &[f32], scale: f32, bc1: f32) -> Result<()> {
+        for (off, len) in chunk_ranges(p.len(), self.chunk) {
+            let args = [
+                self.chunk_value(0, p, off, len)?,
+                self.chunk_value(1, m, off, len)?,
+                lit_f32(&[scale, bc1], &[2])?,
+            ];
+            let out = self.mini_upd.run_v(&args)?;
+            crate::runtime::copy_chunk(&out[0], &mut p[off..off + len])?;
+        }
+        Ok(())
+    }
 }
 
 /// Zero-pad-stage a tail slice into a scratch chunk buffer.
@@ -500,5 +622,39 @@ mod tests {
     fn rejects_unknown_chunk_size() {
         let lib = Library::host();
         assert!(ChunkRunner::new(lib, 12345).is_err());
+    }
+
+    #[test]
+    fn zoo_runner_matches_host_loops_including_tails() {
+        let lib = Library::host();
+        let chunk = *lib.manifest().chunk_sizes.first().unwrap();
+        let eps = lib.manifest().hyper.eps as f32;
+        let n = chunk + chunk / 2 + 7;
+        let mut runner = ChunkRunner::new(lib, chunk).unwrap();
+
+        let mut rng = crate::tensor::Rng::new(11);
+        let p0: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let g: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let c: Vec<f32> = (0..n).map(|_| rng.normal().abs()).collect();
+        let m: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+
+        let mut pk = p0.clone();
+        runner.fac_update(&mut pk, &g, &c, 1e-2, 1.25).unwrap();
+        let mut ph = p0.clone();
+        host_math::fac_update(&mut ph, &g, &c, 1e-2, 1.25, eps);
+        assert_eq!(pk, ph, "fac_update kernel path must match host math bitwise");
+
+        let (mut pk, mut nuk) = (p0.clone(), vec![0.0f32; n]);
+        runner.sm3_update(&mut pk, &mut nuk, &g, &c, 1e-2, 0.75).unwrap();
+        let (mut ph, mut nuh) = (p0.clone(), vec![0.0f32; n]);
+        host_math::sm3_update(&mut ph, &mut nuh, &g, &c, 1e-2, 0.75, eps);
+        assert_eq!(pk, ph, "sm3_update kernel path must match host math bitwise");
+        assert_eq!(nuk, nuh);
+
+        let mut pk = p0.clone();
+        runner.mini_update(&mut pk, &m, 3e-3, 0.1).unwrap();
+        let mut ph = p0;
+        host_math::mini_update(&mut ph, &m, 3e-3, 0.1);
+        assert_eq!(pk, ph, "mini_update kernel path must match host math bitwise");
     }
 }

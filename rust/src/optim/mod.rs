@@ -7,24 +7,20 @@
 //!
 //! * [`AdamA`] integrates into (m, v) — the gradient buffer can be freed
 //!   immediately (the paper's contribution);
-//! * [`AdamGA`] copies into a full-model accumulator — the baseline whose
-//!   gradient memory AdamA eliminates;
-//! * [`Adafactor`] / [`Sm3`] are the Table-2 comparators that shrink
-//!   optimizer states instead (GA-style gradient handling).
+//! * [`ZooOpt`] serves the comparator family (adam / adafactor / sm3 /
+//!   adam_mini) behind the exec-layer [`crate::runtime::OptStep`] seam:
+//!   built from `cfg.optimizer` it keeps the GA-style persistent gradient
+//!   accumulator (the Table-2 baselines); built through the `ADAMA_OPT`
+//!   executor override the accumulator becomes optimizer state and the
+//!   rule composes with the paper's release-early trick.
 
-mod adafactor;
 mod adama_opt;
-mod adamga;
 mod backend;
-mod sgdma;
-mod sm3;
+mod zoo;
 
-pub use adafactor::Adafactor;
 pub use adama_opt::AdamA;
-pub use adamga::AdamGA;
 pub use backend::{host_math, ChunkRunner, UpdateBackend};
-pub use sgdma::SgdmA;
-pub use sm3::Sm3;
+pub use zoo::{make_rule, SgdmA, ZooOpt, ZooStates};
 
 use std::sync::Arc;
 
@@ -99,9 +95,10 @@ pub trait Optimizer: Send {
     /// scheme decays by `M·β₂` instead of `β₂` (Eq. 6). Default 1.
     fn set_v_decay_factor(&mut self, _factor: f32) {}
 
-    /// Downcast for the DDP gradient-all-reduce baseline (needs the GA
-    /// accumulator buffers).
-    fn as_adamga_mut(&mut self) -> Option<&mut AdamGA> {
+    /// Per-layer gradient-accumulator access for the DDP
+    /// gradient-all-reduce baseline and ZeRO GA flows; `None` for
+    /// optimizers that hold no persistent accumulator (AdamA, SGDM-A).
+    fn grad_acc_mut(&mut self) -> Option<&mut [Vec<f32>]> {
         None
     }
 }
@@ -134,6 +131,12 @@ impl Optimizer for NullOpt {
 
 /// Build the optimizer selected by `cfg`, registering its state with
 /// `tracker`.
+///
+/// Precedence: an exec-layer override (`ADAMA_OPT`, `Library::host_with_opt`
+/// or `fork_with_opt`) wins over `cfg.optimizer` and builds the zoo rule in
+/// its state-resident composition with the paper's trick; otherwise the
+/// config kind decides, with the zoo kinds metered GA-style (Table-2
+/// comparator baselines).
 pub fn build_optimizer(
     cfg: &TrainConfig,
     spec: &ModelSpec,
@@ -141,24 +144,30 @@ pub fn build_optimizer(
     tracker: &MemoryTracker,
 ) -> Result<Box<dyn Optimizer>> {
     let hyper = Hyper::from_manifest(lib.manifest());
-    let backend = match cfg.backend {
-        OptimBackend::Kernel => UpdateBackend::kernel(lib.clone(), cfg.chunk)?,
-        OptimBackend::Host => UpdateBackend::host(hyper),
+    let backend = || -> Result<UpdateBackend> {
+        Ok(match cfg.backend {
+            OptimBackend::Kernel => UpdateBackend::kernel(lib.clone(), cfg.chunk)?,
+            OptimBackend::Host => UpdateBackend::host(hyper),
+        })
     };
+    if let Some(algo) = lib.executor().opt_algo() {
+        return Ok(Box::new(ZooOpt::new(algo, spec, hyper, backend()?, backend()?, true, tracker)));
+    }
     Ok(match cfg.optimizer {
         OptimizerKind::AdamA => Box::new(
-            AdamA::new(spec, hyper, backend, tracker).with_weight_decay(cfg.weight_decay),
+            AdamA::new(spec, hyper, backend()?, tracker).with_weight_decay(cfg.weight_decay),
         ),
-        OptimizerKind::AdamGA => Box::new(AdamGA::new(spec, hyper, backend, tracker)),
-        OptimizerKind::Adafactor => Box::new(Adafactor::new(spec, hyper, tracker)),
-        OptimizerKind::Sm3 => Box::new(Sm3::new(spec, tracker)),
         OptimizerKind::SgdmA => Box::new(SgdmA::new(
             spec,
             cfg.momentum,
             cfg.weight_decay,
-            backend,
+            backend()?,
             tracker,
         )),
+        kind => {
+            let algo = kind.zoo_algo().expect("remaining kinds are zoo-served");
+            Box::new(ZooOpt::new(algo, spec, hyper, backend()?, backend()?, false, tracker))
+        }
     })
 }
 

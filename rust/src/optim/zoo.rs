@@ -1,0 +1,752 @@
+//! The optimizer zoo behind the exec-layer [`OptStep`] seam, plus the
+//! SGDM-A §5 extension.
+//!
+//! One [`ZooOpt`] drives all four `ADAMA_OPT` rules (adam, adafactor,
+//! sm3, adam_mini). The mini-batch flow is the paper's Algorithm-1 shape
+//! with a **linear** fold: each layer's micro-batch gradient is folded
+//! into a state-resident accumulator the moment it exists
+//! (`acc += gscale·g` through the chunked `grad_acc` kernel) and the
+//! gradient buffer is released; the rule's nonlinear moment math runs
+//! once per mini-batch in [`OptStep::apply`]. Because the fold is linear
+//! and `gscale = 1/M` is a power of two for M ∈ {1,2,4,8}, an M-way
+//! micro-batch split is bit-for-bit identical to a single fold of the
+//! summed gradient — the invariant `rust/tests/optzoo.rs` asserts per
+//! rule against a serial scalar oracle.
+//!
+//! Metering is dual, mirroring the paper's Table-2 framing:
+//!
+//! * built from `cfg.optimizer` (the GA-style comparator baselines) the
+//!   accumulator is a persistent *gradient* buffer
+//!   (`Category::Gradients`, `persistent_grad_bytes = P·4`) — exactly the
+//!   memory the seed-era `AdamGA`/`Adafactor`/`Sm3` structs reported;
+//! * built through the `ADAMA_OPT` seam (`state_resident = true`) the
+//!   accumulator is optimizer state (`Category::OptimizerStates`,
+//!   `persistent_grad_bytes = 0`) — the rule *composed with* the paper's
+//!   trick. The update math is identical either way.
+
+use anyhow::Result;
+
+use super::{Hyper, Optimizer, UpdateBackend};
+use crate::config::OptimizerKind;
+use crate::memory::{Category, MemoryTracker};
+use crate::model::{LayerParams, ModelSpec, ParamView};
+use crate::runtime::{OptAlgo, OptStep};
+
+/// Adafactor's additive regulariser on squared gradients (ε₁ in
+/// Shazeer & Stern, Alg. 4).
+const EPS1: f32 = 1e-30;
+
+/// (rows, cols) geometry for a tensor; `cols == 0` encodes 1-D.
+fn dims(view: &ParamView) -> (usize, usize) {
+    if view.shape.len() == 2 {
+        (view.shape[0], view.shape[1])
+    } else {
+        (view.elements(), 0)
+    }
+}
+
+/// Build the [`OptStep`] rule for `algo`, owning its update backend.
+pub fn make_rule(algo: OptAlgo, hyper: Hyper, backend: UpdateBackend) -> Box<dyn OptStep> {
+    match algo {
+        OptAlgo::Adam => Box::new(AdamRule { backend, hyper }),
+        OptAlgo::Adafactor => Box::new(AdafactorRule { backend, hyper }),
+        OptAlgo::Sm3 => Box::new(Sm3Rule { backend }),
+        OptAlgo::AdamMini => Box::new(AdamMiniRule { backend, hyper }),
+    }
+}
+
+/// Standard Adam on the accumulated mean gradient: the fused
+/// `adam_full` kernel per tensor. Element-wise, so the per-tensor walk
+/// is bit-identical to the seed's per-layer flat application.
+struct AdamRule {
+    backend: UpdateBackend,
+    hyper: Hyper,
+}
+
+impl OptStep for AdamRule {
+    fn algo(&self) -> OptAlgo {
+        OptAlgo::Adam
+    }
+
+    fn apply(
+        &mut self,
+        p: &mut [f32],
+        acc: &[f32],
+        state: &mut [Vec<f32>],
+        _rows: usize,
+        _cols: usize,
+        step: u64,
+        lr: f32,
+    ) -> Result<()> {
+        let (bc1, bc2) = self.hyper.bias_corrections(step);
+        let (m, v) = state.split_at_mut(1);
+        self.backend.adam_full(p, &mut m[0], &mut v[0], acc, lr, bc1, bc2)
+    }
+}
+
+/// Adafactor (β₁ = 0 memory-saving config): factored second moments for
+/// matrices, full moment for vectors, with the Shazeer-Stern `t^-0.8`
+/// decay schedule. The O(r+c) statistic folds are serial; the O(r·c)
+/// parameter step runs through the chunked `fac_update` kernel row by
+/// row (the row factor is constant across a row).
+struct AdafactorRule {
+    backend: UpdateBackend,
+    hyper: Hyper,
+}
+
+impl OptStep for AdafactorRule {
+    fn algo(&self) -> OptAlgo {
+        OptAlgo::Adafactor
+    }
+
+    fn apply(
+        &mut self,
+        p: &mut [f32],
+        acc: &[f32],
+        state: &mut [Vec<f32>],
+        rows: usize,
+        cols: usize,
+        step: u64,
+        lr: f32,
+    ) -> Result<()> {
+        let b2 = 1.0 - (step as f32).powf(-0.8).min(1.0 - self.hyper.beta2);
+        if cols > 0 {
+            let (rv, cv) = state.split_at_mut(1);
+            let (rv, cv) = (&mut rv[0], &mut cv[0]);
+            for i in 0..rows {
+                let mean = (0..cols)
+                    .map(|j| acc[i * cols + j] * acc[i * cols + j] + EPS1)
+                    .sum::<f32>()
+                    / cols as f32;
+                rv[i] = b2 * rv[i] + (1.0 - b2) * mean;
+            }
+            for j in 0..cols {
+                let mean = (0..rows)
+                    .map(|i| acc[i * cols + j] * acc[i * cols + j] + EPS1)
+                    .sum::<f32>()
+                    / rows as f32;
+                cv[j] = b2 * cv[j] + (1.0 - b2) * mean;
+            }
+            let row_mean = rv.iter().sum::<f32>().max(EPS1) / rows as f32;
+            for i in 0..rows {
+                let rfac = rv[i] / row_mean;
+                let span = i * cols..(i + 1) * cols;
+                self.backend.fac_update(&mut p[span.clone()], &acc[span], cv, lr, rfac)?;
+            }
+        } else {
+            let v = &mut state[0];
+            for i in 0..v.len() {
+                v[i] = b2 * v[i] + (1.0 - b2) * (acc[i] * acc[i] + EPS1);
+            }
+            // rfac = 1.0 multiplies exactly: the 1-D step shares the kernel
+            self.backend.fac_update(p, acc, v, lr, 1.0)?;
+        }
+        Ok(())
+    }
+}
+
+/// SM3-II cover sets: the per-element moment is reconstructed as
+/// `min(row_i, col_j) + g²` by the `sm3_update` kernel one row at a time
+/// (row accumulator constant per row); the cover maxes fold serially.
+/// Vectors fall back to full AdaGrad via `r = +inf`
+/// (`min(inf, v) + g² = v + g²`, then the state adopts the fresh `nu`).
+struct Sm3Rule {
+    backend: UpdateBackend,
+}
+
+impl OptStep for Sm3Rule {
+    fn algo(&self) -> OptAlgo {
+        OptAlgo::Sm3
+    }
+
+    fn apply(
+        &mut self,
+        p: &mut [f32],
+        acc: &[f32],
+        state: &mut [Vec<f32>],
+        rows: usize,
+        cols: usize,
+        _step: u64,
+        lr: f32,
+    ) -> Result<()> {
+        if cols > 0 {
+            let (rv, cv) = state.split_at_mut(1);
+            let (rv, cv) = (&mut rv[0], &mut cv[0]);
+            let mut new_rows = vec![0.0f32; rows];
+            let mut new_cols = vec![0.0f32; cols];
+            let mut nu = vec![0.0f32; cols];
+            for i in 0..rows {
+                let span = i * cols..(i + 1) * cols;
+                self.backend.sm3_update(&mut p[span.clone()], &mut nu, &acc[span], cv, lr, rv[i])?;
+                for j in 0..cols {
+                    new_rows[i] = new_rows[i].max(nu[j]);
+                    new_cols[j] = new_cols[j].max(nu[j]);
+                }
+            }
+            rv.copy_from_slice(&new_rows);
+            cv.copy_from_slice(&new_cols);
+        } else {
+            let v = &mut state[0];
+            let mut nu = vec![0.0f32; v.len()];
+            self.backend.sm3_update(p, &mut nu, acc, v, lr, f32::INFINITY)?;
+            v.copy_from_slice(&nu);
+        }
+        Ok(())
+    }
+}
+
+/// Adam-mini: full first moment, one shared second-moment scalar per
+/// block (per matrix row; one per vector). The momentum fold reuses the
+/// `sgdm_decay_acc` kernel (`m = β₁·m + (1-β₁)·g`); the tiny block
+/// statistics are serial; the parameter step runs through `mini_update`
+/// with the block's precomputed learning-rate scale.
+struct AdamMiniRule {
+    backend: UpdateBackend,
+    hyper: Hyper,
+}
+
+impl AdamMiniRule {
+    fn block_scale(&self, vb: &mut f32, gsq_mean: f32, bc2: f32, lr: f32) -> f32 {
+        let b2 = self.hyper.beta2;
+        *vb = b2 * *vb + (1.0 - b2) * gsq_mean;
+        lr / ((*vb / bc2).sqrt() + self.hyper.eps)
+    }
+}
+
+impl OptStep for AdamMiniRule {
+    fn algo(&self) -> OptAlgo {
+        OptAlgo::AdamMini
+    }
+
+    fn apply(
+        &mut self,
+        p: &mut [f32],
+        acc: &[f32],
+        state: &mut [Vec<f32>],
+        rows: usize,
+        cols: usize,
+        step: u64,
+        lr: f32,
+    ) -> Result<()> {
+        let b1 = self.hyper.beta1;
+        let (m, vb) = state.split_at_mut(1);
+        let (m, vb) = (&mut m[0], &mut vb[0]);
+        self.backend.sgdm_decay_acc(m, acc, 1.0 - b1, b1)?;
+        let (bc1, bc2) = self.hyper.bias_corrections(step);
+        if cols > 0 {
+            for i in 0..rows {
+                let span = i * cols..(i + 1) * cols;
+                let gsq = acc[span.clone()].iter().map(|x| x * x).sum::<f32>() / cols as f32;
+                let scale = self.block_scale(&mut vb[i], gsq, bc2, lr);
+                self.backend.mini_update(&mut p[span.clone()], &m[span], scale, bc1)?;
+            }
+        } else {
+            let gsq = acc.iter().map(|x| x * x).sum::<f32>() / acc.len().max(1) as f32;
+            let scale = self.block_scale(&mut vb[0], gsq, bc2, lr);
+            self.backend.mini_update(p, m, scale, bc1)?;
+        }
+        Ok(())
+    }
+}
+
+/// Per-tensor state buffers for one rule over a whole model — the piece
+/// ZeRO-S1 reuses per rank (replicated sublinear statistics, gathered
+/// accumulator) independently of [`ZooOpt`]'s gradient-side fold.
+pub struct ZooStates {
+    rule: Box<dyn OptStep>,
+    slots: Vec<Vec<TensorSlot>>,
+    state_bytes: usize,
+}
+
+struct TensorSlot {
+    view: ParamView,
+    rows: usize,
+    cols: usize,
+    bufs: Vec<Vec<f32>>,
+}
+
+impl ZooStates {
+    pub fn new(
+        algo: OptAlgo,
+        spec: &ModelSpec,
+        hyper: Hyper,
+        backend: UpdateBackend,
+        tracker: &MemoryTracker,
+    ) -> Self {
+        let rule = make_rule(algo, hyper, backend);
+        let mut state_bytes = 0usize;
+        let slots = spec
+            .layers
+            .iter()
+            .map(|l| {
+                l.params
+                    .iter()
+                    .map(|p| {
+                        let (rows, cols) = dims(p);
+                        let bufs: Vec<Vec<f32>> = algo
+                            .state_lens(rows, cols)
+                            .into_iter()
+                            .map(|n| {
+                                state_bytes += n * 4;
+                                vec![0.0; n]
+                            })
+                            .collect();
+                        TensorSlot { view: p.clone(), rows, cols, bufs }
+                    })
+                    .collect()
+            })
+            .collect();
+        tracker.alloc_raw(Category::OptimizerStates, state_bytes);
+        Self { rule, slots, state_bytes }
+    }
+
+    pub fn algo(&self) -> OptAlgo {
+        self.rule.algo()
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        self.state_bytes
+    }
+
+    /// Apply the rule to every tensor of `layer` from the layer's
+    /// accumulated mean gradient.
+    pub fn apply_layer(
+        &mut self,
+        layer: usize,
+        flat: &mut [f32],
+        acc: &[f32],
+        step: u64,
+        lr: f32,
+    ) -> Result<()> {
+        for slot in &mut self.slots[layer] {
+            let range = slot.view.range.clone();
+            self.rule.apply(
+                &mut flat[range.clone()],
+                &acc[range],
+                &mut slot.bufs,
+                slot.rows,
+                slot.cols,
+                step,
+                lr,
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// The zoo optimizer: linear accumulator fold + per-tensor rule apply.
+pub struct ZooOpt {
+    states: ZooStates,
+    acc: Vec<Vec<f32>>,
+    fold: UpdateBackend,
+    kind: OptimizerKind,
+    state_resident: bool,
+    acc_bytes: usize,
+    t: u64,
+}
+
+impl ZooOpt {
+    /// `fold` drives the per-micro-batch `grad_acc`; `rule_backend` is
+    /// owned by the update rule. `state_resident` picks the metering (see
+    /// the module docs); the update math is identical either way.
+    pub fn new(
+        algo: OptAlgo,
+        spec: &ModelSpec,
+        hyper: Hyper,
+        fold: UpdateBackend,
+        rule_backend: UpdateBackend,
+        state_resident: bool,
+        tracker: &MemoryTracker,
+    ) -> Self {
+        let states = ZooStates::new(algo, spec, hyper, rule_backend, tracker);
+        let acc: Vec<Vec<f32>> = spec.layers.iter().map(|l| vec![0.0; l.flat_len]).collect();
+        let acc_bytes = spec.total_params() * 4;
+        let cat = if state_resident { Category::OptimizerStates } else { Category::Gradients };
+        tracker.alloc_raw(cat, acc_bytes);
+        let kind = match algo {
+            OptAlgo::Adam => OptimizerKind::AdamGA,
+            OptAlgo::Adafactor => OptimizerKind::Adafactor,
+            OptAlgo::Sm3 => OptimizerKind::Sm3,
+            OptAlgo::AdamMini => OptimizerKind::AdamMini,
+        };
+        Self { states, acc, fold, kind, state_resident, acc_bytes, t: 0 }
+    }
+
+    pub fn algo(&self) -> OptAlgo {
+        self.states.algo()
+    }
+}
+
+impl Optimizer for ZooOpt {
+    fn kind(&self) -> OptimizerKind {
+        self.kind
+    }
+
+    fn begin_minibatch(&mut self, t: u64) -> Result<()> {
+        self.t = t;
+        for a in &mut self.acc {
+            a.fill(0.0);
+        }
+        Ok(())
+    }
+
+    fn accumulate(&mut self, layer: usize, grad: &[f32], gscale: f32) -> Result<()> {
+        self.fold.grad_acc(&mut self.acc[layer], grad, gscale)
+    }
+
+    fn apply(&mut self, params: &mut [LayerParams], lr: f32) -> Result<()> {
+        for (l, p) in params.iter_mut().enumerate() {
+            self.states.apply_layer(l, &mut p.flat, &self.acc[l], self.t, lr)?;
+        }
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.states.state_bytes() + if self.state_resident { self.acc_bytes } else { 0 }
+    }
+
+    fn persistent_grad_bytes(&self) -> usize {
+        if self.state_resident {
+            0
+        } else {
+            self.acc_bytes
+        }
+    }
+
+    fn grad_acc_mut(&mut self) -> Option<&mut [Vec<f32>]> {
+        Some(&mut self.acc)
+    }
+}
+
+/// SGDM-A — the paper's §5 generalisation: optimizer accumulation applied
+/// to heavy-ball momentum SGD.
+///
+/// Momentum `u` plays the role of (m, v): at mini-batch start it decays
+/// once (`u ← μ·u`, fused lazily into the first accumulate), each layer's
+/// micro-batch gradient folds in immediately (`u += g/N`) and is released,
+/// and the mini-batch update is `θ ← θ − lr·(u + wd·θ)`. State = 1·P
+/// floats — even cheaper than AdamA — with the same 1/M gradient peak.
+pub struct SgdmA {
+    u: Vec<Vec<f32>>,
+    momentum: f32,
+    weight_decay: f32,
+    backend: UpdateBackend,
+    decay_pending: Vec<bool>,
+    state_bytes: usize,
+}
+
+impl SgdmA {
+    pub fn new(
+        spec: &ModelSpec,
+        momentum: f32,
+        weight_decay: f32,
+        backend: UpdateBackend,
+        tracker: &MemoryTracker,
+    ) -> Self {
+        let u: Vec<Vec<f32>> = spec.layers.iter().map(|l| vec![0.0; l.flat_len]).collect();
+        let state_bytes = spec.total_params() * 4;
+        tracker.alloc_raw(Category::OptimizerStates, state_bytes);
+        let decay_pending = vec![false; u.len()];
+        Self { u, momentum, weight_decay, backend, decay_pending, state_bytes }
+    }
+}
+
+impl Optimizer for SgdmA {
+    fn kind(&self) -> OptimizerKind {
+        OptimizerKind::SgdmA
+    }
+
+    fn begin_minibatch(&mut self, _t: u64) -> Result<()> {
+        self.decay_pending.iter_mut().for_each(|p| *p = true);
+        Ok(())
+    }
+
+    fn accumulate(&mut self, layer: usize, grad: &[f32], gscale: f32) -> Result<()> {
+        if std::mem::take(&mut self.decay_pending[layer]) {
+            self.backend.sgdm_decay_acc(&mut self.u[layer], grad, gscale, self.momentum)
+        } else {
+            self.backend.sgdm_acc(&mut self.u[layer], grad, gscale)
+        }
+    }
+
+    fn apply(&mut self, params: &mut [LayerParams], lr: f32) -> Result<()> {
+        for (l, p) in params.iter_mut().enumerate() {
+            if std::mem::take(&mut self.decay_pending[l]) {
+                let zero = vec![0.0f32; self.u[l].len()];
+                self.backend.sgdm_decay_acc(&mut self.u[l], &zero, 0.0, self.momentum)?;
+            }
+            self.backend.sgdm_update(&mut p.flat, &self.u[l], lr, self.weight_decay)?;
+        }
+        Ok(())
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.state_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::host_math;
+    use crate::runtime::{ModelConfigEntry, ModelHyper};
+
+    fn toy_spec() -> ModelSpec {
+        let entry = ModelConfigEntry {
+            model: ModelHyper {
+                vocab: 8, hidden: 4, layers: 1, heads: 1, seq: 2, microbatch: 2, ffn: 16,
+            },
+            param_shapes: vec![
+                ("embed.E".into(), vec![8, 4]),
+                ("block0.ln1.g".into(), vec![4]),
+                ("head.W".into(), vec![4, 8]),
+            ],
+            artifacts: Default::default(),
+        };
+        ModelSpec::from_manifest("toy", &entry).unwrap()
+    }
+
+    fn hyper() -> Hyper {
+        Hyper { beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+
+    fn host() -> UpdateBackend {
+        UpdateBackend::host(hyper())
+    }
+
+    fn zoo(algo: OptAlgo, resident: bool, tracker: &MemoryTracker) -> ZooOpt {
+        ZooOpt::new(algo, &toy_spec(), hyper(), host(), host(), resident, tracker)
+    }
+
+    #[test]
+    fn accumulates_scaled_microbatch_grads() {
+        let spec = toy_spec();
+        let mut opt = zoo(OptAlgo::Adam, false, &MemoryTracker::new());
+        opt.begin_minibatch(1).unwrap();
+        let n = spec.layers[0].flat_len;
+        opt.accumulate(0, &vec![2.0; n], 0.25).unwrap();
+        opt.accumulate(0, &vec![4.0; n], 0.25).unwrap();
+        assert!(opt.acc[0].iter().all(|&x| (x - 1.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn adam_matches_manual_adam_over_minibatch_mean() {
+        let spec = toy_spec();
+        let mut opt = zoo(OptAlgo::Adam, false, &MemoryTracker::new());
+        let mut params: Vec<LayerParams> =
+            spec.layers.iter().map(|l| LayerParams { flat: vec![1.0; l.flat_len] }).collect();
+        let n_micro = 4;
+        let grads: Vec<Vec<f32>> = (0..n_micro)
+            .map(|k| (0..spec.layers[0].flat_len).map(|i| (i + k) as f32 * 0.1).collect())
+            .collect();
+
+        opt.begin_minibatch(1).unwrap();
+        for g in &grads {
+            opt.accumulate(0, g, 1.0 / n_micro as f32).unwrap();
+        }
+        for l in 1..spec.layers.len() {
+            opt.accumulate(l, &vec![0.0; spec.layers[l].flat_len], 1.0).unwrap();
+        }
+        opt.apply(&mut params, 0.01).unwrap();
+
+        // reference: fused Adam on the mean gradient
+        let mean: Vec<f32> = (0..spec.layers[0].flat_len)
+            .map(|i| grads.iter().map(|g| g[i]).sum::<f32>() / n_micro as f32)
+            .collect();
+        let mut rp = vec![1.0f32; spec.layers[0].flat_len];
+        let mut rm = vec![0.0f32; rp.len()];
+        let mut rv = vec![0.0f32; rp.len()];
+        let (bc1, bc2) = hyper().bias_corrections(1);
+        host_math::adam_full(&mut rp, &mut rm, &mut rv, &mean, 0.01, bc1, bc2, 0.9, 0.999, 1e-8);
+        for (a, b) in params[0].flat.iter().zip(&rp) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn ga_metering_holds_full_model_gradient_memory() {
+        let spec = toy_spec();
+        let tracker = MemoryTracker::new();
+        let opt = zoo(OptAlgo::Adam, false, &tracker);
+        assert_eq!(opt.persistent_grad_bytes(), spec.total_params() * 4);
+        assert_eq!(opt.state_bytes(), 2 * spec.total_params() * 4);
+        assert_eq!(tracker.live(Category::Gradients), spec.total_params() * 4);
+    }
+
+    #[test]
+    fn state_resident_metering_moves_acc_into_optimizer_states() {
+        let spec = toy_spec();
+        let tracker = MemoryTracker::new();
+        let opt = zoo(OptAlgo::Adam, true, &tracker);
+        assert_eq!(opt.persistent_grad_bytes(), 0);
+        assert_eq!(opt.state_bytes(), 3 * spec.total_params() * 4);
+        assert_eq!(tracker.live(Category::Gradients), 0);
+        assert_eq!(tracker.live(Category::OptimizerStates), opt.state_bytes());
+    }
+
+    #[test]
+    fn factored_state_is_sublinear() {
+        let spec = toy_spec();
+        for algo in [OptAlgo::Adafactor, OptAlgo::Sm3] {
+            let opt = zoo(algo, false, &MemoryTracker::new());
+            // matrices factored: (8+4) + (4+8); vector ln1.g full: 4
+            assert_eq!(opt.states.state_bytes(), (12 + 12 + 4) * 4, "{algo:?}");
+            assert!(opt.states.state_bytes() < spec.total_params() * 4);
+            assert_eq!(opt.persistent_grad_bytes(), spec.total_params() * 4);
+        }
+        // adam-mini: full m + one v per row (one per vector)
+        let opt = zoo(OptAlgo::AdamMini, false, &MemoryTracker::new());
+        assert_eq!(opt.states.state_bytes(), (spec.total_params() + 8 + 1 + 4) * 4);
+    }
+
+    #[test]
+    fn every_rule_descends_on_quadratic() {
+        // minimize 0.5*||p||^2 (grad = p): loss must shrink for every rule.
+        let spec = toy_spec();
+        for algo in OptAlgo::ALL {
+            let mut opt = zoo(algo, false, &MemoryTracker::new());
+            let mut params: Vec<LayerParams> =
+                spec.layers.iter().map(|l| LayerParams { flat: vec![1.0; l.flat_len] }).collect();
+            let norm0: f32 = params.iter().flat_map(|p| &p.flat).map(|x| x * x).sum();
+            for t in 1..=20 {
+                opt.begin_minibatch(t).unwrap();
+                let grads: Vec<Vec<f32>> = params.iter().map(|p| p.flat.clone()).collect();
+                for (l, g) in grads.iter().enumerate() {
+                    opt.accumulate(l, g, 1.0).unwrap();
+                }
+                opt.apply(&mut params, 0.05).unwrap();
+            }
+            let norm1: f32 = params.iter().flat_map(|p| &p.flat).map(|x| x * x).sum();
+            assert!(norm1 < norm0 * 0.8, "{algo:?}: {norm1} !< {norm0}");
+        }
+    }
+
+    #[test]
+    fn sm3_cover_upper_bounds_elementwise_adagrad() {
+        // SM3 invariant: min(row_i, col_j) >= sum of g^2 seen at (i, j).
+        let spec = toy_spec();
+        let mut opt = zoo(OptAlgo::Sm3, false, &MemoryTracker::new());
+        let mut params: Vec<LayerParams> =
+            spec.layers.iter().map(|l| LayerParams { flat: vec![0.0; l.flat_len] }).collect();
+        let n = spec.layers[0].flat_len;
+        let mut sums = vec![0.0f32; n];
+        let mut rng = crate::tensor::Rng::new(5);
+        for t in 1..=10 {
+            let g: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+            for (s, gi) in sums.iter_mut().zip(&g) {
+                *s += gi * gi;
+            }
+            opt.begin_minibatch(t).unwrap();
+            opt.accumulate(0, &g, 1.0).unwrap();
+            for l in 1..spec.layers.len() {
+                opt.accumulate(l, &vec![0.0; spec.layers[l].flat_len], 1.0).unwrap();
+            }
+            opt.apply(&mut params, 0.01).unwrap();
+        }
+        let slot = &opt.states.slots[0][0];
+        let (rows, cols) = (&slot.bufs[0], &slot.bufs[1]);
+        let c = slot.cols;
+        for (i, ri) in rows.iter().enumerate() {
+            for (j, cj) in cols.iter().enumerate() {
+                let bound = ri.min(*cj);
+                assert!(
+                    bound + 1e-4 >= sums[i * c + j],
+                    "cover {bound} < adagrad {}",
+                    sums[i * c + j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn metering_does_not_change_the_math() {
+        // GA-baseline vs state-resident builds must walk identical bits.
+        let spec = toy_spec();
+        for algo in OptAlgo::ALL {
+            let mut a = zoo(algo, false, &MemoryTracker::new());
+            let mut b = zoo(algo, true, &MemoryTracker::new());
+            let mk = || -> Vec<LayerParams> {
+                spec.layers.iter().map(|l| LayerParams { flat: vec![0.5; l.flat_len] }).collect()
+            };
+            let (mut pa, mut pb) = (mk(), mk());
+            let mut rng = crate::tensor::Rng::new(9);
+            for t in 1..=3 {
+                a.begin_minibatch(t).unwrap();
+                b.begin_minibatch(t).unwrap();
+                for (l, layer) in spec.layers.iter().enumerate() {
+                    let g: Vec<f32> = (0..layer.flat_len).map(|_| rng.normal()).collect();
+                    a.accumulate(l, &g, 0.5).unwrap();
+                    b.accumulate(l, &g, 0.5).unwrap();
+                }
+                a.apply(&mut pa, 0.01).unwrap();
+                b.apply(&mut pb, 0.01).unwrap();
+            }
+            for (x, y) in pa.iter().zip(&pb) {
+                assert_eq!(x.flat, y.flat, "{algo:?}");
+            }
+        }
+    }
+
+    // ---- SGDM-A (ported with the struct from the seed module) ----
+
+    #[test]
+    fn sgdma_matches_manual_heavy_ball_over_minibatch() {
+        let spec = toy_spec();
+        let tracker = MemoryTracker::new();
+        let mut opt = SgdmA::new(&spec, 0.9, 0.0, host(), &tracker);
+        let n = spec.layers[0].flat_len;
+        let mut params: Vec<LayerParams> =
+            spec.layers.iter().map(|l| LayerParams { flat: vec![1.0; l.flat_len] }).collect();
+
+        let mut u_ref = vec![0.0f32; n];
+        let mut p_ref = vec![1.0f32; n];
+        for step in 1..=3u64 {
+            let grads: Vec<Vec<f32>> =
+                (0..4).map(|k| (0..n).map(|i| (i + k + step as usize) as f32 * 0.1).collect())
+                    .collect();
+            opt.begin_minibatch(step).unwrap();
+            for g in &grads {
+                opt.accumulate(0, g, 0.25).unwrap();
+            }
+            for l in 1..spec.layers.len() {
+                opt.accumulate(l, &vec![0.0; spec.layers[l].flat_len], 1.0).unwrap();
+            }
+            opt.apply(&mut params, 0.1).unwrap();
+
+            // reference heavy-ball: u = mu*u + mean(g); p -= lr*u
+            for i in 0..n {
+                let mean: f32 = grads.iter().map(|g| g[i]).sum::<f32>() / 4.0;
+                u_ref[i] = 0.9 * u_ref[i] + mean;
+                p_ref[i] -= 0.1 * u_ref[i];
+            }
+        }
+        for (a, b) in params[0].flat.iter().zip(&p_ref) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sgdma_weight_decay_shrinks_params() {
+        let spec = toy_spec();
+        let tracker = MemoryTracker::new();
+        let mut opt = SgdmA::new(&spec, 0.0, 0.1, host(), &tracker);
+        let mut params: Vec<LayerParams> =
+            spec.layers.iter().map(|l| LayerParams { flat: vec![1.0; l.flat_len] }).collect();
+        opt.begin_minibatch(1).unwrap();
+        for l in 0..spec.layers.len() {
+            opt.accumulate(l, &vec![0.0; spec.layers[l].flat_len], 1.0).unwrap();
+        }
+        opt.apply(&mut params, 0.5).unwrap();
+        // p = 1 - 0.5*(0 + 0.1*1) = 0.95
+        assert!(params[0].flat.iter().all(|&x| (x - 0.95).abs() < 1e-6));
+    }
+
+    #[test]
+    fn sgdma_state_is_one_p() {
+        let spec = toy_spec();
+        let tracker = MemoryTracker::new();
+        let opt = SgdmA::new(&spec, 0.9, 0.0, host(), &tracker);
+        assert_eq!(opt.state_bytes(), spec.total_params() * 4);
+        assert_eq!(opt.persistent_grad_bytes(), 0);
+    }
+}

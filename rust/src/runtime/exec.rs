@@ -268,6 +268,16 @@ pub trait Executor: Send + Sync {
         None
     }
 
+    /// Update rule forced at the executor seam, when one is. The host
+    /// executor reports its `ADAMA_OPT`-resolved
+    /// [`crate::runtime::optstep::OptAlgo`] (or the `host_with_opt`
+    /// override); `None` keeps whatever the training config asks for.
+    /// `optim::build_optimizer` resolves this before the config, so
+    /// DP/ZeRO rank forks inherit the selection.
+    fn opt_algo(&self) -> Option<crate::runtime::optstep::OptAlgo> {
+        None
+    }
+
     /// Memory instrumentation snapshot, when the backend provides one.
     /// The host executor reports its activation stash arena and per-call
     /// workspace meters; backends without instrumentation return `None`.

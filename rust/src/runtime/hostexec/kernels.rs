@@ -138,6 +138,41 @@ pub fn sgdm_update(p: &mut [f32], u: &[f32], lr: f32, wd: f32) {
     }
 }
 
+// ---- optimizer zoo (ADAMA_OPT) ----
+
+/// Adafactor parameter step from the factored second moment: one call per
+/// matrix row (or vector), `c` the column (or full 1-D) moment slice and
+/// `rfac` the row moment normalised by the mean row moment (`1.0` for
+/// 1-D): p_j -= lr·g_j / (√(rfac·c_j) + eps).
+pub fn fac_update(p: &mut [f32], g: &[f32], c: &[f32], lr: f32, rfac: f32, eps: f32) {
+    for i in 0..p.len() {
+        p[i] -= lr * g[i] / ((rfac * c[i]).sqrt() + eps);
+    }
+}
+
+/// SM3-II cover reconstruction + parameter step: one call per matrix row
+/// with `r` the row accumulator and `c` the column accumulator slice
+/// (`r = +∞`, `c = v` degrades to full AdaGrad for 1-D):
+/// nu_j = min(r, c_j) + g_j², p_j -= lr·g_j/(√nu_j + eps). The fresh
+/// per-element bound `nu` is returned so the caller can fold the new
+/// row/column maxima.
+pub fn sm3_update(p: &mut [f32], nu: &mut [f32], g: &[f32], c: &[f32], lr: f32, r: f32, eps: f32) {
+    for i in 0..p.len() {
+        let b = r.min(c[i]) + g[i] * g[i];
+        nu[i] = b;
+        p[i] -= lr * g[i] / (b.sqrt() + eps);
+    }
+}
+
+/// Adam-mini parameter step with a block-shared learning-rate scale
+/// (`scale = lr/(√(v_block/bc2) + eps)`, computed per block by the
+/// caller): p_i -= scale·(m_i/bc1).
+pub fn mini_update(p: &mut [f32], m: &[f32], scale: f32, bc1: f32) {
+    for i in 0..p.len() {
+        p[i] -= scale * (m[i] / bc1);
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Program wrappers (the `common/<op>_<chunk>` artifact signatures)
 // ---------------------------------------------------------------------------
@@ -155,6 +190,9 @@ enum Kind {
     SgdmDecayAcc,
     SgdmAcc,
     SgdmUpdate,
+    FacUpdate,
+    Sm3Update,
+    MiniUpdate,
 }
 
 struct Kernel {
@@ -192,6 +230,9 @@ pub(super) fn build(
         "sgdm_decay_acc" => Kind::SgdmDecayAcc,
         "sgdm_acc" => Kind::SgdmAcc,
         "sgdm_update" => Kind::SgdmUpdate,
+        "fac_update" => Kind::FacUpdate,
+        "sm3_update" => Kind::Sm3Update,
+        "mini_update" => Kind::MiniUpdate,
         other => bail!("host executor: unknown optimizer kernel '{other}'"),
     };
     Ok(Box::new(Kernel {
@@ -371,6 +412,44 @@ impl Program for Kernel {
                 });
                 vec![out(p, shape)]
             }
+            Kind::FacUpdate => {
+                let mut p = buf(args, 0, n)?.to_vec();
+                let g = buf(args, 1, n)?;
+                let c = buf(args, 2, n)?;
+                let sc = scalars(args, 3, 2)?; // [lr, rfac]
+                let (lr, rfac) = (sc[0], sc[1]);
+                pool.for_spans(&mut p, |off, pp| {
+                    let end = off + pp.len();
+                    simd::fac_update(lvl, pp, &g[off..end], &c[off..end], lr, rfac, eps);
+                });
+                vec![out(p, shape)]
+            }
+            Kind::Sm3Update => {
+                // min() has no Lanes primitive, so this kernel is scalar
+                // inside each span — still pool-parallel and trivially
+                // bit-exact at any thread count (pure element-wise)
+                let mut p = buf(args, 0, n)?.to_vec();
+                let g = buf(args, 1, n)?;
+                let c = buf(args, 2, n)?;
+                let sc = scalars(args, 3, 2)?; // [lr, r]
+                let (lr, r) = (sc[0], sc[1]);
+                let mut nu = vec![0.0f32; n];
+                pool.for_spans2(&mut p, &mut nu, |off, pp, nn| {
+                    let end = off + pp.len();
+                    sm3_update(pp, nn, &g[off..end], &c[off..end], lr, r, eps);
+                });
+                vec![out(p, shape), out(nu, shape)]
+            }
+            Kind::MiniUpdate => {
+                let mut p = buf(args, 0, n)?.to_vec();
+                let m = buf(args, 1, n)?;
+                let sc = scalars(args, 2, 2)?; // [scale, bc1]
+                let (scale, bc1) = (sc[0], sc[1]);
+                pool.for_spans(&mut p, |off, pp| {
+                    simd::mini_update(lvl, pp, &m[off..off + pp.len()], scale, bc1);
+                });
+                vec![out(p, shape)]
+            }
         })
     }
 }
@@ -497,5 +576,73 @@ mod tests {
             assert!((m1[i] - m2[i]).abs() < 1e-6);
             assert!((v1[i] - v2[i]).abs() < 1e-7);
         }
+    }
+
+    #[test]
+    fn zoo_programs_match_scalar_math_bitwise() {
+        let n = 5003usize;
+        let p: Vec<f32> = (0..n).map(|i| (i as f32 * 0.19).cos()).collect();
+        let g: Vec<f32> = (0..n).map(|i| (i as f32 * 0.73).sin() * 2.0).collect();
+        let c: Vec<f32> = (0..n).map(|i| (i as f32 * 0.11).cos().abs()).collect();
+        let m: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin()).collect();
+        for threads in [1usize, 4] {
+            let fac = build("fac_update_16384", &hyper(), tp(threads), lvl()).unwrap();
+            let got = fac
+                .run(&[
+                    Arg::F32(&p, &[n]),
+                    Arg::F32(&g, &[n]),
+                    Arg::F32(&c, &[n]),
+                    Arg::F32(&[1e-2, 1.25], &[2]),
+                ])
+                .unwrap();
+            let mut p2 = p.clone();
+            fac_update(&mut p2, &g, &c, 1e-2, 1.25, 1e-8);
+            assert_eq!(got[0].as_f32().unwrap(), &p2[..], "{threads} threads: fac p");
+
+            let sm3 = build("sm3_update_16384", &hyper(), tp(threads), lvl()).unwrap();
+            let got = sm3
+                .run(&[
+                    Arg::F32(&p, &[n]),
+                    Arg::F32(&g, &[n]),
+                    Arg::F32(&c, &[n]),
+                    Arg::F32(&[1e-2, 0.5], &[2]),
+                ])
+                .unwrap();
+            let (mut p2, mut nu2) = (p.clone(), vec![0.0f32; n]);
+            sm3_update(&mut p2, &mut nu2, &g, &c, 1e-2, 0.5, 1e-8);
+            assert_eq!(got[0].as_f32().unwrap(), &p2[..], "{threads} threads: sm3 p");
+            assert_eq!(got[1].as_f32().unwrap(), &nu2[..], "{threads} threads: sm3 nu");
+
+            let mini = build("mini_update_16384", &hyper(), tp(threads), lvl()).unwrap();
+            let got = mini
+                .run(&[
+                    Arg::F32(&p, &[n]),
+                    Arg::F32(&m, &[n]),
+                    Arg::F32(&[3e-3, 0.1], &[2]),
+                ])
+                .unwrap();
+            let mut p2 = p.clone();
+            mini_update(&mut p2, &m, 3e-3, 0.1);
+            assert_eq!(got[0].as_f32().unwrap(), &p2[..], "{threads} threads: mini p");
+        }
+    }
+
+    #[test]
+    fn zoo_kernels_leave_zero_padding_at_zero() {
+        // chunk_value stages short rows into zero-padded chunk buffers; the
+        // padded tail must stay exactly 0 so the copy-back can't corrupt
+        // anything even if sliced generously.
+        let (mut p, mut nu) = (vec![0.0f32; 4], vec![0.0f32; 4]);
+        fac_update(&mut p, &[0.0; 4], &[0.0; 4], 1e-2, 1.25, 1e-8);
+        assert_eq!(p, vec![0.0; 4]);
+        sm3_update(&mut p, &mut nu, &[0.0; 4], &[0.0; 4], 1e-2, 0.5, 1e-8);
+        assert_eq!(p, vec![0.0; 4]);
+        assert_eq!(nu, vec![0.0; 4]);
+        // 1-D SM3 passes r = +inf with a zero accumulator tail: min(inf, 0) = 0.
+        sm3_update(&mut p, &mut nu, &[0.0; 4], &[0.0; 4], 1e-2, f32::INFINITY, 1e-8);
+        assert_eq!(p, vec![0.0; 4]);
+        assert_eq!(nu, vec![0.0; 4]);
+        mini_update(&mut p, &[0.0; 4], 3e-3, 0.1);
+        assert_eq!(p, vec![0.0; 4]);
     }
 }

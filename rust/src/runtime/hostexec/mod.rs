@@ -76,6 +76,7 @@ use self::actmem::{ActivationArena, MemoryPlan};
 use self::gemm::GemmMode;
 use super::exec::{Arg, Executor, MemStats, Program, Value};
 use super::manifest::{ArtifactEntry, Manifest};
+use super::optstep::OptAlgo;
 use super::pool::{self, ThreadPool};
 use super::simd;
 
@@ -86,6 +87,7 @@ pub struct HostExecutor {
     arena: Arc<ActivationArena>,
     simd: simd::Level,
     gemm: GemmMode,
+    opt: Option<OptAlgo>,
 }
 
 impl Default for HostExecutor {
@@ -115,11 +117,12 @@ impl HostExecutor {
     /// activation plan still comes from `ADAMA_ACT_BUDGET`, SIMD level
     /// from `ADAMA_SIMD`, GEMM engine from `ADAMA_GEMM`.
     pub fn try_with_threads(threads: usize) -> Result<Self> {
-        Ok(Self::with_gemm(
+        Ok(Self::with_opt(
             threads,
             MemoryPlan::from_env()?,
             simd::Level::from_env()?,
             GemmMode::from_env()?,
+            OptAlgo::from_env()?,
         ))
     }
 
@@ -152,19 +155,43 @@ impl HostExecutor {
         )
     }
 
-    /// Fully explicit construction: pool size, activation stash plan,
-    /// SIMD dispatch level and GEMM engine. Every level and both engines
-    /// are bit-identical (the SIMD layer's contract plus the packed
-    /// engine's fold-order proof, see [`crate::runtime::simd`] and
-    /// [`gemm`]), so these — like the thread count — are pure
-    /// performance knobs.
+    /// Explicit pool size, activation plan, SIMD level and GEMM engine;
+    /// the update-rule override still comes from `ADAMA_OPT` (panics on
+    /// an invalid value — construct through [`Self::with_opt`] for a
+    /// fully explicit executor). Every level and both engines are
+    /// bit-identical (the SIMD layer's contract plus the packed engine's
+    /// fold-order proof, see [`crate::runtime::simd`] and [`gemm`]), so
+    /// those — like the thread count — are pure performance knobs.
     pub fn with_gemm(threads: usize, plan: MemoryPlan, level: simd::Level, gemm: GemmMode) -> Self {
+        Self::with_opt(
+            threads,
+            plan,
+            level,
+            gemm,
+            OptAlgo::from_env().expect("invalid ADAMA_OPT environment"),
+        )
+    }
+
+    /// Fully explicit construction: pool size, activation stash plan,
+    /// SIMD dispatch level, GEMM engine and update-rule override (the
+    /// API twin of `ADAMA_OPT`; `None` keeps the configured optimizer).
+    /// Unlike the other knobs the update rule is *not* a pure
+    /// performance knob — it selects which optimizer the training stack
+    /// builds (`optim::build_optimizer` resolves it before the config).
+    pub fn with_opt(
+        threads: usize,
+        plan: MemoryPlan,
+        level: simd::Level,
+        gemm: GemmMode,
+        opt: Option<OptAlgo>,
+    ) -> Self {
         Self {
             calls: Arc::new(AtomicU64::new(0)),
             pool: Arc::new(ThreadPool::new(threads)),
             arena: Arc::new(ActivationArena::new(plan)),
             simd: level,
             gemm,
+            opt,
         }
     }
 
@@ -253,6 +280,10 @@ impl Executor for HostExecutor {
 
     fn gemm_mode(&self) -> Option<GemmMode> {
         Some(self.gemm)
+    }
+
+    fn opt_algo(&self) -> Option<OptAlgo> {
+        self.opt
     }
 
     fn memory(&self) -> Option<MemStats> {

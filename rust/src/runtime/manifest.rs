@@ -201,6 +201,12 @@ impl Manifest {
                 ("sgdm_decay_acc", 2, 2, 1),
                 ("sgdm_acc", 2, 1, 1),
                 ("sgdm_update", 2, 2, 1),
+                // optimizer-zoo update kernels (ADAMA_OPT): factored
+                // Adafactor rows, SM3 cover reconstruction, Adam-mini
+                // block-wise learning rates
+                ("fac_update", 3, 2, 1),
+                ("sm3_update", 3, 2, 2),
+                ("mini_update", 2, 2, 1),
             ] {
                 let mut inputs: Vec<TensorSpec> = (0..n_bufs).map(|_| f32_spec(&[c])).collect();
                 match op {

@@ -39,6 +39,7 @@
 pub mod exec;
 pub mod hostexec;
 mod manifest;
+pub mod optstep;
 #[cfg(feature = "pjrt")]
 mod pjrt;
 pub mod pool;
@@ -51,6 +52,7 @@ pub use exec::{
 pub use hostexec::actmem::{ActBudget, MemoryPlan};
 pub use hostexec::gemm::GemmMode;
 pub use hostexec::HostExecutor;
+pub use optstep::{OptAlgo, OptStep};
 pub use pool::ThreadPool;
 pub use simd::Level as SimdLevel;
 pub use manifest::{
@@ -140,6 +142,25 @@ impl Library {
         )
     }
 
+    /// Fully explicit host library including the update-rule override
+    /// (the API twin of `ADAMA_OPT`): `Some(algo)` makes
+    /// `optim::build_optimizer` build that zoo rule regardless of the
+    /// training config; `None` keeps the configured optimizer. The
+    /// optimizer-zoo parity suites construct per-rule libraries side by
+    /// side with this.
+    pub fn host_with_opt(
+        threads: usize,
+        plan: MemoryPlan,
+        level: simd::Level,
+        gemm: GemmMode,
+        opt: Option<OptAlgo>,
+    ) -> Arc<Self> {
+        Self::with_executor(
+            Arc::new(HostExecutor::with_opt(threads, plan, level, gemm, opt)),
+            Manifest::builtin(),
+        )
+    }
+
     /// Same manifest, host executor re-pinned to `threads` pool workers;
     /// non-host backends (and already-matching pools under the remat
     /// default) are returned unchanged. The DP/ZeRO thread simulators
@@ -180,8 +201,43 @@ impl Library {
             .executor
             .gemm_mode()
             .unwrap_or_else(|| GemmMode::from_env().unwrap_or(GemmMode::Packed));
+        // the update-rule override travels with the fork too, so DP/ZeRO
+        // ranks build the same optimizer the parent library would
+        let opt = self.executor.opt_algo();
         Self::with_executor(
-            Arc::new(HostExecutor::with_gemm(threads, plan, level, gemm)),
+            Arc::new(HostExecutor::with_opt(threads, plan, level, gemm, opt)),
+            self.manifest.clone(),
+        )
+    }
+
+    /// Fork this host library with the update-rule override replaced by
+    /// `opt` (threads, activation plan, SIMD level and GEMM engine are
+    /// carried over). Unlike [`Library::fork_with_threads`] this always
+    /// builds a fresh executor when the override changes — `DpSpec` /
+    /// `Zero1Spec` `with_opt` route through here so an explicit spec
+    /// selection beats the ambient `ADAMA_OPT`. Non-host backends are
+    /// returned unchanged (they have no seam to override).
+    pub fn fork_with_opt(self: &Arc<Self>, opt: Option<OptAlgo>) -> Arc<Self> {
+        if self.executor.platform() != "host" {
+            return self.clone();
+        }
+        if self.executor.opt_algo() == opt {
+            return self.clone();
+        }
+        let plan = match self.executor.memory() {
+            Some(m) => MemoryPlan::from_budget_bytes(m.stash_budget_bytes),
+            None => MemoryPlan::from_env().unwrap_or_else(|_| MemoryPlan::remat()),
+        };
+        let level = self
+            .executor
+            .simd_level()
+            .unwrap_or_else(|| simd::Level::from_env().unwrap_or_else(|_| simd::detect()));
+        let gemm = self
+            .executor
+            .gemm_mode()
+            .unwrap_or_else(|| GemmMode::from_env().unwrap_or(GemmMode::Packed));
+        Self::with_executor(
+            Arc::new(HostExecutor::with_opt(self.executor.threads(), plan, level, gemm, opt)),
             self.manifest.clone(),
         )
     }
@@ -364,6 +420,32 @@ mod tests {
         assert_eq!(Library::parse_backend(Some("pjrt")).unwrap(), "pjrt");
         let err = Library::parse_backend(Some("tpu")).unwrap_err();
         assert!(format!("{err}").contains("host|pjrt"), "{err}");
+    }
+
+    #[test]
+    fn opt_override_travels_with_forks() {
+        let lib = Library::host_with_opt(
+            2,
+            MemoryPlan::remat(),
+            simd::Level::Scalar,
+            GemmMode::Naive,
+            Some(OptAlgo::Sm3),
+        );
+        assert_eq!(lib.executor().opt_algo(), Some(OptAlgo::Sm3));
+        // thread re-pin carries the override
+        let serial = lib.fork_with_threads(1);
+        assert_eq!(serial.executor().opt_algo(), Some(OptAlgo::Sm3));
+        assert_eq!(serial.executor().gemm_mode(), Some(GemmMode::Naive));
+        // matching override: no re-wrap
+        let same = lib.fork_with_opt(Some(OptAlgo::Sm3));
+        assert!(Arc::ptr_eq(&lib, &same));
+        // changed override: fresh executor, other knobs carried
+        let mini = lib.fork_with_opt(Some(OptAlgo::AdamMini));
+        assert_eq!(mini.executor().opt_algo(), Some(OptAlgo::AdamMini));
+        assert_eq!(mini.executor().threads(), 2);
+        assert_eq!(mini.executor().simd_level(), Some(simd::Level::Scalar));
+        let cleared = mini.fork_with_opt(None);
+        assert_eq!(cleared.executor().opt_algo(), None);
     }
 
     #[test]

@@ -1,0 +1,152 @@
+//! Exec-layer optimizer seam: which update rule drives the step, and the
+//! [`OptStep`] trait the optimizer zoo implements behind it.
+//!
+//! `ADAMA_OPT=adam|adafactor|sm3|adam_mini` (strictly parsed, like every
+//! `ADAMA_*` knob) overrides the configured optimizer with one of the
+//! zoo's update rules; `Library::host_with_opt` / `Library::fork_with_opt`
+//! are the API twins and the DP/ZeRO rank forks inherit the selection.
+//! All four rules share the paper's core trick — micro-batch gradients are
+//! folded **linearly** into a state-resident accumulator the moment a
+//! layer's gradient materialises (the gradient buffer is released right
+//! after), and the rule's nonlinear moment math runs once per mini-batch
+//! at apply time. Because the fold is linear and the micro-batch scale
+//! `1/M` is a power of two for M ∈ {1,2,4,8}, an M-way split is
+//! **bit-for-bit identical** to the single-batch update on the summed
+//! gradient — the Algorithm-1 invariant `rust/tests/optzoo.rs` asserts
+//! for every rule against a serial scalar oracle.
+
+use anyhow::{bail, Result};
+
+/// The zoo's update rules, selectable at the executor seam.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OptAlgo {
+    /// Standard Adam on the summed gradient (the paper's Adam+GA baseline
+    /// re-expressed through the seam: full `m`/`v`, fused update).
+    Adam,
+    /// Adafactor (Shazeer & Stern 2018): factored second moments — one
+    /// row and one column accumulator per matrix; vectors keep a full
+    /// second moment. β₁ = 0 (the memory-saving configuration).
+    Adafactor,
+    /// SM3 (Anil et al. 2019): cover-set accumulators — the per-element
+    /// second moment is reconstructed as `min(row_i, col_j) + g²`;
+    /// vectors fall back to full AdaGrad.
+    Sm3,
+    /// Adam-mini (Zhang et al. 2024): full first moment, one shared
+    /// second-moment scalar per parameter block (here: per matrix row;
+    /// one per vector).
+    AdamMini,
+}
+
+impl OptAlgo {
+    pub const ALL: [OptAlgo; 4] =
+        [OptAlgo::Adam, OptAlgo::Adafactor, OptAlgo::Sm3, OptAlgo::AdamMini];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OptAlgo::Adam => "adam",
+            OptAlgo::Adafactor => "adafactor",
+            OptAlgo::Sm3 => "sm3",
+            OptAlgo::AdamMini => "adam_mini",
+        }
+    }
+
+    /// Strictly parse an `ADAMA_OPT` value: a rule name forces the zoo,
+    /// unset/empty keeps the configured optimizer; anything else is an
+    /// error naming the accepted values.
+    pub fn parse(spec: Option<&str>) -> Result<Option<OptAlgo>> {
+        match spec.map(str::trim).unwrap_or("") {
+            "" => Ok(None),
+            "adam" => Ok(Some(OptAlgo::Adam)),
+            "adafactor" => Ok(Some(OptAlgo::Adafactor)),
+            "sm3" => Ok(Some(OptAlgo::Sm3)),
+            "adam_mini" | "adam-mini" | "adammini" => Ok(Some(OptAlgo::AdamMini)),
+            other => bail!(
+                "invalid ADAMA_OPT '{other}': expected adam|adafactor|sm3|adam_mini \
+                 (unset = the configured optimizer)"
+            ),
+        }
+    }
+
+    /// Resolve `ADAMA_OPT` from the environment.
+    pub fn from_env() -> Result<Option<OptAlgo>> {
+        Self::parse(std::env::var("ADAMA_OPT").ok().as_deref())
+    }
+
+    /// Per-tensor state-buffer lengths (elements, excluding the shared
+    /// gradient-side accumulator) for a `rows`×`cols` tensor; `cols == 0`
+    /// encodes a 1-D tensor of length `rows`. This is the allocation
+    /// contract between the zoo and [`OptStep::apply`]'s `state` slice.
+    pub fn state_lens(self, rows: usize, cols: usize) -> Vec<usize> {
+        let n = rows * cols.max(1);
+        match self {
+            OptAlgo::Adam => vec![n, n],
+            OptAlgo::Adafactor | OptAlgo::Sm3 => {
+                if cols > 0 {
+                    vec![rows, cols]
+                } else {
+                    vec![n]
+                }
+            }
+            OptAlgo::AdamMini => vec![n, if cols > 0 { rows } else { 1 }],
+        }
+    }
+}
+
+/// One update rule behind the executor seam.
+///
+/// `apply` updates one tensor in place from the mini-batch's accumulated
+/// gradient: `p` and `acc` are the tensor's `rows`×`cols` elements
+/// (`cols == 0` = 1-D of length `rows`), `state` holds the rule's
+/// per-tensor buffers laid out per [`OptAlgo::state_lens`], `step` is the
+/// 1-based mini-batch counter and `lr` the resolved learning rate.
+/// Implementations route their bulk element-wise work through the chunked
+/// hostexec kernels (`fac_update`/`sm3_update`/`mini_update`/`adam_full`)
+/// and keep only the tiny factored-statistic folds serial, so every rule
+/// is bit-identical across backends, SIMD levels and thread counts.
+pub trait OptStep: Send {
+    fn algo(&self) -> OptAlgo;
+
+    fn apply(
+        &mut self,
+        p: &mut [f32],
+        acc: &[f32],
+        state: &mut [Vec<f32>],
+        rows: usize,
+        cols: usize,
+        step: u64,
+        lr: f32,
+    ) -> Result<()>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_is_strict() {
+        assert_eq!(OptAlgo::parse(None).unwrap(), None);
+        assert_eq!(OptAlgo::parse(Some("")).unwrap(), None);
+        assert_eq!(OptAlgo::parse(Some(" adam ")).unwrap(), Some(OptAlgo::Adam));
+        assert_eq!(OptAlgo::parse(Some("adafactor")).unwrap(), Some(OptAlgo::Adafactor));
+        assert_eq!(OptAlgo::parse(Some("sm3")).unwrap(), Some(OptAlgo::Sm3));
+        assert_eq!(OptAlgo::parse(Some("adam-mini")).unwrap(), Some(OptAlgo::AdamMini));
+        assert_eq!(OptAlgo::parse(Some("adammini")).unwrap(), Some(OptAlgo::AdamMini));
+        let err = OptAlgo::parse(Some("adagrad")).unwrap_err();
+        assert!(format!("{err}").contains("adam|adafactor|sm3|adam_mini"), "{err}");
+    }
+
+    #[test]
+    fn state_lens_match_the_rules() {
+        // adam: m + v, full
+        assert_eq!(OptAlgo::Adam.state_lens(4, 6), vec![24, 24]);
+        assert_eq!(OptAlgo::Adam.state_lens(5, 0), vec![5, 5]);
+        // adafactor/sm3: factored rows+cols; 1-D keeps a full moment
+        assert_eq!(OptAlgo::Adafactor.state_lens(4, 6), vec![4, 6]);
+        assert_eq!(OptAlgo::Adafactor.state_lens(5, 0), vec![5]);
+        assert_eq!(OptAlgo::Sm3.state_lens(4, 6), vec![4, 6]);
+        assert_eq!(OptAlgo::Sm3.state_lens(5, 0), vec![5]);
+        // adam-mini: full m + one v per row (one per vector)
+        assert_eq!(OptAlgo::AdamMini.state_lens(4, 6), vec![24, 4]);
+        assert_eq!(OptAlgo::AdamMini.state_lens(5, 0), vec![5, 1]);
+    }
+}

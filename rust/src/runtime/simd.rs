@@ -791,6 +791,51 @@ fn sgdm_update_g<L: Lanes>(p: &mut [f32], u: &[f32], lr: f32, wd: f32) {
 }
 
 #[inline(always)]
+fn fac_update_g<L: Lanes>(p: &mut [f32], g: &[f32], c: &[f32], lr: f32, rfac: f32, eps: f32) {
+    let n = p.len();
+    debug_assert!(g.len() == n && c.len() == n);
+    let lrv = L::splat(lr);
+    let rfacv = L::splat(rfac);
+    let epsv = L::splat(eps);
+    let mut i = 0usize;
+    while i + L::WIDTH <= n {
+        // SAFETY: `i + WIDTH <= n` bounds every lane access below.
+        unsafe {
+            let gv = L::load(g.as_ptr().add(i));
+            let den = rfacv.mul(L::load(c.as_ptr().add(i))).sqrt().add(epsv);
+            let pv = L::load(p.as_ptr().add(i)).sub(lrv.mul(gv).div(den));
+            pv.store(p.as_mut_ptr().add(i));
+        }
+        i += L::WIDTH;
+    }
+    while i < n {
+        p[i] -= lr * g[i] / ((rfac * c[i]).sqrt() + eps);
+        i += 1;
+    }
+}
+
+#[inline(always)]
+fn mini_update_g<L: Lanes>(p: &mut [f32], m: &[f32], scale: f32, bc1: f32) {
+    let n = p.len();
+    debug_assert!(m.len() == n);
+    let sv = L::splat(scale);
+    let bc1v = L::splat(bc1);
+    let mut i = 0usize;
+    while i + L::WIDTH <= n {
+        // SAFETY: `i + WIDTH <= n` bounds the lane accesses.
+        unsafe {
+            let mh = L::load(m.as_ptr().add(i)).div(bc1v);
+            L::load(p.as_ptr().add(i)).sub(sv.mul(mh)).store(p.as_mut_ptr().add(i));
+        }
+        i += L::WIDTH;
+    }
+    while i < n {
+        p[i] -= scale * (m[i] / bc1);
+        i += 1;
+    }
+}
+
+#[inline(always)]
 fn axpy_g<L: Lanes>(out: &mut [f32], x: &[f32], a: f32) {
     let n = out.len();
     debug_assert!(x.len() >= n);
@@ -1169,6 +1214,26 @@ dispatch! {
 }
 
 dispatch! {
+    /// Adafactor row step: `p -= lr·g/(√(rfac·c) + eps)` — the factored
+    /// second moment reconstructed from the row factor `rfac` and the
+    /// column moment slice `c`.
+    fac_update => fac_update_g(
+        p: &mut [f32],
+        g: &[f32],
+        c: &[f32],
+        lr: f32,
+        rfac: f32,
+        eps: f32,
+    )
+}
+
+dispatch! {
+    /// Adam-mini block step: `p -= scale·(m/bc1)` with the block-shared
+    /// learning-rate `scale`.
+    mini_update => mini_update_g(p: &mut [f32], m: &[f32], scale: f32, bc1: f32)
+}
+
+dispatch! {
     /// `out += a·x` — the matmul/attention inner step (`out[j] += a * x[j]`).
     axpy => axpy_g(out: &mut [f32], x: &[f32], a: f32)
 }
@@ -1317,6 +1382,8 @@ mod tests {
                 sgdm_acc(level, &mut m, &g, 0.5);
                 sgdm_update(level, &mut p, &m, 1e-2, 0.01);
                 scale(level, &mut v, 0.999);
+                fac_update(level, &mut p, &g, &v, 1e-2, 1.25, 1e-8);
+                mini_update(level, &mut p, &m, 3e-3, 0.1);
 
                 let (mut ms, mut vs, mut ps) = (m0.clone(), v0.clone(), p0.clone());
                 adama_acc(Level::Scalar, &mut ms, &mut vs, &g, 0.25, 0.9, 0.999);
@@ -1341,6 +1408,8 @@ mod tests {
                 sgdm_acc(Level::Scalar, &mut ms, &g, 0.5);
                 sgdm_update(Level::Scalar, &mut ps, &ms, 1e-2, 0.01);
                 scale(Level::Scalar, &mut vs, 0.999);
+                fac_update(Level::Scalar, &mut ps, &g, &vs, 1e-2, 1.25, 1e-8);
+                mini_update(Level::Scalar, &mut ps, &ms, 3e-3, 0.1);
 
                 assert_eq!(bits(&m), bits(&ms), "{} n={n}: m", level.name());
                 assert_eq!(bits(&v), bits(&vs), "{} n={n}: v", level.name());

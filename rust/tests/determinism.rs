@@ -200,6 +200,61 @@ fn transformer_training_is_bitwise_identical_serial_vs_parallel() {
     }
 }
 
+/// 12 tiny-transformer steps under an `ADAMA_OPT` zoo rule selected at
+/// the executor seam: the run must repeat bit-for-bit and be invariant
+/// to the pool thread count, exactly like the flagship AdamA path.
+fn zoo_training_run(algo: adama::runtime::OptAlgo, threads: usize) -> (Vec<u32>, Vec<Vec<u32>>) {
+    let lib = Library::host_with_threads(threads).fork_with_opt(Some(algo));
+    let cfg = TrainConfig {
+        model: "tiny".into(),
+        backend: OptimBackend::Kernel,
+        accum_steps: 2,
+        chunk: 16384,
+        seed: 42,
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::new(lib, cfg).unwrap();
+    let h = trainer.spec().hyper.clone();
+    let mut corpus = MarkovCorpus::new(h.vocab, 7, 1);
+    let mut losses = Vec::with_capacity(12);
+    for _ in 0..12 {
+        let mbs = corpus.minibatch(2, h.microbatch, h.seq);
+        losses.push(trainer.train_step(&mbs).unwrap().loss.to_bits());
+    }
+    let params = trainer
+        .params()
+        .iter()
+        .map(|p| p.flat.iter().map(|x| x.to_bits()).collect())
+        .collect();
+    (losses, params)
+}
+
+#[test]
+fn zoo_rules_are_bitwise_identical_across_reruns_and_thread_counts() {
+    for algo in adama::runtime::OptAlgo::ALL {
+        let (base_losses, base_params) = zoo_training_run(algo, 1);
+        assert!(base_losses.len() == 12);
+        let (rerun_losses, rerun_params) = zoo_training_run(algo, 1);
+        assert_eq!(base_losses, rerun_losses, "{}: rerun loss bits drifted", algo.name());
+        assert_eq!(base_params, rerun_params, "{}: rerun params drifted", algo.name());
+        for threads in [3usize, 8] {
+            let (losses, params) = zoo_training_run(algo, threads);
+            assert_eq!(
+                base_losses,
+                losses,
+                "{}: loss bits drifted at {threads} threads",
+                algo.name()
+            );
+            assert_eq!(
+                base_params,
+                params,
+                "{}: final params drifted at {threads} threads",
+                algo.name()
+            );
+        }
+    }
+}
+
 /// `ADAMA_THREADS` resolution: positive integers pin the pool,
 /// unset/`auto` means available parallelism, anything else is a clear
 /// error; the executor reads it at construction time.

@@ -1,0 +1,636 @@
+//! `ADAMA_OPT` optimizer-zoo suite (DESIGN: the exec-layer `OptStep`
+//! seam): every rule must satisfy the paper's Algorithm-1 invariant —
+//! because the gradient fold is linear and `1/M` is a power of two, an
+//! M-way micro-batch split is **bit-for-bit identical** to the
+//! single-batch update on the summed gradient — and must match a serial
+//! scalar oracle re-implemented here from the rule definitions. On top:
+//! seam plumbing precedence, dual metering reconciled byte-for-byte
+//! against `memmodel::zoo_state_bytes`, cross-config bit parity
+//! (threads × backend), and env-driven distributed legs (the CI
+//! `optzoo-distributed` job sweeps `ADAMA_OPT` × `ADAMA_RANKS` ×
+//! `ADAMA_ASYNC` through these).
+
+use std::sync::Arc;
+
+use adama::collective::{
+    run_data_parallel, run_zero1, CollectiveEngine, DpSpec, SyncStrategy, Topology, Zero1Spec,
+};
+use adama::config::{OptimBackend, OptimizerKind, TrainConfig};
+use adama::data::MarkovCorpus;
+use adama::memmodel::{paper_shapes, zoo_state_bytes, PaperModel};
+use adama::model::{LayerParams, ModelSpec};
+use adama::optim::{Hyper, Optimizer, UpdateBackend, ZooOpt};
+use adama::runtime::{Library, OptAlgo};
+use adama::tensor::Rng;
+use adama::{Category, MemoryTracker, Trainer};
+
+mod common;
+use common::library;
+
+const DATA_SEED: u64 = 53;
+
+// ---------------------------------------------------------------------------
+// helpers
+// ---------------------------------------------------------------------------
+
+fn tiny_spec(lib: &Arc<Library>) -> ModelSpec {
+    let entry = lib.manifest().model_config("tiny").expect("tiny model in manifest");
+    ModelSpec::from_manifest("tiny", entry).unwrap()
+}
+
+/// (rows, cols) tuples for every tensor of a spec, `cols == 0` = 1-D —
+/// the geometry contract shared with `memmodel::zoo_state_bytes`.
+fn shapes_of(spec: &ModelSpec) -> Vec<(u64, u64)> {
+    spec.layers
+        .iter()
+        .flat_map(|l| l.params.iter())
+        .map(|v| {
+            if v.shape.len() == 2 {
+                (v.shape[0] as u64, v.shape[1] as u64)
+            } else {
+                (v.elements() as u64, 0)
+            }
+        })
+        .collect()
+}
+
+fn cfg(workers: usize, n: usize) -> TrainConfig {
+    TrainConfig {
+        model: "tiny".into(),
+        optimizer: OptimizerKind::AdamA,
+        backend: OptimBackend::Host,
+        accum_steps: n,
+        chunk: 16384,
+        workers,
+        ..TrainConfig::default()
+    }
+}
+
+/// Rank counts for the distributed legs: `ADAMA_RANKS` or default 2.
+fn worlds() -> Vec<usize> {
+    match std::env::var("ADAMA_RANKS") {
+        Ok(s) if !s.trim().is_empty() => s
+            .split(',')
+            .map(|t| t.trim().parse::<usize>().expect("ADAMA_RANKS: positive integers"))
+            .collect(),
+        _ => vec![2],
+    }
+}
+
+/// Rules to sweep: a set `ADAMA_OPT` narrows the suite to that rule (the
+/// CI matrix runs one rule per leg); unset sweeps all four.
+fn algos() -> Vec<OptAlgo> {
+    match OptAlgo::from_env().expect("ADAMA_OPT must parse") {
+        Some(a) => vec![a],
+        None => OptAlgo::ALL.to_vec(),
+    }
+}
+
+fn param_bits(params: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    params.iter().map(|l| l.iter().map(|x| x.to_bits()).collect()).collect()
+}
+
+fn flat_bits(params: &[LayerParams]) -> Vec<Vec<u32>> {
+    params.iter().map(|l| l.flat.iter().map(|x| x.to_bits()).collect()).collect()
+}
+
+fn loss_bits(losses: &[f32]) -> Vec<u32> {
+    losses.iter().map(|x| x.to_bits()).collect()
+}
+
+fn mk_params(spec: &ModelSpec, rng: &mut Rng) -> Vec<LayerParams> {
+    spec.layers
+        .iter()
+        .map(|l| LayerParams { flat: (0..l.flat_len).map(|_| 0.1 * rng.normal()).collect() })
+        .collect()
+}
+
+fn rand_grads(spec: &ModelSpec, rng: &mut Rng) -> Vec<Vec<f32>> {
+    spec.layers
+        .iter()
+        .map(|l| (0..l.flat_len).map(|_| rng.normal()).collect())
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// serial scalar oracle — an independent re-implementation of each rule
+// from its definition (no shared code with optim::zoo beyond Hyper)
+// ---------------------------------------------------------------------------
+
+struct OracleTensor {
+    range: std::ops::Range<usize>,
+    rows: usize,
+    cols: usize,
+    bufs: Vec<Vec<f32>>,
+}
+
+struct Oracle {
+    algo: OptAlgo,
+    hy: Hyper,
+    tensors: Vec<Vec<OracleTensor>>,
+}
+
+impl Oracle {
+    fn new(algo: OptAlgo, spec: &ModelSpec, hy: Hyper) -> Self {
+        let tensors = spec
+            .layers
+            .iter()
+            .map(|l| {
+                l.params
+                    .iter()
+                    .map(|p| {
+                        let (rows, cols) = if p.shape.len() == 2 {
+                            (p.shape[0], p.shape[1])
+                        } else {
+                            (p.elements(), 0)
+                        };
+                        let bufs =
+                            algo.state_lens(rows, cols).into_iter().map(|n| vec![0.0; n]).collect();
+                        OracleTensor { range: p.range.clone(), rows, cols, bufs }
+                    })
+                    .collect()
+            })
+            .collect();
+        Self { algo, hy, tensors }
+    }
+
+    /// One mini-batch update from the accumulated mean gradient `acc`.
+    fn step(&mut self, params: &mut [LayerParams], acc: &[Vec<f32>], t: u64, lr: f32) {
+        const EPS1: f32 = 1e-30;
+        let (b1, b2a, eps) = (self.hy.beta1, self.hy.beta2, self.hy.eps);
+        let (bc1, bc2) = self.hy.bias_corrections(t);
+        for (layer, slots) in self.tensors.iter_mut().enumerate() {
+            for s in slots.iter_mut() {
+                let p = &mut params[layer].flat[s.range.clone()];
+                let g = &acc[layer][s.range.clone()];
+                let (rows, cols) = (s.rows, s.cols);
+                match self.algo {
+                    OptAlgo::Adam => {
+                        let (m, v) = s.bufs.split_at_mut(1);
+                        let (m, v) = (&mut m[0], &mut v[0]);
+                        for i in 0..p.len() {
+                            m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+                            v[i] = b2a * v[i] + (1.0 - b2a) * g[i] * g[i];
+                            p[i] -= lr * (m[i] / bc1) / ((v[i] / bc2).sqrt() + eps);
+                        }
+                    }
+                    OptAlgo::Adafactor => {
+                        let b2 = 1.0 - (t as f32).powf(-0.8).min(1.0 - b2a);
+                        if cols > 0 {
+                            let (rv, cv) = s.bufs.split_at_mut(1);
+                            let (rv, cv) = (&mut rv[0], &mut cv[0]);
+                            for i in 0..rows {
+                                let mean = (0..cols)
+                                    .map(|j| g[i * cols + j] * g[i * cols + j] + EPS1)
+                                    .sum::<f32>()
+                                    / cols as f32;
+                                rv[i] = b2 * rv[i] + (1.0 - b2) * mean;
+                            }
+                            for j in 0..cols {
+                                let mean = (0..rows)
+                                    .map(|i| g[i * cols + j] * g[i * cols + j] + EPS1)
+                                    .sum::<f32>()
+                                    / rows as f32;
+                                cv[j] = b2 * cv[j] + (1.0 - b2) * mean;
+                            }
+                            let row_mean = rv.iter().sum::<f32>().max(EPS1) / rows as f32;
+                            for i in 0..rows {
+                                let rfac = rv[i] / row_mean;
+                                for j in 0..cols {
+                                    p[i * cols + j] -= lr * g[i * cols + j]
+                                        / ((rfac * cv[j]).sqrt() + eps);
+                                }
+                            }
+                        } else {
+                            let v = &mut s.bufs[0];
+                            for i in 0..p.len() {
+                                v[i] = b2 * v[i] + (1.0 - b2) * (g[i] * g[i] + EPS1);
+                                p[i] -= lr * g[i] / ((1.0 * v[i]).sqrt() + eps);
+                            }
+                        }
+                    }
+                    OptAlgo::Sm3 => {
+                        if cols > 0 {
+                            let (rv, cv) = s.bufs.split_at_mut(1);
+                            let (rv, cv) = (&mut rv[0], &mut cv[0]);
+                            let mut new_rows = vec![0.0f32; rows];
+                            let mut new_cols = vec![0.0f32; cols];
+                            for i in 0..rows {
+                                for j in 0..cols {
+                                    let gij = g[i * cols + j];
+                                    let nu = rv[i].min(cv[j]) + gij * gij;
+                                    p[i * cols + j] -= lr * gij / (nu.sqrt() + eps);
+                                    new_rows[i] = new_rows[i].max(nu);
+                                    new_cols[j] = new_cols[j].max(nu);
+                                }
+                            }
+                            rv.copy_from_slice(&new_rows);
+                            cv.copy_from_slice(&new_cols);
+                        } else {
+                            let v = &mut s.bufs[0];
+                            for i in 0..p.len() {
+                                let nu = f32::INFINITY.min(v[i]) + g[i] * g[i];
+                                p[i] -= lr * g[i] / (nu.sqrt() + eps);
+                                v[i] = nu;
+                            }
+                        }
+                    }
+                    OptAlgo::AdamMini => {
+                        let (m, vb) = s.bufs.split_at_mut(1);
+                        let (m, vb) = (&mut m[0], &mut vb[0]);
+                        for i in 0..m.len() {
+                            m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+                        }
+                        let blocks: Vec<(usize, usize)> = if cols > 0 {
+                            (0..rows).map(|i| (i * cols, cols)).collect()
+                        } else {
+                            vec![(0, p.len())]
+                        };
+                        for (b, &(off, len)) in blocks.iter().enumerate() {
+                            let gsq = g[off..off + len].iter().map(|x| x * x).sum::<f32>()
+                                / len.max(1) as f32;
+                            vb[b] = b2a * vb[b] + (1.0 - b2a) * gsq;
+                            let scale = lr / ((vb[b] / bc2).sqrt() + eps);
+                            for i in off..off + len {
+                                p[i] -= scale * (m[i] / bc1);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// accumulation parity — the tentpole invariant, per rule × backend
+// ---------------------------------------------------------------------------
+
+#[test]
+fn accumulation_parity_bit_identical_for_every_rule_and_backend() {
+    // For M ∈ {1, 2, 4, 8}: folding M micro-batch gradients at gscale
+    // 1/M must be bit-identical to one fold of the (serially) summed
+    // gradient — and both must match the scalar oracle on the mean.
+    let lib = library();
+    let spec = tiny_spec(&lib);
+    let hy = Hyper::from_manifest(lib.manifest());
+    let lr = 0.01f32;
+    for algo in algos() {
+        for kernel in [false, true] {
+            let mk_backend = || -> UpdateBackend {
+                if kernel {
+                    UpdateBackend::kernel(lib.clone(), 16384).unwrap()
+                } else {
+                    UpdateBackend::host(hy)
+                }
+            };
+            for m in [1usize, 2, 4, 8] {
+                let tag = format!("{} kernel={kernel} M={m}", algo.name());
+                let tracker = MemoryTracker::new();
+                let mut split =
+                    ZooOpt::new(algo, &spec, hy, mk_backend(), mk_backend(), true, &tracker);
+                let mut fused =
+                    ZooOpt::new(algo, &spec, hy, mk_backend(), mk_backend(), true, &tracker);
+                let mut oracle = Oracle::new(algo, &spec, hy);
+
+                let mut rng = Rng::new(100 + m as u64);
+                let mut p_split = mk_params(&spec, &mut rng);
+                let mut p_fused: Vec<LayerParams> =
+                    p_split.iter().map(|l| LayerParams { flat: l.flat.clone() }).collect();
+                let mut p_oracle: Vec<LayerParams> =
+                    p_split.iter().map(|l| LayerParams { flat: l.flat.clone() }).collect();
+                let gscale = 1.0 / m as f32;
+
+                for t in 1..=3u64 {
+                    let micros: Vec<Vec<Vec<f32>>> =
+                        (0..m).map(|_| rand_grads(&spec, &mut rng)).collect();
+                    // serial left-fold sum, the order the split fold uses
+                    let mut gsum = micros[0].clone();
+                    for g in &micros[1..] {
+                        for (s, gl) in gsum.iter_mut().zip(g) {
+                            for (a, b) in s.iter_mut().zip(gl) {
+                                *a += *b;
+                            }
+                        }
+                    }
+
+                    split.begin_minibatch(t).unwrap();
+                    for g in &micros {
+                        for (l, gl) in g.iter().enumerate() {
+                            split.accumulate(l, gl, gscale).unwrap();
+                        }
+                    }
+                    split.apply(&mut p_split, lr).unwrap();
+
+                    fused.begin_minibatch(t).unwrap();
+                    for (l, gl) in gsum.iter().enumerate() {
+                        fused.accumulate(l, gl, gscale).unwrap();
+                    }
+                    fused.apply(&mut p_fused, lr).unwrap();
+
+                    assert_eq!(
+                        flat_bits(&p_split),
+                        flat_bits(&p_fused),
+                        "{tag} t={t}: M-way split diverged from fused fold"
+                    );
+
+                    // oracle on the exact mean (power-of-two scaling is
+                    // exact, so this is the same accumulator value)
+                    let mean: Vec<Vec<f32>> = gsum
+                        .iter()
+                        .map(|l| l.iter().map(|x| x * gscale).collect())
+                        .collect();
+                    oracle.step(&mut p_oracle, &mean, t, lr);
+                    assert_eq!(
+                        flat_bits(&p_split),
+                        flat_bits(&p_oracle),
+                        "{tag} t={t}: diverged from the serial scalar oracle"
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// seam plumbing + metering reconciliation (memmodel twin)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn seam_build_reconciles_exactly_with_memmodel() {
+    let lib = library();
+    let spec = tiny_spec(&lib);
+    let shapes = shapes_of(&spec);
+    for algo in algos() {
+        let zlib = lib.fork_with_opt(Some(algo));
+        let mut t = Trainer::new(zlib, cfg(1, 4)).unwrap();
+        let h = t.spec().hyper.clone();
+        let mut c = MarkovCorpus::new(h.vocab, DATA_SEED, 1);
+        t.train_step(&c.minibatch(4, h.microbatch, h.seq)).unwrap();
+        // state-resident: accumulator is optimizer state, no persistent
+        // gradient memory — measured == analytic, byte for byte
+        let analytic = zoo_state_bytes(algo, &shapes, true);
+        assert_eq!(t.optimizer_mut().state_bytes() as u64, analytic, "{}", algo.name());
+        assert_eq!(
+            t.tracker().peak(Category::OptimizerStates) as u64,
+            analytic,
+            "{}: tracker ledger",
+            algo.name()
+        );
+        assert_eq!(t.optimizer_mut().persistent_grad_bytes(), 0, "{}", algo.name());
+    }
+}
+
+#[test]
+fn ga_build_reconciles_exactly_with_memmodel() {
+    // cfg-selected zoo kinds keep the GA-style comparator metering: the
+    // accumulator is persistent *gradient* memory, excluded from state.
+    let lib = library().fork_with_opt(None); // shed any ambient ADAMA_OPT
+    let spec = tiny_spec(&lib);
+    let shapes = shapes_of(&spec);
+    let p_bytes = (spec.total_params() * 4) as u64;
+    for (kind, algo) in [
+        (OptimizerKind::AdamGA, OptAlgo::Adam),
+        (OptimizerKind::Adafactor, OptAlgo::Adafactor),
+        (OptimizerKind::Sm3, OptAlgo::Sm3),
+        (OptimizerKind::AdamMini, OptAlgo::AdamMini),
+    ] {
+        let mut c = cfg(1, 4);
+        c.optimizer = kind;
+        let mut t = Trainer::new(lib.clone(), c).unwrap();
+        let analytic = zoo_state_bytes(algo, &shapes, false);
+        assert_eq!(t.optimizer_mut().state_bytes() as u64, analytic, "{kind:?}");
+        assert_eq!(t.optimizer_mut().persistent_grad_bytes() as u64, p_bytes, "{kind:?}");
+        assert_eq!(t.tracker().peak(Category::OptimizerStates) as u64, analytic, "{kind:?}");
+    }
+}
+
+#[test]
+fn paper_scale_projection_matches_closed_forms() {
+    // satellite 4, projection half: the paper-scale analytic formula
+    // must equal an independently-summed closed form per rule.
+    let m = PaperModel::bert_large();
+    let shapes = paper_shapes(&m);
+    let p: u64 = shapes.iter().map(|&(r, c)| r * c.max(1)).sum();
+    let factored: u64 = shapes
+        .iter()
+        .map(|&(r, c)| if c > 0 { r + c } else { r })
+        .sum();
+    let row_blocks: u64 = shapes.iter().map(|&(r, c)| if c > 0 { r } else { 1 }).sum();
+    assert_eq!(zoo_state_bytes(OptAlgo::Adam, &shapes, false), 8 * p);
+    assert_eq!(zoo_state_bytes(OptAlgo::Adafactor, &shapes, false), 4 * factored);
+    assert_eq!(zoo_state_bytes(OptAlgo::Sm3, &shapes, false), 4 * factored);
+    assert_eq!(zoo_state_bytes(OptAlgo::AdamMini, &shapes, false), 4 * (p + row_blocks));
+    // the state-resident seam adds exactly one P-float accumulator
+    for algo in OptAlgo::ALL {
+        assert_eq!(
+            zoo_state_bytes(algo, &shapes, true) - zoo_state_bytes(algo, &shapes, false),
+            4 * p
+        );
+    }
+}
+
+#[test]
+fn spec_with_opt_beats_ambient_seam() {
+    // precedence: fork_with_opt replaces (or clears) whatever the library
+    // carries — the distributed spec `with_opt` routes through this.
+    let lib = library().fork_with_opt(Some(OptAlgo::Sm3));
+    assert_eq!(lib.executor().opt_algo(), Some(OptAlgo::Sm3));
+    let re = lib.fork_with_opt(Some(OptAlgo::Adafactor));
+    assert_eq!(re.executor().opt_algo(), Some(OptAlgo::Adafactor));
+    let cleared = lib.fork_with_opt(None);
+    assert_eq!(cleared.executor().opt_algo(), None);
+    // rank forks inherit the selection
+    let forked = re.fork_with_threads(2);
+    assert_eq!(forked.executor().opt_algo(), Some(OptAlgo::Adafactor));
+}
+
+// ---------------------------------------------------------------------------
+// cross-config bit parity: threads × backend through the full trainer
+// ---------------------------------------------------------------------------
+
+#[test]
+fn zoo_training_bits_survive_threads_and_backend() {
+    let lib = library();
+    for algo in algos() {
+        let run = |threads: usize, backend: OptimBackend| -> (Vec<u32>, Vec<Vec<u32>>) {
+            let zlib = lib.fork_with_opt(Some(algo)).fork_with_threads(threads);
+            let mut c = cfg(1, 2);
+            c.backend = backend;
+            let mut t = Trainer::new(zlib, c).unwrap();
+            let h = t.spec().hyper.clone();
+            let mut corpus = MarkovCorpus::new(h.vocab, DATA_SEED, 1);
+            let mut losses = Vec::new();
+            for _ in 0..3 {
+                let stats = t.train_step(&corpus.minibatch(2, h.microbatch, h.seq)).unwrap();
+                losses.push(stats.loss);
+            }
+            let params: Vec<Vec<f32>> = t.params().iter().map(|l| l.flat.clone()).collect();
+            (loss_bits(&losses), param_bits(&params))
+        };
+        let oracle = run(1, OptimBackend::Host);
+        for (threads, backend) in
+            [(4, OptimBackend::Host), (1, OptimBackend::Kernel), (4, OptimBackend::Kernel)]
+        {
+            let got = run(threads, backend);
+            assert_eq!(
+                got, oracle,
+                "{} threads={threads} {backend:?}: bits changed",
+                algo.name()
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// distributed legs: DP + ZeRO-S1 through every engine, ledger-exact
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dp_zoo_engines_match_serial_simulator_bit_for_bit() {
+    let lib = library();
+    for algo in algos() {
+        for m in worlds() {
+            let dp = |engine| {
+                run_data_parallel(
+                    lib.clone(),
+                    DpSpec::new(cfg(m, 2), SyncStrategy::Gradients, 2, DATA_SEED)
+                        .with_opt(algo)
+                        .with_engine(engine)
+                        .with_topology(Topology::Ring),
+                )
+                .unwrap_or_else(|e| panic!("dp zoo {} M={m}: {e:?}", algo.name()))
+            };
+            let oracle = dp(CollectiveEngine::Serial);
+            for engine in [CollectiveEngine::Channel, CollectiveEngine::Fabric] {
+                let got = dp(engine);
+                let tag = format!("dp zoo {} {} M={m}", algo.name(), engine.name());
+                assert_eq!(loss_bits(&got.losses), loss_bits(&oracle.losses), "{tag}");
+                assert_eq!(
+                    param_bits(&got.final_params),
+                    param_bits(&oracle.final_params),
+                    "{tag}"
+                );
+                assert_eq!(got.comm_bytes, oracle.comm_bytes, "{tag}: wire ledger");
+                assert_eq!(got.comm_ops, oracle.comm_ops, "{tag}: op ledger");
+                assert_eq!(
+                    got.per_rank_memory, oracle.per_rank_memory,
+                    "{tag}: MemStats ledger"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn zero1_zoo_engines_match_serial_simulator_bit_for_bit() {
+    let lib = library();
+    for algo in algos() {
+        for m in worlds().into_iter().filter(|&m| m >= 2) {
+            let z1 = |engine| {
+                run_zero1(
+                    lib.clone(),
+                    Zero1Spec::new(cfg(m, 2), 2, DATA_SEED)
+                        .with_opt(algo)
+                        .with_engine(engine)
+                        .with_topology(Topology::Ring),
+                )
+                .unwrap_or_else(|e| panic!("zero1 zoo {} M={m}: {e:?}", algo.name()))
+            };
+            let oracle = z1(CollectiveEngine::Serial);
+            for engine in [CollectiveEngine::Channel, CollectiveEngine::Fabric] {
+                let got = z1(engine);
+                let tag = format!("zero1 zoo {} {} M={m}", algo.name(), engine.name());
+                assert_eq!(loss_bits(&got.losses), loss_bits(&oracle.losses), "{tag}");
+                assert_eq!(
+                    param_bits(&got.final_params),
+                    param_bits(&oracle.final_params),
+                    "{tag}"
+                );
+                assert_eq!(got.comm_bytes, oracle.comm_bytes, "{tag}: wire ledger");
+                assert_eq!(got.comm_ops, oracle.comm_ops, "{tag}: op ledger");
+                assert_eq!(
+                    got.per_rank_memory, oracle.per_rank_memory,
+                    "{tag}: MemStats ledger"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn zero1_zoo_async_issue_matches_sync_bit_for_bit() {
+    // the async fabric path composes with the zoo's sharded accumulator:
+    // ticketed reduce-scatters change scheduling only.
+    let lib = library();
+    for algo in algos() {
+        for m in worlds().into_iter().filter(|&m| m >= 2) {
+            let z = |async_issue: bool, bucket: usize| {
+                run_zero1(
+                    lib.clone(),
+                    Zero1Spec::new(cfg(m, 2), 2, DATA_SEED)
+                        .with_opt(algo)
+                        .with_engine(CollectiveEngine::Fabric)
+                        .with_topology(Topology::Ring)
+                        .with_async(async_issue)
+                        .with_bucket_bytes(bucket),
+                )
+                .unwrap_or_else(|e| panic!("zero1 zoo async {} M={m}: {e:?}", algo.name()))
+            };
+            let sync = z(false, 0);
+            for bucket in [0usize, 4 << 10] {
+                let got = z(true, bucket);
+                let tag = format!("zero1 zoo async {} M={m} bucket={bucket}", algo.name());
+                assert_eq!(loss_bits(&got.losses), loss_bits(&sync.losses), "{tag}");
+                assert_eq!(
+                    param_bits(&got.final_params),
+                    param_bits(&sync.final_params),
+                    "{tag}"
+                );
+                assert_eq!(got.comm_bytes, sync.comm_bytes, "{tag}: wire ledger");
+                assert_eq!(got.comm_ops, sync.comm_ops, "{tag}: op ledger");
+            }
+        }
+    }
+}
+
+#[test]
+fn dp_zoo_rejects_state_sync_strategies() {
+    // (m, v) all-reduce (Eq. 7-8) and per-micro-batch gradient sync are
+    // AdamA-shaped; the zoo must refuse rather than silently diverge.
+    let lib = library();
+    for sync in [SyncStrategy::OptimizerStates, SyncStrategy::GradPerMicrobatch] {
+        let err = run_data_parallel(
+            lib.clone(),
+            DpSpec::new(cfg(2, 2), sync, 1, DATA_SEED).with_opt(OptAlgo::Adafactor),
+        );
+        let msg = format!("{:?}", err.unwrap_err());
+        assert!(msg.contains("AdamA"), "{sync:?}: {msg}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// end-to-end sanity: every rule actually trains
+// ---------------------------------------------------------------------------
+
+#[test]
+fn every_rule_reduces_tiny_lm_loss() {
+    let lib = library();
+    for algo in algos() {
+        let zlib = lib.fork_with_opt(Some(algo));
+        let mut t = Trainer::new(zlib, cfg(1, 2)).unwrap();
+        let h = t.spec().hyper.clone();
+        let mut corpus = MarkovCorpus::new(h.vocab, DATA_SEED, 1);
+        let eval_set = corpus.minibatch(8, h.microbatch, h.seq);
+        let (loss0, _) = t.eval(&eval_set).unwrap();
+        for _ in 0..12 {
+            t.train_step(&corpus.minibatch(2, h.microbatch, h.seq)).unwrap();
+        }
+        let (loss1, _) = t.eval(&eval_set).unwrap();
+        assert!(
+            loss1 < loss0,
+            "{}: loss {loss1} did not improve on {loss0}",
+            algo.name()
+        );
+    }
+}

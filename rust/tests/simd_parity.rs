@@ -116,6 +116,22 @@ fn every_simd_kernel_matches_host_math_at_0_ulp() {
             host_math::sgdm_update(&mut pw, &uw, 1e-2, 0.01);
             assert_eq!(bits(&u), bits(&uw), "sgdm acc {} n={n}", level.name());
             assert_eq!(bits(&p), bits(&pw), "sgdm_update {} n={n}", level.name());
+
+            // optimizer-zoo kernels (ADAMA_OPT): fac_update on a row
+            // with a non-trivial row factor (v0 is a non-negative
+            // column moment, as in training)
+            let mut p = p0.clone();
+            simd::fac_update(level, &mut p, &g, &v0, 1e-2, 1.25, EPS);
+            let mut pw = p0.clone();
+            host_math::fac_update(&mut pw, &g, &v0, 1e-2, 1.25, EPS);
+            assert_eq!(bits(&p), bits(&pw), "fac_update {} n={n}", level.name());
+
+            // mini_update with a block-shared scale
+            let mut p = p0.clone();
+            simd::mini_update(level, &mut p, &m0, 3e-3, 0.1);
+            let mut pw = p0.clone();
+            host_math::mini_update(&mut pw, &m0, 3e-3, 0.1);
+            assert_eq!(bits(&p), bits(&pw), "mini_update {} n={n}", level.name());
         }
     }
 }

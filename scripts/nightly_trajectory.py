@@ -14,7 +14,10 @@ Pulls four headline numbers out of the nightly bench run:
     `gemm_*` shape (from the `speedup_packed_vs_naive` field);
   * E6 — the concurrent-fabric-vs-serial DP step-time speedup at the
     largest rank count (from the `dp_fabric_vs_serial` rows) and the
-    async-vs-sync ZeRO-S1 issue speedup (`zero1_async_vs_sync` rows).
+    async-vs-sync ZeRO-S1 issue speedup (`zero1_async_vs_sync` rows);
+  * zoo — the `table2_opt_state_*` rows appended by table2_optimizers:
+    how many ADAMA_OPT rules reconciled measured-vs-memmodel state bytes
+    exactly, plus the smallest paper-scale state footprint.
 
 A bench that emitted **no rows** fails the run loudly (non-zero exit)
 instead of appending an empty trajectory entry: a missing/empty
@@ -122,6 +125,23 @@ def zero1_async_speedup(rows):
     return best
 
 
+def zoo_state(rows):
+    """table2_opt_state_* rows: (#rules, #reconciled, min paper GB)."""
+    total, ok, smallest = 0, 0, None
+    for r in rows:
+        op = r.get("op", "")
+        if op.startswith("table2_opt_state_"):
+            total += 1
+            if r.get("reconciled"):
+                ok += 1
+            gb = float(r.get("paper_scale_state_bytes", 0)) / 2**30
+            if smallest is None or gb < smallest[1]:
+                smallest = (op[len("table2_opt_state_"):], gb)
+    if total == 0:
+        return None
+    return (total, ok, smallest)
+
+
 def main():
     if len(sys.argv) != 3:
         sys.exit(__doc__)
@@ -143,6 +163,10 @@ def main():
     zasync = zero1_async_speedup(rows)
     if zasync:
         notes.append(f"async {zasync[1]:.2f}x (M={zasync[0]})")
+    zoo = zoo_state(rows)
+    if zoo:
+        total, ok, (best_name, best_gb) = zoo
+        notes.append(f"zoo {ok}/{total} reconciled (min {best_name} {best_gb:.2f} GB)")
     note = ", ".join(notes)
 
     threads = next((str(r["threads"]) for r in rows if "threads" in r), "?")
