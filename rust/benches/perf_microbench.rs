@@ -29,7 +29,11 @@
 //!   * async issue: ZeRO-S1+AdamA with per-layer reductions handed to the
 //!     fabric comm thread (`ADAMA_ASYNC=1` semantics) vs blocking issue,
 //!     at 2 and 4 ranks — `zero1_async_vs_sync` rows; a full run **fails**
-//!     if async falls below sync beyond a 10% noise allowance.
+//!     if async falls below sync beyond a 10% noise allowance;
+//!   * checkpoint I/O: `ADAMACK2` full-state container save (serialize +
+//!     per-section hash + atomic tmp/rename) and load (parse + hash
+//!     re-verify) for the tiny model, with MB/s per row — the cost floor
+//!     of a crash-safety cadence (`ADAMA_CKPT_EVERY`).
 //!
 //! Besides the human-readable table, writes `BENCH_perf.json` —
 //! machine-readable ns/elem per kernel per backend (each row tagged with
@@ -41,6 +45,7 @@ use adama::collective::{
 };
 use adama::config::{OptimBackend, OptimizerKind};
 use adama::data::MarkovCorpus;
+use adama::model::ckpt::TrainState;
 use adama::optim::{host_math, ChunkRunner, Hyper};
 use adama::runtime::hostexec::math;
 use adama::runtime::{simd, GemmMode, Library, MemoryPlan, ThreadPool, Value};
@@ -616,6 +621,42 @@ fn main() {
         }
     }
     println!("(engines verified bit-identical in rust/tests/fabric_parity.rs)");
+
+    banner("checkpoint: ADAMACK2 container save/load throughput (atomic tmp+rename)");
+    println!("{:<18} {:>12} {:>12} {:>12}", "op", "bytes", "ms/call", "MB/s");
+    {
+        let ccfg = cfg("tiny", OptimizerKind::AdamA, 2, 42);
+        let mut ct = Trainer::new(lib.clone(), ccfg).unwrap();
+        let ch = ct.spec().hyper.clone();
+        let mut ccorpus = MarkovCorpus::new(ch.vocab, 7, 1);
+        let cmbs = ccorpus.minibatch(2, ch.microbatch, ch.seq);
+        ct.train_step(&cmbs).unwrap();
+        let cdir = std::env::temp_dir().join(format!("adama_bench_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&cdir).expect("bench checkpoint dir");
+        let cpath = cdir.join("bench.ck2");
+        let state = ct.train_state(&[ccorpus.rng().clone()]).unwrap();
+        let st = bench(1, iters.min(8), || {
+            state.save(&cpath).unwrap();
+        });
+        let bytes = std::fs::metadata(&cpath).expect("bench checkpoint file").len() as usize;
+        let sl = bench(1, iters.min(8), || {
+            TrainState::load(&cpath).unwrap();
+        });
+        for (op, s) in [("checkpoint_save_ck2", &st), ("checkpoint_load_ck2", &sl)] {
+            let mbps = bytes as f64 / 1e6 / s.mean();
+            println!("{:<18} {:>12} {:>12.3} {:>12.1}", op, bytes, 1e3 * s.mean(), mbps);
+            results.push(obj(vec![
+                ("op", op.into()),
+                ("backend", "host".into()),
+                ("threads", pool_threads.into()),
+                ("bytes", bytes.into()),
+                ("ms_per_call", (s.mean() * 1e3).into()),
+                ("mb_per_s", mbps.into()),
+            ]));
+        }
+        let _ = std::fs::remove_dir_all(&cdir);
+    }
+    println!("(save is serialize + per-section FNV hash + tmp write + rename; load re-verifies)");
 
     banner("executor call count (instrumentation)");
     println!("exec calls so far: {}", lib.executor().exec_calls());

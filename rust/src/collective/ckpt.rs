@@ -1,0 +1,374 @@
+//! Distributed (world) checkpoints for the DP/ZeRO runners.
+//!
+//! A world checkpoint at step `N` is a *directory* `step{N:08}/` under the
+//! checkpoint root holding one `rank{r}.ck2` per rank (that rank's RNG
+//! data cursor and its optimizer-state shard) plus a `world.ck2` manifest
+//! (replicated params, loss history, comm-ledger snapshot, flow tag). All
+//! files are `ADAMACK2` containers ([`crate::model::ckpt`]) written
+//! atomically; the **manifest is written last, by rank 0**, so its
+//! presence is the commit marker — a crash at any earlier point leaves a
+//! directory that [`latest_valid`] recognizes as incomplete and skips in
+//! favor of the next older checkpoint.
+//!
+//! The write protocol ([`write_world`]) needs exactly two barriers:
+//!
+//! 1. every rank creates the step directory (racing `create_dir_all` is
+//!    fine) and atomically writes its own rank file;
+//! 2. **barrier** — all rank files exist, and no rank can issue further
+//!    ledger-visible traffic until the manifest is cut;
+//! 3. rank 0 snapshots the comm ledger (stable: barriers record no bytes
+//!    and no ops on any engine), writes `world.ck2`, and rotates old
+//!    checkpoints out;
+//! 4. **barrier** — peers resume only once the checkpoint is committed.
+//!
+//! Resharding: the manifest records the *saved* world size `M`, and rank
+//! files store ZeRO-S1 owned shards in the `(r+1) mod M` layout of
+//! [`CommHandle::shard_ranges`]. [`unshard_layer`] reassembles a full
+//! buffer from all `M` shards and [`shard_slice`] re-cuts it for a new
+//! world size `N`, so `N` ranks can deterministically resume a
+//! world-of-`M` checkpoint.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::comm::CommHandle;
+use super::Collective;
+use crate::coordinator::checkpoint;
+use crate::model::ckpt::{
+    decode_f32s, decode_layers, decode_rngs, encode_f32s, encode_layers, encode_rngs, put_u64,
+    u64_section, Container, OptSnapshot, SEC_FPRINT, SEC_LOSSES, SEC_OPT, SEC_PARAMS, SEC_RNGS,
+    SEC_STEP,
+};
+use crate::tensor::Rng;
+
+/// Manifest-only: the saved world size `M`.
+pub const SEC_WORLD: &str = "WORLD";
+/// Rank-file-only: which rank wrote the file.
+pub const SEC_RANK: &str = "RANK";
+/// Manifest-only: the flow tag (e.g. `dp:state-allreduce`, `zero1:adama`)
+/// — a resumed run must re-enter the same flow.
+pub const SEC_FLOW: &str = "FLOW";
+/// Manifest-only: comm-ledger snapshot, `bytes u64 LE ++ ops u64 LE`.
+pub const SEC_LEDGER: &str = "LEDGER";
+
+/// Canonical rank-file name inside a step directory.
+pub fn rank_file(step_dir: &Path, rank: usize) -> PathBuf {
+    step_dir.join(format!("rank{rank}.ck2"))
+}
+
+/// Canonical manifest name inside a step directory.
+pub fn manifest_file(step_dir: &Path) -> PathBuf {
+    step_dir.join("world.ck2")
+}
+
+/// One rank's private state at a checkpoint cut.
+#[derive(Debug, Clone)]
+pub struct RankState {
+    pub rank: usize,
+    /// The rank's data-stream RNG cursor.
+    pub rng: Rng,
+    /// The rank's optimizer-state shard (flow-specific tag and layout).
+    pub opt: OptSnapshot,
+}
+
+/// The world-level manifest payload — supplied by rank 0 only.
+#[derive(Debug, Clone)]
+pub struct WorldMeta {
+    pub flow: String,
+    /// Replicated parameters (identical on every rank by the sync
+    /// invariant; rank 0's copy is written).
+    pub params: Vec<Vec<f32>>,
+    /// Per-step loss history, one entry per completed step.
+    pub losses: Vec<f32>,
+}
+
+/// A fully parsed world checkpoint.
+#[derive(Debug, Clone)]
+pub struct WorldState {
+    pub fingerprint: u64,
+    pub step: u64,
+    /// The world size the checkpoint was *saved* at (`M`); a resume may
+    /// run a different world size and reshard.
+    pub world: usize,
+    pub flow: String,
+    pub params: Vec<Vec<f32>>,
+    pub losses: Vec<f32>,
+    /// `(bytes, ops)` comm-ledger snapshot at the cut — the base a
+    /// resumed run adds its fresh board's stats to, so a recovered run's
+    /// final ledger equals an uninterrupted run's.
+    pub ledger: (u64, u64),
+    /// Per-rank states, index == rank, exactly `world` entries.
+    pub ranks: Vec<RankState>,
+}
+
+/// One rank's side of the two-barrier world-checkpoint protocol (module
+/// docs). Every rank passes its own `mine`; rank 0 — and only rank 0 —
+/// additionally passes the manifest payload. `ledger_base` is the ledger
+/// snapshot of the checkpoint this run resumed from (zeros for a fresh
+/// run). Callers must have waited out all in-flight async tickets first.
+#[allow(clippy::too_many_arguments)]
+pub fn write_world<C: Collective + ?Sized>(
+    comm: &C,
+    root: &Path,
+    keep: usize,
+    fingerprint: u64,
+    step: u64,
+    mine: &RankState,
+    meta: Option<&WorldMeta>,
+    ledger_base: (u64, u64),
+) -> Result<()> {
+    ensure!(
+        mine.rank == comm.rank(),
+        "write_world: rank state says rank {}, collective handle says rank {}",
+        mine.rank,
+        comm.rank()
+    );
+    ensure!(
+        (comm.rank() == 0) == meta.is_some(),
+        "write_world: rank 0 (and only rank 0) supplies the manifest payload"
+    );
+    let dir = checkpoint::step_dir(root, step);
+    std::fs::create_dir_all(&dir)
+        .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+    let mut c = Container::new();
+    c.push(SEC_FPRINT, fingerprint.to_le_bytes().to_vec());
+    c.push(SEC_STEP, step.to_le_bytes().to_vec());
+    c.push(SEC_RANK, (mine.rank as u64).to_le_bytes().to_vec());
+    c.push(SEC_RNGS, encode_rngs(std::slice::from_ref(&mine.rng)));
+    c.push(SEC_OPT, mine.opt.encode());
+    c.write_atomic(&rank_file(&dir, mine.rank))?;
+    comm.barrier()?;
+    if let Some(meta) = meta {
+        // Stable snapshot: every rank has finished its step traffic (it
+        // reached the barrier above) and can only be blocked in the
+        // barrier below, and barriers are ledger-invisible on every
+        // engine — so no stat can move under this read.
+        let stats = comm.stats();
+        let ledger = (ledger_base.0 + stats.bytes(), ledger_base.1 + stats.op_count());
+        let mut m = Container::new();
+        m.push(SEC_FPRINT, fingerprint.to_le_bytes().to_vec());
+        m.push(SEC_STEP, step.to_le_bytes().to_vec());
+        m.push(SEC_WORLD, (comm.world() as u64).to_le_bytes().to_vec());
+        m.push(SEC_FLOW, meta.flow.as_bytes().to_vec());
+        m.push(SEC_PARAMS, encode_layers(&meta.params));
+        m.push(SEC_LOSSES, encode_f32s(&meta.losses));
+        let mut lb = Vec::with_capacity(16);
+        put_u64(&mut lb, ledger.0);
+        put_u64(&mut lb, ledger.1);
+        m.push(SEC_LEDGER, lb);
+        m.write_atomic(&manifest_file(&dir))?;
+        checkpoint::rotate(root, keep)?;
+    }
+    comm.barrier()?;
+    Ok(())
+}
+
+/// Strictly load the world checkpoint in step directory `dir`: manifest
+/// first, then every rank file the manifest promises, cross-checking each
+/// one's fingerprint / step / rank stamp.
+pub fn load_world(dir: &Path) -> Result<WorldState> {
+    let mc = Container::read(&manifest_file(dir))?;
+    let fingerprint = u64_section(&mc, SEC_FPRINT)?;
+    let step = u64_section(&mc, SEC_STEP)?;
+    let world = u64_section(&mc, SEC_WORLD)? as usize;
+    ensure!(world >= 1, "world checkpoint claims {world} ranks");
+    let flow = String::from_utf8(mc.get(SEC_FLOW)?.to_vec())
+        .context("FLOW section: invalid utf-8")?;
+    let params = decode_layers(mc.get(SEC_PARAMS)?)?;
+    let losses = decode_f32s(mc.get(SEC_LOSSES)?)?;
+    let lb = mc.get(SEC_LEDGER)?;
+    ensure!(lb.len() == 16, "LEDGER section must be 16 bytes, got {}", lb.len());
+    let ledger = (
+        u64::from_le_bytes(lb[..8].try_into().unwrap()),
+        u64::from_le_bytes(lb[8..].try_into().unwrap()),
+    );
+    let mut ranks = Vec::with_capacity(world);
+    for r in 0..world {
+        let path = rank_file(dir, r);
+        let rc = Container::read(&path)?;
+        let ctx = || format!("rank file {}", path.display());
+        ensure!(
+            u64_section(&rc, SEC_FPRINT)? == fingerprint,
+            "{}: fingerprint differs from the manifest",
+            ctx()
+        );
+        ensure!(
+            u64_section(&rc, SEC_STEP)? == step,
+            "{}: step differs from the manifest",
+            ctx()
+        );
+        let stamped = u64_section(&rc, SEC_RANK)? as usize;
+        ensure!(stamped == r, "{}: stamped rank {stamped}, expected {r}", ctx());
+        let rngs = decode_rngs(rc.get(SEC_RNGS)?)?;
+        ensure!(rngs.len() == 1, "{}: wanted 1 rng cursor, got {}", ctx(), rngs.len());
+        let opt = OptSnapshot::decode(rc.get(SEC_OPT)?)?;
+        ranks.push(RankState { rank: r, rng: rngs[0].clone(), opt });
+    }
+    Ok(WorldState { fingerprint, step, world, flow, params, losses, ledger, ranks })
+}
+
+/// Newest *fully valid* world checkpoint under `root`. Entries are probed
+/// newest-first; one that fails to parse — a crash before the manifest
+/// commit, a corrupted section, a missing rank file, a step stamp that
+/// contradicts the directory name — is skipped in favor of the next older
+/// one. Single-rank `.ck2` files are not world checkpoints and are
+/// skipped too.
+pub fn latest_valid(root: &Path) -> Result<Option<(u64, WorldState)>> {
+    for (step, path) in checkpoint::list_steps(root)?.into_iter().rev() {
+        if !path.is_dir() {
+            continue;
+        }
+        if let Ok(ws) = load_world(&path) {
+            if ws.step == step {
+                return Ok(Some((step, ws)));
+            }
+        }
+    }
+    Ok(None)
+}
+
+/// Reassemble one layer's full buffer from the per-rank owned ZeRO-S1
+/// shards: `shards[r]` is rank `r`-of-`shards.len()`'s slice, and rank
+/// `r` owns `shard_ranges(len, world)[(r+1) % world]`.
+pub fn unshard_layer(len: usize, shards: &[Vec<f32>]) -> Result<Vec<f32>> {
+    let world = shards.len();
+    ensure!(world >= 1, "unshard_layer needs at least one shard");
+    let ranges = CommHandle::shard_ranges(len, world);
+    let mut full = vec![0.0f32; len];
+    for (r, s) in shards.iter().enumerate() {
+        let range = ranges[(r + 1) % world].clone();
+        if s.len() != range.len() {
+            bail!(
+                "rank {r} shard has {} element(s), the (r+1) mod {world} layout of a \
+                 {len}-element layer wants {}",
+                s.len(),
+                range.len()
+            );
+        }
+        full[range].copy_from_slice(s);
+    }
+    Ok(full)
+}
+
+/// Rank `rank`-of-`world`'s owned slice of a full buffer (same layout as
+/// [`unshard_layer`]) — the re-cut side of resharding.
+pub fn shard_slice(full: &[f32], rank: usize, world: usize) -> Vec<f32> {
+    let ranges = CommHandle::shard_ranges(full.len(), world);
+    full[ranges[(rank + 1) % world].clone()].to_vec()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::Fabric;
+
+    #[test]
+    fn write_load_roundtrip_and_latest_valid() {
+        let root = std::env::temp_dir().join(format!("adama_wck_{}", std::process::id()));
+        std::fs::remove_dir_all(&root).ok();
+        let m = 2;
+        for step in [2u64, 4] {
+            let handles = Fabric::new(m);
+            let mut joins = Vec::new();
+            for h in handles {
+                let root = root.clone();
+                joins.push(std::thread::spawn(move || {
+                    let rank = h.rank();
+                    // real traffic so the ledger snapshot is nonzero
+                    let mut d = vec![1.0f32; 8];
+                    h.all_reduce_sum(&mut d).unwrap();
+                    let mine = RankState {
+                        rank,
+                        rng: Rng::from_state(100 + rank as u64, None),
+                        opt: OptSnapshot {
+                            tag: "zero:adama".into(),
+                            t: step,
+                            bufs: vec![vec![rank as f32; 3]],
+                        },
+                    };
+                    let meta = (rank == 0).then(|| WorldMeta {
+                        flow: "zero1:adama".into(),
+                        params: vec![vec![1.0, 2.0], vec![3.0; 3]],
+                        losses: (0..step).map(|s| s as f32).collect(),
+                    });
+                    write_world(&h, &root, 2, 0xABCD, step, &mine, meta.as_ref(), (7, 3))
+                        .unwrap();
+                }));
+            }
+            for j in joins {
+                j.join().unwrap();
+            }
+        }
+        let (step, ws) = latest_valid(&root).unwrap().expect("a valid checkpoint");
+        assert_eq!(step, 4);
+        assert_eq!(ws.fingerprint, 0xABCD);
+        assert_eq!(ws.world, 2);
+        assert_eq!(ws.flow, "zero1:adama");
+        assert_eq!(ws.params, vec![vec![1.0, 2.0], vec![3.0; 3]]);
+        assert_eq!(ws.losses, vec![0.0, 1.0, 2.0, 3.0]);
+        // ledger = base (7, 3) + one all-reduce per rank on this board:
+        // m=2, len 8 → 32 wire bytes and 1 op per rank
+        assert_eq!(ws.ledger, (7 + 2 * 32, 3 + 2));
+        assert_eq!(ws.ranks.len(), 2);
+        assert_eq!(ws.ranks[0].rng, Rng::from_state(100, None));
+        assert_eq!(ws.ranks[1].opt.bufs, vec![vec![1.0f32; 3]]);
+        // both steps retained under keep=2, the write is discoverable via
+        // the shared rotation machinery
+        assert_eq!(checkpoint::list_steps(&root).unwrap().len(), 2);
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn latest_valid_skips_incomplete_and_corrupt_entries() {
+        let root = std::env::temp_dir().join(format!("adama_wckv_{}", std::process::id()));
+        std::fs::remove_dir_all(&root).ok();
+        // step 1: a complete single-rank world checkpoint
+        {
+            let mut handles = Fabric::new(1);
+            let h = handles.pop().unwrap();
+            let mine = RankState {
+                rank: 0,
+                rng: Rng::from_state(1, None),
+                opt: OptSnapshot { tag: "adama".into(), t: 1, bufs: vec![] },
+            };
+            let meta = WorldMeta {
+                flow: "dp:state-allreduce".into(),
+                params: vec![vec![0.5]],
+                losses: vec![1.0],
+            };
+            write_world(&h, &root, 8, 0x11, 1, &mine, Some(&meta), (0, 0)).unwrap();
+        }
+        // step 2: rank file only — crashed before the manifest commit
+        let d2 = checkpoint::step_dir(&root, 2);
+        std::fs::create_dir_all(&d2).unwrap();
+        std::fs::write(rank_file(&d2, 0), b"half-written").unwrap();
+        // step 3: manifest present but corrupt
+        let d3 = checkpoint::step_dir(&root, 3);
+        std::fs::create_dir_all(&d3).unwrap();
+        std::fs::write(manifest_file(&d3), b"garbage").unwrap();
+
+        let (step, ws) = latest_valid(&root).unwrap().expect("falls back to the valid one");
+        assert_eq!(step, 1);
+        assert_eq!(ws.flow, "dp:state-allreduce");
+        // an empty root is a clean None, not an error
+        std::fs::remove_dir_all(&root).ok();
+        assert!(latest_valid(&root).unwrap().is_none());
+    }
+
+    #[test]
+    fn shard_unshard_roundtrip() {
+        for &world in &[1usize, 2, 3, 5] {
+            for &len in &[0usize, 1, 4, 7, 13] {
+                let full: Vec<f32> = (0..len).map(|i| i as f32 * 0.5 - 1.0).collect();
+                let shards: Vec<Vec<f32>> =
+                    (0..world).map(|r| shard_slice(&full, r, world)).collect();
+                let back = unshard_layer(len, &shards).unwrap();
+                assert_eq!(back, full, "world {world} len {len}");
+            }
+        }
+        // a shard that does not fit the layout is an error naming the rank
+        let err = unshard_layer(4, &[vec![0.0; 3], vec![0.0; 1]]).unwrap_err();
+        assert!(format!("{err}").contains("rank 0"), "{err}");
+    }
+}

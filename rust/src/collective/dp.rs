@@ -22,15 +22,17 @@
 //! (`Library::fork_with_threads`), composing with `runtime::pool` /
 //! `runtime::simd` without changing a single bit.
 
+use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use super::fabric::{serial, Fabric, Ticket, Topology};
+use super::ckpt as wckpt;
+use super::fabric::{serial, Fabric, FaultPlan, PeerDeath, Ticket, Topology};
 use super::{rank_threads, Collective, CollectiveEngine, CommGroup, CommStats};
 use crate::config::{OptimizerKind, TrainConfig};
-use crate::coordinator::{MemorySnapshot, Trainer, WorldMemory};
+use crate::coordinator::{CheckpointPolicy, MemorySnapshot, Trainer, WorldMemory};
 use crate::data::{MarkovCorpus, MicroBatch};
 use crate::memory::MemoryReport;
 use crate::runtime::{Library, OptAlgo};
@@ -80,6 +82,19 @@ pub struct DpSpec {
     /// seam (`ADAMA_OPT` / `host_with_opt`). Zoo rules pair with
     /// [`SyncStrategy::Gradients`].
     pub opt: Option<OptAlgo>,
+    /// World checkpointing: directory + cadence/retention. `None` =
+    /// resolve the strict `ADAMA_CKPT_DIR` / `ADAMA_CKPT_EVERY` /
+    /// `ADAMA_CKPT_KEEP` knobs (all unset = off). A `stepNNNNNNNN/`
+    /// directory of per-rank shards plus a rank-0 manifest is cut at
+    /// every due step boundary ([`super::ckpt`]).
+    pub checkpoint: Option<(PathBuf, CheckpointPolicy)>,
+    /// Resume from the newest valid world checkpoint under the
+    /// checkpoint directory before training (requires `checkpoint`);
+    /// absent any valid checkpoint the run starts fresh.
+    pub resume: bool,
+    /// Deterministic rank death for crash-recovery drills; `None` = the
+    /// strict `ADAMA_FAULT` knob (unset = none). Fabric engine only.
+    pub fault: Option<FaultPlan>,
 }
 
 impl DpSpec {
@@ -94,6 +109,9 @@ impl DpSpec {
             topology: None,
             async_issue: None,
             opt: None,
+            checkpoint: None,
+            resume: false,
+            fault: None,
         }
     }
 
@@ -121,6 +139,21 @@ impl DpSpec {
         self.opt = Some(opt);
         self
     }
+
+    pub fn with_checkpoint(mut self, dir: impl Into<PathBuf>, policy: CheckpointPolicy) -> Self {
+        self.checkpoint = Some((dir.into(), policy));
+        self
+    }
+
+    pub fn with_resume(mut self) -> Self {
+        self.resume = true;
+        self
+    }
+
+    pub fn with_fault(mut self, plan: FaultPlan) -> Self {
+        self.fault = Some(plan);
+        self
+    }
 }
 
 /// Result of a distributed run.
@@ -137,6 +170,9 @@ pub struct DpReport {
     /// Coordinator + executor peaks for every rank, in rank order.
     pub per_rank_memory: Vec<MemorySnapshot>,
     pub engine: CollectiveEngine,
+    /// `Some(step)` when the (possibly supervisor-restarted) run that
+    /// produced this report started from a step-`step` world checkpoint.
+    pub resumed_from: Option<u64>,
 }
 
 impl DpReport {
@@ -171,17 +207,83 @@ pub fn run_data_parallel(lib: Arc<Library>, spec: DpSpec) -> Result<DpReport> {
     if spec.async_issue.is_none() {
         spec.async_issue = Some(super::fabric::async_from_env()?);
     }
+    if spec.checkpoint.is_none() {
+        spec.checkpoint = crate::coordinator::checkpoint::from_env()?;
+    }
+    if spec.fault.is_none() {
+        spec.fault = FaultPlan::from_env()?;
+    }
     let tpr = rank_threads(spec.threads_per_rank, m)?;
-    match spec.engine {
-        CollectiveEngine::Serial => run_dp_serial(lib, spec, topo, tpr),
-        CollectiveEngine::Channel => {
-            // the channel ring's fold order *is* the ring topology; a
-            // tree request must not be silently downgraded
-            super::ensure_ring_only(topo)?;
-            run_dp_threaded(lib, spec, CommGroup::new(m), tpr)
+    if spec.engine == CollectiveEngine::Serial {
+        ensure!(
+            spec.checkpoint.is_none() && !spec.resume && spec.fault.is_none(),
+            "the serial engine does not drive checkpoints, resume, or fault injection — \
+             use the fabric or channel engine"
+        );
+        return run_dp_serial(lib, spec, topo, tpr);
+    }
+    if let Some(f) = spec.fault {
+        ensure!(
+            spec.engine == CollectiveEngine::Fabric,
+            "fault injection requires the fabric engine (got '{}')",
+            spec.engine.name()
+        );
+        ensure!(
+            f.rank < m,
+            "fault plan names rank {} but the world has {m} rank(s)",
+            f.rank
+        );
+    }
+    let flow = format!("dp:{}", spec.sync.name());
+    let mut resume_ws: Option<Arc<wckpt::WorldState>> = None;
+    if spec.resume {
+        let (dir, _) = spec.checkpoint.as_ref().context(
+            "resume requires a checkpoint directory (ADAMA_CKPT_DIR / DpSpec::with_checkpoint)",
+        )?;
+        resume_ws = wckpt::latest_valid(dir)?.map(|(_, ws)| Arc::new(ws));
+    }
+    // Supervisor loop: run the world; when a rank dies (injected fault or
+    // real defect) and checkpoints are configured, restart every rank
+    // from the newest valid world checkpoint with the fault disarmed.
+    let mut fault_arm = spec.fault;
+    let mut attempts = 0usize;
+    loop {
+        if let Some(ws) = resume_ws.as_deref() {
+            ensure!(
+                ws.flow == flow,
+                "checkpoint was written by flow '{}', this run is '{flow}'",
+                ws.flow
+            );
         }
-        CollectiveEngine::Fabric => {
-            run_dp_threaded(lib, spec, Fabric::with_topology(m, topo), tpr)
+        let res = match spec.engine {
+            CollectiveEngine::Channel => {
+                // the channel ring's fold order *is* the ring topology; a
+                // tree request must not be silently downgraded
+                super::ensure_ring_only(topo)?;
+                let handles = CommGroup::new(m);
+                run_dp_threaded(lib.clone(), spec.clone(), handles, tpr, resume_ws.clone())
+            }
+            CollectiveEngine::Fabric => {
+                let handles = Fabric::with_topology(m, topo);
+                if let Some(f) = fault_arm {
+                    handles[f.rank].arm_fault(f);
+                }
+                run_dp_threaded(lib.clone(), spec.clone(), handles, tpr, resume_ws.clone())
+            }
+            CollectiveEngine::Serial => unreachable!("serial handled above"),
+        };
+        match res {
+            Ok(report) => return Ok(report),
+            Err(e) => {
+                let died = e.chain().any(|c| c.downcast_ref::<PeerDeath>().is_some());
+                let Some((dir, _)) = spec.checkpoint.as_ref() else { return Err(e) };
+                attempts += 1;
+                if !died || attempts >= 3 {
+                    return Err(e);
+                }
+                resume_ws = wckpt::latest_valid(dir)?.map(|(_, ws)| Arc::new(ws));
+                fault_arm = None;
+            }
         }
     }
 }
@@ -191,8 +293,14 @@ fn run_dp_threaded<C: Collective + 'static>(
     spec: DpSpec,
     handles: Vec<C>,
     tpr: usize,
+    resume: Option<Arc<wckpt::WorldState>>,
 ) -> Result<DpReport> {
     let stats = handles[0].stats().clone();
+    // fresh handles carry fresh ledgers; a resumed run reports the
+    // checkpointed ledger plus what this attempt adds, which is exactly
+    // the straight-run ledger (abandoned partial steps are re-done)
+    let ledger_base = resume.as_deref().map(|ws| ws.ledger).unwrap_or((0, 0));
+    let resumed_from = resume.as_deref().map(|ws| ws.step);
     let t0 = Instant::now();
 
     let mut joins = Vec::new();
@@ -207,11 +315,33 @@ fn run_dp_threaded<C: Collective + 'static>(
         // bit-identical.
         let lib = lib.fork_with_threads(tpr);
         let spec = spec.clone();
-        joins.push(std::thread::spawn(move || worker(lib, spec, comm)));
+        let resume = resume.clone();
+        joins.push(std::thread::spawn(move || worker(lib, spec, comm, resume)));
     }
+    // Join every rank before surfacing an error: bailing on the first
+    // Err would detach still-running peer threads mid-collective. A
+    // rank death outranks the survivors' collateral errors — it is the
+    // root cause and the one the supervisor can recover from.
     let mut results: Vec<WorkerOut> = Vec::new();
+    let mut death: Option<anyhow::Error> = None;
+    let mut other: Option<anyhow::Error> = None;
     for j in joins {
-        results.push(j.join().map_err(|_| anyhow::anyhow!("worker panicked"))??);
+        let joined = j.join().map_err(|_| anyhow::anyhow!("worker panicked"));
+        match joined.and_then(|r| r) {
+            Ok(out) => results.push(out),
+            Err(e) if e.chain().any(|c| c.downcast_ref::<PeerDeath>().is_some()) => {
+                death.get_or_insert(e);
+            }
+            Err(e) => {
+                other.get_or_insert(e);
+            }
+        }
+    }
+    if let Some(e) = death {
+        return Err(e);
+    }
+    if let Some(e) = other {
+        return Err(e);
     }
     let elapsed_s = t0.elapsed().as_secs_f64();
 
@@ -226,12 +356,13 @@ fn run_dp_threaded<C: Collective + 'static>(
     Ok(DpReport {
         losses: r0.losses.clone(),
         final_params: r0.params.clone(),
-        comm_bytes: stats.bytes(),
-        comm_ops: stats.op_count(),
+        comm_bytes: ledger_base.0 + stats.bytes(),
+        comm_ops: ledger_base.1 + stats.op_count(),
         elapsed_s,
         memory: r0.mem.tracker,
         per_rank_memory: results.iter().map(|r| r.mem).collect(),
         engine: spec.engine,
+        resumed_from,
     })
 }
 
@@ -241,17 +372,48 @@ struct WorkerOut {
     mem: MemorySnapshot,
 }
 
-fn worker<C: Collective>(lib: Arc<Library>, spec: DpSpec, comm: C) -> Result<WorkerOut> {
+fn worker<C: Collective>(
+    lib: Arc<Library>,
+    spec: DpSpec,
+    comm: C,
+    resume: Option<Arc<wckpt::WorldState>>,
+) -> Result<WorkerOut> {
     let m = comm.world();
+    let rank = comm.rank();
     let n = spec.cfg.accum_steps;
     let mut trainer = Trainer::new(lib, spec.cfg.clone())?;
     let h = trainer.spec().hyper.clone();
     // same language (structure seed), disjoint stream per rank
-    let mut corpus =
-        MarkovCorpus::new(h.vocab, spec.data_seed, 1_000_003 * (comm.rank() as u64 + 1));
+    let mut corpus = MarkovCorpus::new(h.vocab, spec.data_seed, 1_000_003 * (rank as u64 + 1));
 
     let mut losses = Vec::with_capacity(spec.steps as usize);
-    for _ in 0..spec.steps {
+    let mut start = 0u64;
+    if let Some(ws) = resume.as_deref() {
+        // Replicated state (params / step / optimizer) restores through
+        // the single-rank path. The DP sync invariant makes the saved
+        // optimizer state identical on every rank, so any rank file can
+        // serve a rank the saved world did not have.
+        let rs = &ws.ranks[rank.min(ws.world - 1)];
+        trainer.restore_state(&crate::model::ckpt::TrainState {
+            fingerprint: ws.fingerprint,
+            step: ws.step,
+            params: ws.params.clone(),
+            opt: rs.opt.clone(),
+            rngs: Vec::new(),
+            losses: ws.losses.clone(),
+        })?;
+        // data cursors are per-rank streams: a rank the saved world had
+        // continues its stream; a new rank starts its own from scratch
+        if rank < ws.world {
+            corpus.set_rng(ws.ranks[rank].rng.clone());
+        }
+        losses.extend_from_slice(&ws.losses);
+        start = ws.step;
+    }
+    let ledger_base = resume.as_deref().map(|ws| ws.ledger).unwrap_or((0, 0));
+
+    for step in start + 1..=spec.steps {
+        comm.begin_step(step);
         let mbs = corpus.minibatch(n, h.microbatch, h.seq);
         let loss = match spec.sync {
             SyncStrategy::OptimizerStates => {
@@ -342,6 +504,33 @@ fn worker<C: Collective>(lib: Arc<Library>, spec: DpSpec, comm: C) -> Result<Wor
         let mut l = vec![loss];
         comm.all_reduce_mean(&mut l)?;
         losses.push(l[0]);
+
+        if let Some((dir, policy)) = spec.checkpoint.as_ref() {
+            if policy.due(step) {
+                let opt = trainer.optimizer_mut().export_state()?;
+                let fingerprint = crate::model::ckpt::config_fingerprint(
+                    trainer.spec(),
+                    trainer.config(),
+                    &opt.tag,
+                );
+                let mine = wckpt::RankState { rank, rng: corpus.rng().clone(), opt };
+                let meta = (rank == 0).then(|| wckpt::WorldMeta {
+                    flow: format!("dp:{}", spec.sync.name()),
+                    params: trainer.params().iter().map(|p| p.flat.clone()).collect(),
+                    losses: losses.clone(),
+                });
+                wckpt::write_world(
+                    &comm,
+                    dir,
+                    policy.keep_last_n,
+                    fingerprint,
+                    step,
+                    &mine,
+                    meta.as_ref(),
+                    ledger_base,
+                )?;
+            }
+        }
     }
 
     Ok(WorkerOut {
@@ -540,5 +729,6 @@ fn run_dp_serial(
         memory: per_rank_memory[0].tracker,
         per_rank_memory,
         engine: CollectiveEngine::Serial,
+        resumed_from: None,
     })
 }

@@ -69,6 +69,22 @@
 //! A handle dropped with async work still queued first **drains** its
 //! comm thread — peers blocked in those same collectives complete
 //! normally — and only then abandons the gate.
+//!
+//! ## Deterministic fault injection
+//!
+//! For crash-recovery testing a handle can be *armed* with a
+//! [`FaultPlan`] (`ADAMA_FAULT=rank:step[:op]`,
+//! [`FabricHandle::arm_fault`]): at the chosen 1-based step, immediately
+//! before the rank's `(op+1)`-th collective call of that step, the handle
+//! kills itself — it abandons the gate exactly as a crashed process
+//! would, and every later collective on it keeps failing. Survivors
+//! blocked in any collective fail with a [`PeerDeath`] error naming the
+//! dead rank and step (`err.downcast_ref::<PeerDeath>()`), which is what
+//! the distributed runners' supervisors catch to trigger checkpoint
+//! recovery. The op index counts collective *calls* in step order (a
+//! bucketed batch counts once; barriers count), driven by
+//! [`FabricHandle::begin_step`] — so the kill point is a deterministic
+//! function of the plan, never of thread timing.
 
 use std::ops::Range;
 use std::sync::atomic::Ordering;
@@ -179,6 +195,87 @@ pub fn bucket_bytes_from_env() -> Result<usize> {
     parse_bucket_bytes(std::env::var("ADAMA_BUCKET_BYTES").ok().as_deref())
 }
 
+/// A scheduled rank death for crash-recovery testing (`ADAMA_FAULT`).
+///
+/// The armed rank kills itself at 1-based step `step`, immediately before
+/// its `(op+1)`-th collective call of that step (`op = 0` → before the
+/// step's first collective). The kill abandons the gate exactly as a
+/// crashed process would; see the module docs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub rank: usize,
+    pub step: u64,
+    pub op: u64,
+}
+
+impl FaultPlan {
+    /// Strictly resolve an `ADAMA_FAULT` value: unset/empty = no fault;
+    /// otherwise `<rank>:<step>[:<op>]` with a 1-based step. Anything
+    /// else is an error naming the accepted form (no silent fallback).
+    pub fn parse(spec: Option<&str>) -> Result<Option<FaultPlan>> {
+        let s = match spec.map(str::trim) {
+            Some(s) if !s.is_empty() => s,
+            _ => return Ok(None),
+        };
+        let bad = || {
+            anyhow::anyhow!(
+                "invalid ADAMA_FAULT '{s}': expected <rank>:<step>[:<op>] — kill rank <rank> \
+                 at 1-based step <step> before its (<op>+1)-th collective call of that step \
+                 (unset = no fault)"
+            )
+        };
+        let parts: Vec<&str> = s.split(':').map(str::trim).collect();
+        if parts.len() < 2 || parts.len() > 3 {
+            return Err(bad());
+        }
+        let rank = parts[0].parse::<usize>().map_err(|_| bad())?;
+        let step = match parts[1].parse::<u64>() {
+            Ok(t) if t >= 1 => t,
+            _ => return Err(bad()),
+        };
+        let op = match parts.get(2) {
+            Some(p) => p.parse::<u64>().map_err(|_| bad())?,
+            None => 0,
+        };
+        Ok(Some(FaultPlan { rank, step, op }))
+    }
+
+    /// Fault plan from the `ADAMA_FAULT` environment variable.
+    pub fn from_env() -> Result<Option<FaultPlan>> {
+        Self::parse(std::env::var("ADAMA_FAULT").ok().as_deref())
+    }
+}
+
+/// The error every party to a rank death observes: the dying rank itself
+/// (`injected = true`) and every survivor that was blocked in — or later
+/// enters — a collective on the same board (`injected = false`). Carried
+/// as the `anyhow` source so supervisors can
+/// `err.downcast_ref::<PeerDeath>()` to decide whether checkpoint
+/// recovery applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PeerDeath {
+    /// The rank that died.
+    pub rank: usize,
+    /// The 1-based step the rank died in (0 if it never entered a step).
+    pub step: u64,
+    /// True on the dying rank's own error; false on survivors.
+    pub injected: bool,
+}
+
+impl std::fmt::Display for PeerDeath {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "fabric: rank {} died at step {}{}",
+            self.rank,
+            self.step,
+            if self.injected { " (injected fault)" } else { "" }
+        )
+    }
+}
+
+impl std::error::Error for PeerDeath {}
+
 /// Element-wise `dst[i] = dst[i] + src[i]` — the single f32 operation all
 /// reduction chains are built from. The per-element addition order *is*
 /// the determinism contract; nothing here may reassociate it.
@@ -257,12 +354,33 @@ struct GateState {
     /// Handles dropped so far — nonzero while anyone still waits means a
     /// peer can never arrive.
     gone: usize,
+    /// Set when a rank died via an injected fault — (rank, step), so
+    /// survivors can name the dead rank instead of a generic drop.
+    dead: Option<(usize, u64)>,
+}
+
+/// The error a waiter surfaces when the gate can never complete: a
+/// [`PeerDeath`] naming the dead rank after an injected fault, the legacy
+/// messages for a plain handle drop.
+fn gone_error(s: &GateState, at_entry: bool) -> anyhow::Error {
+    if let Some((rank, step)) = s.dead {
+        return anyhow::Error::new(PeerDeath { rank, step, injected: false });
+    }
+    if at_entry {
+        anyhow::anyhow!(
+            "fabric: {} rank handle(s) dropped mid-run — every rank must enter every \
+             collective, in the same order",
+            s.gone
+        )
+    } else {
+        anyhow::anyhow!("fabric: a peer rank exited while this rank was blocked in a collective")
+    }
 }
 
 impl Gate {
     fn new() -> Self {
         Self {
-            state: Mutex::new(GateState { arrived: 0, generation: 0, gone: 0 }),
+            state: Mutex::new(GateState { arrived: 0, generation: 0, gone: 0, dead: None }),
             cv: Condvar::new(),
         }
     }
@@ -273,12 +391,9 @@ impl Gate {
 
     fn wait(&self, world: usize) -> Result<()> {
         let mut s = self.lock();
-        ensure!(
-            s.gone == 0,
-            "fabric: {} rank handle(s) dropped mid-run — every rank must enter every \
-             collective, in the same order",
-            s.gone
-        );
+        if s.gone != 0 {
+            return Err(gone_error(&s, true));
+        }
         s.arrived += 1;
         if s.arrived == world {
             s.arrived = 0;
@@ -297,7 +412,7 @@ impl Gate {
                 // later entrant must see the dropped-peer error, not a
                 // short-counted (garbage-folding) barrier.
                 s.arrived -= 1;
-                bail!("fabric: a peer rank exited while this rank was blocked in a collective");
+                return Err(gone_error(&s, false));
             }
             s = self.cv.wait(s).unwrap_or_else(PoisonError::into_inner);
         }
@@ -307,6 +422,18 @@ impl Gate {
     fn abandon(&self) {
         let mut s = self.lock();
         s.gone += 1;
+        drop(s);
+        self.cv.notify_all();
+    }
+
+    /// Abandon on behalf of an injected rank death: like [`Gate::abandon`]
+    /// but records who died so waiters surface a [`PeerDeath`].
+    fn abandon_as(&self, rank: usize, step: u64) {
+        let mut s = self.lock();
+        s.gone += 1;
+        if s.dead.is_none() {
+            s.dead = Some((rank, step));
+        }
         drop(s);
         self.cv.notify_all();
     }
@@ -441,9 +568,25 @@ impl Fabric {
             stats: Arc::new(CommStats::default()),
         });
         (0..world)
-            .map(|rank| FabricHandle { rank, board: board.clone(), comm: Mutex::new(None) })
+            .map(|rank| FabricHandle {
+                rank,
+                board: board.clone(),
+                comm: Mutex::new(None),
+                fault: Mutex::new(None),
+            })
             .collect()
     }
+}
+
+/// Progress of an armed [`FaultPlan`] on one handle.
+struct FaultState {
+    plan: FaultPlan,
+    /// Current 1-based step ([`FabricHandle::begin_step`]); 0 before the
+    /// first step, so a fault can never fire outside the step loop.
+    step: u64,
+    /// Collective calls already made this step.
+    ops: u64,
+    fired: bool,
 }
 
 /// One rank's endpoint in the fabric. Moves into the rank's worker
@@ -460,6 +603,9 @@ pub struct FabricHandle {
     /// exactly one total order and compute-thread/comm-thread entries can
     /// never interleave mid-collective.
     comm: Mutex<Option<CommThread>>,
+    /// Armed fault plan and its progress ([`FabricHandle::arm_fault`]);
+    /// `None` on unfaulted handles (the overwhelmingly common case).
+    fault: Mutex<Option<FaultState>>,
 }
 
 impl Drop for FabricHandle {
@@ -678,6 +824,53 @@ impl FabricHandle {
         &self.board.stats
     }
 
+    /// Arm a deterministic fault on this handle: it will kill itself at
+    /// `plan.step`, before its `(plan.op+1)`-th collective call of that
+    /// step (see the module docs). The runner arms only the handle whose
+    /// rank the plan names.
+    pub fn arm_fault(&self, plan: FaultPlan) {
+        *self.fault.lock().unwrap_or_else(PoisonError::into_inner) =
+            Some(FaultState { plan, step: 0, ops: 0, fired: false });
+    }
+
+    /// Mark the start of 1-based step `step` for fault accounting (resets
+    /// the per-step op counter). No-op unless a fault is armed.
+    pub fn begin_step(&self, step: u64) {
+        if let Some(fs) = self.fault.lock().unwrap_or_else(PoisonError::into_inner).as_mut() {
+            fs.step = step;
+            fs.ops = 0;
+        }
+    }
+
+    /// Fires the armed fault when its (step, op) point is reached: the
+    /// handle abandons the gate as a crashed process would and this (and
+    /// every later) collective call errors with [`PeerDeath`]. Called once
+    /// per *logical* collective entry — the `_unchecked` internals let the
+    /// sync wrappers delegate to the async path without double-counting.
+    fn fault_check(&self) -> Result<()> {
+        let mut guard = self.fault.lock().unwrap_or_else(PoisonError::into_inner);
+        let Some(fs) = guard.as_mut() else { return Ok(()) };
+        if fs.fired {
+            return Err(anyhow::Error::new(PeerDeath {
+                rank: self.rank,
+                step: fs.step,
+                injected: true,
+            }));
+        }
+        // `>` catches a plan op past the step's last collective: the rank
+        // then dies on the next step's first call instead of surviving.
+        let due = fs.step > fs.plan.step || (fs.step == fs.plan.step && fs.ops >= fs.plan.op);
+        fs.ops += 1;
+        if due {
+            fs.fired = true;
+            let step = fs.step;
+            drop(guard);
+            self.board.gate.abandon_as(self.rank, step);
+            return Err(anyhow::Error::new(PeerDeath { rank: self.rank, step, injected: true }));
+        }
+        Ok(())
+    }
+
     fn comm_active(&self) -> bool {
         self.comm.lock().unwrap_or_else(PoisonError::into_inner).is_some()
     }
@@ -717,7 +910,14 @@ impl FabricHandle {
 
     /// Async all-reduce (sum): the buffer moves to the comm thread; the
     /// ticket's single [`ReducedBuf`] owns the whole range.
-    pub fn all_reduce_sum_async(&self, mut data: Vec<f32>) -> Ticket {
+    pub fn all_reduce_sum_async(&self, data: Vec<f32>) -> Ticket {
+        if let Err(e) = self.fault_check() {
+            return Ticket::ready(Err(e));
+        }
+        self.all_reduce_sum_async_unchecked(data)
+    }
+
+    fn all_reduce_sum_async_unchecked(&self, mut data: Vec<f32>) -> Ticket {
         self.issue(move |rank, board| {
             ep_all_reduce_sum(rank, board, &mut data)?;
             let n = data.len();
@@ -735,7 +935,14 @@ impl FabricHandle {
     /// folded exactly as an individual reduce-scatter would fold it, and
     /// the ledger records one op per buffer. Every rank must pass
     /// identically-sized buffer batches in the same order.
-    pub fn reduce_scatter_many_async(&self, mut bufs: Vec<Vec<f32>>) -> Ticket {
+    pub fn reduce_scatter_many_async(&self, bufs: Vec<Vec<f32>>) -> Ticket {
+        if let Err(e) = self.fault_check() {
+            return Ticket::ready(Err(e));
+        }
+        self.reduce_scatter_many_async_unchecked(bufs)
+    }
+
+    fn reduce_scatter_many_async_unchecked(&self, mut bufs: Vec<Vec<f32>>) -> Ticket {
         self.issue(move |rank, board| {
             let owned = ep_reduce_scatter_many(rank, board, &mut bufs)?;
             Ok(bufs
@@ -749,8 +956,9 @@ impl FabricHandle {
     /// All-reduce (sum) in place: every rank ends with the element-wise
     /// sum, reduced in the fixed per-shard order (see module docs).
     pub fn all_reduce_sum(&self, data: &mut [f32]) -> Result<()> {
+        self.fault_check()?;
         if self.comm_active() {
-            let out = self.all_reduce_sum_async(data.to_vec()).wait()?;
+            let out = self.all_reduce_sum_async_unchecked(data.to_vec()).wait()?;
             data.copy_from_slice(&out[0].data);
             return Ok(());
         }
@@ -772,8 +980,9 @@ impl FabricHandle {
     /// cross-rank sum; other regions are left untouched (callers must not
     /// read them, matching the channel ring's contract).
     pub fn reduce_scatter_sum(&self, data: &mut [f32]) -> Result<Range<usize>> {
+        self.fault_check()?;
         if self.comm_active() {
-            let mut out = self.reduce_scatter_sum_async(data.to_vec()).wait()?;
+            let mut out = self.reduce_scatter_many_async_unchecked(vec![data.to_vec()]).wait()?;
             let rb = out.pop().expect("one buffer in, one buffer out");
             data[rb.owned.clone()].copy_from_slice(&rb.data[rb.owned.clone()]);
             return Ok(rb.owned);
@@ -784,6 +993,7 @@ impl FabricHandle {
     /// All-gather: each rank contributes the shard it owns (reduce-scatter
     /// layout); on return the whole buffer is consistent on every rank.
     pub fn all_gather_owned(&self, data: &mut [f32]) -> Result<()> {
+        self.fault_check()?;
         if self.comm_active() {
             let mut buf = data.to_vec();
             let out = self
@@ -801,6 +1011,7 @@ impl FabricHandle {
 
     /// Barrier: returns once every rank has entered.
     pub fn barrier(&self) -> Result<()> {
+        self.fault_check()?;
         if self.comm_active() {
             return self
                 .issue(|_rank, board| {
@@ -1381,6 +1592,101 @@ mod tests {
         assert_eq!(bits(&second), bits(&[30.0f32; 16]));
         assert_eq!(bits(&a), bits(&[3.0f32; 16]));
         assert_eq!(bits(&b), bits(&[30.0f32; 16]));
+    }
+
+    #[test]
+    fn fault_plan_parse_is_strict() {
+        assert_eq!(FaultPlan::parse(None).unwrap(), None);
+        assert_eq!(FaultPlan::parse(Some("")).unwrap(), None);
+        assert_eq!(
+            FaultPlan::parse(Some("1:3")).unwrap(),
+            Some(FaultPlan { rank: 1, step: 3, op: 0 })
+        );
+        assert_eq!(
+            FaultPlan::parse(Some(" 0:2:5 ")).unwrap(),
+            Some(FaultPlan { rank: 0, step: 2, op: 5 })
+        );
+        for bad in ["1", "1:0", "x:2", "1:2:z", "1:2:3:4", "-1:2", "1:-2"] {
+            let err = FaultPlan::parse(Some(bad)).unwrap_err();
+            assert!(format!("{err}").contains("<rank>:<step>[:<op>]"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn injected_fault_kills_rank_and_names_it_to_survivors() {
+        let handles = Fabric::new(3);
+        handles[1].arm_fault(FaultPlan { rank: 1, step: 2, op: 0 });
+        let mut joins = Vec::new();
+        for h in handles {
+            joins.push(std::thread::spawn(move || {
+                let rank = h.rank();
+                let mut res = Ok(());
+                for step in 1..=3u64 {
+                    h.begin_step(step);
+                    let mut d = vec![1.0f32; 8];
+                    res = h.all_reduce_sum(&mut d);
+                    if res.is_err() {
+                        break;
+                    }
+                }
+                (rank, res)
+            }));
+        }
+        for j in joins {
+            let (rank, res) = j.join().unwrap();
+            let err = res.unwrap_err();
+            let death = err
+                .downcast_ref::<PeerDeath>()
+                .unwrap_or_else(|| panic!("rank {rank} error must downcast: {err:?}"));
+            assert_eq!(death.rank, 1, "every party names the dead rank");
+            assert_eq!(death.step, 2, "every party names the death step");
+            assert_eq!(death.injected, rank == 1, "only the dying rank is 'injected'");
+            let msg = format!("{err}");
+            assert!(msg.contains("fabric") && msg.contains("rank 1"), "{msg}");
+        }
+    }
+
+    #[test]
+    fn fault_op_offset_counts_collective_calls() {
+        // op 1: the step's first collective completes, the second kills
+        let handles = Fabric::new(2);
+        handles[0].arm_fault(FaultPlan { rank: 0, step: 1, op: 1 });
+        let mut joins = Vec::new();
+        for h in handles {
+            joins.push(std::thread::spawn(move || {
+                h.begin_step(1);
+                let mut d = vec![1.0f32; 4];
+                let first = h.all_reduce_sum(&mut d);
+                let second = h.all_reduce_sum(&mut d);
+                (first, second, d)
+            }));
+        }
+        let outs: Vec<_> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        for (rank, (first, second, d)) in outs.into_iter().enumerate() {
+            first.unwrap_or_else(|e| panic!("rank {rank}: op 0 must complete: {e:?}"));
+            assert_eq!(bits(&d), bits(&[2.0f32; 4]), "rank {rank}");
+            let err = second.unwrap_err();
+            let death = err.downcast_ref::<PeerDeath>().expect("downcast");
+            assert_eq!((death.rank, death.step), (0, 1));
+        }
+    }
+
+    #[test]
+    fn fault_fires_on_async_issue_as_ticket_error() {
+        let handles = Fabric::new(2);
+        handles[1].arm_fault(FaultPlan { rank: 1, step: 1, op: 0 });
+        let mut joins = Vec::new();
+        for h in handles {
+            joins.push(std::thread::spawn(move || {
+                h.begin_step(1);
+                h.all_reduce_sum_async(vec![1.0f32; 8]).wait().map(|_| ())
+            }));
+        }
+        for j in joins {
+            let err = j.join().unwrap().unwrap_err();
+            let death = err.downcast_ref::<PeerDeath>().expect("downcast");
+            assert_eq!((death.rank, death.step), (1, 1));
+        }
     }
 
     #[test]

@@ -21,6 +21,7 @@
 //! volume* match what a real ring interconnect would do — which is
 //! exactly what the paper's Figure 7 measures.
 
+pub mod ckpt;
 mod comm;
 mod cost;
 mod dp;
@@ -37,7 +38,7 @@ pub use cost::{ClusterSpec, CommCostModel};
 pub use dp::{run_data_parallel, DpReport, DpSpec, SyncStrategy};
 pub use fabric::{
     async_from_env, bucket_bytes_from_env, parse_async, parse_bucket_bytes, Fabric, FabricHandle,
-    ReducedBuf, Ticket, Topology,
+    FaultPlan, PeerDeath, ReducedBuf, Ticket, Topology,
 };
 pub use zero::{run_zero1, Zero1Report, Zero1Spec};
 
@@ -109,6 +110,12 @@ pub trait Collective: Send {
     fn rank(&self) -> usize;
     fn world(&self) -> usize;
     fn stats(&self) -> &Arc<CommStats>;
+
+    /// Mark the start of 1-based step `step` — the hook the fabric's
+    /// deterministic fault injection counts collective calls against
+    /// ([`FabricHandle::begin_step`]). Default: no-op (engines without
+    /// fault support).
+    fn begin_step(&self, _step: u64) {}
     fn all_reduce_sum(&self, data: &mut [f32]) -> Result<()>;
     fn all_reduce_mean(&self, data: &mut [f32]) -> Result<()>;
     fn reduce_scatter_sum(&self, data: &mut [f32]) -> Result<Range<usize>>;
@@ -185,6 +192,10 @@ impl Collective for CommHandle {
 impl Collective for FabricHandle {
     fn rank(&self) -> usize {
         FabricHandle::rank(self)
+    }
+
+    fn begin_step(&self, step: u64) {
+        FabricHandle::begin_step(self, step)
     }
 
     fn world(&self) -> usize {

@@ -32,18 +32,21 @@
 //! (default), channel ring, or the serial simulator — with bit-identical
 //! results (`rust/tests/fabric_parity.rs`).
 
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{bail, ensure, Context, Result};
 
+use super::ckpt as wckpt;
 use super::comm::CommHandle;
-use super::fabric::{serial, Fabric, Ticket, Topology};
+use super::fabric::{serial, Fabric, FaultPlan, PeerDeath, Ticket, Topology};
 use super::{rank_threads, Collective, CollectiveEngine, CommGroup, CommStats};
 use crate::config::{OptimBackend, OptimizerKind, TrainConfig};
-use crate::coordinator::{MemorySnapshot, Trainer, WorldMemory};
+use crate::coordinator::{CheckpointPolicy, MemorySnapshot, Trainer, WorldMemory};
 use crate::data::{MarkovCorpus, MicroBatch};
 use crate::memory::{Allocation, Category, MemoryReport, MemoryTracker};
+use crate::model::ckpt::{config_fingerprint, OptSnapshot};
 use crate::model::ModelSpec;
 use crate::optim::{host_math, Hyper, NullOpt, UpdateBackend, ZooStates};
 use crate::runtime::{Library, OptAlgo};
@@ -74,6 +77,19 @@ pub struct Zero1Spec {
     /// seam (`ADAMA_OPT` / `host_with_opt`). With a zoo rule resolved the
     /// run takes the sharded-accumulator zoo flow instead of AdamA/GA.
     pub opt: Option<OptAlgo>,
+    /// World checkpointing: directory + cadence/retention. `None` =
+    /// resolve the strict `ADAMA_CKPT_DIR` / `ADAMA_CKPT_EVERY` /
+    /// `ADAMA_CKPT_KEEP` knobs (all unset = off). Rank files carry the
+    /// ZeRO-S1 owned state shards, so a resume may reshard to a
+    /// different world size ([`super::ckpt`]).
+    pub checkpoint: Option<(PathBuf, CheckpointPolicy)>,
+    /// Resume from the newest valid world checkpoint under the
+    /// checkpoint directory before training (requires `checkpoint`);
+    /// absent any valid checkpoint the run starts fresh.
+    pub resume: bool,
+    /// Deterministic rank death for crash-recovery drills; `None` = the
+    /// strict `ADAMA_FAULT` knob (unset = none). Fabric engine only.
+    pub fault: Option<FaultPlan>,
 }
 
 impl Zero1Spec {
@@ -88,6 +104,9 @@ impl Zero1Spec {
             async_issue: None,
             bucket_bytes: None,
             opt: None,
+            checkpoint: None,
+            resume: false,
+            fault: None,
         }
     }
 
@@ -120,6 +139,21 @@ impl Zero1Spec {
         self.opt = Some(opt);
         self
     }
+
+    pub fn with_checkpoint(mut self, dir: impl Into<PathBuf>, policy: CheckpointPolicy) -> Self {
+        self.checkpoint = Some((dir.into(), policy));
+        self
+    }
+
+    pub fn with_resume(mut self) -> Self {
+        self.resume = true;
+        self
+    }
+
+    pub fn with_fault(mut self, plan: FaultPlan) -> Self {
+        self.fault = Some(plan);
+        self
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -134,6 +168,9 @@ pub struct Zero1Report {
     /// Coordinator + executor peaks for every rank, in rank order.
     pub per_rank_memory: Vec<MemorySnapshot>,
     pub engine: CollectiveEngine,
+    /// `Some(step)` when the (possibly supervisor-restarted) run that
+    /// produced this report started from a step-`step` world checkpoint.
+    pub resumed_from: Option<u64>,
 }
 
 impl Zero1Report {
@@ -239,17 +276,89 @@ pub fn run_zero1(lib: Arc<Library>, spec: Zero1Spec) -> Result<Zero1Report> {
     if spec.bucket_bytes.is_none() {
         spec.bucket_bytes = Some(super::fabric::bucket_bytes_from_env()?);
     }
+    if spec.checkpoint.is_none() {
+        spec.checkpoint = crate::coordinator::checkpoint::from_env()?;
+    }
+    if spec.fault.is_none() {
+        spec.fault = FaultPlan::from_env()?;
+    }
     let tpr = rank_threads(spec.threads_per_rank, m)?;
-    match spec.engine {
-        CollectiveEngine::Serial => run_zero_serial(lib, spec, topo, tpr),
-        CollectiveEngine::Channel => {
-            // the channel ring's fold order *is* the ring topology; a
-            // tree request must not be silently downgraded
-            super::ensure_ring_only(topo)?;
-            run_zero_threaded(lib, spec, CommGroup::new(m), tpr)
+    if spec.engine == CollectiveEngine::Serial {
+        ensure!(
+            spec.checkpoint.is_none() && !spec.resume && spec.fault.is_none(),
+            "the serial engine does not drive checkpoints, resume, or fault injection — \
+             use the fabric or channel engine"
+        );
+        return run_zero_serial(lib, spec, topo, tpr);
+    }
+    if let Some(f) = spec.fault {
+        ensure!(
+            spec.engine == CollectiveEngine::Fabric,
+            "fault injection requires the fabric engine (got '{}')",
+            spec.engine.name()
+        );
+        ensure!(
+            f.rank < m,
+            "fault plan names rank {} but the world has {m} rank(s)",
+            f.rank
+        );
+    }
+    let flow = match lib.executor().opt_algo() {
+        Some(algo) => format!("zero1:zoo:{}", algo.name()),
+        None => match spec.cfg.optimizer {
+            OptimizerKind::AdamA => "zero1:adama".to_string(),
+            _ => "zero1:adamga".to_string(),
+        },
+    };
+    let mut resume_ws: Option<Arc<wckpt::WorldState>> = None;
+    if spec.resume {
+        let (dir, _) = spec.checkpoint.as_ref().context(
+            "resume requires a checkpoint directory (ADAMA_CKPT_DIR / Zero1Spec::with_checkpoint)",
+        )?;
+        resume_ws = wckpt::latest_valid(dir)?.map(|(_, ws)| Arc::new(ws));
+    }
+    // Supervisor loop: run the world; when a rank dies (injected fault or
+    // real defect) and checkpoints are configured, restart every rank
+    // from the newest valid world checkpoint with the fault disarmed.
+    let mut fault_arm = spec.fault;
+    let mut attempts = 0usize;
+    loop {
+        if let Some(ws) = resume_ws.as_deref() {
+            ensure!(
+                ws.flow == flow,
+                "checkpoint was written by flow '{}', this run is '{flow}'",
+                ws.flow
+            );
         }
-        CollectiveEngine::Fabric => {
-            run_zero_threaded(lib, spec, Fabric::with_topology(m, topo), tpr)
+        let res = match spec.engine {
+            CollectiveEngine::Channel => {
+                // the channel ring's fold order *is* the ring topology; a
+                // tree request must not be silently downgraded
+                super::ensure_ring_only(topo)?;
+                let handles = CommGroup::new(m);
+                run_zero_threaded(lib.clone(), spec.clone(), handles, tpr, resume_ws.clone())
+            }
+            CollectiveEngine::Fabric => {
+                let handles = Fabric::with_topology(m, topo);
+                if let Some(f) = fault_arm {
+                    handles[f.rank].arm_fault(f);
+                }
+                run_zero_threaded(lib.clone(), spec.clone(), handles, tpr, resume_ws.clone())
+            }
+            CollectiveEngine::Serial => unreachable!("serial handled above"),
+        };
+        match res {
+            Ok(report) => return Ok(report),
+            Err(e) => {
+                let died = e.chain().any(|c| c.downcast_ref::<PeerDeath>().is_some());
+                let Some((dir, _)) = spec.checkpoint.as_ref() else { return Err(e) };
+                attempts += 1;
+                if !died || attempts >= 3 {
+                    return Err(e);
+                }
+                resume_ws = wckpt::latest_valid(dir)?.map(|(_, ws)| Arc::new(ws));
+                fault_arm = None;
+            }
         }
     }
 }
@@ -259,8 +368,14 @@ fn run_zero_threaded<C: Collective + 'static>(
     spec: Zero1Spec,
     handles: Vec<C>,
     tpr: usize,
+    resume: Option<Arc<wckpt::WorldState>>,
 ) -> Result<Zero1Report> {
     let stats = handles[0].stats().clone();
+    // fresh handles carry fresh ledgers; a resumed run reports the
+    // checkpointed ledger plus what this attempt adds, which is exactly
+    // the straight-run ledger (abandoned partial steps are re-done)
+    let ledger_base = resume.as_deref().map(|ws| ws.ledger).unwrap_or((0, 0));
+    let resumed_from = resume.as_deref().map(|ws| ws.step);
     let t0 = Instant::now();
 
     let mut joins = Vec::new();
@@ -270,20 +385,42 @@ fn run_zero_threaded<C: Collective + 'static>(
         // arena when stashing is enabled — same bits either way.
         let lib = lib.fork_with_threads(tpr);
         let spec = spec.clone();
+        let resume = resume.clone();
         // the seam travels with the fork, so the per-rank library decides
         // the flow exactly as `run_zero1`'s gate did
         joins.push(std::thread::spawn(move || match lib.executor().opt_algo() {
-            Some(algo) => worker_zoo(lib, spec, algo, comm),
+            Some(algo) => worker_zoo(lib, spec, algo, comm, resume),
             None => match spec.cfg.optimizer {
-                OptimizerKind::AdamA => worker_adama(lib, spec, comm),
-                OptimizerKind::AdamGA => worker_ga(lib, spec, comm),
+                OptimizerKind::AdamA => worker_adama(lib, spec, comm, resume),
+                OptimizerKind::AdamGA => worker_ga(lib, spec, comm, resume),
                 k => bail!("ZeRO-S1 supports adama|adamga, got {:?}", k),
             },
         }));
     }
-    let mut results = Vec::new();
+    // Join every rank before surfacing an error: bailing on the first
+    // Err would detach still-running peer threads mid-collective. A
+    // rank death outranks the survivors' collateral errors — it is the
+    // root cause and the one the supervisor can recover from.
+    let mut results: Vec<WorkerOut> = Vec::new();
+    let mut death: Option<anyhow::Error> = None;
+    let mut other: Option<anyhow::Error> = None;
     for j in joins {
-        results.push(j.join().map_err(|_| anyhow::anyhow!("zero1 worker panicked"))??);
+        let joined = j.join().map_err(|_| anyhow::anyhow!("zero1 worker panicked"));
+        match joined.and_then(|r| r) {
+            Ok(out) => results.push(out),
+            Err(e) if e.chain().any(|c| c.downcast_ref::<PeerDeath>().is_some()) => {
+                death.get_or_insert(e);
+            }
+            Err(e) => {
+                other.get_or_insert(e);
+            }
+        }
+    }
+    if let Some(e) = death {
+        return Err(e);
+    }
+    if let Some(e) = other {
+        return Err(e);
     }
     let elapsed_s = t0.elapsed().as_secs_f64();
 
@@ -296,12 +433,13 @@ fn run_zero_threaded<C: Collective + 'static>(
     Ok(Zero1Report {
         losses: r0.losses.clone(),
         final_params: r0.params.clone(),
-        comm_bytes: stats.bytes(),
-        comm_ops: stats.op_count(),
+        comm_bytes: ledger_base.0 + stats.bytes(),
+        comm_ops: ledger_base.1 + stats.op_count(),
         elapsed_s,
         memory: r0.mem.tracker,
         per_rank_memory: results.iter().map(|r| r.mem).collect(),
         engine: spec.engine,
+        resumed_from,
     })
 }
 
@@ -324,6 +462,135 @@ fn snapshot(trainer: &Trainer, tracker: &MemoryTracker) -> MemorySnapshot {
         tracker: tracker.report(),
         host: trainer.library().executor().memory(),
     }
+}
+
+/// Optimizer-snapshot tag of the ZeRO-S1 + AdamA flow (`bufs` = per-layer
+/// `m` shards then per-layer `v` shards, owned-shard layout).
+const TAG_ZERO_ADAMA: &str = "zero:adama";
+/// Same layout for the ZeRO-S1 + GA flow (the accumulator is zeroed at
+/// every step start, so only (m, v) live across a step boundary).
+const TAG_ZERO_ADAMGA: &str = "zero:adamga";
+
+/// Flow-agnostic half of a ZeRO resume: fingerprint gate, per-rank
+/// snapshot tag/step cross-checks, replicated parameters, step counter,
+/// and this rank's data cursor (a rank the saved world did not have
+/// starts its own stream from scratch).
+fn resume_restore(
+    trainer: &mut Trainer,
+    corpus: &mut MarkovCorpus,
+    ws: &wckpt::WorldState,
+    tag: &str,
+    rank: usize,
+) -> Result<()> {
+    let want = config_fingerprint(trainer.spec(), trainer.config(), tag);
+    ensure!(
+        ws.fingerprint == want,
+        "checkpoint fingerprint {:#018x} does not match this run's {want:#018x} — \
+         model/optimizer/schedule changed since the save",
+        ws.fingerprint
+    );
+    for (r, rs) in ws.ranks.iter().enumerate() {
+        ensure!(
+            rs.opt.tag == tag,
+            "rank {r} optimizer snapshot is '{}', this flow wants '{tag}'",
+            rs.opt.tag
+        );
+        ensure!(
+            rs.opt.t == ws.step,
+            "rank {r} snapshot step {} contradicts the manifest step {}",
+            rs.opt.t,
+            ws.step
+        );
+    }
+    let n_layers = trainer.spec().layers.len();
+    ensure!(
+        ws.params.len() == n_layers,
+        "checkpoint holds {} layer(s), the model has {n_layers}",
+        ws.params.len()
+    );
+    for (l, saved) in ws.params.iter().enumerate() {
+        let flat = &mut trainer.params_mut()[l].flat;
+        ensure!(
+            flat.len() == saved.len(),
+            "layer {l}: checkpoint holds {} element(s), the model wants {}",
+            saved.len(),
+            flat.len()
+        );
+        flat.copy_from_slice(saved);
+    }
+    trainer.set_step(ws.step);
+    if rank < ws.world {
+        corpus.set_rng(ws.ranks[rank].rng.clone());
+    }
+    Ok(())
+}
+
+/// Re-cut saved shard buffers for this rank at the current world size.
+/// Every saved rank holds `bufs = [group₀ layer₀.., group₁ layer₀..]` —
+/// `per / n_layers` groups (e.g. m then v) of one owned shard per layer
+/// in the `(r+1) mod M` layout; the groups are reassembled layer by
+/// layer ([`wckpt::unshard_layer`]) and re-sliced for `rank`-of-`world`.
+fn reshard_bufs(
+    ws: &wckpt::WorldState,
+    lens: &[usize],
+    rank: usize,
+    world: usize,
+) -> Result<Vec<Vec<f32>>> {
+    let n_layers = lens.len();
+    let per = ws.ranks[0].opt.bufs.len();
+    ensure!(
+        n_layers > 0 && per % n_layers == 0,
+        "snapshot holds {per} shard buffer(s) for {n_layers} layer(s)"
+    );
+    for (r, rs) in ws.ranks.iter().enumerate() {
+        ensure!(
+            rs.opt.bufs.len() == per,
+            "rank {r} snapshot has {} shard buffer(s), rank 0 has {per}",
+            rs.opt.bufs.len()
+        );
+    }
+    let mut out = Vec::with_capacity(per);
+    for g in 0..per / n_layers {
+        for (l, &len) in lens.iter().enumerate() {
+            let idx = g * n_layers + l;
+            let shards: Vec<Vec<f32>> =
+                ws.ranks.iter().map(|r| r.opt.bufs[idx].clone()).collect();
+            let full = wckpt::unshard_layer(len, &shards)
+                .with_context(|| format!("resharding group {g} layer {l}"))?;
+            out.push(wckpt::shard_slice(&full, rank, world));
+        }
+    }
+    Ok(out)
+}
+
+/// One rank's side of a ZeRO world-checkpoint cut at the end of step
+/// `step` (parameters are replicated again — the all-gather ran).
+#[allow(clippy::too_many_arguments)]
+fn write_zero_ckpt<C: Collective>(
+    comm: &C,
+    dir: &Path,
+    keep: usize,
+    flow: &str,
+    tag: &str,
+    step: u64,
+    trainer: &Trainer,
+    corpus: &MarkovCorpus,
+    bufs: Vec<Vec<f32>>,
+    losses: &[f32],
+    ledger_base: (u64, u64),
+) -> Result<()> {
+    let fingerprint = config_fingerprint(trainer.spec(), trainer.config(), tag);
+    let mine = wckpt::RankState {
+        rank: comm.rank(),
+        rng: corpus.rng().clone(),
+        opt: OptSnapshot { tag: tag.to_string(), t: step, bufs },
+    };
+    let meta = (comm.rank() == 0).then(|| wckpt::WorldMeta {
+        flow: flow.to_string(),
+        params: trainer.params().iter().map(|p| p.flat.clone()).collect(),
+        losses: losses.to_vec(),
+    });
+    wckpt::write_world(comm, dir, keep, fingerprint, step, &mine, meta.as_ref(), ledger_base)
 }
 
 /// One AdamA micro-batch with **async issue**: the gradient sink coalesces
@@ -404,24 +671,25 @@ fn worker_adama<C: Collective>(
     lib: Arc<Library>,
     spec: Zero1Spec,
     comm: C,
+    resume: Option<Arc<wckpt::WorldState>>,
 ) -> Result<WorkerOut> {
     let n = spec.cfg.accum_steps;
     let m = comm.world();
+    let rank = comm.rank();
     let tracker = MemoryTracker::new();
     let mut trainer =
         Trainer::with_optimizer(lib.clone(), spec.cfg.clone(), tracker.clone(), Box::new(NullOpt))?;
     let hyper = Hyper::from_manifest(lib.manifest());
     let mut shard = ShardState::new(
         trainer.spec(),
-        comm.rank(),
+        rank,
         comm.world(),
         hyper,
         make_backend(&spec.cfg, &lib)?,
         &tracker,
     );
     let h = trainer.spec().hyper.clone();
-    let mut corpus =
-        MarkovCorpus::new(h.vocab, spec.data_seed, 1_000_003 * (comm.rank() as u64 + 1));
+    let mut corpus = MarkovCorpus::new(h.vocab, spec.data_seed, 1_000_003 * (rank as u64 + 1));
 
     // gradients are globally averaged before integration, so each of the N
     // effective micro-batches is M× larger: gscale = 1/N, mean over M via
@@ -432,7 +700,24 @@ fn worker_adama<C: Collective>(
     let bucket_bytes = spec.bucket_bytes.unwrap_or(0);
 
     let mut losses = Vec::new();
-    for _ in 0..spec.steps {
+    let mut start = 0u64;
+    if let Some(ws) = resume.as_deref() {
+        resume_restore(&mut trainer, &mut corpus, ws, TAG_ZERO_ADAMA, rank)?;
+        // (m, v) live in owned shards: reassemble the saved world's
+        // shards and re-cut them for this rank of the current world
+        let lens: Vec<usize> = trainer.spec().layers.iter().map(|l| l.flat_len).collect();
+        let bufs = reshard_bufs(ws, &lens, rank, m)?;
+        let nl = lens.len();
+        ensure!(bufs.len() == 2 * nl, "{TAG_ZERO_ADAMA} wants m and v shards per layer");
+        shard.m = bufs[..nl].to_vec();
+        shard.v = bufs[nl..].to_vec();
+        losses.extend_from_slice(&ws.losses);
+        start = ws.step;
+    }
+    let ledger_base = resume.as_deref().map(|ws| ws.ledger).unwrap_or((0, 0));
+
+    for step in start + 1..=spec.steps {
+        comm.begin_step(step);
         let t = trainer.step() + 1;
         shard.decay(1.0)?;
         let mbs = corpus.minibatch(n, h.microbatch, h.seq);
@@ -486,6 +771,26 @@ fn worker_adama<C: Collective>(
         let mut l = vec![(loss_sum / n as f64) as f32];
         comm.all_reduce_mean(&mut l)?;
         losses.push(l[0]);
+
+        if let Some((dir, policy)) = spec.checkpoint.as_ref() {
+            if policy.due(step) {
+                let bufs: Vec<Vec<f32>> =
+                    shard.m.iter().chain(shard.v.iter()).cloned().collect();
+                write_zero_ckpt(
+                    &comm,
+                    dir,
+                    policy.keep_last_n,
+                    "zero1:adama",
+                    TAG_ZERO_ADAMA,
+                    step,
+                    &trainer,
+                    &corpus,
+                    bufs,
+                    &losses,
+                    ledger_base,
+                )?;
+            }
+        }
     }
 
     let mem = snapshot(&trainer, &tracker);
@@ -497,24 +802,29 @@ fn worker_adama<C: Collective>(
 }
 
 /// ZeRO-S1 + GA: full local accumulator, one reduce-scatter per step.
-fn worker_ga<C: Collective>(lib: Arc<Library>, spec: Zero1Spec, comm: C) -> Result<WorkerOut> {
+fn worker_ga<C: Collective>(
+    lib: Arc<Library>,
+    spec: Zero1Spec,
+    comm: C,
+    resume: Option<Arc<wckpt::WorldState>>,
+) -> Result<WorkerOut> {
     let n = spec.cfg.accum_steps;
     let m = comm.world();
+    let rank = comm.rank();
     let tracker = MemoryTracker::new();
     let mut trainer =
         Trainer::with_optimizer(lib.clone(), spec.cfg.clone(), tracker.clone(), Box::new(NullOpt))?;
     let hyper = Hyper::from_manifest(lib.manifest());
     let mut shard = ShardState::new(
         trainer.spec(),
-        comm.rank(),
+        rank,
         comm.world(),
         hyper,
         make_backend(&spec.cfg, &lib)?,
         &tracker,
     );
     let h = trainer.spec().hyper.clone();
-    let mut corpus =
-        MarkovCorpus::new(h.vocab, spec.data_seed, 1_000_003 * (comm.rank() as u64 + 1));
+    let mut corpus = MarkovCorpus::new(h.vocab, spec.data_seed, 1_000_003 * (rank as u64 + 1));
 
     // full-model gradient accumulator (the memory ZeRO-S1 alone keeps)
     let mut acc: Vec<Vec<f32>> =
@@ -524,7 +834,24 @@ fn worker_ga<C: Collective>(lib: Arc<Library>, spec: Zero1Spec, comm: C) -> Resu
     let inv_m = 1.0 / m as f32;
 
     let mut losses = Vec::new();
-    for _ in 0..spec.steps {
+    let mut start = 0u64;
+    if let Some(ws) = resume.as_deref() {
+        resume_restore(&mut trainer, &mut corpus, ws, TAG_ZERO_ADAMGA, rank)?;
+        // the accumulator is zeroed at every step start — only the (m, v)
+        // shards live across the boundary
+        let lens: Vec<usize> = trainer.spec().layers.iter().map(|l| l.flat_len).collect();
+        let bufs = reshard_bufs(ws, &lens, rank, m)?;
+        let nl = lens.len();
+        ensure!(bufs.len() == 2 * nl, "{TAG_ZERO_ADAMGA} wants m and v shards per layer");
+        shard.m = bufs[..nl].to_vec();
+        shard.v = bufs[nl..].to_vec();
+        losses.extend_from_slice(&ws.losses);
+        start = ws.step;
+    }
+    let ledger_base = resume.as_deref().map(|ws| ws.ledger).unwrap_or((0, 0));
+
+    for step in start + 1..=spec.steps {
+        comm.begin_step(step);
         let t = trainer.step() + 1;
         for a in &mut acc {
             a.fill(0.0);
@@ -558,6 +885,26 @@ fn worker_ga<C: Collective>(lib: Arc<Library>, spec: Zero1Spec, comm: C) -> Resu
         let mut l = vec![loss_sum as f32];
         comm.all_reduce_mean(&mut l)?;
         losses.push(l[0]);
+
+        if let Some((dir, policy)) = spec.checkpoint.as_ref() {
+            if policy.due(step) {
+                let bufs: Vec<Vec<f32>> =
+                    shard.m.iter().chain(shard.v.iter()).cloned().collect();
+                write_zero_ckpt(
+                    &comm,
+                    dir,
+                    policy.keep_last_n,
+                    "zero1:adamga",
+                    TAG_ZERO_ADAMGA,
+                    step,
+                    &trainer,
+                    &corpus,
+                    bufs,
+                    &losses,
+                    ledger_base,
+                )?;
+            }
+        }
     }
 
     let mem = snapshot(&trainer, &tracker);
@@ -643,9 +990,11 @@ fn worker_zoo<C: Collective>(
     spec: Zero1Spec,
     algo: OptAlgo,
     comm: C,
+    resume: Option<Arc<wckpt::WorldState>>,
 ) -> Result<WorkerOut> {
     let n = spec.cfg.accum_steps;
     let m = comm.world();
+    let rank = comm.rank();
     let tracker = MemoryTracker::new();
     let mut trainer =
         Trainer::with_optimizer(lib.clone(), spec.cfg.clone(), tracker.clone(), Box::new(NullOpt))?;
@@ -653,7 +1002,7 @@ fn worker_zoo<C: Collective>(
     let mut shard = ZooShard::new(
         algo,
         trainer.spec(),
-        comm.rank(),
+        rank,
         comm.world(),
         hyper,
         make_backend(&spec.cfg, &lib)?,
@@ -661,16 +1010,45 @@ fn worker_zoo<C: Collective>(
         &tracker,
     );
     let h = trainer.spec().hyper.clone();
-    let mut corpus =
-        MarkovCorpus::new(h.vocab, spec.data_seed, 1_000_003 * (comm.rank() as u64 + 1));
+    let mut corpus = MarkovCorpus::new(h.vocab, spec.data_seed, 1_000_003 * (rank as u64 + 1));
 
     let gscale = 1.0 / n as f32;
     let inv_m = 1.0 / m as f32;
     let async_issue = spec.async_issue.unwrap_or(false);
     let bucket_bytes = spec.bucket_bytes.unwrap_or(0);
+    let tag = format!("zero:zoo:{}", algo.name());
+    let flow = format!("zero1:zoo:{}", algo.name());
 
     let mut losses = Vec::new();
-    for _ in 0..spec.steps {
+    let mut start = 0u64;
+    if let Some(ws) = resume.as_deref() {
+        resume_restore(&mut trainer, &mut corpus, ws, &tag, rank)?;
+        // the accumulator is zeroed at every step start; what lives across
+        // the boundary is mode-specific
+        match &mut shard.mode {
+            ZooShardMode::Adam { m: sm, v: sv, .. } => {
+                // sharded (m, v): reassemble and re-cut like the AdamA flow
+                let lens: Vec<usize> =
+                    trainer.spec().layers.iter().map(|l| l.flat_len).collect();
+                let bufs = reshard_bufs(ws, &lens, rank, m)?;
+                let nl = lens.len();
+                ensure!(bufs.len() == 2 * nl, "{tag} wants m and v shards per layer");
+                *sm = bufs[..nl].to_vec();
+                *sv = bufs[nl..].to_vec();
+            }
+            ZooShardMode::Replicated(states) => {
+                // replicated statistics are identical on every saved rank,
+                // so any rank file serves a rank the saved world lacked
+                states.import_bufs(&ws.ranks[rank.min(ws.world - 1)].opt.bufs)?;
+            }
+        }
+        losses.extend_from_slice(&ws.losses);
+        start = ws.step;
+    }
+    let ledger_base = resume.as_deref().map(|ws| ws.ledger).unwrap_or((0, 0));
+
+    for step in start + 1..=spec.steps {
+        comm.begin_step(step);
         let t = trainer.step() + 1;
         shard.begin_step();
         let mbs = corpus.minibatch(n, h.microbatch, h.seq);
@@ -746,6 +1124,30 @@ fn worker_zoo<C: Collective>(
         let mut l = vec![(loss_sum / n as f64) as f32];
         comm.all_reduce_mean(&mut l)?;
         losses.push(l[0]);
+
+        if let Some((dir, policy)) = spec.checkpoint.as_ref() {
+            if policy.due(step) {
+                let bufs: Vec<Vec<f32>> = match &shard.mode {
+                    ZooShardMode::Adam { m: sm, v: sv, .. } => {
+                        sm.iter().chain(sv.iter()).cloned().collect()
+                    }
+                    ZooShardMode::Replicated(states) => states.export_bufs(),
+                };
+                write_zero_ckpt(
+                    &comm,
+                    dir,
+                    policy.keep_last_n,
+                    &flow,
+                    &tag,
+                    step,
+                    &trainer,
+                    &corpus,
+                    bufs,
+                    &losses,
+                    ledger_base,
+                )?;
+            }
+        }
     }
 
     let mem = snapshot(&trainer, &tracker);
@@ -971,6 +1373,7 @@ fn run_zero_serial(
         memory: per_rank_memory[0].tracker,
         per_rank_memory,
         engine: CollectiveEngine::Serial,
+        resumed_from: None,
     })
 }
 
@@ -1159,5 +1562,6 @@ fn run_zero_serial_zoo(
         memory: per_rank_memory[0].tracker,
         per_rank_memory,
         engine: CollectiveEngine::Serial,
+        resumed_from: None,
     })
 }

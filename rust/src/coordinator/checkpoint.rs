@@ -1,0 +1,222 @@
+//! Checkpoint cadence, rotation, and discovery — shared by the
+//! single-rank [`super::Trainer`] and the distributed runners.
+//!
+//! Naming: a single-rank checkpoint is a file `step{N:08}.ck2` inside the
+//! checkpoint directory; a world checkpoint is a *directory* `step{N:08}/`
+//! (per-rank shard files + `world.ck2` manifest, see
+//! [`crate::collective::ckpt`]). Rotation and latest-checkpoint discovery
+//! handle both shapes.
+//!
+//! Env knobs (all strict-parsed — a malformed value is an error naming
+//! the accepted forms, never a silent default):
+//!
+//! * `ADAMA_CKPT_DIR`   — checkpoint directory (created on first write)
+//! * `ADAMA_CKPT_EVERY` — write every k steps (positive integer; unset
+//!   disables checkpointing)
+//! * `ADAMA_CKPT_KEEP`  — keep the newest n checkpoints (positive
+//!   integer, default 2)
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// When to cut checkpoints and how many to retain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CheckpointPolicy {
+    /// Write a checkpoint after every `every_k_steps`-th step.
+    pub every_k_steps: u64,
+    /// Retain only the newest `keep_last_n` checkpoints (rotation).
+    pub keep_last_n: usize,
+}
+
+impl CheckpointPolicy {
+    /// Strict parse from the raw `ADAMA_CKPT_EVERY` / `ADAMA_CKPT_KEEP`
+    /// strings. Unset/empty `every` disables checkpointing (`None`);
+    /// `keep` without `every` is a configuration error, not dead state.
+    pub fn parse(every: Option<&str>, keep: Option<&str>) -> Result<Option<Self>> {
+        let every = match every.map(str::trim) {
+            None | Some("") => {
+                if let Some(k) = keep.map(str::trim) {
+                    if !k.is_empty() {
+                        bail!(
+                            "ADAMA_CKPT_KEEP='{k}' is set but ADAMA_CKPT_EVERY is not — \
+                             retention without a cadence does nothing; set ADAMA_CKPT_EVERY \
+                             or unset ADAMA_CKPT_KEEP"
+                        );
+                    }
+                }
+                return Ok(None);
+            }
+            Some(s) => match s.parse::<u64>() {
+                Ok(k) if k >= 1 => k,
+                _ => bail!(
+                    "invalid ADAMA_CKPT_EVERY='{s}': want a positive integer step cadence"
+                ),
+            },
+        };
+        let keep = match keep.map(str::trim) {
+            None | Some("") => 2,
+            Some(s) => match s.parse::<usize>() {
+                Ok(n) if n >= 1 => n,
+                _ => bail!(
+                    "invalid ADAMA_CKPT_KEEP='{s}': want a positive integer checkpoint count"
+                ),
+            },
+        };
+        Ok(Some(Self { every_k_steps: every, keep_last_n: keep }))
+    }
+
+    pub fn from_env() -> Result<Option<Self>> {
+        Self::parse(
+            std::env::var("ADAMA_CKPT_EVERY").ok().as_deref(),
+            std::env::var("ADAMA_CKPT_KEEP").ok().as_deref(),
+        )
+    }
+
+    /// Is `step` a checkpoint boundary under this policy?
+    pub fn due(&self, step: u64) -> bool {
+        step > 0 && step % self.every_k_steps == 0
+    }
+}
+
+/// `ADAMA_CKPT_DIR`, or `None` when unset/empty.
+pub fn dir_from_env() -> Option<PathBuf> {
+    match std::env::var("ADAMA_CKPT_DIR") {
+        Ok(s) if !s.trim().is_empty() => Some(PathBuf::from(s)),
+        _ => None,
+    }
+}
+
+/// Resolve the full env checkpoint configuration: `Some((dir, policy))`
+/// when checkpointing is on, `None` when off, an error when the knobs
+/// contradict each other (a cadence without a directory, or vice versa a
+/// malformed value).
+pub fn from_env() -> Result<Option<(PathBuf, CheckpointPolicy)>> {
+    let policy = CheckpointPolicy::from_env()?;
+    let dir = dir_from_env();
+    match (dir, policy) {
+        (Some(d), Some(p)) => Ok(Some((d, p))),
+        (None, Some(_)) => bail!(
+            "ADAMA_CKPT_EVERY is set but ADAMA_CKPT_DIR is not — checkpoints need a \
+             directory to land in"
+        ),
+        (_, None) => Ok(None),
+    }
+}
+
+/// Canonical single-rank checkpoint file name for `step`.
+pub fn step_file(dir: &Path, step: u64) -> PathBuf {
+    dir.join(format!("step{step:08}.ck2"))
+}
+
+/// Canonical world-checkpoint directory name for `step`.
+pub fn step_dir(dir: &Path, step: u64) -> PathBuf {
+    dir.join(format!("step{step:08}"))
+}
+
+/// All checkpoint entries (files or world dirs) under `dir`, sorted by
+/// step ascending. Non-matching names are ignored (the directory may hold
+/// unrelated files); a `.tmp` straggler from a crashed write never
+/// matches.
+pub fn list_steps(dir: &Path) -> Result<Vec<(u64, PathBuf)>> {
+    let mut out = Vec::new();
+    let rd = match std::fs::read_dir(dir) {
+        Ok(rd) => rd,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(out),
+        Err(e) => return Err(e).with_context(|| format!("listing {}", dir.display())),
+    };
+    for entry in rd {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let stem = name.strip_suffix(".ck2").unwrap_or(name);
+        if let Some(num) = stem.strip_prefix("step") {
+            if !num.is_empty() && num.bytes().all(|b| b.is_ascii_digit()) {
+                if let Ok(step) = num.parse::<u64>() {
+                    out.push((step, entry.path()));
+                }
+            }
+        }
+    }
+    out.sort_by_key(|(s, _)| *s);
+    Ok(out)
+}
+
+/// Delete all but the newest `keep` checkpoint entries under `dir`.
+pub fn rotate(dir: &Path, keep: usize) -> Result<()> {
+    let entries = list_steps(dir)?;
+    if entries.len() <= keep {
+        return Ok(());
+    }
+    for (_, path) in &entries[..entries.len() - keep] {
+        let res = if path.is_dir() {
+            std::fs::remove_dir_all(path)
+        } else {
+            std::fs::remove_file(path)
+        };
+        res.with_context(|| format!("rotating out {}", path.display()))?;
+    }
+    Ok(())
+}
+
+/// Newest checkpoint entry under `dir`, if any.
+pub fn latest(dir: &Path) -> Result<Option<(u64, PathBuf)>> {
+    Ok(list_steps(dir)?.into_iter().next_back())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse_strict() {
+        assert_eq!(CheckpointPolicy::parse(None, None).unwrap(), None);
+        assert_eq!(CheckpointPolicy::parse(Some(""), None).unwrap(), None);
+        assert_eq!(
+            CheckpointPolicy::parse(Some("4"), None).unwrap(),
+            Some(CheckpointPolicy { every_k_steps: 4, keep_last_n: 2 })
+        );
+        assert_eq!(
+            CheckpointPolicy::parse(Some("1"), Some("5")).unwrap(),
+            Some(CheckpointPolicy { every_k_steps: 1, keep_last_n: 5 })
+        );
+        for bad in ["0", "-1", "x", "2.5"] {
+            assert!(CheckpointPolicy::parse(Some(bad), None).is_err(), "{bad}");
+            assert!(CheckpointPolicy::parse(Some("2"), Some(bad)).is_err(), "{bad}");
+        }
+        // keep without a cadence is a configuration error, not dead state
+        assert!(CheckpointPolicy::parse(None, Some("3")).is_err());
+    }
+
+    #[test]
+    fn due_steps() {
+        let p = CheckpointPolicy { every_k_steps: 3, keep_last_n: 1 };
+        assert!(!p.due(0));
+        assert!(!p.due(2));
+        assert!(p.due(3));
+        assert!(p.due(6));
+    }
+
+    #[test]
+    fn list_rotate_latest() {
+        let dir = std::env::temp_dir().join(format!("adama_rot_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        for s in [1u64, 2, 3, 4] {
+            std::fs::write(step_file(&dir, s), b"x").unwrap();
+        }
+        // a world-checkpoint dir and unrelated files mix in
+        std::fs::create_dir_all(step_dir(&dir, 5)).unwrap();
+        std::fs::write(dir.join("notes.txt"), b"y").unwrap();
+        std::fs::write(dir.join("step0000000a.ck2"), b"y").unwrap();
+
+        let steps: Vec<u64> = list_steps(&dir).unwrap().into_iter().map(|(s, _)| s).collect();
+        assert_eq!(steps, vec![1, 2, 3, 4, 5]);
+        assert_eq!(latest(&dir).unwrap().unwrap().0, 5);
+
+        rotate(&dir, 2).unwrap();
+        let steps: Vec<u64> = list_steps(&dir).unwrap().into_iter().map(|(s, _)| s).collect();
+        assert_eq!(steps, vec![4, 5]);
+        assert!(dir.join("notes.txt").exists(), "rotation must not touch unrelated files");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -19,9 +19,11 @@
 //! arena — surfaced per step through [`MemorySnapshot`] so both levels
 //! appear side by side in [`Metrics`].
 
+pub mod checkpoint;
 mod metrics;
 pub mod mlp;
 
+pub use checkpoint::CheckpointPolicy;
 pub use metrics::{MemorySnapshot, Metrics, StepStats, WorldMemory};
 pub use mlp::MlpTrainer;
 
@@ -32,6 +34,7 @@ use anyhow::{Context, Result};
 use crate::config::TrainConfig;
 use crate::data::MicroBatch;
 use crate::memory::{Category, MemoryTracker};
+use crate::model::ckpt;
 use crate::model::{init_params, LayerKind, LayerParams, ModelSpec};
 use crate::optim::{build_optimizer, Optimizer};
 use crate::runtime::{
@@ -440,5 +443,123 @@ impl Trainer {
     pub fn load_checkpoint(&mut self, path: &std::path::Path) -> Result<()> {
         self.core.params = crate::model::checkpoint::load(path, &self.core.spec)?;
         Ok(())
+    }
+
+    // ---- full-state checkpointing (ADAMACK2) ----
+
+    /// Set the step counter directly (resume flows that restore the
+    /// optimizer/shard state externally).
+    pub fn set_step(&mut self, step: u64) {
+        self.step = step;
+    }
+
+    /// Snapshot the complete training state at the current step boundary:
+    /// params, optimizer state, step, loss history, and the caller's data
+    /// cursors (`data_rngs` — one [`crate::tensor::Rng`] per corpus
+    /// stream feeding this trainer).
+    pub fn train_state(&self, data_rngs: &[crate::tensor::Rng]) -> Result<ckpt::TrainState> {
+        let opt = self.opt.export_state()?;
+        let fingerprint = ckpt::config_fingerprint(&self.core.spec, &self.core.cfg, &opt.tag);
+        Ok(ckpt::TrainState {
+            fingerprint,
+            step: self.step,
+            params: self.core.params.iter().map(|p| p.flat.clone()).collect(),
+            opt,
+            rngs: data_rngs.to_vec(),
+            losses: self.metrics.steps().iter().map(|s| s.loss).collect(),
+        })
+    }
+
+    /// Write the complete training state to `path` (atomic `ADAMACK2`).
+    pub fn save_state(&self, path: &std::path::Path, data_rngs: &[crate::tensor::Rng]) -> Result<()> {
+        self.train_state(data_rngs)?.save(path)
+    }
+
+    /// Restore a full-state snapshot in place. The config fingerprint must
+    /// match this trainer's model/config/optimizer — a checkpoint can
+    /// never be replayed against a different run shape. Buffers are copied
+    /// in place, so memory metering is untouched and a later step's peaks
+    /// equal an uninterrupted run's.
+    pub fn restore_state(&mut self, st: &ckpt::TrainState) -> Result<()> {
+        let want = ckpt::config_fingerprint(&self.core.spec, &self.core.cfg, &st.opt.tag);
+        if st.fingerprint != want {
+            anyhow::bail!(
+                "checkpoint fingerprint {:#018x} does not match this run's {:#018x} — \
+                 the file was written under a different model/config/optimizer",
+                st.fingerprint,
+                want
+            );
+        }
+        if st.params.len() != self.core.params.len() {
+            anyhow::bail!(
+                "checkpoint has {} param layers, model wants {}",
+                st.params.len(),
+                self.core.params.len()
+            );
+        }
+        for (l, (dst, src)) in self.core.params.iter_mut().zip(&st.params).enumerate() {
+            if dst.flat.len() != src.len() {
+                anyhow::bail!(
+                    "checkpoint layer '{}' (#{l}) has {} params, model wants {}",
+                    self.core.spec.layers[l].name,
+                    src.len(),
+                    dst.flat.len()
+                );
+            }
+            dst.flat.copy_from_slice(src);
+        }
+        self.opt.import_state(&st.opt)?;
+        self.step = st.step;
+        if st.losses.len() as u64 != st.step {
+            anyhow::bail!(
+                "checkpoint records {} losses for step {} — the loss history must cover \
+                 every step",
+                st.losses.len(),
+                st.step
+            );
+        }
+        // rebuild the metrics log (durations are wall-clock, not part of
+        // the bit-exactness contract — restored as 0)
+        self.metrics = Metrics::new();
+        for (i, &loss) in st.losses.iter().enumerate() {
+            let step = i as u64 + 1;
+            let lr = self.core.cfg.lr.at(step);
+            self.metrics.push(StepStats { step, loss, lr, duration_s: 0.0, tokens: 0 });
+        }
+        Ok(())
+    }
+
+    /// Build a trainer and restore it from an `ADAMACK2` file in one move.
+    /// Returns the trainer plus the checkpointed data cursors (in the
+    /// order they were passed to [`Trainer::save_state`]).
+    pub fn resume(
+        lib: Arc<Library>,
+        cfg: TrainConfig,
+        path: &std::path::Path,
+    ) -> Result<(Self, Vec<crate::tensor::Rng>)> {
+        let st = ckpt::TrainState::load(path)?;
+        let mut trainer = Self::new(lib, cfg)?;
+        trainer.restore_state(&st)?;
+        Ok((trainer, st.rngs))
+    }
+
+    /// Drive the checkpoint rotation: if `policy` says the current step is
+    /// a boundary, write `dir/step{N:08}.ck2` and delete checkpoints
+    /// beyond `keep_last_n`. Returns the written path when one was cut.
+    pub fn maybe_checkpoint(
+        &self,
+        dir: &std::path::Path,
+        policy: &CheckpointPolicy,
+        data_rngs: &[crate::tensor::Rng],
+    ) -> Result<Option<std::path::PathBuf>> {
+        if !policy.due(self.step) {
+            return Ok(None);
+        }
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        let path = checkpoint::step_file(dir, self.step);
+        self.save_state(&path, data_rngs)?;
+        checkpoint::rotate(dir, policy.keep_last_n)?;
+        Ok(Some(path))
     }
 }

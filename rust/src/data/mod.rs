@@ -52,6 +52,18 @@ impl MarkovCorpus {
         self.vocab
     }
 
+    /// The sample-stream cursor (checkpointing seam). The transition
+    /// structure is derived purely from `structure_seed`, so the stream
+    /// RNG is the *only* mutable state a resume has to restore.
+    pub fn rng(&self) -> &Rng {
+        &self.rng
+    }
+
+    /// Restore the sample-stream cursor captured by [`MarkovCorpus::rng`].
+    pub fn set_rng(&mut self, rng: Rng) {
+        self.rng = rng;
+    }
+
     /// Theoretical per-token cross-entropy of the generating process —
     /// the floor the LM loss approaches.
     pub fn entropy(&self) -> f32 {

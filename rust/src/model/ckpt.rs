@@ -1,0 +1,541 @@
+//! `ADAMACK2` — the versioned full-training-state checkpoint container.
+//!
+//! The paper's trick (folding micro-batch gradients straight into the
+//! optimizer accumulator) makes the optimizer state *live* training state:
+//! a params-only file (the legacy `ADAMACK1` in [`super::checkpoint`]) is
+//! not a checkpoint at all. `ADAMACK2` therefore captures everything the
+//! bit-reproducibility contract needs to resume a run as if it had never
+//! stopped: params, optimizer/zoo state buffers, the step counter, every
+//! RNG data cursor, the loss history, and a config fingerprint covering
+//! `ModelSpec`/`TrainConfig`/opt algo so a file can never be replayed
+//! against a different run shape.
+//!
+//! ## Wire format
+//!
+//! ```text
+//! magic   "ADAMACK2"                     (8 bytes)
+//! count   u64 LE                         number of sections
+//! section tag      [u8; 8] ASCII, space-padded
+//!         len      u64 LE                payload byte length
+//!         payload  [u8; len]
+//!         hash     u64 LE                FNV-1a 64 of the payload
+//! ...     (exactly `count` sections, then EOF — trailing bytes are an error)
+//! ```
+//!
+//! Every read is strict: wrong magic names the version it understands,
+//! truncation reports the byte offset where the file ran out, a flipped
+//! bit anywhere in a payload fails that section's FNV-1a hash, and bytes
+//! after the last section are rejected. Writes are atomic: the encoded
+//! file goes to `<path>.tmp` first and is `rename`d over the canonical
+//! path only once fully written and synced, so a crash mid-write can
+//! never leave a half-checkpoint behind.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::ModelSpec;
+use crate::config::TrainConfig;
+use crate::tensor::Rng;
+
+pub const MAGIC: &[u8; 8] = b"ADAMACK2";
+
+/// FNV-1a 64-bit — the per-section integrity hash. Dependency-free and
+/// byte-order independent; collisions are irrelevant here (we detect
+/// corruption, not adversaries).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Atomically publish `bytes` at `path`: write + sync `<path>.tmp`, then
+/// rename over the canonical name. Shared with the legacy `ADAMACK1`
+/// writer so *no* checkpoint path can leave a truncated canonical file.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let mut tmp_os = path.as_os_str().to_owned();
+    tmp_os.push(".tmp");
+    let tmp = PathBuf::from(tmp_os);
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes).with_context(|| format!("writing {}", tmp.display()))?;
+        f.sync_all().with_context(|| format!("syncing {}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))
+}
+
+/// One tagged, hashed payload inside the container.
+#[derive(Debug, Clone)]
+pub struct Section {
+    pub tag: String,
+    pub payload: Vec<u8>,
+}
+
+/// A parsed (or under-construction) `ADAMACK2` container.
+#[derive(Debug, Clone, Default)]
+pub struct Container {
+    sections: Vec<Section>,
+}
+
+impl Container {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, tag: &str, payload: Vec<u8>) {
+        debug_assert!(tag.len() <= 8 && tag.is_ascii());
+        self.sections.push(Section { tag: tag.to_string(), payload });
+    }
+
+    pub fn get(&self, tag: &str) -> Result<&[u8]> {
+        self.try_get(tag)
+            .with_context(|| format!("checkpoint is missing the '{tag}' section"))
+    }
+
+    pub fn try_get(&self, tag: &str) -> Option<&[u8]> {
+        self.sections.iter().find(|s| s.tag == tag).map(|s| s.payload.as_slice())
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(self.sections.len() as u64).to_le_bytes());
+        for s in &self.sections {
+            let mut tag8 = [b' '; 8];
+            tag8[..s.tag.len()].copy_from_slice(s.tag.as_bytes());
+            out.extend_from_slice(&tag8);
+            out.extend_from_slice(&(s.payload.len() as u64).to_le_bytes());
+            out.extend_from_slice(&s.payload);
+            out.extend_from_slice(&fnv1a64(&s.payload).to_le_bytes());
+        }
+        out
+    }
+
+    /// Encode and atomically publish at `path`.
+    pub fn write_atomic(&self, path: &Path) -> Result<()> {
+        write_atomic(path, &self.encode())
+    }
+
+    /// Strict parse of an encoded container (see module docs for the
+    /// failure taxonomy: magic/version, truncation offset, per-section
+    /// hash, trailing garbage).
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        let mut r = ByteReader::new(bytes);
+        let magic = r.take(8, "magic")?;
+        if magic != MAGIC {
+            bail!(
+                "not an ADAMACK2 checkpoint (magic {:?}; this reader understands \
+                 container version 2 only)",
+                String::from_utf8_lossy(magic)
+            );
+        }
+        let count = r.u64("section count")? as usize;
+        let mut sections = Vec::with_capacity(count);
+        for i in 0..count {
+            let tag_start = r.offset();
+            let tag8 = r.take(8, "section tag")?;
+            let tag = String::from_utf8_lossy(tag8).trim_end().to_string();
+            let len = r.u64("section length")? as usize;
+            let payload = r
+                .take(len, "section payload")
+                .with_context(|| format!("section '{tag}' (#{i} at byte offset {tag_start})"))?
+                .to_vec();
+            let stored = r.u64("section hash")?;
+            let computed = fnv1a64(&payload);
+            if stored != computed {
+                bail!(
+                    "section '{tag}' (#{i} at byte offset {tag_start}) integrity hash \
+                     mismatch: stored {stored:#018x}, computed {computed:#018x} — \
+                     the checkpoint is corrupt"
+                );
+            }
+            sections.push(Section { tag, payload });
+        }
+        if r.remaining() != 0 {
+            bail!(
+                "checkpoint has {} trailing byte(s) after the last section \
+                 (at byte offset {}) — refusing a file that parses but was not \
+                 written by this container",
+                r.remaining(),
+                r.offset()
+            );
+        }
+        Ok(Self { sections })
+    }
+
+    pub fn read(path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Self::decode(&bytes).with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+/// Strict cursor over a byte slice: every under-read reports what was
+/// wanted and the byte offset where the data ran out.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn offset(&self) -> usize {
+        self.pos
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "truncated: wanted {n} byte(s) of {what} at byte offset {}, \
+                 only {} left",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    pub fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    pub fn f32s(&mut self, n: usize, what: &str) -> Result<Vec<f32>> {
+        let b = self.take(n * 4, what)?;
+        Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    pub fn str(&mut self, what: &str) -> Result<String> {
+        let n = self.u64(what)? as usize;
+        let b = self.take(n, what)?;
+        String::from_utf8(b.to_vec()).with_context(|| format!("{what}: invalid utf-8"))
+    }
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.reserve(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+pub fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u64(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// A serializable snapshot of an optimizer's complete mutable state:
+/// an algorithm tag, the step counter, and the state buffers in a
+/// deterministic (layer, tensor, buffer) order. Produced/consumed by
+/// `Optimizer::{export_state, import_state}`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OptSnapshot {
+    pub tag: String,
+    pub t: u64,
+    pub bufs: Vec<Vec<f32>>,
+}
+
+impl OptSnapshot {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        put_str(&mut out, &self.tag);
+        put_u64(&mut out, self.t);
+        put_u64(&mut out, self.bufs.len() as u64);
+        for b in &self.bufs {
+            put_u64(&mut out, b.len() as u64);
+            put_f32s(&mut out, b);
+        }
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        let mut r = ByteReader::new(bytes);
+        let s = Self::read_from(&mut r)?;
+        if r.remaining() != 0 {
+            bail!("optimizer snapshot has {} trailing byte(s)", r.remaining());
+        }
+        Ok(s)
+    }
+
+    pub fn read_from(r: &mut ByteReader<'_>) -> Result<Self> {
+        let tag = r.str("optimizer tag")?;
+        let t = r.u64("optimizer step")?;
+        let n = r.u64("optimizer buffer count")? as usize;
+        let mut bufs = Vec::with_capacity(n);
+        for i in 0..n {
+            let len = r.u64("optimizer buffer length")? as usize;
+            bufs.push(r.f32s(len, &format!("optimizer buffer #{i}"))?);
+        }
+        Ok(Self { tag, t, bufs })
+    }
+}
+
+/// Encode a set of RNG cursors (data streams, one per corpus).
+pub fn encode_rngs(rngs: &[Rng]) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_u64(&mut out, rngs.len() as u64);
+    for rng in rngs {
+        let (state, cached) = rng.state();
+        put_u64(&mut out, state);
+        match cached {
+            Some(z) => {
+                out.push(1);
+                out.extend_from_slice(&z.to_le_bytes());
+            }
+            None => out.push(0),
+        }
+    }
+    out
+}
+
+pub fn decode_rngs(bytes: &[u8]) -> Result<Vec<Rng>> {
+    let mut r = ByteReader::new(bytes);
+    let n = r.u64("rng count")? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let state = r.u64("rng state")?;
+        let cached = match r.u8("rng cached-normal flag")? {
+            0 => None,
+            1 => {
+                let b = r.take(4, "rng cached normal")?;
+                Some(f32::from_le_bytes(b.try_into().unwrap()))
+            }
+            x => bail!("rng cached-normal flag must be 0|1, got {x}"),
+        };
+        out.push(Rng::from_state(state, cached));
+    }
+    if r.remaining() != 0 {
+        bail!("rng section has {} trailing byte(s)", r.remaining());
+    }
+    Ok(out)
+}
+
+/// Encode per-layer flat f32 buffers (params, or any layer-shaped state).
+pub fn encode_layers(layers: &[Vec<f32>]) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_u64(&mut out, layers.len() as u64);
+    for l in layers {
+        put_u64(&mut out, l.len() as u64);
+        put_f32s(&mut out, l);
+    }
+    out
+}
+
+pub fn decode_layers(bytes: &[u8]) -> Result<Vec<Vec<f32>>> {
+    let mut r = ByteReader::new(bytes);
+    let n = r.u64("layer count")? as usize;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let len = r.u64("layer length")? as usize;
+        out.push(r.f32s(len, &format!("layer #{i}"))?);
+    }
+    if r.remaining() != 0 {
+        bail!("layer section has {} trailing byte(s)", r.remaining());
+    }
+    Ok(out)
+}
+
+pub fn encode_f32s(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_u64(&mut out, xs.len() as u64);
+    put_f32s(&mut out, xs);
+    out
+}
+
+pub fn decode_f32s(bytes: &[u8]) -> Result<Vec<f32>> {
+    let mut r = ByteReader::new(bytes);
+    let n = r.u64("f32 count")? as usize;
+    let out = r.f32s(n, "f32 payload")?;
+    if r.remaining() != 0 {
+        bail!("f32 section has {} trailing byte(s)", r.remaining());
+    }
+    Ok(out)
+}
+
+/// FNV-1a fingerprint of everything that shapes the *math* of a run:
+/// the model's layer graph, the optimizer algorithm, and the `TrainConfig`
+/// knobs that alter the update sequence. Deliberately excludes world size
+/// (resharding is allowed), step count (resume extends runs), threads /
+/// SIMD / chunk (bit-invariant perf knobs by contract).
+pub fn config_fingerprint(spec: &ModelSpec, cfg: &TrainConfig, opt_tag: &str) -> u64 {
+    let mut canon = String::new();
+    canon.push_str("model=");
+    canon.push_str(&cfg.model);
+    canon.push_str(";opt=");
+    canon.push_str(opt_tag);
+    canon.push_str(";layers=");
+    for l in &spec.layers {
+        canon.push_str(&format!("{}:{},", l.name, l.flat_len));
+    }
+    canon.push_str(&format!(
+        ";accum={};lr={:?};seed={};wd={};mom={}",
+        cfg.accum_steps, cfg.lr, cfg.seed, cfg.weight_decay, cfg.momentum
+    ));
+    fnv1a64(canon.as_bytes())
+}
+
+// ---- the single-rank full-training-state file --------------------------
+
+pub const SEC_FPRINT: &str = "FPRINT";
+pub const SEC_STEP: &str = "STEP";
+pub const SEC_PARAMS: &str = "PARAMS";
+pub const SEC_OPT: &str = "OPTSTATE";
+pub const SEC_RNGS: &str = "RNGS";
+pub const SEC_LOSSES: &str = "LOSSES";
+
+/// The complete single-process training state at a step boundary.
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    pub fingerprint: u64,
+    pub step: u64,
+    pub params: Vec<Vec<f32>>,
+    pub opt: OptSnapshot,
+    pub rngs: Vec<Rng>,
+    pub losses: Vec<f32>,
+}
+
+impl TrainState {
+    pub fn to_container(&self) -> Container {
+        let mut c = Container::new();
+        c.push(SEC_FPRINT, self.fingerprint.to_le_bytes().to_vec());
+        c.push(SEC_STEP, self.step.to_le_bytes().to_vec());
+        c.push(SEC_PARAMS, encode_layers(&self.params));
+        c.push(SEC_OPT, self.opt.encode());
+        c.push(SEC_RNGS, encode_rngs(&self.rngs));
+        c.push(SEC_LOSSES, encode_f32s(&self.losses));
+        c
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.to_container().write_atomic(path)
+    }
+
+    pub fn from_container(c: &Container) -> Result<Self> {
+        let fingerprint = u64_section(c, SEC_FPRINT)?;
+        let step = u64_section(c, SEC_STEP)?;
+        let params = decode_layers(c.get(SEC_PARAMS)?)?;
+        let opt = OptSnapshot::decode(c.get(SEC_OPT)?)?;
+        let rngs = decode_rngs(c.get(SEC_RNGS)?)?;
+        let losses = decode_f32s(c.get(SEC_LOSSES)?)?;
+        Ok(Self { fingerprint, step, params, opt, rngs, losses })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_container(&Container::read(path)?)
+    }
+}
+
+pub fn u64_section(c: &Container, tag: &str) -> Result<u64> {
+    let b = c.get(tag)?;
+    if b.len() != 8 {
+        bail!("section '{tag}' must be exactly 8 bytes, got {}", b.len());
+    }
+    Ok(u64::from_le_bytes(b.try_into().unwrap()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_state() -> TrainState {
+        TrainState {
+            fingerprint: 0xDEAD_BEEF_1234_5678,
+            step: 7,
+            params: vec![vec![1.0, -2.5, 3.25], vec![0.0; 5]],
+            opt: OptSnapshot {
+                tag: "adama".into(),
+                t: 7,
+                bufs: vec![vec![0.5; 3], vec![0.25; 3], vec![1e-8; 5], vec![2.0; 5]],
+            },
+            rngs: vec![Rng::from_state(42, Some(0.125)), Rng::from_state(99, None)],
+            losses: vec![3.5, 3.25, 3.0],
+        }
+    }
+
+    #[test]
+    fn roundtrip_bit_exact() {
+        let dir = std::env::temp_dir().join("adamack2_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.ck2");
+        let st = sample_state();
+        st.save(&path).unwrap();
+        let back = TrainState::load(&path).unwrap();
+        assert_eq!(back.fingerprint, st.fingerprint);
+        assert_eq!(back.step, st.step);
+        assert_eq!(back.params, st.params);
+        assert_eq!(back.opt, st.opt);
+        assert_eq!(back.rngs, st.rngs);
+        assert_eq!(back.losses, st.losses);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bit_flip_fails_section_hash() {
+        let mut bytes = sample_state().to_container().encode();
+        // flip one bit inside the PARAMS payload (well past the header)
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        let err = Container::decode(&bytes).unwrap_err();
+        assert!(err.to_string().contains("integrity hash mismatch"), "{err}");
+    }
+
+    #[test]
+    fn truncation_is_a_clean_offset_error() {
+        let bytes = sample_state().to_container().encode();
+        let cut = &bytes[..bytes.len() - 5];
+        let err = Container::decode(cut).unwrap_err();
+        let chain = format!("{err:#}");
+        assert!(chain.contains("truncated"), "{chain}");
+        assert!(chain.contains("byte offset"), "{chain}");
+    }
+
+    #[test]
+    fn wrong_magic_is_a_versioned_error() {
+        let mut bytes = sample_state().to_container().encode();
+        bytes[..8].copy_from_slice(b"ADAMACK9");
+        let err = Container::decode(&bytes).unwrap_err();
+        assert!(err.to_string().contains("version 2"), "{err}");
+    }
+
+    #[test]
+    fn trailing_garbage_rejected_with_offset() {
+        let mut bytes = sample_state().to_container().encode();
+        let clean_len = bytes.len();
+        bytes.extend_from_slice(b"junk");
+        let err = Container::decode(&bytes).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("trailing"), "{msg}");
+        assert!(msg.contains(&format!("byte offset {clean_len}")), "{msg}");
+    }
+
+    #[test]
+    fn fingerprint_moves_with_math_knobs() {
+        let a = fnv1a64(b"x");
+        let b = fnv1a64(b"y");
+        assert_ne!(a, b);
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+    }
+}

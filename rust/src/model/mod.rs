@@ -10,6 +10,8 @@ use std::ops::Range;
 
 use anyhow::{bail, Result};
 
+pub mod ckpt;
+
 use crate::memory::{Category, MemoryTracker};
 use crate::runtime::ModelConfigEntry;
 use crate::tensor::Rng;
@@ -179,7 +181,7 @@ fn init_tensor(name: &str, shape: &[usize], dst: &mut [f32], rng: &mut Rng) {
 /// Serialize parameters to a simple binary checkpoint (version + per-layer
 /// f32 blobs). Used by Table-1 style pretrain->finetune flows.
 pub mod checkpoint {
-    use std::io::{Read, Write};
+    use std::io::Read;
     use std::path::Path;
 
     use anyhow::{bail, Context, Result};
@@ -189,50 +191,95 @@ pub mod checkpoint {
     const MAGIC: &[u8; 8] = b"ADAMACK1";
 
     pub fn save(path: &Path, spec: &ModelSpec, params: &[LayerParams]) -> Result<()> {
-        let mut f = std::fs::File::create(path)
-            .with_context(|| format!("creating {}", path.display()))?;
-        f.write_all(MAGIC)?;
-        f.write_all(&(params.len() as u64).to_le_bytes())?;
-        for (layer, spec_l) in params.iter().zip(&spec.layers) {
-            assert_eq!(layer.flat.len(), spec_l.flat_len);
-            f.write_all(&(layer.flat.len() as u64).to_le_bytes())?;
-            let bytes: &[u8] = unsafe {
-                std::slice::from_raw_parts(layer.flat.as_ptr() as *const u8, layer.flat.len() * 4)
-            };
-            f.write_all(bytes)?;
+        if params.len() != spec.layers.len() {
+            bail!(
+                "cannot save: params have {} layers, spec '{}' wants {}",
+                params.len(),
+                spec.config,
+                spec.layers.len()
+            );
         }
-        Ok(())
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&(params.len() as u64).to_le_bytes());
+        for (i, (layer, spec_l)) in params.iter().zip(&spec.layers).enumerate() {
+            if layer.flat.len() != spec_l.flat_len {
+                bail!(
+                    "cannot save: layer '{}' (#{}) has {} params, spec wants {}",
+                    spec_l.name,
+                    i,
+                    layer.flat.len(),
+                    spec_l.flat_len
+                );
+            }
+            buf.extend_from_slice(&(layer.flat.len() as u64).to_le_bytes());
+            for x in &layer.flat {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        // atomic publish: a crash mid-write leaves only `<path>.tmp`, never
+        // a truncated file at the canonical path
+        super::ckpt::write_atomic(path, &buf)
     }
 
     pub fn load(path: &Path, spec: &ModelSpec) -> Result<Vec<LayerParams>> {
         let mut f = std::fs::File::open(path)
             .with_context(|| format!("opening {}", path.display()))?;
         let mut magic = [0u8; 8];
-        f.read_exact(&mut magic)?;
+        f.read_exact(&mut magic).context("truncated checkpoint: no magic")?;
         if &magic != MAGIC {
-            bail!("not an adama checkpoint");
+            bail!(
+                "not an ADAMACK1 checkpoint (magic {:?}; full-state files use \
+                 the ADAMACK2 container in model::ckpt)",
+                String::from_utf8_lossy(&magic)
+            );
         }
         let mut n8 = [0u8; 8];
-        f.read_exact(&mut n8)?;
+        f.read_exact(&mut n8).context("truncated checkpoint: no layer count")?;
         let n_layers = u64::from_le_bytes(n8) as usize;
         if n_layers != spec.layers.len() {
             bail!("checkpoint has {} layers, spec wants {}", n_layers, spec.layers.len());
         }
+        let mut offset = 16usize;
         let mut out = Vec::with_capacity(n_layers);
-        for spec_l in &spec.layers {
-            f.read_exact(&mut n8)?;
+        for (i, spec_l) in spec.layers.iter().enumerate() {
+            f.read_exact(&mut n8).with_context(|| {
+                format!(
+                    "truncated checkpoint: no length for layer '{}' (#{i}) at byte \
+                     offset {offset}",
+                    spec_l.name
+                )
+            })?;
+            offset += 8;
             let len = u64::from_le_bytes(n8) as usize;
             if len != spec_l.flat_len {
                 bail!("layer '{}' len {} != {}", spec_l.name, len, spec_l.flat_len);
             }
-            let mut flat = vec![0.0f32; len];
-            let bytes: &mut [u8] = unsafe {
-                std::slice::from_raw_parts_mut(flat.as_mut_ptr() as *mut u8, len * 4)
-            };
-            f.read_exact(bytes)?;
+            let mut bytes = vec![0u8; len * 4];
+            f.read_exact(&mut bytes).with_context(|| {
+                format!(
+                    "truncated checkpoint: layer '{}' (#{i}) cut short at byte \
+                     offset {offset}",
+                    spec_l.name
+                )
+            })?;
+            offset += len * 4;
+            let flat = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
             out.push(LayerParams { flat });
         }
-        Ok(out)
+        // strict EOF: a valid file ends exactly after the last layer
+        let mut probe = [0u8; 1];
+        match f.read(&mut probe) {
+            Ok(0) => Ok(out),
+            Ok(_) => bail!(
+                "checkpoint has trailing garbage after the last layer (byte offset \
+                 {offset}) — refusing a file this writer did not produce"
+            ),
+            Err(e) => Err(e).context("probing for trailing bytes"),
+        }
     }
 }
 

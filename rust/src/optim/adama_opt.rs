@@ -11,6 +11,7 @@ use anyhow::Result;
 use super::{AdamStatesMut, Hyper, Optimizer, UpdateBackend};
 use crate::config::OptimizerKind;
 use crate::memory::{Category, MemoryTracker};
+use crate::model::ckpt::OptSnapshot;
 use crate::model::{LayerParams, ModelSpec};
 
 pub struct AdamA {
@@ -120,6 +121,37 @@ impl Optimizer for AdamA {
 
     fn set_v_decay_factor(&mut self, factor: f32) {
         self.v_decay_factor = factor;
+    }
+
+    fn export_state(&self) -> Result<OptSnapshot> {
+        // layer order, m before v; lazy-decay flags are all consumed at the
+        // mini-batch boundary where checkpoints are cut, so (t, m, v) is
+        // the complete state
+        let bufs = self.m.iter().chain(self.v.iter()).cloned().collect();
+        Ok(OptSnapshot { tag: "adama".into(), t: self.t, bufs })
+    }
+
+    fn import_state(&mut self, snap: &OptSnapshot) -> Result<()> {
+        if snap.tag != "adama" {
+            anyhow::bail!("AdamA cannot import a '{}' snapshot", snap.tag);
+        }
+        let n = self.m.len();
+        if snap.bufs.len() != 2 * n {
+            anyhow::bail!(
+                "AdamA snapshot has {} buffers, wanted {} (m ++ v per layer)",
+                snap.bufs.len(),
+                2 * n
+            );
+        }
+        for (l, buf) in snap.bufs[..n].iter().enumerate() {
+            super::restore_buf(&mut self.m[l], buf, &format!("m[{l}]"))?;
+        }
+        for (l, buf) in snap.bufs[n..].iter().enumerate() {
+            super::restore_buf(&mut self.v[l], buf, &format!("v[{l}]"))?;
+        }
+        self.t = snap.t;
+        self.decay_pending.iter_mut().for_each(|p| *p = false);
+        Ok(())
     }
 }
 

@@ -28,8 +28,22 @@ use anyhow::Result;
 
 use crate::config::{OptimBackend, OptimizerKind, TrainConfig};
 use crate::memory::MemoryTracker;
+use crate::model::ckpt::OptSnapshot;
 use crate::model::{LayerParams, ModelSpec};
 use crate::runtime::Library;
+
+/// Copy one checkpointed state buffer over a live one, length-checked.
+pub(crate) fn restore_buf(dst: &mut [f32], src: &[f32], what: &str) -> Result<()> {
+    if dst.len() != src.len() {
+        anyhow::bail!(
+            "optimizer snapshot mismatch: {what} has {} elements, live state wants {}",
+            src.len(),
+            dst.len()
+        );
+    }
+    dst.copy_from_slice(src);
+    Ok(())
+}
 
 /// Adam hyper-parameters (from the manifest; baked into the kernels).
 #[derive(Debug, Clone, Copy)]
@@ -101,6 +115,22 @@ pub trait Optimizer: Send {
     fn grad_acc_mut(&mut self) -> Option<&mut [Vec<f32>]> {
         None
     }
+
+    /// Snapshot the optimizer's complete mutable state (checkpointing
+    /// seam). Called only at mini-batch boundaries, where every transient
+    /// (lazy-decay flags, …) is fully consumed — so tag + step + buffers
+    /// is the *whole* state and restoring it is bit-exact.
+    fn export_state(&self) -> Result<OptSnapshot> {
+        anyhow::bail!("{:?}: optimizer state export not supported", self.kind())
+    }
+
+    /// Restore a snapshot produced by [`Optimizer::export_state`] on an
+    /// identically-shaped optimizer. Copies in place (no re-allocation, so
+    /// memory metering is untouched); tag and buffer shapes are checked.
+    fn import_state(&mut self, snap: &OptSnapshot) -> Result<()> {
+        let _ = snap;
+        anyhow::bail!("{:?}: optimizer state import not supported", self.kind())
+    }
 }
 
 /// Placeholder optimizer for flows that manage state externally (ZeRO-S1
@@ -126,6 +156,18 @@ impl Optimizer for NullOpt {
 
     fn state_bytes(&self) -> usize {
         0
+    }
+
+    fn export_state(&self) -> Result<OptSnapshot> {
+        // state lives externally (ZeRO shards) — an empty snapshot is correct
+        Ok(OptSnapshot { tag: "null".into(), t: 0, bufs: Vec::new() })
+    }
+
+    fn import_state(&mut self, snap: &OptSnapshot) -> Result<()> {
+        if snap.tag != "null" || !snap.bufs.is_empty() {
+            anyhow::bail!("NullOpt cannot import a '{}' snapshot", snap.tag);
+        }
+        Ok(())
     }
 }
 

@@ -29,6 +29,7 @@ use anyhow::Result;
 use super::{Hyper, Optimizer, UpdateBackend};
 use crate::config::OptimizerKind;
 use crate::memory::{Category, MemoryTracker};
+use crate::model::ckpt::OptSnapshot;
 use crate::model::{LayerParams, ModelSpec, ParamView};
 use crate::runtime::{OptAlgo, OptStep};
 
@@ -308,6 +309,44 @@ impl ZooStates {
         self.state_bytes
     }
 
+    /// All state buffers in deterministic (layer, tensor, buffer) order —
+    /// the checkpointing seam. The rules themselves are stateless (all
+    /// mutable state lives in the slot buffers), so this list plus the
+    /// step counter is the complete zoo state.
+    pub fn export_bufs(&self) -> Vec<Vec<f32>> {
+        self.slots
+            .iter()
+            .flat_map(|layer| layer.iter().flat_map(|slot| slot.bufs.iter().cloned()))
+            .collect()
+    }
+
+    /// Restore buffers captured by [`ZooStates::export_bufs`], copying in
+    /// place (shape-checked, no re-allocation).
+    pub fn import_bufs(&mut self, bufs: &[Vec<f32>]) -> Result<()> {
+        let mut it = bufs.iter();
+        for (l, layer) in self.slots.iter_mut().enumerate() {
+            for slot in layer.iter_mut() {
+                for (bi, dst) in slot.bufs.iter_mut().enumerate() {
+                    let src = it.next().ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "zoo snapshot ran out of buffers at layer {l} tensor '{}' buf {bi}",
+                            slot.view.name
+                        )
+                    })?;
+                    super::restore_buf(
+                        dst,
+                        src,
+                        &format!("layer {l} tensor '{}' buf {bi}", slot.view.name),
+                    )?;
+                }
+            }
+        }
+        if it.next().is_some() {
+            anyhow::bail!("zoo snapshot has more buffers than the live state");
+        }
+        Ok(())
+    }
+
     /// Apply the rule to every tensor of `layer` from the layer's
     /// accumulated mean gradient.
     pub fn apply_layer(
@@ -416,6 +455,30 @@ impl Optimizer for ZooOpt {
     fn grad_acc_mut(&mut self) -> Option<&mut [Vec<f32>]> {
         Some(&mut self.acc)
     }
+
+    fn export_state(&self) -> Result<OptSnapshot> {
+        // acc layers first (zeroed at the next begin_minibatch, but kept
+        // for completeness), then the rule's slot buffers
+        let bufs = self.acc.iter().cloned().chain(self.states.export_bufs()).collect();
+        Ok(OptSnapshot { tag: format!("zoo:{}", self.algo().name()), t: self.t, bufs })
+    }
+
+    fn import_state(&mut self, snap: &OptSnapshot) -> Result<()> {
+        let tag = format!("zoo:{}", self.algo().name());
+        if snap.tag != tag {
+            anyhow::bail!("ZooOpt({tag}) cannot import a '{}' snapshot", snap.tag);
+        }
+        let n = self.acc.len();
+        if snap.bufs.len() < n {
+            anyhow::bail!("zoo snapshot has {} buffers, wanted at least {n}", snap.bufs.len());
+        }
+        for (l, buf) in snap.bufs[..n].iter().enumerate() {
+            super::restore_buf(&mut self.acc[l], buf, &format!("acc[{l}]"))?;
+        }
+        self.states.import_bufs(&snap.bufs[n..])?;
+        self.t = snap.t;
+        Ok(())
+    }
 }
 
 /// SGDM-A — the paper's §5 generalisation: optimizer accumulation applied
@@ -482,6 +545,28 @@ impl Optimizer for SgdmA {
 
     fn state_bytes(&self) -> usize {
         self.state_bytes
+    }
+
+    fn export_state(&self) -> Result<OptSnapshot> {
+        Ok(OptSnapshot { tag: "sgdma".into(), t: 0, bufs: self.u.clone() })
+    }
+
+    fn import_state(&mut self, snap: &OptSnapshot) -> Result<()> {
+        if snap.tag != "sgdma" {
+            anyhow::bail!("SgdmA cannot import a '{}' snapshot", snap.tag);
+        }
+        if snap.bufs.len() != self.u.len() {
+            anyhow::bail!(
+                "SgdmA snapshot has {} buffers, wanted {}",
+                snap.bufs.len(),
+                self.u.len()
+            );
+        }
+        for (l, buf) in snap.bufs.iter().enumerate() {
+            super::restore_buf(&mut self.u[l], buf, &format!("u[{l}]"))?;
+        }
+        self.decay_pending.iter_mut().for_each(|p| *p = false);
+        Ok(())
     }
 }
 

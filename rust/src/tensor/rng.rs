@@ -2,7 +2,7 @@
 //! synthetic data without external crates, seedable per worker/stream.
 
 /// Splitmix64-based RNG with cached Gaussian (Box-Muller pairs).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Rng {
     state: u64,
     cached_normal: Option<f32>,
@@ -11,6 +11,19 @@ pub struct Rng {
 impl Rng {
     pub fn new(seed: u64) -> Self {
         Self { state: seed.wrapping_add(0x9E3779B97F4A7C15), cached_normal: None }
+    }
+
+    /// The complete cursor of this stream: (splitmix state, cached
+    /// Box-Muller half). Together with [`Rng::from_state`] this makes the
+    /// stream checkpointable — restoring reproduces the exact draw
+    /// sequence, including a pending cached normal.
+    pub fn state(&self) -> (u64, Option<f32>) {
+        (self.state, self.cached_normal)
+    }
+
+    /// Rebuild a stream at an exact cursor captured by [`Rng::state`].
+    pub fn from_state(state: u64, cached_normal: Option<f32>) -> Self {
+        Self { state, cached_normal }
     }
 
     /// Derive an independent stream (worker shards, data vs init, ...).

@@ -3,23 +3,43 @@
 //! The build environment for this repository has no registry access, so the
 //! subset of the `anyhow` API the workspace uses is reimplemented here as a
 //! path dependency: [`Error`], [`Result`], the [`Context`] extension trait
-//! (for both `Result` and `Option`), and the `anyhow!` / `bail!` /
-//! `ensure!` macros. Drop-in source compatibility with real `anyhow` is the
-//! goal — swapping the path dependency for the crates.io release must not
-//! require any code change.
+//! (for both `Result` and `Option`), typed-cause retention
+//! ([`Error::new`] / [`Error::chain`] / [`Error::downcast_ref`]), and the
+//! `anyhow!` / `bail!` / `ensure!` macros. Drop-in source compatibility
+//! with real `anyhow` is the goal — swapping the path dependency for the
+//! crates.io release must not require any code change.
 
+use std::error::Error as StdError;
 use std::fmt;
 
-/// A context-carrying error: an outermost message plus a cause chain.
+/// A context-carrying error: an outermost message plus a cause chain, and
+/// — when built from a typed error value — the value itself, retained so
+/// callers can [`downcast_ref`](Error::downcast_ref) it back out (the
+/// collective fabric's `PeerDeath` recovery decisions depend on this).
 pub struct Error {
     /// Outermost context first; the last entry is the root cause.
     chain: Vec<String>,
+    /// The typed root-cause value, when one was retained. Context layers
+    /// stack *around* it without erasing it.
+    typed: Option<Box<dyn StdError + Send + Sync + 'static>>,
 }
 
 impl Error {
-    /// Build an error from a displayable message.
+    /// Build an error from a displayable message (no typed cause).
     pub fn msg<M: fmt::Display>(message: M) -> Self {
-        Self { chain: vec![message.to_string()] }
+        Self { chain: vec![message.to_string()], typed: None }
+    }
+
+    /// Build an error from a typed error value, retaining it for
+    /// [`chain`](Error::chain) / [`downcast_ref`](Error::downcast_ref).
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Self {
+        let mut chain = vec![error.to_string()];
+        let mut src = error.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Self { chain, typed: Some(Box::new(error)) }
     }
 
     /// Wrap with an additional layer of context.
@@ -31,6 +51,33 @@ impl Error {
     /// The innermost (root-cause) message.
     pub fn root_cause(&self) -> &str {
         self.chain.last().map(String::as_str).unwrap_or("")
+    }
+
+    /// Iterator over the retained typed cause and its sources, outermost
+    /// first. Empty for message-only errors — exactly the errors that
+    /// cannot hold a downcastable value.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain { next: self.typed.as_deref().map(|e| e as &(dyn StdError + 'static)) }
+    }
+
+    /// Downcast against the retained typed cause chain.
+    pub fn downcast_ref<T: StdError + 'static>(&self) -> Option<&T> {
+        self.chain().find_map(|e| e.downcast_ref::<T>())
+    }
+}
+
+/// Iterator returned by [`Error::chain`].
+pub struct Chain<'a> {
+    next: Option<&'a (dyn StdError + 'static)>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a (dyn StdError + 'static);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let cur = self.next?;
+        self.next = cur.source();
+        Some(cur)
     }
 }
 
@@ -56,19 +103,14 @@ impl fmt::Debug for Error {
 }
 
 // Like real anyhow: `Error` deliberately does NOT implement
-// `std::error::Error`, which keeps this blanket conversion coherent.
+// `std::error::Error`, which keeps this blanket conversion coherent (and
+// the identity `From<Error> for Error` available to `Context` below).
 impl<E> From<E> for Error
 where
-    E: std::error::Error + Send + Sync + 'static,
+    E: StdError + Send + Sync + 'static,
 {
     fn from(e: E) -> Self {
-        let mut chain = vec![e.to_string()];
-        let mut src = e.source();
-        while let Some(s) = src {
-            chain.push(s.to_string());
-            src = s.source();
-        }
-        Self { chain }
+        Self::new(e)
     }
 }
 
@@ -81,13 +123,16 @@ pub trait Context<T> {
     fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
 }
 
-impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+// Bound on `Into<Error>` (std errors via the blanket `From`, `Error`
+// itself via the identity `From`) rather than `Display`, so contexting a
+// `Result<_, Error>` stacks a layer without erasing the typed cause.
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
     fn context<C: fmt::Display>(self, context: C) -> Result<T> {
-        self.map_err(|e| Error::msg(e).context(context))
+        self.map_err(|e| e.into().context(context))
     }
 
     fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
-        self.map_err(|e| Error::msg(e).context(f()))
+        self.map_err(|e| e.into().context(f()))
     }
 }
 
@@ -174,5 +219,30 @@ mod tests {
         }
         let e = io_fail().unwrap_err();
         assert!(!e.to_string().is_empty());
+        // the `?` conversion retains the typed io::Error
+        assert!(e.downcast_ref::<std::io::Error>().is_some());
+    }
+
+    #[derive(Debug, PartialEq)]
+    struct Marker(u32);
+
+    impl fmt::Display for Marker {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "marker {}", self.0)
+        }
+    }
+
+    impl StdError for Marker {}
+
+    #[test]
+    fn typed_cause_survives_context_layers() {
+        let wrapped: Result<()> = Err(Error::new(Marker(7)));
+        let e = wrapped.context("outer").with_context(|| "outermost").unwrap_err();
+        assert_eq!(e.to_string(), "outermost: outer: marker 7");
+        assert_eq!(e.downcast_ref::<Marker>(), Some(&Marker(7)));
+        assert_eq!(e.chain().count(), 1);
+        assert!(e.chain().next().unwrap().downcast_ref::<Marker>().is_some());
+        // message-only errors have nothing downcastable
+        assert!(fails().unwrap_err().chain().next().is_none());
     }
 }
