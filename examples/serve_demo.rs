@@ -1,0 +1,95 @@
+//! Serving demo: train a few steps, checkpoint, then serve the
+//! checkpoint through the batched KV-cache inference engine.
+//!
+//! ```text
+//! cargo run --release --example serve_demo
+//! ADAMA_KV_BUDGET=16k cargo run --release --example serve_demo
+//! ```
+//!
+//! Part 1 produces an `ADAMACK2` checkpoint with the trainer. Part 2
+//! loads it into the forward-only engine and drives a deterministic
+//! synthetic request stream through the continuous-batching scheduler,
+//! printing throughput, latency percentiles, and the exact agreement
+//! between measured KV bytes and the `memmodel` closed form. Run it
+//! twice (with and without `ADAMA_KV_BUDGET`) to watch eviction trade
+//! latency for memory without changing a single output token.
+
+use adama::config::{OptimizerKind, TrainConfig};
+use adama::data::MarkovCorpus;
+use adama::memmodel::HostBlockDims;
+use adama::runtime::Library;
+use adama::serve::{kv_budget_from_env, InferenceEngine, Scheduler, SyntheticLoad};
+use adama::util::stats::fmt_bytes;
+use adama::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    let lib = Library::open_default()?;
+    println!(
+        "execution backend: {} ({} pool thread(s))",
+        lib.executor().platform(),
+        lib.executor().threads()
+    );
+
+    // ---- part 1: train briefly and checkpoint ----
+    let cfg = TrainConfig {
+        model: "tiny".into(),
+        optimizer: OptimizerKind::AdamA,
+        accum_steps: 4,
+        ..TrainConfig::default()
+    };
+    let mut trainer = Trainer::new(lib.clone(), cfg)?;
+    let h = trainer.spec().hyper.clone();
+    let mut corpus = MarkovCorpus::new(h.vocab, 7, 1);
+    for _ in 0..5 {
+        trainer.train_step(&corpus.minibatch(4, h.microbatch, h.seq))?;
+    }
+    let dir = std::env::temp_dir().join(format!("adama_serve_demo_{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+    let ckpt = dir.join("demo.ack2");
+    trainer.save_state(&ckpt, &[])?;
+    println!("checkpointed {} steps to {}", 5, ckpt.display());
+    drop(trainer);
+
+    // ---- part 2: serve the checkpoint ----
+    let engine = InferenceEngine::from_checkpoint(lib.clone(), "tiny", &ckpt)?;
+    let dims = HostBlockDims::from_model(engine.hyper());
+    let layers = engine.hyper().layers as u64;
+    let budget = kv_budget_from_env()?;
+    match budget {
+        Some(cap) => println!(
+            "ADAMA_KV_BUDGET={} -> at most {} cached tokens across the batch",
+            fmt_bytes(cap as usize),
+            dims.kv_budget_tokens(layers, cap)
+        ),
+        None => println!("ADAMA_KV_BUDGET unset -> KV cache uncapped"),
+    }
+
+    let load = SyntheticLoad { requests: 8, prompt_len: 8, max_new: 8, arrive_every: 1, seed: 9 };
+    let mut sched = Scheduler::with_budget(engine, /*max_batch=*/ 4, budget);
+    let stats = load.run(&mut sched)?;
+
+    println!(
+        "\nserved {} requests / {} tokens in {} decode steps",
+        stats.requests(),
+        stats.tokens(),
+        sched.steps()
+    );
+    println!(
+        "throughput {:.0} tok/s   latency p50 {:.1} ms, p99 {:.1} ms",
+        stats.tokens_per_sec(),
+        1e3 * stats.p50(),
+        1e3 * stats.p99()
+    );
+    println!(
+        "KV accounting: one token pins {} across {} blocks; a full {}-token \
+         context would pin {} — measured and modelled bytes agree exactly \
+         (asserted in rust/tests/serve.rs)",
+        fmt_bytes(sched.engine().kv_bytes_per_token() as usize),
+        layers,
+        dims.seq,
+        fmt_bytes(dims.kv_cache_bytes(layers, dims.seq) as usize)
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

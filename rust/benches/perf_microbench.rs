@@ -33,7 +33,14 @@
 //!   * checkpoint I/O: `ADAMACK2` full-state container save (serialize +
 //!     per-section hash + atomic tmp/rename) and load (parse + hash
 //!     re-verify) for the tiny model, with MB/s per row — the cost floor
-//!     of a crash-safety cadence (`ADAMA_CKPT_EVERY`).
+//!     of a crash-safety cadence (`ADAMA_CKPT_EVERY`);
+//!   * serving: the batched KV-cache decode path (`serve::Scheduler`
+//!     over a deterministic synthetic load) — tokens/s and p50/p99
+//!     request latency at batch 1 vs batch 4, plus an eviction row under
+//!     a tight `ADAMA_KV_BUDGET`-style cap; a full run **fails** if
+//!     batched serving falls below serial serving beyond a 10% noise
+//!     allowance (decode is bit-identical either way —
+//!     `rust/tests/serve.rs` — so the rows measure pure scheduling).
 //!
 //! Besides the human-readable table, writes `BENCH_perf.json` —
 //! machine-readable ns/elem per kernel per backend (each row tagged with
@@ -44,8 +51,10 @@ use adama::collective::{
     run_data_parallel, run_zero1, CollectiveEngine, DpSpec, SyncStrategy, Zero1Spec,
 };
 use adama::config::{OptimBackend, OptimizerKind};
+use adama::coordinator::ServeStats;
 use adama::data::MarkovCorpus;
 use adama::model::ckpt::TrainState;
+use adama::serve::{InferenceEngine, Scheduler, SyntheticLoad};
 use adama::optim::{host_math, ChunkRunner, Hyper};
 use adama::runtime::hostexec::math;
 use adama::runtime::{simd, GemmMode, Library, MemoryPlan, ThreadPool, Value};
@@ -658,6 +667,101 @@ fn main() {
     }
     println!("(save is serialize + per-section FNV hash + tmp write + rename; load re-verifies)");
 
+    banner("serving: batched KV-cache decode over the scheduler (tiny)");
+    println!(
+        "{:<24} {:>6} {:>10} {:>10} {:>10} {:>9}",
+        "op", "batch", "tok/s", "p50 ms", "p99 ms", "prefills"
+    );
+    let mut serve_regressions: Vec<String> = Vec::new();
+    {
+        let sload = SyntheticLoad {
+            requests: if quick() { 4 } else { 8 },
+            prompt_len: 8,
+            max_new: if quick() { 4 } else { 8 },
+            arrive_every: 1,
+            seed: 9,
+        };
+        let slib = Library::host_with_threads(pool_threads);
+        let mut tps_serial = 0.0f64;
+        for max_batch in [1usize, 4] {
+            let engine =
+                InferenceEngine::init_random(slib.clone(), "tiny", 42).expect("serve engine");
+            let mut sched = Scheduler::with_budget(engine, max_batch, None);
+            let stats = sload.run(&mut sched).expect("synthetic load");
+            let tps = stats.tokens_per_sec();
+            if max_batch == 1 {
+                tps_serial = tps;
+            }
+            println!(
+                "{:<24} {:>6} {:>10.0} {:>10.2} {:>10.2} {:>9}",
+                "serve_decode",
+                max_batch,
+                tps,
+                1e3 * stats.p50(),
+                1e3 * stats.p99(),
+                sload.requests
+            );
+            results.push(obj(vec![
+                ("op", "serve_decode".into()),
+                ("backend", "host".into()),
+                ("threads", pool_threads.into()),
+                ("max_batch", max_batch.into()),
+                ("requests", sload.requests.into()),
+                ("tokens_per_sec", tps.into()),
+                ("latency_p50_ms", (1e3 * stats.p50()).into()),
+                ("latency_p99_ms", (1e3 * stats.p99()).into()),
+                ("decode_steps", (sched.steps() as usize).into()),
+            ]));
+            if max_batch > 1 && tps < 0.9 * tps_serial {
+                serve_regressions.push(format!(
+                    "serve_decode: batch={max_batch} {tps:.0} tok/s vs serial {tps_serial:.0} tok/s"
+                ));
+            }
+        }
+        // eviction under a tight KV cap: each request peaks at
+        // prompt+max_new-1 cached tokens; a cap of ~1.5 peaks forces the
+        // scheduler to evict and re-prefill — same tokens, extra work.
+        let engine =
+            InferenceEngine::init_random(slib.clone(), "tiny", 42).expect("serve engine");
+        let peak = (sload.prompt_len + sload.max_new - 1) as u64;
+        let cap = (peak + peak / 2) * engine.kv_bytes_per_token();
+        let prompts = sload.prompts(engine.hyper().vocab);
+        let mut sched = Scheduler::with_budget(engine, 4, Some(cap));
+        let t0 = std::time::Instant::now();
+        for p in &prompts {
+            sched.submit(p, sload.max_new).expect("submit under cap");
+        }
+        let done = sched.run_to_completion(100_000).expect("drain under cap");
+        let mut stats = ServeStats::new();
+        for c in &done {
+            stats.record(c.latency_s, c.tokens.len() as u64);
+        }
+        stats.set_wall_seconds(t0.elapsed().as_secs_f64());
+        let prefills: u32 = done.iter().map(|c| c.prefills).sum();
+        println!(
+            "{:<24} {:>6} {:>10.0} {:>10.2} {:>10.2} {:>9}",
+            "serve_decode_kv_budget",
+            4,
+            stats.tokens_per_sec(),
+            1e3 * stats.p50(),
+            1e3 * stats.p99(),
+            prefills
+        );
+        results.push(obj(vec![
+            ("op", "serve_decode_kv_budget".into()),
+            ("backend", "host".into()),
+            ("threads", pool_threads.into()),
+            ("max_batch", 4usize.into()),
+            ("requests", sload.requests.into()),
+            ("kv_budget_bytes", (cap as usize).into()),
+            ("tokens_per_sec", stats.tokens_per_sec().into()),
+            ("latency_p50_ms", (1e3 * stats.p50()).into()),
+            ("latency_p99_ms", (1e3 * stats.p99()).into()),
+            ("prefills_total", (prefills as usize).into()),
+        ]));
+    }
+    println!("(decode is bit-identical to the full-context forward: rust/tests/serve.rs)");
+
     banner("executor call count (instrumentation)");
     println!("exec calls so far: {}", lib.executor().exec_calls());
 
@@ -674,8 +778,9 @@ fn main() {
     }
 
     // hard gates: the SIMD path must never run slower than scalar, the
-    // packed GEMM engine must never run slower than the naive loops, and
-    // async issue must never run slower than blocking issue (each with a
+    // packed GEMM engine must never run slower than the naive loops,
+    // async issue must never run slower than blocking issue, and batched
+    // serving must never run slower than serial serving (each with a
     // noise allowance) — a regression fails the bench run.
     // Only armed at the full iteration count: 3-iteration --quick samples
     // on shared CI are too jittery to turn into a red build.
@@ -697,6 +802,13 @@ fn main() {
     if !async_regressions.is_empty() {
         eprintln!("\nasync-issue regression vs blocking issue:");
         for r in &async_regressions {
+            eprintln!("  {r}");
+        }
+        gated = true;
+    }
+    if !serve_regressions.is_empty() {
+        eprintln!("\nbatched serving regression vs serial serving:");
+        for r in &serve_regressions {
             eprintln!("  {r}");
         }
         gated = true;

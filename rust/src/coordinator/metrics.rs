@@ -45,6 +45,8 @@ impl MemorySnapshot {
             fields.push(("host_stash_hits", (m.stash_hits as usize).into()));
             fields.push(("host_remats", (m.remats as usize).into()));
             fields.push(("host_evictions", (m.stash_evictions as usize).into()));
+            fields.push(("host_kv_peak", (m.kv_peak_bytes as usize).into()));
+            fields.push(("host_kv_live", (m.kv_live_bytes as usize).into()));
         }
         obj(fields)
     }
@@ -95,6 +97,8 @@ impl WorldMemory {
                     stash_hits: x.stash_hits.max(y.stash_hits),
                     stash_evictions: x.stash_evictions.max(y.stash_evictions),
                     remats: x.remats.max(y.remats),
+                    kv_live_bytes: x.kv_live_bytes.max(y.kv_live_bytes),
+                    kv_peak_bytes: x.kv_peak_bytes.max(y.kv_peak_bytes),
                 }),
                 (x, y) => x.or(y),
             },
@@ -141,6 +145,80 @@ impl StepStats {
         } else {
             0.0
         }
+    }
+}
+
+/// Aggregate serving metrics from an inference run (`serve::Engine`):
+/// per-request completion latencies plus generated-token throughput —
+/// the tokens/s and p50/p99 rows the serving benches publish to
+/// `BENCH_perf.json`. Latencies are whatever unit the caller records
+/// (the synthetic load driver records wall seconds; deterministic tests
+/// record scheduler steps).
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    latencies: crate::util::stats::Summary,
+    tokens: u64,
+    wall_s: f64,
+}
+
+impl ServeStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one completed request: its end-to-end latency and how many
+    /// tokens it generated.
+    pub fn record(&mut self, latency: f64, tokens: u64) {
+        self.latencies.push(latency);
+        self.tokens += tokens;
+    }
+
+    /// Set the total wall-clock of the serving run (throughput base).
+    pub fn set_wall_seconds(&mut self, secs: f64) {
+        self.wall_s = secs;
+    }
+
+    /// Completed requests.
+    pub fn requests(&self) -> usize {
+        self.latencies.n()
+    }
+
+    /// Generated tokens across all completed requests.
+    pub fn tokens(&self) -> u64 {
+        self.tokens
+    }
+
+    /// Generated tokens per wall second (0 when no wall time recorded).
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.tokens as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Median request latency.
+    pub fn p50(&self) -> f64 {
+        self.latencies.percentile(50.0)
+    }
+
+    /// 99th-percentile request latency.
+    pub fn p99(&self) -> f64 {
+        self.latencies.percentile(99.0)
+    }
+
+    pub fn mean_latency(&self) -> f64 {
+        self.latencies.mean()
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("requests", self.requests().into()),
+            ("tokens", (self.tokens as usize).into()),
+            ("tokens_per_sec", self.tokens_per_sec().into()),
+            ("latency_p50", self.p50().into()),
+            ("latency_p99", self.p99().into()),
+        ])
     }
 }
 
@@ -306,6 +384,28 @@ mod tests {
 
         assert!(WorldMemory::new(vec![]).max_per_rank().is_none());
         assert_eq!(WorldMemory::new(vec![]).activation_peak_bytes(), 0);
+    }
+
+    #[test]
+    fn serve_stats_throughput_and_percentiles() {
+        let mut s = ServeStats::new();
+        for i in 1..=100 {
+            s.record(i as f64, 4);
+        }
+        s.set_wall_seconds(2.0);
+        assert_eq!(s.requests(), 100);
+        assert_eq!(s.tokens(), 400);
+        assert_eq!(s.tokens_per_sec(), 200.0);
+        // Summary::percentile rounds the rank: idx 50 of the sorted 1..=100
+        assert_eq!(s.p50(), 51.0);
+        assert_eq!(s.p99(), 99.0);
+        let j = s.to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_string_compact()).unwrap();
+        assert_eq!(parsed.get("requests").unwrap().as_usize().unwrap(), 100);
+        // empty stats degrade to zeros, never NaN/panic
+        let e = ServeStats::new();
+        assert_eq!(e.tokens_per_sec(), 0.0);
+        assert_eq!(e.p50(), 0.0);
     }
 
     #[test]

@@ -24,7 +24,7 @@ mod metrics;
 pub mod mlp;
 
 pub use checkpoint::CheckpointPolicy;
-pub use metrics::{MemorySnapshot, Metrics, StepStats, WorldMemory};
+pub use metrics::{MemorySnapshot, Metrics, ServeStats, StepStats, WorldMemory};
 pub use mlp::MlpTrainer;
 
 use std::sync::Arc;

@@ -20,6 +20,10 @@
 //!   lock-step channel ring and a serial simulator, all bit-identical),
 //!   optimizer-state all-reduce workers (Eq. 5–8) and ZeRO-S1
 //!   partitioning.
+//! * **serve** — the forward-only split of the same stack: batched
+//!   incremental decoding over a per-sequence KV cache that is metered
+//!   through the executor like any other activation, budgeted by
+//!   `ADAMA_KV_BUDGET`, and bit-identical to the full-context forward.
 //! * **runtime** — `Library` resolves manifest program names through one
 //!   of two `Executor` backends:
 //!     * `hostexec` (default): pure-rust reference implementations of the
@@ -41,6 +45,7 @@
 //! | `ADAMA_BACKEND=pjrt` | require PJRT; fail loudly instead of falling back |
 //! | `ADAMA_THREADS=N` | host thread-pool size (bit-identical at any N) |
 //! | `ADAMA_ACT_BUDGET=0\|<n>[k\|m\|g]\|unlimited` | activation stash budget: remat (default) ↔ stash per-block intermediates |
+//! | `ADAMA_KV_BUDGET=0\|<n>[k\|m\|g]\|unlimited` | serving KV-cache byte cap: uncapped (default) ↔ oldest-sequence eviction |
 //! | `ADAMA_FABRIC=ring\|tree` | collective fabric reduction topology (deterministic either way) |
 //!
 //! Every `ADAMA_*` knob is strictly parsed: invalid values are clear
@@ -61,6 +66,7 @@ pub mod memory;
 pub mod model;
 pub mod optim;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;
 

@@ -521,6 +521,52 @@ impl HostBlockDims {
         }
     }
 
+    // -- serving (KV-cached decode) ----------------------------------------
+
+    /// Bytes one cached token occupies in one block's KV cache: a K row
+    /// plus a V row, each `hidden` fp32 — `8·hidden`. The serving engine
+    /// (`crate::serve`) stores exactly these rows (`block_decode`'s
+    /// `knew`/`vnew` outputs), so the measured
+    /// [`crate::runtime::MemStats::kv_live_bytes`] is this times cached
+    /// tokens times layers, reconciled in `rust/tests/serve.rs`.
+    pub fn kv_bytes_per_token_per_layer(&self) -> u64 {
+        2 * self.hidden * 4
+    }
+
+    /// Whole-model KV-cache bytes for `tokens` cached positions across
+    /// `layers` blocks — the quantity `ADAMA_KV_BUDGET` caps.
+    pub fn kv_cache_bytes(&self, layers: u64, tokens: u64) -> u64 {
+        layers * tokens * self.kv_bytes_per_token_per_layer()
+    }
+
+    /// Cached tokens that fit a KV byte budget (whole tokens only —
+    /// the serving engine admits or evicts full rows across all layers).
+    pub fn kv_budget_tokens(&self, layers: u64, budget_bytes: u64) -> u64 {
+        budget_bytes / self.kv_cache_bytes(layers, 1)
+    }
+
+    /// Transient workspace bytes of one `block_decode` call over a ragged
+    /// batch of `n` new rows attending to `p` cached rows (`p = Σ lens`):
+    /// `hn1 + qkv(3h) + aoh + ao + attn + x1 + hn2 + m2 + y + knew +
+    /// vnew` (`13·n·h`), the MLP pair `m1 + gel` (`2·n·f`), the
+    /// transposed-K gather over cached and fresh rows (`h·(p+n)`), plus
+    /// the forward B-panel of the `mode` engine (the decode matmul
+    /// shapes are the forward set with `n` rows). Mirrors the allocation
+    /// sites in `runtime::hostexec::transformer::BlockDecode`
+    /// one-for-one.
+    pub fn decode_workspace_bytes(&self, n: u64, p: u64, mode: GemmMode) -> u64 {
+        let (h, f) = (self.hidden, self.ffn);
+        4 * (13 * n * h + 2 * n * f + h * (p + n) + self.fwd_panel_elems(mode))
+    }
+
+    /// Transient workspace bytes of one `head_logits` call over `n` rows:
+    /// the logits buffer plus the single-matmul B-panel. Mirrors
+    /// `runtime::hostexec::transformer::HeadLogits`.
+    pub fn head_logits_workspace_bytes(&self, n: u64, vocab: u64, mode: GemmMode) -> u64 {
+        let panel = if mode == GemmMode::Naive { 0 } else { Self::pe(self.hidden, vocab) };
+        4 * (n * vocab + panel)
+    }
+
     /// The stash-policy analogue of [`DtypePolicy::act_coeff`]: bytes per
     /// (token × layer × hidden) when every block stashes. Where the
     /// remat policy keeps K=4 (block inputs only), full stashing keeps
@@ -761,6 +807,41 @@ mod tests {
             // a rematerialising one (that's the whole trade)
             assert!(d.stash_entry_bytes() < d.fwd_workspace_bytes(gm));
             assert!(d.bwd_workspace_bytes(gm) < d.remat_bwd_workspace_bytes(gm));
+        }
+    }
+
+    #[test]
+    fn serving_kv_formulas_are_consistent() {
+        // tiny config dims: b=4, s=32, h=64, heads=2, f=256
+        let d = HostBlockDims { batch: 4, seq: 32, hidden: 64, heads: 2, ffn: 256 };
+        // one token, one layer: a K row + a V row of h fp32 each
+        assert_eq!(d.kv_bytes_per_token_per_layer(), 2 * 64 * 4);
+        assert_eq!(d.kv_cache_bytes(2, 10), 2 * 10 * 2 * 64 * 4);
+        // budget→tokens is the exact floor inverse
+        let per_tok = d.kv_cache_bytes(2, 1);
+        assert_eq!(d.kv_budget_tokens(2, 5 * per_tok + per_tok - 1), 5);
+        assert_eq!(d.kv_budget_tokens(2, 5 * per_tok), 5);
+        // decode workspace: ragged batch of n=3 new rows over p=7 cached
+        let (n, p) = (3u64, 7u64);
+        assert_eq!(
+            d.decode_workspace_bytes(n, p, GemmMode::Naive),
+            4 * (13 * n * 64 + 2 * n * 256 + 64 * (p + n))
+        );
+        assert_eq!(
+            d.decode_workspace_bytes(n, p, GemmMode::Packed),
+            d.decode_workspace_bytes(n, p, GemmMode::Naive) + 4 * d.fwd_panel_elems(GemmMode::Packed)
+        );
+        // head_logits: logits + panel only
+        let v = 256u64;
+        assert_eq!(d.head_logits_workspace_bytes(n, v, GemmMode::Naive), 4 * n * v);
+        assert_eq!(
+            d.head_logits_workspace_bytes(n, v, GemmMode::Packed),
+            4 * (n * v + 64 * 256)
+        );
+        // a decode step over one token is far lighter than a training
+        // forward over the full micro-batch — the point of serving split
+        for gm in GemmMode::all() {
+            assert!(d.decode_workspace_bytes(1, 32, gm) < d.fwd_workspace_bytes(gm));
         }
     }
 

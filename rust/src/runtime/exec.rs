@@ -223,6 +223,12 @@ pub struct MemStats {
     pub stash_evictions: u64,
     /// Backward calls that fell back to rematerialisation.
     pub remats: u64,
+    /// Bytes currently held by serving KV caches (`serve::KvCache`
+    /// registers every per-sequence key/value buffer here; always 0 in
+    /// training runs).
+    pub kv_live_bytes: u64,
+    /// High-water mark of `kv_live_bytes`.
+    pub kv_peak_bytes: u64,
 }
 
 /// A program-loading backend. Implementations: `hostexec::HostExecutor`
@@ -291,6 +297,22 @@ pub trait Executor: Send + Sync {
     /// consume — without it they would sit in the arena until budget or
     /// entry-count recycling, inflating the measured stash peaks.
     fn clear_stash(&self) {}
+
+    /// Register `bytes` of serving KV-cache memory with the backend's
+    /// memory instrumentation (`crate::serve::KvCache` calls this at
+    /// every append so [`MemStats::kv_live_bytes`] reconciles exactly
+    /// against `memmodel` predictions). No-op on backends without
+    /// instrumentation.
+    fn kv_alloc(&self, bytes: u64) {
+        let _ = bytes;
+    }
+
+    /// Release `bytes` of serving KV-cache memory (a sequence retired or
+    /// was evicted under the `ADAMA_KV_BUDGET` cap). No-op on backends
+    /// without instrumentation.
+    fn kv_free(&self, bytes: u64) {
+        let _ = bytes;
+    }
 }
 
 // ---------------------------------------------------------------------------

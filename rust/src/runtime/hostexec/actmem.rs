@@ -120,6 +120,13 @@ impl MemoryPlan {
     /// `k`/`m`/`g` (×1024) suffix → byte cap. Anything else is an error
     /// naming the accepted values (no silent fallback).
     pub fn parse(spec: Option<&str>) -> Result<Self> {
+        Self::parse_named(spec, "ADAMA_ACT_BUDGET")
+    }
+
+    /// [`Self::parse`] with the env-var name spelled out in the error —
+    /// the same budget grammar backs `ADAMA_KV_BUDGET` (serving KV
+    /// caches), whose errors must name *their* knob.
+    pub fn parse_named(spec: Option<&str>, var: &str) -> Result<Self> {
         let s = match spec.map(str::trim) {
             Some(s) if !s.is_empty() => s.to_ascii_lowercase(),
             _ => return Ok(Self::remat()),
@@ -136,7 +143,7 @@ impl MemoryPlan {
         match digits.trim().parse::<u64>() {
             Ok(n) => Ok(Self::bytes(n.saturating_mul(mult))),
             Err(_) => bail!(
-                "invalid ADAMA_ACT_BUDGET '{s}': expected 0/unset (remat), <n>[k|m|g], \
+                "invalid {var} '{s}': expected 0/unset, <n>[k|m|g], \
                  or unlimited|inf|max"
             ),
         }
@@ -240,6 +247,8 @@ pub struct ActivationArena {
     peak: AtomicI64,
     counters: ArenaCounters,
     ws: WsMeter,
+    kv_live: AtomicI64,
+    kv_peak: AtomicI64,
 }
 
 impl ActivationArena {
@@ -251,6 +260,8 @@ impl ActivationArena {
             peak: AtomicI64::new(0),
             counters: ArenaCounters::default(),
             ws: WsMeter::default(),
+            kv_live: AtomicI64::new(0),
+            kv_peak: AtomicI64::new(0),
         }
     }
 
@@ -267,6 +278,32 @@ impl ActivationArena {
     /// Workspace meter for transient per-call buffers.
     pub fn ws(&self) -> &WsMeter {
         &self.ws
+    }
+
+    /// Register `bytes` of serving KV-cache memory (a per-sequence
+    /// key/value buffer grew). `serve::KvCache` calls this at every
+    /// append so measured `MemStats::kv_live_bytes` reconciles exactly
+    /// against `memmodel::HostBlockDims::kv_cache_bytes`.
+    pub fn kv_alloc(&self, bytes: u64) {
+        let now = self.kv_live.fetch_add(bytes as i64, Ordering::SeqCst) + bytes as i64;
+        self.kv_peak.fetch_max(now, Ordering::SeqCst);
+    }
+
+    /// Release `bytes` of serving KV-cache memory (a sequence retired or
+    /// was evicted under the `ADAMA_KV_BUDGET` cap).
+    pub fn kv_free(&self, bytes: u64) {
+        let now = self.kv_live.fetch_sub(bytes as i64, Ordering::SeqCst) - bytes as i64;
+        debug_assert!(now >= 0, "kv live bytes went negative");
+    }
+
+    /// KV-cache bytes currently registered.
+    pub fn kv_live(&self) -> u64 {
+        self.kv_live.load(Ordering::SeqCst).max(0) as u64
+    }
+
+    /// High-water mark of [`Self::kv_live`].
+    pub fn kv_peak(&self) -> u64 {
+        self.kv_peak.load(Ordering::SeqCst).max(0) as u64
     }
 
     fn add_live(&self, delta: i64) {
@@ -371,6 +408,8 @@ impl ActivationArena {
             stash_hits: self.counters.hits.load(Ordering::Relaxed),
             stash_evictions: self.counters.evictions.load(Ordering::Relaxed),
             remats: self.counters.remats.load(Ordering::Relaxed),
+            kv_live_bytes: self.kv_live(),
+            kv_peak_bytes: self.kv_peak(),
         }
     }
 }
@@ -449,6 +488,14 @@ mod tests {
             let msg = format!("{err}");
             assert!(msg.contains("ADAMA_ACT_BUDGET") && msg.contains("unlimited"), "{bad}: {msg}");
         }
+        // the named variant reports the caller's knob (ADAMA_KV_BUDGET)
+        let err = MemoryPlan::parse_named(Some("nope"), "ADAMA_KV_BUDGET").unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("ADAMA_KV_BUDGET") && msg.contains("unlimited"), "{msg}");
+        assert_eq!(
+            MemoryPlan::parse_named(Some("8k"), "ADAMA_KV_BUDGET").unwrap(),
+            MemoryPlan::bytes(8 << 10)
+        );
     }
 
     #[test]
@@ -550,6 +597,23 @@ mod tests {
         }
         assert_eq!(m.live(), 0);
         assert_eq!(m.peak(), 60);
+    }
+
+    #[test]
+    fn kv_meter_tracks_live_and_peak() {
+        let a = ActivationArena::new(MemoryPlan::remat());
+        a.kv_alloc(100);
+        a.kv_alloc(50);
+        assert_eq!(a.kv_live(), 150);
+        a.kv_free(100);
+        assert_eq!(a.kv_live(), 50);
+        assert_eq!(a.kv_peak(), 150);
+        let s = a.stats();
+        assert_eq!(s.kv_live_bytes, 50);
+        assert_eq!(s.kv_peak_bytes, 150);
+        // KV bytes are a separate client: the stash accounting is untouched
+        assert_eq!(s.stash_live_bytes, 0);
+        assert_eq!(s.stash_peak_bytes, 0);
     }
 
     #[test]

@@ -8,7 +8,11 @@
 //!   `python/compile/kernels/ref.py`);
 //! * `mlp_<cfg>/{mlp_train, mlp_eval}` — the MLP classifier (`mlp`);
 //! * `<cfg>/{embed_fwd, embed_bwd, block_fwd, block_bwd, head_loss,
-//!   head_eval}` — the per-layer transformer LM (`transformer`).
+//!   head_eval}` — the per-layer transformer LM (`transformer`);
+//! * `<cfg>/{embed_decode, block_decode, head_logits}` — the forward-only
+//!   ragged-batch decode variants the serving engine ([`crate::serve`])
+//!   drives against a per-sequence KV cache; bit-identical to the
+//!   full-context forward (see the `transformer` module docs).
 //!
 //! With this backend the full training stack — `Trainer`, `MlpTrainer`,
 //! the optimizer zoo, the DP/ZeRO thread simulators and the memory
@@ -292,6 +296,14 @@ impl Executor for HostExecutor {
 
     fn clear_stash(&self) {
         self.arena.clear();
+    }
+
+    fn kv_alloc(&self, bytes: u64) {
+        self.arena.kv_alloc(bytes);
+    }
+
+    fn kv_free(&self, bytes: u64) {
+        self.arena.kv_free(bytes);
     }
 }
 

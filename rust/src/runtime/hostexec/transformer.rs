@@ -1,6 +1,8 @@
 //! Host implementations of the per-layer transformer programs
 //! (`embed_fwd`, `embed_bwd`, `block_fwd`, `block_bwd`, `head_loss`,
-//! `head_eval`), mirroring `python/compile/model.py` exactly:
+//! `head_eval`, plus the forward-only serving variants `embed_decode`,
+//! `block_decode`, `head_logits`), mirroring `python/compile/model.py`
+//! exactly:
 //!
 //! * pre-LN block: `x + attn(ln1(x))` then `+ mlp(ln2(·))`, causal
 //!   multi-head attention, tanh-GELU MLP;
@@ -45,6 +47,25 @@
 //! measured activation bytes reconcile exactly against the
 //! `crate::memmodel::HostBlockDims` predictions — including the head
 //! logits, the largest single buffer of a step at realistic vocab sizes.
+//!
+//! ## Serving decode programs (`crate::serve`)
+//!
+//! `block_decode` is the KV-cached incremental twin of `block_fwd`: it
+//! takes a pad-free **ragged batch** of new rows (`x [n, h]` — each
+//! sequence contributes `news[i]` fresh rows on top of `lens[i]` cached
+//! context rows) plus the concatenated per-sequence K/V caches, and
+//! returns the new activations together with the fresh K/V rows the
+//! caller appends to its cache. **Decode is bit-identical to the
+//! full-context forward**: every kernel the block touches is
+//! row-independent with a fixed per-element fold order — matmul folds k
+//! ascending per output element regardless of the row count, layer-norm
+//! and GELU are per-row/per-element, and each attention score is a
+//! serial d-ascending fold independent of the key-block stride
+//! ([`simd::attn_scores`]) — so computing position `t` from cached K/V
+//! produces exactly the bits the full `[1, t+1, h]` forward would
+//! (`rust/tests/serve.rs` sweeps this at every thread count × SIMD level
+//! × GEMM mode). `embed_decode` and `head_logits` are the matching
+//! ragged embedding gather and logits projection.
 
 use std::sync::Arc;
 
@@ -77,6 +98,15 @@ pub(super) fn build(
         "block_bwd" => Box::new(BlockBwd { heads: h.heads, pool, arena, simd: level, gemm: gm }),
         "head_loss" => Box::new(HeadLoss { pool, arena, simd: level, gemm: gm }),
         "head_eval" => Box::new(HeadEval { pool, arena, simd: level, gemm: gm }),
+        "embed_decode" => Box::new(EmbedDecode {
+            vocab: h.vocab,
+            hidden: h.hidden,
+            seq: h.seq,
+            pool,
+            simd: level,
+        }),
+        "block_decode" => Box::new(BlockDecode { heads: h.heads, pool, arena, simd: level, gemm: gm }),
+        "head_logits" => Box::new(HeadLogits { pool, arena, simd: level, gemm: gm }),
         other => bail!("host executor: unknown model program '{other}'"),
     })
 }
@@ -858,6 +888,323 @@ impl Program for HeadEval {
 }
 
 // ---------------------------------------------------------------------------
+// serving decode programs (forward-only, KV-cached, ragged batches)
+// ---------------------------------------------------------------------------
+
+/// Extract `[n, h]` dims from a rank-2 f32 ragged-batch argument.
+fn row_dims(a: &Arg<'_>) -> Result<(usize, usize)> {
+    let sh = a.shape();
+    ensure!(sh.len() == 2, "expected rank-2 row batch, got shape {sh:?}");
+    Ok((sh[0], sh[1]))
+}
+
+/// `embed_decode`: ragged embedding gather for serving. Args
+/// `(tokens [n] s32, pos [n] s32, E [v,h], P [s,h])` → `x [n, h]` with
+/// `x[r] = E[tokens[r]] + P[pos[r]]` — the exact per-row computation of
+/// `embed_fwd`, so a decoded row is bit-identical to the full-context
+/// gather at the same position. Positions must lie inside the config's
+/// learned positional table (`pos < s`), which bounds the serving
+/// context length.
+struct EmbedDecode {
+    vocab: usize,
+    hidden: usize,
+    seq: usize,
+    pool: Arc<ThreadPool>,
+    simd: simd::Level,
+}
+
+impl Program for EmbedDecode {
+    fn run(&self, args: &[Arg<'_>]) -> Result<Vec<Value>> {
+        ensure!(args.len() == 4, "embed_decode takes (tokens, pos, E, P)");
+        let tokens = args[0].i32().context("embed_decode tokens")?;
+        let pos = args[1].i32().context("embed_decode pos")?;
+        let e = args[2].f32()?;
+        let p = args[3].f32()?;
+        let (n, h, v, s) = (tokens.len(), self.hidden, self.vocab, self.seq);
+        ensure!(pos.len() == n, "embed_decode: tokens/pos length mismatch");
+        ensure!(e.len() == v * h, "embed E shape");
+        ensure!(p.len() == s * h, "embed P shape (seq {s})");
+        for &tok in tokens {
+            ensure!((0..v as i32).contains(&tok), "token {tok} out of range 0..{v}");
+        }
+        for &pi in pos {
+            ensure!(
+                (0..s as i32).contains(&pi),
+                "position {pi} out of range 0..{s} (context exceeds the positional table)"
+            );
+        }
+        let lvl = self.simd;
+        let mut x = vec![0.0f32; n * h];
+        self.pool.for_rows(&mut x, h, |r, orow| {
+            let erow = &e[tokens[r] as usize * h..(tokens[r] as usize + 1) * h];
+            let prow = &p[pos[r] as usize * h..(pos[r] as usize + 1) * h];
+            simd::add(lvl, orow, erow, prow);
+        });
+        Ok(vec![Value::f32(x, &[n, h])?])
+    }
+}
+
+/// `block_decode`: the KV-cached incremental forward of one transformer
+/// block over a pad-free ragged batch.
+///
+/// Args: `x [n, h]` (new rows, sequences concatenated in order),
+/// `news [nseq] s32` (fresh rows per sequence, ≥ 1), `lens [nseq] s32`
+/// (cached context rows per sequence), `kcat [p, h]` / `vcat [p, h]`
+/// (the concatenated K/V caches, `p = Σ lens`, same sequence order),
+/// then the 12 block parameters. Outputs: `y [n, h]`, `knew [n, h]`,
+/// `vnew [n, h]` — the caller appends `knew`/`vnew` to its cache.
+///
+/// Bit-exactness: row `ii` of sequence `i` attends over its `lens[i] +
+/// ii + 1` context positions with exactly the expression tree of
+/// [`block_forward`] at the same global position — same per-element
+/// matmul folds (row-count independent), same serial softmax max/exp
+/// sums, same ascending-`j` value axpys — so incremental decode equals
+/// the full-context forward bit for bit at any thread count, SIMD level
+/// and GEMM mode.
+struct BlockDecode {
+    heads: usize,
+    pool: Arc<ThreadPool>,
+    arena: Arc<ActivationArena>,
+    simd: simd::Level,
+    gemm: GemmMode,
+}
+
+impl Program for BlockDecode {
+    fn run(&self, args: &[Arg<'_>]) -> Result<Vec<Value>> {
+        ensure!(args.len() == 17, "block_decode takes (x, news, lens, kcat, vcat, 12 params)");
+        let (n, h) = row_dims(&args[0])?;
+        ensure!(n > 0, "block_decode: empty batch");
+        ensure!(h % self.heads == 0, "hidden {h} not divisible by heads {}", self.heads);
+        let x = args[0].f32()?;
+        let news = args[1].i32()?;
+        let lens = args[2].i32()?;
+        let nseq = news.len();
+        ensure!(nseq > 0 && lens.len() == nseq, "block_decode: news/lens length mismatch");
+        ensure!(news.iter().all(|&c| c > 0), "block_decode: every sequence needs ≥1 new row");
+        ensure!(lens.iter().all(|&c| c >= 0), "block_decode: negative cache length");
+        let total_new: usize = news.iter().map(|&c| c as usize).sum();
+        ensure!(total_new == n, "block_decode: Σnews {total_new} != rows {n}");
+        let p_rows: usize = lens.iter().map(|&c| c as usize).sum();
+        let kcat = args[3].f32()?;
+        let vcat = args[4].f32()?;
+        ensure!(kcat.len() == p_rows * h, "block_decode: kcat shape");
+        ensure!(vcat.len() == p_rows * h, "block_decode: vcat shape");
+        let p = unpack_block(args, 5, h)?;
+
+        let heads = self.heads;
+        let dh = h / heads;
+        let scale = 1.0 / (dh as f32).sqrt();
+        let w3 = 3 * h;
+        let f = p.f;
+        let (pool, lvl, gm) = (&self.pool, self.simd, self.gemm);
+
+        let mut ws = self.arena.ws().scope();
+        // the decode matmul shapes are the forward set (n rows instead
+        // of b·s) — one panel, metered up front
+        let mut panel = vec![0.0f32; fwd_panel_elems(gm, h, f)];
+        ws.add(panel.len());
+
+        let mut hn1 = vec![0.0f32; n * h];
+        ws.add(hn1.len());
+        math::layer_norm(pool, lvl, x, p.ln1g, p.ln1b, n, h, &mut hn1);
+        let mut qkv = vec![0.0f32; n * w3];
+        ws.add(qkv.len());
+        math::matmul(pool, lvl, gm, panel.as_mut(), &hn1, p.wqkv, n, h, w3, &mut qkv);
+        math::add_bias(lvl, &mut qkv, p.bqkv);
+
+        // per-row bookkeeping: owning sequence, global position, cache
+        // row offset, and each sequence's transposed-K scratch offset
+        let mut row_seq = vec![0usize; n];
+        let mut row_pos = vec![0usize; n];
+        let mut seq_row0 = vec![0usize; nseq]; // first new row of each sequence
+        let mut seq_koff = vec![0usize; nseq]; // first cache row of each sequence
+        let mut seq_kt = vec![0usize; nseq]; // kt scratch offset of each sequence
+        let mut seq_t = vec![0usize; nseq]; // total context length L + n_i
+        {
+            let (mut r, mut koff, mut kt_off) = (0usize, 0usize, 0usize);
+            for si in 0..nseq {
+                let (l, c) = (lens[si] as usize, news[si] as usize);
+                seq_row0[si] = r;
+                seq_koff[si] = koff;
+                seq_kt[si] = kt_off;
+                seq_t[si] = l + c;
+                for ii in 0..c {
+                    row_seq[r + ii] = si;
+                    row_pos[r + ii] = l + ii;
+                }
+                r += c;
+                koff += l;
+                kt_off += h * (l + c);
+            }
+        }
+
+        // per-(sequence, head) transposed K over cached + fresh rows:
+        // kt[d, j] — the same gather `block_forward` builds from its own
+        // qkv, here sourced from the cache for j < len. Serial, one
+        // producer per element.
+        let kt_elems = h * (p_rows + n);
+        let mut kt = vec![0.0f32; kt_elems];
+        ws.add(kt.len());
+        for si in 0..nseq {
+            let (l, t) = (lens[si] as usize, seq_t[si]);
+            let (row0, koff) = (seq_row0[si], seq_koff[si]);
+            for hd in 0..heads {
+                let base = seq_kt[si] + hd * dh * t;
+                for j in 0..t {
+                    let krow: &[f32] = if j < l {
+                        &kcat[(koff + j) * h + hd * dh..][..dh]
+                    } else {
+                        &qkv[(row0 + j - l) * w3 + h + hd * dh..][..dh]
+                    };
+                    for (d, &kv) in krow.iter().enumerate() {
+                        kt[base + d * t + j] = kv;
+                    }
+                }
+            }
+        }
+
+        // attention core, parallel over (new row, head) tasks. Each task
+        // reproduces the full-context forward's score/softmax/value
+        // chain for its global position, reading cached K/V for the
+        // prefix — identical expression tree, so identical bits.
+        let mut aoh = vec![0.0f32; n * h];
+        ws.add(aoh.len());
+        pool.for_rows(&mut aoh, dh, |t, orow| {
+            let r = t / heads;
+            let hd = t % heads;
+            let si = row_seq[r];
+            let (l, tlen) = (lens[si] as usize, seq_t[si]);
+            let (row0, koff) = (seq_row0[si], seq_koff[si]);
+            let pi = row_pos[r];
+            let qc = hd * dh;
+            let qrow = &qkv[r * w3 + qc..][..dh];
+            let kt_h = &kt[seq_kt[si] + hd * dh * tlen..][..dh * tlen];
+            let mut scores = vec![0.0f32; pi + 1];
+            simd::attn_scores(lvl, &mut scores, qrow, kt_h, tlen, scale);
+            let mut mx = f32::NEG_INFINITY;
+            for &sc in scores.iter() {
+                if sc > mx {
+                    mx = sc;
+                }
+            }
+            let mut sum = 0.0f32;
+            for sc in scores.iter_mut() {
+                *sc = (*sc - mx).exp();
+                sum += *sc;
+            }
+            let inv = 1.0 / sum;
+            let mut prow = vec![0.0f32; pi + 1];
+            simd::scale_into(lvl, &mut prow, &scores, inv);
+            for (j, &pij) in prow.iter().enumerate() {
+                let vrow: &[f32] = if j < l {
+                    &vcat[(koff + j) * h + hd * dh..][..dh]
+                } else {
+                    &qkv[(row0 + j - l) * w3 + 2 * h + hd * dh..][..dh]
+                };
+                simd::axpy(lvl, orow, vrow, pij);
+            }
+        });
+        drop(kt);
+        let mut ao = vec![0.0f32; n * h];
+        ws.add(ao.len());
+        for r in 0..n {
+            for hd in 0..heads {
+                ao[r * h + hd * dh..][..dh]
+                    .copy_from_slice(&aoh[(r * heads + hd) * dh..][..dh]);
+            }
+        }
+
+        let mut attn = vec![0.0f32; n * h];
+        ws.add(attn.len());
+        math::matmul(pool, lvl, gm, panel.as_mut(), &ao, p.wo, n, h, h, &mut attn);
+        math::add_bias(lvl, &mut attn, p.bo);
+        let mut x1 = vec![0.0f32; n * h];
+        ws.add(x1.len());
+        simd::add(lvl, &mut x1, x, &attn);
+
+        let mut hn2 = vec![0.0f32; n * h];
+        ws.add(hn2.len());
+        math::layer_norm(pool, lvl, &x1, p.ln2g, p.ln2b, n, h, &mut hn2);
+        let mut m1 = vec![0.0f32; n * f];
+        ws.add(m1.len());
+        math::matmul(pool, lvl, gm, panel.as_mut(), &hn2, p.w1, n, h, f, &mut m1);
+        math::add_bias(lvl, &mut m1, p.b1);
+        let mut gel = vec![0.0f32; n * f];
+        ws.add(gel.len());
+        pool.for_rows(&mut gel, f, |r, row| {
+            let mi = &m1[r * f..(r + 1) * f];
+            for (o, &u) in row.iter_mut().zip(mi) {
+                *o = math::gelu(u);
+            }
+        });
+        let mut m2 = vec![0.0f32; n * h];
+        ws.add(m2.len());
+        math::matmul(pool, lvl, gm, panel.as_mut(), &gel, p.w2, n, f, h, &mut m2);
+        math::add_bias(lvl, &mut m2, p.b2);
+        let mut y = vec![0.0f32; n * h];
+        ws.add(y.len());
+        simd::add(lvl, &mut y, &x1, &m2);
+
+        // fresh K/V rows for the caller's cache (columns h..2h / 2h..3h
+        // of qkv — the exact bits the next step's j < len branch reads)
+        let mut knew = vec![0.0f32; n * h];
+        let mut vnew = vec![0.0f32; n * h];
+        ws.add(knew.len() + vnew.len());
+        for r in 0..n {
+            knew[r * h..(r + 1) * h].copy_from_slice(&qkv[r * w3 + h..][..h]);
+            vnew[r * h..(r + 1) * h].copy_from_slice(&qkv[r * w3 + 2 * h..][..h]);
+        }
+
+        Ok(vec![
+            Value::f32(y, &[n, h])?,
+            Value::f32(knew, &[n, h])?,
+            Value::f32(vnew, &[n, h])?,
+        ])
+    }
+}
+
+/// Panel elements for `head_logits` (one `[n,h]·[h,v]` matmul) —
+/// mirrored by `memmodel::HostBlockDims::head_logits_panel_elems`.
+fn head_logits_panel_elems(gm: GemmMode, h: usize, v: usize) -> usize {
+    if gm == GemmMode::Naive {
+        return 0;
+    }
+    gemm::panel_elems(h, v)
+}
+
+/// `head_logits`: ragged logits projection for serving. Args
+/// `(x [n, h], W [h, v])` → `logits [n, v]`. The matmul's per-element
+/// fold is row-count independent, so a single decoded row's logits are
+/// bit-identical to the same row of the full-context head projection.
+/// The caller (the serving engine) picks the next token by first-max
+/// argmax — the same tie-break `math::softmax_xent` uses for its
+/// correct-prediction count.
+struct HeadLogits {
+    pool: Arc<ThreadPool>,
+    arena: Arc<ActivationArena>,
+    simd: simd::Level,
+    gemm: GemmMode,
+}
+
+impl Program for HeadLogits {
+    fn run(&self, args: &[Arg<'_>]) -> Result<Vec<Value>> {
+        ensure!(args.len() == 2, "head_logits takes (x, W)");
+        let (n, h) = row_dims(&args[0])?;
+        let x = args[0].f32()?;
+        let w = args[1].f32()?;
+        ensure!(h > 0 && !w.is_empty() && w.len() % h == 0, "head W shape");
+        let v = w.len() / h;
+        let mut ws = self.arena.ws().scope();
+        let mut panel = vec![0.0f32; head_logits_panel_elems(self.gemm, h, v)];
+        ws.add(panel.len());
+        let mut logits = vec![0.0f32; n * v];
+        ws.add(logits.len());
+        math::matmul(&self.pool, self.simd, self.gemm, &mut panel, x, w, n, h, v, &mut logits);
+        Ok(vec![Value::f32(logits, &[n, v])?])
+    }
+}
+
+// ---------------------------------------------------------------------------
 // tests: finite-difference verification of every hand-derived VJP
 // ---------------------------------------------------------------------------
 
@@ -1365,6 +1712,115 @@ mod tests {
             arena.stats().workspace_peak_bytes,
             dims.head_eval_workspace_bytes(v as u64, gm())
         );
+    }
+
+    #[test]
+    fn block_decode_matches_block_fwd_bit_for_bit() {
+        // the serving headline at unit scale: prefill-all-at-once AND
+        // token-by-token KV-cached decode both reproduce the exact bits
+        // of the full-context block forward
+        let x = randvec(61, S * H, 0.8);
+        let p = Params::random(62);
+        let arena = Arc::new(ActivationArena::new(MemoryPlan::remat()));
+        let dec = BlockDecode {
+            heads: HEADS,
+            pool: tp(),
+            arena: arena.clone(),
+            simd: lv(),
+            gemm: gm(),
+        };
+
+        // full-context reference: block_fwd on [1, S, H]
+        let shapes: [Vec<usize>; 12] = [
+            vec![H],
+            vec![H],
+            vec![H, 3 * H],
+            vec![3 * H],
+            vec![H, H],
+            vec![H],
+            vec![H],
+            vec![H],
+            vec![H, F],
+            vec![F],
+            vec![F, H],
+            vec![H],
+        ];
+        let mut fwd_args: Vec<Arg<'_>> = vec![Arg::F32(&x, &[1, S, H])];
+        for (t, sh) in p.t.iter().zip(shapes.iter()) {
+            fwd_args.push(Arg::F32(t, sh));
+        }
+        let want = bfwd(arena.clone()).run(&fwd_args).unwrap();
+        let want = want[0].as_f32().unwrap();
+
+        // prefill: all S rows in one ragged call, empty cache
+        let news = [S as i32];
+        let lens = [0i32];
+        let empty: Vec<f32> = Vec::new();
+        let mut dec_args: Vec<Arg<'_>> = vec![
+            Arg::F32(&x, &[S, H]),
+            Arg::I32(&news, &[1]),
+            Arg::I32(&lens, &[1]),
+            Arg::F32(&empty, &[0, H]),
+            Arg::F32(&empty, &[0, H]),
+        ];
+        for (t, sh) in p.t.iter().zip(shapes.iter()) {
+            dec_args.push(Arg::F32(t, sh));
+        }
+        let out = dec.run(&dec_args).unwrap();
+        let y = out[0].as_f32().unwrap();
+        assert!(
+            y.iter().zip(want).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "prefill decode must equal full forward"
+        );
+
+        // token-by-token: grow the KV cache one row at a time
+        let mut kcache: Vec<f32> = Vec::new();
+        let mut vcache: Vec<f32> = Vec::new();
+        let mut got: Vec<f32> = Vec::new();
+        for t in 0..S {
+            let row = &x[t * H..(t + 1) * H];
+            let news = [1i32];
+            let lens = [t as i32];
+            let mut args: Vec<Arg<'_>> = vec![
+                Arg::F32(row, &[1, H]),
+                Arg::I32(&news, &[1]),
+                Arg::I32(&lens, &[1]),
+                Arg::F32(&kcache, &[t, H]),
+                Arg::F32(&vcache, &[t, H]),
+            ];
+            for (tn, sh) in p.t.iter().zip(shapes.iter()) {
+                args.push(Arg::F32(tn, sh));
+            }
+            let out = dec.run(&args).unwrap();
+            got.extend_from_slice(out[0].as_f32().unwrap());
+            kcache.extend_from_slice(out[1].as_f32().unwrap());
+            vcache.extend_from_slice(out[2].as_f32().unwrap());
+        }
+        assert!(
+            got.iter().zip(want).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "incremental decode must equal full forward"
+        );
+    }
+
+    #[test]
+    fn head_logits_matches_head_loss_logits_path() {
+        // head_logits on the last row equals the full-context projection
+        // of that row (matmul folds are row-count independent)
+        let (n, h, v) = (3usize, H, 5usize);
+        let x = randvec(71, n * h, 0.8);
+        let w = randvec(72, h * v, 0.6);
+        let arena = Arc::new(ActivationArena::new(MemoryPlan::remat()));
+        let head = HeadLogits { pool: tp(), arena, simd: lv(), gemm: gm() };
+        let full =
+            head.run(&[Arg::F32(&x, &[n, h]), Arg::F32(&w, &[h, v])]).unwrap();
+        let full = full[0].as_f32().unwrap().to_vec();
+        let last = &x[(n - 1) * h..];
+        let one = head.run(&[Arg::F32(last, &[1, h]), Arg::F32(&w, &[h, v])]).unwrap();
+        let one = one[0].as_f32().unwrap();
+        assert!(one
+            .iter()
+            .zip(&full[(n - 1) * v..])
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 
     #[test]

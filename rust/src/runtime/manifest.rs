@@ -373,6 +373,43 @@ fn builtin_model_entry(
         ),
     );
 
+    // serving decode programs (crate::serve). The host executor sizes
+    // ragged batches at run time, so the row counts below are nominal
+    // (one new row, a full-seq cache): shapes in these entries are
+    // advisory, like `file`.
+    artifacts.insert(
+        "embed_decode".to_string(),
+        entry(
+            format!("{name}/embed_decode.hlo.txt"),
+            vec![s32_spec(&[1]), s32_spec(&[1]), f32_spec(&[v, h]), f32_spec(&[s, h])],
+            vec![f32_spec(&[1, h])],
+        ),
+    );
+    let mut block_decode_in = vec![
+        f32_spec(&[1, h]),
+        s32_spec(&[1]),
+        s32_spec(&[1]),
+        f32_spec(&[s, h]),
+        f32_spec(&[s, h]),
+    ];
+    block_decode_in.extend(block_specs.iter().cloned());
+    artifacts.insert(
+        "block_decode".to_string(),
+        entry(
+            format!("{name}/block_decode.hlo.txt"),
+            block_decode_in,
+            vec![f32_spec(&[1, h]), f32_spec(&[1, h]), f32_spec(&[1, h])],
+        ),
+    );
+    artifacts.insert(
+        "head_logits".to_string(),
+        entry(
+            format!("{name}/head_logits.hlo.txt"),
+            vec![f32_spec(&[1, h]), f32_spec(&[h, v])],
+            vec![f32_spec(&[1, v])],
+        ),
+    );
+
     ModelConfigEntry {
         model: ModelHyper { vocab, hidden, layers, heads, seq, microbatch, ffn },
         param_shapes,
@@ -483,6 +520,17 @@ mod tests {
             let bwd = &cfg.artifacts["block_bwd"];
             assert_eq!(bwd.inputs.len(), 14);
             assert_eq!(bwd.outputs.len(), 13);
+            // serving decode programs ride along with every model config
+            for prog in ["embed_decode", "block_decode", "head_logits"] {
+                assert!(
+                    m.entry(&format!("{name}/{prog}")).is_some(),
+                    "missing {name}/{prog}"
+                );
+            }
+            // block_decode: (x, news, lens, kcat, vcat, 12 params) -> (y, knew, vnew)
+            let dec = &cfg.artifacts["block_decode"];
+            assert_eq!(dec.inputs.len(), 17);
+            assert_eq!(dec.outputs.len(), 3);
         }
         for name in ["tiny", "small"] {
             let cfg = m.mlp_config(name).unwrap();

@@ -1,0 +1,337 @@
+//! Forward-only inference engine over the runtime seam.
+//!
+//! [`InferenceEngine`] is the serving counterpart of the trainer's
+//! `ModelPrograms`: it loads only the three decode artifacts
+//! (`embed_decode`, `block_decode`, `head_logits`), keeps no gradient
+//! buffers or optimizer state, and clears the activation stash arena on
+//! construction — eval mode holds parameters plus KV cache, nothing
+//! else.
+//!
+//! One [`InferenceEngine::decode`] call advances a *ragged batch*: each
+//! sequence contributes however many new tokens it has pending (a whole
+//! prompt at prefill, one token thereafter) and the rows are packed
+//! back-to-back with no padding, so prompt-length skew costs no FLOPs.
+//! Decode through the per-sequence [`KvCache`] is bit-identical to the
+//! full-context forward at every thread count × SIMD level × GEMM mode
+//! (`rust/tests/serve.rs`).
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::model::{checkpoint, ckpt::TrainState, init_params, LayerKind, LayerParams, ModelSpec};
+use crate::memory::MemoryTracker;
+use crate::runtime::{lit_f32, lit_i32, Library, ModelHyper, Program};
+
+use super::kv::KvCache;
+
+/// One sequence's slot in a ragged decode batch.
+pub struct DecodeEntry<'a> {
+    /// The sequence's KV cache; grows by `pending.len()` tokens per call.
+    pub cache: &'a mut KvCache,
+    /// New tokens to run this step: the whole prompt at prefill, then the
+    /// single most recent token. Must be non-empty.
+    pub pending: &'a [i32],
+}
+
+/// Forward-only engine: parameters + the three decode programs.
+pub struct InferenceEngine {
+    lib: Arc<Library>,
+    spec: ModelSpec,
+    params: Vec<LayerParams>,
+    embed_decode: Arc<dyn Program>,
+    block_decode: Arc<dyn Program>,
+    head_logits: Arc<dyn Program>,
+}
+
+impl InferenceEngine {
+    /// Engine for `config` with caller-supplied parameters (one flat
+    /// vector per layer in spec order, as the trainer holds them).
+    pub fn with_params(
+        lib: Arc<Library>,
+        config: &str,
+        params: Vec<LayerParams>,
+    ) -> Result<Self> {
+        let entry = lib.manifest().model_config(config)?.clone();
+        let spec = ModelSpec::from_manifest(config, &entry)?;
+        ensure!(
+            params.len() == spec.layers.len(),
+            "'{config}' has {} layers, got {} parameter sets",
+            spec.layers.len(),
+            params.len()
+        );
+        for (l, p) in spec.layers.iter().zip(&params) {
+            ensure!(
+                p.flat.len() == l.flat_len,
+                "layer '{}' expects {} parameters, got {}",
+                l.name,
+                l.flat_len,
+                p.flat.len()
+            );
+        }
+        let embed_decode = lib.get(&format!("{config}/embed_decode"))?;
+        let block_decode = lib.get(&format!("{config}/block_decode"))?;
+        let head_logits = lib.get(&format!("{config}/head_logits"))?;
+        // Eval mode: no recompute plan will ever replay these layers, so
+        // whatever the backend stashed for training is dead weight.
+        lib.executor().clear_stash();
+        Ok(Self { lib, spec, params, embed_decode, block_decode, head_logits })
+    }
+
+    /// Engine with freshly initialised parameters (demos, benchmarks).
+    pub fn init_random(lib: Arc<Library>, config: &str, seed: u64) -> Result<Self> {
+        let entry = lib.manifest().model_config(config)?.clone();
+        let spec = ModelSpec::from_manifest(config, &entry)?;
+        let params = init_params(&spec, seed, &MemoryTracker::new());
+        Self::with_params(lib, config, params)
+    }
+
+    /// Load parameters from a checkpoint, sniffing the container format:
+    /// `ADAMACK1` (params-only, `model::checkpoint`) and `ADAMACK2`
+    /// (full train state, `model::ckpt` — optimizer moments, RNGs and
+    /// loss history are simply not materialised here).
+    pub fn from_checkpoint(lib: Arc<Library>, config: &str, path: &Path) -> Result<Self> {
+        let entry = lib.manifest().model_config(config)?.clone();
+        let spec = ModelSpec::from_manifest(config, &entry)?;
+        let magic = {
+            use std::io::Read;
+            let mut f = std::fs::File::open(path)
+                .with_context(|| format!("opening {}", path.display()))?;
+            let mut m = [0u8; 8];
+            f.read_exact(&mut m).context("truncated checkpoint: no magic")?;
+            m
+        };
+        let params = match &magic {
+            b"ADAMACK1" => checkpoint::load(path, &spec)?,
+            b"ADAMACK2" => {
+                let ts = TrainState::load(path)?;
+                ensure!(
+                    ts.params.len() == spec.layers.len(),
+                    "'{config}' has {} layers, checkpoint holds {}",
+                    spec.layers.len(),
+                    ts.params.len()
+                );
+                ts.params.into_iter().map(|flat| LayerParams { flat }).collect()
+            }
+            other => bail!(
+                "{}: unknown checkpoint magic {:?} (want ADAMACK1 or ADAMACK2)",
+                path.display(),
+                String::from_utf8_lossy(other)
+            ),
+        };
+        Self::with_params(lib, config, params)
+    }
+
+    pub fn hyper(&self) -> &ModelHyper {
+        &self.spec.hyper
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    pub fn lib(&self) -> &Arc<Library> {
+        &self.lib
+    }
+
+    /// KV bytes one decoded token pins across all blocks:
+    /// `layers · 2 · hidden · 4` — `memmodel`'s
+    /// `kv_bytes_per_token_per_layer` summed over the stack.
+    pub fn kv_bytes_per_token(&self) -> u64 {
+        (self.spec.hyper.layers * 2 * self.spec.hyper.hidden * 4) as u64
+    }
+
+    /// Fresh empty cache metered through this engine's backend.
+    pub fn new_cache(&self) -> KvCache {
+        KvCache::new(
+            self.lib.executor().clone(),
+            self.spec.hyper.layers,
+            self.spec.hyper.hidden,
+        )
+    }
+
+    /// Advance every sequence in `batch` by its pending tokens and
+    /// return the greedy (argmax, first-max-wins — matching
+    /// `math::softmax_xent`'s tie-break) next token per sequence.
+    pub fn decode(&self, batch: &mut [DecodeEntry<'_>]) -> Result<Vec<i32>> {
+        Ok(self.decode_logits(batch)?.1)
+    }
+
+    /// As [`decode`](Self::decode), also returning the raw logits of
+    /// each sequence's last position (`[batch, vocab]` row-major) — the
+    /// bit-exactness tests compare these at 0 ULP against the
+    /// full-context forward.
+    pub fn decode_logits(&self, batch: &mut [DecodeEntry<'_>]) -> Result<(Vec<f32>, Vec<i32>)> {
+        let hy = &self.spec.hyper;
+        let (v, h) = (hy.vocab, hy.hidden);
+        let nseq = batch.len();
+        ensure!(nseq > 0, "decode batch is empty");
+
+        // Snapshot cache lengths BEFORE any append: `lens`/positions must
+        // describe the context as the attention kernels will see it.
+        let start_lens: Vec<usize> = batch.iter().map(|e| e.cache.tokens()).collect();
+        let news: Vec<i32> = batch
+            .iter()
+            .map(|e| {
+                ensure!(!e.pending.is_empty(), "sequence with no pending tokens");
+                Ok(e.pending.len() as i32)
+            })
+            .collect::<Result<_>>()?;
+        for (e, &l) in batch.iter().zip(&start_lens) {
+            ensure!(
+                e.cache.blocks() == hy.layers && e.cache.hidden() == h,
+                "cache shape mismatch: {} blocks × hidden {} (model wants {} × {})",
+                e.cache.blocks(),
+                e.cache.hidden(),
+                hy.layers,
+                h
+            );
+            ensure!(
+                l + e.pending.len() <= hy.seq,
+                "sequence would reach {} tokens; '{}' caps context at {}",
+                l + e.pending.len(),
+                self.spec.config,
+                hy.seq
+            );
+        }
+        let n: usize = news.iter().map(|&x| x as usize).sum();
+        let p: usize = start_lens.iter().sum();
+
+        // Ragged token/position rows, packed back-to-back (no padding).
+        let mut tokens = Vec::with_capacity(n);
+        let mut pos = Vec::with_capacity(n);
+        for (e, &l) in batch.iter().zip(&start_lens) {
+            for (i, &t) in e.pending.iter().enumerate() {
+                tokens.push(t);
+                pos.push((l + i) as i32);
+            }
+        }
+
+        let embed = &self.spec.layers[0];
+        ensure!(embed.kind == LayerKind::Embed, "layer 0 must be the embedding");
+        let out = self.embed_decode.run_v(&[
+            lit_i32(&tokens, &[n])?,
+            lit_i32(&pos, &[n])?,
+            lit_f32(self.params[0].view(&embed.params[0]), &embed.params[0].shape)?,
+            lit_f32(self.params[0].view(&embed.params[1]), &embed.params[1].shape)?,
+        ])?;
+        let mut x = out.into_iter().next().context("embed_decode output")?;
+
+        let lens_v = lit_i32(
+            &start_lens.iter().map(|&l| l as i32).collect::<Vec<i32>>(),
+            &[nseq],
+        )?;
+        let news_v = lit_i32(&news, &[nseq])?;
+        for b in 0..hy.layers {
+            let layer = &self.spec.layers[1 + b];
+            ensure!(layer.kind == LayerKind::Block(b), "layer {} must be block {b}", 1 + b);
+            // Concatenate the per-sequence caches for this block into the
+            // packed [p, hidden] context the kernel consumes.
+            let mut kcat = Vec::with_capacity(p * h);
+            let mut vcat = Vec::with_capacity(p * h);
+            for e in batch.iter() {
+                kcat.extend_from_slice(e.cache.k_rows(b));
+                vcat.extend_from_slice(e.cache.v_rows(b));
+            }
+            let mut args = vec![
+                x,
+                news_v.clone(),
+                lens_v.clone(),
+                lit_f32(&kcat, &[p, h])?,
+                lit_f32(&vcat, &[p, h])?,
+            ];
+            for pv in &layer.params {
+                args.push(lit_f32(self.params[1 + b].view(pv), &pv.shape)?);
+            }
+            let mut out = self.block_decode.run_v(&args)?;
+            ensure!(out.len() == 3, "block_decode must return [y, knew, vnew]");
+            let vnew = out.pop().unwrap();
+            let knew = out.pop().unwrap();
+            x = out.pop().unwrap();
+            let (knew, vnew) = (knew.as_f32()?, vnew.as_f32()?);
+            let mut row = 0usize;
+            for (e, &nw) in batch.iter_mut().zip(&news) {
+                let nw = nw as usize;
+                e.cache.append(
+                    b,
+                    &knew[row * h..(row + nw) * h],
+                    &vnew[row * h..(row + nw) * h],
+                )?;
+                row += nw;
+            }
+        }
+
+        // Only each sequence's final position feeds the head.
+        let xf = x.as_f32()?;
+        let mut xlast = Vec::with_capacity(nseq * h);
+        let mut row = 0usize;
+        for &nw in &news {
+            row += nw as usize;
+            xlast.extend_from_slice(&xf[(row - 1) * h..row * h]);
+        }
+        let head = self.spec.layers.last().context("model has no head layer")?;
+        ensure!(head.kind == LayerKind::Head, "last layer must be the head");
+        let out = self.head_logits.run_v(&[
+            lit_f32(&xlast, &[nseq, h])?,
+            lit_f32(
+                self.params.last().unwrap().view(&head.params[0]),
+                &head.params[0].shape,
+            )?,
+        ])?;
+        let logits = out.into_iter().next().context("head_logits output")?;
+        let logits = logits.as_f32()?.to_vec();
+
+        let mut next = Vec::with_capacity(nseq);
+        for r in 0..nseq {
+            let rowv = &logits[r * v..(r + 1) * v];
+            let mut best = 0usize;
+            for (j, &val) in rowv.iter().enumerate() {
+                if val > rowv[best] {
+                    best = j;
+                }
+            }
+            next.push(best as i32);
+        }
+        Ok((logits, next))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Library;
+
+    #[test]
+    fn with_params_rejects_wrong_layer_count() {
+        let lib = Library::host_with_threads(1);
+        let err = InferenceEngine::with_params(lib, "tiny", Vec::new()).unwrap_err();
+        assert!(err.to_string().contains("layers"), "{err}");
+    }
+
+    #[test]
+    fn from_checkpoint_rejects_unknown_magic() {
+        let lib = Library::host_with_threads(1);
+        let dir = std::env::temp_dir().join(format!("adama_serve_magic_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bogus.ck");
+        std::fs::write(&path, b"NOTACKPT????????").unwrap();
+        let err = InferenceEngine::from_checkpoint(lib, "tiny", &path).unwrap_err();
+        assert!(err.to_string().contains("unknown checkpoint magic"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn decode_rejects_empty_batch_and_overlong_context() {
+        let lib = Library::host_with_threads(1);
+        let eng = InferenceEngine::init_random(lib, "tiny", 7).unwrap();
+        assert!(eng.decode(&mut []).is_err());
+        let seq = eng.hyper().seq;
+        let mut cache = eng.new_cache();
+        let prompt: Vec<i32> = vec![1; seq + 1];
+        let err = eng
+            .decode(&mut [DecodeEntry { cache: &mut cache, pending: &prompt }])
+            .unwrap_err();
+        assert!(err.to_string().contains("caps context"), "{err}");
+    }
+}

@@ -1,0 +1,166 @@
+//! Per-sequence KV cache — the serving engine's only growing state.
+//!
+//! One [`KvCache`] holds, per transformer block, the K and V rows of
+//! every token the sequence has decoded so far — exactly the bits of the
+//! block's `knew`/`vnew` outputs (qkv columns `h..2h` / `2h..3h`), which
+//! is what makes incremental decode bit-identical to the full-context
+//! forward (see `runtime::hostexec::transformer`).
+//!
+//! Every append and release is registered with the executing backend
+//! ([`crate::runtime::Executor::kv_alloc`] / `kv_free`), so the KV cache
+//! is *just another metered activation client*: the measured
+//! [`crate::runtime::MemStats::kv_live_bytes`] reconciles byte-for-byte
+//! against `memmodel::HostBlockDims::kv_cache_bytes` — a tested
+//! invariant (`rust/tests/serve.rs`), like the stash arena's accounting.
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use crate::runtime::Executor;
+
+/// Per-sequence, per-block key/value rows, metered through the backend.
+pub struct KvCache {
+    exec: Arc<dyn Executor>,
+    hidden: usize,
+    /// K rows per block: `[tokens, hidden]` row-major.
+    k: Vec<Vec<f32>>,
+    /// V rows per block, same layout.
+    v: Vec<Vec<f32>>,
+    /// Bytes currently registered with the backend's KV meter.
+    registered: u64,
+}
+
+impl KvCache {
+    /// Empty cache for a model with `blocks` transformer blocks of width
+    /// `hidden`, metered through `exec`.
+    pub fn new(exec: Arc<dyn Executor>, blocks: usize, hidden: usize) -> Self {
+        Self {
+            exec,
+            hidden,
+            k: vec![Vec::new(); blocks],
+            v: vec![Vec::new(); blocks],
+            registered: 0,
+        }
+    }
+
+    pub fn blocks(&self) -> usize {
+        self.k.len()
+    }
+
+    pub fn hidden(&self) -> usize {
+        self.hidden
+    }
+
+    /// Cached tokens (rows per block). Uniform across blocks: the engine
+    /// appends the same rows to every block each step.
+    pub fn tokens(&self) -> usize {
+        self.k.first().map_or(0, |rows| rows.len() / self.hidden)
+    }
+
+    /// Bytes this cache currently registers with the backend's KV meter:
+    /// `blocks · tokens · 2 · hidden · 4` once populated — exactly
+    /// `memmodel::HostBlockDims::kv_cache_bytes(blocks, tokens)`.
+    pub fn bytes(&self) -> u64 {
+        self.registered
+    }
+
+    /// The concatenated K rows of one block (`[tokens, hidden]`).
+    pub fn k_rows(&self, block: usize) -> &[f32] {
+        &self.k[block]
+    }
+
+    /// The concatenated V rows of one block (`[tokens, hidden]`).
+    pub fn v_rows(&self, block: usize) -> &[f32] {
+        &self.v[block]
+    }
+
+    /// Append freshly decoded K/V rows to one block's cache (the
+    /// `knew`/`vnew` outputs of `block_decode`, verbatim bits) and meter
+    /// the growth.
+    pub fn append(&mut self, block: usize, knew: &[f32], vnew: &[f32]) -> Result<()> {
+        ensure!(block < self.k.len(), "block {block} out of range 0..{}", self.k.len());
+        ensure!(
+            knew.len() == vnew.len() && !knew.is_empty() && knew.len() % self.hidden == 0,
+            "KV append rows must be non-empty [n, {}] pairs",
+            self.hidden
+        );
+        self.k[block].extend_from_slice(knew);
+        self.v[block].extend_from_slice(vnew);
+        let bytes = ((knew.len() + vnew.len()) * 4) as u64;
+        self.exec.kv_alloc(bytes);
+        self.registered += bytes;
+        Ok(())
+    }
+
+    /// Drop every cached row and release the metered bytes (eviction
+    /// under `ADAMA_KV_BUDGET`, or sequence retirement).
+    pub fn clear(&mut self) {
+        for rows in self.k.iter_mut().chain(self.v.iter_mut()) {
+            rows.clear();
+        }
+        if self.registered > 0 {
+            self.exec.kv_free(self.registered);
+            self.registered = 0;
+        }
+    }
+}
+
+impl Drop for KvCache {
+    fn drop(&mut self) {
+        if self.registered > 0 {
+            self.exec.kv_free(self.registered);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{HostExecutor, MemoryPlan};
+
+    fn host() -> Arc<dyn Executor> {
+        Arc::new(HostExecutor::with_plan(1, MemoryPlan::remat()))
+    }
+
+    #[test]
+    fn append_meters_and_drop_frees() {
+        let exec = host();
+        let h = 4usize;
+        let mut c = KvCache::new(exec.clone(), 2, h);
+        assert_eq!(c.tokens(), 0);
+        let rows = vec![1.0f32; 3 * h];
+        c.append(0, &rows, &rows).unwrap();
+        c.append(1, &rows, &rows).unwrap();
+        assert_eq!(c.tokens(), 3);
+        // 2 blocks · 3 tokens · 2 (K+V) · h · 4 bytes
+        let want = (2 * 3 * 2 * h * 4) as u64;
+        assert_eq!(c.bytes(), want);
+        assert_eq!(exec.memory().unwrap().kv_live_bytes, want);
+        drop(c);
+        let m = exec.memory().unwrap();
+        assert_eq!(m.kv_live_bytes, 0);
+        assert_eq!(m.kv_peak_bytes, want);
+    }
+
+    #[test]
+    fn clear_releases_and_cache_is_reusable() {
+        let exec = host();
+        let mut c = KvCache::new(exec.clone(), 1, 2);
+        c.append(0, &[1.0, 2.0], &[3.0, 4.0]).unwrap();
+        c.clear();
+        assert_eq!(c.tokens(), 0);
+        assert_eq!(c.bytes(), 0);
+        assert_eq!(exec.memory().unwrap().kv_live_bytes, 0);
+        c.append(0, &[1.0, 2.0], &[3.0, 4.0]).unwrap();
+        assert_eq!(c.tokens(), 1);
+    }
+
+    #[test]
+    fn shape_errors_are_loud() {
+        let mut c = KvCache::new(host(), 1, 4);
+        assert!(c.append(1, &[0.0; 4], &[0.0; 4]).is_err(), "block out of range");
+        assert!(c.append(0, &[0.0; 3], &[0.0; 3]).is_err(), "ragged row width");
+        assert!(c.append(0, &[0.0; 4], &[0.0; 8]).is_err(), "K/V mismatch");
+    }
+}

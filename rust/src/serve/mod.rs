@@ -1,0 +1,69 @@
+//! Batched inference serving: forward-only engine, KV cache, scheduler.
+//!
+//! Training (the AdamA side of this repo, arXiv:2305.19982) shrinks the
+//! footprint of *activations and gradients*; serving keeps neither. This
+//! module is the forward-only split of the host executor stack: an
+//! [`InferenceEngine`] holds parameters plus three decode artifacts
+//! (`embed_decode`, `block_decode`, `head_logits`) and nothing else — no
+//! gradient buffers, no optimizer state, and the activation stash arena
+//! is cleared on construction because no backward will ever replay it.
+//!
+//! What *does* grow at serving time is the KV cache, and it is treated
+//! exactly the way the paper treats activations: as a metered client of
+//! the backend's memory instrumentation. Every [`KvCache`] append and
+//! release flows through [`crate::runtime::Executor::kv_alloc`] /
+//! `kv_free`, so measured [`crate::runtime::MemStats::kv_live_bytes`]
+//! reconciles byte-for-byte against the closed-form
+//! `memmodel::HostBlockDims::kv_cache_bytes` — and a strict
+//! `ADAMA_KV_BUDGET` cap (same grammar as `ADAMA_ACT_BUDGET`) bounds it,
+//! with oldest-sequence eviction in the [`Scheduler`].
+//!
+//! # Contracts
+//!
+//! * **Bit-exact decode.** Token-by-token decode through the KV cache is
+//!   bit-identical (0 ULP on logits) to the full-context forward at
+//!   every thread count × SIMD level × GEMM mode, because the decode
+//!   kernels replicate the forward's per-element reduction trees
+//!   verbatim (`runtime::hostexec::transformer`). Verified in
+//!   `rust/tests/serve.rs`.
+//! * **Deterministic batching.** Ragged-batch rows are mathematically
+//!   independent (per-row LayerNorm, per-output-element GEMM folds,
+//!   per-sequence attention), so a request's tokens do not depend on
+//!   which other requests shared its batches — any arrival interleaving
+//!   yields the same output tokens.
+//! * **Exact KV accounting.** `Scheduler` eviction and admission decide
+//!   against the same byte formulas `memmodel` predicts; the measured
+//!   and modelled KV bytes must agree exactly, not approximately.
+//!
+//! # Quickstart
+//!
+//! ```no_run
+//! use adama::runtime::Library;
+//! use adama::serve::{InferenceEngine, Scheduler, SyntheticLoad};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let lib = Library::host();
+//! let engine = InferenceEngine::init_random(lib, "tiny", 42)?;
+//! let mut sched = Scheduler::new(engine, /*max_batch=*/ 4)?;
+//! let stats = SyntheticLoad {
+//!     requests: 8,
+//!     prompt_len: 8,
+//!     max_new: 8,
+//!     arrive_every: 1,
+//!     seed: 7,
+//! }
+//! .run(&mut sched)?;
+//! println!("{:.1} tok/s, p99 {:.3}s", stats.tokens_per_sec(), stats.p99());
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod engine;
+pub mod kv;
+pub mod queue;
+
+pub use engine::{DecodeEntry, InferenceEngine};
+pub use kv::KvCache;
+pub use queue::{
+    kv_budget_from_env, kv_budget_from_spec, Completion, Scheduler, SyntheticLoad,
+};

@@ -1,0 +1,446 @@
+//! Request queue, continuous batching, and KV-budget eviction.
+//!
+//! The [`Scheduler`] admits and retires sequences only at decode-step
+//! boundaries ("continuous batching"): a finished sequence's batch slot
+//! is reused by the next queued request on the very next step, and a
+//! freshly admitted request prefills its whole prompt in the same ragged
+//! batch that advances everyone else by one token — no padding, no
+//! separate prefill phase.
+//!
+//! KV memory is governed by `ADAMA_KV_BUDGET` (same grammar as
+//! `ADAMA_ACT_BUDGET`; unset/`0`/`unlimited` → uncapped). When the
+//! caches of the active set plus this step's growth would exceed the
+//! cap, the scheduler evicts the *oldest-admitted* sequence: its cache
+//! is dropped (freeing metered bytes) and the request returns to the
+//! front of the queue with its generated tokens intact, so a later
+//! re-prefill of prompt + generated resumes it — bit-exact decode
+//! guarantees the continuation is token-identical, only timing changes.
+//! The newest-admitted sequence is never evicted, and [`Scheduler::submit`]
+//! rejects any request whose worst-case cache could never fit, so the
+//! system always makes progress.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::ServeStats;
+use crate::runtime::{ActBudget, MemoryPlan};
+use crate::tensor::Rng;
+
+use super::engine::{DecodeEntry, InferenceEngine};
+use super::kv::KvCache;
+
+/// Parse an `ADAMA_KV_BUDGET`-style spec: `None`/empty/`0` and
+/// `unlimited` mean uncapped; `<n>[k|m|g]` caps total KV bytes.
+pub fn kv_budget_from_spec(spec: Option<&str>) -> Result<Option<u64>> {
+    let plan = MemoryPlan::parse_named(spec, "ADAMA_KV_BUDGET")?;
+    Ok(match plan.budget {
+        ActBudget::Remat | ActBudget::Unlimited => None,
+        ActBudget::Bytes(n) => Some(n),
+    })
+}
+
+/// [`kv_budget_from_spec`] applied to the `ADAMA_KV_BUDGET` env var.
+pub fn kv_budget_from_env() -> Result<Option<u64>> {
+    kv_budget_from_spec(std::env::var("ADAMA_KV_BUDGET").ok().as_deref())
+}
+
+/// A finished request: its generated tokens plus scheduling telemetry.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    /// The `max_new` greedily decoded tokens, in order.
+    pub tokens: Vec<i32>,
+    /// Step at which the request first entered the active set.
+    pub admitted_step: u64,
+    /// Step whose decode produced the final token.
+    pub finished_step: u64,
+    /// Prompt prefills run: 1 + one per KV-budget eviction.
+    pub prefills: u32,
+    /// Wall seconds from [`Scheduler::submit`] to retirement.
+    pub latency_s: f64,
+}
+
+struct Pending {
+    id: u64,
+    prompt: Vec<i32>,
+    /// Tokens decoded before an eviction; re-prefilled on re-admission.
+    generated: Vec<i32>,
+    max_new: usize,
+    born: Instant,
+    first_admit_step: Option<u64>,
+    prefills: u32,
+}
+
+struct Active {
+    id: u64,
+    prompt: Vec<i32>,
+    generated: Vec<i32>,
+    max_new: usize,
+    born: Instant,
+    first_admit_step: u64,
+    prefills: u32,
+    /// Admission order; eviction removes the minimum (oldest).
+    admit_seq: u64,
+    cache: KvCache,
+    /// Tokens this step feeds the engine; refreshed by [`Scheduler::step`].
+    pending_tokens: Vec<i32>,
+}
+
+impl Active {
+    /// Tokens this sequence will append to its cache next step.
+    fn next_news(&self) -> u64 {
+        if self.cache.tokens() == 0 {
+            (self.prompt.len() + self.generated.len()) as u64
+        } else {
+            1
+        }
+    }
+}
+
+/// Continuous-batching scheduler over one [`InferenceEngine`].
+pub struct Scheduler {
+    engine: InferenceEngine,
+    budget: Option<u64>,
+    max_batch: usize,
+    queue: VecDeque<Pending>,
+    active: Vec<Active>,
+    done: Vec<Completion>,
+    next_id: u64,
+    admit_counter: u64,
+    steps: u64,
+}
+
+impl Scheduler {
+    /// Scheduler with the KV budget taken from `ADAMA_KV_BUDGET`.
+    pub fn new(engine: InferenceEngine, max_batch: usize) -> Result<Self> {
+        let budget = kv_budget_from_env()?;
+        Ok(Self::with_budget(engine, max_batch, budget))
+    }
+
+    /// Scheduler with an explicit KV byte cap (`None` = uncapped).
+    pub fn with_budget(engine: InferenceEngine, max_batch: usize, budget: Option<u64>) -> Self {
+        Self {
+            engine,
+            budget,
+            max_batch: max_batch.max(1),
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            done: Vec::new(),
+            next_id: 0,
+            admit_counter: 0,
+            steps: 0,
+        }
+    }
+
+    pub fn engine(&self) -> &InferenceEngine {
+        &self.engine
+    }
+
+    pub fn budget(&self) -> Option<u64> {
+        self.budget
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Decode steps run so far.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Nothing queued and nothing decoding.
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.active.is_empty()
+    }
+
+    /// KV bytes currently pinned by the active set.
+    pub fn kv_live_bytes(&self) -> u64 {
+        self.active.iter().map(|a| a.cache.bytes()).sum()
+    }
+
+    /// Completions accumulated since the last take, oldest first.
+    pub fn take_completed(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.done)
+    }
+
+    /// Enqueue a request for `max_new` greedy tokens. Rejects requests
+    /// that could never run: empty prompts, contexts beyond the model's
+    /// trained sequence length, and — under a KV budget — sequences
+    /// whose worst-case cache (`prompt + max_new − 1` tokens; the final
+    /// token is returned but never cached) exceeds the cap even alone.
+    pub fn submit(&mut self, prompt: &[i32], max_new: usize) -> Result<u64> {
+        let hy = self.engine.hyper();
+        ensure!(!prompt.is_empty(), "empty prompt");
+        ensure!(max_new > 0, "max_new must be at least 1");
+        ensure!(
+            prompt.len() + max_new <= hy.seq,
+            "prompt ({}) + max_new ({max_new}) exceeds '{}' context length {}",
+            prompt.len(),
+            self.engine.spec().config,
+            hy.seq
+        );
+        if let Some(cap) = self.budget {
+            let need = (prompt.len() + max_new - 1) as u64 * self.engine.kv_bytes_per_token();
+            ensure!(
+                need <= cap,
+                "request needs up to {need} KV bytes but ADAMA_KV_BUDGET caps at {cap}"
+            );
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back(Pending {
+            id,
+            prompt: prompt.to_vec(),
+            generated: Vec::new(),
+            max_new,
+            born: Instant::now(),
+            first_admit_step: None,
+            prefills: 0,
+        });
+        Ok(id)
+    }
+
+    /// Run one decode step: admit from the queue into free batch slots,
+    /// evict oldest-admitted sequences if this step's KV growth would
+    /// burst the budget, advance the ragged batch by one engine call,
+    /// and retire sequences that reached `max_new`. Returns the number
+    /// of sequences advanced (0 = nothing to do).
+    pub fn step(&mut self) -> Result<usize> {
+        let per_token = self.engine.kv_bytes_per_token();
+        let step_no = self.steps;
+
+        // Admit while slots are free and this step's total KV growth —
+        // live bytes + every active sequence's next append + the
+        // candidate's prefill — fits the cap. An empty batch always
+        // admits: `submit` guaranteed a lone sequence fits.
+        while self.active.len() < self.max_batch {
+            let Some(p) = self.queue.front() else { break };
+            if let Some(cap) = self.budget {
+                if !self.active.is_empty() {
+                    let planned = self.kv_live_bytes()
+                        + self.active.iter().map(Active::next_news).sum::<u64>() * per_token;
+                    let prefill = (p.prompt.len() + p.generated.len()) as u64 * per_token;
+                    if planned + prefill > cap {
+                        break;
+                    }
+                }
+            }
+            let p = self.queue.pop_front().unwrap();
+            let cache = self.engine.new_cache();
+            self.active.push(Active {
+                id: p.id,
+                prompt: p.prompt,
+                generated: p.generated,
+                max_new: p.max_new,
+                born: p.born,
+                first_admit_step: p.first_admit_step.unwrap_or(step_no),
+                prefills: p.prefills + 1,
+                admit_seq: self.admit_counter,
+                cache,
+                pending_tokens: Vec::new(),
+            });
+            self.admit_counter += 1;
+        }
+        if self.active.is_empty() {
+            return Ok(0);
+        }
+
+        // Evict oldest-admitted until this step's growth fits the cap.
+        // `submit` guarantees a lone sequence always fits, so stopping at
+        // one active sequence never over-commits.
+        if let Some(cap) = self.budget {
+            loop {
+                let growth: u64 = self.active.iter().map(Active::next_news).sum::<u64>() * per_token;
+                if self.kv_live_bytes() + growth <= cap || self.active.len() <= 1 {
+                    break;
+                }
+                let oldest = self
+                    .active
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, a)| a.admit_seq)
+                    .map(|(i, _)| i)
+                    .unwrap();
+                let mut a = self.active.remove(oldest);
+                a.cache.clear();
+                self.queue.push_front(Pending {
+                    id: a.id,
+                    prompt: a.prompt,
+                    generated: a.generated,
+                    max_new: a.max_new,
+                    born: a.born,
+                    first_admit_step: Some(a.first_admit_step),
+                    prefills: a.prefills,
+                });
+            }
+        }
+
+        // Refresh each sequence's pending tokens: the whole accumulated
+        // context at (re-)prefill, else just the latest generated token.
+        for a in &mut self.active {
+            a.pending_tokens = if a.cache.tokens() == 0 {
+                let mut t = a.prompt.clone();
+                t.extend_from_slice(&a.generated);
+                t
+            } else {
+                vec![*a.generated.last().expect("warm cache implies a generated token")]
+            };
+        }
+
+        let mut entries: Vec<DecodeEntry<'_>> = self
+            .active
+            .iter_mut()
+            .map(|a| DecodeEntry { cache: &mut a.cache, pending: &a.pending_tokens })
+            .collect();
+        let next = self.engine.decode(&mut entries)?;
+        drop(entries);
+        let advanced = next.len();
+        for (a, t) in self.active.iter_mut().zip(next) {
+            a.generated.push(t);
+        }
+        self.steps += 1;
+
+        // Retire finished sequences; their KvCache drop releases the
+        // metered bytes, freeing slots and budget for the next admit.
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].generated.len() >= self.active[i].max_new {
+                let a = self.active.remove(i);
+                self.done.push(Completion {
+                    id: a.id,
+                    tokens: a.generated,
+                    admitted_step: a.first_admit_step,
+                    finished_step: step_no,
+                    prefills: a.prefills,
+                    latency_s: a.born.elapsed().as_secs_f64(),
+                });
+            } else {
+                i += 1;
+            }
+        }
+        Ok(advanced)
+    }
+
+    /// Step until every submitted request completes, with a hard cap to
+    /// turn scheduler bugs into errors instead of hangs.
+    pub fn run_to_completion(&mut self, max_steps: u64) -> Result<Vec<Completion>> {
+        let mut budget = max_steps;
+        while !self.is_idle() {
+            ensure!(budget > 0, "scheduler did not drain within {max_steps} steps");
+            budget -= 1;
+            self.step()?;
+        }
+        Ok(self.take_completed())
+    }
+}
+
+/// Deterministic synthetic request stream for benchmarks and tests:
+/// `requests` prompts of `prompt_len` uniform tokens (seeded), arriving
+/// one per `arrive_every` decode steps (0 = all at once), each asking
+/// for `max_new` tokens.
+#[derive(Debug, Clone)]
+pub struct SyntheticLoad {
+    pub requests: usize,
+    pub prompt_len: usize,
+    pub max_new: usize,
+    pub arrive_every: usize,
+    pub seed: u64,
+}
+
+impl SyntheticLoad {
+    /// The deterministic prompts this load submits.
+    pub fn prompts(&self, vocab: usize) -> Vec<Vec<i32>> {
+        let mut rng = Rng::new(self.seed);
+        (0..self.requests)
+            .map(|_| (0..self.prompt_len).map(|_| rng.below(vocab) as i32).collect())
+            .collect()
+    }
+
+    /// Drive `sched` through the whole stream and summarise throughput
+    /// and latency. Token output is deterministic (seeded prompts +
+    /// greedy bit-exact decode); only the timings vary run to run.
+    pub fn run(&self, sched: &mut Scheduler) -> Result<ServeStats> {
+        let vocab = sched.engine().hyper().vocab;
+        let prompts = self.prompts(vocab);
+        let wall = Instant::now();
+        let mut stats = ServeStats::new();
+        let mut submitted = 0usize;
+        let mut tick = 0usize;
+        while submitted < prompts.len() || !sched.is_idle() {
+            while submitted < prompts.len()
+                && (self.arrive_every == 0 || tick >= submitted * self.arrive_every)
+            {
+                sched.submit(&prompts[submitted], self.max_new)?;
+                submitted += 1;
+            }
+            sched.step()?;
+            tick += 1;
+        }
+        for c in sched.take_completed() {
+            stats.record(c.latency_s, c.tokens.len() as u64);
+        }
+        stats.set_wall_seconds(wall.elapsed().as_secs_f64());
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Library;
+
+    fn tiny_engine() -> InferenceEngine {
+        InferenceEngine::init_random(Library::host_with_threads(1), "tiny", 11).unwrap()
+    }
+
+    #[test]
+    fn budget_spec_grammar() {
+        assert_eq!(kv_budget_from_spec(None).unwrap(), None);
+        assert_eq!(kv_budget_from_spec(Some("")).unwrap(), None);
+        assert_eq!(kv_budget_from_spec(Some("0")).unwrap(), None);
+        assert_eq!(kv_budget_from_spec(Some("unlimited")).unwrap(), None);
+        assert_eq!(kv_budget_from_spec(Some("64k")).unwrap(), Some(64 * 1024));
+        assert_eq!(kv_budget_from_spec(Some("2m")).unwrap(), Some(2 * 1024 * 1024));
+        let err = kv_budget_from_spec(Some("lots")).unwrap_err().to_string();
+        assert!(err.contains("ADAMA_KV_BUDGET"), "error names the knob: {err}");
+    }
+
+    #[test]
+    fn submit_rejects_impossible_requests() {
+        let eng = tiny_engine();
+        let seq = eng.hyper().seq;
+        let mut s = Scheduler::with_budget(eng, 4, None);
+        assert!(s.submit(&[], 4).is_err(), "empty prompt");
+        assert!(s.submit(&[1, 2], 0).is_err(), "zero max_new");
+        assert!(s.submit(&vec![1; seq], 1).is_err(), "context overflow");
+
+        let eng = tiny_engine();
+        let per = eng.kv_bytes_per_token();
+        let mut s = Scheduler::with_budget(eng, 4, Some(3 * per));
+        assert!(s.submit(&[1, 2], 3).is_err(), "needs 4 cached tokens, cap is 3");
+        assert!(s.submit(&[1, 2], 2).is_ok(), "3 cached tokens fit exactly");
+    }
+
+    #[test]
+    fn drains_queue_with_continuous_batching() {
+        let mut s = Scheduler::with_budget(tiny_engine(), 2, None);
+        for len in [3usize, 1, 2] {
+            s.submit(&vec![5; len], 4).unwrap();
+        }
+        let mut done = s.run_to_completion(64).unwrap();
+        assert_eq!(done.len(), 3);
+        done.sort_by_key(|c| c.id);
+        for c in &done {
+            assert_eq!(c.tokens.len(), 4);
+            assert_eq!(c.prefills, 1, "no evictions without a budget");
+        }
+        assert_eq!(s.kv_live_bytes(), 0, "retired caches release their bytes");
+    }
+}

@@ -1,0 +1,292 @@
+//! Serving engine suite: KV-cached decode parity against the
+//! full-context forward (the headline bit-exactness contract), batching
+//! independence, continuous-batching determinism under arbitrary arrival
+//! interleavings, KV-budget eviction gating, memmodel reconciliation of
+//! measured KV bytes, and ADAMACK1/ADAMACK2 checkpoint round-trips into
+//! the server.
+
+use adama::config::{OptimBackend, OptimizerKind, TrainConfig};
+use adama::data::MarkovCorpus;
+use adama::memmodel::HostBlockDims;
+use adama::model::LayerParams;
+use adama::runtime::{GemmMode, Library, MemoryPlan, SimdLevel};
+use adama::serve::{DecodeEntry, InferenceEngine, Scheduler, SyntheticLoad};
+use adama::Trainer;
+
+mod common;
+use common::library;
+
+const SEED: u64 = 3;
+const PROMPT: [i32; 6] = [7, 3, 99, 14, 200, 42];
+
+fn engine_on(threads: usize, lvl: SimdLevel, gm: GemmMode) -> InferenceEngine {
+    let lib = Library::host_with_gemm(threads, MemoryPlan::remat(), lvl, gm);
+    InferenceEngine::init_random(lib, "tiny", SEED).unwrap()
+}
+
+/// Last-position logits of a single full-context forward over `tokens`.
+fn full_context_logits(eng: &InferenceEngine, tokens: &[i32]) -> Vec<f32> {
+    let mut cache = eng.new_cache();
+    let (logits, _) = eng
+        .decode_logits(&mut [DecodeEntry { cache: &mut cache, pending: tokens }])
+        .unwrap();
+    logits
+}
+
+/// Feed `prompt` one token at a time through a growing KV cache, then
+/// greedily decode `extra` more tokens. Returns (generated, final logits).
+fn incremental_greedy(eng: &InferenceEngine, prompt: &[i32], extra: usize) -> (Vec<i32>, Vec<f32>) {
+    let mut cache = eng.new_cache();
+    let mut last = (Vec::new(), Vec::new());
+    for &t in prompt {
+        let (logits, next) = eng
+            .decode_logits(&mut [DecodeEntry { cache: &mut cache, pending: &[t] }])
+            .unwrap();
+        last = (next, logits);
+    }
+    let mut generated = Vec::new();
+    for _ in 0..extra {
+        let t = last.0[0];
+        generated.push(t);
+        let (logits, next) = eng
+            .decode_logits(&mut [DecodeEntry { cache: &mut cache, pending: &[t] }])
+            .unwrap();
+        last = (next, logits);
+    }
+    (generated, last.1)
+}
+
+fn bits(x: &[f32]) -> Vec<u32> {
+    x.iter().map(|v| v.to_bits()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// headline: KV-cached decode ≡ full-context forward, at 0 ULP, everywhere
+// ---------------------------------------------------------------------------
+
+/// Token-by-token decode through the KV cache must be bit-identical to
+/// recomputing the full context from scratch — at every thread count ×
+/// SIMD level × GEMM mode — and all combos must agree with each other.
+#[test]
+fn decode_parity_across_threads_simd_and_gemm() {
+    const EXTRA: usize = 5;
+    let mut reference: Option<(Vec<i32>, Vec<u32>)> = None;
+    for threads in [1usize, 4] {
+        for lvl in SimdLevel::all_supported() {
+            for gm in [GemmMode::Packed, GemmMode::Naive] {
+                let tag = format!("threads={threads} simd={lvl:?} gemm={gm:?}");
+                let eng = engine_on(threads, lvl, gm);
+
+                // incremental greedy chain through the cache...
+                let (generated, inc_logits) = incremental_greedy(&eng, &PROMPT, EXTRA);
+
+                // ...must match a from-scratch full-context forward at
+                // every intermediate step, not just the last one.
+                let mut ctx = PROMPT.to_vec();
+                for (k, &tok) in generated.iter().enumerate() {
+                    let full = full_context_logits(&eng, &ctx);
+                    let argmax = full
+                        .iter()
+                        .enumerate()
+                        .fold(0usize, |b, (j, &v)| if v > full[b] { j } else { b });
+                    assert_eq!(argmax as i32, tok, "{tag}: greedy token {k} diverged");
+                    ctx.push(tok);
+                }
+                let full_last = full_context_logits(&eng, &ctx);
+                assert_eq!(bits(&full_last), bits(&inc_logits), "{tag}: final logits");
+
+                match &reference {
+                    None => reference = Some((generated, bits(&inc_logits))),
+                    Some((rt, rb)) => {
+                        assert_eq!(rt, &generated, "{tag}: tokens vs reference combo");
+                        assert_eq!(rb, &bits(&inc_logits), "{tag}: logits vs reference combo");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Rows of a ragged batch are mathematically independent: decoding three
+/// sequences together yields the same bits as decoding each alone.
+#[test]
+fn ragged_batch_rows_are_independent() {
+    let eng = engine_on(2, SimdLevel::Scalar, GemmMode::Packed);
+    let seqs: [&[i32]; 3] = [&[1, 2, 3, 4, 5, 6, 7], &[9], &[100, 101, 102]];
+
+    let solo: Vec<Vec<f32>> = seqs.iter().map(|s| full_context_logits(&eng, s)).collect();
+
+    let mut caches: Vec<_> = (0..3).map(|_| eng.new_cache()).collect();
+    let mut entries: Vec<DecodeEntry<'_>> = caches
+        .iter_mut()
+        .zip(&seqs)
+        .map(|(cache, s)| DecodeEntry { cache, pending: s })
+        .collect();
+    let (batched, _) = eng.decode_logits(&mut entries).unwrap();
+
+    let v = eng.hyper().vocab;
+    for (r, alone) in solo.iter().enumerate() {
+        assert_eq!(
+            bits(alone),
+            bits(&batched[r * v..(r + 1) * v]),
+            "row {r} depends on its batch neighbours"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// continuous batching: schedule shape never changes the tokens
+// ---------------------------------------------------------------------------
+
+fn scheduled_tokens(
+    max_batch: usize,
+    arrive_every: usize,
+    budget: Option<u64>,
+) -> Vec<(Vec<i32>, u32)> {
+    let eng = engine_on(2, SimdLevel::Scalar, GemmMode::Packed);
+    let load = SyntheticLoad { requests: 4, prompt_len: 5, max_new: 4, arrive_every, seed: 9 };
+    let prompts = load.prompts(eng.hyper().vocab);
+    let mut s = Scheduler::with_budget(eng, max_batch, budget);
+    let (mut submitted, mut tick) = (0usize, 0usize);
+    while submitted < prompts.len() || !s.is_idle() {
+        while submitted < prompts.len()
+            && (arrive_every == 0 || tick >= submitted * arrive_every)
+        {
+            s.submit(&prompts[submitted], load.max_new).unwrap();
+            submitted += 1;
+        }
+        s.step().unwrap();
+        if let Some(cap) = budget {
+            assert!(
+                s.kv_live_bytes() <= cap,
+                "live KV {} exceeds ADAMA_KV_BUDGET {cap}",
+                s.kv_live_bytes()
+            );
+        }
+        tick += 1;
+    }
+    let mut done = s.take_completed();
+    assert_eq!(done.len(), prompts.len());
+    done.sort_by_key(|c| c.id);
+    done.into_iter().map(|c| (c.tokens, c.prefills)).collect()
+}
+
+/// Any batch width and any arrival interleaving must produce the same
+/// tokens per request — batching is a throughput decision, never a
+/// correctness one.
+#[test]
+fn continuous_batching_is_arrival_invariant() {
+    let reference = scheduled_tokens(1, 0, None);
+    for (tokens, prefills) in &reference {
+        assert_eq!(tokens.len(), 4);
+        assert_eq!(*prefills, 1);
+    }
+    for (max_batch, arrive_every) in [(2, 1), (4, 0), (3, 2), (2, 3)] {
+        let got = scheduled_tokens(max_batch, arrive_every, None);
+        let toks = |v: &Vec<(Vec<i32>, u32)>| v.iter().map(|(t, _)| t.clone()).collect::<Vec<_>>();
+        assert_eq!(
+            toks(&reference),
+            toks(&got),
+            "tokens changed under max_batch={max_batch}, arrive_every={arrive_every}"
+        );
+    }
+}
+
+/// Under a tight KV budget the scheduler must evict (re-prefilling the
+/// victim later) yet still produce exactly the uncapped tokens, while
+/// live KV bytes never exceed the cap (asserted every step above).
+#[test]
+fn kv_budget_evicts_without_changing_tokens() {
+    let per_token = engine_on(1, SimdLevel::Scalar, GemmMode::Packed).kv_bytes_per_token();
+    // Each request peaks at 8 cached tokens (5 prompt + 4 new − 1); a
+    // 12-token cap admits two but cannot hold two at peak.
+    let cap = 12 * per_token;
+    let uncapped = scheduled_tokens(2, 0, None);
+    let capped = scheduled_tokens(2, 0, Some(cap));
+    let toks = |v: &Vec<(Vec<i32>, u32)>| v.iter().map(|(t, _)| t.clone()).collect::<Vec<_>>();
+    assert_eq!(toks(&uncapped), toks(&capped), "eviction changed tokens");
+    assert!(
+        capped.iter().any(|(_, prefills)| *prefills > 1),
+        "cap of {cap} bytes never forced an eviction; prefills: {:?}",
+        capped.iter().map(|(_, p)| *p).collect::<Vec<_>>()
+    );
+}
+
+// ---------------------------------------------------------------------------
+// memmodel reconciliation: measured KV bytes == closed-form prediction
+// ---------------------------------------------------------------------------
+
+#[test]
+fn measured_kv_bytes_match_memmodel_exactly() {
+    let lib = Library::host_with_threads(1);
+    let eng = InferenceEngine::init_random(lib.clone(), "tiny", 5).unwrap();
+    let dims = HostBlockDims::from_model(eng.hyper());
+    let layers = eng.hyper().layers as u64;
+    assert_eq!(eng.kv_bytes_per_token(), layers * dims.kv_bytes_per_token_per_layer());
+
+    let mut cache = eng.new_cache();
+    eng.decode(&mut [DecodeEntry { cache: &mut cache, pending: &PROMPT }]).unwrap();
+    let mut tokens = PROMPT.len() as u64;
+    let mut last = 42i32;
+    for _ in 0..4 {
+        let next =
+            eng.decode(&mut [DecodeEntry { cache: &mut cache, pending: &[last] }]).unwrap();
+        last = next[0];
+        tokens += 1;
+        let want = dims.kv_cache_bytes(layers, tokens);
+        assert_eq!(cache.bytes(), want, "cache accounting at {tokens} tokens");
+        assert_eq!(
+            lib.executor().memory().unwrap().kv_live_bytes,
+            want,
+            "executor meter at {tokens} tokens"
+        );
+    }
+    // the budget↔tokens inverse the scheduler relies on
+    assert_eq!(dims.kv_budget_tokens(layers, dims.kv_cache_bytes(layers, tokens)), tokens);
+
+    drop(cache);
+    let m = lib.executor().memory().unwrap();
+    assert_eq!(m.kv_live_bytes, 0, "drop must release every metered byte");
+    assert_eq!(m.kv_peak_bytes, dims.kv_cache_bytes(layers, tokens));
+}
+
+// ---------------------------------------------------------------------------
+// checkpoints: both container formats serve identically to live params
+// ---------------------------------------------------------------------------
+
+#[test]
+fn serves_from_both_checkpoint_formats() {
+    let lib = library();
+    let cfg = TrainConfig {
+        model: "tiny".into(),
+        optimizer: OptimizerKind::AdamA,
+        backend: OptimBackend::Host,
+        accum_steps: 2,
+        chunk: 16384,
+        ..TrainConfig::default()
+    };
+    let mut t = Trainer::new(lib.clone(), cfg).unwrap();
+    let h = t.spec().hyper.clone();
+    let mut corpus = MarkovCorpus::new(h.vocab, 77, 1);
+    t.train_step(&corpus.minibatch(2, h.microbatch, h.seq)).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("adama_serve_ck_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let p1 = dir.join("params.ack1");
+    let p2 = dir.join("state.ack2");
+    t.save_checkpoint(&p1).unwrap();
+    t.save_state(&p2, &[]).unwrap();
+
+    let live: Vec<LayerParams> =
+        t.params().iter().map(|p| LayerParams { flat: p.flat.clone() }).collect();
+    let e0 = InferenceEngine::with_params(lib.clone(), "tiny", live).unwrap();
+    let e1 = InferenceEngine::from_checkpoint(lib.clone(), "tiny", &p1).unwrap();
+    let e2 = InferenceEngine::from_checkpoint(lib.clone(), "tiny", &p2).unwrap();
+
+    let want = bits(&full_context_logits(&e0, &PROMPT));
+    assert_eq!(want, bits(&full_context_logits(&e1, &PROMPT)), "ADAMACK1 round-trip");
+    assert_eq!(want, bits(&full_context_logits(&e2, &PROMPT)), "ADAMACK2 round-trip");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -17,7 +17,9 @@ Pulls four headline numbers out of the nightly bench run:
     async-vs-sync ZeRO-S1 issue speedup (`zero1_async_vs_sync` rows);
   * zoo — the `table2_opt_state_*` rows appended by table2_optimizers:
     how many ADAMA_OPT rules reconciled measured-vs-memmodel state bytes
-    exactly, plus the smallest paper-scale state footprint.
+    exactly, plus the smallest paper-scale state footprint;
+  * serve — batched KV-cache decode throughput and p99 request latency
+    at the largest swept batch width (`serve_decode` rows).
 
 A bench that emitted **no rows** fails the run loudly (non-zero exit)
 instead of appending an empty trajectory entry: a missing/empty
@@ -125,6 +127,17 @@ def zero1_async_speedup(rows):
     return best
 
 
+def serve_throughput(rows):
+    """serve_decode tokens/s + p99 ms at the largest swept batch width."""
+    best = None
+    for r in rows:
+        if r.get("op") == "serve_decode" and "tokens_per_sec" in r:
+            batch = int(r.get("max_batch", 0))
+            if best is None or batch >= best[0]:
+                best = (batch, float(r["tokens_per_sec"]), float(r.get("latency_p99_ms", 0.0)))
+    return best
+
+
 def zoo_state(rows):
     """table2_opt_state_* rows: (#rules, #reconciled, min paper GB)."""
     total, ok, smallest = 0, 0, None
@@ -167,6 +180,9 @@ def main():
     if zoo:
         total, ok, (best_name, best_gb) = zoo
         notes.append(f"zoo {ok}/{total} reconciled (min {best_name} {best_gb:.2f} GB)")
+    serve = serve_throughput(rows)
+    if serve:
+        notes.append(f"serve {serve[1]:.0f} tok/s p99 {serve[2]:.1f} ms (batch={serve[0]})")
     note = ", ".join(notes)
 
     threads = next((str(r["threads"]) for r in rows if "threads" in r), "?")
